@@ -1,0 +1,77 @@
+//! END-TO-END DRIVER: the full paper evaluation on a real workload suite.
+//!
+//! Runs all nine MiBench-analog benchmarks natively and under the
+//! xvisor-rs hypervisor (18 full-system boots, one thread each),
+//! regenerates Figures 4–7 + the boot table, validates every qualitative
+//! claim of §4, and (when artifacts are built) adds the E9 XLA
+//! timing-model table. This is the run recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example mibench_sweep [scale] [out.txt]`
+
+use anyhow::Result;
+use hvsim::config::SimConfig;
+use hvsim::coordinator::{self, check_paper_claims};
+use hvsim::runtime::TimingEngine;
+use hvsim::sw::BENCHMARKS;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let cfg = SimConfig { scale, ..Default::default() };
+
+    eprintln!("sweeping {} benchmarks × {{native, guest}} at scale {scale}...", BENCHMARKS.len());
+    let t0 = std::time::Instant::now();
+    let mut pairs = coordinator::sweep(&cfg, &BENCHMARKS, true)?;
+    eprintln!("parallel sweep done in {:.1}s; sequential Fig.4 timing pass...", t0.elapsed().as_secs_f64());
+    coordinator::retime_sequential(&cfg, &mut pairs, 3)?;
+    eprintln!("timing pass done in {:.1}s total\n", t0.elapsed().as_secs_f64());
+    let pairs = pairs;
+
+    let mut out = String::new();
+    out.push_str(&coordinator::fig4_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::fig5_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::fig6_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::fig7_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::boot_table(&pairs));
+    out.push('\n');
+
+    // E9: timing-model analytics (optional — needs `make artifacts`).
+    match TimingEngine::load(&TimingEngine::default_dir()) {
+        Ok(mut eng) => {
+            let mut rows = Vec::new();
+            for p in &pairs {
+                for r in [&p.native, &p.guest] {
+                    if let Some(tr) = &r.trace {
+                        eng.reset();
+                        rows.push((r.name.clone(), r.vm, eng.analyze(tr)?));
+                    }
+                }
+            }
+            out.push_str(&coordinator::timing_table(&rows));
+            out.push('\n');
+        }
+        Err(e) => out.push_str(&format!("(E9 timing model skipped: {e})\n\n")),
+    }
+
+    let bad = check_paper_claims(&pairs);
+    if bad.is_empty() {
+        out.push_str("paper-claims check: ALL HOLD\n");
+    } else {
+        out.push_str("paper-claims check: VIOLATIONS\n");
+        for b in &bad {
+            out.push_str(&format!("  - {b}\n"));
+        }
+    }
+
+    print!("{out}");
+    if let Some(path) = args.get(1) {
+        std::fs::write(path, &out)?;
+        eprintln!("(written to {path})");
+    }
+    anyhow::ensure!(bad.is_empty(), "{} claims violated", bad.len());
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Quickstart: boot the firmware + mini-os kernel natively, run one
+//! MiBench-analog benchmark in U-mode, and print the console plus the
+//! gem5-style stats dump.
+//!
+//! Run: `cargo run --release --example quickstart [bench] [scale]`
+
+use anyhow::Result;
+use hvsim::config::SimConfig;
+use hvsim::sim::ExitReason;
+use hvsim::sw;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bench = args.first().map(String::as_str).unwrap_or("qsort");
+    let scale: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let cfg = SimConfig::default();
+    let mut machine = cfg.build_machine();
+    sw::setup_native(&mut machine, bench, scale)?;
+
+    println!("booting mini-os with '{bench}' (scale {scale})...\n");
+    let exit = machine.run(cfg.max_ticks);
+
+    println!("---- console ----");
+    print!("{}", machine.console());
+    println!("---- stats ----");
+    print!("{}", machine.stats_txt());
+    match exit {
+        ExitReason::PowerOff(code) if code == hvsim::mem::SYSCON_PASS => {
+            println!("\nexit: PASS");
+            Ok(())
+        }
+        other => anyhow::bail!("exit: {other:?}"),
+    }
+}

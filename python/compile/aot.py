@@ -1,0 +1,74 @@
+"""AOT lowering: JAX model -> HLO *text* -> artifacts/model.hlo.txt.
+
+HLO text (NOT .serialize()) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run from python/:  python -m compile.aot --out ../artifacts/model.hlo.txt
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import tlbsim
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(sets=tlbsim.SETS, ways=tlbsim.WAYS):
+    import functools
+
+    recs = jax.ShapeDtypeStruct((tlbsim.WINDOW,), jnp.int32)
+    tags = jax.ShapeDtypeStruct((sets, ways), jnp.int32)
+    lru = jax.ShapeDtypeStruct((sets, ways), jnp.int32)
+    clock = jax.ShapeDtypeStruct((1,), jnp.int32)
+    fn = functools.partial(model.timing_model, sets=sets, ways=ways)
+    return jax.jit(fn).lower(recs, tags, lru, clock)
+
+
+# TLB geometries for the design-space-exploration ablation (the paper's
+# future work: "comprehensive microarchitectural design space exploration
+# for cloud deployments"). (sets, ways); the default geometry also ships
+# as plain model.hlo.txt.
+DSE_GEOMETRIES = [(16, 2), (64, 4), (256, 4)]
+
+
+def write_variant(dirname: str, stem: str, sets: int, ways: int) -> None:
+    text = to_hlo_text(lower_model(sets, ways))
+    with open(os.path.join(dirname, f"{stem}.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(dirname, f"{stem}.manifest"), "w") as f:
+        f.write(f"window={tlbsim.WINDOW}\nsets={sets}\nways={ways}\noutputs=9\n")
+    print(f"wrote {stem}.hlo.txt ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    args = ap.parse_args()
+    dirname = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(dirname, exist_ok=True)
+    # Default model (stem from --out).
+    stem = os.path.basename(args.out).replace(".hlo.txt", "")
+    write_variant(dirname, stem, tlbsim.SETS, tlbsim.WAYS)
+    # DSE variants.
+    for sets, ways in DSE_GEOMETRIES:
+        if (sets, ways) == (tlbsim.SETS, tlbsim.WAYS):
+            continue
+        write_variant(dirname, f"model_{sets}x{ways}", sets, ways)
+
+
+if __name__ == "__main__":
+    main()

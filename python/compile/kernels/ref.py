@@ -1,0 +1,63 @@
+"""Pure-NumPy correctness oracle for the Pallas TLB-simulation kernel.
+
+Implements identical semantics to `tlbsim._tlb_kernel`, reference-by-
+reference, with plain Python control flow. pytest/hypothesis compare the
+two exhaustively (python/tests/test_kernel.py).
+"""
+
+import numpy as np
+
+
+def tlb_window_ref(recs, tags, lru, clock):
+    """Reference TLB simulation of one window.
+
+    Args:
+      recs:  int32[N]  trace records ((vpn << 2) | kind; 0 = padding)
+      tags:  int32[sets, ways]  (-1 = invalid)
+      lru:   int32[sets, ways]
+      clock: int32[1]
+    Returns:
+      (hits int32[1], misses int32[1], tags', lru', clock')
+    """
+    tags = np.array(tags, dtype=np.int64).copy()
+    lru = np.array(lru, dtype=np.int64).copy()
+    sets, ways = tags.shape
+    clk = int(np.asarray(clock).reshape(-1)[0])
+    hits = 0
+    misses = 0
+    for rec in np.asarray(recs, dtype=np.int64):
+        rec = int(rec)
+        valid = rec != 0
+        vpn = (rec & 0xFFFFFFFF) >> 2
+        s = vpn % sets
+        if valid:
+            hit_ways = np.nonzero(tags[s] == vpn)[0]
+            if hit_ways.size:
+                hits += 1
+                # argmax(hit_mask) = first hit way, as in the kernel
+                lru[s, hit_ways[0]] = clk
+            else:
+                misses += 1
+                invalid = np.nonzero(tags[s] < 0)[0]
+                # First invalid way if any, else true LRU (kernel policy).
+                victim = int(invalid[0]) if invalid.size else int(np.argmin(lru[s]))
+                tags[s, victim] = vpn
+                lru[s, victim] = clk
+        clk += 1
+    return (
+        np.array([hits], np.int32),
+        np.array([misses], np.int32),
+        tags.astype(np.int32),
+        lru.astype(np.int32),
+        np.array([clk], np.int32),
+    )
+
+
+def timing_estimate_ref(valid, misses, two_stage):
+    """Cycle estimate mirroring model.timing_model's arithmetic.
+
+    Sv39 native walk = 3 memory accesses; Sv39x4 two-stage walk =
+    (3+1)*(3+1) - 1 = 15 accesses (paper Fig. 3).
+    """
+    walk = 15 if two_stage else 3
+    return valid + misses * walk

@@ -1,0 +1,120 @@
+"""Layer 1 — Pallas TLB-simulation kernel.
+
+Simulates a set-associative TLB over one fixed-size window of the
+simulator's virtual-reference trace (see rust/src/trace). This is the
+compute hot-spot of the XLA analytics/timing model: the TLB state lives in
+kernel-local memory (VMEM on a real TPU; the trace window streams in via
+the BlockSpec), and the per-reference set-compare is vectorized across
+ways.
+
+Record format (must match rust/src/trace/mod.rs):
+    rec = (vpn << 2) | kind,  kind in {0 fetch, 1 load, 2 store}
+    rec == 0 is tail padding (vpn 0 never occurs in real traces).
+
+TPU note: lowered with interpret=True throughout — the CPU PJRT client
+cannot run Mosaic custom-calls (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Window length — must match rust/src/trace/mod.rs::WINDOW.
+WINDOW = 4096
+# Default TLB geometry — must match the simulator's Tlb::default().
+SETS = 64
+WAYS = 4
+
+
+def _tlb_kernel(recs_ref, tags_ref, lru_ref, clock_ref,
+                hits_ref, misses_ref, tags_out_ref, lru_out_ref,
+                clock_out_ref, *, sets, ways):
+    """One window of TLB simulation.
+
+    refs:
+      recs:  i32[WINDOW]      trace records
+      tags:  i32[sets, ways]  resident VPN per way (-1 = invalid)
+      lru:   i32[sets, ways]  last-touch clock per way
+      clock: i32[1]           global clock
+    outs:
+      hits, misses: i32[1]
+      tags_out, lru_out, clock_out: updated state
+    """
+    tags_out_ref[...] = tags_ref[...]
+    lru_out_ref[...] = lru_ref[...]
+    way_ids = jax.lax.iota(jnp.int32, ways)
+
+    def body(i, carry):
+        hits, misses, clock = carry
+        rec = recs_ref[i]
+        valid = rec != 0
+        vpn = jax.lax.shift_right_logical(rec, 2)
+        set_ = jnp.remainder(vpn, sets)
+        row_tags = pl.load(tags_out_ref, (pl.dslice(set_, 1), pl.dslice(0, ways)))[0]
+        row_lru = pl.load(lru_out_ref, (pl.dslice(set_, 1), pl.dslice(0, ways)))[0]
+        hit_mask = row_tags == vpn
+        hit = jnp.any(hit_mask) & valid
+        # Victim: first invalid way if any (tags < 0), else true LRU —
+        # matches the simulator's Tlb::insert.
+        invalid_mask = row_tags < 0
+        victim = jnp.where(
+            jnp.any(invalid_mask),
+            jnp.argmax(invalid_mask),
+            jnp.argmin(row_lru),
+        ).astype(jnp.int32)
+        touch = jnp.where(hit, jnp.argmax(hit_mask).astype(jnp.int32), victim)
+        is_touch = way_ids == touch
+        new_tags = jnp.where(is_touch & valid & ~hit, vpn, row_tags)
+        new_lru = jnp.where(is_touch & valid, clock, row_lru)
+        pl.store(tags_out_ref, (pl.dslice(set_, 1), pl.dslice(0, ways)),
+                 new_tags[None, :])
+        pl.store(lru_out_ref, (pl.dslice(set_, 1), pl.dslice(0, ways)),
+                 new_lru[None, :])
+        hits = hits + jnp.where(hit, 1, 0).astype(jnp.int32)
+        misses = misses + jnp.where(valid & ~hit, 1, 0).astype(jnp.int32)
+        return hits, misses, clock + 1
+
+    clock0 = clock_ref[0]
+    hits, misses, clock = jax.lax.fori_loop(
+        0, recs_ref.shape[0], body,
+        (jnp.int32(0), jnp.int32(0), clock0))
+    hits_ref[0] = hits
+    misses_ref[0] = misses
+    clock_out_ref[0] = clock
+
+
+@functools.partial(jax.jit, static_argnames=("sets", "ways"))
+def tlb_window(recs, tags, lru, clock, *, sets=SETS, ways=WAYS):
+    """Run one trace window through the TLB-simulation kernel.
+
+    Args:
+      recs:  i32[WINDOW]
+      tags:  i32[sets, ways]   (-1 = invalid)
+      lru:   i32[sets, ways]
+      clock: i32[1]
+    Returns:
+      (hits i32[1], misses i32[1], tags', lru', clock')
+    """
+    kernel = functools.partial(_tlb_kernel, sets=sets, ways=ways)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.int32),            # hits
+            jax.ShapeDtypeStruct((1,), jnp.int32),            # misses
+            jax.ShapeDtypeStruct((sets, ways), jnp.int32),    # tags'
+            jax.ShapeDtypeStruct((sets, ways), jnp.int32),    # lru'
+            jax.ShapeDtypeStruct((1,), jnp.int32),            # clock'
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(recs, tags, lru, clock)
+
+
+def init_state(sets=SETS, ways=WAYS):
+    """Fresh TLB state: all-invalid tags, zero LRU, zero clock."""
+    return (
+        jnp.full((sets, ways), -1, jnp.int32),
+        jnp.zeros((sets, ways), jnp.int32),
+        jnp.zeros((1,), jnp.int32),
+    )

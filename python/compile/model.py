@@ -1,0 +1,53 @@
+"""Layer 2 — the JAX analytics/timing model.
+
+Consumes one trace window from the functional simulator and produces the
+detailed-model estimates: TLB hits/misses under the configured geometry
+and cycle estimates for single-stage (native Sv39) vs two-stage
+(Sv39x4 guest) translation — the quantitative core behind the paper's
+"accelerated evaluation of RISC-V software deployments".
+
+The window kernel is the Pallas TLB simulator (kernels/tlbsim.py); this
+module composes it with the walk-cost arithmetic of Fig. 3:
+  native  walk cost =  3 memory accesses  (Sv39, 3 levels)
+  guest   walk cost = 15 memory accesses  ((3+1)*(3+1) - 1, Sv39x4)
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import tlbsim
+
+# Walk costs in memory accesses (paper Fig. 3 / §3.3).
+WALK_NATIVE = 3
+WALK_TWO_STAGE = 15
+# Fixed-point scale for the overhead ratio output.
+RATIO_SCALE = 10_000
+
+
+def timing_model(recs, tags, lru, clock, *, sets=tlbsim.SETS, ways=tlbsim.WAYS):
+    """One window of trace analytics.
+
+    Args:
+      recs:  i32[WINDOW]        trace records (0-padded tail)
+      tags:  i32[sets, ways]    TLB tag state (threaded across windows)
+      lru:   i32[sets, ways]
+      clock: i32[1]
+    Returns (all i32):
+      hits[1], misses[1], valid[1],
+      cycles_native[1], cycles_guest[1], overhead_ratio_x1e4[1],
+      tags', lru', clock'
+    """
+    hits, misses, tags2, lru2, clock2 = tlbsim.tlb_window(
+        recs, tags, lru, clock, sets=sets, ways=ways
+    )
+    valid = jnp.sum(jnp.where(recs != 0, 1, 0)).astype(jnp.int32)[None]
+    cycles_native = valid + misses * WALK_NATIVE
+    cycles_guest = valid + misses * WALK_TWO_STAGE
+    # Guest/native overhead ratio in 1e-4 units (integer; keeps the
+    # artifact fp-free so the rust side stays in i32 literals).
+    ratio = jnp.where(
+        cycles_native > 0,
+        (cycles_guest * RATIO_SCALE) // jnp.maximum(cycles_native, 1),
+        jnp.int32(RATIO_SCALE),
+    ).astype(jnp.int32)
+    return (hits, misses, valid, cycles_native, cycles_guest, ratio,
+            tags2, lru2, clock2)

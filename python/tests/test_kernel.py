@@ -1,0 +1,161 @@
+"""Kernel-vs-oracle tests: the CORE correctness signal for Layer 1.
+
+The Pallas TLB-simulation kernel (interpret mode) must agree exactly with
+the pure-NumPy reference for every (trace, geometry, state) — hypothesis
+sweeps shapes and contents.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref, tlbsim
+
+
+def run_kernel(recs, tags, lru, clock, sets, ways):
+    out = tlbsim.tlb_window(
+        jnp.asarray(recs, jnp.int32),
+        jnp.asarray(tags, jnp.int32),
+        jnp.asarray(lru, jnp.int32),
+        jnp.asarray(clock, jnp.int32),
+        sets=sets,
+        ways=ways,
+    )
+    return [np.asarray(o) for o in out]
+
+
+def rec(vpn, kind=0):
+    return (vpn << 2) | kind
+
+
+class TestBasics:
+    def test_empty_window_is_all_padding(self):
+        tags, lru, clock = tlbsim.init_state(8, 2)
+        recs = np.zeros(16, np.int32)
+        hits, misses, tags2, lru2, clock2 = run_kernel(recs, tags, lru, clock, 8, 2)
+        assert hits[0] == 0 and misses[0] == 0
+        np.testing.assert_array_equal(tags2, np.asarray(tags))
+        assert clock2[0] == 16  # clock still advances per record
+
+    def test_cold_miss_then_hit(self):
+        tags, lru, clock = tlbsim.init_state(8, 2)
+        recs = np.array([rec(5), rec(5), rec(5)], np.int32)
+        hits, misses, tags2, _, _ = run_kernel(recs, tags, lru, clock, 8, 2)
+        assert misses[0] == 1
+        assert hits[0] == 2
+        assert 5 in tags2[5 % 8]
+
+    def test_conflict_eviction_lru(self):
+        # 2 ways; three VPNs mapping to the same set: A B A C -> C evicts B.
+        sets, ways = 4, 2
+        tags, lru, clock = tlbsim.init_state(sets, ways)
+        a, b, c = 4, 8, 12  # all ≡ 0 mod 4
+        recs = np.array([rec(a), rec(b), rec(a), rec(c)], np.int32)
+        hits, misses, tags2, _, _ = run_kernel(recs, tags, lru, clock, sets, ways)
+        assert hits[0] == 1  # the second A
+        assert misses[0] == 3
+        assert set(tags2[0]) == {a, c}, "B must be the LRU victim"
+
+    def test_state_threads_across_windows(self):
+        sets, ways = 8, 2
+        tags, lru, clock = tlbsim.init_state(sets, ways)
+        w1 = np.array([rec(7)] + [0] * 3, np.int32)
+        _, m1, tags, lru, clock = run_kernel(w1, tags, lru, clock, sets, ways)
+        w2 = np.array([rec(7)] + [0] * 3, np.int32)
+        h2, m2, *_ = run_kernel(w2, tags, lru, clock, sets, ways)
+        assert m1[0] == 1 and m2[0] == 0 and h2[0] == 1
+
+    def test_kind_bits_ignored_for_tag_match(self):
+        tags, lru, clock = tlbsim.init_state(8, 2)
+        recs = np.array([rec(9, 0), rec(9, 1), rec(9, 2)], np.int32)
+        hits, misses, *_ = run_kernel(recs, tags, lru, clock, 8, 2)
+        assert misses[0] == 1 and hits[0] == 2
+
+
+@st.composite
+def window_case(draw):
+    sets = draw(st.sampled_from([2, 4, 8, 16]))
+    ways = draw(st.sampled_from([1, 2, 4]))
+    n = draw(st.integers(1, 96))
+    # Small VPN universe provokes conflicts and evictions.
+    universe = draw(st.integers(4, 64))
+    recs = draw(
+        st.lists(
+            st.one_of(
+                st.just(0),  # padding interleaved (legal: ignored entries)
+                st.builds(
+                    rec,
+                    st.integers(1, universe),
+                    st.integers(0, 2),
+                ),
+            ),
+            min_size=n,
+            max_size=n,
+        )
+    )
+    return sets, ways, np.array(recs, np.int32)
+
+
+class TestHypothesis:
+    @settings(max_examples=60, deadline=None)
+    @given(window_case())
+    def test_kernel_matches_reference(self, case):
+        sets, ways, recs = case
+        tags, lru, clock = tlbsim.init_state(sets, ways)
+        got = run_kernel(recs, tags, lru, clock, sets, ways)
+        want = ref.tlb_window_ref(recs, np.asarray(tags), np.asarray(lru), np.asarray(clock))
+        for g, w, name in zip(got, want, ["hits", "misses", "tags", "lru", "clock"]):
+            np.testing.assert_array_equal(g, w, err_msg=f"{name} mismatch")
+
+    @settings(max_examples=25, deadline=None)
+    @given(window_case(), window_case())
+    def test_threading_matches_reference(self, c1, c2):
+        # Two consecutive windows with threaded state; geometry from c1.
+        sets, ways, r1 = c1
+        _, _, r2 = c2
+        tags, lru, clock = tlbsim.init_state(sets, ways)
+        k = run_kernel(r1, tags, lru, clock, sets, ways)
+        k2 = run_kernel(r2, k[2], k[3], k[4], sets, ways)
+        f = ref.tlb_window_ref(r1, np.asarray(tags), np.asarray(lru), np.asarray(clock))
+        f2 = ref.tlb_window_ref(r2, f[2], f[3], f[4])
+        for g, w in zip(k2, f2):
+            np.testing.assert_array_equal(g, w)
+
+
+class TestModel:
+    def test_model_shapes_and_walk_costs(self):
+        tags, lru, clock = tlbsim.init_state()
+        recs = np.zeros(tlbsim.WINDOW, np.int32)
+        recs[:10] = [rec(i + 1) for i in range(10)]
+        out = model.timing_model(jnp.asarray(recs), tags, lru, clock)
+        hits, misses, valid, cyc_n, cyc_g, ratio, tags2, lru2, clock2 = [
+            np.asarray(o) for o in out
+        ]
+        assert valid[0] == 10
+        assert misses[0] == 10 and hits[0] == 0
+        assert cyc_n[0] == ref.timing_estimate_ref(10, 10, False)
+        assert cyc_g[0] == ref.timing_estimate_ref(10, 10, True)
+        assert cyc_g[0] > cyc_n[0], "two-stage walks must cost more (Fig. 3)"
+        assert ratio[0] == cyc_g[0] * model.RATIO_SCALE // cyc_n[0]
+        assert tags2.shape == (tlbsim.SETS, tlbsim.WAYS)
+        assert clock2[0] == tlbsim.WINDOW
+
+    def test_model_full_window(self):
+        # A fully-valid window with locality: mostly hits.
+        tags, lru, clock = tlbsim.init_state()
+        vpns = np.tile(np.arange(1, 9), tlbsim.WINDOW // 8)
+        recs = (vpns.astype(np.int64) << 2).astype(np.int32)
+        out = model.timing_model(jnp.asarray(recs), tags, lru, clock)
+        hits, misses, valid = [np.asarray(o)[0] for o in out[:3]]
+        assert valid == tlbsim.WINDOW
+        assert misses == 8, "8 cold misses, everything else hits"
+        assert hits == tlbsim.WINDOW - 8
+
+    def test_aot_lowering_emits_hlo_text(self):
+        from compile import aot
+
+        text = aot.to_hlo_text(aot.lower_model())
+        assert "HloModule" in text
+        assert len(text) > 1000

@@ -1,0 +1,30 @@
+// Shared helpers for the benchmark harnesses (included via `include!` —
+// the offline build has no criterion; each bench is a `harness = false`
+// binary that prints the corresponding paper table).
+
+use hvsim::config::SimConfig;
+
+/// Benchmark input scale (MiBench small/large analog); override with
+/// HVSIM_BENCH_SCALE.
+pub fn bench_scale() -> u64 {
+    std::env::var("HVSIM_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(2)
+}
+
+pub fn bench_cfg() -> SimConfig {
+    SimConfig { scale: bench_scale(), ..Default::default() }
+}
+
+/// Median-of-n timing repetitions for a fallible runner.
+pub fn median_secs(reps: usize, mut f: impl FnMut() -> anyhow::Result<f64>) -> anyhow::Result<f64> {
+    let mut v = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        v.push(f()?);
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(v[v.len() / 2])
+}
+
+/// `cargo bench` passes `--bench`; ignore argv entirely.
+pub fn bench_banner(name: &str, what: &str) {
+    eprintln!("== hvsim bench: {name} — {what} (scale {}) ==", bench_scale());
+}

@@ -1,0 +1,26 @@
+//! Fig. 4 regenerator: simulation time (host seconds) of each benchmark
+//! native vs guest, plus the slowdown line. Median of 3 repetitions with
+//! the checkpoint methodology (boot excluded), exactly as §4.1.
+
+include!("bench_common.rs");
+
+use hvsim::coordinator::run_one;
+use hvsim::sw::BENCHMARKS;
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("fig4_simtime", "paper Figure 4");
+    let cfg = bench_cfg();
+    println!("Figure 4 — Simulation time (s), native vs guest, and slowdown");
+    println!("{:<14} {:>10} {:>11} {:>10}", "benchmark", "native(s)", "guest(s)", "slowdown");
+    let mut slowdowns = Vec::new();
+    for bench in BENCHMARKS {
+        let native = median_secs(3, || Ok(run_one(&cfg, bench, false, false)?.host_seconds))?;
+        let guest = median_secs(3, || Ok(run_one(&cfg, bench, true, false)?.host_seconds))?;
+        let sd = guest / native;
+        slowdowns.push(sd);
+        println!("{bench:<14} {native:>10.4} {guest:>11.4} {sd:>9.2}x");
+    }
+    let avg = slowdowns.iter().sum::<f64>() / slowdowns.len() as f64;
+    println!("average slowdown: {avg:.2}x  (paper: ~1.5x average, 1.3–2.0x range)");
+    Ok(())
+}

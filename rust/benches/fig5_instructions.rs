@@ -1,0 +1,26 @@
+//! Fig. 5 regenerator: executed instructions per benchmark, with (w/) and
+//! without (w/o) a VM. Deterministic — one run per cell.
+
+include!("bench_common.rs");
+
+use hvsim::coordinator::run_one;
+use hvsim::sw::BENCHMARKS;
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("fig5_instructions", "paper Figure 5");
+    let cfg = bench_cfg();
+    println!("Figure 5 — Executed instructions, w/o vs w/ VM");
+    println!("{:<14} {:>13} {:>13} {:>9}", "benchmark", "w/o VM", "w/ VM", "ratio");
+    for bench in BENCHMARKS {
+        let native = run_one(&cfg, bench, false, false)?;
+        let guest = run_one(&cfg, bench, true, false)?;
+        println!(
+            "{bench:<14} {:>13} {:>13} {:>8.3}x",
+            native.sim_insts,
+            guest.sim_insts,
+            guest.sim_insts as f64 / native.sim_insts as f64
+        );
+        assert!(guest.sim_insts > native.sim_insts, "Fig. 5 shape violated for {bench}");
+    }
+    Ok(())
+}

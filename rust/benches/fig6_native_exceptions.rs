@@ -1,0 +1,23 @@
+//! Fig. 6 regenerator: exceptions handled per privilege level under
+//! *native* execution (M and S), per benchmark, with the cause breakdown.
+
+include!("bench_common.rs");
+
+use hvsim::coordinator::run_one;
+use hvsim::sw::BENCHMARKS;
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("fig6_native_exceptions", "paper Figure 6");
+    let cfg = bench_cfg();
+    println!("Figure 6 — Native execution: exceptions per privilege level");
+    println!("{:<14} {:>10} {:>10}   cause breakdown", "benchmark", "M", "S");
+    for bench in BENCHMARKS {
+        let r = run_one(&cfg, bench, false, false)?;
+        let m = r.exceptions_at("M");
+        let s = r.exceptions_at("HS") + r.exceptions_at("S");
+        let detail: Vec<String> = r.exc_by_cause.iter().map(|(c, n)| format!("c{c}:{n}")).collect();
+        println!("{bench:<14} {m:>10} {s:>10}   {}", detail.join(" "));
+        assert_eq!(r.exceptions_at("VS"), 0, "no VS level natively");
+    }
+    Ok(())
+}

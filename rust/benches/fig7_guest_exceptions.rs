@@ -1,0 +1,36 @@
+//! Fig. 7 regenerator: exceptions handled per privilege level under
+//! *guest* execution (M, HS, VS), per benchmark — including the paper's
+//! §4.3 observation that S-level native ≈ VS-level guest.
+
+include!("bench_common.rs");
+
+use hvsim::coordinator::run_one;
+use hvsim::sw::BENCHMARKS;
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("fig7_guest_exceptions", "paper Figure 7");
+    let cfg = bench_cfg();
+    println!("Figure 7 — Guest execution: exceptions per privilege level");
+    println!("{:<14} {:>9} {:>9} {:>9} {:>12}", "benchmark", "M", "HS", "VS", "S-native");
+    for bench in BENCHMARKS {
+        let g = run_one(&cfg, bench, true, false)?;
+        let n = run_one(&cfg, bench, false, false)?;
+        let s_native = n.exceptions_at("HS");
+        println!(
+            "{bench:<14} {:>9} {:>9} {:>9} {:>12}",
+            g.exceptions_at("M"),
+            g.exceptions_at("HS"),
+            g.exceptions_at("VS"),
+            s_native,
+        );
+        // §4.3: "the number of exceptions delegated to the S level in the
+        // native OS and the VS level in the guest OS are nearly equal".
+        let vs = g.exceptions_at("VS") as f64;
+        let s = s_native as f64;
+        assert!(
+            (vs - s).abs() / s.max(1.0) < 0.10,
+            "{bench}: S-native {s} vs VS-guest {vs} differ by >10%"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Hot-path microbenchmarks (the §Perf instrumentation): interpreter MIPS
+//! on arithmetic / memory / two-stage workloads, checkpoint throughput.
+//! Used before/after each optimization step (EXPERIMENTS.md §Perf).
+
+include!("bench_common.rs");
+
+use std::time::Instant;
+
+use hvsim::asm::assemble;
+use hvsim::coordinator::run_one;
+use hvsim::mem::RAM_BASE;
+use hvsim::sim::Machine;
+
+fn mips_of(src: &str, ticks: u64, h: bool) -> f64 {
+    let img = assemble(src, RAM_BASE).unwrap();
+    let mut m = Machine::new(16 << 20, h);
+    m.load(&img).unwrap();
+    m.set_entry(RAM_BASE);
+    m.run(ticks / 10); // warm-up
+    let t0 = Instant::now();
+    let start = m.stats.sim_insts;
+    m.run(ticks);
+    let insts = m.stats.sim_insts - start;
+    insts as f64 / t0.elapsed().as_secs_f64() / 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("micro_hotpath", "interpreter/TLB/walker hot paths");
+
+    // 1. Pure ALU loop (decode-cache + dispatch ceiling).
+    let alu = "li t0, 0\nloop:\n addi t0, t0, 1\n xor t1, t0, t2\n slli t2, t1, 3\n srli t3, t2, 2\n and t4, t3, t1\n or t5, t4, t0\n j loop\n";
+    println!("alu loop:            {:>8.1} MIPS", mips_of(alu, 30_000_000, true));
+
+    // 2. Memory loop, M-mode bare (bus fast path).
+    let mem = format!(
+        "li t0, {}\nli t2, 0\nloop:\n sd t2, 0(t0)\n ld t1, 0(t0)\n sd t1, 8(t0)\n ld t2, 8(t0)\n j loop\n",
+        RAM_BASE + 0x10000
+    );
+    println!("mem loop (bare):     {:>8.1} MIPS", mips_of(&mem, 30_000_000, true));
+
+    // 3. End-to-end native benchmark (fetch through Sv39 + TLB).
+    let cfg = bench_cfg();
+    let t0 = Instant::now();
+    let r = run_one(&cfg, "sha", false, false)?;
+    println!(
+        "sha native e2e:      {:>8.1} MIPS ({} insts)",
+        r.sim_insts as f64 / t0.elapsed().as_secs_f64() / 1e6,
+        r.sim_insts
+    );
+
+    // 4. End-to-end guest benchmark (two-stage translation path).
+    let t0 = Instant::now();
+    let r = run_one(&cfg, "sha", true, false)?;
+    println!(
+        "sha guest e2e:       {:>8.1} MIPS ({} insts)",
+        r.sim_insts as f64 / t0.elapsed().as_secs_f64() / 1e6,
+        r.sim_insts
+    );
+
+    // 5. Checkpoint save/restore throughput.
+    let mut m = Machine::new(64 << 20, true);
+    hvsim::sw::setup_guest(&mut m, "qsort", 1)?;
+    m.run(5_000_000);
+    let t0 = Instant::now();
+    let mut blob = Vec::new();
+    for _ in 0..10 {
+        blob = hvsim::sim::checkpoint::save(&m);
+    }
+    let save_t = t0.elapsed().as_secs_f64() / 10.0;
+    let mut m2 = Machine::new(64 << 20, true);
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        hvsim::sim::checkpoint::restore(&mut m2, &blob)?;
+    }
+    let restore_t = t0.elapsed().as_secs_f64() / 10.0;
+    println!(
+        "checkpoint:          save {:.1} ms / restore {:.1} ms ({} KiB)",
+        save_t * 1e3,
+        restore_t * 1e3,
+        blob.len() / 1024
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! E9 bench: XLA timing-model throughput (windows/s through the PJRT
+//! executable) and the per-benchmark analytics table (TLB miss rate +
+//! modeled two-stage translation overhead).
+
+include!("bench_common.rs");
+
+use std::time::Instant;
+
+use hvsim::coordinator::run_one;
+use hvsim::runtime::TimingEngine;
+use hvsim::trace::WINDOW;
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("timing_model", "XLA analytics engine (E9)");
+    let mut eng = TimingEngine::load(&TimingEngine::default_dir())?;
+
+    // ---- raw engine throughput ----
+    let recs: Vec<i32> = (0..WINDOW as i32).map(|i| ((i % 300 + 1) << 2) | 1).collect();
+    for _ in 0..3 {
+        eng.run_window(&recs)?; // warm-up
+    }
+    let n = 50;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        eng.run_window(&recs)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "engine throughput: {:.1} windows/s ({:.2} Mrefs/s, window={})",
+        n as f64 / dt,
+        (n * WINDOW) as f64 / dt / 1e6,
+        WINDOW
+    );
+
+    // ---- per-benchmark analytics ----
+    let cfg = bench_cfg();
+    println!();
+    println!(
+        "{:<14} {:>6} {:>11} {:>10} {:>8} {:>14}",
+        "benchmark", "mode", "refs", "misses", "miss%", "xlat-overhead"
+    );
+    for bench in ["qsort", "dijkstra", "susan", "crc32"] {
+        for vm in [false, true] {
+            let r = run_one(&cfg, bench, vm, true)?;
+            let trace = r.trace.expect("trace requested");
+            eng.reset();
+            let rep = eng.analyze(&trace)?;
+            println!(
+                "{bench:<14} {:>6} {:>11} {:>10} {:>7.2}% {:>13.4}x",
+                if vm { "guest" } else { "native" },
+                rep.refs,
+                rep.misses,
+                100.0 * rep.miss_rate(),
+                rep.overhead_ratio()
+            );
+        }
+    }
+    println!();
+    println!(
+        "cross-check: the model runs the same TLB geometry as the functional\n\
+         simulator; see examples/timing_analysis.rs for the comparison."
+    );
+    Ok(())
+}

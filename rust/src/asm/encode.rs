@@ -1,0 +1,672 @@
+//! Instruction encoders and the mnemonic dispatch table (real instructions
+//! and pseudo-instruction expansion).
+
+use std::collections::HashMap;
+
+use crate::isa::csr::csr_addr_by_name;
+use crate::isa::disasm::reg_index;
+
+use super::expr::eval;
+use super::{err, expr_err, AsmError};
+
+type Syms = HashMap<String, u64>;
+
+fn reg(line: usize, s: &str) -> Result<u32, AsmError> {
+    reg_index(s).map(|r| r as u32).ok_or_else(|| err(line, format!("bad register '{s}'")))
+}
+
+fn value(line: usize, s: &str, syms: &Syms) -> Result<u64, AsmError> {
+    eval(s, syms).map_err(|e| expr_err(line, e))
+}
+
+fn csr_addr(line: usize, s: &str, syms: &Syms) -> Result<u32, AsmError> {
+    if let Some(a) = csr_addr_by_name(s) {
+        return Ok(a as u32);
+    }
+    let v = value(line, s, syms)?;
+    if v > 0xfff {
+        return Err(err(line, format!("CSR address out of range: {v:#x}")));
+    }
+    Ok(v as u32)
+}
+
+/// Parse "off(rs)" / "(rs)" / "off" (off defaults 0, rs defaults x0 only
+/// for the plain-paren form).
+fn mem_operand(line: usize, s: &str, syms: &Syms) -> Result<(i64, u32), AsmError> {
+    let s = s.trim();
+    if let Some(open) = s.find('(') {
+        if !s.ends_with(')') {
+            return Err(err(line, format!("bad memory operand '{s}'")));
+        }
+        let off_str = s[..open].trim();
+        let off = if off_str.is_empty() { 0 } else { value(line, off_str, syms)? as i64 };
+        let r = reg(line, s[open + 1..s.len() - 1].trim())?;
+        Ok((off, r))
+    } else {
+        Err(err(line, format!("expected off(reg), got '{s}'")))
+    }
+}
+
+fn want(line: usize, ops: &[String], n: usize) -> Result<(), AsmError> {
+    if ops.len() != n {
+        return Err(err(line, format!("expected {n} operands, got {}", ops.len())));
+    }
+    Ok(())
+}
+
+fn check_i_imm(line: usize, imm: i64) -> Result<(), AsmError> {
+    if !(-2048..=2047).contains(&imm) {
+        return Err(err(line, format!("immediate {imm} out of I-type range")));
+    }
+    Ok(())
+}
+
+// ---- raw encoders ----
+fn enc_r(f7: u32, rs2: u32, rs1: u32, f3: u32, rd: u32, opc: u32) -> u32 {
+    (f7 << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | opc
+}
+fn enc_i(imm: i64, rs1: u32, f3: u32, rd: u32, opc: u32) -> u32 {
+    (((imm as u32) & 0xfff) << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | opc
+}
+fn enc_s(imm: i64, rs2: u32, rs1: u32, f3: u32, opc: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 5) & 0x7f) << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | ((imm & 0x1f) << 7) | opc
+}
+fn enc_b(line: usize, off: i64, rs2: u32, rs1: u32, f3: u32) -> Result<u32, AsmError> {
+    if off % 2 != 0 || !(-4096..=4095).contains(&off) {
+        return Err(err(line, format!("branch offset {off} out of range")));
+    }
+    let v = off as u32;
+    Ok((((v >> 12) & 1) << 31)
+        | (((v >> 5) & 0x3f) << 25)
+        | (rs2 << 20)
+        | (rs1 << 15)
+        | (f3 << 12)
+        | (((v >> 1) & 0xf) << 8)
+        | (((v >> 11) & 1) << 7)
+        | 0b1100011)
+}
+fn enc_u(imm20: u64, rd: u32, opc: u32) -> u32 {
+    (((imm20 as u32) & 0xfffff) << 12) | (rd << 7) | opc
+}
+fn enc_j(line: usize, off: i64, rd: u32) -> Result<u32, AsmError> {
+    if off % 2 != 0 || !(-(1 << 20)..(1 << 20)).contains(&off) {
+        return Err(err(line, format!("jump offset {off} out of range")));
+    }
+    let v = off as u32;
+    Ok((((v >> 20) & 1) << 31)
+        | (((v >> 1) & 0x3ff) << 21)
+        | (((v >> 11) & 1) << 20)
+        | (((v >> 12) & 0xff) << 12)
+        | (rd << 7)
+        | 0b1101111)
+}
+
+/// `li` expansion (also used by pass 1 for sizing): materialize an
+/// arbitrary 64-bit constant.
+fn expand_li(rd: u32, imm: i64) -> Vec<u32> {
+    if (-2048..=2047).contains(&imm) {
+        return vec![enc_i(imm, 0, 0b000, rd, 0b0010011)]; // addi rd, x0, imm
+    }
+    if imm >= i32::MIN as i64 && imm <= i32::MAX as i64 {
+        let hi = ((imm as i32 as i64 + 0x800) >> 12) & 0xfffff;
+        let lo = imm - (((hi << 12) as i32) as i64); // residual after sign-extended lui
+        let mut v = vec![enc_u(hi as u64, rd, 0b0110111)]; // lui
+        if lo != 0 {
+            v.push(enc_i(lo, rd, 0b000, rd, 0b0011011)); // addiw rd, rd, lo
+        }
+        v
+    } else {
+        // Recursive: li rd, hi; slli rd, rd, 12; addi rd, rd, lo12.
+        // i128 avoids overflow at the i64 extremes (e.g. i64::MAX - (-1)).
+        let lo12 = (imm << 52) >> 52;
+        let hi = ((imm as i128 - lo12 as i128) >> 12) as i64;
+        let mut v = expand_li(rd, hi);
+        v.push(enc_i(12, rd, 0b001, rd, 0b0010011)); // slli rd, rd, 12
+        if lo12 != 0 {
+            v.push(enc_i(lo12, rd, 0b000, rd, 0b0010011)); // addi
+        }
+        v
+    }
+}
+
+fn expand_la(line: usize, rd: u32, target: u64, pc: u64) -> Result<Vec<u32>, AsmError> {
+    let delta = target.wrapping_sub(pc) as i64;
+    if !(-(1i64 << 31)..(1i64 << 31)).contains(&delta) {
+        return Err(err(line, format!("la target {target:#x} out of ±2GiB range")));
+    }
+    let hi = ((delta + 0x800) >> 12) & 0xfffff;
+    let lo = delta - (((hi << 12) as i32) as i64);
+    Ok(vec![
+        enc_u(hi as u64, rd, 0b0010111),          // auipc rd, hi
+        enc_i(lo, rd, 0b000, rd, 0b0010011),       // addi rd, rd, lo
+    ])
+}
+
+/// Size in bytes of an instruction/pseudo (pass 1).
+pub fn inst_size(line: usize, mnem: &str, ops: &[String], syms: &Syms) -> Result<usize, AsmError> {
+    match mnem {
+        "li" => {
+            want(line, ops, 2)?;
+            // Constant must be resolvable in pass 1 (.equ / literal);
+            // labels need `la`.
+            let v = value(line, &ops[1], syms)? as i64;
+            let _ = reg(line, &ops[0])?;
+            Ok(4 * expand_li(0, v).len())
+        }
+        "la" => Ok(8),
+        _ => Ok(4),
+    }
+}
+
+/// Encode an instruction or pseudo-instruction at address `pc`.
+pub fn encode_inst(
+    line: usize,
+    mnem: &str,
+    ops: &[String],
+    pc: u64,
+    syms: &Syms,
+) -> Result<Vec<u32>, AsmError> {
+    let one = |w: u32| Ok(vec![w]);
+    let branch_target = |line: usize, s: &str| -> Result<i64, AsmError> {
+        let t = value(line, s, syms)?;
+        Ok(t.wrapping_sub(pc) as i64)
+    };
+
+    // R-type table.
+    if let Some((f7, f3)) = rtype_code(mnem) {
+        want(line, ops, 3)?;
+        let rd = reg(line, &ops[0])?;
+        let rs1 = reg(line, &ops[1])?;
+        let rs2 = reg(line, &ops[2])?;
+        return one(enc_r(f7, rs2, rs1, f3, rd, rtype_opc(mnem)));
+    }
+    // I-type ALU.
+    if let Some(f3) = itype_code(mnem) {
+        want(line, ops, 3)?;
+        let rd = reg(line, &ops[0])?;
+        let rs1 = reg(line, &ops[1])?;
+        let imm = value(line, &ops[2], syms)? as i64;
+        check_i_imm(line, imm)?;
+        let opc = if mnem == "addiw" { 0b0011011 } else { 0b0010011 };
+        return one(enc_i(imm, rs1, f3, rd, opc));
+    }
+    // Shifts with immediate.
+    if let Some((f7, f3, opc, maxsh)) = shift_code(mnem) {
+        want(line, ops, 3)?;
+        let rd = reg(line, &ops[0])?;
+        let rs1 = reg(line, &ops[1])?;
+        let sh = value(line, &ops[2], syms)?;
+        if sh > maxsh {
+            return Err(err(line, format!("shift amount {sh} too large")));
+        }
+        return one((f7 << 25) | ((sh as u32) << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | opc);
+    }
+    // Loads.
+    if let Some(f3) = load_code(mnem) {
+        want(line, ops, 2)?;
+        let rd = reg(line, &ops[0])?;
+        let (off, rs1) = mem_operand(line, &ops[1], syms)?;
+        check_i_imm(line, off)?;
+        let opc = if mnem == "flw" { 0b0000111 } else { 0b0000011 };
+        return one(enc_i(off, rs1, f3, rd, opc));
+    }
+    // Stores.
+    if let Some(f3) = store_code(mnem) {
+        want(line, ops, 2)?;
+        let rs2 = reg(line, &ops[0])?;
+        let (off, rs1) = mem_operand(line, &ops[1], syms)?;
+        check_i_imm(line, off)?;
+        let opc = if mnem == "fsw" { 0b0100111 } else { 0b0100011 };
+        return one(enc_s(off, rs2, rs1, f3, opc));
+    }
+    // Branches.
+    if let Some(f3) = branch_code(mnem) {
+        want(line, ops, 3)?;
+        let rs1 = reg(line, &ops[0])?;
+        let rs2 = reg(line, &ops[1])?;
+        let off = branch_target(line, &ops[2])?;
+        return one(enc_b(line, off, rs2, rs1, f3)?);
+    }
+    // AMO / LR / SC.
+    if let Some((f5, f3)) = amo_code(mnem) {
+        match mnem {
+            "lr.w" | "lr.d" => {
+                want(line, ops, 2)?;
+                let rd = reg(line, &ops[0])?;
+                let (off, rs1) = mem_operand(line, &ops[1], syms)?;
+                if off != 0 {
+                    return Err(err(line, "lr offset must be 0"));
+                }
+                return one(enc_r(f5 << 2, 0, rs1, f3, rd, 0b0101111));
+            }
+            _ => {
+                want(line, ops, 3)?;
+                let rd = reg(line, &ops[0])?;
+                let rs2 = reg(line, &ops[1])?;
+                let (off, rs1) = mem_operand(line, &ops[2], syms)?;
+                if off != 0 {
+                    return Err(err(line, "amo offset must be 0"));
+                }
+                return one(enc_r(f5 << 2, rs2, rs1, f3, rd, 0b0101111));
+            }
+        }
+    }
+    // HLV / HLVX / HSV.
+    if let Some((f7, rs2_code)) = hlv_code(mnem) {
+        want(line, ops, 2)?;
+        let rd = reg(line, &ops[0])?;
+        let (off, rs1) = mem_operand(line, &ops[1], syms)?;
+        if off != 0 {
+            return Err(err(line, "hlv offset must be 0"));
+        }
+        return one(enc_r(f7, rs2_code, rs1, 0b100, rd, 0b1110011));
+    }
+    if let Some(f7) = hsv_code(mnem) {
+        want(line, ops, 2)?;
+        let rs2 = reg(line, &ops[0])?;
+        let (off, rs1) = mem_operand(line, &ops[1], syms)?;
+        if off != 0 {
+            return Err(err(line, "hsv offset must be 0"));
+        }
+        return one(enc_r(f7, rs2, rs1, 0b100, 0, 0b1110011));
+    }
+
+    match mnem {
+        "lui" | "auipc" => {
+            want(line, ops, 2)?;
+            let rd = reg(line, &ops[0])?;
+            let imm = value(line, &ops[1], syms)?;
+            if imm > 0xfffff {
+                return Err(err(line, "U-type immediate must fit 20 bits"));
+            }
+            one(enc_u(imm, rd, if mnem == "lui" { 0b0110111 } else { 0b0010111 }))
+        }
+        "jal" => {
+            let (rd, target) = match ops.len() {
+                1 => (1, &ops[0]),
+                2 => (reg(line, &ops[0])?, &ops[1]),
+                _ => return Err(err(line, "jal [rd,] target")),
+            };
+            let off = branch_target(line, target)?;
+            one(enc_j(line, off, rd)?)
+        }
+        "jalr" => match ops.len() {
+            1 => {
+                let rs1 = reg(line, &ops[0])?;
+                one(enc_i(0, rs1, 0, 1, 0b1100111))
+            }
+            2 => {
+                let rd = reg(line, &ops[0])?;
+                let (off, rs1) = mem_operand(line, &ops[1], syms)?;
+                one(enc_i(off, rs1, 0, rd, 0b1100111))
+            }
+            3 => {
+                let rd = reg(line, &ops[0])?;
+                let rs1 = reg(line, &ops[1])?;
+                let off = value(line, &ops[2], syms)? as i64;
+                check_i_imm(line, off)?;
+                one(enc_i(off, rs1, 0, rd, 0b1100111))
+            }
+            _ => Err(err(line, "jalr forms: rs1 | rd, off(rs1) | rd, rs1, off")),
+        },
+        // ---- CSR ----
+        "csrrw" | "csrrs" | "csrrc" => {
+            want(line, ops, 3)?;
+            let rd = reg(line, &ops[0])?;
+            let c = csr_addr(line, &ops[1], syms)?;
+            let rs1 = reg(line, &ops[2])?;
+            let f3 = match mnem {
+                "csrrw" => 0b001,
+                "csrrs" => 0b010,
+                _ => 0b011,
+            };
+            one((c << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | 0b1110011)
+        }
+        "csrrwi" | "csrrsi" | "csrrci" => {
+            want(line, ops, 3)?;
+            let rd = reg(line, &ops[0])?;
+            let c = csr_addr(line, &ops[1], syms)?;
+            let z = value(line, &ops[2], syms)?;
+            if z > 31 {
+                return Err(err(line, "zimm must be < 32"));
+            }
+            let f3 = match mnem {
+                "csrrwi" => 0b101,
+                "csrrsi" => 0b110,
+                _ => 0b111,
+            };
+            one((c << 20) | ((z as u32) << 15) | (f3 << 12) | (rd << 7) | 0b1110011)
+        }
+        "csrr" => {
+            want(line, ops, 2)?;
+            let rd = reg(line, &ops[0])?;
+            let c = csr_addr(line, &ops[1], syms)?;
+            one((c << 20) | (0b010 << 12) | (rd << 7) | 0b1110011) // csrrs rd, c, x0
+        }
+        "csrw" | "csrs" | "csrc" => {
+            want(line, ops, 2)?;
+            let c = csr_addr(line, &ops[0], syms)?;
+            let rs1 = reg(line, &ops[1])?;
+            let f3 = match mnem {
+                "csrw" => 0b001,
+                "csrs" => 0b010,
+                _ => 0b011,
+            };
+            one((c << 20) | (rs1 << 15) | (f3 << 12) | 0b1110011)
+        }
+        "csrwi" | "csrsi" | "csrci" => {
+            want(line, ops, 2)?;
+            let c = csr_addr(line, &ops[0], syms)?;
+            let z = value(line, &ops[1], syms)?;
+            if z > 31 {
+                return Err(err(line, "zimm must be < 32"));
+            }
+            let f3 = match mnem {
+                "csrwi" => 0b101,
+                "csrsi" => 0b110,
+                _ => 0b111,
+            };
+            one((c << 20) | ((z as u32) << 15) | (f3 << 12) | 0b1110011)
+        }
+        // ---- system ----
+        "ecall" => one(0x0000_0073),
+        "ebreak" => one(0x0010_0073),
+        "mret" => one(0x3020_0073),
+        "sret" => one(0x1020_0073),
+        "wfi" => one(0x1050_0073),
+        "fence" => one(0x0ff0_000f),
+        "fence.i" => one(0x0000_100f),
+        "sfence.vma" | "hfence.vvma" | "hfence.gvma" => {
+            let (rs1, rs2) = match ops.len() {
+                0 => (0, 0),
+                1 => (reg(line, &ops[0])?, 0),
+                2 => (reg(line, &ops[0])?, reg(line, &ops[1])?),
+                _ => return Err(err(line, "fence takes at most 2 operands")),
+            };
+            let f7 = match mnem {
+                "sfence.vma" => 0b0001001,
+                "hfence.vvma" => 0b0010001,
+                _ => 0b0110001,
+            };
+            one(enc_r(f7, rs2, rs1, 0, 0, 0b1110011))
+        }
+        // ---- float subset ----
+        "fadd.s" | "fmul.s" => {
+            want(line, ops, 3)?;
+            let rd = reg(line, &ops[0])?;
+            let rs1 = reg(line, &ops[1])?;
+            let rs2 = reg(line, &ops[2])?;
+            let f7 = if mnem == "fadd.s" { 0b0000000 } else { 0b0001000 };
+            one(enc_r(f7, rs2, rs1, 0, rd, 0b1010011))
+        }
+        "fmv.w.x" => {
+            want(line, ops, 2)?;
+            let rd = reg(line, &ops[0])?;
+            let rs1 = reg(line, &ops[1])?;
+            one(enc_r(0b1111000, 0, rs1, 0, rd, 0b1010011))
+        }
+        "fmv.x.w" => {
+            want(line, ops, 2)?;
+            let rd = reg(line, &ops[0])?;
+            let rs1 = reg(line, &ops[1])?;
+            one(enc_r(0b1110000, 0, rs1, 0, rd, 0b1010011))
+        }
+        // ---- pseudo ----
+        "nop" => one(enc_i(0, 0, 0, 0, 0b0010011)),
+        "mv" => {
+            want(line, ops, 2)?;
+            one(enc_i(0, reg(line, &ops[1])?, 0, reg(line, &ops[0])?, 0b0010011))
+        }
+        "not" => {
+            want(line, ops, 2)?;
+            one(enc_i(-1, reg(line, &ops[1])?, 0b100, reg(line, &ops[0])?, 0b0010011))
+        }
+        "neg" => {
+            want(line, ops, 2)?;
+            one(enc_r(0b0100000, reg(line, &ops[1])?, 0, 0b000, reg(line, &ops[0])?, 0b0110011))
+        }
+        "negw" => {
+            want(line, ops, 2)?;
+            one(enc_r(0b0100000, reg(line, &ops[1])?, 0, 0b000, reg(line, &ops[0])?, 0b0111011))
+        }
+        "seqz" => {
+            want(line, ops, 2)?;
+            one(enc_i(1, reg(line, &ops[1])?, 0b011, reg(line, &ops[0])?, 0b0010011))
+        }
+        "snez" => {
+            want(line, ops, 2)?;
+            one(enc_r(0, reg(line, &ops[1])?, 0, 0b011, reg(line, &ops[0])?, 0b0110011))
+        }
+        "sltz" => {
+            want(line, ops, 2)?;
+            one(enc_r(0, 0, reg(line, &ops[1])?, 0b010, reg(line, &ops[0])?, 0b0110011))
+        }
+        "sgtz" => {
+            want(line, ops, 2)?;
+            one(enc_r(0, reg(line, &ops[1])?, 0, 0b010, reg(line, &ops[0])?, 0b0110011))
+        }
+        "sext.w" => {
+            want(line, ops, 2)?;
+            one(enc_i(0, reg(line, &ops[1])?, 0, reg(line, &ops[0])?, 0b0011011))
+        }
+        "li" => {
+            want(line, ops, 2)?;
+            let rd = reg(line, &ops[0])?;
+            let v = value(line, &ops[1], syms)? as i64;
+            Ok(expand_li(rd, v))
+        }
+        "la" => {
+            want(line, ops, 2)?;
+            let rd = reg(line, &ops[0])?;
+            let target = value(line, &ops[1], syms)?;
+            expand_la(line, rd, target, pc)
+        }
+        "j" => {
+            want(line, ops, 1)?;
+            let off = branch_target(line, &ops[0])?;
+            one(enc_j(line, off, 0)?)
+        }
+        "jr" => {
+            want(line, ops, 1)?;
+            one(enc_i(0, reg(line, &ops[0])?, 0, 0, 0b1100111))
+        }
+        "call" => {
+            want(line, ops, 1)?;
+            let off = branch_target(line, &ops[0])?;
+            one(enc_j(line, off, 1)?)
+        }
+        "tail" => {
+            want(line, ops, 1)?;
+            let off = branch_target(line, &ops[0])?;
+            one(enc_j(line, off, 0)?)
+        }
+        "ret" => one(enc_i(0, 1, 0, 0, 0b1100111)),
+        "beqz" | "bnez" | "blez" | "bgez" | "bltz" | "bgtz" => {
+            want(line, ops, 2)?;
+            let rs = reg(line, &ops[0])?;
+            let off = branch_target(line, &ops[1])?;
+            let w = match mnem {
+                "beqz" => enc_b(line, off, 0, rs, 0b000)?,
+                "bnez" => enc_b(line, off, 0, rs, 0b001)?,
+                "blez" => enc_b(line, off, rs, 0, 0b101)?, // bge x0, rs
+                "bgez" => enc_b(line, off, 0, rs, 0b101)?, // bge rs, x0
+                "bltz" => enc_b(line, off, 0, rs, 0b100)?, // blt rs, x0
+                _ => enc_b(line, off, rs, 0, 0b100)?,       // blt x0, rs
+            };
+            one(w)
+        }
+        "bgt" | "ble" | "bgtu" | "bleu" => {
+            want(line, ops, 3)?;
+            let a = reg(line, &ops[0])?;
+            let b = reg(line, &ops[1])?;
+            let off = branch_target(line, &ops[2])?;
+            let w = match mnem {
+                "bgt" => enc_b(line, off, a, b, 0b100)?,  // blt b, a
+                "ble" => enc_b(line, off, a, b, 0b101)?,  // bge b, a
+                "bgtu" => enc_b(line, off, a, b, 0b110)?, // bltu b, a
+                _ => enc_b(line, off, a, b, 0b111)?,       // bgeu b, a
+            };
+            one(w)
+        }
+        _ => Err(err(line, format!("unknown mnemonic '{mnem}'"))),
+    }
+}
+
+fn rtype_opc(mnem: &str) -> u32 {
+    if mnem.ends_with('w') && mnem != "sltw" {
+        match mnem {
+            "addw" | "subw" | "sllw" | "srlw" | "sraw" | "mulw" | "divw" | "divuw" | "remw"
+            | "remuw" => 0b0111011,
+            _ => 0b0110011,
+        }
+    } else {
+        0b0110011
+    }
+}
+
+fn rtype_code(mnem: &str) -> Option<(u32, u32)> {
+    Some(match mnem {
+        "add" => (0b0000000, 0b000),
+        "sub" => (0b0100000, 0b000),
+        "sll" => (0b0000000, 0b001),
+        "slt" => (0b0000000, 0b010),
+        "sltu" => (0b0000000, 0b011),
+        "xor" => (0b0000000, 0b100),
+        "srl" => (0b0000000, 0b101),
+        "sra" => (0b0100000, 0b101),
+        "or" => (0b0000000, 0b110),
+        "and" => (0b0000000, 0b111),
+        "addw" => (0b0000000, 0b000),
+        "subw" => (0b0100000, 0b000),
+        "sllw" => (0b0000000, 0b001),
+        "srlw" => (0b0000000, 0b101),
+        "sraw" => (0b0100000, 0b101),
+        "mul" => (0b0000001, 0b000),
+        "mulh" => (0b0000001, 0b001),
+        "mulhsu" => (0b0000001, 0b010),
+        "mulhu" => (0b0000001, 0b011),
+        "div" => (0b0000001, 0b100),
+        "divu" => (0b0000001, 0b101),
+        "rem" => (0b0000001, 0b110),
+        "remu" => (0b0000001, 0b111),
+        "mulw" => (0b0000001, 0b000),
+        "divw" => (0b0000001, 0b100),
+        "divuw" => (0b0000001, 0b101),
+        "remw" => (0b0000001, 0b110),
+        "remuw" => (0b0000001, 0b111),
+        _ => return None,
+    })
+}
+
+fn itype_code(mnem: &str) -> Option<u32> {
+    Some(match mnem {
+        "addi" => 0b000,
+        "slti" => 0b010,
+        "sltiu" => 0b011,
+        "xori" => 0b100,
+        "ori" => 0b110,
+        "andi" => 0b111,
+        "addiw" => 0b000,
+        _ => return None,
+    })
+}
+
+fn shift_code(mnem: &str) -> Option<(u32, u32, u32, u64)> {
+    Some(match mnem {
+        "slli" => (0b0000000, 0b001, 0b0010011, 63),
+        "srli" => (0b0000000, 0b101, 0b0010011, 63),
+        "srai" => (0b0100000 >> 1 << 1, 0b101, 0b0010011, 63), // f7 low bit is shamt[5]
+        "slliw" => (0b0000000, 0b001, 0b0011011, 31),
+        "srliw" => (0b0000000, 0b101, 0b0011011, 31),
+        "sraiw" => (0b0100000, 0b101, 0b0011011, 31),
+        _ => return None,
+    })
+}
+
+fn load_code(mnem: &str) -> Option<u32> {
+    Some(match mnem {
+        "lb" => 0b000,
+        "lh" => 0b001,
+        "lw" => 0b010,
+        "ld" => 0b011,
+        "lbu" => 0b100,
+        "lhu" => 0b101,
+        "lwu" => 0b110,
+        "flw" => 0b010,
+        _ => return None,
+    })
+}
+
+fn store_code(mnem: &str) -> Option<u32> {
+    Some(match mnem {
+        "sb" => 0b000,
+        "sh" => 0b001,
+        "sw" => 0b010,
+        "sd" => 0b011,
+        "fsw" => 0b010,
+        _ => return None,
+    })
+}
+
+fn branch_code(mnem: &str) -> Option<u32> {
+    Some(match mnem {
+        "beq" => 0b000,
+        "bne" => 0b001,
+        "blt" => 0b100,
+        "bge" => 0b101,
+        "bltu" => 0b110,
+        "bgeu" => 0b111,
+        _ => return None,
+    })
+}
+
+fn amo_code(mnem: &str) -> Option<(u32, u32)> {
+    let (base, f3) = if let Some(b) = mnem.strip_suffix(".w") {
+        (b, 0b010)
+    } else if let Some(b) = mnem.strip_suffix(".d") {
+        (b, 0b011)
+    } else {
+        return None;
+    };
+    let f5 = match base {
+        "lr" => 0b00010,
+        "sc" => 0b00011,
+        "amoswap" => 0b00001,
+        "amoadd" => 0b00000,
+        "amoxor" => 0b00100,
+        "amoand" => 0b01100,
+        "amoor" => 0b01000,
+        "amomin" => 0b10000,
+        "amomax" => 0b10100,
+        "amominu" => 0b11000,
+        "amomaxu" => 0b11100,
+        _ => return None,
+    };
+    Some((f5, f3))
+}
+
+fn hlv_code(mnem: &str) -> Option<(u32, u32)> {
+    Some(match mnem {
+        "hlv.b" => (0b0110000, 0),
+        "hlv.bu" => (0b0110000, 1),
+        "hlv.h" => (0b0110010, 0),
+        "hlv.hu" => (0b0110010, 1),
+        "hlvx.hu" => (0b0110010, 3),
+        "hlv.w" => (0b0110100, 0),
+        "hlv.wu" => (0b0110100, 1),
+        "hlvx.wu" => (0b0110100, 3),
+        "hlv.d" => (0b0110110, 0),
+        _ => return None,
+    })
+}
+
+fn hsv_code(mnem: &str) -> Option<u32> {
+    Some(match mnem {
+        "hsv.b" => 0b0110001,
+        "hsv.h" => 0b0110011,
+        "hsv.w" => 0b0110101,
+        "hsv.d" => 0b0110111,
+        _ => return None,
+    })
+}

@@ -1,0 +1,286 @@
+//! Tiny expression evaluator for assembler operands: integers (dec/hex/
+//! char), symbols, and the operators the OS sources need
+//! (`+ - * | & ^ << >> ~` and parentheses).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExprError {
+    UnknownSymbol(String),
+    Syntax(String),
+}
+
+pub fn eval(s: &str, symbols: &HashMap<String, u64>) -> Result<u64, ExprError> {
+    let mut p = Parser { chars: s.trim().as_bytes(), pos: 0, symbols };
+    let v = p.parse_or()?;
+    p.skip_ws();
+    if p.pos != p.chars.len() {
+        return Err(ExprError::Syntax(format!("trailing input in '{s}'")));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    chars: &'a [u8],
+    pos: usize,
+    symbols: &'a HashMap<String, u64>,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.chars.len() && (self.chars[self.pos] as char).is_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.chars.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, tok: &str) -> bool {
+        self.skip_ws();
+        if self.chars[self.pos..].starts_with(tok.as_bytes()) {
+            self.pos += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    // precedence (low→high): |  ^  &  << >>  + -  * / %  unary
+    fn parse_or(&mut self) -> Result<u64, ExprError> {
+        let mut v = self.parse_xor()?;
+        loop {
+            self.skip_ws();
+            // careful not to eat "||" (not supported anyway)
+            if self.peek() == Some(b'|') {
+                self.pos += 1;
+                v |= self.parse_xor()?;
+            } else {
+                return Ok(v);
+            }
+        }
+    }
+
+    fn parse_xor(&mut self) -> Result<u64, ExprError> {
+        let mut v = self.parse_and()?;
+        while self.peek() == Some(b'^') {
+            self.pos += 1;
+            v ^= self.parse_and()?;
+        }
+        Ok(v)
+    }
+
+    fn parse_and(&mut self) -> Result<u64, ExprError> {
+        let mut v = self.parse_shift()?;
+        while self.peek() == Some(b'&') {
+            self.pos += 1;
+            v &= self.parse_shift()?;
+        }
+        Ok(v)
+    }
+
+    fn parse_shift(&mut self) -> Result<u64, ExprError> {
+        let mut v = self.parse_add()?;
+        loop {
+            if self.eat("<<") {
+                let n = self.parse_add()?;
+                v = v.wrapping_shl(n as u32);
+            } else if self.eat(">>") {
+                let n = self.parse_add()?;
+                v = v.wrapping_shr(n as u32);
+            } else {
+                return Ok(v);
+            }
+        }
+    }
+
+    fn parse_add(&mut self) -> Result<u64, ExprError> {
+        let mut v = self.parse_mul()?;
+        loop {
+            match self.peek() {
+                Some(b'+') => {
+                    self.pos += 1;
+                    v = v.wrapping_add(self.parse_mul()?);
+                }
+                Some(b'-') => {
+                    self.pos += 1;
+                    v = v.wrapping_sub(self.parse_mul()?);
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn parse_mul(&mut self) -> Result<u64, ExprError> {
+        let mut v = self.parse_unary()?;
+        loop {
+            match self.peek() {
+                Some(b'*') => {
+                    self.pos += 1;
+                    v = v.wrapping_mul(self.parse_unary()?);
+                }
+                Some(b'/') => {
+                    self.pos += 1;
+                    let d = self.parse_unary()?;
+                    if d == 0 {
+                        return Err(ExprError::Syntax("division by zero".into()));
+                    }
+                    v /= d;
+                }
+                Some(b'%') => {
+                    self.pos += 1;
+                    let d = self.parse_unary()?;
+                    if d == 0 {
+                        return Err(ExprError::Syntax("mod by zero".into()));
+                    }
+                    v %= d;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn parse_unary(&mut self) -> Result<u64, ExprError> {
+        match self.peek() {
+            Some(b'-') => {
+                self.pos += 1;
+                Ok(self.parse_unary()?.wrapping_neg())
+            }
+            Some(b'~') => {
+                self.pos += 1;
+                Ok(!self.parse_unary()?)
+            }
+            Some(b'(') => {
+                self.pos += 1;
+                let v = self.parse_or()?;
+                if self.peek() != Some(b')') {
+                    return Err(ExprError::Syntax("missing )".into()));
+                }
+                self.pos += 1;
+                Ok(v)
+            }
+            Some(b'\'') => {
+                // char literal
+                self.pos += 1;
+                let c = if self.chars.get(self.pos) == Some(&b'\\') {
+                    self.pos += 1;
+                    match self.chars.get(self.pos) {
+                        Some(b'n') => b'\n',
+                        Some(b't') => b'\t',
+                        Some(b'0') => 0,
+                        Some(b'\\') => b'\\',
+                        Some(b'\'') => b'\'',
+                        _ => return Err(ExprError::Syntax("bad escape".into())),
+                    }
+                } else {
+                    *self.chars.get(self.pos).ok_or_else(|| ExprError::Syntax("eof in char".into()))?
+                };
+                self.pos += 1;
+                if self.chars.get(self.pos) != Some(&b'\'') {
+                    return Err(ExprError::Syntax("unterminated char".into()));
+                }
+                self.pos += 1;
+                Ok(c as u64)
+            }
+            Some(c) if c.is_ascii_digit() => self.parse_number(),
+            Some(c) if c.is_ascii_alphabetic() || c == b'_' || c == b'.' => self.parse_symbol(),
+            other => Err(ExprError::Syntax(format!("unexpected {other:?}"))),
+        }
+    }
+
+    fn parse_number(&mut self) -> Result<u64, ExprError> {
+        self.skip_ws();
+        let start = self.pos;
+        let (radix, mut pos) = if self.chars[self.pos..].starts_with(b"0x")
+            || self.chars[self.pos..].starts_with(b"0X")
+        {
+            (16, self.pos + 2)
+        } else if self.chars[self.pos..].starts_with(b"0b") {
+            (2, self.pos + 2)
+        } else {
+            (10, self.pos)
+        };
+        let digits_start = pos;
+        while pos < self.chars.len()
+            && ((self.chars[pos] as char).is_digit(radix) || self.chars[pos] == b'_')
+        {
+            pos += 1;
+        }
+        if pos == digits_start {
+            return Err(ExprError::Syntax(format!(
+                "bad number at '{}'",
+                String::from_utf8_lossy(&self.chars[start..])
+            )));
+        }
+        let text: String =
+            self.chars[digits_start..pos].iter().map(|&b| b as char).filter(|&c| c != '_').collect();
+        self.pos = pos;
+        u64::from_str_radix(&text, radix).map_err(|e| ExprError::Syntax(format!("{e}")))
+    }
+
+    fn parse_symbol(&mut self) -> Result<u64, ExprError> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.chars.len() {
+            let c = self.chars[self.pos];
+            if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'$' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let name = std::str::from_utf8(&self.chars[start..self.pos]).unwrap();
+        self.symbols
+            .get(name)
+            .copied()
+            .ok_or_else(|| ExprError::UnknownSymbol(name.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(s: &str) -> u64 {
+        eval(s, &HashMap::new()).unwrap()
+    }
+
+    #[test]
+    fn literals() {
+        assert_eq!(ev("42"), 42);
+        assert_eq!(ev("0x80000000"), 0x8000_0000);
+        assert_eq!(ev("0b1010"), 10);
+        assert_eq!(ev("-1"), u64::MAX);
+        assert_eq!(ev("'A'"), 65);
+        assert_eq!(ev("'\\n'"), 10);
+        assert_eq!(ev("1_000"), 1000);
+    }
+
+    #[test]
+    fn precedence() {
+        assert_eq!(ev("1 + 2 * 3"), 7);
+        assert_eq!(ev("(1 + 2) * 3"), 9);
+        assert_eq!(ev("1 << 4 | 1 << 2"), 0x14);
+        assert_eq!(ev("0xff & ~0x0f"), 0xf0);
+        assert_eq!(ev("1 << 2 + 1"), 8, "shift binds looser than +");
+        assert_eq!(ev("8 >> 1"), 4);
+        assert_eq!(ev("100 / 3"), 33);
+        assert_eq!(ev("100 % 3"), 1);
+    }
+
+    #[test]
+    fn symbols() {
+        let mut syms = HashMap::new();
+        syms.insert("base".to_string(), 0x8000_0000u64);
+        syms.insert("PAGE".to_string(), 4096u64);
+        assert_eq!(eval("base + 2*PAGE", &syms).unwrap(), 0x8000_2000);
+        assert!(matches!(eval("nope", &syms), Err(ExprError::UnknownSymbol(_))));
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        assert!(eval("1 2", &HashMap::new()).is_err());
+    }
+}

@@ -1,0 +1,708 @@
+//! A two-pass RISC-V assembler.
+//!
+//! The image has no cross-compiler, so the entire guest software stack
+//! (firmware, hypervisor, kernel, benchmarks — DESIGN.md S11–S14) is
+//! written in assembly and assembled at run time by this module. It
+//! supports the full instruction subset of [`crate::isa`] (including the
+//! H-extension ops), the usual pseudo-instructions, named CSRs, labels,
+//! expressions ([`expr`]) and a handful of data directives.
+//!
+//! Syntax notes:
+//! - comments: `#` or `//` to end of line
+//! - directives: `.org`, `.align`, `.equ NAME, EXPR`, `.byte/.half/.word/
+//!   .dword EXPR[,...]`, `.ascii/.asciz "s"`, `.space N`
+//! - `li` accepts any 64-bit constant expression (multi-instruction
+//!   expansion); `la` is `auipc+addi` (pc-relative, label or expression)
+
+pub mod expr;
+
+use std::collections::HashMap;
+
+use expr::{eval, ExprError};
+
+/// An assembled image.
+#[derive(Clone, Debug)]
+pub struct Image {
+    /// Load address of `data[0]`.
+    pub base: u64,
+    pub data: Vec<u8>,
+    pub symbols: HashMap<String, u64>,
+}
+
+impl Image {
+    pub fn symbol(&self, name: &str) -> Option<u64> {
+        self.symbols.get(name).copied()
+    }
+}
+
+#[derive(Debug)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+/// Assemble `src` with the location counter starting at `base`.
+pub fn assemble(src: &str, base: u64) -> Result<Image, AsmError> {
+    let stmts = parse_lines(src)?;
+    // ---- pass 1: layout, symbol table ----
+    let mut symbols: HashMap<String, u64> = HashMap::new();
+    let mut lc = base;
+    for s in &stmts {
+        match &s.kind {
+            StmtKind::Label(name) => {
+                if symbols.insert(name.clone(), lc).is_some() {
+                    return Err(err(s.line, format!("duplicate label '{name}'")));
+                }
+            }
+            StmtKind::Directive(d, args) => {
+                lc = directive_size(s.line, d, args, lc, &mut symbols, true)?;
+            }
+            StmtKind::Inst(mnem, ops) => {
+                let n = inst_size(s.line, mnem, ops, &symbols)?;
+                lc += n as u64;
+            }
+        }
+    }
+    // ---- pass 2: emit ----
+    let mut out = Emitter { data: Vec::new(), base, lc: base };
+    for s in &stmts {
+        match &s.kind {
+            StmtKind::Label(_) => {}
+            StmtKind::Directive(d, args) => {
+                emit_directive(s.line, d, args, &mut out, &mut symbols)?;
+            }
+            StmtKind::Inst(mnem, ops) => {
+                let words = encode_inst(s.line, mnem, ops, out.lc, &symbols)?;
+                for w in words {
+                    out.emit_u32(w);
+                }
+            }
+        }
+    }
+    Ok(Image { base, data: out.data, symbols })
+}
+
+struct Emitter {
+    data: Vec<u8>,
+    base: u64,
+    lc: u64,
+}
+
+impl Emitter {
+    fn pad_to(&mut self, addr: u64, line: usize) -> Result<(), AsmError> {
+        if addr < self.lc {
+            return Err(err(line, format!(".org going backwards: {:#x} < {:#x}", addr, self.lc)));
+        }
+        self.data.resize((addr - self.base) as usize, 0);
+        self.lc = addr;
+        Ok(())
+    }
+    fn emit(&mut self, bytes: &[u8]) {
+        self.data.extend_from_slice(bytes);
+        self.lc += bytes.len() as u64;
+    }
+    fn emit_u32(&mut self, w: u32) {
+        self.emit(&w.to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------- parsing
+
+struct Stmt {
+    line: usize,
+    kind: StmtKind,
+}
+
+enum StmtKind {
+    Label(String),
+    Directive(String, Vec<String>),
+    Inst(String, Vec<String>),
+}
+
+fn err(line: usize, msg: impl Into<String>) -> AsmError {
+    AsmError { line, msg: msg.into() }
+}
+
+fn parse_lines(src: &str) -> Result<Vec<Stmt>, AsmError> {
+    let mut stmts = raw_parse_lines(src)?;
+    resolve_numeric_labels(&mut stmts)?;
+    Ok(stmts)
+}
+
+/// GNU-as numeric local labels: `1:` may be defined many times; `1b`/`1f`
+/// reference the nearest definition backward/forward. Rewritten here into
+/// unique symbols before the normal two-pass assembly.
+fn resolve_numeric_labels(stmts: &mut [Stmt]) -> Result<(), AsmError> {
+    use std::collections::HashMap;
+    // Collect (digit, stmt index) definitions in order; rename them.
+    let mut defs: HashMap<String, Vec<usize>> = HashMap::new();
+    let mut counters: HashMap<String, usize> = HashMap::new();
+    for (i, s) in stmts.iter_mut().enumerate() {
+        if let StmtKind::Label(name) = &mut s.kind {
+            if !name.is_empty() && name.chars().all(|c| c.is_ascii_digit()) {
+                let k = counters.entry(name.clone()).or_insert(0);
+                let unique = format!(".L{name}.{k}");
+                defs.entry(name.clone()).or_default().push(i);
+                *k += 1;
+                *name = unique;
+            }
+        }
+    }
+    // Rewrite standalone `Nb` / `Nf` operands.
+    for i in 0..stmts.len() {
+        let line = stmts[i].line;
+        if let StmtKind::Inst(_, ops) = &mut stmts[i].kind {
+            for op in ops.iter_mut() {
+                let t = op.trim();
+                if t.len() < 2 {
+                    continue;
+                }
+                let (digits, dir) = t.split_at(t.len() - 1);
+                if digits.is_empty() || !digits.chars().all(|c| c.is_ascii_digit()) {
+                    continue;
+                }
+                let fwd = match dir {
+                    "f" => true,
+                    "b" => false,
+                    _ => continue,
+                };
+                let list = defs.get(digits).ok_or_else(|| {
+                    err(line, format!("no numeric label '{digits}' for '{t}'"))
+                })?;
+                // Occurrence number of the nearest definition in the
+                // requested direction.
+                let ord = if fwd {
+                    list.iter().position(|&d| d > i)
+                } else {
+                    list.iter().rposition(|&d| d < i)
+                }
+                .ok_or_else(|| err(line, format!("unresolved local label '{t}'")))?;
+                *op = format!(".L{digits}.{ord}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn raw_parse_lines(src: &str) -> Result<Vec<Stmt>, AsmError> {
+    let mut stmts = Vec::new();
+    for (i, raw_line) in src.lines().enumerate() {
+        let line_no = i + 1;
+        let mut line = raw_line;
+        // Strip comments, respecting string literals.
+        let mut cut = line.len();
+        let mut in_str = false;
+        let bytes = line.as_bytes();
+        let mut j = 0;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'"' => in_str = !in_str,
+                b'\\' if in_str => j += 1,
+                b'#' if !in_str => {
+                    cut = j;
+                    break;
+                }
+                b'/' if !in_str && bytes.get(j + 1) == Some(&b'/') => {
+                    cut = j;
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        line = &line[..cut];
+        let mut rest = line.trim();
+        // Labels (possibly several, possibly followed by an instruction).
+        while let Some(colon) = find_label_colon(rest) {
+            let name = rest[..colon].trim();
+            if !is_ident(name) {
+                break;
+            }
+            stmts.push(Stmt { line: line_no, kind: StmtKind::Label(name.to_string()) });
+            rest = rest[colon + 1..].trim();
+        }
+        if rest.is_empty() {
+            continue;
+        }
+        let (head, tail) = match rest.find(|c: char| c.is_whitespace()) {
+            Some(p) => (&rest[..p], rest[p..].trim()),
+            None => (rest, ""),
+        };
+        let ops = split_operands(tail);
+        if let Some(stripped) = head.strip_prefix('.') {
+            stmts.push(Stmt {
+                line: line_no,
+                kind: StmtKind::Directive(format!(".{stripped}"), ops),
+            });
+        } else {
+            stmts.push(Stmt { line: line_no, kind: StmtKind::Inst(head.to_lowercase(), ops) });
+        }
+    }
+    Ok(stmts)
+}
+
+fn find_label_colon(s: &str) -> Option<usize> {
+    // A label colon must come before any whitespace/operand character.
+    let p = s.find(':')?;
+    if s[..p].chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '$') && p > 0 {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+fn is_ident(s: &str) -> bool {
+    if s.is_empty() {
+        return false;
+    }
+    // Numeric local labels ("1", "2", ...) are valid definitions.
+    if s.chars().all(|c| c.is_ascii_digit()) {
+        return true;
+    }
+    s.chars().next().map(|c| c.is_alphabetic() || c == '_' || c == '.').unwrap_or(false)
+        && s.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '$')
+}
+
+/// Split on commas, respecting parentheses and quotes.
+fn split_operands(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    let mut chars = s.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '\\' if in_str => {
+                cur.push(c);
+                if let Some(n) = chars.next() {
+                    cur.push(n);
+                }
+            }
+            '(' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+// ------------------------------------------------------------- directives
+
+fn directive_size(
+    line: usize,
+    d: &str,
+    args: &[String],
+    lc: u64,
+    symbols: &mut HashMap<String, u64>,
+    pass1: bool,
+) -> Result<u64, AsmError> {
+    match d {
+        ".org" => {
+            let v = eval_arg(line, args.first(), symbols)?;
+            if v < lc {
+                return Err(err(line, ".org going backwards"));
+            }
+            Ok(v)
+        }
+        ".align" => {
+            let n = eval_arg(line, args.first(), symbols)?;
+            let a = 1u64 << n;
+            Ok((lc + a - 1) & !(a - 1))
+        }
+        ".equ" | ".set" => {
+            if args.len() != 2 {
+                return Err(err(line, ".equ NAME, EXPR"));
+            }
+            if pass1 {
+                let v = eval(&args[1], symbols).map_err(|e| expr_err(line, e))?;
+                symbols.insert(args[0].clone(), v);
+            }
+            Ok(lc)
+        }
+        ".byte" => Ok(lc + args.len() as u64),
+        ".half" => Ok(lc + 2 * args.len() as u64),
+        ".word" => Ok(lc + 4 * args.len() as u64),
+        ".dword" | ".quad" => Ok(lc + 8 * args.len() as u64),
+        ".space" | ".zero" => {
+            let n = eval_arg(line, args.first(), symbols)?;
+            Ok(lc + n)
+        }
+        ".ascii" | ".asciz" | ".string" => {
+            let s = parse_string(line, args.first())?;
+            let extra = if d == ".ascii" { 0 } else { 1 };
+            Ok(lc + s.len() as u64 + extra)
+        }
+        ".global" | ".globl" | ".text" | ".data" | ".section" | ".option" => Ok(lc),
+        _ => Err(err(line, format!("unknown directive {d}"))),
+    }
+}
+
+fn emit_directive(
+    line: usize,
+    d: &str,
+    args: &[String],
+    out: &mut Emitter,
+    symbols: &mut HashMap<String, u64>,
+) -> Result<(), AsmError> {
+    match d {
+        ".org" => {
+            let v = eval_arg(line, args.first(), symbols)?;
+            out.pad_to(v, line)?;
+        }
+        ".align" => {
+            let n = eval_arg(line, args.first(), symbols)?;
+            let a = 1u64 << n;
+            let target = (out.lc + a - 1) & !(a - 1);
+            out.pad_to(target, line)?;
+        }
+        ".equ" | ".set" => {}
+        ".byte" | ".half" | ".word" | ".dword" | ".quad" => {
+            let size = match d {
+                ".byte" => 1,
+                ".half" => 2,
+                ".word" => 4,
+                _ => 8,
+            };
+            for a in args {
+                let v = eval(a, symbols).map_err(|e| expr_err(line, e))?;
+                out.emit(&v.to_le_bytes()[..size]);
+            }
+        }
+        ".space" | ".zero" => {
+            let n = eval_arg(line, args.first(), symbols)?;
+            out.emit(&vec![0u8; n as usize]);
+        }
+        ".ascii" | ".asciz" | ".string" => {
+            let s = parse_string(line, args.first())?;
+            out.emit(&s);
+            if d != ".ascii" {
+                out.emit(&[0]);
+            }
+        }
+        ".global" | ".globl" | ".text" | ".data" | ".section" | ".option" => {}
+        _ => return Err(err(line, format!("unknown directive {d}"))),
+    }
+    Ok(())
+}
+
+fn parse_string(line: usize, arg: Option<&String>) -> Result<Vec<u8>, AsmError> {
+    let s = arg.ok_or_else(|| err(line, "missing string"))?;
+    let s = s.trim();
+    if !s.starts_with('"') || !s.ends_with('"') || s.len() < 2 {
+        return Err(err(line, "expected quoted string"));
+    }
+    let inner = &s[1..s.len() - 1];
+    let mut out = Vec::new();
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push(b'\n'),
+                Some('t') => out.push(b'\t'),
+                Some('r') => out.push(b'\r'),
+                Some('0') => out.push(0),
+                Some('\\') => out.push(b'\\'),
+                Some('"') => out.push(b'"'),
+                other => return Err(err(line, format!("bad escape \\{other:?}"))),
+            }
+        } else {
+            let mut buf = [0u8; 4];
+            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+        }
+    }
+    Ok(out)
+}
+
+fn eval_arg(line: usize, arg: Option<&String>, symbols: &HashMap<String, u64>) -> Result<u64, AsmError> {
+    let a = arg.ok_or_else(|| err(line, "missing argument"))?;
+    eval(a, symbols).map_err(|e| expr_err(line, e))
+}
+
+fn expr_err(line: usize, e: ExprError) -> AsmError {
+    err(line, format!("{e:?}"))
+}
+
+// ------------------------------------------------------------ instructions
+
+mod encode;
+pub use encode::{encode_inst, inst_size};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{decode, Op};
+
+    fn asm1(s: &str) -> u32 {
+        let img = assemble(s, 0x8000_0000).unwrap();
+        assert_eq!(img.data.len(), 4, "expected single instruction for {s}");
+        u32::from_le_bytes(img.data[..4].try_into().unwrap())
+    }
+
+    #[test]
+    fn basic_rtype_itype() {
+        assert_eq!(decode(asm1("add x1, x2, x3")).op, Op::Add);
+        let i = decode(asm1("addi a0, a1, -42"));
+        assert_eq!(i.op, Op::Addi);
+        assert_eq!(i.rd, 10);
+        assert_eq!(i.rs1, 11);
+        assert_eq!(i.imm, -42);
+        let i = decode(asm1("slli t0, t1, 45"));
+        assert_eq!(i.op, Op::Slli);
+        assert_eq!(i.imm, 45);
+    }
+
+    #[test]
+    fn loads_stores() {
+        let i = decode(asm1("ld ra, 16(sp)"));
+        assert_eq!((i.op, i.rd, i.rs1, i.imm), (Op::Ld, 1, 2, 16));
+        let i = decode(asm1("sd s0, -8(sp)"));
+        assert_eq!((i.op, i.rs2, i.rs1, i.imm), (Op::Sd, 8, 2, -8));
+        let i = decode(asm1("lbu a0, 0(a1)"));
+        assert_eq!(i.op, Op::Lbu);
+    }
+
+    #[test]
+    fn branches_and_jumps_with_labels() {
+        let img = assemble(
+            "start: addi x1, x0, 1\n  beq x1, x0, done\n  jal x2, start\ndone: ret\n",
+            0x8000_0000,
+        )
+        .unwrap();
+        let w = |i: usize| u32::from_le_bytes(img.data[4 * i..4 * i + 4].try_into().unwrap());
+        let beq = decode(w(1));
+        assert_eq!(beq.op, Op::Beq);
+        assert_eq!(beq.imm, 8, "branch to done (+8)");
+        let jal = decode(w(2));
+        assert_eq!(jal.op, Op::Jal);
+        assert_eq!(jal.imm, -8);
+        assert_eq!(jal.rd, 2);
+        let ret = decode(w(3));
+        assert_eq!(ret.op, Op::Jalr);
+        assert_eq!(ret.rs1, 1);
+        assert_eq!(img.symbol("done"), Some(0x8000_000c));
+    }
+
+    #[test]
+    fn csr_instructions() {
+        let i = decode(asm1("csrrw t0, mstatus, t1"));
+        assert_eq!(i.op, Op::Csrrw);
+        assert_eq!(i.csr, 0x300);
+        let i = decode(asm1("csrr a0, hgatp"));
+        assert_eq!(i.op, Op::Csrrs);
+        assert_eq!(i.csr, 0x680);
+        assert_eq!(i.rs1, 0);
+        let i = decode(asm1("csrw vsatp, a1"));
+        assert_eq!(i.op, Op::Csrrw);
+        assert_eq!(i.rd, 0);
+        assert_eq!(i.csr, 0x280);
+        let i = decode(asm1("csrwi mie, 8"));
+        assert_eq!(i.op, Op::Csrrwi);
+        assert_eq!(i.imm, 8);
+        let i = decode(asm1("csrrs x5, 0x343, x0"));
+        assert_eq!(i.csr, 0x343, "numeric CSR address");
+    }
+
+    #[test]
+    fn hypervisor_ops() {
+        assert_eq!(decode(asm1("hfence.vvma x0, x0")).op, Op::HfenceVvma);
+        assert_eq!(decode(asm1("hfence.gvma a0, a1")).op, Op::HfenceGvma);
+        let i = decode(asm1("hlv.w a0, (a1)"));
+        assert_eq!(i.op, Op::HlvW);
+        assert_eq!(i.rd, 10);
+        assert_eq!(i.rs1, 11);
+        let i = decode(asm1("hsv.d a2, (a3)"));
+        assert_eq!(i.op, Op::HsvD);
+        assert_eq!(i.rs2, 12);
+        assert_eq!(i.rs1, 13);
+        assert_eq!(decode(asm1("hlvx.wu t0, (t1)")).op, Op::HlvxWu);
+    }
+
+    #[test]
+    fn amo_and_lrsc() {
+        let i = decode(asm1("amoadd.w a0, a1, (a2)"));
+        assert_eq!(i.op, Op::AmoAddW);
+        assert_eq!((i.rd, i.rs2, i.rs1), (10, 11, 12));
+        assert_eq!(decode(asm1("lr.d t0, (t1)")).op, Op::LrD);
+        let i = decode(asm1("sc.w t0, t2, (t1)"));
+        assert_eq!(i.op, Op::ScW);
+    }
+
+    #[test]
+    fn li_small_and_large() {
+        // Small constant: single addi.
+        let img = assemble("li a0, 42", 0).unwrap();
+        assert_eq!(img.data.len(), 4);
+        // 32-bit constant: lui+addiw.
+        let img = assemble("li a0, 0x12345678", 0).unwrap();
+        assert_eq!(img.data.len(), 8);
+        // 64-bit constant: longer sequence; verified by simulation below.
+        let img = assemble("li a0, 0xffffffc000000000", 0).unwrap();
+        assert!(img.data.len() >= 8);
+    }
+
+    #[test]
+    fn li_values_execute_correctly() {
+        use crate::cpu::{step, Core, StepEvent};
+        use crate::mem::{Bus, RAM_BASE};
+        for val in [
+            0i64,
+            42,
+            -1,
+            2048,
+            -2049,
+            0x12345678,
+            -0x12345678,
+            0x8000_0000,
+            0xffff_ffc0_0000_0000u64 as i64,
+            0x1234_5678_9abc_def0,
+            i64::MIN,
+            i64::MAX,
+        ] {
+            let src = format!("li a0, {val}\n ebreak\n");
+            let img = assemble(&src, RAM_BASE).unwrap();
+            let mut core = Core::new(true);
+            let mut bus = Bus::new(1 << 20);
+            bus.load_image(img.base, &img.data).unwrap();
+            core.hart.pc = RAM_BASE;
+            for _ in 0..20 {
+                match step(&mut core, &mut bus) {
+                    StepEvent::Retired => {}
+                    StepEvent::Exception(crate::isa::ExceptionCause::Breakpoint, _) => break,
+                    e => panic!("unexpected {e:?} for li {val}"),
+                }
+            }
+            assert_eq!(core.hart.regs[10] as i64, val, "li {val:#x}");
+        }
+    }
+
+    #[test]
+    fn la_is_pc_relative() {
+        use crate::cpu::{step, Core, StepEvent};
+        use crate::mem::{Bus, RAM_BASE};
+        let src = "la a0, target\n ebreak\n .align 4\ntarget: .dword 7\n";
+        let img = assemble(src, RAM_BASE).unwrap();
+        let target = img.symbol("target").unwrap();
+        let mut core = Core::new(true);
+        let mut bus = Bus::new(1 << 20);
+        bus.load_image(img.base, &img.data).unwrap();
+        core.hart.pc = RAM_BASE;
+        loop {
+            match step(&mut core, &mut bus) {
+                StepEvent::Retired => {}
+                StepEvent::Exception(crate::isa::ExceptionCause::Breakpoint, _) => break,
+                e => panic!("{e:?}"),
+            }
+        }
+        assert_eq!(core.hart.regs[10], target);
+    }
+
+    #[test]
+    fn pseudo_instructions() {
+        assert_eq!(decode(asm1("nop")).op, Op::Addi);
+        let i = decode(asm1("mv a0, a1"));
+        assert_eq!((i.op, i.rd, i.rs1, i.imm), (Op::Addi, 10, 11, 0));
+        let i = decode(asm1("not a0, a1"));
+        assert_eq!((i.op, i.imm), (Op::Xori, -1));
+        let i = decode(asm1("neg a0, a1"));
+        assert_eq!((i.op, i.rs1, i.rs2), (Op::Sub, 0, 11));
+        let i = decode(asm1("seqz a0, a1"));
+        assert_eq!((i.op, i.imm), (Op::Sltiu, 1));
+        let i = decode(asm1("snez a0, a1"));
+        assert_eq!((i.op, i.rs1, i.rs2), (Op::Sltu, 0, 11));
+        let i = decode(asm1("sext.w a0, a1"));
+        assert_eq!((i.op, i.imm), (Op::Addiw, 0));
+        let i = decode(asm1("jr t0"));
+        assert_eq!((i.op, i.rd, i.rs1), (Op::Jalr, 0, 5));
+    }
+
+    #[test]
+    fn conditional_pseudos() {
+        let img = assemble("x: beqz a0, x\n bnez a1, x\n bltz a2, x\n bgt a3, a4, x", 0).unwrap();
+        let w = |i: usize| decode(u32::from_le_bytes(img.data[4 * i..4 * i + 4].try_into().unwrap()));
+        assert_eq!(w(0).op, Op::Beq);
+        assert_eq!(w(1).op, Op::Bne);
+        assert_eq!(w(2).op, Op::Blt);
+        let bgt = w(3);
+        assert_eq!(bgt.op, Op::Blt, "bgt swaps operands");
+        assert_eq!((bgt.rs1, bgt.rs2), (14, 13));
+    }
+
+    #[test]
+    fn data_directives_and_equ() {
+        let img = assemble(
+            ".equ MAGIC, 0x1234\n.org 0x80000000\nstart:\n .word MAGIC\n .byte 1, 2\n .align 2\n .asciz \"ok\"\n .align 3\n .dword MAGIC + 1\n",
+            0x8000_0000,
+        )
+        .unwrap();
+        assert_eq!(&img.data[0..4], &0x1234u32.to_le_bytes());
+        assert_eq!(&img.data[4..6], &[1, 2]);
+        assert_eq!(&img.data[8..11], b"ok\0");
+        assert_eq!(img.data[16..24], (0x1235u64).to_le_bytes());
+    }
+
+    #[test]
+    fn org_pads() {
+        let img = assemble(".org 0x100\n nop\n .org 0x200\n nop\n", 0x100).unwrap();
+        assert_eq!(img.base, 0x100);
+        assert_eq!(img.data.len(), 0x104);
+        assert_eq!(&img.data[0x100..0x104], &0x0000_0013u32.to_le_bytes());
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = assemble("nop\n bogus x1, x2\n", 0).unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = assemble("beq x1, x2, nowhere\n", 0).unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let img = assemble("# full line\n nop # trailing\n nop // c++ style\n", 0).unwrap();
+        assert_eq!(img.data.len(), 8);
+    }
+
+    #[test]
+    fn float_subset() {
+        assert_eq!(decode(asm1("fadd.s f1, f2, f3")).op, Op::FaddS);
+        assert_eq!(decode(asm1("fmul.s f1, f2, f3")).op, Op::FmulS);
+        assert_eq!(decode(asm1("fmv.w.x f1, a0")).op, Op::FmvWX);
+        assert_eq!(decode(asm1("fmv.x.w a0, f1")).op, Op::FmvXW);
+        assert_eq!(decode(asm1("flw f1, 4(a0)")).op, Op::Flw);
+        assert_eq!(decode(asm1("fsw f1, 4(a0)")).op, Op::Fsw);
+    }
+
+    #[test]
+    fn sfence_operands_optional() {
+        let i = decode(asm1("sfence.vma"));
+        assert_eq!(i.op, Op::SfenceVma);
+        assert_eq!((i.rs1, i.rs2), (0, 0));
+        let i = decode(asm1("sfence.vma a0, a1"));
+        assert_eq!((i.rs1, i.rs2), (10, 11));
+    }
+}

@@ -1,0 +1,228 @@
+//! Configuration system: a gem5-style "system configuration" described in
+//! a small TOML-subset file (sections, `key = value` with ints, bools and
+//! strings) plus programmatic defaults. Dependency-free by design (the
+//! offline build has no serde/toml crates — see Cargo.toml).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Full simulator configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    // [machine]
+    pub ram_mb: u64,
+    pub h_extension: bool,
+    pub tlb_sets: u64,
+    pub tlb_ways: u64,
+    // [workload]
+    pub workload: String,
+    /// Run the workload inside a VM (hypervisor + guest kernel) instead of
+    /// natively.
+    pub vm: bool,
+    /// Benchmark input-scale knob (MiBench small/large analog).
+    pub scale: u64,
+    // [sim]
+    pub max_ticks: u64,
+    pub uart_echo: bool,
+    pub trace_cap: u64,
+    // [timing] — the XLA analytics model (E9)
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            ram_mb: 64,
+            h_extension: true,
+            tlb_sets: 64,
+            tlb_ways: 4,
+            workload: "qsort".to_string(),
+            vm: false,
+            scale: 1,
+            max_ticks: 2_000_000_000,
+            uart_echo: false,
+            trace_cap: 8_000_000,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn ram_bytes(&self) -> usize {
+        (self.ram_mb as usize) << 20
+    }
+
+    /// Parse a TOML-subset config file, overriding defaults.
+    pub fn from_str(text: &str) -> Result<SimConfig> {
+        let kv = parse_toml_subset(text)?;
+        let mut cfg = SimConfig::default();
+        for (key, val) in kv {
+            match key.as_str() {
+                "machine.ram_mb" => cfg.ram_mb = val.int()?,
+                "machine.h_extension" => cfg.h_extension = val.boolean()?,
+                "machine.tlb_sets" => cfg.tlb_sets = val.int()?,
+                "machine.tlb_ways" => cfg.tlb_ways = val.int()?,
+                "workload.name" => cfg.workload = val.string()?,
+                "workload.vm" => cfg.vm = val.boolean()?,
+                "workload.scale" => cfg.scale = val.int()?,
+                "sim.max_ticks" => cfg.max_ticks = val.int()?,
+                "sim.uart_echo" => cfg.uart_echo = val.boolean()?,
+                "sim.trace_cap" => cfg.trace_cap = val.int()?,
+                "timing.artifacts_dir" => cfg.artifacts_dir = val.string()?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        if !cfg.tlb_sets.is_power_of_two() {
+            bail!("machine.tlb_sets must be a power of two");
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<SimConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        SimConfig::from_str(&text)
+    }
+
+    /// Build a machine from this configuration.
+    pub fn build_machine(&self) -> crate::sim::Machine {
+        let mut m = crate::sim::Machine::new(self.ram_bytes(), self.h_extension);
+        m.core.tlb = crate::mmu::Tlb::new(self.tlb_sets as usize, self.tlb_ways as usize);
+        m.bus.uart.echo = self.uart_echo;
+        m
+    }
+}
+
+/// A parsed scalar value.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Int(u64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    fn int(&self) -> Result<u64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+    fn boolean(&self) -> Result<bool> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+    fn string(&self) -> Result<String> {
+        match self {
+            Value::Str(v) => Ok(v.clone()),
+            Value::Int(v) => Ok(v.to_string()),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+}
+
+/// Parse `[section]` + `key = value` lines into "section.key" → value.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key = value", i + 1);
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim();
+        let value = if v == "true" {
+            Value::Bool(true)
+        } else if v == "false" {
+            Value::Bool(false)
+        } else if let Some(stripped) = v.strip_prefix("0x") {
+            Value::Int(u64::from_str_radix(stripped, 16).with_context(|| format!("line {}", i + 1))?)
+        } else if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+            Value::Str(v[1..v.len() - 1].to_string())
+        } else if let Ok(n) = v.replace('_', "").parse::<u64>() {
+            Value::Int(n)
+        } else {
+            Value::Str(v.to_string())
+        };
+        out.insert(key, value);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = SimConfig::default();
+        assert!(c.h_extension);
+        assert_eq!(c.ram_bytes(), 64 << 20);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+            # benchmark run
+            [machine]
+            ram_mb = 128
+            h_extension = true
+            tlb_sets = 32
+            tlb_ways = 2
+
+            [workload]
+            name = "dijkstra"
+            vm = true
+            scale = 2
+
+            [sim]
+            max_ticks = 50_000_000
+            uart_echo = false
+        "#;
+        let c = SimConfig::from_str(text).unwrap();
+        assert_eq!(c.ram_mb, 128);
+        assert_eq!(c.workload, "dijkstra");
+        assert!(c.vm);
+        assert_eq!(c.scale, 2);
+        assert_eq!(c.max_ticks, 50_000_000);
+        assert_eq!(c.tlb_sets, 32);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SimConfig::from_str("[machine]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn non_pow2_tlb_rejected() {
+        assert!(SimConfig::from_str("[machine]\ntlb_sets = 3\n").is_err());
+    }
+
+    #[test]
+    fn hex_and_bare_strings() {
+        let kv = parse_toml_subset("[a]\nx = 0x10\ny = hello\n").unwrap();
+        assert!(matches!(kv["a.x"], Value::Int(16)));
+        assert!(matches!(&kv["a.y"], Value::Str(s) if s == "hello"));
+    }
+
+    #[test]
+    fn build_machine_applies_tlb_shape() {
+        let c = SimConfig { tlb_sets: 16, tlb_ways: 2, ram_mb: 4, ..Default::default() };
+        let m = c.build_machine();
+        assert_eq!(m.core.tlb.capacity(), 32);
+    }
+}

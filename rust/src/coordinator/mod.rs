@@ -1,0 +1,420 @@
+//! The experiment coordinator: orchestrates benchmark sweeps across
+//! {native, guest} × workloads, applies the paper's checkpoint methodology
+//! (boot once, measure only the benchmark — §4.1), and regenerates every
+//! figure of the evaluation:
+//!
+//!   Fig. 4 — simulation time native vs guest + slowdown
+//!   Fig. 5 — executed instructions with/without VM
+//!   Fig. 6 — native exceptions per privilege level (M, S)
+//!   Fig. 7 — guest exceptions per privilege level (M, HS, VS)
+//!   E8     — boot-time ratio
+//!   E9     — XLA timing-model analytics over the captured trace
+//!
+//! Sweeps run one OS thread per (benchmark, mode) pair.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::SimConfig;
+use crate::runtime::TraceReport;
+use crate::sim::{ExitReason, Machine};
+use crate::sw;
+
+/// Boot is declared complete when the kernel banner has been printed.
+const BOOT_BANNER: &str = "mini-os: up\n";
+
+/// One benchmark execution's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub vm: bool,
+    pub scale: u64,
+    /// Host wall-clock seconds for the benchmark phase (Fig. 4 metric).
+    pub host_seconds: f64,
+    /// Boot phase measurements (E8).
+    pub boot_ticks: u64,
+    pub boot_seconds: f64,
+    /// Retired instructions in the benchmark phase (Fig. 5).
+    pub sim_insts: u64,
+    pub sim_ticks: u64,
+    /// Exceptions handled per privilege level (Figs. 6/7).
+    pub exc_by_level: BTreeMap<String, u64>,
+    /// Exceptions by cause code (for the detailed tables).
+    pub exc_by_cause: BTreeMap<u64, u64>,
+    pub interrupts: u64,
+    /// TLB/walker counters.
+    pub tlb_misses: u64,
+    pub walk_steps: u64,
+    pub g_walk_steps: u64,
+    /// Benchmark checksum line (functional correctness cross-check).
+    pub checksum: String,
+    /// Captured trace (present when tracing was requested).
+    pub trace: Option<crate::trace::TraceBuf>,
+}
+
+impl BenchResult {
+    pub fn exceptions_at(&self, level: &str) -> u64 {
+        self.exc_by_level.get(level).copied().unwrap_or(0)
+    }
+}
+
+/// Run one benchmark under the paper's methodology. `with_trace` enables
+/// virtual-reference capture for the timing model (E9).
+pub fn run_one(cfg: &SimConfig, bench: &str, vm: bool, with_trace: bool) -> Result<BenchResult> {
+    let mut m: Machine = cfg.build_machine();
+    if vm {
+        sw::setup_guest(&mut m, bench, cfg.scale)?;
+    } else {
+        sw::setup_native(&mut m, bench, cfg.scale)?;
+    }
+    // ---- boot phase (excluded from measurement, §4.1) ----
+    let banner_len = BOOT_BANNER.len();
+    let r = m.run_until(cfg.max_ticks, |m| m.bus.uart.output.len() >= banner_len);
+    if r != ExitReason::Predicate {
+        bail!("{bench} vm={vm}: boot did not reach banner ({r:?}); console:\n{}", m.console());
+    }
+    if !m.console().ends_with(BOOT_BANNER) {
+        bail!("{bench} vm={vm}: unexpected boot output: {}", m.console());
+    }
+    let boot_ticks = m.stats.sim_ticks;
+    let boot_seconds = m.stats.host_time.as_secs_f64();
+    // ---- checkpoint analog: measure only the benchmark ----
+    m.reset_stats();
+    if with_trace {
+        m.enable_trace(cfg.trace_cap as usize);
+    }
+    let r = m.run(cfg.max_ticks);
+    match r {
+        ExitReason::PowerOff(code) if code == crate::mem::SYSCON_PASS => {}
+        other => bail!("{bench} vm={vm}: failed ({other:?}); console:\n{}", m.console()),
+    }
+
+    let mut exc_by_level = BTreeMap::new();
+    for level in ["M", "HS", "S", "VS"] {
+        let n = m.stats.exceptions_at(level);
+        if n > 0 {
+            exc_by_level.insert(level.to_string(), n);
+        }
+    }
+    let mut exc_by_cause = BTreeMap::new();
+    for ((cause, _), n) in &m.stats.exceptions {
+        *exc_by_cause.entry(*cause).or_insert(0) += n;
+    }
+    let checksum = m
+        .console()
+        .lines()
+        .find(|l| l.len() == 16 && l.chars().all(|c| c.is_ascii_hexdigit()))
+        .unwrap_or("")
+        .to_string();
+    Ok(BenchResult {
+        name: bench.to_string(),
+        vm,
+        scale: cfg.scale,
+        host_seconds: m.stats.host_time.as_secs_f64(),
+        boot_ticks,
+        boot_seconds,
+        sim_insts: m.stats.sim_insts,
+        sim_ticks: m.stats.sim_ticks,
+        exc_by_level,
+        exc_by_cause,
+        interrupts: m.stats.interrupts.values().sum(),
+        tlb_misses: m.core.mmu_stats.tlb_misses,
+        walk_steps: m.core.mmu_stats.walk_steps,
+        g_walk_steps: m.core.mmu_stats.g_walk_steps,
+        checksum,
+        trace: m.core.trace.take(),
+    })
+}
+
+/// A native/guest pair for one workload.
+#[derive(Clone, Debug)]
+pub struct Pair {
+    pub native: BenchResult,
+    pub guest: BenchResult,
+}
+
+impl Pair {
+    /// Fig. 4's blue line: guest/native simulation-time slowdown.
+    pub fn time_slowdown(&self) -> f64 {
+        if self.native.host_seconds > 0.0 {
+            self.guest.host_seconds / self.native.host_seconds
+        } else {
+            f64::NAN
+        }
+    }
+    /// Fig. 5 ratio.
+    pub fn inst_overhead(&self) -> f64 {
+        self.guest.sim_insts as f64 / self.native.sim_insts.max(1) as f64
+    }
+}
+
+/// Run the full sweep (all benchmarks × {native, guest}), one thread per
+/// run.
+pub fn sweep(cfg: &SimConfig, benches: &[&str], with_trace: bool) -> Result<Vec<Pair>> {
+    let mut handles = Vec::new();
+    for &bench in benches {
+        for vm in [false, true] {
+            let cfg = cfg.clone();
+            let bench = bench.to_string();
+            handles.push((
+                bench.clone(),
+                vm,
+                std::thread::spawn(move || run_one(&cfg, &bench, vm, with_trace)),
+            ));
+        }
+    }
+    let mut by_name: BTreeMap<String, (Option<BenchResult>, Option<BenchResult>)> = BTreeMap::new();
+    for (name, vm, h) in handles {
+        let res = h.join().map_err(|_| anyhow::anyhow!("worker panicked for {name} vm={vm}"))??;
+        let slot = by_name.entry(name).or_default();
+        if vm {
+            slot.1 = Some(res);
+        } else {
+            slot.0 = Some(res);
+        }
+    }
+    // Preserve the caller's benchmark order.
+    let mut out = Vec::new();
+    for &bench in benches {
+        let (n, g) = by_name.remove(bench).unwrap_or_default();
+        out.push(Pair {
+            native: n.ok_or_else(|| anyhow::anyhow!("missing native result for {bench}"))?,
+            guest: g.ok_or_else(|| anyhow::anyhow!("missing guest result for {bench}"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// Re-measure `host_seconds` sequentially (median of `reps`): the parallel
+/// sweep is ideal for the deterministic counters (Figs. 5–7) but its
+/// wall-clock column is distorted by core contention. Fig. 4 timings come
+/// from this pass.
+pub fn retime_sequential(cfg: &SimConfig, pairs: &mut [Pair], reps: usize) -> Result<()> {
+    for p in pairs.iter_mut() {
+        for vm in [false, true] {
+            let name = p.native.name.clone();
+            let mut times = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                times.push(run_one(cfg, &name, vm, false)?.host_seconds);
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = times[times.len() / 2];
+            if vm {
+                p.guest.host_seconds = median;
+            } else {
+                p.native.host_seconds = median;
+            }
+        }
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- figures
+
+/// Fig. 4: simulation time (seconds) native vs guest, with the slowdown
+/// line.
+pub fn fig4_table(pairs: &[Pair]) -> String {
+    let mut s = String::from(
+        "Figure 4 — Simulation time (s), native vs guest, and slowdown\n\
+         benchmark      native(s)    guest(s)   slowdown\n",
+    );
+    let mut sum = 0.0;
+    for p in pairs {
+        let sd = p.time_slowdown();
+        sum += sd;
+        s.push_str(&format!(
+            "{:<12} {:>10.4} {:>11.4} {:>9.2}x\n",
+            p.native.name, p.native.host_seconds, p.guest.host_seconds, sd
+        ));
+    }
+    s.push_str(&format!(
+        "average slowdown: {:.2}x (paper: avg ~1.5x, range ~1.3-2.0x)\n",
+        sum / pairs.len().max(1) as f64
+    ));
+    s
+}
+
+/// Fig. 5: executed instructions with (w/) and without (w/o) VM.
+pub fn fig5_table(pairs: &[Pair]) -> String {
+    let mut s = String::from(
+        "Figure 5 — Executed instructions, with (w/) vs without (w/o) VM\n\
+         benchmark        w/o VM        w/ VM      ratio\n",
+    );
+    for p in pairs {
+        s.push_str(&format!(
+            "{:<12} {:>12} {:>12} {:>9.3}x\n",
+            p.native.name,
+            p.native.sim_insts,
+            p.guest.sim_insts,
+            p.inst_overhead()
+        ));
+    }
+    s
+}
+
+/// Fig. 6: native exceptions per privilege level (M and S).
+pub fn fig6_table(pairs: &[Pair]) -> String {
+    let mut s = String::from(
+        "Figure 6 — Native execution: exceptions per privilege level\n\
+         benchmark          M          S\n",
+    );
+    for p in pairs {
+        // Without virtualization the S level is reported as HS by the
+        // stats machinery (same hardware level; H merely extends it).
+        let m = p.native.exceptions_at("M");
+        let sup = p.native.exceptions_at("HS") + p.native.exceptions_at("S");
+        s.push_str(&format!("{:<12} {:>10} {:>10}\n", p.native.name, m, sup));
+    }
+    s
+}
+
+/// Fig. 7: guest exceptions per privilege level (M, HS, VS).
+pub fn fig7_table(pairs: &[Pair]) -> String {
+    let mut s = String::from(
+        "Figure 7 — Guest execution: exceptions per privilege level\n\
+         benchmark          M         HS         VS\n",
+    );
+    for p in pairs {
+        s.push_str(&format!(
+            "{:<12} {:>10} {:>10} {:>10}\n",
+            p.guest.name,
+            p.guest.exceptions_at("M"),
+            p.guest.exceptions_at("HS"),
+            p.guest.exceptions_at("VS"),
+        ));
+    }
+    s
+}
+
+/// E8: boot-time comparison (paper: VM boot ≈ 10× native boot in gem5).
+pub fn boot_table(pairs: &[Pair]) -> String {
+    let mut s = String::from(
+        "Boot ticks (to kernel banner), native vs guest\n\
+         benchmark       native      guest      ratio\n",
+    );
+    for p in pairs {
+        s.push_str(&format!(
+            "{:<12} {:>10} {:>10} {:>9.2}x\n",
+            p.native.name,
+            p.native.boot_ticks,
+            p.guest.boot_ticks,
+            p.guest.boot_ticks as f64 / p.native.boot_ticks.max(1) as f64
+        ));
+    }
+    s
+}
+
+/// E9: XLA timing-model analytics table for traced runs.
+pub fn timing_table(rows: &[(String, bool, TraceReport)]) -> String {
+    let mut s = String::from(
+        "E9 — XLA timing model (TLB miss rate + modeled two-stage overhead)\n\
+         benchmark     mode    refs        misses   miss%   xlat-overhead\n",
+    );
+    for (name, vm, r) in rows {
+        s.push_str(&format!(
+            "{:<12} {:<6} {:>10} {:>10} {:>6.2}% {:>11.4}x\n",
+            name,
+            if *vm { "guest" } else { "native" },
+            r.refs,
+            r.misses,
+            100.0 * r.miss_rate(),
+            r.overhead_ratio(),
+        ));
+    }
+    s
+}
+
+/// Validate the paper's qualitative claims against a sweep; returns the
+/// violated claims (empty = all hold).
+pub fn check_paper_claims(pairs: &[Pair]) -> Vec<String> {
+    let mut bad = Vec::new();
+    for p in pairs {
+        let n = &p.native.name;
+        if p.guest.sim_insts <= p.native.sim_insts {
+            bad.push(format!("{n}: guest should execute more instructions (Fig. 5)"));
+        }
+        if p.guest.exceptions_at("VS") == 0 {
+            bad.push(format!("{n}: guest should handle exceptions at VS (Fig. 7)"));
+        }
+        if p.guest.exceptions_at("HS") == 0 {
+            bad.push(format!("{n}: guest should handle exceptions at HS (Fig. 7)"));
+        }
+        if p.native.exceptions_at("VS") != 0 {
+            bad.push(format!("{n}: native must not use VS (Fig. 6)"));
+        }
+        // "the number of exceptions delegated to the S level in the native
+        // OS and the VS level in the guest OS are nearly equal" (§4.3).
+        let s_native = p.native.exceptions_at("HS") as f64;
+        let vs_guest = p.guest.exceptions_at("VS") as f64;
+        if s_native > 0.0 && ((vs_guest - s_native).abs() / s_native) > 0.10 {
+            bad.push(format!(
+                "{n}: S-native ({s_native}) vs VS-guest ({vs_guest}) differ by >10% (§4.3)"
+            ));
+        }
+        if p.guest.checksum != p.native.checksum || p.native.checksum.is_empty() {
+            bad.push(format!(
+                "{n}: checksum mismatch native={} guest={}",
+                p.native.checksum, p.guest.checksum
+            ));
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SimConfig {
+        SimConfig { scale: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn run_one_native_vs_guest() {
+        let cfg = small_cfg();
+        let n = run_one(&cfg, "bitcount", false, false).unwrap();
+        let g = run_one(&cfg, "bitcount", true, false).unwrap();
+        assert!(g.sim_insts > n.sim_insts);
+        assert_eq!(n.checksum, g.checksum);
+        assert!(!n.checksum.is_empty());
+        assert!(g.boot_ticks > n.boot_ticks, "guest boot is slower (E8)");
+        assert!(g.g_walk_steps > 0, "two-stage walks happened");
+        assert_eq!(n.g_walk_steps, 0, "no G-stage walks natively");
+    }
+
+    #[test]
+    fn sweep_and_claims_on_subset() {
+        let cfg = small_cfg();
+        let pairs = sweep(&cfg, &["qsort", "bitcount"], false).unwrap();
+        assert_eq!(pairs.len(), 2);
+        let bad = check_paper_claims(&pairs);
+        assert!(bad.is_empty(), "claims violated: {bad:?}");
+        for table in [
+            fig4_table(&pairs),
+            fig5_table(&pairs),
+            fig6_table(&pairs),
+            fig7_table(&pairs),
+            boot_table(&pairs),
+        ] {
+            assert!(table.contains("qsort"));
+        }
+    }
+
+    #[test]
+    fn trace_capture_feeds_timing_model() {
+        let cfg = SimConfig { trace_cap: 2_000_000, ..small_cfg() };
+        let res = run_one(&cfg, "bitcount", false, true).unwrap();
+        let trace = res.trace.expect("trace requested");
+        assert!(!trace.is_empty());
+        match crate::runtime::TimingEngine::load(&crate::runtime::TimingEngine::default_dir()) {
+            Ok(mut eng) => {
+                let rep = eng.analyze(&trace).unwrap();
+                assert_eq!(rep.refs as usize, trace.len());
+                assert!(rep.miss_rate() < 0.5, "benchmarks have page locality");
+                assert!(rep.overhead_ratio() >= 1.0);
+            }
+            Err(_) => eprintln!("skipping timing-engine half: artifacts not built"),
+        }
+    }
+}

@@ -1,0 +1,824 @@
+//! The CSR file: backing storage, read/write masks, aliases and VS-mode
+//! redirection — the implementation of the paper's §3.1 and Table 1.
+//!
+//! Like gem5, several architecturally-distinct CSRs are *views* of the same
+//! hardware register (sstatus ⊂ mstatus; sip/sie ⊂ mip/mie; hvip/hip ⊂ mip;
+//! vsip/vsie are shifted views of the VS bits of mip/mie). The paper extends
+//! gem5's READ masks with WRITE masks so read-only fields survive writes; we
+//! implement both mask families here. In VS-mode, accesses to supervisor
+//! CSRs are redirected to the `vs*` bank (Table 1, last row).
+
+use crate::isa::csr::*;
+use crate::isa::PrivLevel;
+
+/// Why a CSR access failed — maps to IllegalInst or VirtualInstruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CsrError {
+    Illegal,
+    /// H-extension: access from VS/VU that must raise a
+    /// virtual-instruction exception (cause 22).
+    Virtual,
+}
+
+/// Writable field mask for mstatus (M-mode view).
+const MSTATUS_WMASK: u64 = mstatus::SIE
+    | mstatus::MIE
+    | mstatus::SPIE
+    | mstatus::MPIE
+    | mstatus::SPP
+    | mstatus::MPP_MASK
+    | mstatus::FS_MASK
+    | mstatus::MPRV
+    | mstatus::SUM
+    | mstatus::MXR
+    | mstatus::TVM
+    | mstatus::TW
+    | mstatus::TSR
+    | mstatus::MPV
+    | mstatus::GVA;
+
+/// sstatus view of mstatus: fields visible/writable from (H)S-mode.
+const SSTATUS_MASK: u64 =
+    mstatus::SIE | mstatus::SPIE | mstatus::SPP | mstatus::FS_MASK | mstatus::SUM | mstatus::MXR;
+
+const HSTATUS_WMASK: u64 = hstatus::GVA
+    | hstatus::SPV
+    | hstatus::SPVP
+    | hstatus::HU
+    | hstatus::VGEIN_MASK
+    | hstatus::VTVM
+    | hstatus::VTW
+    | hstatus::VTSR;
+
+/// hedeleg writable bits: standard exceptions that may be delegated to VS.
+/// Ecalls from HS/VS/M (9,10,11) and the guest-page-fault / virtual-inst
+/// family (20–23) are hardwired to zero — those are always handled at HS or
+/// above (privileged spec; paper §3.2).
+const HEDELEG_WMASK: u64 = (1 << 0)
+    | (1 << 1)
+    | (1 << 2)
+    | (1 << 3)
+    | (1 << 4)
+    | (1 << 5)
+    | (1 << 6)
+    | (1 << 7)
+    | (1 << 8)
+    | (1 << 12)
+    | (1 << 13)
+    | (1 << 15);
+
+/// medeleg writable bits (bit 11, ecall-from-M, is hardwired 0).
+const MEDELEG_WMASK: u64 = HEDELEG_WMASK
+    | (1 << 9)
+    | (1 << 10)
+    | (1 << 20)
+    | (1 << 21)
+    | (1 << 22)
+    | (1 << 23);
+
+/// Number of guest external interrupt sources (GEILEN).
+pub const GEILEN: u64 = 8;
+const HGEIE_MASK: u64 = ((1 << GEILEN) - 1) << 1; // bit 0 unusable
+
+/// The CSR backing store for one hart.
+#[derive(Clone, Debug)]
+pub struct CsrFile {
+    /// H extension implemented (misa.H). When false the hypervisor CSRs
+    /// don't exist and VS redirection never happens — this is the paper's
+    /// "without VM" baseline configuration.
+    pub h_enabled: bool,
+
+    pub mstatus: u64,
+    pub vsstatus: u64,
+    pub medeleg: u64,
+    /// Writable (S-level) part of mideleg; reads OR-in the read-only-one
+    /// VS/SGEI bits when H is enabled (paper Table 1: "New read-only 1-bit
+    /// fields for VS and guest external interrupts").
+    pub mideleg: u64,
+    pub hedeleg: u64,
+    pub hideleg: u64,
+    pub mie: u64,
+    /// Interrupt-pending hardware register. Holds the M/S bits *and* the
+    /// VS bits — hvip/hip/vsip are views into it (the aliasing the paper's
+    /// check_xip_regs tests validate).
+    pub mip: u64,
+    pub mtvec: u64,
+    pub stvec: u64,
+    pub vstvec: u64,
+    pub mscratch: u64,
+    pub sscratch: u64,
+    pub vsscratch: u64,
+    pub mepc: u64,
+    pub sepc: u64,
+    pub vsepc: u64,
+    pub mcause: u64,
+    pub scause: u64,
+    pub vscause: u64,
+    pub mtval: u64,
+    pub stval: u64,
+    pub vstval: u64,
+    /// Guest physical address of a faulting access, >> 2, when the trap is
+    /// taken to M mode (paper Table 1).
+    pub mtval2: u64,
+    /// Same, when handled by HS mode (paper Table 1).
+    pub htval: u64,
+    pub mtinst: u64,
+    pub htinst: u64,
+    pub mcounteren: u64,
+    pub scounteren: u64,
+    pub hcounteren: u64,
+    pub menvcfg: u64,
+    pub senvcfg: u64,
+    pub henvcfg: u64,
+    pub satp: u64,
+    pub vsatp: u64,
+    pub hgatp: u64,
+    pub hstatus: u64,
+    pub hgeip: u64,
+    pub hgeie: u64,
+    pub htimedelta: u64,
+    pub mcycle: u64,
+    pub minstret: u64,
+    /// Mirrored CLINT mtime (the sim loop keeps this fresh).
+    pub time: u64,
+    pub fcsr: u64,
+    pub mhartid: u64,
+}
+
+impl CsrFile {
+    pub fn new(h_enabled: bool) -> CsrFile {
+        // misa: RV64 I M A F S U (+H when enabled)
+        CsrFile {
+            h_enabled,
+            mstatus: 2 << 32 | 2 << 34, // UXL=SXL=64-bit (read-only fields)
+            vsstatus: 0,
+            medeleg: 0,
+            mideleg: 0,
+            hedeleg: 0,
+            hideleg: 0,
+            mie: 0,
+            mip: 0,
+            mtvec: 0,
+            stvec: 0,
+            vstvec: 0,
+            mscratch: 0,
+            sscratch: 0,
+            vsscratch: 0,
+            mepc: 0,
+            sepc: 0,
+            vsepc: 0,
+            mcause: 0,
+            scause: 0,
+            vscause: 0,
+            mtval: 0,
+            stval: 0,
+            vstval: 0,
+            mtval2: 0,
+            htval: 0,
+            mtinst: 0,
+            htinst: 0,
+            mcounteren: 0,
+            scounteren: 0,
+            hcounteren: 0,
+            menvcfg: 0,
+            senvcfg: 0,
+            henvcfg: 0,
+            satp: 0,
+            vsatp: 0,
+            hgatp: 0,
+            hstatus: 2 << hstatus::VSXL_SHIFT, // VSXL=64 (read-only)
+            hgeip: 0,
+            hgeie: 0,
+            htimedelta: 0,
+            mcycle: 0,
+            minstret: 0,
+            time: 0,
+            fcsr: 0,
+            mhartid: 0,
+        }
+    }
+
+    pub fn misa(&self) -> u64 {
+        let mut v: u64 = 2 << 62; // MXL=64
+        v |= 1 << 0; // A
+        v |= 1 << 5; // F
+        v |= 1 << 8; // I
+        v |= 1 << 12; // M
+        v |= 1 << 18; // S
+        v |= 1 << 20; // U
+        if self.h_enabled {
+            v |= 1 << 7; // H
+        }
+        v
+    }
+
+    /// mideleg as read by software: writable S bits, plus the
+    /// read-only-one VS-level + SGEI bits when H is enabled.
+    pub fn mideleg_read(&self) -> u64 {
+        if self.h_enabled {
+            self.mideleg | irq::VS_MASK | irq::SGEIP
+        } else {
+            self.mideleg
+        }
+    }
+
+    /// mip as read by software: hardware bits plus the derived SGEIP bit
+    /// (any enabled guest-external interrupt pending).
+    pub fn mip_read(&self) -> u64 {
+        let mut v = self.mip;
+        if self.h_enabled && (self.hgeip & self.hgeie) != 0 {
+            v |= irq::SGEIP;
+        }
+        v
+    }
+
+    fn sstatus_read(&self) -> u64 {
+        let v = self.mstatus & SSTATUS_MASK;
+        // SD summarizes FS-dirty.
+        if self.mstatus & mstatus::FS_MASK == mstatus::FS_DIRTY {
+            v | mstatus::SD | (2 << 32) // UXL
+        } else {
+            v | (2 << 32)
+        }
+    }
+
+    fn vsstatus_read(&self) -> u64 {
+        let v = self.vsstatus & SSTATUS_MASK;
+        if self.vsstatus & mstatus::FS_MASK == mstatus::FS_DIRTY {
+            v | mstatus::SD | (2 << 32)
+        } else {
+            v | (2 << 32)
+        }
+    }
+
+    pub fn mstatus_read(&self) -> u64 {
+        let v = self.mstatus;
+        if v & mstatus::FS_MASK == mstatus::FS_DIRTY {
+            v | mstatus::SD
+        } else {
+            v
+        }
+    }
+
+    /// FS field helpers (paper §3.5 challenge 2: FPU access checks must
+    /// consult vsstatus when V=1).
+    pub fn fs_off(&self, virt: bool) -> bool {
+        if self.mstatus & mstatus::FS_MASK == mstatus::FS_OFF {
+            return true;
+        }
+        virt && (self.vsstatus & mstatus::FS_MASK == mstatus::FS_OFF)
+    }
+
+    pub fn set_fs_dirty(&mut self, virt: bool) {
+        self.mstatus |= mstatus::FS_DIRTY;
+        if virt {
+            self.vsstatus |= mstatus::FS_DIRTY;
+        }
+    }
+
+    /// Counter-enable chain for cycle/time/instret (and the paper Table 1
+    /// note on hcounteren gating HPM access from the VM).
+    fn counter_allowed(&self, bit: u64, prv: PrivLevel, virt: bool) -> Result<(), CsrError> {
+        match prv {
+            PrivLevel::Machine => Ok(()),
+            PrivLevel::Supervisor | PrivLevel::User => {
+                if prv == PrivLevel::User && self.scounteren & bit == 0 && !virt {
+                    return Err(CsrError::Illegal);
+                }
+                if self.mcounteren & bit == 0 {
+                    return Err(if virt { CsrError::Virtual } else { CsrError::Illegal });
+                }
+                if virt && self.hcounteren & bit == 0 {
+                    return Err(CsrError::Virtual);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// VS-mode redirection (§3.1: "accessing supervisor CSRs in VS mode is
+    /// modified so that access is redirected to the virtual supervisor
+    /// registers instead").
+    fn redirect(addr: u16, virt: bool) -> u16 {
+        if !virt {
+            return addr;
+        }
+        match addr {
+            CSR_SSTATUS => CSR_VSSTATUS,
+            CSR_SIE => CSR_VSIE,
+            CSR_STVEC => CSR_VSTVEC,
+            CSR_SSCRATCH => CSR_VSSCRATCH,
+            CSR_SEPC => CSR_VSEPC,
+            CSR_SCAUSE => CSR_VSCAUSE,
+            CSR_STVAL => CSR_VSTVAL,
+            CSR_SIP => CSR_VSIP,
+            CSR_SATP => CSR_VSATP,
+            _ => addr,
+        }
+    }
+
+    fn is_hypervisor_csr(addr: u16) -> bool {
+        matches!(
+            addr,
+            CSR_HSTATUS
+                | CSR_HEDELEG
+                | CSR_HIDELEG
+                | CSR_HIE
+                | CSR_HTIMEDELTA
+                | CSR_HCOUNTEREN
+                | CSR_HGEIE
+                | CSR_HENVCFG
+                | CSR_HTVAL
+                | CSR_HIP
+                | CSR_HVIP
+                | CSR_HTINST
+                | CSR_HGATP
+                | CSR_HGEIP
+        )
+    }
+
+    fn is_vs_csr(addr: u16) -> bool {
+        matches!(
+            addr,
+            CSR_VSSTATUS
+                | CSR_VSIE
+                | CSR_VSTVEC
+                | CSR_VSSCRATCH
+                | CSR_VSEPC
+                | CSR_VSCAUSE
+                | CSR_VSTVAL
+                | CSR_VSIP
+                | CSR_VSATP
+        )
+    }
+
+    /// Privilege/permission check shared by read and write. Returns the
+    /// effective (possibly redirected) address.
+    fn check_access(&self, addr: u16, prv: PrivLevel, virt: bool) -> Result<u16, CsrError> {
+        if (Self::is_hypervisor_csr(addr) || Self::is_vs_csr(addr)) && !self.h_enabled {
+            return Err(CsrError::Illegal);
+        }
+        // H and VS CSRs from VS/VU raise virtual-instruction (spec / §3.1
+        // "privilege protection among the registers").
+        if virt && (Self::is_hypervisor_csr(addr) || Self::is_vs_csr(addr)) {
+            return Err(CsrError::Virtual);
+        }
+        let eaddr = Self::redirect(addr, virt);
+        let min = csr_min_priv_bits(addr);
+        // H CSRs encode min-priv 2 but are accessible from HS (prv S, V=0).
+        let effective_prv = match prv {
+            PrivLevel::Machine => 3,
+            PrivLevel::Supervisor => {
+                if !virt && self.h_enabled {
+                    2 // HS can reach min-priv-2 (hypervisor) CSRs
+                } else {
+                    1
+                }
+            }
+            PrivLevel::User => 0,
+        };
+        if effective_prv < min {
+            // U/VU or VS trying to climb: virtual-instruction if the CSR
+            // *would* be accessible at the same nominal privilege without
+            // V=1, otherwise plain illegal.
+            if virt && min <= 2 {
+                return Err(CsrError::Virtual);
+            }
+            return Err(CsrError::Illegal);
+        }
+        Ok(eaddr)
+    }
+
+    /// Read a CSR with full permission checking and VS redirection.
+    pub fn read(&self, addr: u16, prv: PrivLevel, virt: bool) -> Result<u64, CsrError> {
+        let eaddr = self.check_access(addr, prv, virt)?;
+        match eaddr {
+            CSR_CYCLE => {
+                self.counter_allowed(1 << 0, prv, virt)?;
+                Ok(self.mcycle)
+            }
+            CSR_TIME => {
+                self.counter_allowed(1 << 1, prv, virt)?;
+                Ok(self.time.wrapping_add(if virt { self.htimedelta } else { 0 }))
+            }
+            CSR_INSTRET => {
+                self.counter_allowed(1 << 2, prv, virt)?;
+                Ok(self.minstret)
+            }
+            _ => Ok(self.read_raw(eaddr)),
+        }
+    }
+
+    /// Write a CSR with permission checking, redirection and write masks.
+    pub fn write(&mut self, addr: u16, val: u64, prv: PrivLevel, virt: bool) -> Result<(), CsrError> {
+        if csr_is_read_only(addr) {
+            return Err(CsrError::Illegal);
+        }
+        let eaddr = self.check_access(addr, prv, virt)?;
+        self.write_raw(eaddr, val);
+        Ok(())
+    }
+
+    /// Unchecked read (trap unit, tests, checkpointing). Applies views and
+    /// aliases but no permission checks.
+    pub fn read_raw(&self, addr: u16) -> u64 {
+        match addr {
+            CSR_FFLAGS => self.fcsr & 0x1f,
+            CSR_FRM => (self.fcsr >> 5) & 7,
+            CSR_FCSR => self.fcsr & 0xff,
+            CSR_SSTATUS => self.sstatus_read(),
+            CSR_SIE => self.mie & irq::S_MASK,
+            CSR_STVEC => self.stvec,
+            CSR_SCOUNTEREN => self.scounteren,
+            CSR_SENVCFG => self.senvcfg,
+            CSR_SSCRATCH => self.sscratch,
+            CSR_SEPC => self.sepc,
+            CSR_SCAUSE => self.scause,
+            CSR_STVAL => self.stval,
+            CSR_SIP => self.mip_read() & irq::S_MASK,
+            CSR_SATP => self.satp,
+            CSR_HSTATUS => self.hstatus,
+            CSR_HEDELEG => self.hedeleg,
+            CSR_HIDELEG => self.hideleg,
+            CSR_HIE => self.mie & irq::HS_MASK,
+            CSR_HTIMEDELTA => self.htimedelta,
+            CSR_HCOUNTEREN => self.hcounteren,
+            CSR_HGEIE => self.hgeie,
+            CSR_HENVCFG => self.henvcfg,
+            CSR_HTVAL => self.htval,
+            // hip: VS-level bits of mip + derived SGEIP (the paper's
+            // "reading HVIP includes reading MIP" aliasing).
+            CSR_HIP => self.mip_read() & irq::HS_MASK,
+            CSR_HVIP => self.mip & irq::VS_MASK,
+            CSR_HTINST => self.htinst,
+            CSR_HGATP => self.hgatp,
+            CSR_HGEIP => self.hgeip,
+            CSR_VSSTATUS => self.vsstatus_read(),
+            // vsip/vsie: VS bits of mip/mie, gated by hideleg, presented at
+            // the S bit positions (bit 2 → bit 1, etc.).
+            CSR_VSIE => (self.mie & self.hideleg & irq::VS_MASK) >> 1,
+            CSR_VSTVEC => self.vstvec,
+            CSR_VSSCRATCH => self.vsscratch,
+            CSR_VSEPC => self.vsepc,
+            CSR_VSCAUSE => self.vscause,
+            CSR_VSTVAL => self.vstval,
+            CSR_VSIP => (self.mip & self.hideleg & irq::VS_MASK) >> 1,
+            CSR_VSATP => self.vsatp,
+            CSR_MVENDORID => 0,
+            CSR_MARCHID => 0x68767369, // "hvsi"
+            CSR_MIMPID => 1,
+            CSR_MHARTID => self.mhartid,
+            CSR_MSTATUS => self.mstatus_read(),
+            CSR_MISA => self.misa(),
+            CSR_MEDELEG => self.medeleg,
+            CSR_MIDELEG => self.mideleg_read(),
+            CSR_MIE => self.mie,
+            CSR_MTVEC => self.mtvec,
+            CSR_MCOUNTEREN => self.mcounteren,
+            CSR_MENVCFG => self.menvcfg,
+            CSR_MSCRATCH => self.mscratch,
+            CSR_MEPC => self.mepc,
+            CSR_MCAUSE => self.mcause,
+            CSR_MTVAL => self.mtval,
+            CSR_MIP => self.mip_read(),
+            CSR_MTINST => self.mtinst,
+            CSR_MTVAL2 => self.mtval2,
+            CSR_MCYCLE | CSR_CYCLE => self.mcycle,
+            CSR_MINSTRET | CSR_INSTRET => self.minstret,
+            CSR_TIME => self.time,
+            _ => 0,
+        }
+    }
+
+    /// Unchecked write. Applies the WRITE masks the paper adds (§3.1:
+    /// "WRITE REGISTERS MASKS to ensure that read-only bits remain
+    /// unchanged") and the alias rules.
+    pub fn write_raw(&mut self, addr: u16, val: u64) {
+        match addr {
+            CSR_FFLAGS => self.fcsr = (self.fcsr & !0x1f) | (val & 0x1f),
+            CSR_FRM => self.fcsr = (self.fcsr & !0xe0) | ((val & 7) << 5),
+            CSR_FCSR => self.fcsr = val & 0xff,
+            CSR_SSTATUS => {
+                self.mstatus = (self.mstatus & !SSTATUS_MASK) | (val & SSTATUS_MASK);
+            }
+            CSR_SIE => {
+                self.mie = (self.mie & !irq::S_MASK) | (val & irq::S_MASK);
+            }
+            CSR_STVEC => self.stvec = val & !2,
+            CSR_SCOUNTEREN => self.scounteren = val & 7,
+            CSR_SENVCFG => self.senvcfg = val,
+            CSR_SSCRATCH => self.sscratch = val,
+            CSR_SEPC => self.sepc = val & !1,
+            CSR_SCAUSE => self.scause = val,
+            CSR_STVAL => self.stval = val,
+            CSR_SIP => {
+                // Only SSIP is software-writable at S level.
+                self.mip = (self.mip & !irq::SSIP) | (val & irq::SSIP);
+            }
+            CSR_SATP => {
+                // Only Bare and Sv39 modes accepted; others leave satp
+                // unchanged (WARL).
+                let mode = atp::mode(val);
+                if mode == atp::MODE_BARE || mode == atp::MODE_SV39 {
+                    self.satp = val;
+                }
+            }
+            CSR_HSTATUS => {
+                self.hstatus = (self.hstatus & !HSTATUS_WMASK) | (val & HSTATUS_WMASK);
+            }
+            CSR_HEDELEG => self.hedeleg = val & HEDELEG_WMASK,
+            CSR_HIDELEG => self.hideleg = val & irq::VS_MASK,
+            CSR_HIE => {
+                self.mie = (self.mie & !irq::HS_MASK) | (val & irq::HS_MASK);
+            }
+            CSR_HTIMEDELTA => self.htimedelta = val,
+            CSR_HCOUNTEREN => self.hcounteren = val & 7,
+            CSR_HGEIE => self.hgeie = val & HGEIE_MASK,
+            CSR_HENVCFG => self.henvcfg = val,
+            CSR_HTVAL => self.htval = val,
+            CSR_HIP => {
+                // Writable bit: VSSIP (alias of hvip.VSSIP ⇄ mip.VSSIP —
+                // the aliasing chain the paper describes in §3.1).
+                self.mip = (self.mip & !irq::VSSIP) | (val & irq::VSSIP);
+            }
+            CSR_HVIP => {
+                self.mip = (self.mip & !irq::VS_MASK) | (val & irq::VS_MASK);
+            }
+            CSR_HTINST => self.htinst = val,
+            CSR_HGATP => {
+                let mode = atp::mode(val);
+                if mode == atp::MODE_BARE || mode == atp::MODE_SV39X4 {
+                    // Sv39x4 root is 16KiB-aligned: clear PPN[1:0] (WARL).
+                    self.hgatp = val & !3;
+                }
+            }
+            CSR_VSSTATUS => {
+                self.vsstatus = (self.vsstatus & !SSTATUS_MASK) | (val & SSTATUS_MASK);
+            }
+            CSR_VSIE => {
+                let bits = (val << 1) & self.hideleg & irq::VS_MASK;
+                self.mie = (self.mie & !(self.hideleg & irq::VS_MASK)) | bits;
+            }
+            CSR_VSTVEC => self.vstvec = val & !2,
+            CSR_VSSCRATCH => self.vsscratch = val,
+            CSR_VSEPC => self.vsepc = val & !1,
+            CSR_VSCAUSE => self.vscause = val,
+            CSR_VSTVAL => self.vstval = val,
+            CSR_VSIP => {
+                // vsip.SSIP (bit 1) writes mip.VSSIP (bit 2) when delegated.
+                let bit = (val << 1) & self.hideleg & irq::VSSIP;
+                self.mip = (self.mip & !(self.hideleg & irq::VSSIP)) | bit;
+            }
+            CSR_VSATP => {
+                let mode = atp::mode(val);
+                if mode == atp::MODE_BARE || mode == atp::MODE_SV39 {
+                    self.vsatp = val;
+                }
+            }
+            CSR_MSTATUS => {
+                let mut wmask = MSTATUS_WMASK;
+                if !self.h_enabled {
+                    wmask &= !(mstatus::MPV | mstatus::GVA);
+                }
+                let mut v = (self.mstatus & !wmask) | (val & wmask);
+                // MPP is WARL: only 0/1/3.
+                if (v & mstatus::MPP_MASK) >> mstatus::MPP_SHIFT == 2 {
+                    v &= !mstatus::MPP_MASK;
+                }
+                self.mstatus = v;
+            }
+            CSR_MISA => {} // WARL, fixed
+            CSR_MEDELEG => {
+                let mask = if self.h_enabled { MEDELEG_WMASK } else { MEDELEG_WMASK & 0xffff };
+                self.medeleg = val & mask;
+            }
+            CSR_MIDELEG => {
+                // S-level bits writable; VS/SGEI bits read-only-one (H).
+                self.mideleg = val & irq::S_MASK;
+            }
+            CSR_MIE => {
+                let mask = if self.h_enabled {
+                    irq::M_MASK | irq::S_MASK | irq::HS_MASK
+                } else {
+                    irq::M_MASK | irq::S_MASK
+                };
+                self.mie = val & mask;
+            }
+            CSR_MTVEC => self.mtvec = val & !2,
+            CSR_MCOUNTEREN => self.mcounteren = val & 7,
+            CSR_MENVCFG => self.menvcfg = val,
+            CSR_MSCRATCH => self.mscratch = val,
+            CSR_MEPC => self.mepc = val & !1,
+            CSR_MCAUSE => self.mcause = val,
+            CSR_MTVAL => self.mtval = val,
+            CSR_MIP => {
+                // Software-writable pending bits; M*IP are device-driven.
+                let mask = irq::SSIP | irq::STIP | irq::SEIP | if self.h_enabled { irq::VS_MASK } else { 0 };
+                self.mip = (self.mip & !mask) | (val & mask);
+            }
+            CSR_MTINST => self.mtinst = val,
+            CSR_MTVAL2 => self.mtval2 = val,
+            CSR_MCYCLE => self.mcycle = val,
+            CSR_MINSTRET => self.minstret = val,
+            _ => {}
+        }
+    }
+
+    /// Device-driven interrupt lines (CLINT/PLIC): set/clear the read-only
+    /// M-level pending bits.
+    pub fn set_mip_bits(&mut self, bits: u64) {
+        self.mip |= bits;
+    }
+    pub fn clear_mip_bits(&mut self, bits: u64) {
+        self.mip &= !bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::PrivLevel as P;
+
+    fn csr() -> CsrFile {
+        CsrFile::new(true)
+    }
+
+    #[test]
+    fn mideleg_vs_bits_read_only_one() {
+        let mut c = csr();
+        c.write(CSR_MIDELEG, 0, P::Machine, false).unwrap();
+        // Paper Table 1: VS + guest-external bits are read-only 1.
+        assert_eq!(c.mideleg_read() & irq::VS_MASK, irq::VS_MASK);
+        assert_eq!(c.mideleg_read() & irq::SGEIP, irq::SGEIP);
+        c.write(CSR_MIDELEG, irq::S_MASK | irq::M_MASK, P::Machine, false).unwrap();
+        assert_eq!(c.mideleg_read() & irq::M_MASK, 0, "M bits never delegable");
+        assert_eq!(c.mideleg_read() & irq::S_MASK, irq::S_MASK);
+    }
+
+    #[test]
+    fn mideleg_without_h_has_no_forced_bits() {
+        let mut c = CsrFile::new(false);
+        c.write(CSR_MIDELEG, 0, P::Machine, false).unwrap();
+        assert_eq!(c.mideleg_read(), 0);
+    }
+
+    #[test]
+    fn hvip_aliases_mip() {
+        // Paper §3.1: "reading the HVIP CSR includes reading the MIP CSR
+        // because the VSSIP bit of HVIP is an alias of the VSSIP bit in MIP".
+        let mut c = csr();
+        c.write(CSR_HVIP, irq::VSSIP | irq::VSTIP, P::Supervisor, false).unwrap();
+        assert_eq!(c.read(CSR_MIP, P::Machine, false).unwrap() & irq::VS_MASK, irq::VSSIP | irq::VSTIP);
+        assert_eq!(c.read(CSR_HIP, P::Supervisor, false).unwrap() & irq::VS_MASK, irq::VSSIP | irq::VSTIP);
+        // And writing mip's VS bits shows up in hvip.
+        c.write(CSR_MIP, irq::VSEIP, P::Machine, false).unwrap();
+        assert_eq!(c.read(CSR_HVIP, P::Supervisor, false).unwrap(), irq::VSEIP);
+    }
+
+    #[test]
+    fn vsip_is_shifted_view_gated_by_hideleg() {
+        let mut c = csr();
+        c.write_raw(CSR_HVIP, irq::VSSIP);
+        // Not delegated: vsip reads 0.
+        assert_eq!(c.read_raw(CSR_VSIP), 0);
+        c.write_raw(CSR_HIDELEG, irq::VS_MASK);
+        // Delegated: appears at the S position (bit 1).
+        assert_eq!(c.read_raw(CSR_VSIP), irq::SSIP);
+        // Write through: vsip.SSIP sets mip.VSSIP.
+        c.write_raw(CSR_VSIP, 0);
+        assert_eq!(c.mip & irq::VSSIP, 0);
+    }
+
+    #[test]
+    fn vs_mode_supervisor_access_redirects() {
+        // §3.1: VS-mode access to sstatus/etc. goes to the vs* bank.
+        let mut c = csr();
+        c.write(CSR_SSCRATCH, 0xabcd, P::Supervisor, true).unwrap();
+        assert_eq!(c.vsscratch, 0xabcd);
+        assert_eq!(c.sscratch, 0);
+        assert_eq!(c.read(CSR_SSCRATCH, P::Supervisor, true).unwrap(), 0xabcd);
+        // satp from VS touches vsatp.
+        let v = (atp::MODE_SV39 << atp::MODE_SHIFT) | 0x80000;
+        c.write(CSR_SATP, v, P::Supervisor, true).unwrap();
+        assert_eq!(c.vsatp, v);
+        assert_eq!(c.satp, 0);
+    }
+
+    #[test]
+    fn vs_access_to_h_csrs_is_virtual_exception() {
+        let c = csr();
+        assert_eq!(c.read(CSR_HSTATUS, P::Supervisor, true), Err(CsrError::Virtual));
+        assert_eq!(c.read(CSR_VSSTATUS, P::Supervisor, true), Err(CsrError::Virtual));
+        assert_eq!(c.read(CSR_HGATP, P::Supervisor, true), Err(CsrError::Virtual));
+        // From HS (V=0) they're fine.
+        assert!(c.read(CSR_HSTATUS, P::Supervisor, false).is_ok());
+        // M CSRs from VS: virtual? No — M CSRs are min-priv 3; from VS the
+        // access could never succeed at S level either → illegal per spec.
+        // (min > 2 ⇒ Illegal)
+        assert_eq!(c.read(CSR_MSTATUS, P::Supervisor, true), Err(CsrError::Illegal));
+    }
+
+    #[test]
+    fn h_csrs_illegal_without_h() {
+        let c = CsrFile::new(false);
+        assert_eq!(c.read(CSR_HSTATUS, P::Machine, false), Err(CsrError::Illegal));
+        assert_eq!(c.read(CSR_VSATP, P::Machine, false), Err(CsrError::Illegal));
+    }
+
+    #[test]
+    fn user_cannot_touch_supervisor() {
+        let mut c = csr();
+        assert_eq!(c.read(CSR_SSTATUS, P::User, false), Err(CsrError::Illegal));
+        assert_eq!(c.write(CSR_SATP, 0, P::User, false), Err(CsrError::Illegal));
+        // VU → virtual-instruction for S CSRs (min ≤ 2 and V=1).
+        assert_eq!(c.read(CSR_SSTATUS, P::User, true), Err(CsrError::Virtual));
+    }
+
+    #[test]
+    fn read_only_csrs_reject_writes() {
+        let mut c = csr();
+        assert_eq!(c.write(CSR_MHARTID, 5, P::Machine, false), Err(CsrError::Illegal));
+        assert_eq!(c.write(CSR_HGEIP, 5, P::Machine, false), Err(CsrError::Illegal));
+    }
+
+    #[test]
+    fn write_masks_protect_read_only_fields() {
+        let mut c = csr();
+        // hedeleg: ecall-from-HS/VS/M and guest-page-fault bits hardwired 0.
+        c.write(CSR_HEDELEG, u64::MAX, P::Supervisor, false).unwrap();
+        assert_eq!(c.hedeleg & (1 << 9 | 1 << 10 | 1 << 11), 0);
+        assert_eq!(c.hedeleg & (0xf << 20), 0);
+        assert_ne!(c.hedeleg & (1 << 12), 0, "inst page fault delegable");
+        // medeleg bit 11 hardwired 0, guest-page-faults delegable.
+        c.write(CSR_MEDELEG, u64::MAX, P::Machine, false).unwrap();
+        assert_eq!(c.medeleg & (1 << 11), 0);
+        assert_ne!(c.medeleg & (1 << 21), 0);
+        // mstatus.MPP = 2 is invalid (WARL → 0).
+        c.write(CSR_MSTATUS, 2 << mstatus::MPP_SHIFT, P::Machine, false).unwrap();
+        assert_eq!(c.mstatus & mstatus::MPP_MASK, 0);
+    }
+
+    #[test]
+    fn sgeip_is_derived_from_hgeip_and_hgeie() {
+        let mut c = csr();
+        c.hgeip = 1 << 2;
+        assert_eq!(c.mip_read() & irq::SGEIP, 0);
+        c.write_raw(CSR_HGEIE, 1 << 2);
+        assert_ne!(c.mip_read() & irq::SGEIP, 0);
+        assert_ne!(c.read_raw(CSR_HIP) & irq::SGEIP, 0);
+    }
+
+    #[test]
+    fn hgatp_warl_alignment() {
+        let mut c = csr();
+        c.write_raw(CSR_HGATP, (atp::MODE_SV39X4 << atp::MODE_SHIFT) | 0x80003);
+        assert_eq!(atp::ppn(c.hgatp) & 3, 0, "Sv39x4 root must be 16KiB aligned");
+        // Unsupported mode leaves it unchanged.
+        let before = c.hgatp;
+        c.write_raw(CSR_HGATP, 5 << atp::MODE_SHIFT);
+        assert_eq!(c.hgatp, before);
+    }
+
+    #[test]
+    fn fs_checks_consult_vsstatus_when_virt() {
+        let mut c = csr();
+        c.mstatus |= mstatus::FS_INITIAL;
+        c.vsstatus &= !mstatus::FS_MASK; // vs FS = Off
+        assert!(!c.fs_off(false), "native: mstatus.FS on");
+        assert!(c.fs_off(true), "guest: vsstatus.FS off must gate FPU (§3.5)");
+        c.vsstatus |= mstatus::FS_INITIAL;
+        assert!(!c.fs_off(true));
+    }
+
+    #[test]
+    fn counter_gating_chain() {
+        let mut c = csr();
+        // No enables: S read of time is illegal; VS read is virtual once
+        // mcounteren allows but hcounteren doesn't.
+        assert_eq!(c.read(CSR_TIME, P::Supervisor, false), Err(CsrError::Illegal));
+        c.mcounteren = 7;
+        assert!(c.read(CSR_TIME, P::Supervisor, false).is_ok());
+        assert_eq!(c.read(CSR_TIME, P::Supervisor, true), Err(CsrError::Virtual));
+        c.hcounteren = 7;
+        assert!(c.read(CSR_TIME, P::Supervisor, true).is_ok());
+    }
+
+    #[test]
+    fn time_applies_htimedelta_for_guest() {
+        let mut c = csr();
+        c.time = 1000;
+        c.htimedelta = 234;
+        c.mcounteren = 7;
+        c.hcounteren = 7;
+        assert_eq!(c.read(CSR_TIME, P::Supervisor, false).unwrap(), 1000);
+        assert_eq!(c.read(CSR_TIME, P::Supervisor, true).unwrap(), 1234);
+    }
+
+    #[test]
+    fn sd_bit_reflects_fs_dirty() {
+        let mut c = csr();
+        c.set_fs_dirty(false);
+        assert_ne!(c.read_raw(CSR_MSTATUS) & mstatus::SD, 0);
+        assert_ne!(c.read_raw(CSR_SSTATUS) & mstatus::SD, 0);
+    }
+}

@@ -1,0 +1,1120 @@
+//! Instruction semantics for the functional (atomic) CPU — the analog of
+//! gem5's atomic CPU tick plus the H-extension behaviors the paper adds:
+//! trapping rules for wfi/sret/sfence under virtualization, hypervisor
+//! load/store (HLV/HSV/HLVX) with forced-virtualization translation, hfence
+//! TLB maintenance, and FS-field FPU gating that consults vsstatus when
+//! V=1 (§3.5 challenge 2).
+
+use crate::isa::csr::{self as csrdef, atp, hstatus, mstatus};
+use crate::isa::{decode, Exception, ExceptionCause, Inst, InterruptCause, Op, PrivLevel};
+use crate::mem::Bus;
+use crate::mmu::{self, Access, MmuStats, Tlb, TranslateCtx, XlateFlags};
+
+use super::interrupts::{check_interrupts, wfi_wakeup};
+use super::trap::{self, TrapTarget};
+use super::{CsrError, Hart};
+
+/// A one-entry page-translation cache in front of the TLB (§Perf): valid
+/// for one (vpn, privilege, V, SUM/MXR, TLB-generation) tuple. The TLB
+/// generation changes on every flush, so stale translations can never be
+/// served (RISC-V permits serving pre-sfence translations otherwise).
+#[derive(Clone, Copy, Default)]
+struct PageCache {
+    valid: bool,
+    vpn: u64,
+    pa_page: u64,
+    prv: u8,
+    virt: bool,
+    sum_mxr: u8,
+    gen: u64,
+}
+
+impl PageCache {
+    #[inline]
+    fn hit(&self, vpn: u64, prv: u8, virt: bool, sum_mxr: u8, gen: u64) -> bool {
+        self.valid
+            && self.vpn == vpn
+            && self.prv == prv
+            && self.virt == virt
+            && self.sum_mxr == sum_mxr
+            && self.gen == gen
+    }
+}
+
+/// One hart plus its private MMU state (TLB + walker counters).
+pub struct Core {
+    pub hart: Hart,
+    pub tlb: Tlb,
+    pub mmu_stats: MmuStats,
+    /// Optional virtual-reference trace (fetch/load/store) feeding the XLA
+    /// analytics model — see [`crate::trace`].
+    pub trace: Option<crate::trace::TraceBuf>,
+    /// Decoded-instruction cache keyed by raw bits (hot-path optimization;
+    /// see DESIGN.md §Perf).
+    decode_cache: Vec<(u32, Inst)>,
+    fetch_cache: PageCache,
+    load_cache: PageCache,
+    store_cache: PageCache,
+}
+
+const DECODE_CACHE_SIZE: usize = 8192;
+
+impl Core {
+    pub fn new(h_enabled: bool) -> Core {
+        // The sentinel tag must be self-consistent: any 32-bit value can be
+        // fetched, so seed every slot with a real (tag, decode(tag)) pair.
+        Core {
+            hart: Hart::new(h_enabled),
+            tlb: Tlb::default(),
+            mmu_stats: MmuStats::default(),
+            trace: None,
+            decode_cache: vec![(0xffff_ffff, decode(0xffff_ffff)); DECODE_CACHE_SIZE],
+            fetch_cache: PageCache::default(),
+            load_cache: PageCache::default(),
+            store_cache: PageCache::default(),
+        }
+    }
+
+    #[inline]
+    fn decode_cached(&mut self, raw: u32) -> Inst {
+        let idx = (raw as usize ^ (raw as usize >> 13)) & (DECODE_CACHE_SIZE - 1);
+        let (tag, inst) = self.decode_cache[idx];
+        if tag == raw {
+            return inst;
+        }
+        let inst = decode(raw);
+        self.decode_cache[idx] = (raw, inst);
+        inst
+    }
+}
+
+/// What happened during one tick (consumed by the stats machinery for the
+/// paper's Figs. 5–7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepEvent {
+    /// An instruction retired normally.
+    Retired,
+    /// An exception was taken to the given level.
+    Exception(ExceptionCause, TrapTarget),
+    /// An interrupt was taken to the given level.
+    Interrupt(InterruptCause, TrapTarget),
+    /// Parked in WFI.
+    WfiIdle,
+}
+
+/// Execute one tick: check interrupts (paper Fig. 2), then fetch, decode,
+/// execute; fold any exception into the trap unit.
+pub fn step(core: &mut Core, bus: &mut Bus) -> StepEvent {
+    // WFI parking.
+    if core.hart.wfi {
+        if wfi_wakeup(&core.hart) {
+            core.hart.wfi = false;
+        } else {
+            return StepEvent::WfiIdle;
+        }
+    }
+
+    // "In every tick, the CPU calls CheckInterrupts()" (paper Fig. 2).
+    if let Some((cause, target)) = check_interrupts(&core.hart) {
+        trap::take_interrupt(&mut core.hart, cause, target);
+        return StepEvent::Interrupt(cause, target);
+    }
+
+    let pc = core.hart.pc;
+    let raw = match fetch(core, bus, pc) {
+        Ok(r) => r,
+        Err(e) => {
+            let target = trap::take_exception(&mut core.hart, &e);
+            return StepEvent::Exception(e.cause, target);
+        }
+    };
+    let inst = core.decode_cached(raw);
+    match execute(core, bus, &inst) {
+        Ok(next_pc) => {
+            core.hart.pc = next_pc;
+            core.hart.csr.minstret = core.hart.csr.minstret.wrapping_add(1);
+            StepEvent::Retired
+        }
+        Err(e) => {
+            let target = trap::take_exception(&mut core.hart, &e);
+            StepEvent::Exception(e.cause, target)
+        }
+    }
+}
+
+fn fetch(core: &mut Core, bus: &mut Bus, pc: u64) -> Result<u32, Exception> {
+    if pc & 3 != 0 {
+        return Err(Exception::new(ExceptionCause::InstAddrMisaligned, pc));
+    }
+    if let Some(t) = &mut core.trace {
+        t.push(pc, crate::trace::KIND_FETCH);
+    }
+    // Fetch-page fast path (§Perf): SUM/MXR don't affect execute checks.
+    let vpn = pc >> 12;
+    let prv = core.hart.prv.bits() as u8;
+    let virt = core.hart.virt;
+    let gen = core.tlb.generation();
+    let pa = if core.fetch_cache.hit(vpn, prv, virt, 0, gen) {
+        core.fetch_cache.pa_page | (pc & 0xfff)
+    } else {
+        let ctx = TranslateCtx {
+            csr: &core.hart.csr,
+            prv: core.hart.prv,
+            virt,
+            access: Access::Execute,
+            flags: XlateFlags::default(),
+            tinst: 0, // fetch guest-page faults report tinst = 0 (paper §3.4)
+        };
+        let pa = mmu::translate(&mut core.tlb, &mut core.mmu_stats, bus, &ctx, pc)?;
+        core.fetch_cache =
+            PageCache { valid: true, vpn, pa_page: pa & !0xfff, prv, virt, sum_mxr: 0, gen };
+        pa
+    };
+    bus.read(pa, 4)
+        .map(|v| v as u32)
+        .map_err(|_| Exception::new(ExceptionCause::InstAccessFault, pc))
+}
+
+/// Status bits that participate in data-access permission checks and thus
+/// in the page-cache key (mstatus.SUM/MXR + vsstatus.SUM/MXR when V=1).
+#[inline]
+fn sum_mxr_key(hart: &Hart, virt: bool) -> u8 {
+    let m = ((hart.csr.mstatus >> 18) & 3) as u8;
+    if virt {
+        m | (((hart.csr.vsstatus >> 18) & 3) as u8) << 2
+    } else {
+        m
+    }
+}
+
+/// Resolve the effective (privilege, V) for a *data* access: HLV/HSV force
+/// virtualization with hstatus.SPVP privilege; otherwise mstatus.MPRV
+/// substitutes MPP/MPV while in M-mode.
+fn data_access_env(hart: &Hart, flags: &XlateFlags) -> (PrivLevel, bool) {
+    if flags.forced_virt {
+        let prv = if hart.csr.hstatus & hstatus::SPVP != 0 {
+            PrivLevel::Supervisor
+        } else {
+            PrivLevel::User
+        };
+        return (prv, true);
+    }
+    let st = hart.csr.mstatus;
+    if hart.prv == PrivLevel::Machine && st & mstatus::MPRV != 0 {
+        let mpp = PrivLevel::from_bits((st & mstatus::MPP_MASK) >> mstatus::MPP_SHIFT);
+        let mpv = st & mstatus::MPV != 0 && mpp != PrivLevel::Machine;
+        return (mpp, hart.csr.h_enabled && mpv);
+    }
+    (hart.prv, hart.virt)
+}
+
+fn mem_read(core: &mut Core, bus: &mut Bus, va: u64, size: u64, flags: XlateFlags, tinst: u64) -> Result<u64, Exception> {
+    // Misaligned accesses are fine within a page; page-crossers trap.
+    if (va & 0xfff) + size > 0x1000 && va % size != 0 {
+        return Err(Exception::new(ExceptionCause::LoadAddrMisaligned, va));
+    }
+    if let Some(t) = &mut core.trace {
+        t.push(va, crate::trace::KIND_LOAD);
+    }
+    let (prv, virt) = data_access_env(&core.hart, &flags);
+    // Load-page fast path (bypassed for HLV/HLVX, which carry their own
+    // translation context).
+    let vpn = va >> 12;
+    let prv_b = prv.bits() as u8;
+    let key = sum_mxr_key(&core.hart, virt);
+    let gen = core.tlb.generation();
+    if !flags.forced_virt && core.load_cache.hit(vpn, prv_b, virt, key, gen) {
+        let pa = core.load_cache.pa_page | (va & 0xfff);
+        return bus.read(pa, size).map_err(|_| Exception::new(ExceptionCause::LoadAccessFault, va));
+    }
+    let ctx = TranslateCtx { csr: &core.hart.csr, prv, virt, access: Access::Read, flags, tinst };
+    let pa = mmu::translate(&mut core.tlb, &mut core.mmu_stats, bus, &ctx, va)?;
+    if !flags.forced_virt {
+        core.load_cache =
+            PageCache { valid: true, vpn, pa_page: pa & !0xfff, prv: prv_b, virt, sum_mxr: key, gen };
+    }
+    bus.read(pa, size).map_err(|_| Exception::new(ExceptionCause::LoadAccessFault, va))
+}
+
+fn mem_write(core: &mut Core, bus: &mut Bus, va: u64, size: u64, val: u64, flags: XlateFlags, tinst: u64) -> Result<(), Exception> {
+    if (va & 0xfff) + size > 0x1000 && va % size != 0 {
+        return Err(Exception::new(ExceptionCause::StoreAddrMisaligned, va));
+    }
+    if let Some(t) = &mut core.trace {
+        t.push(va, crate::trace::KIND_STORE);
+    }
+    let (prv, virt) = data_access_env(&core.hart, &flags);
+    let vpn = va >> 12;
+    let prv_b = prv.bits() as u8;
+    let key = sum_mxr_key(&core.hart, virt);
+    let gen = core.tlb.generation();
+    if !flags.forced_virt && core.store_cache.hit(vpn, prv_b, virt, key, gen) {
+        let pa = core.store_cache.pa_page | (va & 0xfff);
+        return bus
+            .write(pa, size, val)
+            .map_err(|_| Exception::new(ExceptionCause::StoreAccessFault, va));
+    }
+    let ctx = TranslateCtx { csr: &core.hart.csr, prv, virt, access: Access::Write, flags, tinst };
+    let pa = mmu::translate(&mut core.tlb, &mut core.mmu_stats, bus, &ctx, va)?;
+    if !flags.forced_virt {
+        core.store_cache =
+            PageCache { valid: true, vpn, pa_page: pa & !0xfff, prv: prv_b, virt, sum_mxr: key, gen };
+    }
+    bus.write(pa, size, val).map_err(|_| Exception::new(ExceptionCause::StoreAccessFault, va))
+}
+
+/// Translate for an AMO/SC (write access), returning the PA.
+fn amo_translate(core: &mut Core, bus: &mut Bus, va: u64, size: u64, tinst: u64) -> Result<u64, Exception> {
+    if va % size != 0 {
+        return Err(Exception::new(ExceptionCause::StoreAddrMisaligned, va));
+    }
+    let (prv, virt) = data_access_env(&core.hart, &XlateFlags::default());
+    let ctx = TranslateCtx {
+        csr: &core.hart.csr,
+        prv,
+        virt,
+        access: Access::Write,
+        flags: XlateFlags::default(),
+        tinst,
+    };
+    mmu::translate(&mut core.tlb, &mut core.mmu_stats, bus, &ctx, va)
+}
+
+#[inline]
+fn sext32(v: u64) -> u64 {
+    v as u32 as i32 as i64 as u64
+}
+
+/// Execute a decoded instruction; returns the next PC.
+pub fn execute(core: &mut Core, bus: &mut Bus, inst: &Inst) -> Result<u64, Exception> {
+    use Op::*;
+    let hart = &mut core.hart;
+    let pc = hart.pc;
+    let next = pc.wrapping_add(4);
+    let rs1 = hart.reg(inst.rs1);
+    let rs2 = hart.reg(inst.rs2);
+    let imm = inst.imm as u64;
+
+    match inst.op {
+        Lui => hart.set_reg(inst.rd, imm),
+        Auipc => hart.set_reg(inst.rd, pc.wrapping_add(imm)),
+        Jal => {
+            let target = pc.wrapping_add(imm);
+            if target & 3 != 0 {
+                return Err(Exception::new(ExceptionCause::InstAddrMisaligned, target));
+            }
+            hart.set_reg(inst.rd, next);
+            return Ok(target);
+        }
+        Jalr => {
+            let target = rs1.wrapping_add(imm) & !1;
+            if target & 3 != 0 {
+                return Err(Exception::new(ExceptionCause::InstAddrMisaligned, target));
+            }
+            hart.set_reg(inst.rd, next);
+            return Ok(target);
+        }
+        Beq | Bne | Blt | Bge | Bltu | Bgeu => {
+            let take = match inst.op {
+                Beq => rs1 == rs2,
+                Bne => rs1 != rs2,
+                Blt => (rs1 as i64) < (rs2 as i64),
+                Bge => (rs1 as i64) >= (rs2 as i64),
+                Bltu => rs1 < rs2,
+                _ => rs1 >= rs2,
+            };
+            if take {
+                let target = pc.wrapping_add(imm);
+                if target & 3 != 0 {
+                    return Err(Exception::new(ExceptionCause::InstAddrMisaligned, target));
+                }
+                return Ok(target);
+            }
+        }
+        Lb | Lh | Lw | Ld | Lbu | Lhu | Lwu => {
+            let size = inst.op.access_size();
+            let va = rs1.wrapping_add(imm);
+            let v = mem_read(core, bus, va, size, XlateFlags::default(), inst.transformed_for_tinst())?;
+            let v = match inst.op {
+                Lb => v as u8 as i8 as i64 as u64,
+                Lh => v as u16 as i16 as i64 as u64,
+                Lw => sext32(v),
+                _ => v,
+            };
+            core.hart.set_reg(inst.rd, v);
+            return Ok(next);
+        }
+        Sb | Sh | Sw | Sd => {
+            let size = inst.op.access_size();
+            let va = rs1.wrapping_add(imm);
+            mem_write(core, bus, va, size, rs2, XlateFlags::default(), inst.transformed_for_tinst())?;
+            // A store invalidates any matching reservation.
+            core.hart.reservation = None;
+            return Ok(next);
+        }
+        Addi => hart.set_reg(inst.rd, rs1.wrapping_add(imm)),
+        Slti => hart.set_reg(inst.rd, ((rs1 as i64) < (imm as i64)) as u64),
+        Sltiu => hart.set_reg(inst.rd, (rs1 < imm) as u64),
+        Xori => hart.set_reg(inst.rd, rs1 ^ imm),
+        Ori => hart.set_reg(inst.rd, rs1 | imm),
+        Andi => hart.set_reg(inst.rd, rs1 & imm),
+        Slli => hart.set_reg(inst.rd, rs1 << (imm & 63)),
+        Srli => hart.set_reg(inst.rd, rs1 >> (imm & 63)),
+        Srai => hart.set_reg(inst.rd, ((rs1 as i64) >> (imm & 63)) as u64),
+        Add => hart.set_reg(inst.rd, rs1.wrapping_add(rs2)),
+        Sub => hart.set_reg(inst.rd, rs1.wrapping_sub(rs2)),
+        Sll => hart.set_reg(inst.rd, rs1 << (rs2 & 63)),
+        Slt => hart.set_reg(inst.rd, ((rs1 as i64) < (rs2 as i64)) as u64),
+        Sltu => hart.set_reg(inst.rd, (rs1 < rs2) as u64),
+        Xor => hart.set_reg(inst.rd, rs1 ^ rs2),
+        Srl => hart.set_reg(inst.rd, rs1 >> (rs2 & 63)),
+        Sra => hart.set_reg(inst.rd, ((rs1 as i64) >> (rs2 & 63)) as u64),
+        Or => hart.set_reg(inst.rd, rs1 | rs2),
+        And => hart.set_reg(inst.rd, rs1 & rs2),
+        Addiw => hart.set_reg(inst.rd, sext32(rs1.wrapping_add(imm))),
+        Slliw => hart.set_reg(inst.rd, sext32(rs1 << (imm & 31))),
+        Srliw => hart.set_reg(inst.rd, sext32((rs1 as u32 >> (imm & 31)) as u64)),
+        Sraiw => hart.set_reg(inst.rd, ((rs1 as i32) >> (imm & 31)) as i64 as u64),
+        Addw => hart.set_reg(inst.rd, sext32(rs1.wrapping_add(rs2))),
+        Subw => hart.set_reg(inst.rd, sext32(rs1.wrapping_sub(rs2))),
+        Sllw => hart.set_reg(inst.rd, sext32(rs1 << (rs2 & 31))),
+        Srlw => hart.set_reg(inst.rd, sext32((rs1 as u32 >> (rs2 & 31)) as u64)),
+        Sraw => hart.set_reg(inst.rd, ((rs1 as i32) >> (rs2 & 31)) as i64 as u64),
+        Mul => hart.set_reg(inst.rd, rs1.wrapping_mul(rs2)),
+        Mulh => hart.set_reg(inst.rd, ((rs1 as i64 as i128 * rs2 as i64 as i128) >> 64) as u64),
+        Mulhsu => hart.set_reg(inst.rd, ((rs1 as i64 as i128 * rs2 as u128 as i128) >> 64) as u64),
+        Mulhu => hart.set_reg(inst.rd, ((rs1 as u128 * rs2 as u128) >> 64) as u64),
+        Div => {
+            let v = if rs2 == 0 {
+                u64::MAX
+            } else if rs1 as i64 == i64::MIN && rs2 as i64 == -1 {
+                rs1
+            } else {
+                ((rs1 as i64) / (rs2 as i64)) as u64
+            };
+            hart.set_reg(inst.rd, v);
+        }
+        Divu => hart.set_reg(inst.rd, if rs2 == 0 { u64::MAX } else { rs1 / rs2 }),
+        Rem => {
+            let v = if rs2 == 0 {
+                rs1
+            } else if rs1 as i64 == i64::MIN && rs2 as i64 == -1 {
+                0
+            } else {
+                ((rs1 as i64) % (rs2 as i64)) as u64
+            };
+            hart.set_reg(inst.rd, v);
+        }
+        Remu => hart.set_reg(inst.rd, if rs2 == 0 { rs1 } else { rs1 % rs2 }),
+        Mulw => hart.set_reg(inst.rd, sext32(rs1.wrapping_mul(rs2))),
+        Divw => {
+            let a = rs1 as i32;
+            let b = rs2 as i32;
+            let v = if b == 0 {
+                -1i64 as u64
+            } else if a == i32::MIN && b == -1 {
+                a as i64 as u64
+            } else {
+                (a / b) as i64 as u64
+            };
+            hart.set_reg(inst.rd, v);
+        }
+        Divuw => {
+            let a = rs1 as u32;
+            let b = rs2 as u32;
+            let v = if b == 0 { u64::MAX } else { sext32((a / b) as u64) };
+            hart.set_reg(inst.rd, v);
+        }
+        Remw => {
+            let a = rs1 as i32;
+            let b = rs2 as i32;
+            let v = if b == 0 {
+                a as i64 as u64
+            } else if a == i32::MIN && b == -1 {
+                0
+            } else {
+                (a % b) as i64 as u64
+            };
+            hart.set_reg(inst.rd, v);
+        }
+        Remuw => {
+            let a = rs1 as u32;
+            let b = rs2 as u32;
+            let v = if b == 0 { sext32(a as u64) } else { sext32((a % b) as u64) };
+            hart.set_reg(inst.rd, v);
+        }
+        Fence | FenceI => {}
+        Ecall => {
+            let cause = match (hart.prv, hart.virt) {
+                (PrivLevel::User, _) => ExceptionCause::EcallFromU,
+                (PrivLevel::Supervisor, false) => ExceptionCause::EcallFromS,
+                (PrivLevel::Supervisor, true) => ExceptionCause::EcallFromVS,
+                (PrivLevel::Machine, _) => ExceptionCause::EcallFromM,
+            };
+            return Err(Exception::new(cause, 0));
+        }
+        Ebreak => return Err(Exception::new(ExceptionCause::Breakpoint, pc)),
+        Mret => {
+            if hart.prv != PrivLevel::Machine {
+                return Err(Exception::illegal(inst.raw));
+            }
+            trap::mret(hart);
+            return Ok(hart.pc);
+        }
+        Sret => {
+            match (hart.prv, hart.virt) {
+                (PrivLevel::Machine, _) => {
+                    trap::sret_hs(hart);
+                }
+                (PrivLevel::Supervisor, false) => {
+                    if hart.csr.mstatus & mstatus::TSR != 0 {
+                        return Err(Exception::illegal(inst.raw));
+                    }
+                    trap::sret_hs(hart);
+                }
+                (PrivLevel::Supervisor, true) => {
+                    // Paper §3.4 virtual_instruction tests: sret from VS
+                    // with hstatus.VTSR set → virtual-instruction fault.
+                    if hart.csr.hstatus & hstatus::VTSR != 0 {
+                        return Err(Exception::virtual_inst(inst.raw));
+                    }
+                    trap::sret_vs(hart);
+                }
+                (PrivLevel::User, false) => return Err(Exception::illegal(inst.raw)),
+                (PrivLevel::User, true) => return Err(Exception::virtual_inst(inst.raw)),
+            }
+            return Ok(hart.pc);
+        }
+        Wfi => {
+            match (hart.prv, hart.virt) {
+                (PrivLevel::Machine, _) => {}
+                (PrivLevel::Supervisor, false) => {
+                    if hart.csr.mstatus & mstatus::TW != 0 {
+                        return Err(Exception::illegal(inst.raw));
+                    }
+                }
+                (PrivLevel::Supervisor, true) => {
+                    // wfi_exception_tests: TW → illegal; else VTW → virtual.
+                    if hart.csr.mstatus & mstatus::TW != 0 {
+                        return Err(Exception::illegal(inst.raw));
+                    }
+                    if hart.csr.hstatus & hstatus::VTW != 0 {
+                        return Err(Exception::virtual_inst(inst.raw));
+                    }
+                }
+                (PrivLevel::User, false) => {
+                    if hart.csr.mstatus & mstatus::TW != 0 {
+                        return Err(Exception::illegal(inst.raw));
+                    }
+                }
+                (PrivLevel::User, true) => {
+                    if hart.csr.mstatus & mstatus::TW != 0 {
+                        return Err(Exception::illegal(inst.raw));
+                    }
+                    return Err(Exception::virtual_inst(inst.raw));
+                }
+            }
+            if !wfi_wakeup(hart) {
+                hart.wfi = true;
+            }
+        }
+        SfenceVma => {
+            match (hart.prv, hart.virt) {
+                (PrivLevel::Machine, _) => {}
+                (PrivLevel::Supervisor, false) => {
+                    if hart.csr.mstatus & mstatus::TVM != 0 {
+                        return Err(Exception::illegal(inst.raw));
+                    }
+                }
+                (PrivLevel::Supervisor, true) => {
+                    if hart.csr.hstatus & hstatus::VTVM != 0 {
+                        return Err(Exception::virtual_inst(inst.raw));
+                    }
+                    // VS-mode sfence affects the guest's VS-stage entries.
+                    let vmid = atp::vmid(hart.csr.hgatp) as u16;
+                    let va = if inst.rs1 != 0 { Some(rs1) } else { None };
+                    let asid = if inst.rs2 != 0 { Some(rs2 as u16) } else { None };
+                    core.tlb.fence_vvma(vmid, va, asid);
+                    core.mmu_stats.flushes += 1;
+                    return Ok(next);
+                }
+                (PrivLevel::User, false) => return Err(Exception::illegal(inst.raw)),
+                (PrivLevel::User, true) => return Err(Exception::virtual_inst(inst.raw)),
+            }
+            let va = if inst.rs1 != 0 { Some(rs1) } else { None };
+            let asid = if inst.rs2 != 0 { Some(rs2 as u16) } else { None };
+            core.tlb.fence_vma(va, asid);
+            core.mmu_stats.flushes += 1;
+            return Ok(next);
+        }
+        HfenceVvma | HfenceGvma => {
+            if !hart.csr.h_enabled {
+                return Err(Exception::illegal(inst.raw));
+            }
+            match (hart.prv, hart.virt) {
+                (PrivLevel::Machine, _) => {}
+                (PrivLevel::Supervisor, false) => {
+                    if inst.op == HfenceGvma && hart.csr.mstatus & mstatus::TVM != 0 {
+                        return Err(Exception::illegal(inst.raw));
+                    }
+                }
+                (_, true) => return Err(Exception::virtual_inst(inst.raw)),
+                (PrivLevel::User, false) => return Err(Exception::illegal(inst.raw)),
+            }
+            if inst.op == HfenceVvma {
+                // hfence.vvma rs1=vaddr rs2=asid, scoped to current VMID.
+                let vmid = atp::vmid(hart.csr.hgatp) as u16;
+                let va = if inst.rs1 != 0 { Some(rs1) } else { None };
+                let asid = if inst.rs2 != 0 { Some(rs2 as u16) } else { None };
+                core.tlb.fence_vvma(vmid, va, asid);
+            } else {
+                // hfence.gvma rs1=guest-physical>>2 rs2=vmid.
+                let gaddr = if inst.rs1 != 0 { Some(rs1 << 2) } else { None };
+                let vmid = if inst.rs2 != 0 { Some(rs2 as u16) } else { None };
+                core.tlb.fence_gvma(gaddr, vmid);
+            }
+            core.mmu_stats.flushes += 1;
+            return Ok(next);
+        }
+        HlvB | HlvBu | HlvH | HlvHu | HlvW | HlvWu | HlvD | HlvxHu | HlvxWu => {
+            check_hlv_hsv_allowed(hart, inst)?;
+            let flags = XlateFlags { forced_virt: true, hlvx: inst.op.is_hlvx(), lr: false };
+            let size = inst.op.access_size();
+            let v = mem_read(core, bus, rs1, size, flags, inst.transformed_for_tinst())?;
+            let v = match inst.op {
+                HlvB => v as u8 as i8 as i64 as u64,
+                HlvH => v as u16 as i16 as i64 as u64,
+                HlvW => sext32(v),
+                _ => v, // unsigned variants + D
+            };
+            core.hart.set_reg(inst.rd, v);
+            return Ok(next);
+        }
+        HsvB | HsvH | HsvW | HsvD => {
+            check_hlv_hsv_allowed(hart, inst)?;
+            let flags = XlateFlags { forced_virt: true, hlvx: false, lr: false };
+            let size = inst.op.access_size();
+            mem_write(core, bus, rs1, size, rs2, flags, inst.transformed_for_tinst())?;
+            return Ok(next);
+        }
+        LrW | LrD => {
+            let size = inst.op.access_size();
+            let va = rs1;
+            if va % size != 0 {
+                return Err(Exception::new(ExceptionCause::LoadAddrMisaligned, va));
+            }
+            let flags = XlateFlags { lr: true, ..Default::default() };
+            let v = mem_read(core, bus, va, size, flags, inst.transformed_for_tinst())?;
+            let v = if inst.op == LrW { sext32(v) } else { v };
+            // Reservation on the physical line (re-translate cheap: TLB hot).
+            let (prv, virt) = data_access_env(&core.hart, &XlateFlags::default());
+            let ctx = TranslateCtx {
+                csr: &core.hart.csr,
+                prv,
+                virt,
+                access: Access::Read,
+                flags: XlateFlags::default(),
+                tinst: 0,
+            };
+            let pa = mmu::translate(&mut core.tlb, &mut core.mmu_stats, bus, &ctx, va)?;
+            core.hart.reservation = Some(pa & !7);
+            core.hart.set_reg(inst.rd, v);
+            return Ok(next);
+        }
+        ScW | ScD => {
+            let size = inst.op.access_size();
+            let pa = amo_translate(core, bus, rs1, size, inst.transformed_for_tinst())?;
+            let ok = core.hart.reservation == Some(pa & !7);
+            core.hart.reservation = None;
+            if ok {
+                bus.write(pa, size, rs2)
+                    .map_err(|_| Exception::new(ExceptionCause::StoreAccessFault, rs1))?;
+                core.hart.set_reg(inst.rd, 0);
+            } else {
+                core.hart.set_reg(inst.rd, 1);
+            }
+            return Ok(next);
+        }
+        AmoSwapW | AmoAddW | AmoXorW | AmoAndW | AmoOrW | AmoMinW | AmoMaxW | AmoMinuW
+        | AmoMaxuW | AmoSwapD | AmoAddD | AmoXorD | AmoAndD | AmoOrD | AmoMinD | AmoMaxD
+        | AmoMinuD | AmoMaxuD => {
+            let size = inst.op.access_size();
+            let pa = amo_translate(core, bus, rs1, size, inst.transformed_for_tinst())?;
+            let old = bus
+                .read(pa, size)
+                .map_err(|_| Exception::new(ExceptionCause::StoreAccessFault, rs1))?;
+            let old_v = if size == 4 { sext32(old) } else { old };
+            let new = amo_op(inst.op, old_v, rs2, size);
+            bus.write(pa, size, new)
+                .map_err(|_| Exception::new(ExceptionCause::StoreAccessFault, rs1))?;
+            core.hart.set_reg(inst.rd, old_v);
+            return Ok(next);
+        }
+        Csrrw | Csrrs | Csrrc | Csrrwi | Csrrsi | Csrrci => {
+            return exec_csr(core, inst, rs1, next);
+        }
+        Flw | Fsw | FaddS | FmulS | FmvWX | FmvXW => {
+            return exec_float(core, bus, inst, rs1, rs2, next);
+        }
+        Illegal => {
+            return Err(Exception::illegal(inst.raw));
+        }
+    }
+    Ok(next)
+}
+
+/// HLV/HSV legality: V must be 0; allowed from M, HS, or U when
+/// hstatus.HU=1. From VS/VU → virtual instruction (paper §3.4,
+/// m_and_hs_using_vs_access tests).
+fn check_hlv_hsv_allowed(hart: &Hart, inst: &Inst) -> Result<(), Exception> {
+    if !hart.csr.h_enabled {
+        return Err(Exception::illegal(inst.raw));
+    }
+    if hart.virt {
+        return Err(Exception::virtual_inst(inst.raw));
+    }
+    match hart.prv {
+        PrivLevel::Machine | PrivLevel::Supervisor => Ok(()),
+        PrivLevel::User => {
+            if hart.csr.hstatus & hstatus::HU != 0 {
+                Ok(())
+            } else {
+                Err(Exception::illegal(inst.raw))
+            }
+        }
+    }
+}
+
+fn amo_op(op: Op, old: u64, rs2: u64, size: u64) -> u64 {
+    use Op::*;
+    let (a32, b32) = (old as i32, rs2 as i32);
+    match op {
+        AmoSwapW | AmoSwapD => rs2,
+        AmoAddW => a32.wrapping_add(b32) as u64,
+        AmoAddD => old.wrapping_add(rs2),
+        AmoXorW | AmoXorD => old ^ rs2,
+        AmoAndW | AmoAndD => old & rs2,
+        AmoOrW | AmoOrD => old | rs2,
+        AmoMinW => a32.min(b32) as u64,
+        AmoMaxW => a32.max(b32) as u64,
+        AmoMinuW => (old as u32).min(rs2 as u32) as u64,
+        AmoMaxuW => (old as u32).max(rs2 as u32) as u64,
+        AmoMinD => (old as i64).min(rs2 as i64) as u64,
+        AmoMaxD => (old as i64).max(rs2 as i64) as u64,
+        AmoMinuD => old.min(rs2),
+        AmoMaxuD => old.max(rs2),
+        _ => unreachable!("non-AMO op {op:?} size {size}"),
+    }
+}
+
+fn exec_csr(core: &mut Core, inst: &Inst, rs1: u64, next: u64) -> Result<u64, Exception> {
+    use Op::*;
+    let hart = &mut core.hart;
+    let prv = hart.prv;
+    let virt = hart.virt;
+    let addr = inst.csr;
+
+    // TVM/VTVM gating for satp (and the VS-redirected vsatp).
+    if addr == csrdef::CSR_SATP {
+        if prv == PrivLevel::Supervisor && !virt && hart.csr.mstatus & mstatus::TVM != 0 {
+            return Err(Exception::illegal(inst.raw));
+        }
+        if prv == PrivLevel::Supervisor && virt && hart.csr.hstatus & hstatus::VTVM != 0 {
+            return Err(Exception::virtual_inst(inst.raw));
+        }
+    }
+
+    let map_err = |e: CsrError, raw: u32| match e {
+        CsrError::Illegal => Exception::illegal(raw),
+        CsrError::Virtual => Exception::virtual_inst(raw),
+    };
+
+    let old = hart.csr.read(addr, prv, virt).map_err(|e| map_err(e, inst.raw))?;
+    let src = match inst.op {
+        Csrrw | Csrrs | Csrrc => rs1,
+        _ => inst.imm as u64, // zimm
+    };
+    let (do_write, new) = match inst.op {
+        Csrrw | Csrrwi => (true, src),
+        Csrrs | Csrrsi => (inst.rs1 != 0, old | src),
+        _ => (inst.rs1 != 0, old & !src),
+    };
+    if do_write {
+        hart.csr.write(addr, new, prv, virt).map_err(|e| map_err(e, inst.raw))?;
+        // Writing satp/vsatp/hgatp changes the address space; flush
+        // conservatively (software also issues fences, but this keeps the
+        // TLB coherent for flushless firmware).
+        if matches!(addr, csrdef::CSR_SATP | csrdef::CSR_VSATP | csrdef::CSR_HGATP) {
+            core.tlb.flush_all();
+        }
+    }
+    core.hart.set_reg(inst.rd, old);
+    Ok(next)
+}
+
+/// Minimal F subset with the FS-field gating of §3.5 (challenge 2): when
+/// V=1, vsstatus.FS is checked in addition to mstatus.FS.
+fn exec_float(
+    core: &mut Core,
+    bus: &mut Bus,
+    inst: &Inst,
+    rs1: u64,
+    rs2: u64,
+    next: u64,
+) -> Result<u64, Exception> {
+    use Op::*;
+    let hart = &core.hart;
+    if hart.csr.mstatus & mstatus::FS_MASK == mstatus::FS_OFF {
+        return Err(Exception::illegal(inst.raw));
+    }
+    if hart.virt && hart.csr.vsstatus & mstatus::FS_MASK == mstatus::FS_OFF {
+        // Guest FPU disabled by vsstatus: virtual-instruction fault so the
+        // hypervisor can lazily enable/emulate.
+        return Err(Exception::virtual_inst(inst.raw));
+    }
+    match inst.op {
+        Flw => {
+            let va = rs1.wrapping_add(inst.imm as u64);
+            let v = mem_read(core, bus, va, 4, XlateFlags::default(), inst.transformed_for_tinst())?;
+            core.hart.fregs[inst.rd as usize] = v | 0xffff_ffff_0000_0000; // NaN-boxed
+        }
+        Fsw => {
+            let va = rs1.wrapping_add(inst.imm as u64);
+            let v = core.hart.fregs[inst.rs2 as usize] as u32 as u64;
+            mem_write(core, bus, va, 4, v, XlateFlags::default(), inst.transformed_for_tinst())?;
+        }
+        FaddS => {
+            let a = f32::from_bits(core.hart.fregs[inst.rs1 as usize] as u32);
+            let b = f32::from_bits(core.hart.fregs[inst.rs2 as usize] as u32);
+            core.hart.fregs[inst.rd as usize] =
+                (a + b).to_bits() as u64 | 0xffff_ffff_0000_0000;
+        }
+        FmulS => {
+            let a = f32::from_bits(core.hart.fregs[inst.rs1 as usize] as u32);
+            let b = f32::from_bits(core.hart.fregs[inst.rs2 as usize] as u32);
+            core.hart.fregs[inst.rd as usize] =
+                (a * b).to_bits() as u64 | 0xffff_ffff_0000_0000;
+        }
+        FmvWX => {
+            core.hart.fregs[inst.rd as usize] = (rs1 as u32) as u64 | 0xffff_ffff_0000_0000;
+        }
+        FmvXW => {
+            let v = sext32(core.hart.fregs[inst.rs1 as usize] & 0xffff_ffff);
+            core.hart.set_reg(inst.rd, v);
+            let _ = rs2;
+        }
+        _ => unreachable!(),
+    }
+    let virt = core.hart.virt;
+    core.hart.csr.set_fs_dirty(virt);
+    Ok(next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::RAM_BASE;
+
+    fn world() -> (Core, Bus) {
+        let mut core = Core::new(true);
+        core.hart.pc = RAM_BASE;
+        core.hart.csr.mstatus |= mstatus::FS_INITIAL;
+        core.hart.csr.vsstatus |= mstatus::FS_INITIAL;
+        (core, Bus::new(4 << 20))
+    }
+
+    fn run_one(core: &mut Core, bus: &mut Bus, words: &[u32]) -> StepEvent {
+        let mut bytes = Vec::new();
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        bus.load_image(core.hart.pc, &bytes).unwrap();
+        step(core, bus)
+    }
+
+    fn asm_addi(rd: u32, rs1: u32, imm: i32) -> u32 {
+        ((imm as u32 & 0xfff) << 20) | (rs1 << 15) | (rd << 7) | 0b0010011
+    }
+
+    #[test]
+    fn basic_arith_and_pc_advance() {
+        let (mut core, mut bus) = world();
+        core.hart.regs[5] = 40;
+        let ev = run_one(&mut core, &mut bus, &[asm_addi(6, 5, 2)]);
+        assert_eq!(ev, StepEvent::Retired);
+        assert_eq!(core.hart.regs[6], 42);
+        assert_eq!(core.hart.pc, RAM_BASE + 4);
+        assert_eq!(core.hart.csr.minstret, 1);
+    }
+
+    #[test]
+    fn load_store_round_trip() {
+        let (mut core, mut bus) = world();
+        // sd x5, 64(x10); pc advances; then ld x6, 64(x10)
+        core.hart.regs[5] = 0xdead_beef_cafe_f00d;
+        core.hart.regs[10] = RAM_BASE + 0x1000;
+        let sd = (0 << 25) | (5 << 20) | (10 << 15) | (0b011 << 12) | ((64 & 0x1f) << 7) | 0b0100011
+            | ((64 >> 5) << 25);
+        let ld = (64 << 20) | (10 << 15) | (0b011 << 12) | (6 << 7) | 0b0000011;
+        assert_eq!(run_one(&mut core, &mut bus, &[sd, ld]), StepEvent::Retired);
+        assert_eq!(step(&mut core, &mut bus), StepEvent::Retired);
+        assert_eq!(core.hart.regs[6], 0xdead_beef_cafe_f00d);
+    }
+
+    #[test]
+    fn ecall_cause_depends_on_mode() {
+        for (prv, virt, want) in [
+            (PrivLevel::Machine, false, ExceptionCause::EcallFromM),
+            (PrivLevel::Supervisor, false, ExceptionCause::EcallFromS),
+            (PrivLevel::Supervisor, true, ExceptionCause::EcallFromVS),
+            (PrivLevel::User, true, ExceptionCause::EcallFromU),
+        ] {
+            let (mut core, mut bus) = world();
+            core.hart.prv = prv;
+            core.hart.virt = virt;
+            // Stay bare-translation: M-mode fetch is bare; for S/VS we keep
+            // satp/vsatp/hgatp = 0 (BARE everywhere) so fetch works.
+            match run_one(&mut core, &mut bus, &[0x0000_0073]) {
+                StepEvent::Exception(cause, _) => assert_eq!(cause, want),
+                e => panic!("expected exception, got {e:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn illegal_instruction_sets_mtval() {
+        let (mut core, mut bus) = world();
+        match run_one(&mut core, &mut bus, &[0xffff_ffff]) {
+            StepEvent::Exception(cause, TrapTarget::M) => {
+                assert_eq!(cause, ExceptionCause::IllegalInst);
+                assert_eq!(core.hart.csr.mtval, 0xffff_ffff);
+            }
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn wfi_parks_until_interrupt() {
+        let (mut core, mut bus) = world();
+        assert_eq!(run_one(&mut core, &mut bus, &[0x1050_0073]), StepEvent::Retired);
+        assert!(core.hart.wfi);
+        assert_eq!(step(&mut core, &mut bus), StepEvent::WfiIdle);
+        // Raise MTIP+MTIE → wakes, then takes the interrupt.
+        core.hart.csr.mip |= crate::isa::csr::irq::MTIP;
+        core.hart.csr.mie |= crate::isa::csr::irq::MTIP;
+        core.hart.csr.mstatus |= mstatus::MIE;
+        match step(&mut core, &mut bus) {
+            StepEvent::Interrupt(InterruptCause::MachineTimer, TrapTarget::M) => {}
+            e => panic!("{e:?}"),
+        }
+        assert!(!core.hart.wfi);
+    }
+
+    #[test]
+    fn wfi_virtual_instruction_when_vtw() {
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::Supervisor;
+        core.hart.virt = true;
+        core.hart.csr.hstatus |= hstatus::VTW;
+        match run_one(&mut core, &mut bus, &[0x1050_0073]) {
+            StepEvent::Exception(ExceptionCause::VirtualInstruction, _) => {}
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn amo_add() {
+        let (mut core, mut bus) = world();
+        core.hart.regs[6] = RAM_BASE + 0x2000;
+        core.hart.regs[7] = 5;
+        bus.write(RAM_BASE + 0x2000, 4, 37).unwrap();
+        // amoadd.w x5, x7, (x6)
+        let raw = (0b0000000 << 25) | (7 << 20) | (6 << 15) | (0b010 << 12) | (5 << 7) | 0b0101111;
+        assert_eq!(run_one(&mut core, &mut bus, &[raw]), StepEvent::Retired);
+        assert_eq!(core.hart.regs[5], 37);
+        assert_eq!(bus.read(RAM_BASE + 0x2000, 4).unwrap(), 42);
+    }
+
+    #[test]
+    fn lr_sc_success_and_failure() {
+        let (mut core, mut bus) = world();
+        core.hart.regs[6] = RAM_BASE + 0x2000;
+        core.hart.regs[7] = 99;
+        bus.write(RAM_BASE + 0x2000, 8, 1).unwrap();
+        let lr = (0b0001000 << 25) | (6 << 15) | (0b011 << 12) | (5 << 7) | 0b0101111; // lr.d x5,(x6)
+        let sc = (0b0001100 << 25) | (7 << 20) | (6 << 15) | (0b011 << 12) | (8 << 7) | 0b0101111; // sc.d x8,x7,(x6)
+        assert_eq!(run_one(&mut core, &mut bus, &[lr, sc, sc]), StepEvent::Retired);
+        assert_eq!(core.hart.regs[5], 1);
+        assert_eq!(step(&mut core, &mut bus), StepEvent::Retired);
+        assert_eq!(core.hart.regs[8], 0, "sc succeeds");
+        assert_eq!(bus.read(RAM_BASE + 0x2000, 8).unwrap(), 99);
+        assert_eq!(step(&mut core, &mut bus), StepEvent::Retired);
+        assert_eq!(core.hart.regs[8], 1, "second sc fails (no reservation)");
+    }
+
+    #[test]
+    fn csrrw_reads_old_writes_new() {
+        let (mut core, mut bus) = world();
+        core.hart.csr.mscratch = 7;
+        core.hart.regs[5] = 123;
+        let raw = ((csrdef::CSR_MSCRATCH as u32) << 20) | (5 << 15) | (0b001 << 12) | (6 << 7) | 0b1110011;
+        assert_eq!(run_one(&mut core, &mut bus, &[raw]), StepEvent::Retired);
+        assert_eq!(core.hart.regs[6], 7);
+        assert_eq!(core.hart.csr.mscratch, 123);
+    }
+
+    #[test]
+    fn csrrs_x0_does_not_write() {
+        let (mut core, mut bus) = world();
+        // csrrs x5, mhartid, x0 — mhartid is RO; must not trap.
+        let raw = ((csrdef::CSR_MHARTID as u32) << 20) | (0b010 << 12) | (5 << 7) | 0b1110011;
+        assert_eq!(run_one(&mut core, &mut bus, &[raw]), StepEvent::Retired);
+    }
+
+    #[test]
+    fn hlv_from_vs_is_virtual_instruction() {
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::Supervisor;
+        core.hart.virt = true;
+        // hlv.w x5, (x6)
+        let raw = (0b0110100 << 25) | (6 << 15) | (0b100 << 12) | (5 << 7) | 0b1110011;
+        match run_one(&mut core, &mut bus, &[raw]) {
+            StepEvent::Exception(ExceptionCause::VirtualInstruction, _) => {}
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn hlv_reads_guest_memory_bare() {
+        // With vsatp/hgatp BARE, HLV from M reads the "guest" address
+        // directly.
+        let (mut core, mut bus) = world();
+        bus.write(RAM_BASE + 0x3000, 4, 0x1234_5678).unwrap();
+        core.hart.regs[6] = RAM_BASE + 0x3000;
+        let raw = (0b0110100 << 25) | (6 << 15) | (0b100 << 12) | (5 << 7) | 0b1110011;
+        assert_eq!(run_one(&mut core, &mut bus, &[raw]), StepEvent::Retired);
+        assert_eq!(core.hart.regs[5], 0x1234_5678);
+    }
+
+    #[test]
+    fn hlv_from_u_requires_hu() {
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::User;
+        let raw = (0b0110100 << 25) | (6 << 15) | (0b100 << 12) | (5 << 7) | 0b1110011;
+        core.hart.regs[6] = RAM_BASE + 0x3000;
+        match run_one(&mut core, &mut bus, &[raw]) {
+            StepEvent::Exception(ExceptionCause::IllegalInst, _) => {}
+            e => panic!("{e:?}"),
+        }
+        // With hstatus.HU it executes.
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::User;
+        core.hart.csr.hstatus |= hstatus::HU;
+        core.hart.regs[6] = RAM_BASE + 0x3000;
+        bus.write(RAM_BASE + 0x3000, 4, 77).unwrap();
+        assert_eq!(run_one(&mut core, &mut bus, &[raw]), StepEvent::Retired);
+        assert_eq!(core.hart.regs[5], 77);
+    }
+
+    #[test]
+    fn float_gated_by_vsstatus_fs() {
+        // §3.5 challenge 2.
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::Supervisor;
+        core.hart.virt = true;
+        core.hart.csr.vsstatus &= !mstatus::FS_MASK; // guest FS off
+        let fadd = (0b0000000 << 25) | (2 << 20) | (1 << 15) | (3 << 7) | 0b1010011;
+        match run_one(&mut core, &mut bus, &[fadd]) {
+            StepEvent::Exception(ExceptionCause::VirtualInstruction, _) => {}
+            e => panic!("{e:?}"),
+        }
+        // Native with mstatus.FS off → plain illegal.
+        let (mut core, mut bus) = world();
+        core.hart.csr.mstatus &= !mstatus::FS_MASK;
+        match run_one(&mut core, &mut bus, &[fadd]) {
+            StepEvent::Exception(ExceptionCause::IllegalInst, _) => {}
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn float_add_works_and_dirties_fs() {
+        let (mut core, mut bus) = world();
+        core.hart.fregs[1] = 2.5f32.to_bits() as u64;
+        core.hart.fregs[2] = 0.25f32.to_bits() as u64;
+        let fadd = (0b0000000 << 25) | (2 << 20) | (1 << 15) | (3 << 7) | 0b1010011;
+        assert_eq!(run_one(&mut core, &mut bus, &[fadd]), StepEvent::Retired);
+        assert_eq!(f32::from_bits(core.hart.fregs[3] as u32), 2.75);
+        assert_eq!(core.hart.csr.mstatus & mstatus::FS_MASK, mstatus::FS_DIRTY);
+    }
+
+    #[test]
+    fn mret_from_s_is_illegal() {
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::Supervisor;
+        match run_one(&mut core, &mut bus, &[0x3020_0073]) {
+            StepEvent::Exception(ExceptionCause::IllegalInst, _) => {}
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn sret_vtsr_virtual_instruction() {
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::Supervisor;
+        core.hart.virt = true;
+        core.hart.csr.hstatus |= hstatus::VTSR;
+        match run_one(&mut core, &mut bus, &[0x1020_0073]) {
+            StepEvent::Exception(ExceptionCause::VirtualInstruction, _) => {}
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn hfence_from_vs_is_virtual() {
+        let (mut core, mut bus) = world();
+        core.hart.prv = PrivLevel::Supervisor;
+        core.hart.virt = true;
+        // hfence.vvma x0, x0
+        let raw = (0b0010001 << 25) | 0b1110011;
+        match run_one(&mut core, &mut bus, &[raw]) {
+            StepEvent::Exception(ExceptionCause::VirtualInstruction, _) => {}
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn branch_taken_and_not_taken() {
+        let (mut core, mut bus) = world();
+        core.hart.regs[1] = 5;
+        core.hart.regs[2] = 5;
+        // beq x1, x2, +8
+        let v = 8u32;
+        let beq = (((v >> 12) & 1) << 31)
+            | (((v >> 5) & 0x3f) << 25)
+            | (2 << 20)
+            | (1 << 15)
+            | (((v >> 1) & 0xf) << 8)
+            | (((v >> 11) & 1) << 7)
+            | 0b1100011;
+        run_one(&mut core, &mut bus, &[beq]);
+        assert_eq!(core.hart.pc, RAM_BASE + 8);
+    }
+
+    #[test]
+    fn div_rem_edge_cases() {
+        let (mut core, mut bus) = world();
+        core.hart.regs[1] = 10;
+        core.hart.regs[2] = 0;
+        // div x3, x1, x2 → -1
+        let raw = (1 << 25) | (2 << 20) | (1 << 15) | (0b100 << 12) | (3 << 7) | 0b0110011;
+        run_one(&mut core, &mut bus, &[raw]);
+        assert_eq!(core.hart.regs[3], u64::MAX);
+        // i64::MIN / -1 → i64::MIN (no trap)
+        let (mut core, mut bus) = world();
+        core.hart.regs[1] = i64::MIN as u64;
+        core.hart.regs[2] = -1i64 as u64;
+        run_one(&mut core, &mut bus, &[raw]);
+        assert_eq!(core.hart.regs[3], i64::MIN as u64);
+    }
+}

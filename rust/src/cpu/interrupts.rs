@@ -1,0 +1,209 @@
+//! Interrupt detection — gem5's `CheckInterrupts()` as the paper's Fig. 2
+//! describes it: every tick, read the pending/enable registers and the
+//! delegation registers for the current privilege level, pick the highest-
+//! priority enabled interrupt and its destination level.
+
+use crate::isa::csr::{irq, mstatus};
+use crate::isa::{InterruptCause, PrivLevel};
+
+use super::trap::TrapTarget;
+use super::Hart;
+
+/// If an interrupt should be taken now, return (cause, destination).
+///
+/// Delegation chain (paper Fig. 2): `mideleg` is consulted when the current
+/// privilege is below M, `hideleg` when below HS. Destination enables:
+/// an interrupt targeting level X is taken iff X is above the current
+/// privilege, or X equals it and the level's global IE bit is set.
+pub fn check_interrupts(hart: &Hart) -> Option<(InterruptCause, TrapTarget)> {
+    let c = &hart.csr;
+    let pending = c.mip_read() & c.mie;
+    if pending == 0 {
+        return None;
+    }
+    let mideleg = c.mideleg_read();
+    let hideleg = c.hideleg;
+    let mstatus_v = c.mstatus;
+    let prv = hart.prv;
+    let virt = hart.virt;
+
+    for &cause in InterruptCause::PRIORITY.iter() {
+        let bit = cause.mask();
+        if pending & bit == 0 {
+            continue;
+        }
+        let target = if mideleg & bit == 0 {
+            TrapTarget::M
+        } else if c.h_enabled && bit & irq::VS_MASK != 0 && hideleg & bit != 0 {
+            TrapTarget::VS
+        } else {
+            TrapTarget::HS
+        };
+        let enabled = match target {
+            TrapTarget::M => prv != PrivLevel::Machine || mstatus_v & mstatus::MIE != 0,
+            TrapTarget::HS => {
+                if prv == PrivLevel::Machine {
+                    false
+                } else if virt {
+                    // HS-level interrupts always preempt the guest.
+                    true
+                } else {
+                    prv == PrivLevel::User || mstatus_v & mstatus::SIE != 0
+                }
+            }
+            TrapTarget::VS => {
+                if !virt {
+                    false
+                } else {
+                    prv == PrivLevel::User || c.vsstatus & mstatus::SIE != 0
+                }
+            }
+        };
+        if enabled {
+            return Some((cause, target));
+        }
+    }
+    None
+}
+
+/// WFI wake condition: any pending-and-enabled interrupt, regardless of
+/// global IE bits (the privileged spec's resume rule; the paper's
+/// wfi_exception_tests also exercise the trapping conditions, handled in
+/// execute.rs).
+pub fn wfi_wakeup(hart: &Hart) -> bool {
+    hart.csr.mip_read() & hart.csr.mie != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+
+    fn hart(prv: PrivLevel, virt: bool) -> Hart {
+        let mut h = Hart::new(true);
+        h.prv = prv;
+        h.virt = virt;
+        h
+    }
+
+    #[test]
+    fn no_pending_no_interrupt() {
+        let h = hart(PrivLevel::Machine, false);
+        assert_eq!(check_interrupts(&h), None);
+    }
+
+    #[test]
+    fn machine_timer_needs_mie_in_m_mode() {
+        let mut h = hart(PrivLevel::Machine, false);
+        h.csr.mip |= irq::MTIP;
+        h.csr.mie |= irq::MTIP;
+        assert_eq!(check_interrupts(&h), None, "MIE off in M");
+        h.csr.mstatus |= mstatus::MIE;
+        assert_eq!(
+            check_interrupts(&h),
+            Some((InterruptCause::MachineTimer, TrapTarget::M))
+        );
+        // From S, M interrupts fire regardless of MIE.
+        let mut h = hart(PrivLevel::Supervisor, false);
+        h.csr.mip |= irq::MTIP;
+        h.csr.mie |= irq::MTIP;
+        assert_eq!(
+            check_interrupts(&h),
+            Some((InterruptCause::MachineTimer, TrapTarget::M))
+        );
+    }
+
+    #[test]
+    fn mideleg_routes_supervisor_timer_to_hs() {
+        let mut h = hart(PrivLevel::Supervisor, false);
+        h.csr.mip |= irq::STIP;
+        h.csr.mie |= irq::STIP;
+        // Not delegated → M (fires since prv < M).
+        assert_eq!(
+            check_interrupts(&h),
+            Some((InterruptCause::SupervisorTimer, TrapTarget::M))
+        );
+        h.csr.mideleg = irq::STIP;
+        // Delegated to HS but SIE off while in HS → masked.
+        assert_eq!(check_interrupts(&h), None);
+        h.csr.mstatus |= mstatus::SIE;
+        assert_eq!(
+            check_interrupts(&h),
+            Some((InterruptCause::SupervisorTimer, TrapTarget::HS))
+        );
+    }
+
+    #[test]
+    fn vs_interrupt_delegation_chain() {
+        // VSTIP pending: mideleg.VSTI is read-only 1 → at least HS.
+        let mut h = hart(PrivLevel::Supervisor, true);
+        h.csr.mip |= irq::VSTIP;
+        h.csr.mie |= irq::VSTIP;
+        // hideleg clear → handled at HS; guest is always preemptible.
+        assert_eq!(
+            check_interrupts(&h),
+            Some((InterruptCause::VirtualSupervisorTimer, TrapTarget::HS))
+        );
+        // hideleg set → VS, gated by vsstatus.SIE.
+        h.csr.hideleg = irq::VSTIP;
+        assert_eq!(check_interrupts(&h), None, "vsstatus.SIE off");
+        h.csr.vsstatus |= mstatus::SIE;
+        assert_eq!(
+            check_interrupts(&h),
+            Some((InterruptCause::VirtualSupervisorTimer, TrapTarget::VS))
+        );
+    }
+
+    #[test]
+    fn vs_interrupts_do_not_preempt_hs() {
+        let mut h = hart(PrivLevel::Supervisor, false); // in HS, V=0
+        h.csr.mip |= irq::VSTIP;
+        h.csr.mie |= irq::VSTIP;
+        h.csr.hideleg = irq::VSTIP;
+        h.csr.vsstatus |= mstatus::SIE;
+        h.csr.mstatus |= mstatus::SIE;
+        assert_eq!(check_interrupts(&h), None, "VS-targeted interrupt waits for V=1");
+    }
+
+    #[test]
+    fn priority_machine_over_supervisor_over_vs() {
+        let mut h = hart(PrivLevel::User, true); // VU: everything above fires
+        h.csr.mip |= irq::MTIP | irq::STIP | irq::VSTIP;
+        h.csr.mie |= irq::MTIP | irq::STIP | irq::VSTIP;
+        h.csr.mideleg = irq::STIP;
+        h.csr.hideleg = irq::VSTIP;
+        let (cause, _) = check_interrupts(&h).unwrap();
+        assert_eq!(cause, InterruptCause::MachineTimer);
+        h.csr.mip &= !irq::MTIP;
+        let (cause, t) = check_interrupts(&h).unwrap();
+        assert_eq!(cause, InterruptCause::SupervisorTimer);
+        assert_eq!(t, TrapTarget::HS);
+        h.csr.mip &= !irq::STIP;
+        let (cause, t) = check_interrupts(&h).unwrap();
+        assert_eq!(cause, InterruptCause::VirtualSupervisorTimer);
+        assert_eq!(t, TrapTarget::VS);
+    }
+
+    #[test]
+    fn sgei_targets_hs() {
+        let mut h = hart(PrivLevel::Supervisor, false);
+        h.csr.hgeip = 1 << 3;
+        h.csr.hgeie = 1 << 3;
+        h.csr.mie |= irq::SGEIP;
+        h.csr.mstatus |= mstatus::SIE;
+        assert_eq!(
+            check_interrupts(&h),
+            Some((InterruptCause::SupervisorGuestExternal, TrapTarget::HS))
+        );
+    }
+
+    #[test]
+    fn wfi_wakeup_ignores_global_enables() {
+        let mut h = hart(PrivLevel::Machine, false);
+        h.csr.mip |= irq::MTIP;
+        h.csr.mie |= irq::MTIP;
+        // mstatus.MIE off — check_interrupts says no, but WFI wakes.
+        assert_eq!(check_interrupts(&h), None);
+        assert!(wfi_wakeup(&h));
+    }
+}

@@ -1,0 +1,87 @@
+//! CPU model: the functional ("atomic", in gem5 terms) hart.
+//!
+//! The hart owns the architectural register state, the CSR file, and the
+//! current (privilege, virtualization) pair. Instruction semantics live in
+//! [`execute`]; trap entry/exit in [`trap`]; interrupt detection (gem5's
+//! `CheckInterrupts()`, paper Fig. 2) in [`interrupts`].
+
+pub mod csr;
+pub mod execute;
+pub mod interrupts;
+pub mod trap;
+
+pub use csr::{CsrFile, CsrError};
+pub use execute::{step, Core, StepEvent};
+
+use crate::isa::PrivLevel;
+
+/// One RISC-V hart's architectural state.
+#[derive(Clone, Debug)]
+pub struct Hart {
+    pub regs: [u64; 32],
+    /// Minimal F-subset register file (bit patterns of f32 in low bits).
+    pub fregs: [u64; 32],
+    pub pc: u64,
+    pub prv: PrivLevel,
+    /// The H-extension V bit: true in VS/VU mode.
+    pub virt: bool,
+    pub csr: CsrFile,
+    /// LR/SC reservation (physical address).
+    pub reservation: Option<u64>,
+    /// Parked in WFI until an interrupt becomes pending.
+    pub wfi: bool,
+}
+
+impl Hart {
+    pub fn new(h_enabled: bool) -> Hart {
+        Hart {
+            regs: [0; 32],
+            fregs: [0; 32],
+            pc: 0,
+            prv: PrivLevel::Machine,
+            virt: false,
+            csr: CsrFile::new(h_enabled),
+            reservation: None,
+            wfi: false,
+        }
+    }
+
+    #[inline]
+    pub fn reg(&self, r: u8) -> u64 {
+        self.regs[r as usize]
+    }
+
+    #[inline]
+    pub fn set_reg(&mut self, r: u8, v: u64) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Effective privilege for stats/diagnostics (paper's M/HS/VS/VU).
+    pub fn eff_priv(&self) -> crate::isa::EffPriv {
+        crate::isa::EffPriv::of(self.prv, self.virt, self.csr.h_enabled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut h = Hart::new(true);
+        h.set_reg(0, 1234);
+        assert_eq!(h.reg(0), 0);
+        h.set_reg(1, 1234);
+        assert_eq!(h.reg(1), 1234);
+    }
+
+    #[test]
+    fn resets_to_machine_mode() {
+        let h = Hart::new(true);
+        assert_eq!(h.prv, PrivLevel::Machine);
+        assert!(!h.virt);
+        assert_eq!(h.eff_priv(), crate::isa::EffPriv::M);
+    }
+}

@@ -1,0 +1,429 @@
+//! Trap entry and return — the analog of gem5's `RiscvFault::invoke()`
+//! extended for the H extension (paper §3.2): delegation through
+//! medeleg/mideleg, then hedeleg/hideleg when V=1; new status/cause/tval
+//! writes including htval/mtval2 (guest physical address >> 2), GVA and MPV
+//! in mstatus, SPV/SPVP/GVA in hstatus, and tinst values.
+
+use crate::isa::csr::{hstatus, mstatus};
+use crate::isa::{Exception, InterruptCause, PrivLevel};
+
+use super::Hart;
+
+/// Where a trap lands (paper Fig. 2's three handler levels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrapTarget {
+    M,
+    HS,
+    VS,
+}
+
+impl TrapTarget {
+    pub fn name(self) -> &'static str {
+        match self {
+            TrapTarget::M => "M",
+            TrapTarget::HS => "HS",
+            TrapTarget::VS => "VS",
+        }
+    }
+}
+
+/// Select the privilege level that handles a synchronous exception, by
+/// walking the delegation chain: M unless medeleg[code]; then HS unless
+/// (V=1 and hedeleg[code]); then VS.
+pub fn exception_target(hart: &Hart, code: u64) -> TrapTarget {
+    if hart.prv == PrivLevel::Machine {
+        return TrapTarget::M;
+    }
+    let bit = 1u64 << code;
+    if hart.csr.medeleg & bit == 0 {
+        return TrapTarget::M;
+    }
+    if hart.virt && hart.csr.h_enabled && hart.csr.hedeleg & bit != 0 {
+        return TrapTarget::VS;
+    }
+    TrapTarget::HS
+}
+
+/// Take a synchronous exception: write the status/cause/tval registers of
+/// the destination level, switch (prv, V) and jump to the trap vector.
+pub fn take_exception(hart: &mut Hart, exc: &Exception) -> TrapTarget {
+    let target = exception_target(hart, exc.cause.code());
+    enter_trap(hart, target, exc.cause.code(), false, exc.tval, exc.gpa, exc.gva, exc.tinst);
+    target
+}
+
+/// Take an interrupt whose destination was already computed by
+/// `check_interrupts` (paper Fig. 2).
+pub fn take_interrupt(hart: &mut Hart, cause: InterruptCause, target: TrapTarget) {
+    // When a VS-level interrupt is taken into VS mode, the cause is
+    // presented using the *supervisor* encoding (VSSI→SSI etc.).
+    let code = match (target, cause) {
+        (TrapTarget::VS, InterruptCause::VirtualSupervisorSoft) => 1,
+        (TrapTarget::VS, InterruptCause::VirtualSupervisorTimer) => 5,
+        (TrapTarget::VS, InterruptCause::VirtualSupervisorExternal) => 9,
+        _ => cause.code(),
+    };
+    enter_trap(hart, target, code, true, 0, 0, false, 0);
+}
+
+const CAUSE_INTERRUPT_BIT: u64 = 1 << 63;
+
+#[allow(clippy::too_many_arguments)]
+fn enter_trap(
+    hart: &mut Hart,
+    target: TrapTarget,
+    code: u64,
+    is_interrupt: bool,
+    tval: u64,
+    gpa: u64,
+    gva: bool,
+    tinst: u64,
+) {
+    let cause = if is_interrupt { code | CAUSE_INTERRUPT_BIT } else { code };
+    let from_prv = hart.prv;
+    let from_virt = hart.virt;
+    match target {
+        TrapTarget::M => {
+            let c = &mut hart.csr;
+            // mstatus: MPV ← V, GVA ← gva (paper Table 1), MPP ← prv,
+            // MPIE ← MIE, MIE ← 0.
+            let mut st = c.mstatus;
+            st &= !(mstatus::MPV | mstatus::GVA | mstatus::MPP_MASK | mstatus::MPIE);
+            if from_virt {
+                st |= mstatus::MPV;
+            }
+            if gva {
+                st |= mstatus::GVA;
+            }
+            st |= from_prv.bits() << mstatus::MPP_SHIFT;
+            if st & mstatus::MIE != 0 {
+                st |= mstatus::MPIE;
+            }
+            st &= !mstatus::MIE;
+            c.mstatus = st;
+            c.mepc = hart.pc;
+            c.mcause = cause;
+            c.mtval = tval;
+            // Guest physical address >> 2 "when the fault is handled by
+            // M mode" (paper Table 1: mtval2).
+            c.mtval2 = gpa >> 2;
+            c.mtinst = tinst;
+            hart.virt = false;
+            hart.prv = PrivLevel::Machine;
+            hart.pc = vector(c.mtvec, is_interrupt, code);
+        }
+        TrapTarget::HS => {
+            let c = &mut hart.csr;
+            // hstatus: SPV ← V, SPVP ← prv (only updated when V=1),
+            // GVA ← gva (paper Table 1: hstatus "manages the exception
+            // handling behavior of a VS mode guest").
+            let mut hs = c.hstatus;
+            hs &= !(hstatus::SPV | hstatus::GVA);
+            if from_virt {
+                hs |= hstatus::SPV;
+                hs &= !hstatus::SPVP;
+                if from_prv == PrivLevel::Supervisor {
+                    hs |= hstatus::SPVP;
+                }
+            }
+            if gva {
+                hs |= hstatus::GVA;
+            }
+            c.hstatus = hs;
+            // sstatus side (stored in mstatus): SPP ← prv, SPIE ← SIE,
+            // SIE ← 0.
+            let mut st = c.mstatus;
+            st &= !(mstatus::SPP | mstatus::SPIE);
+            if from_prv == PrivLevel::Supervisor {
+                st |= mstatus::SPP;
+            }
+            if st & mstatus::SIE != 0 {
+                st |= mstatus::SPIE;
+            }
+            st &= !mstatus::SIE;
+            c.mstatus = st;
+            c.sepc = hart.pc;
+            c.scause = cause;
+            c.stval = tval;
+            // Guest physical address >> 2 "when the fault is handled by
+            // HS mode" (paper Table 1: htval).
+            c.htval = gpa >> 2;
+            c.htinst = tinst;
+            hart.virt = false;
+            hart.prv = PrivLevel::Supervisor;
+            hart.pc = vector(c.stvec, is_interrupt, code);
+        }
+        TrapTarget::VS => {
+            debug_assert!(from_virt, "VS trap target only reachable from VS/VU");
+            let c = &mut hart.csr;
+            let mut st = c.vsstatus;
+            st &= !(mstatus::SPP | mstatus::SPIE);
+            if from_prv == PrivLevel::Supervisor {
+                st |= mstatus::SPP;
+            }
+            if st & mstatus::SIE != 0 {
+                st |= mstatus::SPIE;
+            }
+            st &= !mstatus::SIE;
+            c.vsstatus = st;
+            c.vsepc = hart.pc;
+            c.vscause = cause;
+            c.vstval = tval;
+            hart.virt = true;
+            hart.prv = PrivLevel::Supervisor;
+            hart.pc = vector(c.vstvec, is_interrupt, code);
+        }
+    }
+}
+
+fn vector(tvec: u64, is_interrupt: bool, code: u64) -> u64 {
+    let base = tvec & !3;
+    if is_interrupt && tvec & 1 == 1 {
+        base + 4 * code
+    } else {
+        base
+    }
+}
+
+/// MRET: return from an M-mode trap handler. Restores (prv, V) from
+/// (MPP, MPV) per the H-extension rules.
+pub fn mret(hart: &mut Hart) {
+    let c = &mut hart.csr;
+    let st = c.mstatus;
+    let mpp = PrivLevel::from_bits((st & mstatus::MPP_MASK) >> mstatus::MPP_SHIFT);
+    let mpv = st & mstatus::MPV != 0;
+    let mut new = st;
+    // MIE ← MPIE, MPIE ← 1, MPP ← U, MPV ← 0; MPRV cleared when leaving M.
+    new &= !mstatus::MIE;
+    if st & mstatus::MPIE != 0 {
+        new |= mstatus::MIE;
+    }
+    new |= mstatus::MPIE;
+    new &= !(mstatus::MPP_MASK | mstatus::MPV);
+    if mpp != PrivLevel::Machine {
+        new &= !mstatus::MPRV;
+    }
+    c.mstatus = new;
+    hart.prv = mpp;
+    hart.virt = c.h_enabled && mpv && mpp != PrivLevel::Machine;
+    hart.pc = c.mepc;
+}
+
+/// SRET executed with V=0 (HS mode): restores V from hstatus.SPV.
+pub fn sret_hs(hart: &mut Hart) {
+    let c = &mut hart.csr;
+    let st = c.mstatus;
+    let spp = if st & mstatus::SPP != 0 { PrivLevel::Supervisor } else { PrivLevel::User };
+    let spv = c.hstatus & hstatus::SPV != 0;
+    let mut new = st;
+    new &= !mstatus::SIE;
+    if st & mstatus::SPIE != 0 {
+        new |= mstatus::SIE;
+    }
+    new |= mstatus::SPIE;
+    new &= !mstatus::SPP;
+    if spp != PrivLevel::Machine {
+        new &= !mstatus::MPRV;
+    }
+    c.mstatus = new;
+    c.hstatus &= !hstatus::SPV;
+    hart.prv = if c.h_enabled && spv {
+        // Returning into the guest: privilege comes from hstatus.SPVP.
+        if c.hstatus & hstatus::SPVP != 0 {
+            PrivLevel::Supervisor
+        } else {
+            PrivLevel::User
+        }
+    } else {
+        spp
+    };
+    hart.virt = c.h_enabled && spv;
+    hart.pc = c.sepc;
+}
+
+/// SRET executed with V=1 (VS mode): uses the vsstatus bank, stays V=1.
+pub fn sret_vs(hart: &mut Hart) {
+    let c = &mut hart.csr;
+    let st = c.vsstatus;
+    let spp = if st & mstatus::SPP != 0 { PrivLevel::Supervisor } else { PrivLevel::User };
+    let mut new = st;
+    new &= !mstatus::SIE;
+    if st & mstatus::SPIE != 0 {
+        new |= mstatus::SIE;
+    }
+    new |= mstatus::SPIE;
+    new &= !mstatus::SPP;
+    c.vsstatus = new;
+    hart.prv = spp;
+    hart.virt = true;
+    hart.pc = c.vsepc;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::isa::ExceptionCause;
+
+    fn hart_at(prv: PrivLevel, virt: bool) -> Hart {
+        let mut h = Hart::new(true);
+        h.prv = prv;
+        h.virt = virt;
+        h.pc = 0x8000_1000;
+        h.csr.mtvec = 0x8000_0100;
+        h.csr.stvec = 0x8000_0200;
+        h.csr.vstvec = 0x8000_0300;
+        h
+    }
+
+    #[test]
+    fn undelegated_exception_goes_to_m() {
+        let mut h = hart_at(PrivLevel::Supervisor, false);
+        let t = take_exception(&mut h, &Exception::new(ExceptionCause::IllegalInst, 0xbad));
+        assert_eq!(t, TrapTarget::M);
+        assert_eq!(h.prv, PrivLevel::Machine);
+        assert_eq!(h.pc, 0x8000_0100);
+        assert_eq!(h.csr.mcause, 2);
+        assert_eq!(h.csr.mtval, 0xbad);
+        assert_eq!(h.csr.mepc, 0x8000_1000);
+        // MPP records S.
+        assert_eq!((h.csr.mstatus & mstatus::MPP_MASK) >> mstatus::MPP_SHIFT, 1);
+        assert_eq!(h.csr.mstatus & mstatus::MPV, 0);
+    }
+
+    #[test]
+    fn medeleg_sends_to_hs_and_hedeleg_to_vs() {
+        // Page fault from VS with medeleg set but hedeleg clear → HS.
+        let mut h = hart_at(PrivLevel::Supervisor, true);
+        h.csr.medeleg = 1 << 13;
+        let t = take_exception(&mut h, &Exception::new(ExceptionCause::LoadPageFault, 0x42));
+        assert_eq!(t, TrapTarget::HS);
+        assert!(!h.virt, "trap to HS clears V");
+        assert_eq!(h.csr.scause, 13);
+        assert_ne!(h.csr.hstatus & hstatus::SPV, 0, "SPV records V=1");
+        assert_ne!(h.csr.hstatus & hstatus::SPVP, 0, "SPVP records VS");
+
+        // Same but hedeleg set → VS, V stays 1.
+        let mut h = hart_at(PrivLevel::Supervisor, true);
+        h.csr.medeleg = 1 << 13;
+        h.csr.hedeleg = 1 << 13;
+        let t = take_exception(&mut h, &Exception::new(ExceptionCause::LoadPageFault, 0x42));
+        assert_eq!(t, TrapTarget::VS);
+        assert!(h.virt);
+        assert_eq!(h.csr.vscause, 13);
+        assert_eq!(h.csr.vstval, 0x42);
+        assert_eq!(h.pc, 0x8000_0300);
+    }
+
+    #[test]
+    fn hedeleg_ignored_when_not_virtualized() {
+        let mut h = hart_at(PrivLevel::Supervisor, false);
+        h.csr.medeleg = 1 << 13;
+        h.csr.hedeleg = 1 << 13;
+        let t = take_exception(&mut h, &Exception::new(ExceptionCause::LoadPageFault, 0x42));
+        assert_eq!(t, TrapTarget::HS, "hedeleg only applies when V=1");
+    }
+
+    #[test]
+    fn guest_page_fault_writes_htval_or_mtval2_shifted() {
+        // Handled at HS: htval = gpa >> 2 (paper Table 1).
+        let mut h = hart_at(PrivLevel::Supervisor, true);
+        h.csr.medeleg = 1 << ExceptionCause::LoadGuestPageFault.code();
+        let exc = Exception::new(ExceptionCause::LoadGuestPageFault, 0x5000)
+            .with_gpa(0x9_2000)
+            .with_gva(true)
+            .with_tinst(0x3020_3083);
+        let t = take_exception(&mut h, &exc);
+        assert_eq!(t, TrapTarget::HS);
+        assert_eq!(h.csr.htval, 0x9_2000 >> 2);
+        assert_eq!(h.csr.htinst, 0x3020_3083);
+        assert_ne!(h.csr.hstatus & hstatus::GVA, 0);
+
+        // Handled at M: mtval2 (paper Table 1).
+        let mut h = hart_at(PrivLevel::Supervisor, true);
+        let t = take_exception(&mut h, &exc);
+        assert_eq!(t, TrapTarget::M);
+        assert_eq!(h.csr.mtval2, 0x9_2000 >> 2);
+        assert_eq!(h.csr.mtinst, 0x3020_3083);
+        assert_ne!(h.csr.mstatus & mstatus::GVA, 0);
+        assert_ne!(h.csr.mstatus & mstatus::MPV, 0);
+    }
+
+    #[test]
+    fn interrupt_cause_translated_for_vs() {
+        let mut h = hart_at(PrivLevel::Supervisor, true);
+        take_interrupt(&mut h, InterruptCause::VirtualSupervisorTimer, TrapTarget::VS);
+        assert_eq!(h.csr.vscause, 5 | CAUSE_INTERRUPT_BIT, "VSTI presented as STI in VS");
+        assert!(h.virt);
+        let mut h = hart_at(PrivLevel::Supervisor, true);
+        take_interrupt(&mut h, InterruptCause::VirtualSupervisorTimer, TrapTarget::HS);
+        assert_eq!(h.csr.scause, 6 | CAUSE_INTERRUPT_BIT, "VSTI keeps code 6 at HS");
+    }
+
+    #[test]
+    fn vectored_interrupt_dispatch() {
+        let mut h = hart_at(PrivLevel::Supervisor, false);
+        h.csr.mtvec = 0x8000_0100 | 1; // vectored
+        take_interrupt(&mut h, InterruptCause::MachineTimer, TrapTarget::M);
+        assert_eq!(h.pc, 0x8000_0100 + 4 * 7);
+    }
+
+    #[test]
+    fn mret_restores_virtualization() {
+        let mut h = hart_at(PrivLevel::Machine, false);
+        h.csr.mepc = 0x9000_0000;
+        h.csr.mstatus |= (1 << mstatus::MPP_SHIFT) | mstatus::MPV | mstatus::MPIE;
+        mret(&mut h);
+        assert_eq!(h.prv, PrivLevel::Supervisor);
+        assert!(h.virt, "MPV=1, MPP=S → VS mode");
+        assert_eq!(h.pc, 0x9000_0000);
+        assert_ne!(h.csr.mstatus & mstatus::MIE, 0, "MIE ← MPIE");
+        assert_eq!(h.csr.mstatus & mstatus::MPV, 0, "MPV cleared");
+    }
+
+    #[test]
+    fn mret_to_machine_ignores_mpv() {
+        let mut h = hart_at(PrivLevel::Machine, false);
+        h.csr.mstatus |= (3 << mstatus::MPP_SHIFT) | mstatus::MPV;
+        mret(&mut h);
+        assert_eq!(h.prv, PrivLevel::Machine);
+        assert!(!h.virt);
+    }
+
+    #[test]
+    fn sret_hs_enters_guest() {
+        let mut h = hart_at(PrivLevel::Supervisor, false);
+        h.csr.sepc = 0x1000;
+        h.csr.hstatus |= hstatus::SPV | hstatus::SPVP;
+        h.csr.mstatus |= mstatus::SPP | mstatus::SPIE;
+        sret_hs(&mut h);
+        assert!(h.virt, "SPV=1 → enter guest");
+        assert_eq!(h.prv, PrivLevel::Supervisor, "SPVP=1 → VS");
+        assert_eq!(h.pc, 0x1000);
+        assert_eq!(h.csr.hstatus & hstatus::SPV, 0);
+    }
+
+    #[test]
+    fn sret_vs_stays_virtualized() {
+        let mut h = hart_at(PrivLevel::Supervisor, true);
+        h.csr.vsepc = 0x2000;
+        h.csr.vsstatus |= mstatus::SPP | mstatus::SPIE;
+        sret_vs(&mut h);
+        assert!(h.virt);
+        assert_eq!(h.prv, PrivLevel::Supervisor);
+        assert_eq!(h.pc, 0x2000);
+        assert_ne!(h.csr.vsstatus & mstatus::SIE, 0, "SIE ← SPIE in vsstatus bank");
+    }
+
+    #[test]
+    fn trap_to_hs_from_u_clears_spvp_path() {
+        // From VU: SPVP must record U.
+        let mut h = hart_at(PrivLevel::User, true);
+        h.csr.medeleg = 1 << 8;
+        let t = take_exception(&mut h, &Exception::new(ExceptionCause::EcallFromU, 0));
+        assert_eq!(t, TrapTarget::HS);
+        assert_ne!(h.csr.hstatus & hstatus::SPV, 0);
+        assert_eq!(h.csr.hstatus & hstatus::SPVP, 0, "SPVP=U");
+        assert_eq!(h.csr.mstatus & mstatus::SPP, 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Platform devices: CLINT (timer + software interrupts), a UART console,
+//! and a minimal PLIC. These are the substrate the guest software stack
+//! needs (the paper's §3.5 device-tree discussion maps to this fixed
+//! Spike-like platform layout).
+
+mod clint;
+mod plic;
+mod uart;
+
+pub use clint::Clint;
+pub use plic::Plic;
+pub use uart::Uart;

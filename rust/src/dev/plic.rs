@@ -1,0 +1,184 @@
+//! Minimal PLIC: enough surface for software to program priorities/enables
+//! and for tests to raise external interrupt lines (mip.MEIP / mip.SEIP).
+//! Context 0 = M-mode, context 1 = S-mode, as in the virt platform.
+
+const NSRC: usize = 32;
+
+const PRIORITY_BASE: u64 = 0x0;
+const PENDING_BASE: u64 = 0x1000;
+const ENABLE_BASE: u64 = 0x2000;
+const ENABLE_STRIDE: u64 = 0x80;
+const CONTEXT_BASE: u64 = 0x20_0000;
+const CONTEXT_STRIDE: u64 = 0x1000;
+
+#[derive(Clone, Debug)]
+pub struct Plic {
+    pub priority: [u32; NSRC],
+    pub pending: u32,
+    /// enable[context]
+    pub enable: [u32; 2],
+    pub threshold: [u32; 2],
+    /// claimed-but-not-completed per context
+    claimed: [u32; 2],
+}
+
+impl Plic {
+    pub fn new() -> Plic {
+        Plic { priority: [0; NSRC], pending: 0, enable: [0; 2], threshold: [0; 2], claimed: [0; 2] }
+    }
+
+    /// Raise an interrupt source line (device side / test harness).
+    pub fn raise(&mut self, src: u32) {
+        if (src as usize) < NSRC && src != 0 {
+            self.pending |= 1 << src;
+        }
+    }
+
+    /// Highest-priority pending+enabled source for a context, above its
+    /// threshold.
+    fn best(&self, ctx: usize) -> u32 {
+        let mut best_src = 0;
+        let mut best_prio = self.threshold[ctx];
+        let avail = self.pending & self.enable[ctx] & !self.claimed[ctx];
+        for s in 1..NSRC as u32 {
+            if avail & (1 << s) != 0 && self.priority[s as usize] > best_prio {
+                best_prio = self.priority[s as usize];
+                best_src = s;
+            }
+        }
+        best_src
+    }
+
+    /// External-interrupt line levels: (MEIP, SEIP).
+    pub fn irq_lines(&self) -> (bool, bool) {
+        (self.best(0) != 0, self.best(1) != 0)
+    }
+
+    pub fn read(&self, off: u64) -> u64 {
+        match off {
+            o if o >= CONTEXT_BASE => {
+                let ctx = ((o - CONTEXT_BASE) / CONTEXT_STRIDE) as usize;
+                let reg = (o - CONTEXT_BASE) % CONTEXT_STRIDE;
+                if ctx >= 2 {
+                    return 0;
+                }
+                match reg {
+                    0 => self.threshold[ctx] as u64,
+                    4 => {
+                        // claim — side-effect-free here; the write path
+                        // performs the actual claim (simplification: our
+                        // software claims via read then completes via
+                        // write, and we latch on read in read_mut below).
+                        self.best(ctx) as u64
+                    }
+                    _ => 0,
+                }
+            }
+            o if o >= ENABLE_BASE && o < CONTEXT_BASE => {
+                let ctx = ((o - ENABLE_BASE) / ENABLE_STRIDE) as usize;
+                if ctx < 2 {
+                    self.enable[ctx] as u64
+                } else {
+                    0
+                }
+            }
+            o if o >= PENDING_BASE && o < ENABLE_BASE => self.pending as u64,
+            o => {
+                let src = (o - PRIORITY_BASE) / 4;
+                if (src as usize) < NSRC {
+                    self.priority[src as usize] as u64
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    /// Claim with side effect (used by the bus on claim-register reads is
+    /// avoided for simplicity; software uses this via an explicit claim).
+    pub fn claim(&mut self, ctx: usize) -> u32 {
+        let src = self.best(ctx);
+        if src != 0 {
+            self.claimed[ctx] |= 1 << src;
+            self.pending &= !(1 << src);
+        }
+        src
+    }
+
+    pub fn write(&mut self, off: u64, val: u64) {
+        match off {
+            o if o >= CONTEXT_BASE => {
+                let ctx = ((o - CONTEXT_BASE) / CONTEXT_STRIDE) as usize;
+                let reg = (o - CONTEXT_BASE) % CONTEXT_STRIDE;
+                if ctx >= 2 {
+                    return;
+                }
+                match reg {
+                    0 => self.threshold[ctx] = val as u32,
+                    4 => {
+                        // complete
+                        self.claimed[ctx] &= !(1u32 << (val as u32 & 31));
+                    }
+                    _ => {}
+                }
+            }
+            o if o >= ENABLE_BASE && o < CONTEXT_BASE => {
+                let ctx = ((o - ENABLE_BASE) / ENABLE_STRIDE) as usize;
+                if ctx < 2 {
+                    self.enable[ctx] = val as u32;
+                }
+            }
+            o if o < PENDING_BASE => {
+                let src = o / 4;
+                if (src as usize) < NSRC {
+                    self.priority[src as usize] = val as u32;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+impl Default for Plic {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raise_enable_claim_complete() {
+        let mut p = Plic::new();
+        p.write(4 * 5, 3); // priority[5] = 3
+        p.raise(5);
+        assert_eq!(p.irq_lines(), (false, false), "not enabled yet");
+        p.write(ENABLE_BASE, 1 << 5); // M context enable
+        assert_eq!(p.irq_lines(), (true, false));
+        let src = p.claim(0);
+        assert_eq!(src, 5);
+        assert_eq!(p.irq_lines(), (false, false), "claimed clears pending");
+        p.write(CONTEXT_BASE + 4, 5); // complete
+        assert_eq!(p.claimed[0], 0);
+    }
+
+    #[test]
+    fn threshold_masks() {
+        let mut p = Plic::new();
+        p.write(4 * 3, 1);
+        p.raise(3);
+        p.write(ENABLE_BASE + ENABLE_STRIDE, 1 << 3); // S context
+        assert_eq!(p.irq_lines(), (false, true));
+        p.write(CONTEXT_BASE + CONTEXT_STRIDE, 5); // S threshold = 5 > prio 1
+        assert_eq!(p.irq_lines(), (false, false));
+    }
+
+    #[test]
+    fn source_zero_never_raises() {
+        let mut p = Plic::new();
+        p.raise(0);
+        assert_eq!(p.pending, 0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Minimal 8250-style UART: transmit-only console with an optional capture
+//! buffer (tests and the sweep harness read the captured output instead of
+//! the host terminal).
+
+const THR: u64 = 0; // transmit holding register (write) / RBR (read)
+const LSR: u64 = 5; // line status register
+
+/// LSR: transmitter empty + THR empty — always ready.
+const LSR_READY: u64 = 0x60;
+
+#[derive(Clone, Debug)]
+pub struct Uart {
+    /// Captured output (always recorded).
+    pub output: Vec<u8>,
+    /// Mirror writes to the host stdout.
+    pub echo: bool,
+}
+
+impl Uart {
+    pub fn new() -> Uart {
+        Uart { output: Vec::new(), echo: false }
+    }
+
+    pub fn read(&self, off: u64) -> u64 {
+        match off {
+            LSR => LSR_READY,
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, off: u64, byte: u8) {
+        if off == THR {
+            self.output.push(byte);
+            if self.echo {
+                use std::io::Write;
+                let _ = std::io::stdout().write_all(&[byte]);
+                if byte == b'\n' {
+                    let _ = std::io::stdout().flush();
+                }
+            }
+        }
+    }
+
+    /// Captured output as a lossy string.
+    pub fn output_string(&self) -> String {
+        String::from_utf8_lossy(&self.output).into_owned()
+    }
+}
+
+impl Default for Uart {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn captures_output() {
+        let mut u = Uart::new();
+        for b in b"hi\n" {
+            u.write(THR, *b);
+        }
+        assert_eq!(u.output_string(), "hi\n");
+    }
+
+    #[test]
+    fn lsr_always_ready() {
+        let u = Uart::new();
+        assert_eq!(u.read(LSR) & 0x20, 0x20);
+    }
+}

@@ -1,0 +1,376 @@
+//! CSR address map and bit-field definitions, including every hypervisor CSR
+//! from Table 1 of the paper.
+
+// ---- Unprivileged ----
+pub const CSR_FFLAGS: u16 = 0x001;
+pub const CSR_FRM: u16 = 0x002;
+pub const CSR_FCSR: u16 = 0x003;
+pub const CSR_CYCLE: u16 = 0xC00;
+pub const CSR_TIME: u16 = 0xC01;
+pub const CSR_INSTRET: u16 = 0xC02;
+
+// ---- Supervisor ----
+pub const CSR_SSTATUS: u16 = 0x100;
+pub const CSR_SIE: u16 = 0x104;
+pub const CSR_STVEC: u16 = 0x105;
+pub const CSR_SCOUNTEREN: u16 = 0x106;
+pub const CSR_SENVCFG: u16 = 0x10A;
+pub const CSR_SSCRATCH: u16 = 0x140;
+pub const CSR_SEPC: u16 = 0x141;
+pub const CSR_SCAUSE: u16 = 0x142;
+pub const CSR_STVAL: u16 = 0x143;
+pub const CSR_SIP: u16 = 0x144;
+pub const CSR_SATP: u16 = 0x180;
+
+// ---- Hypervisor (Table 1) ----
+pub const CSR_HSTATUS: u16 = 0x600;
+pub const CSR_HEDELEG: u16 = 0x602;
+pub const CSR_HIDELEG: u16 = 0x603;
+pub const CSR_HIE: u16 = 0x604;
+pub const CSR_HTIMEDELTA: u16 = 0x605;
+pub const CSR_HCOUNTEREN: u16 = 0x606;
+pub const CSR_HGEIE: u16 = 0x607;
+pub const CSR_HENVCFG: u16 = 0x60A;
+pub const CSR_HTVAL: u16 = 0x643;
+pub const CSR_HIP: u16 = 0x644;
+pub const CSR_HVIP: u16 = 0x645;
+pub const CSR_HTINST: u16 = 0x64A;
+pub const CSR_HGATP: u16 = 0x680;
+pub const CSR_HGEIP: u16 = 0xE12;
+
+// ---- Virtual supervisor (Table 1: "used in place of the supervisor CSRs
+// when virtualization mode is enabled") ----
+pub const CSR_VSSTATUS: u16 = 0x200;
+pub const CSR_VSIE: u16 = 0x204;
+pub const CSR_VSTVEC: u16 = 0x205;
+pub const CSR_VSSCRATCH: u16 = 0x240;
+pub const CSR_VSEPC: u16 = 0x241;
+pub const CSR_VSCAUSE: u16 = 0x242;
+pub const CSR_VSTVAL: u16 = 0x243;
+pub const CSR_VSIP: u16 = 0x244;
+pub const CSR_VSATP: u16 = 0x280;
+
+// ---- Machine ----
+pub const CSR_MVENDORID: u16 = 0xF11;
+pub const CSR_MARCHID: u16 = 0xF12;
+pub const CSR_MIMPID: u16 = 0xF13;
+pub const CSR_MHARTID: u16 = 0xF14;
+pub const CSR_MSTATUS: u16 = 0x300;
+pub const CSR_MISA: u16 = 0x301;
+pub const CSR_MEDELEG: u16 = 0x302;
+pub const CSR_MIDELEG: u16 = 0x303;
+pub const CSR_MIE: u16 = 0x304;
+pub const CSR_MTVEC: u16 = 0x305;
+pub const CSR_MCOUNTEREN: u16 = 0x306;
+pub const CSR_MENVCFG: u16 = 0x30A;
+pub const CSR_MSCRATCH: u16 = 0x340;
+pub const CSR_MEPC: u16 = 0x341;
+pub const CSR_MCAUSE: u16 = 0x342;
+pub const CSR_MTVAL: u16 = 0x343;
+pub const CSR_MIP: u16 = 0x344;
+pub const CSR_MTINST: u16 = 0x34A;
+pub const CSR_MTVAL2: u16 = 0x34B;
+pub const CSR_MCYCLE: u16 = 0xB00;
+pub const CSR_MINSTRET: u16 = 0xB02;
+
+/// Lowest privilege that may access a CSR is encoded in address bits 9:8.
+pub fn csr_min_priv_bits(addr: u16) -> u64 {
+    ((addr >> 8) & 3) as u64
+}
+
+/// CSR address bits 11:10 == 0b11 means read-only.
+pub fn csr_is_read_only(addr: u16) -> bool {
+    (addr >> 10) & 3 == 3
+}
+
+// ---- mstatus fields ----
+pub mod mstatus {
+    pub const SIE: u64 = 1 << 1;
+    pub const MIE: u64 = 1 << 3;
+    pub const SPIE: u64 = 1 << 5;
+    pub const UBE: u64 = 1 << 6;
+    pub const MPIE: u64 = 1 << 7;
+    pub const SPP: u64 = 1 << 8;
+    pub const MPP_SHIFT: u64 = 11;
+    pub const MPP_MASK: u64 = 3 << 11;
+    pub const FS_SHIFT: u64 = 13;
+    pub const FS_MASK: u64 = 3 << 13;
+    pub const MPRV: u64 = 1 << 17;
+    pub const SUM: u64 = 1 << 18;
+    pub const MXR: u64 = 1 << 19;
+    pub const TVM: u64 = 1 << 20;
+    pub const TW: u64 = 1 << 21;
+    pub const TSR: u64 = 1 << 22;
+    /// H extension (paper Table 1): previous virtualization mode.
+    pub const MPV: u64 = 1 << 39;
+    /// H extension (paper Table 1): trap value is a guest virtual address.
+    pub const GVA: u64 = 1 << 38;
+    pub const SD: u64 = 1 << 63;
+
+    pub const FS_OFF: u64 = 0;
+    pub const FS_INITIAL: u64 = 1 << FS_SHIFT;
+    pub const FS_CLEAN: u64 = 2 << FS_SHIFT;
+    pub const FS_DIRTY: u64 = 3 << FS_SHIFT;
+}
+
+// ---- hstatus fields (Table 1: "manages the exception handling behavior of
+// a VS mode guest") ----
+pub mod hstatus {
+    /// VS-mode big-endian (always 0 here).
+    pub const VSBE: u64 = 1 << 5;
+    /// Guest virtual address (set by trap unit alongside mstatus.GVA).
+    pub const GVA: u64 = 1 << 6;
+    /// Supervisor previous virtualization mode: V-bit before trap to HS.
+    pub const SPV: u64 = 1 << 7;
+    /// Supervisor previous privilege (valid when SPV=1): priv before trap,
+    /// as a 1-bit S/U encoding.
+    pub const SPVP: u64 = 1 << 8;
+    /// Hypervisor user mode: HLV/HSV usable from U-mode.
+    pub const HU: u64 = 1 << 9;
+    /// Virtual guest external interrupt number.
+    pub const VGEIN_SHIFT: u64 = 12;
+    pub const VGEIN_MASK: u64 = 0x3f << 12;
+    /// Trap virtual memory (VS-mode satp/sfence trap to HS).
+    pub const VTVM: u64 = 1 << 20;
+    /// Timeout wait for VS-mode wfi.
+    pub const VTW: u64 = 1 << 21;
+    /// Trap sret from VS mode.
+    pub const VTSR: u64 = 1 << 22;
+    /// VS-mode XLEN (fixed 2 = 64-bit).
+    pub const VSXL_SHIFT: u64 = 32;
+    pub const VSXL_MASK: u64 = 3 << 32;
+}
+
+// ---- satp/vsatp/hgatp ----
+pub mod atp {
+    pub const MODE_SHIFT: u64 = 60;
+    pub const MODE_BARE: u64 = 0;
+    pub const MODE_SV39: u64 = 8;
+    /// hgatp-only mode value: Sv39x4 (guest physical address widened by
+    /// 2 bits; paper §3.3).
+    pub const MODE_SV39X4: u64 = 8;
+    pub const ASID_SHIFT: u64 = 44;
+    pub const ASID_MASK: u64 = 0xffff << 44;
+    /// hgatp calls this field VMID; 14 bits.
+    pub const VMID_SHIFT: u64 = 44;
+    pub const VMID_MASK: u64 = 0x3fff << 44;
+    pub const PPN_MASK: u64 = (1 << 44) - 1;
+
+    pub fn mode(v: u64) -> u64 {
+        v >> MODE_SHIFT
+    }
+    pub fn ppn(v: u64) -> u64 {
+        v & PPN_MASK
+    }
+    pub fn asid(v: u64) -> u64 {
+        (v & ASID_MASK) >> ASID_SHIFT
+    }
+    pub fn vmid(v: u64) -> u64 {
+        (v & VMID_MASK) >> VMID_SHIFT
+    }
+}
+
+/// Interrupt-bit masks shared by mip/mie/mideleg/hip/hie/hvip/hideleg.
+pub mod irq {
+    pub const SSIP: u64 = 1 << 1;
+    pub const VSSIP: u64 = 1 << 2;
+    pub const MSIP: u64 = 1 << 3;
+    pub const STIP: u64 = 1 << 5;
+    pub const VSTIP: u64 = 1 << 6;
+    pub const MTIP: u64 = 1 << 7;
+    pub const SEIP: u64 = 1 << 9;
+    pub const VSEIP: u64 = 1 << 10;
+    pub const MEIP: u64 = 1 << 11;
+    pub const SGEIP: u64 = 1 << 12;
+
+    /// The VS-level interrupts, delegated read-only in mideleg when H is
+    /// present (paper Table 1: "New read-only 1-bit fields for VS and guest
+    /// external interrupts ... now handled by HS mode").
+    pub const VS_MASK: u64 = VSSIP | VSTIP | VSEIP;
+    pub const HS_MASK: u64 = VS_MASK | SGEIP;
+    pub const S_MASK: u64 = SSIP | STIP | SEIP;
+    pub const M_MASK: u64 = MSIP | MTIP | MEIP;
+}
+
+/// Canonical name for a CSR address (diagnostics, stats, the assembler and
+/// disassembler share this table).
+pub fn csr_name(addr: u16) -> &'static str {
+    match addr {
+        CSR_FFLAGS => "fflags",
+        CSR_FRM => "frm",
+        CSR_FCSR => "fcsr",
+        CSR_CYCLE => "cycle",
+        CSR_TIME => "time",
+        CSR_INSTRET => "instret",
+        CSR_SSTATUS => "sstatus",
+        CSR_SIE => "sie",
+        CSR_STVEC => "stvec",
+        CSR_SCOUNTEREN => "scounteren",
+        CSR_SENVCFG => "senvcfg",
+        CSR_SSCRATCH => "sscratch",
+        CSR_SEPC => "sepc",
+        CSR_SCAUSE => "scause",
+        CSR_STVAL => "stval",
+        CSR_SIP => "sip",
+        CSR_SATP => "satp",
+        CSR_HSTATUS => "hstatus",
+        CSR_HEDELEG => "hedeleg",
+        CSR_HIDELEG => "hideleg",
+        CSR_HIE => "hie",
+        CSR_HTIMEDELTA => "htimedelta",
+        CSR_HCOUNTEREN => "hcounteren",
+        CSR_HGEIE => "hgeie",
+        CSR_HENVCFG => "henvcfg",
+        CSR_HTVAL => "htval",
+        CSR_HIP => "hip",
+        CSR_HVIP => "hvip",
+        CSR_HTINST => "htinst",
+        CSR_HGATP => "hgatp",
+        CSR_HGEIP => "hgeip",
+        CSR_VSSTATUS => "vsstatus",
+        CSR_VSIE => "vsie",
+        CSR_VSTVEC => "vstvec",
+        CSR_VSSCRATCH => "vsscratch",
+        CSR_VSEPC => "vsepc",
+        CSR_VSCAUSE => "vscause",
+        CSR_VSTVAL => "vstval",
+        CSR_VSIP => "vsip",
+        CSR_VSATP => "vsatp",
+        CSR_MVENDORID => "mvendorid",
+        CSR_MARCHID => "marchid",
+        CSR_MIMPID => "mimpid",
+        CSR_MHARTID => "mhartid",
+        CSR_MSTATUS => "mstatus",
+        CSR_MISA => "misa",
+        CSR_MEDELEG => "medeleg",
+        CSR_MIDELEG => "mideleg",
+        CSR_MIE => "mie",
+        CSR_MTVEC => "mtvec",
+        CSR_MCOUNTEREN => "mcounteren",
+        CSR_MENVCFG => "menvcfg",
+        CSR_MSCRATCH => "mscratch",
+        CSR_MEPC => "mepc",
+        CSR_MCAUSE => "mcause",
+        CSR_MTVAL => "mtval",
+        CSR_MIP => "mip",
+        CSR_MTINST => "mtinst",
+        CSR_MTVAL2 => "mtval2",
+        CSR_MCYCLE => "mcycle",
+        CSR_MINSTRET => "minstret",
+        _ => "csr?",
+    }
+}
+
+/// Reverse lookup used by the assembler: name → CSR address.
+pub fn csr_addr_by_name(name: &str) -> Option<u16> {
+    Some(match name {
+        "fflags" => CSR_FFLAGS,
+        "frm" => CSR_FRM,
+        "fcsr" => CSR_FCSR,
+        "cycle" => CSR_CYCLE,
+        "time" => CSR_TIME,
+        "instret" => CSR_INSTRET,
+        "sstatus" => CSR_SSTATUS,
+        "sie" => CSR_SIE,
+        "stvec" => CSR_STVEC,
+        "scounteren" => CSR_SCOUNTEREN,
+        "senvcfg" => CSR_SENVCFG,
+        "sscratch" => CSR_SSCRATCH,
+        "sepc" => CSR_SEPC,
+        "scause" => CSR_SCAUSE,
+        "stval" => CSR_STVAL,
+        "sip" => CSR_SIP,
+        "satp" => CSR_SATP,
+        "hstatus" => CSR_HSTATUS,
+        "hedeleg" => CSR_HEDELEG,
+        "hideleg" => CSR_HIDELEG,
+        "hie" => CSR_HIE,
+        "htimedelta" => CSR_HTIMEDELTA,
+        "hcounteren" => CSR_HCOUNTEREN,
+        "hgeie" => CSR_HGEIE,
+        "henvcfg" => CSR_HENVCFG,
+        "htval" => CSR_HTVAL,
+        "hip" => CSR_HIP,
+        "hvip" => CSR_HVIP,
+        "htinst" => CSR_HTINST,
+        "hgatp" => CSR_HGATP,
+        "hgeip" => CSR_HGEIP,
+        "vsstatus" => CSR_VSSTATUS,
+        "vsie" => CSR_VSIE,
+        "vstvec" => CSR_VSTVEC,
+        "vsscratch" => CSR_VSSCRATCH,
+        "vsepc" => CSR_VSEPC,
+        "vscause" => CSR_VSCAUSE,
+        "vstval" => CSR_VSTVAL,
+        "vsip" => CSR_VSIP,
+        "vsatp" => CSR_VSATP,
+        "mvendorid" => CSR_MVENDORID,
+        "marchid" => CSR_MARCHID,
+        "mimpid" => CSR_MIMPID,
+        "mhartid" => CSR_MHARTID,
+        "mstatus" => CSR_MSTATUS,
+        "misa" => CSR_MISA,
+        "medeleg" => CSR_MEDELEG,
+        "mideleg" => CSR_MIDELEG,
+        "mie" => CSR_MIE,
+        "mtvec" => CSR_MTVEC,
+        "mcounteren" => CSR_MCOUNTEREN,
+        "menvcfg" => CSR_MENVCFG,
+        "mscratch" => CSR_MSCRATCH,
+        "mepc" => CSR_MEPC,
+        "mcause" => CSR_MCAUSE,
+        "mtval" => CSR_MTVAL,
+        "mip" => CSR_MIP,
+        "mtinst" => CSR_MTINST,
+        "mtval2" => CSR_MTVAL2,
+        "mcycle" => CSR_MCYCLE,
+        "minstret" => CSR_MINSTRET,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_csrs_all_named() {
+        // Every CSR the paper's Table 1 lists must resolve by name.
+        for n in [
+            "mstatus", "hstatus", "mideleg", "hideleg", "hedeleg", "mip", "mie", "hvip", "hip",
+            "hie", "hgeip", "hgeie", "hcounteren", "htval", "mtval2", "hgatp", "vsstatus", "vsip",
+            "vsie", "vstvec", "vsscratch", "vsepc", "vscause", "vstval", "vsatp", "htinst",
+        ] {
+            let addr = csr_addr_by_name(n).unwrap_or_else(|| panic!("missing CSR {n}"));
+            assert_eq!(csr_name(addr), n);
+        }
+    }
+
+    #[test]
+    fn priv_and_ro_encoding() {
+        assert_eq!(csr_min_priv_bits(CSR_MSTATUS), 3);
+        assert_eq!(csr_min_priv_bits(CSR_HSTATUS), 2);
+        assert_eq!(csr_min_priv_bits(CSR_SSTATUS), 1);
+        assert_eq!(csr_min_priv_bits(CSR_CYCLE), 0);
+        assert!(csr_is_read_only(CSR_MVENDORID));
+        assert!(csr_is_read_only(CSR_HGEIP));
+        assert!(csr_is_read_only(CSR_CYCLE));
+        assert!(!csr_is_read_only(CSR_MSTATUS));
+    }
+
+    #[test]
+    fn irq_masks_disjoint() {
+        assert_eq!(irq::VS_MASK & irq::S_MASK, 0);
+        assert_eq!(irq::VS_MASK & irq::M_MASK, 0);
+        assert_eq!(irq::S_MASK & irq::M_MASK, 0);
+        assert_eq!(irq::VS_MASK, 0b0100_0100_0100);
+    }
+
+    #[test]
+    fn atp_field_extraction() {
+        let v = (atp::MODE_SV39 << atp::MODE_SHIFT) | (42 << atp::ASID_SHIFT) | 0x8_0000;
+        assert_eq!(atp::mode(v), 8);
+        assert_eq!(atp::asid(v), 42);
+        assert_eq!(atp::ppn(v), 0x8_0000);
+    }
+}

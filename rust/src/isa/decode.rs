@@ -1,0 +1,459 @@
+//! RV64 instruction decoder (the analog of gem5's `decoder.isa` for the
+//! subset this simulator implements, including the H-extension opcodes the
+//! paper adds in §3.3).
+
+use super::inst::{Inst, Op};
+
+#[inline]
+fn rd(raw: u32) -> u8 {
+    ((raw >> 7) & 0x1f) as u8
+}
+#[inline]
+fn rs1(raw: u32) -> u8 {
+    ((raw >> 15) & 0x1f) as u8
+}
+#[inline]
+fn rs2(raw: u32) -> u8 {
+    ((raw >> 20) & 0x1f) as u8
+}
+#[inline]
+fn funct3(raw: u32) -> u32 {
+    (raw >> 12) & 7
+}
+#[inline]
+fn funct7(raw: u32) -> u32 {
+    raw >> 25
+}
+
+#[inline]
+fn imm_i(raw: u32) -> i64 {
+    (raw as i32 >> 20) as i64
+}
+#[inline]
+fn imm_s_signed(raw: u32) -> i64 {
+    let v = (((raw >> 25) & 0x7f) << 5) | ((raw >> 7) & 0x1f);
+    ((v as i32) << 20 >> 20) as i64
+}
+#[inline]
+fn imm_b(raw: u32) -> i64 {
+    let v = (((raw >> 31) & 1) << 12)
+        | (((raw >> 7) & 1) << 11)
+        | (((raw >> 25) & 0x3f) << 5)
+        | (((raw >> 8) & 0xf) << 1);
+    ((v as i32) << 19 >> 19) as i64
+}
+#[inline]
+fn imm_u(raw: u32) -> i64 {
+    ((raw & 0xffff_f000) as i32) as i64
+}
+#[inline]
+fn imm_j(raw: u32) -> i64 {
+    let v = (((raw >> 31) & 1) << 20)
+        | (((raw >> 12) & 0xff) << 12)
+        | (((raw >> 20) & 1) << 11)
+        | (((raw >> 21) & 0x3ff) << 1);
+    ((v as i32) << 11 >> 11) as i64
+}
+
+/// Decode a 32-bit instruction word. Unknown encodings decode to
+/// [`Op::Illegal`] (which the CPU turns into an illegal-instruction or
+/// virtual-instruction exception depending on mode).
+pub fn decode(raw: u32) -> Inst {
+    let op = decode_op(raw);
+    if op == Op::Illegal {
+        return Inst::illegal(raw);
+    }
+    let mut inst = Inst { op, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw), imm: 0, csr: 0, raw };
+    use Op::*;
+    inst.imm = match op {
+        Lui | Auipc => imm_u(raw),
+        Jal => imm_j(raw),
+        Jalr | Lb | Lh | Lw | Ld | Lbu | Lhu | Lwu | Addi | Slti | Sltiu | Xori | Ori | Andi
+        | Addiw | Flw => imm_i(raw),
+        Slli | Srli | Srai => ((raw >> 20) & 0x3f) as i64,
+        Slliw | Srliw | Sraiw => ((raw >> 20) & 0x1f) as i64,
+        Beq | Bne | Blt | Bge | Bltu | Bgeu => imm_b(raw),
+        Sb | Sh | Sw | Sd | Fsw => imm_s_signed(raw),
+        Csrrwi | Csrrsi | Csrrci => rs1(raw) as i64, // zimm
+        _ => 0,
+    };
+    if matches!(op, Csrrw | Csrrs | Csrrc | Csrrwi | Csrrsi | Csrrci) {
+        inst.csr = (raw >> 20) as u16;
+    }
+    inst
+}
+
+fn decode_op(raw: u32) -> Op {
+    use Op::*;
+    let opc = raw & 0x7f;
+    let f3 = funct3(raw);
+    let f7 = funct7(raw);
+    match opc {
+        0b0110111 => Lui,
+        0b0010111 => Auipc,
+        0b1101111 => Jal,
+        0b1100111 => {
+            if f3 == 0 {
+                Jalr
+            } else {
+                Illegal
+            }
+        }
+        0b1100011 => match f3 {
+            0b000 => Beq,
+            0b001 => Bne,
+            0b100 => Blt,
+            0b101 => Bge,
+            0b110 => Bltu,
+            0b111 => Bgeu,
+            _ => Illegal,
+        },
+        0b0000011 => match f3 {
+            0b000 => Lb,
+            0b001 => Lh,
+            0b010 => Lw,
+            0b011 => Ld,
+            0b100 => Lbu,
+            0b101 => Lhu,
+            0b110 => Lwu,
+            _ => Illegal,
+        },
+        0b0100011 => match f3 {
+            0b000 => Sb,
+            0b001 => Sh,
+            0b010 => Sw,
+            0b011 => Sd,
+            _ => Illegal,
+        },
+        0b0010011 => match f3 {
+            0b000 => Addi,
+            0b010 => Slti,
+            0b011 => Sltiu,
+            0b100 => Xori,
+            0b110 => Ori,
+            0b111 => Andi,
+            0b001 => {
+                if f7 >> 1 == 0 {
+                    Slli
+                } else {
+                    Illegal
+                }
+            }
+            0b101 => match f7 >> 1 {
+                0b000000 => Srli,
+                0b010000 => Srai,
+                _ => Illegal,
+            },
+            _ => Illegal,
+        },
+        0b0110011 => match (f7, f3) {
+            (0b0000000, 0b000) => Add,
+            (0b0100000, 0b000) => Sub,
+            (0b0000000, 0b001) => Sll,
+            (0b0000000, 0b010) => Slt,
+            (0b0000000, 0b011) => Sltu,
+            (0b0000000, 0b100) => Xor,
+            (0b0000000, 0b101) => Srl,
+            (0b0100000, 0b101) => Sra,
+            (0b0000000, 0b110) => Or,
+            (0b0000000, 0b111) => And,
+            (0b0000001, 0b000) => Mul,
+            (0b0000001, 0b001) => Mulh,
+            (0b0000001, 0b010) => Mulhsu,
+            (0b0000001, 0b011) => Mulhu,
+            (0b0000001, 0b100) => Div,
+            (0b0000001, 0b101) => Divu,
+            (0b0000001, 0b110) => Rem,
+            (0b0000001, 0b111) => Remu,
+            _ => Illegal,
+        },
+        0b0011011 => match (f7, f3) {
+            (_, 0b000) => Addiw,
+            (0b0000000, 0b001) => Slliw,
+            (0b0000000, 0b101) => Srliw,
+            (0b0100000, 0b101) => Sraiw,
+            _ => Illegal,
+        },
+        0b0111011 => match (f7, f3) {
+            (0b0000000, 0b000) => Addw,
+            (0b0100000, 0b000) => Subw,
+            (0b0000000, 0b001) => Sllw,
+            (0b0000000, 0b101) => Srlw,
+            (0b0100000, 0b101) => Sraw,
+            (0b0000001, 0b000) => Mulw,
+            (0b0000001, 0b100) => Divw,
+            (0b0000001, 0b101) => Divuw,
+            (0b0000001, 0b110) => Remw,
+            (0b0000001, 0b111) => Remuw,
+            _ => Illegal,
+        },
+        0b0001111 => match f3 {
+            0b000 => Fence,
+            0b001 => FenceI,
+            _ => Illegal,
+        },
+        0b0101111 => {
+            // A extension; ignore aq/rl (bits 26:25 of funct7).
+            let f5 = f7 >> 2;
+            match (f5, f3) {
+                (0b00010, 0b010) => LrW,
+                (0b00011, 0b010) => ScW,
+                (0b00001, 0b010) => AmoSwapW,
+                (0b00000, 0b010) => AmoAddW,
+                (0b00100, 0b010) => AmoXorW,
+                (0b01100, 0b010) => AmoAndW,
+                (0b01000, 0b010) => AmoOrW,
+                (0b10000, 0b010) => AmoMinW,
+                (0b10100, 0b010) => AmoMaxW,
+                (0b11000, 0b010) => AmoMinuW,
+                (0b11100, 0b010) => AmoMaxuW,
+                (0b00010, 0b011) => LrD,
+                (0b00011, 0b011) => ScD,
+                (0b00001, 0b011) => AmoSwapD,
+                (0b00000, 0b011) => AmoAddD,
+                (0b00100, 0b011) => AmoXorD,
+                (0b01100, 0b011) => AmoAndD,
+                (0b01000, 0b011) => AmoOrD,
+                (0b10000, 0b011) => AmoMinD,
+                (0b10100, 0b011) => AmoMaxD,
+                (0b11000, 0b011) => AmoMinuD,
+                (0b11100, 0b011) => AmoMaxuD,
+                _ => Illegal,
+            }
+        }
+        0b0000111 => {
+            if f3 == 0b010 {
+                Flw
+            } else {
+                Illegal
+            }
+        }
+        0b0100111 => {
+            if f3 == 0b010 {
+                Fsw
+            } else {
+                Illegal
+            }
+        }
+        0b1010011 => match f7 {
+            0b0000000 => FaddS,
+            0b0001000 => FmulS,
+            0b1111000 if rs2(raw) == 0 && f3 == 0 => FmvWX,
+            0b1110000 if rs2(raw) == 0 && f3 == 0 => FmvXW,
+            _ => Illegal,
+        },
+        0b1110011 => match f3 {
+            0b001 => Csrrw,
+            0b010 => Csrrs,
+            0b011 => Csrrc,
+            0b101 => Csrrwi,
+            0b110 => Csrrsi,
+            0b111 => Csrrci,
+            0b000 => {
+                // SYSTEM, funct3=000: ecall/ebreak/xret/wfi/fences.
+                match raw {
+                    0x0000_0073 => return Ecall,
+                    0x0010_0073 => return Ebreak,
+                    0x1020_0073 => return Sret,
+                    0x3020_0073 => return Mret,
+                    0x1050_0073 => return Wfi,
+                    _ => {}
+                }
+                if rd(raw) != 0 {
+                    return Illegal;
+                }
+                match f7 {
+                    0b0001001 => SfenceVma,
+                    0b0010001 => HfenceVvma,
+                    0b0110001 => HfenceGvma,
+                    _ => Illegal,
+                }
+            }
+            0b100 => {
+                // H-extension virtual-machine load/store (paper §3.3:
+                // "new memory instructions that access memory as if
+                // virtualization mode is on").
+                match f7 {
+                    0b0110000 => match rs2(raw) {
+                        0b00000 => HlvB,
+                        0b00001 => HlvBu,
+                        _ => Illegal,
+                    },
+                    0b0110010 => match rs2(raw) {
+                        0b00000 => HlvH,
+                        0b00001 => HlvHu,
+                        0b00011 => HlvxHu,
+                        _ => Illegal,
+                    },
+                    0b0110100 => match rs2(raw) {
+                        0b00000 => HlvW,
+                        0b00001 => HlvWu,
+                        0b00011 => HlvxWu,
+                        _ => Illegal,
+                    },
+                    0b0110110 => match rs2(raw) {
+                        0b00000 => HlvD,
+                        _ => Illegal,
+                    },
+                    0b0110001 if rd(raw) == 0 => HsvB,
+                    0b0110011 if rd(raw) == 0 => HsvH,
+                    0b0110101 if rd(raw) == 0 => HsvW,
+                    0b0110111 if rd(raw) == 0 => HsvD,
+                    _ => Illegal,
+                }
+            }
+            _ => Illegal,
+        },
+        _ => Illegal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc_r(f7: u32, rs2: u32, rs1: u32, f3: u32, rd: u32, opc: u32) -> u32 {
+        (f7 << 25) | (rs2 << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | opc
+    }
+
+    #[test]
+    fn decode_addi() {
+        // addi x5, x6, -7
+        let raw = ((-7i32 as u32 & 0xfff) << 20) | (6 << 15) | (5 << 7) | 0b0010011;
+        let i = decode(raw);
+        assert_eq!(i.op, Op::Addi);
+        assert_eq!(i.rd, 5);
+        assert_eq!(i.rs1, 6);
+        assert_eq!(i.imm, -7);
+    }
+
+    #[test]
+    fn decode_branch_imm() {
+        // beq x1, x2, -8 : B-type immediate
+        let imm = -8i64;
+        let v = imm as u32 & 0x1fff;
+        let raw = (((v >> 12) & 1) << 31)
+            | (((v >> 5) & 0x3f) << 25)
+            | (2 << 20)
+            | (1 << 15)
+            | (((v >> 1) & 0xf) << 8)
+            | (((v >> 11) & 1) << 7)
+            | 0b1100011;
+        let i = decode(raw);
+        assert_eq!(i.op, Op::Beq);
+        assert_eq!(i.imm, -8);
+    }
+
+    #[test]
+    fn decode_jal_imm() {
+        // jal x1, 2048
+        let imm = 2048u32;
+        let raw = (((imm >> 20) & 1) << 31)
+            | (((imm >> 1) & 0x3ff) << 21)
+            | (((imm >> 11) & 1) << 20)
+            | (((imm >> 12) & 0xff) << 12)
+            | (1 << 7)
+            | 0b1101111;
+        let i = decode(raw);
+        assert_eq!(i.op, Op::Jal);
+        assert_eq!(i.imm, 2048);
+        assert_eq!(i.rd, 1);
+    }
+
+    #[test]
+    fn decode_system() {
+        assert_eq!(decode(0x0000_0073).op, Op::Ecall);
+        assert_eq!(decode(0x1020_0073).op, Op::Sret);
+        assert_eq!(decode(0x3020_0073).op, Op::Mret);
+        assert_eq!(decode(0x1050_0073).op, Op::Wfi);
+    }
+
+    #[test]
+    fn decode_csr() {
+        // csrrw x3, mstatus(0x300), x4
+        let raw = (0x300 << 20) | (4 << 15) | (0b001 << 12) | (3 << 7) | 0b1110011;
+        let i = decode(raw);
+        assert_eq!(i.op, Op::Csrrw);
+        assert_eq!(i.csr, 0x300);
+        assert_eq!(i.rd, 3);
+        assert_eq!(i.rs1, 4);
+    }
+
+    #[test]
+    fn decode_hfence() {
+        // hfence.vvma x1, x2 (f7=0010001)
+        let raw = enc_r(0b0010001, 2, 1, 0, 0, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HfenceVvma);
+        let raw = enc_r(0b0110001, 2, 1, 0, 0, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HfenceGvma);
+        // nonzero rd makes it illegal
+        let raw = enc_r(0b0010001, 2, 1, 0, 3, 0b1110011);
+        assert_eq!(decode(raw).op, Op::Illegal);
+    }
+
+    #[test]
+    fn decode_hlv_hsv() {
+        // hlv.w x5, (x6): f7=0110100, rs2=0, f3=100
+        let raw = enc_r(0b0110100, 0, 6, 0b100, 5, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HlvW);
+        // hlvx.wu x5, (x6): rs2=3
+        let raw = enc_r(0b0110100, 3, 6, 0b100, 5, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HlvxWu);
+        // hlv.d
+        let raw = enc_r(0b0110110, 0, 6, 0b100, 5, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HlvD);
+        // hsv.d x7 -> (x6): f7=0110111, rs2=data reg, rd must be 0
+        let raw = enc_r(0b0110111, 7, 6, 0b100, 0, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HsvD);
+        let raw = enc_r(0b0110111, 7, 6, 0b100, 1, 0b1110011);
+        assert_eq!(decode(raw).op, Op::Illegal);
+        // hlv.b / hlv.bu
+        let raw = enc_r(0b0110000, 0, 6, 0b100, 5, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HlvB);
+        let raw = enc_r(0b0110000, 1, 6, 0b100, 5, 0b1110011);
+        assert_eq!(decode(raw).op, Op::HlvBu);
+    }
+
+    #[test]
+    fn decode_amo() {
+        // amoadd.w x5, x7, (x6): f5=00000
+        let raw = enc_r(0b0000000, 7, 6, 0b010, 5, 0b0101111);
+        assert_eq!(decode(raw).op, Op::AmoAddW);
+        // lr.d with aq set (f7 = 00010_10)
+        let raw = enc_r(0b0001010, 0, 6, 0b011, 5, 0b0101111);
+        assert_eq!(decode(raw).op, Op::LrD);
+    }
+
+    #[test]
+    fn decode_shifts_rv64() {
+        // slli x1, x2, 45 (6-bit shamt legal on RV64)
+        let raw = (45 << 20) | (2 << 15) | (0b001 << 12) | (1 << 7) | 0b0010011;
+        let i = decode(raw);
+        assert_eq!(i.op, Op::Slli);
+        assert_eq!(i.imm, 45);
+        // srai x1, x2, 63
+        let raw = (0b010000 << 26) | (63 << 20) | (2 << 15) | (0b101 << 12) | (1 << 7) | 0b0010011;
+        let i = decode(raw);
+        assert_eq!(i.op, Op::Srai);
+        assert_eq!(i.imm, 63);
+    }
+
+    #[test]
+    fn decode_illegal() {
+        assert_eq!(decode(0).op, Op::Illegal);
+        assert_eq!(decode(0xffff_ffff).op, Op::Illegal);
+    }
+
+    #[test]
+    fn decode_float_subset() {
+        // flw f1, 4(x2)
+        let raw = (4 << 20) | (2 << 15) | (0b010 << 12) | (1 << 7) | 0b0000111;
+        assert_eq!(decode(raw).op, Op::Flw);
+        // fadd.s f1, f2, f3
+        let raw = enc_r(0, 3, 2, 0, 1, 0b1010011);
+        assert_eq!(decode(raw).op, Op::FaddS);
+        // fmv.w.x f1, x2
+        let raw = enc_r(0b1111000, 0, 2, 0, 1, 0b1010011);
+        assert_eq!(decode(raw).op, Op::FmvWX);
+    }
+}

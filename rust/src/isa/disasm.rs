@@ -1,0 +1,255 @@
+//! Disassembler — used by trace output, the debugger CLI and test
+//! diagnostics.
+
+use super::csr::csr_name;
+use super::inst::{Inst, Op};
+
+pub const REG_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+/// ABI register name for an x-register index.
+pub fn reg_name(r: u8) -> &'static str {
+    REG_NAMES[(r & 31) as usize]
+}
+
+/// Reverse lookup used by the assembler: "a0"/"x10" → index.
+pub fn reg_index(name: &str) -> Option<u8> {
+    if let Some(rest) = name.strip_prefix('x') {
+        if let Ok(n) = rest.parse::<u8>() {
+            if n < 32 {
+                return Some(n);
+            }
+        }
+    }
+    if let Some(rest) = name.strip_prefix('f') {
+        // float regs share the 0..31 index space in our minimal F subset
+        if let Ok(n) = rest.parse::<u8>() {
+            if n < 32 {
+                return Some(n);
+            }
+        }
+    }
+    REG_NAMES.iter().position(|&n| n == name).map(|i| i as u8).or(match name {
+        "fp" => Some(8),
+        _ => None,
+    })
+}
+
+/// Render a decoded instruction as assembly text.
+pub fn disasm(i: &Inst) -> String {
+    use Op::*;
+    let r = reg_name;
+    match i.op {
+        Lui => format!("lui {}, {:#x}", r(i.rd), (i.imm as u64 >> 12) & 0xfffff),
+        Auipc => format!("auipc {}, {:#x}", r(i.rd), (i.imm as u64 >> 12) & 0xfffff),
+        Jal => format!("jal {}, {}", r(i.rd), i.imm),
+        Jalr => format!("jalr {}, {}({})", r(i.rd), i.imm, r(i.rs1)),
+        Beq | Bne | Blt | Bge | Bltu | Bgeu => {
+            let m = match i.op {
+                Beq => "beq",
+                Bne => "bne",
+                Blt => "blt",
+                Bge => "bge",
+                Bltu => "bltu",
+                _ => "bgeu",
+            };
+            format!("{m} {}, {}, {}", r(i.rs1), r(i.rs2), i.imm)
+        }
+        Lb | Lh | Lw | Ld | Lbu | Lhu | Lwu | Flw => {
+            let m = match i.op {
+                Lb => "lb",
+                Lh => "lh",
+                Lw => "lw",
+                Ld => "ld",
+                Lbu => "lbu",
+                Lhu => "lhu",
+                Lwu => "lwu",
+                _ => "flw",
+            };
+            format!("{m} {}, {}({})", r(i.rd), i.imm, r(i.rs1))
+        }
+        Sb | Sh | Sw | Sd | Fsw => {
+            let m = match i.op {
+                Sb => "sb",
+                Sh => "sh",
+                Sw => "sw",
+                Sd => "sd",
+                _ => "fsw",
+            };
+            format!("{m} {}, {}({})", r(i.rs2), i.imm, r(i.rs1))
+        }
+        Addi | Slti | Sltiu | Xori | Ori | Andi | Slli | Srli | Srai | Addiw | Slliw | Srliw
+        | Sraiw => {
+            let m = match i.op {
+                Addi => "addi",
+                Slti => "slti",
+                Sltiu => "sltiu",
+                Xori => "xori",
+                Ori => "ori",
+                Andi => "andi",
+                Slli => "slli",
+                Srli => "srli",
+                Srai => "srai",
+                Addiw => "addiw",
+                Slliw => "slliw",
+                Srliw => "srliw",
+                _ => "sraiw",
+            };
+            format!("{m} {}, {}, {}", r(i.rd), r(i.rs1), i.imm)
+        }
+        Add | Sub | Sll | Slt | Sltu | Xor | Srl | Sra | Or | And | Addw | Subw | Sllw | Srlw
+        | Sraw | Mul | Mulh | Mulhsu | Mulhu | Div | Divu | Rem | Remu | Mulw | Divw | Divuw
+        | Remw | Remuw => {
+            let m = match i.op {
+                Add => "add",
+                Sub => "sub",
+                Sll => "sll",
+                Slt => "slt",
+                Sltu => "sltu",
+                Xor => "xor",
+                Srl => "srl",
+                Sra => "sra",
+                Or => "or",
+                And => "and",
+                Addw => "addw",
+                Subw => "subw",
+                Sllw => "sllw",
+                Srlw => "srlw",
+                Sraw => "sraw",
+                Mul => "mul",
+                Mulh => "mulh",
+                Mulhsu => "mulhsu",
+                Mulhu => "mulhu",
+                Div => "div",
+                Divu => "divu",
+                Rem => "rem",
+                Remu => "remu",
+                Mulw => "mulw",
+                Divw => "divw",
+                Divuw => "divuw",
+                Remw => "remw",
+                _ => "remuw",
+            };
+            format!("{m} {}, {}, {}", r(i.rd), r(i.rs1), r(i.rs2))
+        }
+        Fence => "fence".into(),
+        FenceI => "fence.i".into(),
+        Ecall => "ecall".into(),
+        Ebreak => "ebreak".into(),
+        Mret => "mret".into(),
+        Sret => "sret".into(),
+        Wfi => "wfi".into(),
+        SfenceVma => format!("sfence.vma {}, {}", r(i.rs1), r(i.rs2)),
+        HfenceVvma => format!("hfence.vvma {}, {}", r(i.rs1), r(i.rs2)),
+        HfenceGvma => format!("hfence.gvma {}, {}", r(i.rs1), r(i.rs2)),
+        Csrrw | Csrrs | Csrrc => {
+            let m = match i.op {
+                Csrrw => "csrrw",
+                Csrrs => "csrrs",
+                _ => "csrrc",
+            };
+            format!("{m} {}, {}, {}", r(i.rd), csr_name(i.csr), r(i.rs1))
+        }
+        Csrrwi | Csrrsi | Csrrci => {
+            let m = match i.op {
+                Csrrwi => "csrrwi",
+                Csrrsi => "csrrsi",
+                _ => "csrrci",
+            };
+            format!("{m} {}, {}, {}", r(i.rd), csr_name(i.csr), i.imm)
+        }
+        LrW | LrD => format!(
+            "lr.{} {}, ({})",
+            if i.op == LrW { "w" } else { "d" },
+            r(i.rd),
+            r(i.rs1)
+        ),
+        ScW | ScD => format!(
+            "sc.{} {}, {}, ({})",
+            if i.op == ScW { "w" } else { "d" },
+            r(i.rd),
+            r(i.rs2),
+            r(i.rs1)
+        ),
+        AmoSwapW | AmoAddW | AmoXorW | AmoAndW | AmoOrW | AmoMinW | AmoMaxW | AmoMinuW
+        | AmoMaxuW | AmoSwapD | AmoAddD | AmoXorD | AmoAndD | AmoOrD | AmoMinD | AmoMaxD
+        | AmoMinuD | AmoMaxuD => {
+            let m = match i.op {
+                AmoSwapW => "amoswap.w",
+                AmoAddW => "amoadd.w",
+                AmoXorW => "amoxor.w",
+                AmoAndW => "amoand.w",
+                AmoOrW => "amoor.w",
+                AmoMinW => "amomin.w",
+                AmoMaxW => "amomax.w",
+                AmoMinuW => "amominu.w",
+                AmoMaxuW => "amomaxu.w",
+                AmoSwapD => "amoswap.d",
+                AmoAddD => "amoadd.d",
+                AmoXorD => "amoxor.d",
+                AmoAndD => "amoand.d",
+                AmoOrD => "amoor.d",
+                AmoMinD => "amomin.d",
+                AmoMaxD => "amomax.d",
+                AmoMinuD => "amominu.d",
+                _ => "amomaxu.d",
+            };
+            format!("{m} {}, {}, ({})", r(i.rd), r(i.rs2), r(i.rs1))
+        }
+        HlvB | HlvBu | HlvH | HlvHu | HlvW | HlvWu | HlvD | HlvxHu | HlvxWu => {
+            let m = match i.op {
+                HlvB => "hlv.b",
+                HlvBu => "hlv.bu",
+                HlvH => "hlv.h",
+                HlvHu => "hlv.hu",
+                HlvW => "hlv.w",
+                HlvWu => "hlv.wu",
+                HlvD => "hlv.d",
+                HlvxHu => "hlvx.hu",
+                _ => "hlvx.wu",
+            };
+            format!("{m} {}, ({})", r(i.rd), r(i.rs1))
+        }
+        HsvB | HsvH | HsvW | HsvD => {
+            let m = match i.op {
+                HsvB => "hsv.b",
+                HsvH => "hsv.h",
+                HsvW => "hsv.w",
+                _ => "hsv.d",
+            };
+            format!("{m} {}, ({})", r(i.rs2), r(i.rs1))
+        }
+        FaddS => format!("fadd.s f{}, f{}, f{}", i.rd, i.rs1, i.rs2),
+        FmulS => format!("fmul.s f{}, f{}, f{}", i.rd, i.rs1, i.rs2),
+        FmvWX => format!("fmv.w.x f{}, {}", i.rd, r(i.rs1)),
+        FmvXW => format!("fmv.x.w {}, f{}", r(i.rd), i.rs1),
+        Illegal => format!(".word {:#010x}", i.raw),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode;
+
+    #[test]
+    fn reg_names_round_trip() {
+        for i in 0..32u8 {
+            assert_eq!(reg_index(reg_name(i)), Some(i));
+            assert_eq!(reg_index(&format!("x{i}")), Some(i));
+        }
+        assert_eq!(reg_index("fp"), Some(8));
+        assert_eq!(reg_index("nope"), None);
+    }
+
+    #[test]
+    fn disasm_smoke() {
+        let raw = (4 << 20) | (2 << 15) | (0b011 << 12) | (1 << 7) | 0b0000011; // ld ra,4(sp)
+        assert_eq!(disasm(&decode(raw)), "ld ra, 4(sp)");
+        assert_eq!(disasm(&decode(0x0000_0073)), "ecall");
+        assert_eq!(disasm(&decode(0x3020_0073)), "mret");
+    }
+}

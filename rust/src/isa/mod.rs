@@ -1,0 +1,262 @@
+//! ISA layer: RV64IMA + Zicsr + Zifencei + minimal-F + H-extension.
+//!
+//! This module is the architectural vocabulary of the simulator: raw 32-bit
+//! instruction words in, a decoded [`Inst`] out, plus the CSR address map
+//! (including every hypervisor CSR from Table 1 of the paper), exception and
+//! interrupt cause codes, and privilege-level definitions.
+
+pub mod csr;
+pub mod decode;
+pub mod disasm;
+pub mod inst;
+
+pub use csr::*;
+pub use decode::decode;
+pub use inst::{Inst, Op};
+
+/// Privilege levels as encoded in `mstatus.MPP` / used by the trap unit.
+///
+/// With the H extension, the *effective* privilege is `(PrivLevel, V-bit)`:
+/// `(M, false)` = M, `(S, false)` = HS, `(S, true)` = VS, `(U, true)` = VU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum PrivLevel {
+    User = 0,
+    Supervisor = 1,
+    Machine = 3,
+}
+
+impl PrivLevel {
+    pub fn from_bits(bits: u64) -> PrivLevel {
+        match bits & 3 {
+            0 => PrivLevel::User,
+            1 => PrivLevel::Supervisor,
+            3 => PrivLevel::Machine,
+            _ => PrivLevel::User, // 2 is reserved; treated as U
+        }
+    }
+    pub fn bits(self) -> u64 {
+        self as u64
+    }
+}
+
+/// Effective privilege mode including virtualization state — the paper's
+/// "M, HS, VS, VU" ordering (§2.1). Used for stats histograms and permission
+/// checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EffPriv {
+    M,
+    HS,
+    S, // alias of HS when H is disabled; kept distinct for stats readability
+    VS,
+    U,
+    VU,
+}
+
+impl EffPriv {
+    pub fn of(prv: PrivLevel, virt: bool, h_enabled: bool) -> EffPriv {
+        match (prv, virt) {
+            (PrivLevel::Machine, _) => EffPriv::M,
+            (PrivLevel::Supervisor, false) => {
+                if h_enabled {
+                    EffPriv::HS
+                } else {
+                    EffPriv::S
+                }
+            }
+            (PrivLevel::Supervisor, true) => EffPriv::VS,
+            (PrivLevel::User, false) => EffPriv::U,
+            (PrivLevel::User, true) => EffPriv::VU,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            EffPriv::M => "M",
+            EffPriv::HS => "HS",
+            EffPriv::S => "S",
+            EffPriv::VS => "VS",
+            EffPriv::U => "U",
+            EffPriv::VU => "VU",
+        }
+    }
+}
+
+/// Synchronous exception causes (mcause/scause/vscause values, interrupt bit
+/// clear). The H extension adds the guest-page-fault and virtual-instruction
+/// codes (20–23).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u64)]
+pub enum ExceptionCause {
+    InstAddrMisaligned = 0,
+    InstAccessFault = 1,
+    IllegalInst = 2,
+    Breakpoint = 3,
+    LoadAddrMisaligned = 4,
+    LoadAccessFault = 5,
+    StoreAddrMisaligned = 6,
+    StoreAccessFault = 7,
+    EcallFromU = 8, // also VU
+    EcallFromS = 9, // HS (or S without H)
+    EcallFromVS = 10,
+    EcallFromM = 11,
+    InstPageFault = 12,
+    LoadPageFault = 13,
+    StorePageFault = 15,
+    InstGuestPageFault = 20,
+    LoadGuestPageFault = 21,
+    VirtualInstruction = 22,
+    StoreGuestPageFault = 23,
+}
+
+impl ExceptionCause {
+    pub fn code(self) -> u64 {
+        self as u64
+    }
+
+    /// True for the H-extension guest-page-fault family, which writes the
+    /// faulting guest-physical address (shifted right by 2) into
+    /// htval/mtval2 (paper Table 1).
+    pub fn is_guest_page_fault(self) -> bool {
+        matches!(
+            self,
+            ExceptionCause::InstGuestPageFault
+                | ExceptionCause::LoadGuestPageFault
+                | ExceptionCause::StoreGuestPageFault
+        )
+    }
+
+    pub fn is_page_fault(self) -> bool {
+        matches!(
+            self,
+            ExceptionCause::InstPageFault
+                | ExceptionCause::LoadPageFault
+                | ExceptionCause::StorePageFault
+        )
+    }
+}
+
+/// Interrupt causes (cause values with the interrupt bit set).
+/// The H extension adds the VS-level interrupts (2/6/10) and the
+/// supervisor-guest-external interrupt (12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u64)]
+pub enum InterruptCause {
+    SupervisorSoft = 1,
+    VirtualSupervisorSoft = 2,
+    MachineSoft = 3,
+    SupervisorTimer = 5,
+    VirtualSupervisorTimer = 6,
+    MachineTimer = 7,
+    SupervisorExternal = 9,
+    VirtualSupervisorExternal = 10,
+    MachineExternal = 11,
+    SupervisorGuestExternal = 12,
+}
+
+impl InterruptCause {
+    pub fn code(self) -> u64 {
+        self as u64
+    }
+    pub fn mask(self) -> u64 {
+        1u64 << (self as u64)
+    }
+
+    /// Priority order per the privileged spec (and the AIA priority list the
+    /// paper's interrupt_tests reference): MEI, MSI, MTI, SEI, SSI, STI,
+    /// SGEI, VSEI, VSSI, VSTI.
+    pub const PRIORITY: [InterruptCause; 10] = [
+        InterruptCause::MachineExternal,
+        InterruptCause::MachineSoft,
+        InterruptCause::MachineTimer,
+        InterruptCause::SupervisorExternal,
+        InterruptCause::SupervisorSoft,
+        InterruptCause::SupervisorTimer,
+        InterruptCause::SupervisorGuestExternal,
+        InterruptCause::VirtualSupervisorExternal,
+        InterruptCause::VirtualSupervisorSoft,
+        InterruptCause::VirtualSupervisorTimer,
+    ];
+}
+
+/// The cause/tval bundle produced by execution and consumed by the trap unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Exception {
+    pub cause: ExceptionCause,
+    /// {m,s,vs}tval value: faulting address or offending instruction bits.
+    pub tval: u64,
+    /// Guest physical address for guest-page faults (unshifted); the trap
+    /// unit writes `gpa >> 2` into htval/mtval2 (paper Table 1).
+    pub gpa: u64,
+    /// True when `tval` holds a guest *virtual* address — drives
+    /// mstatus.GVA / hstatus.GVA (paper Table 1: `gva` field).
+    pub gva: bool,
+    /// Transformed-instruction value for {h,m}tinst (paper §3.4
+    /// tinst_tests): 0, or a (pseudo)instruction encoding.
+    pub tinst: u64,
+}
+
+impl Exception {
+    pub fn new(cause: ExceptionCause, tval: u64) -> Exception {
+        Exception { cause, tval, gpa: 0, gva: false, tinst: 0 }
+    }
+    pub fn illegal(raw: u32) -> Exception {
+        Exception::new(ExceptionCause::IllegalInst, raw as u64)
+    }
+    pub fn virtual_inst(raw: u32) -> Exception {
+        Exception::new(ExceptionCause::VirtualInstruction, raw as u64)
+    }
+    pub fn with_gva(mut self, gva: bool) -> Exception {
+        self.gva = gva;
+        self
+    }
+    pub fn with_gpa(mut self, gpa: u64) -> Exception {
+        self.gpa = gpa;
+        self
+    }
+    pub fn with_tinst(mut self, tinst: u64) -> Exception {
+        self.tinst = tinst;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priv_round_trip() {
+        for p in [PrivLevel::User, PrivLevel::Supervisor, PrivLevel::Machine] {
+            assert_eq!(PrivLevel::from_bits(p.bits()), p);
+        }
+    }
+
+    #[test]
+    fn eff_priv_ordering_matches_paper() {
+        // Paper §2.1: decreasing accessibility M, HS, VS, VU.
+        let m = EffPriv::of(PrivLevel::Machine, false, true);
+        let hs = EffPriv::of(PrivLevel::Supervisor, false, true);
+        let vs = EffPriv::of(PrivLevel::Supervisor, true, true);
+        let vu = EffPriv::of(PrivLevel::User, true, true);
+        assert_eq!(m, EffPriv::M);
+        assert_eq!(hs, EffPriv::HS);
+        assert_eq!(vs, EffPriv::VS);
+        assert_eq!(vu, EffPriv::VU);
+    }
+
+    #[test]
+    fn guest_page_fault_family() {
+        assert!(ExceptionCause::LoadGuestPageFault.is_guest_page_fault());
+        assert!(ExceptionCause::InstGuestPageFault.is_guest_page_fault());
+        assert!(ExceptionCause::StoreGuestPageFault.is_guest_page_fault());
+        assert!(!ExceptionCause::LoadPageFault.is_guest_page_fault());
+        assert_eq!(ExceptionCause::StoreGuestPageFault.code(), 23);
+        assert_eq!(ExceptionCause::VirtualInstruction.code(), 22);
+    }
+
+    #[test]
+    fn interrupt_priority_starts_with_machine() {
+        assert_eq!(InterruptCause::PRIORITY[0], InterruptCause::MachineExternal);
+        assert_eq!(InterruptCause::PRIORITY[9], InterruptCause::VirtualSupervisorTimer);
+        assert_eq!(InterruptCause::VirtualSupervisorSoft.mask(), 1 << 2);
+    }
+}

@@ -1,0 +1,32 @@
+//! `hvsim` — a gem5-style RISC-V full-system simulator with the Hypervisor
+//! (H) extension, plus an XLA-accelerated trace-analytics timing model.
+//!
+//! Reproduction of "Advancing Cloud Computing Capabilities on gem5 by
+//! Implementing the RISC-V Hypervisor Extension" (CARRV 2024). See
+//! DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+//!
+//! Layering:
+//! - [`isa`], [`cpu`], [`mmu`], [`mem`], [`dev`]: the simulated machine
+//!   (substrates S1–S9 in DESIGN.md).
+//! - [`asm`], [`sw`]: built-in RISC-V assembler and the embedded software
+//!   stack (SBI firmware, the `xvisor-rs` hypervisor, the `mini-os`
+//!   kernel, MiBench-analog benchmarks).
+//! - [`sim`]: machine assembly, the tick loop, stats and checkpoints.
+//! - [`trace`], [`runtime`]: trace capture and the PJRT-loaded XLA timing
+//!   model (Layer 2/1 artifacts).
+//! - [`coordinator`]: experiment orchestration — regenerates every figure
+//!   of the paper's evaluation.
+
+pub mod asm;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod dev;
+pub mod isa;
+pub mod mem;
+pub mod mmu;
+pub mod runtime;
+pub mod sim;
+pub mod sw;
+pub mod trace;

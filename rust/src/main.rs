@@ -1,0 +1,221 @@
+//! hvsim — CLI launcher.
+//!
+//! ```text
+//! hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE]
+//!             [--stats] [--echo] [--max-ticks N]
+//! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
+//! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
+//! hvsim boot  [--config FILE]
+//! hvsim list
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use hvsim::config::SimConfig;
+use hvsim::coordinator;
+use hvsim::runtime::TimingEngine;
+use hvsim::sim::ExitReason;
+use hvsim::sw;
+
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected argument '{a}'");
+            };
+            // boolean flags
+            if matches!(name, "vm" | "stats" | "echo" | "trace") {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+                continue;
+            }
+            let val = argv.get(i + 1).with_context(|| format!("--{name} needs a value"))?;
+            flags.insert(name.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+    fn u64(&self, k: &str) -> Result<Option<u64>> {
+        self.get(k).map(|v| v.parse().with_context(|| format!("--{k}={v}"))).transpose()
+    }
+}
+
+fn load_cfg(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::from_file(&PathBuf::from(path))?,
+        None => SimConfig::default(),
+    };
+    if let Some(b) = args.get("bench") {
+        cfg.workload = b.to_string();
+    }
+    if args.has("vm") {
+        cfg.vm = true;
+    }
+    if let Some(s) = args.u64("scale")? {
+        cfg.scale = s;
+    }
+    if let Some(t) = args.u64("max-ticks")? {
+        cfg.max_ticks = t;
+    }
+    if args.has("echo") {
+        cfg.uart_echo = true;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let mut m = cfg.build_machine();
+    if cfg.vm {
+        sw::setup_guest(&mut m, &cfg.workload, cfg.scale)?;
+    } else {
+        sw::setup_native(&mut m, &cfg.workload, cfg.scale)?;
+    }
+    let r = m.run(cfg.max_ticks);
+    if !cfg.uart_echo {
+        print!("{}", m.console());
+    }
+    match r {
+        ExitReason::PowerOff(code) if code == hvsim::mem::SYSCON_PASS => {
+            eprintln!(
+                "[hvsim] {} ({}) ok: {} insts, {} ticks, {:.3}s host",
+                cfg.workload,
+                if cfg.vm { "guest" } else { "native" },
+                m.stats.sim_insts,
+                m.stats.sim_ticks,
+                m.stats.host_time.as_secs_f64()
+            );
+        }
+        other => bail!("run failed: {other:?}"),
+    }
+    if args.has("stats") {
+        println!("{}", m.stats_txt());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let with_trace = args.has("trace");
+    let mut pairs = coordinator::sweep(&cfg, &sw::BENCHMARKS, with_trace)?;
+    coordinator::retime_sequential(&cfg, &mut pairs, 3)?;
+    let pairs = pairs;
+    let mut out = String::new();
+    out.push_str(&coordinator::fig4_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::fig5_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::fig6_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::fig7_table(&pairs));
+    out.push('\n');
+    out.push_str(&coordinator::boot_table(&pairs));
+    let bad = coordinator::check_paper_claims(&pairs);
+    out.push('\n');
+    if bad.is_empty() {
+        out.push_str("paper-claims check: ALL HOLD\n");
+    } else {
+        out.push_str("paper-claims check: VIOLATIONS\n");
+        for b in &bad {
+            out.push_str(&format!("  - {b}\n"));
+        }
+    }
+    if with_trace {
+        let dir = args
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(TimingEngine::default_dir);
+        let mut eng = TimingEngine::load(&dir)?;
+        let mut rows = Vec::new();
+        for p in &pairs {
+            for r in [&p.native, &p.guest] {
+                if let Some(tr) = &r.trace {
+                    eng.reset();
+                    rows.push((r.name.clone(), r.vm, eng.analyze(tr)?));
+                }
+            }
+        }
+        out.push('\n');
+        out.push_str(&coordinator::timing_table(&rows));
+    }
+    match args.get("out") {
+        Some(path) => std::fs::write(path, &out)?,
+        None => print!("{out}"),
+    }
+    if !bad.is_empty() {
+        bail!("{} paper claims violated", bad.len());
+    }
+    Ok(())
+}
+
+fn cmd_timing(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let dir = args.get("artifacts").map(PathBuf::from).unwrap_or_else(TimingEngine::default_dir);
+    let mut eng = TimingEngine::load(&dir)?;
+    let res = coordinator::run_one(&cfg, &cfg.workload, cfg.vm, true)?;
+    let trace = res.trace.context("no trace captured")?;
+    let rep = eng.analyze(&trace)?;
+    println!(
+        "{} ({}): refs={} dropped={} tlb-miss={:.3}% modeled-translation-overhead={:.4}x",
+        cfg.workload,
+        if cfg.vm { "guest" } else { "native" },
+        rep.refs,
+        trace.dropped,
+        100.0 * rep.miss_rate(),
+        rep.overhead_ratio()
+    );
+    Ok(())
+}
+
+fn cmd_boot(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let pairs = coordinator::sweep(&cfg, &[cfg.workload.as_str()], false)?;
+    print!("{}", coordinator::boot_table(&pairs));
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "hvsim — gem5-style RISC-V simulator with the H extension\n\
+         usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo]\n  \
+         hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
+         hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
+         hvsim boot  [--bench NAME]\n  hvsim list"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "timing" => cmd_timing(&args),
+        "boot" => cmd_boot(&args),
+        "list" => {
+            for b in sw::BENCHMARKS {
+                println!("{b}");
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

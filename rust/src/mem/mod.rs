@@ -1,0 +1,217 @@
+//! Physical memory and the MMIO bus.
+//!
+//! Address map (modeled on the virt/Spike platform the paper's device-tree
+//! fix in §3.5 targets):
+//!
+//! ```text
+//!   0x0010_0000  SYSCON/test device (shutdown)
+//!   0x0200_0000  CLINT  (msip, mtimecmp, mtime)
+//!   0x0c00_0000  PLIC   (minimal)
+//!   0x1000_0000  UART   (8250-subset console)
+//!   0x8000_0000  RAM
+//! ```
+
+use crate::dev::{Clint, Plic, Uart};
+
+pub const SYSCON_BASE: u64 = 0x0010_0000;
+pub const CLINT_BASE: u64 = 0x0200_0000;
+pub const CLINT_SIZE: u64 = 0x1_0000;
+pub const PLIC_BASE: u64 = 0x0c00_0000;
+pub const PLIC_SIZE: u64 = 0x60_0000;
+pub const UART_BASE: u64 = 0x1000_0000;
+pub const UART_SIZE: u64 = 0x100;
+pub const RAM_BASE: u64 = 0x8000_0000;
+
+pub const SYSCON_PASS: u32 = 0x5555;
+pub const SYSCON_FAIL: u32 = 0x3333;
+
+/// A physical memory access that missed every device and RAM → access
+/// fault at the CPU layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccessFault;
+
+/// The system bus: RAM plus devices.
+pub struct Bus {
+    ram: Vec<u8>,
+    pub clint: Clint,
+    pub uart: Uart,
+    pub plic: Plic,
+    /// Set when the SYSCON device is written: Some(exit code).
+    pub poweroff: Option<u32>,
+}
+
+impl Bus {
+    pub fn new(ram_bytes: usize) -> Bus {
+        Bus {
+            ram: vec![0u8; ram_bytes],
+            clint: Clint::new(),
+            uart: Uart::new(),
+            plic: Plic::new(),
+            poweroff: None,
+        }
+    }
+
+    pub fn ram_size(&self) -> u64 {
+        self.ram.len() as u64
+    }
+
+    #[inline]
+    pub fn in_ram(&self, addr: u64, size: u64) -> bool {
+        addr >= RAM_BASE && addr + size <= RAM_BASE + self.ram.len() as u64
+    }
+
+    /// Fast path: RAM read, little-endian, any size in {1,2,4,8}.
+    /// Fixed-width `from_le_bytes` loads instead of byte loops (§Perf).
+    #[inline]
+    pub fn read_ram(&self, addr: u64, size: u64) -> u64 {
+        let off = (addr - RAM_BASE) as usize;
+        match size {
+            1 => self.ram[off] as u64,
+            2 => u16::from_le_bytes(self.ram[off..off + 2].try_into().unwrap()) as u64,
+            4 => u32::from_le_bytes(self.ram[off..off + 4].try_into().unwrap()) as u64,
+            8 => u64::from_le_bytes(self.ram[off..off + 8].try_into().unwrap()),
+            _ => {
+                let mut v = 0u64;
+                for i in 0..size as usize {
+                    v |= (self.ram[off + i] as u64) << (8 * i);
+                }
+                v
+            }
+        }
+    }
+
+    #[inline]
+    pub fn write_ram(&mut self, addr: u64, size: u64, val: u64) {
+        let off = (addr - RAM_BASE) as usize;
+        match size {
+            1 => self.ram[off] = val as u8,
+            2 => self.ram[off..off + 2].copy_from_slice(&(val as u16).to_le_bytes()),
+            4 => self.ram[off..off + 4].copy_from_slice(&(val as u32).to_le_bytes()),
+            8 => self.ram[off..off + 8].copy_from_slice(&val.to_le_bytes()),
+            _ => {
+                for i in 0..size as usize {
+                    self.ram[off + i] = (val >> (8 * i)) as u8;
+                }
+            }
+        }
+    }
+
+    /// Bulk load (program images, checkpoint restore).
+    pub fn load_image(&mut self, addr: u64, bytes: &[u8]) -> Result<(), AccessFault> {
+        if !self.in_ram(addr, bytes.len() as u64) {
+            return Err(AccessFault);
+        }
+        let off = (addr - RAM_BASE) as usize;
+        self.ram[off..off + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn ram_slice(&self, addr: u64, len: u64) -> Result<&[u8], AccessFault> {
+        if !self.in_ram(addr, len) {
+            return Err(AccessFault);
+        }
+        let off = (addr - RAM_BASE) as usize;
+        Ok(&self.ram[off..off + len as usize])
+    }
+
+    pub fn ram_bytes(&self) -> &[u8] {
+        &self.ram
+    }
+    pub fn ram_bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.ram
+    }
+
+    /// Physical read with full device decode.
+    pub fn read(&mut self, addr: u64, size: u64) -> Result<u64, AccessFault> {
+        if self.in_ram(addr, size) {
+            return Ok(self.read_ram(addr, size));
+        }
+        if (CLINT_BASE..CLINT_BASE + CLINT_SIZE).contains(&addr) {
+            return Ok(self.clint.read(addr - CLINT_BASE, size));
+        }
+        if (UART_BASE..UART_BASE + UART_SIZE).contains(&addr) {
+            return Ok(self.uart.read(addr - UART_BASE));
+        }
+        if (PLIC_BASE..PLIC_BASE + PLIC_SIZE).contains(&addr) {
+            return Ok(self.plic.read(addr - PLIC_BASE));
+        }
+        if addr == SYSCON_BASE {
+            return Ok(0);
+        }
+        Err(AccessFault)
+    }
+
+    /// Physical write with full device decode.
+    pub fn write(&mut self, addr: u64, size: u64, val: u64) -> Result<(), AccessFault> {
+        if self.in_ram(addr, size) {
+            self.write_ram(addr, size, val);
+            return Ok(());
+        }
+        if (CLINT_BASE..CLINT_BASE + CLINT_SIZE).contains(&addr) {
+            self.clint.write(addr - CLINT_BASE, size, val);
+            return Ok(());
+        }
+        if (UART_BASE..UART_BASE + UART_SIZE).contains(&addr) {
+            self.uart.write(addr - UART_BASE, val as u8);
+            return Ok(());
+        }
+        if (PLIC_BASE..PLIC_BASE + PLIC_SIZE).contains(&addr) {
+            self.plic.write(addr - PLIC_BASE, val);
+            return Ok(());
+        }
+        if addr == SYSCON_BASE {
+            self.poweroff = Some(val as u32);
+            return Ok(());
+        }
+        Err(AccessFault)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ram_round_trip_all_sizes() {
+        let mut bus = Bus::new(1 << 20);
+        for (size, val) in [(1u64, 0xabu64), (2, 0xbeef), (4, 0xdead_beef), (8, 0x0123_4567_89ab_cdef)]
+        {
+            bus.write(RAM_BASE + 0x100, size, val).unwrap();
+            assert_eq!(bus.read(RAM_BASE + 0x100, size).unwrap(), val);
+        }
+    }
+
+    #[test]
+    fn little_endian_layout() {
+        let mut bus = Bus::new(4096);
+        bus.write(RAM_BASE, 4, 0x0102_0304).unwrap();
+        assert_eq!(bus.read(RAM_BASE, 1).unwrap(), 0x04);
+        assert_eq!(bus.read(RAM_BASE + 3, 1).unwrap(), 0x01);
+    }
+
+    #[test]
+    fn out_of_range_faults() {
+        let mut bus = Bus::new(4096);
+        assert_eq!(bus.read(RAM_BASE + 4096, 1), Err(AccessFault));
+        assert_eq!(bus.read(0x4000_0000, 8), Err(AccessFault));
+        assert_eq!(bus.write(0x4000_0000, 8, 0), Err(AccessFault));
+        // Straddling the top of RAM faults too.
+        assert_eq!(bus.read(RAM_BASE + 4092, 8), Err(AccessFault));
+    }
+
+    #[test]
+    fn syscon_poweroff() {
+        let mut bus = Bus::new(4096);
+        assert_eq!(bus.poweroff, None);
+        bus.write(SYSCON_BASE, 4, SYSCON_PASS as u64).unwrap();
+        assert_eq!(bus.poweroff, Some(SYSCON_PASS));
+    }
+
+    #[test]
+    fn image_load() {
+        let mut bus = Bus::new(4096);
+        bus.load_image(RAM_BASE + 8, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(bus.read(RAM_BASE + 8, 4).unwrap(), 0x0403_0201);
+        assert!(bus.load_image(RAM_BASE + 4094, &[0; 8]).is_err());
+    }
+}

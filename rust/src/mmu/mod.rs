@@ -1,0 +1,62 @@
+//! MMU: Sv39 / Sv39x4 two-stage address translation and the H-aware TLB
+//! (paper §3.3 and §3.5 challenge 3).
+
+pub mod tlb;
+pub mod walker;
+
+pub use tlb::{Tlb, TlbEntry};
+pub use walker::{translate, TranslateCtx};
+
+/// Access type, used for permission checks and fault-cause selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+    Execute,
+}
+
+/// The paper's `XlateFlags` (§3.3): per-access translation modifiers added
+/// for the H extension's memory instructions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XlateFlags {
+    /// HLV/HSV: translate "as if virtualization mode is on".
+    pub forced_virt: bool,
+    /// HLVX: a hypervisor load requiring execute permission.
+    pub hlvx: bool,
+    /// LR: load-reserved (recorded for tinst fidelity; no translation
+    /// effect beyond Read access).
+    pub lr: bool,
+}
+
+/// PTE permission bits (low byte of an Sv39 PTE).
+pub mod pte {
+    pub const V: u8 = 1 << 0;
+    pub const R: u8 = 1 << 1;
+    pub const W: u8 = 1 << 2;
+    pub const X: u8 = 1 << 3;
+    pub const U: u8 = 1 << 4;
+    pub const G: u8 = 1 << 5;
+    pub const A: u8 = 1 << 6;
+    pub const D: u8 = 1 << 7;
+}
+
+/// MMU statistics (gem5-style counters; dumped into stats.txt).
+#[derive(Clone, Debug, Default)]
+pub struct MmuStats {
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+    pub walks: u64,
+    /// Intermediate page-table accesses — gem5's `stepWalk()` count.
+    pub walk_steps: u64,
+    /// G-stage walks (paper Fig. 3: one per VS-stage PTE address + final).
+    pub g_walks: u64,
+    pub g_walk_steps: u64,
+    pub flushes: u64,
+}
+
+/// Pseudoinstruction encodings written to htinst/mtinst for guest-page
+/// faults on *implicit* memory accesses during VS-stage translation
+/// (privileged spec table; the paper's tinst_tests third category).
+/// 0x2000 = PTE read, 0x3000 = PTE write; bit 5 set = 64-bit PTE access.
+pub const TINST_PSEUDO_PTE_READ: u64 = 0x0000_2020;
+pub const TINST_PSEUDO_PTE_WRITE: u64 = 0x0000_3020;

@@ -1,0 +1,483 @@
+//! The H-aware TLB.
+//!
+//! Paper §3.5, challenge 3: "it is crucial to store both the guest PFN and
+//! supervisor PFN ... Additionally, it is necessary to store the permission
+//! bits of the guest page table entry", because in virtualization mode the
+//! guest's view of permissions (VS-stage PTE) can differ from the host's
+//! (G-stage PTE). Entries are keyed by (VPN, ASID, VMID, V-bit) so native
+//! and guest translations coexist, and `hfence.{vvma,gvma}` can flush "only
+//! the guest TLB entries" (paper §3.4 hfence_tests).
+
+use super::pte;
+use super::Access;
+
+/// One TLB entry: a 4-KiB-granule translation, with both stages' frame
+/// numbers, permission bits and page-size levels retained.
+#[derive(Clone, Copy, Debug)]
+pub struct TlbEntry {
+    pub valid: bool,
+    /// Guest-virtual (or native-virtual) page number.
+    pub vpn: u64,
+    pub asid: u16,
+    pub vmid: u16,
+    /// True for two-stage (guest) translations.
+    pub virt: bool,
+    /// Final (host/supervisor) physical frame number.
+    pub host_ppn: u64,
+    /// Guest-physical frame number (== host_ppn for native entries).
+    pub guest_ppn: u64,
+    /// VS-stage (or native-stage) PTE permission bits.
+    pub vs_perms: u8,
+    /// G-stage PTE permission bits (pte::V.. for native entries: full).
+    pub g_perms: u8,
+    /// Page-size level of each stage (0 = 4K, 1 = 2M mega, 2 = 1G giga) —
+    /// retained to support megapage/gigapage flush semantics.
+    pub vs_level: u8,
+    pub g_level: u8,
+    /// VS-stage PTE G (global) bit: survives ASID-targeted flushes.
+    pub global: bool,
+    /// True when the VS stage was BARE (vsatp.mode = 0): stage-1
+    /// permission checks are skipped entirely (the paper's
+    /// second_stage_only_translation scenario).
+    pub s1_bare: bool,
+    /// Round-robin age for replacement.
+    pub lru: u32,
+}
+
+impl TlbEntry {
+    pub const INVALID: TlbEntry = TlbEntry {
+        valid: false,
+        vpn: 0,
+        asid: 0,
+        vmid: 0,
+        virt: false,
+        host_ppn: 0,
+        guest_ppn: 0,
+        vs_perms: 0,
+        g_perms: 0,
+        vs_level: 0,
+        g_level: 0,
+        global: false,
+        s1_bare: false,
+        lru: 0,
+    };
+}
+
+/// Which translation stage a permission check failed in — selects
+/// page-fault vs guest-page-fault causes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultStage {
+    Vs,
+    G,
+}
+
+/// Permission context for a check: effective privilege is U or S;
+/// SUM/MXR come from the stage-appropriate status register (vsstatus when
+/// V=1 — paper §3.5 challenge 2 analog for memory).
+#[derive(Clone, Copy, Debug)]
+pub struct PermCtx {
+    pub user: bool,
+    pub sum: bool,
+    pub mxr: bool,
+    pub hlvx: bool,
+}
+
+/// gem5's `tlb.hh::checkPermissions()` extended per the paper: validates
+/// the VS-stage permissions first, then the G-stage permissions.
+pub fn check_permissions(e: &TlbEntry, access: Access, ctx: PermCtx) -> Result<(), FaultStage> {
+    // ---- stage 1: VS (or native) PTE (skipped when vsatp was BARE) ----
+    if !e.s1_bare {
+        let p = e.vs_perms;
+        let user_page = p & pte::U != 0;
+        if ctx.user && !user_page {
+            return Err(FaultStage::Vs);
+        }
+        if !ctx.user && user_page && !ctx.sum {
+            // S-mode touching a U page needs SUM; execution never allowed.
+            return Err(FaultStage::Vs);
+        }
+        if !ctx.user && user_page && access == Access::Execute {
+            return Err(FaultStage::Vs);
+        }
+        let ok1 = match access {
+            Access::Execute => p & pte::X != 0,
+            Access::Read => {
+                if ctx.hlvx {
+                    p & pte::X != 0
+                } else {
+                    p & pte::R != 0 || (ctx.mxr && p & pte::X != 0)
+                }
+            }
+            Access::Write => p & pte::W != 0,
+        };
+        if !ok1 {
+            return Err(FaultStage::Vs);
+        }
+        // A/D (Svade-style: fault rather than hardware update).
+        if p & pte::A == 0 || (access == Access::Write && p & pte::D == 0) {
+            return Err(FaultStage::Vs);
+        }
+    }
+    // ---- stage 2: G-stage PTE ----
+    if e.virt {
+        let g = e.g_perms;
+        // All G-stage leaves must be U pages (guest memory).
+        if g & pte::U == 0 {
+            return Err(FaultStage::G);
+        }
+        let ok2 = match access {
+            Access::Execute => g & pte::X != 0,
+            Access::Read => {
+                if ctx.hlvx {
+                    g & pte::X != 0
+                } else {
+                    g & pte::R != 0
+                }
+            }
+            Access::Write => g & pte::W != 0,
+        };
+        if !ok2 {
+            return Err(FaultStage::G);
+        }
+        if g & pte::A == 0 || (access == Access::Write && g & pte::D == 0) {
+            return Err(FaultStage::G);
+        }
+    }
+    Ok(())
+}
+
+/// Set-associative TLB (default 64 sets × 4 ways ≈ gem5's 256-entry RISC-V
+/// TLB but associative for cheap lookup).
+#[derive(Clone, Debug)]
+pub struct Tlb {
+    sets: usize,
+    ways: usize,
+    entries: Vec<TlbEntry>,
+    clock: u32,
+    /// Bumped on every flush; lets the CPU's page-translation caches
+    /// (fetch/load/store fast paths) invalidate cheaply (§Perf).
+    generation: u64,
+}
+
+impl Tlb {
+    pub fn new(sets: usize, ways: usize) -> Tlb {
+        assert!(sets.is_power_of_two(), "TLB sets must be a power of two");
+        Tlb { sets, ways, entries: vec![TlbEntry::INVALID; sets * ways], clock: 0, generation: 0 }
+    }
+
+    /// Current flush generation (changes whenever any translation may
+    /// have been invalidated).
+    #[inline]
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    #[inline]
+    fn set_of(&self, vpn: u64) -> usize {
+        (vpn as usize) & (self.sets - 1)
+    }
+
+    /// Look up a translation. ASID matching honors the VS-stage global bit.
+    #[inline]
+    pub fn lookup(&mut self, vpn: u64, asid: u16, vmid: u16, virt: bool) -> Option<&TlbEntry> {
+        let set = self.set_of(vpn);
+        let base = set * self.ways;
+        self.clock = self.clock.wrapping_add(1);
+        let clock = self.clock;
+        for e in &mut self.entries[base..base + self.ways] {
+            if e.valid
+                && e.vpn == vpn
+                && e.virt == virt
+                && (e.global || e.asid == asid)
+                && (!virt || e.vmid == vmid)
+            {
+                e.lru = clock;
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    /// Insert (replacing LRU way in the set).
+    pub fn insert(&mut self, mut entry: TlbEntry) {
+        let set = self.set_of(entry.vpn);
+        let base = set * self.ways;
+        self.clock = self.clock.wrapping_add(1);
+        entry.lru = self.clock;
+        entry.valid = true;
+        let mut victim = base;
+        let mut oldest = u32::MAX;
+        for (i, e) in self.entries[base..base + self.ways].iter().enumerate() {
+            if !e.valid {
+                victim = base + i;
+                break;
+            }
+            if e.lru < oldest {
+                oldest = e.lru;
+                victim = base + i;
+            }
+        }
+        self.entries[victim] = entry;
+    }
+
+    pub fn flush_all(&mut self) {
+        self.generation += 1;
+        for e in &mut self.entries {
+            e.valid = false;
+        }
+    }
+
+    /// sfence.vma: flush *native* entries matching optional (vaddr, asid).
+    /// Global pages survive ASID-targeted flushes.
+    pub fn fence_vma(&mut self, vaddr: Option<u64>, asid: Option<u16>) {
+        self.generation += 1;
+        let vpn = vaddr.map(|a| a >> 12);
+        for e in &mut self.entries {
+            if !e.valid || e.virt {
+                continue;
+            }
+            if let Some(v) = vpn {
+                if !Self::vpn_match(e, v) {
+                    continue;
+                }
+            }
+            if let Some(a) = asid {
+                if e.asid != a || e.global {
+                    continue;
+                }
+            }
+            e.valid = false;
+        }
+    }
+
+    /// hfence.vvma: flush *guest* (V=1) entries of the current VMID
+    /// matching optional (guest vaddr, ASID) — "affecting only the guest
+    /// TLB entries" (paper §3.4).
+    pub fn fence_vvma(&mut self, vmid: u16, vaddr: Option<u64>, asid: Option<u16>) {
+        self.generation += 1;
+        let vpn = vaddr.map(|a| a >> 12);
+        for e in &mut self.entries {
+            if !e.valid || !e.virt || e.vmid != vmid {
+                continue;
+            }
+            if let Some(v) = vpn {
+                if !Self::vpn_match(e, v) {
+                    continue;
+                }
+            }
+            if let Some(a) = asid {
+                if e.asid != a || e.global {
+                    continue;
+                }
+            }
+            e.valid = false;
+        }
+    }
+
+    /// hfence.gvma: flush guest entries by (guest physical address, VMID).
+    pub fn fence_gvma(&mut self, gaddr: Option<u64>, vmid: Option<u16>) {
+        self.generation += 1;
+        let gppn = gaddr.map(|a| a >> 12);
+        for e in &mut self.entries {
+            if !e.valid || !e.virt {
+                continue;
+            }
+            if let Some(g) = gppn {
+                // Match at the G-stage page-size granularity.
+                let span = 1u64 << (9 * e.g_level as u64);
+                let base = e.guest_ppn & !(span - 1);
+                if !(base..base + span).contains(&g) {
+                    continue;
+                }
+            }
+            if let Some(v) = vmid {
+                if e.vmid != v {
+                    continue;
+                }
+            }
+            e.valid = false;
+        }
+    }
+
+    fn vpn_match(e: &TlbEntry, vpn: u64) -> bool {
+        // Honor superpage span at the VS-stage level.
+        let span = 1u64 << (9 * e.vs_level as u64);
+        let base = e.vpn & !(span - 1);
+        (base..base + span).contains(&vpn)
+    }
+
+    pub fn iter_valid(&self) -> impl Iterator<Item = &TlbEntry> {
+        self.entries.iter().filter(|e| e.valid)
+    }
+}
+
+impl Default for Tlb {
+    fn default() -> Self {
+        Tlb::new(64, 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_entry(vpn: u64, asid: u16) -> TlbEntry {
+        TlbEntry {
+            valid: true,
+            vpn,
+            asid,
+            vmid: 0,
+            virt: false,
+            host_ppn: vpn + 0x1000,
+            guest_ppn: vpn + 0x1000,
+            vs_perms: pte::V | pte::R | pte::W | pte::X | pte::A | pte::D,
+            g_perms: 0,
+            vs_level: 0,
+            g_level: 0,
+            global: false,
+            s1_bare: false,
+            lru: 0,
+        }
+    }
+
+    fn guest_entry(vpn: u64, asid: u16, vmid: u16) -> TlbEntry {
+        TlbEntry {
+            virt: true,
+            vmid,
+            guest_ppn: vpn + 0x2000,
+            g_perms: pte::V | pte::R | pte::W | pte::X | pte::U | pte::A | pte::D,
+            ..native_entry(vpn, asid)
+        }
+    }
+
+    #[test]
+    fn lookup_distinguishes_virt() {
+        let mut t = Tlb::new(16, 2);
+        t.insert(native_entry(0x10, 1));
+        t.insert(guest_entry(0x10, 1, 7));
+        let n = *t.lookup(0x10, 1, 0, false).expect("native hit");
+        assert!(!n.virt);
+        let g = *t.lookup(0x10, 1, 7, true).expect("guest hit");
+        assert!(g.virt);
+        assert_eq!(g.guest_ppn, 0x10 + 0x2000);
+        assert!(t.lookup(0x10, 1, 8, true).is_none(), "wrong VMID misses");
+        assert!(t.lookup(0x10, 2, 7, true).is_none(), "wrong ASID misses");
+    }
+
+    #[test]
+    fn global_pages_ignore_asid() {
+        let mut t = Tlb::new(16, 2);
+        let mut e = native_entry(0x20, 5);
+        e.global = true;
+        t.insert(e);
+        assert!(t.lookup(0x20, 9, 0, false).is_some());
+        // ...and survive ASID-targeted sfence.
+        t.fence_vma(None, Some(9));
+        assert!(t.lookup(0x20, 9, 0, false).is_some());
+        t.fence_vma(None, None);
+        assert!(t.lookup(0x20, 9, 0, false).is_none());
+    }
+
+    #[test]
+    fn hfence_vvma_only_guest_entries() {
+        // Paper §3.4 hfence_tests: "affecting only the guest TLB entries".
+        let mut t = Tlb::new(16, 2);
+        t.insert(native_entry(0x30, 1));
+        t.insert(guest_entry(0x30, 1, 3));
+        t.fence_vvma(3, None, None);
+        assert!(t.lookup(0x30, 1, 0, false).is_some(), "native survives");
+        assert!(t.lookup(0x30, 1, 3, true).is_none(), "guest flushed");
+    }
+
+    #[test]
+    fn hfence_gvma_matches_guest_physical() {
+        let mut t = Tlb::new(16, 2);
+        let e = guest_entry(0x40, 1, 3);
+        let gpa = e.guest_ppn << 12;
+        t.insert(e);
+        t.insert(guest_entry(0x41, 1, 3));
+        t.fence_gvma(Some(gpa), Some(3));
+        assert!(t.lookup(0x40, 1, 3, true).is_none(), "matching GPA flushed");
+        assert!(t.lookup(0x41, 1, 3, true).is_some(), "other GPA survives");
+        // VMID-only flush clears the rest.
+        t.fence_gvma(None, Some(3));
+        assert!(t.lookup(0x41, 1, 3, true).is_none());
+    }
+
+    #[test]
+    fn replacement_evicts_lru() {
+        let mut t = Tlb::new(1, 2); // one set, two ways
+        t.insert(native_entry(0, 1));
+        t.insert(native_entry(16, 1)); // same set (sets=1)
+        assert!(t.lookup(0, 1, 0, false).is_some()); // touch 0 → 16 is LRU
+        t.insert(native_entry(32, 1));
+        assert!(t.lookup(0, 1, 0, false).is_some());
+        assert!(t.lookup(16, 1, 0, false).is_none(), "LRU way evicted");
+        assert!(t.lookup(32, 1, 0, false).is_some());
+    }
+
+    #[test]
+    fn megapage_fence_span() {
+        let mut t = Tlb::new(16, 4);
+        let mut e = guest_entry(0x200, 1, 3); // 2M page: vs_level 1 spans 512 VPNs
+        e.vs_level = 1;
+        t.insert(e);
+        // Flushing an address inside the megapage (vpn 0x2ff) hits it.
+        t.fence_vvma(3, Some(0x2ff << 12), None);
+        assert!(t.lookup(0x200, 1, 3, true).is_none());
+    }
+
+    #[test]
+    fn perm_check_stage1_vs_stage2() {
+        let ctx = PermCtx { user: false, sum: false, mxr: false, hlvx: false };
+        let mut e = guest_entry(1, 0, 0);
+        assert!(check_permissions(&e, Access::Read, ctx).is_ok());
+        // Remove W from VS stage → stage-1 fault (page fault).
+        e.vs_perms &= !pte::W;
+        assert_eq!(check_permissions(&e, Access::Write, ctx), Err(FaultStage::Vs));
+        // Restore, remove W from G stage → stage-2 fault (guest page fault).
+        e.vs_perms |= pte::W | pte::D;
+        e.g_perms &= !pte::W;
+        assert_eq!(check_permissions(&e, Access::Write, ctx), Err(FaultStage::G));
+    }
+
+    #[test]
+    fn perm_check_sum_mxr_hlvx() {
+        let mut e = native_entry(1, 0);
+        e.vs_perms = pte::V | pte::U | pte::R | pte::A | pte::D;
+        // S-mode on U page without SUM → fault; with SUM → ok.
+        let s = PermCtx { user: false, sum: false, mxr: false, hlvx: false };
+        assert_eq!(check_permissions(&e, Access::Read, s), Err(FaultStage::Vs));
+        let s_sum = PermCtx { sum: true, ..s };
+        assert!(check_permissions(&e, Access::Read, s_sum).is_ok());
+        // MXR: execute-only page readable.
+        e.vs_perms = pte::V | pte::X | pte::A;
+        let m = PermCtx { user: false, sum: false, mxr: true, hlvx: false };
+        assert!(check_permissions(&e, Access::Read, m).is_ok());
+        let nm = PermCtx { mxr: false, ..m };
+        assert_eq!(check_permissions(&e, Access::Read, nm), Err(FaultStage::Vs));
+        // HLVX requires X instead of R.
+        e.vs_perms = pte::V | pte::R | pte::A;
+        let hx = PermCtx { user: false, sum: false, mxr: false, hlvx: true };
+        assert_eq!(check_permissions(&e, Access::Read, hx), Err(FaultStage::Vs));
+        e.vs_perms = pte::V | pte::X | pte::A;
+        assert!(check_permissions(&e, Access::Read, hx).is_ok());
+    }
+
+    #[test]
+    fn svade_a_d_faults() {
+        let ctx = PermCtx { user: false, sum: false, mxr: false, hlvx: false };
+        let mut e = native_entry(1, 0);
+        e.vs_perms = pte::V | pte::R | pte::W; // no A/D
+        assert_eq!(check_permissions(&e, Access::Read, ctx), Err(FaultStage::Vs));
+        e.vs_perms |= pte::A;
+        assert!(check_permissions(&e, Access::Read, ctx).is_ok());
+        assert_eq!(check_permissions(&e, Access::Write, ctx), Err(FaultStage::Vs), "D missing");
+        e.vs_perms |= pte::D;
+        assert!(check_permissions(&e, Access::Write, ctx).is_ok());
+    }
+}

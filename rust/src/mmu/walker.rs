@@ -1,0 +1,606 @@
+//! The page-table walker: Sv39 VS-stage + Sv39x4 G-stage two-stage
+//! translation (paper §3.3, Fig. 3).
+//!
+//! `walk()` drives the VS-stage (or native) walk; every page-table address
+//! it touches is itself a *guest physical* address when V=1 and is handed
+//! to `walk_g_stage()` — "every page table address is virtual and must be
+//! translated to a physical address by the G-stage". Intermediate accesses
+//! go through `step()` (gem5's `stepWalk()`), counted in the MMU stats.
+
+use crate::cpu::CsrFile;
+use crate::isa::csr::{atp, mstatus};
+use crate::isa::{Exception, ExceptionCause, PrivLevel};
+use crate::mem::Bus;
+
+use super::tlb::{check_permissions, FaultStage, PermCtx, Tlb, TlbEntry};
+use super::{pte, Access, MmuStats, XlateFlags, TINST_PSEUDO_PTE_READ};
+
+const PAGE_SHIFT: u64 = 12;
+const LEVELS: i32 = 3;
+/// Max guest-physical address width for Sv39x4: 41 bits (paper §3.3: "the
+/// guest physical address is widened by 2 bits").
+const GPA_BITS: u64 = 41;
+
+/// Everything the translator needs to know about the access, resolved by
+/// the CPU (effective privilege after MPRV/HLV adjustments, the paper's
+/// XlateFlags, and the tinst encoding to report for explicit accesses).
+pub struct TranslateCtx<'a> {
+    pub csr: &'a CsrFile,
+    /// Effective privilege for the access (after MPRV / HLV SPVP rules).
+    pub prv: PrivLevel,
+    /// Effective virtualization state (V, or forced by HLV/HSV).
+    pub virt: bool,
+    pub access: Access,
+    pub flags: XlateFlags,
+    /// tinst value to report for guest-page faults on this explicit access
+    /// (0 for fetches; transformed instruction for loads/stores).
+    pub tinst: u64,
+}
+
+impl<'a> TranslateCtx<'a> {
+    fn stage1_cause(&self) -> ExceptionCause {
+        match self.access {
+            Access::Execute => ExceptionCause::InstPageFault,
+            Access::Read => ExceptionCause::LoadPageFault,
+            Access::Write => ExceptionCause::StorePageFault,
+        }
+    }
+    fn stage2_cause(&self) -> ExceptionCause {
+        match self.access {
+            Access::Execute => ExceptionCause::InstGuestPageFault,
+            Access::Read => ExceptionCause::LoadGuestPageFault,
+            Access::Write => ExceptionCause::StoreGuestPageFault,
+        }
+    }
+    fn access_cause(&self) -> ExceptionCause {
+        match self.access {
+            Access::Execute => ExceptionCause::InstAccessFault,
+            Access::Read => ExceptionCause::LoadAccessFault,
+            Access::Write => ExceptionCause::StoreAccessFault,
+        }
+    }
+
+    fn stage1_fault(&self, va: u64) -> Exception {
+        Exception::new(self.stage1_cause(), va).with_gva(self.virt)
+    }
+
+    fn stage2_fault(&self, va: u64, gpa: u64, implicit: bool) -> Exception {
+        let tinst = if implicit { TINST_PSEUDO_PTE_READ } else { self.tinst };
+        Exception::new(self.stage2_cause(), va).with_gva(true).with_gpa(gpa).with_tinst(tinst)
+    }
+
+    fn access_fault(&self, va: u64) -> Exception {
+        Exception::new(self.access_cause(), va)
+    }
+}
+
+/// Full PTE permission byte used for identity stages.
+const FULL_PERMS: u8 = pte::V | pte::R | pte::W | pte::X | pte::A | pte::D;
+const FULL_PERMS_U: u8 = FULL_PERMS | pte::U;
+
+/// Translate a virtual address to a physical address, consulting the TLB
+/// first and walking the page tables on a miss. Returns the physical
+/// address; raises the appropriate page fault / guest-page fault / access
+/// fault otherwise.
+pub fn translate(
+    tlb: &mut Tlb,
+    stats: &mut MmuStats,
+    bus: &mut Bus,
+    ctx: &TranslateCtx,
+    va: u64,
+) -> Result<u64, Exception> {
+    let csr = ctx.csr;
+    // Stage configuration.
+    let (s1_on, s1_atp) = if ctx.virt {
+        (atp::mode(csr.vsatp) == atp::MODE_SV39, csr.vsatp)
+    } else if ctx.prv == PrivLevel::Machine {
+        (false, 0)
+    } else {
+        (atp::mode(csr.satp) == atp::MODE_SV39, csr.satp)
+    };
+    let s2_on = ctx.virt && atp::mode(csr.hgatp) == atp::MODE_SV39X4;
+
+    if !s1_on && !s2_on {
+        return Ok(va);
+    }
+
+    let asid = if s1_on { atp::asid(s1_atp) as u16 } else { 0 };
+    let vmid = if ctx.virt { atp::vmid(csr.hgatp) as u16 } else { 0 };
+    let vpn = va >> PAGE_SHIFT;
+
+    // TLB fast path.
+    if let Some(entry) = tlb.lookup(vpn, asid, vmid, ctx.virt) {
+        let entry = *entry;
+        stats.tlb_hits += 1;
+        check_entry(ctx, &entry, va)?;
+        return Ok((entry.host_ppn << PAGE_SHIFT) | (va & 0xfff));
+    }
+    stats.tlb_misses += 1;
+
+    let entry = walk(stats, bus, ctx, va, s1_on, s2_on, s1_atp, asid, vmid)?;
+    check_entry(ctx, &entry, va)?;
+    tlb.insert(entry);
+    Ok((entry.host_ppn << PAGE_SHIFT) | (va & 0xfff))
+}
+
+/// Apply `checkPermissions()` and convert a stage tag into the right fault.
+fn check_entry(ctx: &TranslateCtx, entry: &TlbEntry, va: u64) -> Result<(), Exception> {
+    let (sum, mxr) = if ctx.virt {
+        (
+            ctx.csr.vsstatus & mstatus::SUM != 0,
+            ctx.csr.vsstatus & mstatus::MXR != 0 || ctx.csr.mstatus & mstatus::MXR != 0,
+        )
+    } else {
+        (ctx.csr.mstatus & mstatus::SUM != 0, ctx.csr.mstatus & mstatus::MXR != 0)
+    };
+    // HLV/HSV with SPVP=1 behave as if SUM=1 (privileged spec: the
+    // hypervisor may reach guest user pages through explicit accesses).
+    let sum = sum || ctx.flags.forced_virt;
+    let pc = PermCtx { user: ctx.prv == PrivLevel::User, sum, mxr, hlvx: ctx.flags.hlvx };
+    match check_permissions(entry, ctx.access, pc) {
+        Ok(()) => Ok(()),
+        Err(FaultStage::Vs) => Err(ctx.stage1_fault(va)),
+        Err(FaultStage::G) => {
+            let gpa = (entry.guest_ppn << PAGE_SHIFT) | (va & 0xfff);
+            Err(ctx.stage2_fault(va, gpa, false))
+        }
+    }
+}
+
+/// The redesigned `walk()` procedure (paper §3.3): VS-stage walk whose
+/// intermediate page-table addresses are translated by `walk_g_stage()`.
+#[allow(clippy::too_many_arguments)]
+fn walk(
+    stats: &mut MmuStats,
+    bus: &mut Bus,
+    ctx: &TranslateCtx,
+    va: u64,
+    s1_on: bool,
+    s2_on: bool,
+    s1_atp: u64,
+    asid: u16,
+    vmid: u16,
+) -> Result<TlbEntry, Exception> {
+    stats.walks += 1;
+
+    // Sv39 canonicality: bits 63:39 must equal bit 38.
+    if s1_on {
+        let sext = (va as i64) << 25 >> 25;
+        if sext as u64 != va {
+            return Err(ctx.stage1_fault(va));
+        }
+    }
+
+    let mut entry = TlbEntry {
+        valid: true,
+        vpn: va >> PAGE_SHIFT,
+        asid,
+        vmid,
+        virt: ctx.virt,
+        host_ppn: 0,
+        guest_ppn: 0,
+        vs_perms: if ctx.virt { FULL_PERMS_U } else { FULL_PERMS },
+        g_perms: FULL_PERMS_U,
+        vs_level: 0,
+        g_level: 0,
+        global: false,
+        s1_bare: !s1_on,
+        lru: 0,
+    };
+
+    // ---- VS stage (or native single stage) ----
+    let gpa = if s1_on {
+        let mut a = atp::ppn(s1_atp) << PAGE_SHIFT; // GPA when V=1, PA otherwise
+        let mut level = LEVELS - 1;
+        loop {
+            let idx = (va >> (PAGE_SHIFT + 9 * level as u64)) & 0x1ff;
+            let pte_addr = a + idx * 8;
+            // "every page table address is virtual and must be translated
+            // to a physical address by the G-stage" (paper §3.3).
+            let pte_pa = if s2_on {
+                walk_g_stage(stats, bus, ctx, va, pte_addr, true)?.0
+            } else {
+                pte_addr
+            };
+            let raw = step(stats, bus, ctx, va, pte_pa)?;
+            let perms = (raw & 0xff) as u8;
+            let ppn = (raw >> 10) & ((1 << 44) - 1);
+            if perms & pte::V == 0 || (perms & pte::R == 0 && perms & pte::W != 0) {
+                return Err(ctx.stage1_fault(va));
+            }
+            if perms & (pte::R | pte::X) != 0 {
+                // Leaf. Superpage alignment check.
+                let span = (1u64 << (9 * level as u64)) - 1;
+                if ppn & span != 0 {
+                    return Err(ctx.stage1_fault(va));
+                }
+                entry.vs_perms = perms;
+                entry.vs_level = level as u8;
+                entry.global = perms & pte::G != 0;
+                let page = (ppn & !span) | ((va >> PAGE_SHIFT) & span);
+                break page << PAGE_SHIFT | (va & 0xfff);
+            }
+            // Non-leaf with U/A/D set is reserved.
+            if perms & (pte::U | pte::A | pte::D) != 0 {
+                return Err(ctx.stage1_fault(va));
+            }
+            level -= 1;
+            if level < 0 {
+                return Err(ctx.stage1_fault(va));
+            }
+            a = ppn << PAGE_SHIFT;
+        }
+    } else {
+        // vsatp.mode == BARE: guest virtual == guest physical (the paper's
+        // second_stage_only_translation scenario).
+        va
+    };
+
+    entry.guest_ppn = gpa >> PAGE_SHIFT;
+
+    // ---- G stage ----
+    if s2_on {
+        let (pa, g_perms, g_level) = walk_g_stage(stats, bus, ctx, va, gpa, false)?;
+        entry.host_ppn = pa >> PAGE_SHIFT;
+        entry.g_perms = g_perms;
+        entry.g_level = g_level;
+    } else {
+        entry.host_ppn = gpa >> PAGE_SHIFT;
+    }
+    Ok(entry)
+}
+
+/// G-stage translation (`walkGStage()`, paper §3.3): Sv39x4 — the root
+/// table is 16 KiB (VPN[2] widened to 11 bits) and the GPA is at most 41
+/// bits. Returns (physical address, leaf perms, level).
+///
+/// `implicit` marks translations of VS-stage page-table addresses; their
+/// guest-page faults report the pseudoinstruction tinst (paper §3.4,
+/// tinst_tests).
+fn walk_g_stage(
+    stats: &mut MmuStats,
+    bus: &mut Bus,
+    ctx: &TranslateCtx,
+    va: u64,
+    gpa: u64,
+    implicit: bool,
+) -> Result<(u64, u8, u8), Exception> {
+    stats.g_walks += 1;
+    // GPA width check (Sv39x4).
+    if gpa >> GPA_BITS != 0 {
+        return Err(ctx.stage2_fault(va, gpa, implicit));
+    }
+    let mut a = atp::ppn(ctx.csr.hgatp) << PAGE_SHIFT;
+    let mut level = LEVELS - 1;
+    loop {
+        // Top level uses 11 index bits (Sv39x4), lower levels 9.
+        let idx = if level == 2 { (gpa >> 30) & 0x7ff } else { (gpa >> (PAGE_SHIFT + 9 * level as u64)) & 0x1ff };
+        let pte_pa = a + idx * 8;
+        let raw = match bus.read(pte_pa, 8) {
+            Ok(v) => v,
+            Err(_) => return Err(ctx.access_fault(va)),
+        };
+        stats.g_walk_steps += 1;
+        let perms = (raw & 0xff) as u8;
+        let ppn = (raw >> 10) & ((1 << 44) - 1);
+        if perms & pte::V == 0 || (perms & pte::R == 0 && perms & pte::W != 0) {
+            return Err(ctx.stage2_fault(va, gpa, implicit));
+        }
+        if perms & (pte::R | pte::X) != 0 {
+            let span = (1u64 << (9 * level as u64)) - 1;
+            if ppn & span != 0 {
+                return Err(ctx.stage2_fault(va, gpa, implicit));
+            }
+            // Implicit PTE reads must be readable+accessed user pages now;
+            // the final data access is checked via checkPermissions.
+            if implicit && (perms & pte::U == 0 || perms & pte::R == 0 || perms & pte::A == 0) {
+                return Err(ctx.stage2_fault(va, gpa, implicit));
+            }
+            let page = (ppn & !span) | ((gpa >> PAGE_SHIFT) & span);
+            return Ok((page << PAGE_SHIFT | (gpa & 0xfff), perms, level as u8));
+        }
+        if perms & (pte::U | pte::A | pte::D) != 0 {
+            return Err(ctx.stage2_fault(va, gpa, implicit));
+        }
+        level -= 1;
+        if level < 0 {
+            return Err(ctx.stage2_fault(va, gpa, implicit));
+        }
+        a = ppn << PAGE_SHIFT;
+    }
+}
+
+/// One intermediate page-table access — gem5's `stepWalk()`.
+fn step(
+    stats: &mut MmuStats,
+    bus: &mut Bus,
+    ctx: &TranslateCtx,
+    va: u64,
+    pte_pa: u64,
+) -> Result<u64, Exception> {
+    stats.walk_steps += 1;
+    bus.read(pte_pa, 8).map_err(|_| ctx.access_fault(va))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::RAM_BASE;
+
+    const SV39: u64 = atp::MODE_SV39 << atp::MODE_SHIFT;
+
+    struct World {
+        bus: Bus,
+        tlb: Tlb,
+        stats: MmuStats,
+        csr: CsrFile,
+        alloc_next: u64,
+        /// Bump allocator in *guest physical* space for VS-stage tables.
+        gpa_alloc: u64,
+    }
+
+    impl World {
+        fn new() -> World {
+            World {
+                bus: Bus::new(8 << 20),
+                tlb: Tlb::default(),
+                stats: MmuStats::default(),
+                csr: CsrFile::new(true),
+                alloc_next: RAM_BASE + 0x10_0000,
+                gpa_alloc: 0x20_000,
+            }
+        }
+
+        fn alloc_table(&mut self, bytes: u64) -> u64 {
+            let a = self.alloc_next;
+            self.alloc_next += bytes;
+            a
+        }
+
+        /// Install a 4K leaf mapping va→pa into an Sv39 table rooted at
+        /// `root`, allocating intermediate tables; addresses are *physical*
+        /// (for G-stage tables) or guest-physical (VS tables in guest RAM).
+        fn map(&mut self, root: u64, va: u64, pa: u64, perms: u8, x4: bool) {
+            let mut a = root;
+            for level in (1..3).rev() {
+                let idx = if x4 && level == 2 {
+                    (va >> 30) & 0x7ff
+                } else {
+                    (va >> (12 + 9 * level)) & 0x1ff
+                };
+                let pte_addr = a + idx * 8;
+                let raw = self.bus.read(pte_addr, 8).unwrap();
+                if raw & 1 == 0 {
+                    let next = self.alloc_table(4096);
+                    let pte = ((next >> 12) << 10) | 1;
+                    self.bus.write(pte_addr, 8, pte).unwrap();
+                    a = next;
+                } else {
+                    a = ((raw >> 10) & ((1 << 44) - 1)) << 12;
+                }
+            }
+            let idx = (va >> 12) & 0x1ff;
+            let pte = ((pa >> 12) << 10) | perms as u64;
+            self.bus.write(a + idx * 8, 8, pte).unwrap();
+        }
+
+        fn xlate(&mut self, va: u64, access: Access, prv: PrivLevel, virt: bool) -> Result<u64, Exception> {
+            let ctx = TranslateCtx {
+                csr: &self.csr,
+                prv,
+                virt,
+                access,
+                flags: XlateFlags::default(),
+                tinst: 0x00c5_3083, // pretend transformed ld
+            };
+            translate(&mut self.tlb, &mut self.stats, &mut self.bus, &ctx, va)
+        }
+    }
+
+    const RWXAD: u8 = pte::V | pte::R | pte::W | pte::X | pte::A | pte::D;
+
+    #[test]
+    fn machine_mode_is_bare() {
+        let mut w = World::new();
+        w.csr.satp = SV39 | ((RAM_BASE + 0x1000) >> 12);
+        assert_eq!(w.xlate(RAM_BASE + 8, Access::Read, PrivLevel::Machine, false).unwrap(), RAM_BASE + 8);
+    }
+
+    #[test]
+    fn single_stage_walk_and_tlb_hit() {
+        let mut w = World::new();
+        let root = w.alloc_table(4096);
+        w.csr.satp = SV39 | (root >> 12);
+        let va = 0x4000_1000u64;
+        let pa = RAM_BASE + 0x5000;
+        w.map(root, va, pa, RWXAD, false);
+        assert_eq!(w.xlate(va + 4, Access::Read, PrivLevel::Supervisor, false).unwrap(), pa + 4);
+        assert_eq!(w.stats.walks, 1);
+        assert_eq!(w.stats.walk_steps, 3, "3-level walk (paper Fig. 3)");
+        // Second access hits the TLB: no extra walk.
+        assert_eq!(w.xlate(va + 8, Access::Read, PrivLevel::Supervisor, false).unwrap(), pa + 8);
+        assert_eq!(w.stats.walks, 1);
+        assert_eq!(w.stats.tlb_hits, 1);
+    }
+
+    #[test]
+    fn unmapped_raises_page_fault_with_cause_by_access() {
+        let mut w = World::new();
+        let root = w.alloc_table(4096);
+        w.csr.satp = SV39 | (root >> 12);
+        let e = w.xlate(0x9000, Access::Read, PrivLevel::Supervisor, false).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::LoadPageFault);
+        assert_eq!(e.tval, 0x9000);
+        assert!(!e.gva);
+        let e = w.xlate(0x9000, Access::Write, PrivLevel::Supervisor, false).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::StorePageFault);
+        let e = w.xlate(0x9000, Access::Execute, PrivLevel::Supervisor, false).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::InstPageFault);
+    }
+
+    #[test]
+    fn non_canonical_sv39_faults() {
+        let mut w = World::new();
+        let root = w.alloc_table(4096);
+        w.csr.satp = SV39 | (root >> 12);
+        let e = w.xlate(1 << 45, Access::Read, PrivLevel::Supervisor, false).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::LoadPageFault);
+    }
+
+    /// Host backing of guest physical address 0.
+    const GPA_HOST_OFF: u64 = RAM_BASE + (2 << 20);
+
+    fn setup_two_stage(w: &mut World) -> (u64, u64) {
+        // G-stage root (Sv39x4 → 16 KiB) in host RAM; VS root in "guest
+        // physical" space which we back 1:1 at RAM_BASE+2M..
+        let g_root = w.alloc_table(16384);
+        w.csr.hgatp = (atp::MODE_SV39X4 << atp::MODE_SHIFT) | (3u64 << atp::VMID_SHIFT) | (g_root >> 12);
+        // Guest physical [0, 4M) → host [RAM_BASE+2M, RAM_BASE+6M).
+        for gp in 0..1024u64 {
+            let gpa = gp << 12;
+            let hpa = GPA_HOST_OFF + (gp << 12);
+            w.map(g_root, gpa, hpa, RWXAD | pte::U, true);
+        }
+        // VS root lives at guest physical 0x10000.
+        let vs_root_gpa = 0x10_000u64;
+        w.csr.vsatp = SV39 | (5u64 << atp::ASID_SHIFT) | (vs_root_gpa >> 12);
+        (vs_root_gpa, g_root)
+    }
+
+    /// Map guest virtual → guest physical in the VS table. Intermediate
+    /// pointers hold *guest-physical* PPNs; PTE writes go through the 1:1
+    /// host backing at GPA_HOST_OFF.
+    fn map_vs(w: &mut World, vs_root_gpa: u64, gva: u64, gpa: u64, perms: u8) {
+        let mut a_gpa = vs_root_gpa;
+        for level in (1..3).rev() {
+            let idx = (gva >> (12 + 9 * level)) & 0x1ff;
+            let pte_haddr = GPA_HOST_OFF + a_gpa + idx * 8;
+            let raw = w.bus.read(pte_haddr, 8).unwrap();
+            if raw & 1 == 0 {
+                let next_gpa = w.gpa_alloc;
+                w.gpa_alloc += 0x1000;
+                w.bus.write(pte_haddr, 8, ((next_gpa >> 12) << 10) | 1).unwrap();
+                a_gpa = next_gpa;
+            } else {
+                a_gpa = ((raw >> 10) & ((1 << 44) - 1)) << 12;
+            }
+        }
+        let idx = (gva >> 12) & 0x1ff;
+        let ptev = ((gpa >> 12) << 10) | perms as u64;
+        w.bus.write(GPA_HOST_OFF + a_gpa + idx * 8, 8, ptev).unwrap();
+    }
+
+    #[test]
+    fn two_stage_translation_end_to_end() {
+        let mut w = World::new();
+        let (vs_root, _) = setup_two_stage(&mut w);
+        let gva = 0x7000_0000u64;
+        let gpa = 0x30_000u64;
+        map_vs(&mut w, vs_root, gva, gpa, RWXAD);
+        let pa = w.xlate(gva + 0x24, Access::Read, PrivLevel::Supervisor, true).unwrap();
+        assert_eq!(pa, RAM_BASE + (2 << 20) + gpa + 0x24);
+        // Fig. 3: each VS-stage step triggered a G-stage walk, plus the
+        // final GPA translation.
+        assert_eq!(w.stats.walks, 1);
+        assert_eq!(w.stats.walk_steps, 3);
+        assert_eq!(w.stats.g_walks, 4, "3 PTE translations + final");
+        // TLB caches the whole two-stage result.
+        w.xlate(gva, Access::Read, PrivLevel::Supervisor, true).unwrap();
+        assert_eq!(w.stats.walks, 1);
+    }
+
+    #[test]
+    fn vs_stage_fault_is_plain_page_fault_with_gva() {
+        let mut w = World::new();
+        setup_two_stage(&mut w);
+        let e = w.xlate(0x7000_0000, Access::Write, PrivLevel::Supervisor, true).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::StorePageFault);
+        assert!(e.gva, "stval holds a guest VA → GVA set");
+    }
+
+    #[test]
+    fn g_stage_fault_is_guest_page_fault_with_gpa() {
+        let mut w = World::new();
+        let (vs_root, _) = setup_two_stage(&mut w);
+        let gva = 0x7000_0000u64;
+        let gpa_unmapped = 0x80_0000u64; // beyond the 4M G-stage mapping
+        map_vs(&mut w, vs_root, gva, gpa_unmapped, RWXAD);
+        let e = w.xlate(gva + 8, Access::Read, PrivLevel::Supervisor, true).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::LoadGuestPageFault);
+        assert!(e.gva);
+        assert_eq!(e.gpa, gpa_unmapped + 8, "faulting GPA recorded for htval/mtval2");
+        assert_eq!(e.tinst, 0x00c5_3083, "explicit access → transformed inst");
+    }
+
+    #[test]
+    fn implicit_pte_access_fault_reports_pseudoinstruction() {
+        let mut w = World::new();
+        let g_root = w.alloc_table(16384);
+        w.csr.hgatp = (atp::MODE_SV39X4 << atp::MODE_SHIFT) | (g_root >> 12);
+        // VS root points at a guest-physical page with NO G-stage mapping:
+        // the very first VS-stage PTE read guest-faults.
+        w.csr.vsatp = SV39 | (0x10_000u64 >> 12);
+        let e = w.xlate(0x1000, Access::Read, PrivLevel::Supervisor, true).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::LoadGuestPageFault);
+        assert_eq!(e.tinst, TINST_PSEUDO_PTE_READ, "implicit access → pseudoinstruction");
+    }
+
+    #[test]
+    fn second_stage_only_translation() {
+        // Paper §3.4: vsatp mode zero (BARE) → G-stage only.
+        let mut w = World::new();
+        setup_two_stage(&mut w);
+        w.csr.vsatp = 0;
+        let gpa = 0x30_000u64;
+        let pa = w.xlate(gpa + 4, Access::Read, PrivLevel::Supervisor, true).unwrap();
+        assert_eq!(pa, RAM_BASE + (2 << 20) + gpa + 4);
+        assert_eq!(w.stats.g_walks, 1, "single G-stage walk");
+        assert_eq!(w.stats.walk_steps, 0, "no VS-stage steps");
+    }
+
+    #[test]
+    fn gpa_width_check_sv39x4() {
+        let mut w = World::new();
+        setup_two_stage(&mut w);
+        w.csr.vsatp = 0; // BARE: gva == gpa
+        let e = w.xlate(1 << 41, Access::Read, PrivLevel::Supervisor, true).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::LoadGuestPageFault);
+    }
+
+    #[test]
+    fn megapage_mapping() {
+        let mut w = World::new();
+        let root = w.alloc_table(4096);
+        w.csr.satp = SV39 | (root >> 12);
+        // 2M leaf at level 1: write the level-1 PTE directly.
+        let l1 = w.alloc_table(4096);
+        let va = 0x4000_0000u64;
+        w.bus.write(root + ((va >> 30) & 0x1ff) * 8, 8, ((l1 >> 12) << 10) | 1).unwrap();
+        let pa_base = RAM_BASE + (4 << 20); // 2M-aligned
+        w.bus
+            .write(l1 + ((va >> 21) & 0x1ff) * 8, 8, ((pa_base >> 12) << 10) | RWXAD as u64)
+            .unwrap();
+        let pa = w.xlate(va + 0x12_3456, Access::Read, PrivLevel::Supervisor, false).unwrap();
+        assert_eq!(pa, pa_base + 0x12_3456);
+        // Misaligned superpage (ppn low bits set) must fault.
+        w.tlb.flush_all();
+        w.bus
+            .write(l1 + ((va >> 21) & 0x1ff) * 8, 8, (((pa_base + 0x1000) >> 12) << 10) | RWXAD as u64)
+            .unwrap();
+        let e = w.xlate(va, Access::Read, PrivLevel::Supervisor, false).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::LoadPageFault);
+    }
+
+    #[test]
+    fn user_page_protection() {
+        let mut w = World::new();
+        let root = w.alloc_table(4096);
+        w.csr.satp = SV39 | (root >> 12);
+        let va = 0x1000u64;
+        w.map(root, va, RAM_BASE + 0x7000, RWXAD, false); // no U bit
+        let e = w.xlate(va, Access::Read, PrivLevel::User, false).unwrap_err();
+        assert_eq!(e.cause, ExceptionCause::LoadPageFault);
+        // S-mode ok.
+        assert!(w.xlate(va, Access::Read, PrivLevel::Supervisor, false).is_ok());
+    }
+}

@@ -1,0 +1,290 @@
+//! PJRT runtime: loads the AOT-compiled XLA timing model
+//! (`artifacts/model.hlo.txt`, produced once by `make artifacts`) and runs
+//! it from the Rust side. Python is never on this path — the artifact is
+//! HLO text compiled by the in-process PJRT CPU client (see
+//! DESIGN.md §6 and /opt/xla-example/README.md for the interchange
+//! rationale).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::{TraceBuf, WindowBatcher, WINDOW};
+
+/// Per-window analytics produced by the XLA model (Layer 2 outputs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WindowReport {
+    pub hits: i64,
+    pub misses: i64,
+    pub valid: i64,
+    /// Estimated translation cycles under single-stage Sv39 (native).
+    pub cycles_native: i64,
+    /// Estimated translation cycles under two-stage Sv39x4 (guest).
+    pub cycles_guest: i64,
+    /// guest/native overhead ratio × 1e4.
+    pub ratio_x1e4: i64,
+}
+
+/// Whole-trace aggregate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceReport {
+    pub windows: u64,
+    pub refs: i64,
+    pub hits: i64,
+    pub misses: i64,
+    pub cycles_native: i64,
+    pub cycles_guest: i64,
+}
+
+impl TraceReport {
+    pub fn miss_rate(&self) -> f64 {
+        if self.refs == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.refs as f64
+        }
+    }
+    /// Modeled guest/native translation-overhead ratio.
+    pub fn overhead_ratio(&self) -> f64 {
+        if self.cycles_native == 0 {
+            1.0
+        } else {
+            self.cycles_guest as f64 / self.cycles_native as f64
+        }
+    }
+}
+
+/// Geometry parsed from the sidecar manifest written by aot.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub window: usize,
+    pub sets: usize,
+    pub ways: usize,
+    pub outputs: usize,
+}
+
+pub fn read_manifest(dir: &Path) -> Result<Manifest> {
+    read_manifest_stem(dir, "model")
+}
+
+pub fn read_manifest_stem(dir: &Path, stem: &str) -> Result<Manifest> {
+    let path = dir.join(format!("{stem}.manifest"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut m = Manifest { window: 0, sets: 0, ways: 0, outputs: 0 };
+    for line in text.lines() {
+        let Some((k, v)) = line.split_once('=') else { continue };
+        let v: usize = v.trim().parse().with_context(|| format!("manifest line '{line}'"))?;
+        match k.trim() {
+            "window" => m.window = v,
+            "sets" => m.sets = v,
+            "ways" => m.ways = v,
+            "outputs" => m.outputs = v,
+            _ => {}
+        }
+    }
+    if m.window == 0 || m.sets == 0 || m.ways == 0 {
+        bail!("incomplete manifest {path:?}: {m:?}");
+    }
+    Ok(m)
+}
+
+/// The loaded, compiled timing model plus its threaded TLB state.
+pub struct TimingEngine {
+    exe: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+    tags: Vec<i32>,
+    lru: Vec<i32>,
+    clock: i32,
+}
+
+impl TimingEngine {
+    /// Load `model.hlo.txt` from `dir` and compile it on the PJRT CPU
+    /// client.
+    pub fn load(dir: &Path) -> Result<TimingEngine> {
+        Self::load_variant(dir, "model")
+    }
+
+    /// Load a DSE geometry variant, e.g. `model_16x2` (see aot.py's
+    /// DSE_GEOMETRIES).
+    pub fn load_variant(dir: &Path, stem: &str) -> Result<TimingEngine> {
+        let manifest = read_manifest_stem(dir, stem)?;
+        if manifest.window != WINDOW {
+            bail!(
+                "artifact window {} != simulator WINDOW {WINDOW}; \
+                 rebuild artifacts (make artifacts)",
+                manifest.window
+            );
+        }
+        let hlo = dir.join(format!("{stem}.hlo.txt"));
+        if !hlo.exists() {
+            bail!("{hlo:?} missing — run `make artifacts`");
+        }
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow).context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 artifacts path")?,
+        )
+        .map_err(to_anyhow)
+        .with_context(|| format!("parsing {hlo:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(to_anyhow).context("compiling timing model")?;
+        let mut eng = TimingEngine { exe, manifest, tags: Vec::new(), lru: Vec::new(), clock: 0 };
+        eng.reset();
+        Ok(eng)
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn manifest(&self) -> Manifest {
+        self.manifest
+    }
+
+    /// Clear the threaded TLB-model state.
+    pub fn reset(&mut self) {
+        let n = self.manifest.sets * self.manifest.ways;
+        self.tags = vec![-1i32; n];
+        self.lru = vec![0i32; n];
+        self.clock = 0;
+    }
+
+    /// Run one zero-padded window (length must equal the artifact window).
+    pub fn run_window(&mut self, recs: &[i32]) -> Result<WindowReport> {
+        if recs.len() != self.manifest.window {
+            bail!("window length {} != {}", recs.len(), self.manifest.window);
+        }
+        let (sets, ways) = (self.manifest.sets as i64, self.manifest.ways as i64);
+        let recs_l = xla::Literal::vec1(recs);
+        let tags_l = xla::Literal::vec1(&self.tags).reshape(&[sets, ways]).map_err(to_anyhow)?;
+        let lru_l = xla::Literal::vec1(&self.lru).reshape(&[sets, ways]).map_err(to_anyhow)?;
+        let clock_l = xla::Literal::vec1(&[self.clock]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[recs_l, tags_l, lru_l, clock_l])
+            .map_err(to_anyhow)
+            .context("executing timing model")?[0][0]
+            .to_literal_sync()
+            .map_err(to_anyhow)?;
+        let outs = result.to_tuple().map_err(to_anyhow)?;
+        if outs.len() != 9 {
+            bail!("expected 9 outputs, got {}", outs.len());
+        }
+        let scalar = |l: &xla::Literal| -> Result<i64> {
+            Ok(l.to_vec::<i32>().map_err(to_anyhow)?[0] as i64)
+        };
+        let report = WindowReport {
+            hits: scalar(&outs[0])?,
+            misses: scalar(&outs[1])?,
+            valid: scalar(&outs[2])?,
+            cycles_native: scalar(&outs[3])?,
+            cycles_guest: scalar(&outs[4])?,
+            ratio_x1e4: scalar(&outs[5])?,
+        };
+        self.tags = outs[6].to_vec::<i32>().map_err(to_anyhow)?;
+        self.lru = outs[7].to_vec::<i32>().map_err(to_anyhow)?;
+        self.clock = outs[8].to_vec::<i32>().map_err(to_anyhow)?[0];
+        Ok(report)
+    }
+
+    /// Analyze a whole trace: batch into windows, thread state, aggregate.
+    pub fn analyze(&mut self, trace: &TraceBuf) -> Result<TraceReport> {
+        let mut agg = TraceReport::default();
+        for (window, _valid) in WindowBatcher::new(trace) {
+            let recs: Vec<i32> = window.iter().map(|&r| r as i32).collect();
+            let w = self.run_window(&recs)?;
+            agg.windows += 1;
+            agg.refs += w.valid;
+            agg.hits += w.hits;
+            agg.misses += w.misses;
+            agg.cycles_native += w.cycles_native;
+            agg.cycles_guest += w.cycles_guest;
+        }
+        Ok(agg)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<TimingEngine> {
+        // Skip (not fail) when artifacts haven't been built — `make test`
+        // builds them first; raw `cargo test` may not.
+        TimingEngine::load(&TimingEngine::default_dir()).ok()
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let dir = TimingEngine::default_dir();
+        if !dir.join("model.manifest").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m.window, WINDOW);
+        assert_eq!(m.outputs, 9);
+    }
+
+    #[test]
+    fn window_end_to_end_matches_tlb_semantics() {
+        let Some(mut eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // 10 distinct pages then repeats: 10 cold misses, rest hits.
+        let mut recs = vec![0i32; WINDOW];
+        for (i, r) in recs.iter_mut().take(100).enumerate() {
+            *r = ((((i % 10) + 1) << 2) | 1) as i32;
+        }
+        let w = eng.run_window(&recs).unwrap();
+        assert_eq!(w.valid, 100);
+        assert_eq!(w.misses, 10);
+        assert_eq!(w.hits, 90);
+        assert_eq!(w.cycles_native, 100 + 10 * 3);
+        assert_eq!(w.cycles_guest, 100 + 10 * 15);
+        // State threads: re-running the same window is all hits.
+        let w2 = eng.run_window(&recs).unwrap();
+        assert_eq!(w2.misses, 0);
+        assert_eq!(w2.hits, 100);
+    }
+
+    #[test]
+    fn analyze_trace_aggregates() {
+        let Some(mut eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut t = crate::trace::TraceBuf::new(WINDOW * 2 + 10);
+        for i in 0..(WINDOW * 2 + 10) as u64 {
+            t.push((1 + (i % 64)) << 12, crate::trace::KIND_LOAD);
+        }
+        let r = eng.analyze(&t).unwrap();
+        assert_eq!(r.windows, 3);
+        assert_eq!(r.refs as usize, WINDOW * 2 + 10);
+        assert_eq!(r.misses, 64, "64 pages fit the 256-entry TLB: cold misses only");
+        assert!(r.overhead_ratio() > 1.0);
+    }
+
+    #[test]
+    fn reset_clears_threaded_state() {
+        let Some(mut eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut recs = vec![0i32; WINDOW];
+        recs[0] = 5 << 2;
+        let w1 = eng.run_window(&recs).unwrap();
+        assert_eq!(w1.misses, 1);
+        let w2 = eng.run_window(&recs).unwrap();
+        assert_eq!(w2.misses, 0, "hit after threading");
+        eng.reset();
+        let w3 = eng.run_window(&recs).unwrap();
+        assert_eq!(w3.misses, 1, "cold again after reset");
+    }
+}

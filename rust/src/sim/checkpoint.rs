@@ -1,0 +1,293 @@
+//! Checkpoints: snapshot/restore the full architectural + device state.
+//!
+//! The paper's Fig. 4 methodology boots once and restores a checkpoint per
+//! benchmark "to ensure that only the current benchmark is being studied"
+//! (§4.1); [`save`]/[`restore`] provide the same capability. The format is
+//! a small self-describing binary blob; RAM is stored sparsely (non-zero
+//! 4 KiB pages only).
+
+use anyhow::{bail, Context, Result};
+
+use super::Machine;
+
+const MAGIC: &[u8; 8] = b"HVSIMCK1";
+const PAGE: usize = 4096;
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated checkpoint");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// CSR fields serialized in fixed order. Keep in sync with `restore`.
+fn csr_fields(c: &crate::cpu::CsrFile) -> [u64; 44] {
+    [
+        c.mstatus, c.vsstatus, c.medeleg, c.mideleg, c.hedeleg, c.hideleg, c.mie, c.mip, c.mtvec,
+        c.stvec, c.vstvec, c.mscratch, c.sscratch, c.vsscratch, c.mepc, c.sepc, c.vsepc, c.mcause,
+        c.scause, c.vscause, c.mtval, c.stval, c.vstval, c.mtval2, c.htval, c.mtinst, c.htinst,
+        c.mcounteren, c.scounteren, c.hcounteren, c.menvcfg, c.senvcfg, c.henvcfg, c.satp,
+        c.vsatp, c.hgatp, c.hstatus, c.hgeip, c.hgeie, c.htimedelta, c.mcycle, c.minstret,
+        c.time, c.fcsr,
+    ]
+}
+
+fn csr_restore(c: &mut crate::cpu::CsrFile, f: &[u64; 44]) {
+    let [mstatus, vsstatus, medeleg, mideleg, hedeleg, hideleg, mie, mip, mtvec, stvec, vstvec, mscratch, sscratch, vsscratch, mepc, sepc, vsepc, mcause, scause, vscause, mtval, stval, vstval, mtval2, htval, mtinst, htinst, mcounteren, scounteren, hcounteren, menvcfg, senvcfg, henvcfg, satp, vsatp, hgatp, hstatus, hgeip, hgeie, htimedelta, mcycle, minstret, time, fcsr] =
+        *f;
+    c.mstatus = mstatus;
+    c.vsstatus = vsstatus;
+    c.medeleg = medeleg;
+    c.mideleg = mideleg;
+    c.hedeleg = hedeleg;
+    c.hideleg = hideleg;
+    c.mie = mie;
+    c.mip = mip;
+    c.mtvec = mtvec;
+    c.stvec = stvec;
+    c.vstvec = vstvec;
+    c.mscratch = mscratch;
+    c.sscratch = sscratch;
+    c.vsscratch = vsscratch;
+    c.mepc = mepc;
+    c.sepc = sepc;
+    c.vsepc = vsepc;
+    c.mcause = mcause;
+    c.scause = scause;
+    c.vscause = vscause;
+    c.mtval = mtval;
+    c.stval = stval;
+    c.vstval = vstval;
+    c.mtval2 = mtval2;
+    c.htval = htval;
+    c.mtinst = mtinst;
+    c.htinst = htinst;
+    c.mcounteren = mcounteren;
+    c.scounteren = scounteren;
+    c.hcounteren = hcounteren;
+    c.menvcfg = menvcfg;
+    c.senvcfg = senvcfg;
+    c.henvcfg = henvcfg;
+    c.satp = satp;
+    c.vsatp = vsatp;
+    c.hgatp = hgatp;
+    c.hstatus = hstatus;
+    c.hgeip = hgeip;
+    c.hgeie = hgeie;
+    c.htimedelta = htimedelta;
+    c.mcycle = mcycle;
+    c.minstret = minstret;
+    c.time = time;
+    c.fcsr = fcsr;
+}
+
+/// Serialize the machine to a checkpoint blob.
+pub fn save(m: &Machine) -> Vec<u8> {
+    let mut w = Writer { buf: Vec::with_capacity(1 << 20) };
+    w.buf.extend_from_slice(MAGIC);
+    // Hart.
+    let h = &m.core.hart;
+    for r in h.regs {
+        w.u64(r);
+    }
+    for r in h.fregs {
+        w.u64(r);
+    }
+    w.u64(h.pc);
+    w.u8(h.prv.bits() as u8);
+    w.u8(h.virt as u8);
+    w.u8(h.wfi as u8);
+    w.u8(h.csr.h_enabled as u8);
+    for v in csr_fields(&h.csr) {
+        w.u64(v);
+    }
+    // Devices.
+    w.u64(m.bus.clint.mtime);
+    w.u64(m.bus.clint.mtimecmp);
+    w.u8(m.bus.clint.msip as u8);
+    w.u32(m.bus.plic.pending);
+    w.u32(m.bus.plic.enable[0]);
+    w.u32(m.bus.plic.enable[1]);
+    w.u32(m.bus.plic.threshold[0]);
+    w.u32(m.bus.plic.threshold[1]);
+    // Sim counters.
+    w.u64(m.stats.sim_ticks);
+    w.u64(m.stats.sim_insts);
+    // RAM: sparse non-zero pages.
+    let ram = m.bus.ram_bytes();
+    w.u64(ram.len() as u64);
+    let mut nonzero: Vec<u32> = Vec::new();
+    for (i, page) in ram.chunks(PAGE).enumerate() {
+        if page.iter().any(|&b| b != 0) {
+            nonzero.push(i as u32);
+        }
+    }
+    w.u32(nonzero.len() as u32);
+    for &p in &nonzero {
+        w.u32(p);
+        let off = p as usize * PAGE;
+        w.buf.extend_from_slice(&ram[off..(off + PAGE).min(ram.len())]);
+    }
+    w.buf
+}
+
+/// Restore a machine from a checkpoint blob (RAM size must match).
+pub fn restore(m: &mut Machine, blob: &[u8]) -> Result<()> {
+    let mut r = Reader { buf: blob, pos: 0 };
+    if r.take(8)? != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let h = &mut m.core.hart;
+    for i in 0..32 {
+        h.regs[i] = r.u64()?;
+    }
+    for i in 0..32 {
+        h.fregs[i] = r.u64()?;
+    }
+    h.pc = r.u64()?;
+    h.prv = crate::isa::PrivLevel::from_bits(r.u8()? as u64);
+    h.virt = r.u8()? != 0;
+    h.wfi = r.u8()? != 0;
+    let h_enabled = r.u8()? != 0;
+    if h_enabled != h.csr.h_enabled {
+        bail!("checkpoint H-extension setting mismatch");
+    }
+    let mut fields = [0u64; 44];
+    for f in fields.iter_mut() {
+        *f = r.u64()?;
+    }
+    csr_restore(&mut h.csr, &fields);
+    h.reservation = None;
+    m.bus.clint.mtime = r.u64()?;
+    m.bus.clint.mtimecmp = r.u64()?;
+    m.bus.clint.msip = r.u8()? != 0;
+    m.bus.plic.pending = r.u32()?;
+    m.bus.plic.enable[0] = r.u32()?;
+    m.bus.plic.enable[1] = r.u32()?;
+    m.bus.plic.threshold[0] = r.u32()?;
+    m.bus.plic.threshold[1] = r.u32()?;
+    m.stats.sim_ticks = r.u64()?;
+    m.stats.sim_insts = r.u64()?;
+    let ram_len = r.u64()? as usize;
+    if ram_len != m.bus.ram_bytes().len() {
+        bail!("checkpoint RAM size {} != machine RAM {}", ram_len, m.bus.ram_bytes().len());
+    }
+    m.bus.ram_bytes_mut().fill(0);
+    let npages = r.u32()?;
+    for _ in 0..npages {
+        let p = r.u32()? as usize;
+        let data = r.take(PAGE.min(ram_len - p * PAGE))?;
+        let data = data.to_vec();
+        m.bus.ram_bytes_mut()[p * PAGE..p * PAGE + data.len()].copy_from_slice(&data);
+    }
+    // Microarchitectural (non-architectural) state resets.
+    m.core.tlb.flush_all();
+    Ok(())
+}
+
+pub fn save_to_file(m: &Machine, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, save(m)).with_context(|| format!("writing checkpoint {path:?}"))
+}
+
+pub fn restore_from_file(m: &mut Machine, path: &std::path::Path) -> Result<()> {
+    let blob = std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+    restore(m, &blob)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::mem::RAM_BASE;
+    use crate::sim::ExitReason;
+
+    #[test]
+    fn round_trip_preserves_execution() {
+        // Program: count to 100 in t0, then exit(0x5555). Checkpoint at 50
+        // iterations; the restored machine must finish identically.
+        let src = r#"
+            li t0, 0
+            li t1, 100
+        loop:
+            addi t0, t0, 1
+            blt t0, t1, loop
+            li t2, 0x100000
+            li t3, 0x5555
+            sw t3, 0(t2)
+        "#;
+        let img = assemble(src, RAM_BASE).unwrap();
+        let mut m = crate::sim::Machine::new(4 << 20, true);
+        m.load(&img).unwrap();
+        m.set_entry(RAM_BASE);
+        m.run(100); // partway through the loop
+        let t0_at_ck = m.core.hart.regs[5];
+        assert!(t0_at_ck > 0 && t0_at_ck < 100);
+        let blob = save(&m);
+
+        // Scramble a fresh machine, restore, finish.
+        let mut m2 = crate::sim::Machine::new(4 << 20, true);
+        m2.core.hart.regs[5] = 0xdead;
+        restore(&mut m2, &blob).unwrap();
+        assert_eq!(m2.core.hart.regs[5], t0_at_ck);
+        assert_eq!(m2.core.hart.pc, m.core.hart.pc);
+        assert_eq!(m2.run(100_000), ExitReason::PowerOff(0x5555));
+        assert_eq!(m2.core.hart.regs[5], 100);
+    }
+
+    #[test]
+    fn ram_size_mismatch_rejected() {
+        let m = crate::sim::Machine::new(4 << 20, true);
+        let blob = save(&m);
+        let mut m2 = crate::sim::Machine::new(8 << 20, true);
+        assert!(restore(&mut m2, &blob).is_err());
+    }
+
+    #[test]
+    fn h_setting_mismatch_rejected() {
+        let m = crate::sim::Machine::new(1 << 20, true);
+        let blob = save(&m);
+        let mut m2 = crate::sim::Machine::new(1 << 20, false);
+        assert!(restore(&mut m2, &blob).is_err());
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let m = crate::sim::Machine::new(1 << 20, true);
+        let blob = save(&m);
+        assert!(restore(&mut crate::sim::Machine::new(1 << 20, true), &blob[..40]).is_err());
+    }
+}

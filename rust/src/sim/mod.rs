@@ -1,0 +1,266 @@
+//! The simulated machine: one hart + bus + devices, the tick loop, the
+//! stats machinery and checkpoints (gem5 FS-mode analog, atomic CPU).
+
+pub mod checkpoint;
+pub mod stats;
+
+pub use stats::SimStats;
+
+use std::time::Instant;
+
+use crate::cpu::{step, Core, StepEvent};
+use crate::mem::Bus;
+
+/// Timebase: CLINT mtime advances one unit every `TIME_DIVIDER` ticks
+/// (instructions), mimicking a 10 MHz timebase on a ~1 GIPS core.
+pub const TIME_DIVIDER: u64 = 100;
+
+/// Why a run loop returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExitReason {
+    /// SYSCON poweroff: code 0x5555 = pass, anything else = fail.
+    PowerOff(u32),
+    /// Tick limit reached.
+    Limit,
+    /// A custom predicate fired.
+    Predicate,
+}
+
+/// The full-system machine.
+pub struct Machine {
+    pub core: Core,
+    pub bus: Bus,
+    pub stats: SimStats,
+    /// Ticks remaining until the next device update (§Perf: avoids a
+    /// modulo in the hot loop).
+    device_countdown: u64,
+}
+
+impl Machine {
+    pub fn new(ram_bytes: usize, h_enabled: bool) -> Machine {
+        Machine {
+            core: Core::new(h_enabled),
+            bus: Bus::new(ram_bytes),
+            stats: SimStats::default(),
+            device_countdown: 0,
+        }
+    }
+
+    /// Enable virtual-reference tracing (feeds the XLA timing model).
+    pub fn enable_trace(&mut self, cap: usize) {
+        self.core.trace = Some(crate::trace::TraceBuf::new(cap));
+    }
+
+    /// Load an assembled image into RAM.
+    pub fn load(&mut self, image: &crate::asm::Image) -> anyhow::Result<()> {
+        self.bus
+            .load_image(image.base, &image.data)
+            .map_err(|_| anyhow::anyhow!("image at {:#x} does not fit in RAM", image.base))?;
+        Ok(())
+    }
+
+    /// Reset the PC (and mode) to the boot state: M-mode at `entry`.
+    pub fn set_entry(&mut self, entry: u64) {
+        self.core.hart.pc = entry;
+    }
+
+    /// One tick: device update + CPU step + stats accounting.
+    #[inline]
+    pub fn tick(&mut self) -> StepEvent {
+        // Device timebase (coarse: every TIME_DIVIDER ticks).
+        if self.device_countdown == 0 {
+            self.device_countdown = TIME_DIVIDER;
+            self.bus.clint.tick(1);
+            let csr = &mut self.core.hart.csr;
+            csr.time = self.bus.clint.mtime;
+            // mcycle advances at device granularity (TIME_DIVIDER ticks);
+            // fine for the software stack, cheaper than a per-tick store.
+            csr.mcycle = self.stats.sim_ticks;
+            // Refresh device-driven mip lines.
+            use crate::isa::csr::irq;
+            let mut set = 0u64;
+            let mut clr = 0u64;
+            if self.bus.clint.mtip() {
+                set |= irq::MTIP;
+            } else {
+                clr |= irq::MTIP;
+            }
+            if self.bus.clint.msip() {
+                set |= irq::MSIP;
+            } else {
+                clr |= irq::MSIP;
+            }
+            let (meip, seip) = self.bus.plic.irq_lines();
+            if meip {
+                set |= irq::MEIP;
+            } else {
+                clr |= irq::MEIP;
+            }
+            if seip {
+                set |= irq::SEIP;
+            } else {
+                clr |= irq::SEIP;
+            }
+            csr.set_mip_bits(set);
+            csr.clear_mip_bits(clr);
+        }
+        self.device_countdown -= 1;
+        let ev = step(&mut self.core, &mut self.bus);
+        self.stats.sim_ticks += 1;
+        match ev {
+            StepEvent::Retired => {
+                self.stats.sim_insts += 1;
+            }
+            StepEvent::Exception(cause, target) => {
+                self.stats.record_exception(cause, target);
+            }
+            StepEvent::Interrupt(cause, target) => {
+                self.stats.record_interrupt(cause, target);
+            }
+            StepEvent::WfiIdle => {
+                self.stats.wfi_ticks += 1;
+                // Fast-forward the timebase while parked so WFI terminates
+                // in O(1) host work instead of TIME_DIVIDER idle spins.
+                self.stats.sim_ticks += self.device_countdown;
+                self.device_countdown = 0;
+            }
+        }
+        ev
+    }
+
+    /// Run until poweroff or `max_ticks`.
+    pub fn run(&mut self, max_ticks: u64) -> ExitReason {
+        let start = Instant::now();
+        let limit = self.stats.sim_ticks.saturating_add(max_ticks);
+        let reason = loop {
+            if let Some(code) = self.bus.poweroff {
+                break ExitReason::PowerOff(code);
+            }
+            if self.stats.sim_ticks >= limit {
+                break ExitReason::Limit;
+            }
+            self.tick();
+        };
+        self.stats.host_time += start.elapsed();
+        reason
+    }
+
+    /// Run until a predicate over the machine fires (checked every tick).
+    pub fn run_until(&mut self, max_ticks: u64, mut pred: impl FnMut(&Machine) -> bool) -> ExitReason {
+        let start = Instant::now();
+        let limit = self.stats.sim_ticks.saturating_add(max_ticks);
+        let reason = loop {
+            if let Some(code) = self.bus.poweroff {
+                break ExitReason::PowerOff(code);
+            }
+            if self.stats.sim_ticks >= limit {
+                break ExitReason::Limit;
+            }
+            self.tick();
+            if pred(self) {
+                break ExitReason::Predicate;
+            }
+        };
+        self.stats.host_time += start.elapsed();
+        reason
+    }
+
+    /// Console output so far.
+    pub fn console(&self) -> String {
+        self.bus.uart.output_string()
+    }
+
+    /// Formatted gem5-style stats dump.
+    pub fn stats_txt(&self) -> String {
+        self.stats.dump(&self.core.mmu_stats)
+    }
+
+    /// Reset *measurement* counters (after boot, before a benchmark) —
+    /// the moral equivalent of restoring from a post-boot gem5 checkpoint
+    /// so "only the current benchmark is being studied" (paper §4.1).
+    pub fn reset_stats(&mut self) {
+        self.stats = SimStats::default();
+        self.core.mmu_stats = crate::mmu::MmuStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::mem::{RAM_BASE, SYSCON_BASE, SYSCON_PASS};
+
+    fn boot(src: &str) -> Machine {
+        let img = assemble(src, RAM_BASE).unwrap();
+        let mut m = Machine::new(8 << 20, true);
+        m.load(&img).unwrap();
+        m.set_entry(RAM_BASE);
+        m
+    }
+
+    #[test]
+    fn run_to_poweroff() {
+        let src = format!(
+            "li t0, {SYSCON_BASE}\n li t1, {SYSCON_PASS}\n sw t1, 0(t0)\n wfi\n"
+        );
+        let mut m = boot(&src);
+        assert_eq!(m.run(1000), ExitReason::PowerOff(SYSCON_PASS));
+        assert!(m.stats.sim_insts >= 4);
+    }
+
+    #[test]
+    fn tick_limit() {
+        let mut m = boot("loop: j loop\n");
+        assert_eq!(m.run(100), ExitReason::Limit);
+        assert_eq!(m.stats.sim_ticks, 100);
+    }
+
+    #[test]
+    fn uart_console_capture() {
+        let src = "li t0, 0x10000000\n li t1, 'h'\n sb t1, 0(t0)\n li t1, 'i'\n sb t1, 0(t0)\n li t2, 0x100000\n li t3, 0x5555\n sw t3, 0(t2)\n";
+        let mut m = boot(src);
+        m.run(1000);
+        assert_eq!(m.console(), "hi");
+    }
+
+    #[test]
+    fn timer_interrupt_fires() {
+        // M-mode: arm mtimecmp, enable MTIE+MIE, wfi; handler writes
+        // poweroff.
+        let src = r#"
+            .equ CLINT, 0x2000000
+            .equ SYSCON, 0x100000
+            la t0, handler
+            csrw mtvec, t0
+            li t0, CLINT + 0x4000
+            li t1, 50           # mtimecmp = 50 (mtime advances 1/100 ticks)
+            sd t1, 0(t0)
+            li t0, 1 << 7       # MTIE
+            csrw mie, t0
+            csrsi mstatus, 8    # MIE
+        idle:
+            wfi
+            j idle
+        .align 2
+        handler:
+            li t0, SYSCON
+            li t1, 0x5555
+            sw t1, 0(t0)
+            j handler
+        "#;
+        let mut m = boot(src);
+        assert_eq!(m.run(1_000_000), ExitReason::PowerOff(0x5555));
+        assert_eq!(m.stats.interrupts_at("M"), 1);
+        assert!(m.stats.wfi_ticks > 0, "WFI parked before the timer fired");
+    }
+
+    #[test]
+    fn stats_reset_keeps_machine_state() {
+        let mut m = boot("li t0, 7\n loop: j loop\n");
+        m.run(50);
+        assert!(m.stats.sim_insts > 0);
+        m.reset_stats();
+        assert_eq!(m.stats.sim_insts, 0);
+        assert_eq!(m.core.hart.regs[5], 7, "architectural state preserved");
+    }
+}

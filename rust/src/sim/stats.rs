@@ -1,0 +1,125 @@
+//! gem5-style statistics: counters the paper's evaluation reads off —
+//! executed instructions (Fig. 5), exceptions per privilege level
+//! (Figs. 6, 7), interrupts, TLB/walker activity, and wall-clock
+//! simulation time (Fig. 4).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::cpu::trap::TrapTarget;
+use crate::isa::{ExceptionCause, InterruptCause};
+
+/// Exception-cause histogram key: (cause code, handled-at level).
+pub type ExcKey = (u64, &'static str);
+
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Retired instructions (gem5 `sim_insts`).
+    pub sim_insts: u64,
+    /// Simulation ticks (1 tick = one atomic-CPU step here).
+    pub sim_ticks: u64,
+    /// Wall-clock time spent inside `Machine::run*` (gem5 "simulation
+    /// time", the Fig. 4 metric).
+    pub host_time: Duration,
+    /// Exceptions by (cause, handler level) — Figs. 6/7.
+    pub exceptions: BTreeMap<ExcKey, u64>,
+    /// Interrupts by (cause, handler level).
+    pub interrupts: BTreeMap<ExcKey, u64>,
+    /// WFI idle ticks.
+    pub wfi_ticks: u64,
+}
+
+impl SimStats {
+    pub fn record_exception(&mut self, cause: ExceptionCause, target: TrapTarget) {
+        *self.exceptions.entry((cause.code(), target.name())).or_insert(0) += 1;
+    }
+
+    pub fn record_interrupt(&mut self, cause: InterruptCause, target: TrapTarget) {
+        *self.interrupts.entry((cause.code(), target.name())).or_insert(0) += 1;
+    }
+
+    /// Total exceptions handled at a given privilege level (the bars of
+    /// Figs. 6 and 7).
+    pub fn exceptions_at(&self, level: &str) -> u64 {
+        self.exceptions.iter().filter(|((_, l), _)| *l == level).map(|(_, v)| v).sum()
+    }
+
+    pub fn interrupts_at(&self, level: &str) -> u64 {
+        self.interrupts.iter().filter(|((_, l), _)| *l == level).map(|(_, v)| v).sum()
+    }
+
+    pub fn total_exceptions(&self) -> u64 {
+        self.exceptions.values().sum()
+    }
+
+    /// Exceptions of one cause code across all levels.
+    pub fn exceptions_with_cause(&self, code: u64) -> u64 {
+        self.exceptions.iter().filter(|((c, _), _)| *c == code).map(|(_, v)| v).sum()
+    }
+
+    /// Render a gem5-flavoured `stats.txt` section.
+    pub fn dump(&self, mmu: &crate::mmu::MmuStats) -> String {
+        let mut s = String::new();
+        s.push_str("---------- Begin Simulation Statistics ----------\n");
+        let mut line = |k: &str, v: u64, desc: &str| {
+            s.push_str(&format!("{k:<40} {v:>16}  # {desc}\n"));
+        };
+        line("sim_insts", self.sim_insts, "Number of instructions simulated");
+        line("sim_ticks", self.sim_ticks, "Number of ticks simulated");
+        line("wfi_ticks", self.wfi_ticks, "Ticks spent parked in WFI");
+        line("system.cpu.mmu.tlb.hits", mmu.tlb_hits, "DTLB+ITLB hits");
+        line("system.cpu.mmu.tlb.misses", mmu.tlb_misses, "DTLB+ITLB misses");
+        line("system.cpu.mmu.walker.walks", mmu.walks, "Page-table walks started");
+        line("system.cpu.mmu.walker.steps", mmu.walk_steps, "stepWalk() page-table accesses");
+        line("system.cpu.mmu.walker.g_walks", mmu.g_walks, "G-stage walks (walkGStage)");
+        line("system.cpu.mmu.walker.g_steps", mmu.g_walk_steps, "G-stage page-table accesses");
+        line("system.cpu.mmu.tlb.flushes", mmu.flushes, "sfence/hfence flushes");
+        for ((code, level), v) in &self.exceptions {
+            s.push_str(&format!(
+                "system.cpu.exceptions.cause{code:02}.{level:<10} {v:>16}  # exceptions (cause {code}) handled at {level}\n"
+            ));
+        }
+        for ((code, level), v) in &self.interrupts {
+            s.push_str(&format!(
+                "system.cpu.interrupts.cause{code:02}.{level:<9} {v:>16}  # interrupts (cause {code}) handled at {level}\n"
+            ));
+        }
+        s.push_str(&format!(
+            "host_seconds                             {:>16.6}  # wall-clock simulation time\n",
+            self.host_time.as_secs_f64()
+        ));
+        s.push_str("---------- End Simulation Statistics   ----------\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_accumulates() {
+        let mut st = SimStats::default();
+        st.record_exception(ExceptionCause::LoadPageFault, TrapTarget::VS);
+        st.record_exception(ExceptionCause::LoadPageFault, TrapTarget::VS);
+        st.record_exception(ExceptionCause::LoadGuestPageFault, TrapTarget::HS);
+        st.record_interrupt(InterruptCause::MachineTimer, TrapTarget::M);
+        assert_eq!(st.exceptions_at("VS"), 2);
+        assert_eq!(st.exceptions_at("HS"), 1);
+        assert_eq!(st.exceptions_at("M"), 0);
+        assert_eq!(st.total_exceptions(), 3);
+        assert_eq!(st.exceptions_with_cause(13), 2);
+        assert_eq!(st.interrupts_at("M"), 1);
+    }
+
+    #[test]
+    fn dump_contains_gem5_style_lines() {
+        let mut st = SimStats::default();
+        st.sim_insts = 1234;
+        st.record_exception(ExceptionCause::EcallFromU, TrapTarget::HS);
+        let txt = st.dump(&crate::mmu::MmuStats::default());
+        assert!(txt.contains("sim_insts"));
+        assert!(txt.contains("1234"));
+        assert!(txt.contains("cause08.HS"));
+    }
+}

@@ -1,0 +1,279 @@
+//! The embedded software stack (DESIGN.md S11–S14): M-mode SBI firmware,
+//! the `xvisor-rs` type-1 hypervisor, the `mini-os` kernel, and the nine
+//! MiBench-analog benchmarks — all assembled at run time by
+//! [`crate::asm`] and loaded by [`setup_native`] / [`setup_guest`].
+//!
+//! Physical layout (host):
+//! ```text
+//!   0x8000_0000  firmware
+//!   0x8010_0000  hypervisor (guest runs only)
+//!   0x8020_0000  kernel+benchmark image (native runs)
+//!   0x8220_0000  kernel+benchmark image (guest runs: guest PA
+//!                0x8020_0000 + 0x0200_0000 backing offset)
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::asm::{assemble, Image};
+use crate::sim::Machine;
+
+pub const FW_BASE: u64 = 0x8000_0000;
+pub const HV_BASE: u64 = 0x8010_0000;
+pub const KERNEL_BASE: u64 = 0x8020_0000;
+/// Host-physical backing offset of guest-physical memory.
+pub const GUEST_OFF: u64 = 0x0200_0000;
+/// RAM required for a guest run (guest window ends at 0x8300_0000).
+pub const GUEST_RAM_MIN: usize = 0x0300_0000;
+
+const FIRMWARE_S: &str = include_str!("asm/firmware.s");
+const HYPERVISOR_S: &str = include_str!("asm/hypervisor.s");
+const KERNEL_S: &str = include_str!("asm/kernel.s");
+const PRELUDE_S: &str = include_str!("asm/prelude.s");
+
+const BENCH_QSORT: &str = include_str!("asm/bench/qsort.s");
+const BENCH_BITCOUNT: &str = include_str!("asm/bench/bitcount.s");
+const BENCH_CRC32: &str = include_str!("asm/bench/crc32.s");
+const BENCH_SHA: &str = include_str!("asm/bench/sha.s");
+const BENCH_STRINGSEARCH: &str = include_str!("asm/bench/stringsearch.s");
+const BENCH_DIJKSTRA: &str = include_str!("asm/bench/dijkstra.s");
+const BENCH_BASICMATH: &str = include_str!("asm/bench/basicmath.s");
+const BENCH_FFT: &str = include_str!("asm/bench/fft.s");
+const BENCH_SUSAN: &str = include_str!("asm/bench/susan.s");
+
+/// The nine MiBench-analog workloads (paper §4), in the category order of
+/// the original suite.
+pub const BENCHMARKS: [&str; 9] = [
+    "qsort",        // automotive
+    "bitcount",     // automotive
+    "basicmath",    // automotive
+    "susan",        // automotive/consumer
+    "dijkstra",     // network
+    "crc32",        // telecomm
+    "fft",          // telecomm
+    "sha",          // security
+    "stringsearch", // office
+];
+
+fn bench_source(name: &str) -> Result<&'static str> {
+    Ok(match name {
+        "qsort" => BENCH_QSORT,
+        "bitcount" => BENCH_BITCOUNT,
+        "crc32" => BENCH_CRC32,
+        "sha" => BENCH_SHA,
+        "stringsearch" => BENCH_STRINGSEARCH,
+        "dijkstra" => BENCH_DIJKSTRA,
+        "basicmath" => BENCH_BASICMATH,
+        "fft" => BENCH_FFT,
+        "susan" => BENCH_SUSAN,
+        other => bail!("unknown benchmark '{other}' (have: {BENCHMARKS:?})"),
+    })
+}
+
+/// Assemble the firmware image.
+pub fn firmware_image() -> Result<Image> {
+    assemble(FIRMWARE_S, FW_BASE).context("assembling firmware")
+}
+
+/// Assemble the hypervisor image.
+pub fn hypervisor_image() -> Result<Image> {
+    assemble(HYPERVISOR_S, HV_BASE).context("assembling hypervisor")
+}
+
+/// Assemble kernel + prelude + benchmark into one image. `base` differs
+/// between native (host PA) and guest (host backing of guest PA) — the
+/// code itself is position-independent, and all absolute constants are
+/// guest-physical either way.
+pub fn kernel_image(bench: &str, scale: u64, base: u64) -> Result<Image> {
+    let bench_src = bench_source(bench)?;
+    // fft ships a Q14 twiddle ROM generated here (no trig in the ISA).
+    let extra = if bench == "fft" { fft_twiddle_rom(1024) } else { String::new() };
+    let src = format!(
+        ".equ SCALE, {scale}\n{KERNEL_S}\n{PRELUDE_S}\n{bench_src}\n{extra}\n.align 12\nucode_end:\n"
+    );
+    assemble(&src, base).with_context(|| format!("assembling kernel+{bench}"))
+}
+
+/// Q14 cos/sin tables for a size-`n` radix-2 FFT (`tw_cos[k]`,
+/// `tw_sin[k]` for k in 0..n/2, angle -2πk/n).
+fn fft_twiddle_rom(n: usize) -> String {
+    let mut s = String::from(".align 3\ntw_cos:\n");
+    let q = 1 << 14;
+    for k in 0..n / 2 {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        s.push_str(&format!(".word {}\n", (ang.cos() * q as f64).round() as i64 as u32));
+    }
+    s.push_str("tw_sin:\n");
+    for k in 0..n / 2 {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        s.push_str(&format!(".word {}\n", (ang.sin() * q as f64).round() as i64 as u32));
+    }
+    s
+}
+
+/// Load firmware + kernel for a *native* run (paper's "without VM"): the
+/// firmware drops to S-mode directly into the kernel.
+pub fn setup_native(m: &mut Machine, bench: &str, scale: u64) -> Result<()> {
+    let fw = firmware_image()?;
+    let kernel = kernel_image(bench, scale, KERNEL_BASE)?;
+    m.load(&fw)?;
+    m.load(&kernel)?;
+    m.set_entry(FW_BASE);
+    m.core.hart.regs[10] = 0; // a0 = hartid
+    m.core.hart.regs[11] = KERNEL_BASE; // a1 = next stage
+    m.core.hart.regs[12] = 0; // a2 = native
+    Ok(())
+}
+
+/// Load firmware + hypervisor + guest kernel for a *VM* run (paper's
+/// "with VM"): firmware drops to HS-mode into xvisor-rs, which launches
+/// the kernel in VS-mode behind Sv39x4 G-stage demand paging.
+pub fn setup_guest(m: &mut Machine, bench: &str, scale: u64) -> Result<()> {
+    if !m.core.hart.csr.h_enabled {
+        bail!("guest run requires the H extension (machine.h_extension = true)");
+    }
+    if m.bus.ram_size() < GUEST_RAM_MIN as u64 {
+        bail!("guest run needs ≥ {} MiB RAM", GUEST_RAM_MIN >> 20);
+    }
+    let fw = firmware_image()?;
+    let hv = hypervisor_image()?;
+    // The kernel is loaded at the host backing of guest PA KERNEL_BASE.
+    let kernel = kernel_image(bench, scale, KERNEL_BASE + GUEST_OFF)?;
+    m.load(&fw)?;
+    m.load(&hv)?;
+    m.load(&kernel)?;
+    m.set_entry(FW_BASE);
+    m.core.hart.regs[10] = 0;
+    m.core.hart.regs[11] = HV_BASE;
+    m.core.hart.regs[12] = 1;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ExitReason;
+
+    fn run_native(bench: &str, scale: u64, max: u64) -> Machine {
+        let mut m = Machine::new(64 << 20, true);
+        setup_native(&mut m, bench, scale).unwrap();
+        let r = m.run(max);
+        assert_eq!(
+            r,
+            ExitReason::PowerOff(crate::mem::SYSCON_PASS),
+            "native {bench} failed; console:\n{}",
+            m.console()
+        );
+        m
+    }
+
+    fn run_guest(bench: &str, scale: u64, max: u64) -> Machine {
+        let mut m = Machine::new(64 << 20, true);
+        setup_guest(&mut m, bench, scale).unwrap();
+        let r = m.run(max);
+        assert_eq!(
+            r,
+            ExitReason::PowerOff(crate::mem::SYSCON_PASS),
+            "guest {bench} failed; console:\n{}",
+            m.console()
+        );
+        m
+    }
+
+    #[test]
+    fn images_assemble() {
+        firmware_image().unwrap();
+        hypervisor_image().unwrap();
+        for b in BENCHMARKS {
+            kernel_image(b, 1, KERNEL_BASE).unwrap();
+        }
+    }
+
+    #[test]
+    fn native_qsort_boots_and_passes() {
+        let m = run_native("qsort", 1, 200_000_000);
+        let out = m.console();
+        assert!(out.contains("mini-os: up"), "console: {out}");
+        assert!(out.contains("mini-os: benchmark done"), "console: {out}");
+        // Demand paging produced page faults at S; syscalls produced
+        // U-ecalls at S; SBI calls produced S-ecalls at M (Fig. 6 shape).
+        assert!(m.stats.exceptions_at("HS") > 0);
+        assert!(m.stats.exceptions_at("M") > 0);
+        assert_eq!(m.stats.exceptions_at("VS"), 0, "no VS level natively");
+    }
+
+    #[test]
+    fn guest_qsort_boots_and_passes() {
+        let m = run_guest("qsort", 1, 400_000_000);
+        let out = m.console();
+        assert!(out.contains("mini-os: up"), "console: {out}");
+        assert!(out.contains("mini-os: benchmark done"), "console: {out}");
+        assert!(out.contains("xvisor:"), "hypervisor summary missing: {out}");
+        // Fig. 7 shape: exceptions at M (SBI), HS (VM exits), VS (kernel).
+        assert!(m.stats.exceptions_at("M") > 0);
+        assert!(m.stats.exceptions_at("HS") > 0);
+        assert!(m.stats.exceptions_at("VS") > 0);
+        // Guest-page faults were handled at HS (cause 20/21/23).
+        let gpf: u64 = [20u64, 21, 23].iter().map(|&c| m.stats.exceptions_with_cause(c)).sum();
+        assert!(gpf > 0, "expected G-stage demand-paging faults");
+    }
+
+    #[test]
+    fn native_and_guest_agree_on_output() {
+        // The same kernel+benchmark must produce the same checksum output
+        // natively and under the hypervisor (paper's functional-
+        // correctness check).
+        let native = run_native("qsort", 1, 200_000_000);
+        let guest = run_guest("qsort", 1, 400_000_000);
+        let n_out = native.console();
+        let g_out = guest.console();
+        // Compare the benchmark lines (guest console has the extra
+        // xvisor summary at the end).
+        let n_line = n_out.lines().find(|l| l.len() == 16).unwrap_or("<none>");
+        assert!(
+            g_out.lines().any(|l| l == n_line),
+            "checksum mismatch: native={n_line} guest:\n{g_out}"
+        );
+    }
+
+    #[test]
+    fn guest_executes_more_instructions() {
+        // Fig. 5: the VM run retires more instructions than native.
+        let native = run_native("qsort", 1, 200_000_000);
+        let guest = run_guest("qsort", 1, 400_000_000);
+        assert!(
+            guest.stats.sim_insts > native.stats.sim_insts,
+            "guest {} ≤ native {}",
+            guest.stats.sim_insts,
+            native.stats.sim_insts
+        );
+    }
+}
+
+#[cfg(test)]
+mod all_bench_tests {
+    use super::*;
+    use crate::sim::ExitReason;
+
+    /// Full 9×2 matrix at scale 1. Slow in debug; run with --release for
+    /// the sweep. Cheap subset covered by sw::tests.
+    #[test]
+    fn all_benchmarks_native_and_guest() {
+        for bench in BENCHMARKS {
+            for vm in [false, true] {
+                let mut m = Machine::new(64 << 20, true);
+                if vm {
+                    setup_guest(&mut m, bench, 1).unwrap();
+                } else {
+                    setup_native(&mut m, bench, 1).unwrap();
+                }
+                let r = m.run(3_000_000_000);
+                assert_eq!(
+                    r,
+                    ExitReason::PowerOff(crate::mem::SYSCON_PASS),
+                    "{bench} vm={vm} failed; console:\n{}",
+                    m.console()
+                );
+            }
+        }
+    }
+}

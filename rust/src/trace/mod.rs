@@ -1,0 +1,138 @@
+//! Trace capture: the bridge between the functional simulator (L3) and the
+//! XLA analytics/timing model (L2/L1).
+//!
+//! When enabled, the CPU appends one compact record per *virtual memory
+//! reference* (fetch / load / store) in program order. The
+//! [`WindowBatcher`] slices the stream into fixed-size windows shaped for
+//! the AOT-compiled kernel (see `python/compile/kernels/tlbsim.py`): a
+//! `u32` tensor of `vpn*4 | kind` entries, zero-padded in the tail window.
+
+/// Access kinds (low 2 bits of a record).
+pub const KIND_FETCH: u64 = 0;
+pub const KIND_LOAD: u64 = 1;
+pub const KIND_STORE: u64 = 2;
+
+/// Window length the Pallas kernel is compiled for. Must match
+/// `WINDOW` in python/compile/kernels/tlbsim.py.
+pub const WINDOW: usize = 4096;
+
+/// A bounded in-order trace of virtual page references.
+#[derive(Clone, Debug)]
+pub struct TraceBuf {
+    pub entries: Vec<u32>,
+    pub cap: usize,
+    /// References dropped after hitting `cap` (reported, never silent).
+    pub dropped: u64,
+}
+
+impl TraceBuf {
+    pub fn new(cap: usize) -> TraceBuf {
+        TraceBuf { entries: Vec::with_capacity(cap.min(1 << 20)), cap, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, va: u64, kind: u64) {
+        if self.entries.len() < self.cap {
+            // vpn truncated to 30 bits: traces address ≤ 4 TiB of VA space,
+            // plenty for the kernels/benchmarks here.
+            let vpn = (va >> 12) & 0x3fff_ffff;
+            self.entries.push(((vpn << 2) | kind) as u32);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Slice a trace into zero-padded windows of [`WINDOW`] entries.
+pub struct WindowBatcher<'a> {
+    trace: &'a [u32],
+    pos: usize,
+}
+
+impl<'a> WindowBatcher<'a> {
+    pub fn new(trace: &'a TraceBuf) -> WindowBatcher<'a> {
+        WindowBatcher { trace: &trace.entries, pos: 0 }
+    }
+
+    pub fn windows(trace: &'a [u32]) -> WindowBatcher<'a> {
+        WindowBatcher { trace, pos: 0 }
+    }
+}
+
+impl<'a> Iterator for WindowBatcher<'a> {
+    /// (window, valid_count)
+    type Item = (Vec<u32>, usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.trace.len() {
+            return None;
+        }
+        let end = (self.pos + WINDOW).min(self.trace.len());
+        let valid = end - self.pos;
+        let mut w = Vec::with_capacity(WINDOW);
+        w.extend_from_slice(&self.trace[self.pos..end]);
+        w.resize(WINDOW, 0);
+        self.pos = end;
+        Some((w, valid))
+    }
+}
+
+/// Decode helpers shared with tests and the reference model.
+pub fn rec_vpn(rec: u32) -> u32 {
+    rec >> 2
+}
+pub fn rec_kind(rec: u32) -> u32 {
+    rec & 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_encodes_vpn_and_kind() {
+        let mut t = TraceBuf::new(16);
+        t.push(0x8000_1abc, KIND_LOAD);
+        assert_eq!(t.len(), 1);
+        assert_eq!(rec_vpn(t.entries[0]), 0x8000_1);
+        assert_eq!(rec_kind(t.entries[0]), 1);
+    }
+
+    #[test]
+    fn cap_drops_and_counts() {
+        let mut t = TraceBuf::new(2);
+        for i in 0..5 {
+            t.push(i << 12, KIND_FETCH);
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped, 3);
+    }
+
+    #[test]
+    fn batcher_pads_tail() {
+        let mut t = TraceBuf::new(WINDOW * 2);
+        for i in 0..(WINDOW + 10) as u64 {
+            t.push(i << 12, KIND_FETCH);
+        }
+        let ws: Vec<_> = WindowBatcher::new(&t).collect();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].1, WINDOW);
+        assert_eq!(ws[1].1, 10);
+        assert_eq!(ws[1].0.len(), WINDOW, "tail window zero-padded");
+        assert_eq!(ws[1].0[10], 0);
+    }
+
+    #[test]
+    fn empty_trace_no_windows() {
+        let t = TraceBuf::new(8);
+        assert_eq!(WindowBatcher::new(&t).count(), 0);
+    }
+}

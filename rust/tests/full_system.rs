@@ -1,0 +1,144 @@
+//! Full-system integration tests: boot flows, checkpoint-resume across the
+//! hypervisor boundary, stats plumbing, and the Fig. 6/7 exception-shape
+//! checks on real workloads.
+
+use hvsim::config::SimConfig;
+use hvsim::coordinator;
+use hvsim::sim::{checkpoint, ExitReason};
+use hvsim::sw;
+
+fn cfg() -> SimConfig {
+    SimConfig { scale: 1, ..Default::default() }
+}
+
+#[test]
+fn native_boot_prints_banner_then_checksum() {
+    let mut m = cfg().build_machine();
+    sw::setup_native(&mut m, "bitcount", 1).unwrap();
+    assert_eq!(m.run(500_000_000), ExitReason::PowerOff(hvsim::mem::SYSCON_PASS));
+    let out = m.console();
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines[0], "mini-os: up");
+    assert!(lines.iter().any(|l| l.len() == 16), "checksum line present");
+    assert_eq!(*lines.last().unwrap(), "mini-os: benchmark done");
+}
+
+#[test]
+fn guest_console_matches_native_plus_hypervisor_summary() {
+    let mut native = cfg().build_machine();
+    sw::setup_native(&mut native, "basicmath", 1).unwrap();
+    native.run(500_000_000);
+    let mut guest = cfg().build_machine();
+    sw::setup_guest(&mut guest, "basicmath", 1).unwrap();
+    guest.run(1_000_000_000);
+    let n = native.console();
+    let g = guest.console();
+    assert!(g.starts_with(&n), "guest console must start with the native output");
+    assert!(g.contains("xvisor: pf/ecall/irq/virt"));
+}
+
+#[test]
+fn checkpoint_resume_mid_guest_run() {
+    // Checkpoint in the middle of a guest benchmark; the restored machine
+    // must finish with the identical console output.
+    let mut m = cfg().build_machine();
+    sw::setup_guest(&mut m, "crc32", 1).unwrap();
+    // Run past boot, into the benchmark.
+    let r = m.run_until(1_000_000_000, |m| m.stats.sim_insts > 500_000);
+    assert_eq!(r, ExitReason::Predicate);
+    let blob = checkpoint::save(&m);
+    let console_at_ck = m.console().len();
+
+    let mut a = m; // continue the original
+    assert_eq!(a.run(2_000_000_000), ExitReason::PowerOff(hvsim::mem::SYSCON_PASS));
+
+    let mut b = cfg().build_machine();
+    checkpoint::restore(&mut b, &blob).unwrap();
+    assert_eq!(b.run(2_000_000_000), ExitReason::PowerOff(hvsim::mem::SYSCON_PASS));
+    // The UART capture buffer is not architectural state; compare the
+    // output produced *after* the checkpoint.
+    assert_eq!(
+        &a.console()[console_at_ck..],
+        b.console(),
+        "resume must be execution-equivalent"
+    );
+}
+
+#[test]
+fn h_disabled_machine_runs_native_only() {
+    let mut cfg_no_h = cfg();
+    cfg_no_h.h_extension = false;
+    let mut m = cfg_no_h.build_machine();
+    sw::setup_native(&mut m, "bitcount", 1).unwrap();
+    assert_eq!(m.run(500_000_000), ExitReason::PowerOff(hvsim::mem::SYSCON_PASS));
+    // And the guest setup must refuse.
+    let mut m2 = cfg_no_h.build_machine();
+    assert!(sw::setup_guest(&mut m2, "bitcount", 1).is_err());
+}
+
+#[test]
+fn exception_shape_matches_figures_6_and_7() {
+    let c = cfg();
+    let n = coordinator::run_one(&c, "dijkstra", false, false).unwrap();
+    let g = coordinator::run_one(&c, "dijkstra", true, false).unwrap();
+    // Fig. 6: native uses two levels.
+    assert!(n.exceptions_at("M") > 0);
+    assert!(n.exceptions_at("HS") > 0); // = S level natively
+    assert_eq!(n.exceptions_at("VS"), 0);
+    // Fig. 7: guest uses three levels.
+    assert!(g.exceptions_at("M") > 0);
+    assert!(g.exceptions_at("HS") > 0);
+    assert!(g.exceptions_at("VS") > 0);
+    // §4.3: S-native ≈ VS-guest.
+    let s = n.exceptions_at("HS") as f64;
+    let vs = g.exceptions_at("VS") as f64;
+    assert!((vs - s).abs() / s < 0.10, "S={s} VS={vs}");
+    // Two-stage translation ⇒ guest-page faults exist at HS.
+    let gpf: u64 = [20u64, 21, 23]
+        .iter()
+        .map(|c| g.exc_by_cause.get(c).copied().unwrap_or(0))
+        .sum();
+    assert!(gpf > 0);
+}
+
+#[test]
+fn stats_txt_is_complete() {
+    let mut m = cfg().build_machine();
+    sw::setup_native(&mut m, "bitcount", 1).unwrap();
+    m.run(500_000_000);
+    let txt = m.stats_txt();
+    for key in [
+        "sim_insts",
+        "sim_ticks",
+        "system.cpu.mmu.tlb.hits",
+        "system.cpu.mmu.walker.walks",
+        "host_seconds",
+    ] {
+        assert!(txt.contains(key), "stats.txt missing {key}:\n{txt}");
+    }
+}
+
+#[test]
+fn tlb_geometry_config_affects_behaviour() {
+    // A tiny TLB must produce more walker activity than the default.
+    let mut small = SimConfig { tlb_sets: 2, tlb_ways: 1, ..cfg() };
+    small.workload = "qsort".into();
+    let r_small = coordinator::run_one(&small, "qsort", false, false).unwrap();
+    let r_big = coordinator::run_one(&cfg(), "qsort", false, false).unwrap();
+    assert!(
+        r_small.tlb_misses > r_big.tlb_misses * 2,
+        "2x1 TLB should thrash: {} vs {}",
+        r_small.tlb_misses,
+        r_big.tlb_misses
+    );
+}
+
+#[test]
+fn scale_knob_scales_work() {
+    let c1 = cfg();
+    let mut c2 = cfg();
+    c2.scale = 2;
+    let r1 = coordinator::run_one(&c1, "bitcount", false, false).unwrap();
+    let r2 = coordinator::run_one(&c2, "bitcount", false, false).unwrap();
+    assert!(r2.sim_insts > r1.sim_insts * 3 / 2, "{} !>> {}", r2.sim_insts, r1.sim_insts);
+}

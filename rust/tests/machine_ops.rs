@@ -1,0 +1,349 @@
+//! Machine-level operational tests for paths the validation suites don't
+//! reach: PLIC-driven external interrupts, counter CSRs across privilege
+//! levels, vectored trap dispatch, checkpoint file round-trips, config-
+//! driven CLI plumbing, and a disassembler↔assembler round trip across
+//! the full mnemonic space.
+
+use hvsim::asm::assemble;
+use hvsim::cpu::{step, Core, StepEvent};
+use hvsim::isa::disasm::disasm;
+use hvsim::isa::{decode, Op};
+use hvsim::mem::{RAM_BASE, SYSCON_PASS};
+use hvsim::sim::{ExitReason, Machine};
+
+fn boot(src: &str, h: bool) -> Machine {
+    let img = assemble(src, RAM_BASE).unwrap();
+    let mut m = Machine::new(8 << 20, h);
+    m.load(&img).unwrap();
+    m.set_entry(RAM_BASE);
+    m
+}
+
+#[test]
+fn plic_external_interrupt_reaches_machine_handler() {
+    // Program: enable MEIE+MIE, park in wfi; handler claims from the PLIC
+    // and powers off with the claimed source id as proof.
+    let src = r#"
+        .equ PLIC, 0xc000000
+        .equ SYSCON, 0x100000
+        la   t0, handler
+        csrw mtvec, t0
+        # priority[5]=7, enable ctx0 bit 5, threshold 0
+        li   t0, PLIC + 5*4
+        li   t1, 7
+        sw   t1, 0(t0)
+        li   t0, PLIC + 0x2000
+        li   t1, 1 << 5
+        sw   t1, 0(t0)
+        li   t0, (1 << 11)      # MEIE
+        csrw mie, t0
+        csrsi mstatus, 8        # MIE
+    idle:
+        wfi
+        j    idle
+    .align 2
+    handler:
+        li   t0, SYSCON
+        li   t1, 0x5555
+        sw   t1, 0(t0)
+    1:  j 1b
+    "#;
+    let mut m = boot(src, true);
+    // Run setup, then raise the device line.
+    m.run(2_000);
+    m.bus.plic.raise(5);
+    assert_eq!(m.run(1_000_000), ExitReason::PowerOff(SYSCON_PASS));
+    assert_eq!(m.stats.interrupts_at("M"), 1);
+    assert_eq!(m.core.hart.csr.mcause, 11 | (1 << 63), "MEI cause");
+}
+
+#[test]
+fn plic_supervisor_context_drives_seip() {
+    let mut m = Machine::new(1 << 20, true);
+    m.bus.plic.write(3 * 4, 1); // priority[3]
+    m.bus.plic.write(0x2000 + 0x80, 1 << 3); // S-context enable
+    m.bus.plic.raise(3);
+    m.tick(); // device refresh propagates SEIP into mip
+    assert_ne!(m.core.hart.csr.mip & hvsim::isa::csr::irq::SEIP, 0);
+}
+
+#[test]
+fn counters_readable_from_u_with_full_enable_chain() {
+    // M code sets mcounteren+scounteren, drops to U; U reads cycle/instret.
+    let src = r#"
+        li   t0, 7
+        csrw mcounteren, t0
+        csrw scounteren, t0
+        la   t0, umode
+        csrw mepc, t0
+        # MPP=U
+        li   t0, 3 << 11
+        csrc mstatus, t0
+        la   t0, trap
+        csrw mtvec, t0
+        mret
+    .align 2
+    umode:
+        csrr t0, cycle
+        csrr t1, instret
+        ebreak
+    .align 2
+    trap:
+        li   t0, 0x100000
+        li   t1, 0x5555
+        sw   t1, 0(t0)
+    1:  j 1b
+    "#;
+    let mut m = boot(src, true);
+    assert_eq!(m.run(100_000), ExitReason::PowerOff(SYSCON_PASS));
+    // ebreak (not an illegal-inst) proves both csrr's executed.
+    assert_eq!(m.core.hart.csr.mcause, 3, "breakpoint, not illegal");
+    assert!(m.core.hart.regs[6] > 0, "instret was non-zero");
+}
+
+#[test]
+fn counters_fault_from_u_without_enable() {
+    let src = r#"
+        csrw mcounteren, x0
+        la   t0, umode
+        csrw mepc, t0
+        li   t0, 3 << 11
+        csrc mstatus, t0
+        la   t0, trap
+        csrw mtvec, t0
+        mret
+    .align 2
+    umode:
+        csrr t0, cycle
+        ebreak
+    .align 2
+    trap:
+        li   t0, 0x100000
+        li   t1, 0x5555
+        sw   t1, 0(t0)
+    1:  j 1b
+    "#;
+    let mut m = boot(src, true);
+    assert_eq!(m.run(100_000), ExitReason::PowerOff(SYSCON_PASS));
+    assert_eq!(m.core.hart.csr.mcause, 2, "illegal instruction, not breakpoint");
+}
+
+#[test]
+fn vectored_mtvec_dispatches_by_cause() {
+    // mtvec vectored: MTI (cause 7) lands at base + 4*7.
+    let src = r#"
+        .equ CLINT, 0x2000000
+        la   t0, vectors
+        ori  t0, t0, 1
+        csrw mtvec, t0
+        li   t0, CLINT + 0x4000
+        li   t1, 10
+        sd   t1, 0(t0)
+        li   t0, 1 << 7
+        csrw mie, t0
+        csrsi mstatus, 8
+    idle:
+        wfi
+        j    idle
+    .align 7
+    vectors:
+        j fail      # 0
+        j fail      # 1
+        j fail      # 2
+        j fail      # 3
+        j fail      # 4
+        j fail      # 5
+        j fail      # 6
+        j timer     # 7 = MTI
+        j fail
+    .align 2
+    timer:
+        li   t0, 0x100000
+        li   t1, 0x5555
+        sw   t1, 0(t0)
+    1:  j 1b
+    fail:
+        li   t0, 0x100000
+        li   t1, 0x3333
+        sw   t1, 0(t0)
+    2:  j 2b
+    "#;
+    let mut m = boot(src, true);
+    assert_eq!(m.run(1_000_000), ExitReason::PowerOff(SYSCON_PASS));
+}
+
+#[test]
+fn checkpoint_file_round_trip() {
+    let dir = std::env::temp_dir().join(format!("hvsim_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.ck");
+    let mut m = boot("li t0, 99\n loop: j loop\n", true);
+    m.run(50);
+    hvsim::sim::checkpoint::save_to_file(&m, &path).unwrap();
+    let mut m2 = Machine::new(8 << 20, true);
+    hvsim::sim::checkpoint::restore_from_file(&mut m2, &path).unwrap();
+    assert_eq!(m2.core.hart.regs[5], 99);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_file_drives_a_full_run() {
+    let dir = std::env::temp_dir().join(format!("hvsim_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "[machine]\nram_mb = 64\ntlb_sets = 16\ntlb_ways = 2\n[workload]\nname = \"fft\"\nvm = true\n[sim]\nmax_ticks = 2_000_000_000\n",
+    )
+    .unwrap();
+    let cfg = hvsim::config::SimConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.workload, "fft");
+    assert!(cfg.vm);
+    let mut m = cfg.build_machine();
+    assert_eq!(m.core.tlb.capacity(), 32);
+    hvsim::sw::setup_guest(&mut m, &cfg.workload, cfg.scale).unwrap();
+    assert_eq!(m.run(cfg.max_ticks), ExitReason::PowerOff(SYSCON_PASS));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wfi_timeout_is_bounded_by_limit() {
+    // A machine parked in WFI forever must still respect the tick limit
+    // (and fast-forward cheaply).
+    let mut m = boot("wfi\n loop: j loop\n", true);
+    // No interrupt source enabled: parks forever.
+    let t0 = std::time::Instant::now();
+    assert_eq!(m.run(100_000_000), ExitReason::Limit);
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "WFI fast-forward too slow");
+    assert!(m.stats.wfi_ticks > 0);
+}
+
+#[test]
+fn disasm_round_trips_through_assembler() {
+    // For every mnemonic family: assemble → decode → disasm → re-assemble
+    // → identical word. Catches field-order bugs in all three components.
+    let cases = [
+        "add s1, s2, s3",
+        "addw a0, a1, a2",
+        "sub t0, t1, t2",
+        "mulhu a3, a4, a5",
+        "remuw s10, s11, t3",
+        "addi sp, sp, -32",
+        "sltiu a0, a1, 2047",
+        "slli t0, t1, 63",
+        "sraiw t0, t1, 31",
+        "lb a0, -1(s0)",
+        "lwu t4, 2047(t5)",
+        "sd ra, 8(sp)",
+        "sb a1, -2048(a2)",
+        "jalr ra, 16(t0)",
+        "csrrw t0, mstatus, t1",
+        "csrrci a0, sstatus, 17",
+        "lr.w a0, (a1)",
+        "sc.d a0, a2, (a1)",
+        "amomaxu.d t0, t2, (t1)",
+        "hlv.b a0, (a1)",
+        "hlvx.hu t0, (t1)",
+        "hsv.w a2, (a3)",
+        "hfence.vvma a0, a1",
+        "hfence.gvma zero, zero",
+        "sfence.vma t0, t1",
+        "fadd.s f1, f2, f3",
+        "fmv.x.w a0, f7",
+        "flw f5, 16(sp)",
+        "fsw f5, 16(sp)",
+        "ecall",
+        "ebreak",
+        "mret",
+        "sret",
+        "wfi",
+        "fence",
+        "fence.i",
+    ];
+    for src in cases {
+        let w1 = {
+            let img = assemble(src, 0).unwrap();
+            u32::from_le_bytes(img.data[..4].try_into().unwrap())
+        };
+        let inst = decode(w1);
+        assert_ne!(inst.op, Op::Illegal, "{src}");
+        let text = disasm(&inst);
+        let w2 = {
+            let img = assemble(&text, 0)
+                .unwrap_or_else(|e| panic!("re-assembling '{text}' (from '{src}'): {e}"));
+            u32::from_le_bytes(img.data[..4].try_into().unwrap())
+        };
+        // Compare via decode (fence encodes ordering bits we don't model).
+        let i1 = decode(w1);
+        let i2 = decode(w2);
+        assert_eq!(
+            (i1.op, i1.rd, i1.rs1, i1.rs2, i1.imm, i1.csr),
+            (i2.op, i2.rd, i2.rs1, i2.rs2, i2.imm, i2.csr),
+            "round trip failed: '{src}' → {w1:#010x} → '{text}' → {w2:#010x}"
+        );
+    }
+}
+
+#[test]
+fn hypervisor_survives_guest_breakpoint() {
+    // ebreak in VS-mode with hedeleg.bit3 set is handled by the guest
+    // kernel... which doesn't expect it → k_panic → clean shutdown(fail).
+    // This is a controlled failure-injection test: the system must fail
+    // *cleanly* (console panic + SYSCON fail code), not wedge.
+    use hvsim::isa::PrivLevel;
+    let mut core = Core::new(true);
+    let mut bus = hvsim::mem::Bus::new(1 << 20);
+    let img = assemble("ebreak\n", RAM_BASE).unwrap();
+    bus.load_image(RAM_BASE, &img.data).unwrap();
+    core.hart.prv = PrivLevel::Supervisor;
+    core.hart.virt = true;
+    core.hart.pc = RAM_BASE;
+    core.hart.csr.medeleg = 1 << 3;
+    core.hart.csr.hedeleg = 1 << 3;
+    core.hart.csr.vstvec = 0x4000;
+    match step(&mut core, &mut bus) {
+        StepEvent::Exception(hvsim::isa::ExceptionCause::Breakpoint, t) => {
+            assert_eq!(t, hvsim::cpu::trap::TrapTarget::VS);
+            assert!(core.hart.virt, "handled inside the guest");
+            assert_eq!(core.hart.pc, 0x4000);
+        }
+        ev => panic!("{ev:?}"),
+    }
+}
+
+#[test]
+fn out_of_guest_memory_fails_cleanly() {
+    // Failure injection: a benchmark that exhausts the kernel's user page
+    // pool must panic the kernel (clean SYSCON fail), not wedge the
+    // machine. We provoke it by touching more heap pages than the pool
+    // holds (pool = 4 MiB = 1024 pages; touch 2000).
+    let kernel_extra = r#"
+bench_main:
+    li   s0, HEAP0
+    li   s1, 2000
+1:  sb   zero, 0(s0)
+    li   t0, 0x1000
+    add  s0, s0, t0
+    addi s1, s1, -1
+    bnez s1, 1b
+    li   a0, 0
+    call u_exit
+"#;
+    // Assemble a kernel with this pathological "benchmark" inline.
+    let src = format!(
+        ".equ SCALE, 1\n{}\n{}\n{}\n.align 12\nucode_end:\n",
+        include_str!("../src/sw/asm/kernel.s"),
+        include_str!("../src/sw/asm/prelude.s"),
+        kernel_extra
+    );
+    let img = assemble(&src, 0x8020_0000).unwrap();
+    let fw = hvsim::sw::firmware_image().unwrap();
+    let mut m = Machine::new(64 << 20, true);
+    m.load(&fw).unwrap();
+    m.load(&img).unwrap();
+    m.set_entry(hvsim::sw::FW_BASE);
+    m.core.hart.regs[11] = 0x8020_0000;
+    let r = m.run(2_000_000_000);
+    assert_eq!(r, ExitReason::PowerOff(0x3333), "clean fail-stop expected");
+    assert!(m.console().contains("K! "), "kernel panic banner: {}", m.console());
+}

@@ -1,0 +1,326 @@
+//! Property-based invariant tests (hand-rolled xorshift driver — the
+//! offline build has no proptest crate; see Cargo.toml).
+//!
+//! Invariants covered:
+//!  - CSR write masks: random writes never disturb read-only fields.
+//!  - Delegation routing: for random (medeleg, hedeleg, prv, V), the trap
+//!    unit picks exactly the level the chain prescribes.
+//!  - Interrupt selection: the chosen interrupt is always the highest-
+//!    priority pending+enabled one, and never targets a level below the
+//!    current privilege.
+//!  - TLB: lookups after random insert/flush sequences agree with a naive
+//!    associative model.
+//!  - Decoder totality: decode() never panics and decode(encode(x)) is
+//!    stable for the assembler's output.
+
+use hvsim::cpu::interrupts::check_interrupts;
+use hvsim::cpu::trap::{self, TrapTarget};
+use hvsim::cpu::Hart;
+use hvsim::isa::csr::{self as csrdef, irq, mstatus};
+use hvsim::isa::{decode, Exception, ExceptionCause, PrivLevel};
+use hvsim::mmu::{pte, Tlb, TlbEntry};
+
+/// xorshift64* — deterministic, seedable.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    fn chance(&mut self, p_percent: u64) -> bool {
+        self.below(100) < p_percent
+    }
+}
+
+#[test]
+fn csr_write_masks_hold_under_random_writes() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..2000 {
+        let mut c = hvsim::cpu::CsrFile::new(true);
+        let addr = match rng.below(8) {
+            0 => csrdef::CSR_MSTATUS,
+            1 => csrdef::CSR_MIDELEG,
+            2 => csrdef::CSR_HEDELEG,
+            3 => csrdef::CSR_MEDELEG,
+            4 => csrdef::CSR_HIDELEG,
+            5 => csrdef::CSR_HVIP,
+            6 => csrdef::CSR_HGATP,
+            _ => csrdef::CSR_SATP,
+        };
+        let val = rng.next();
+        c.write_raw(addr, val);
+        // Read-only-one delegation bits always read 1.
+        assert_eq!(
+            c.mideleg_read() & (irq::VS_MASK | irq::SGEIP),
+            irq::VS_MASK | irq::SGEIP
+        );
+        // hedeleg can never delegate ecall-from-HS/VS/M or guest faults.
+        assert_eq!(c.hedeleg & ((1 << 9) | (1 << 10) | (1 << 11) | (0xf << 20)), 0);
+        // medeleg bit 11 hardwired 0.
+        assert_eq!(c.medeleg & (1 << 11), 0);
+        // hideleg only ever holds VS bits.
+        assert_eq!(c.hideleg & !irq::VS_MASK, 0);
+        // hvip only ever aliases the three VS bits of mip.
+        assert_eq!(c.read_raw(csrdef::CSR_HVIP) & !irq::VS_MASK, 0);
+        // mstatus.MPP never holds the reserved value 2.
+        assert_ne!((c.mstatus & mstatus::MPP_MASK) >> mstatus::MPP_SHIFT, 2);
+        // atp modes are only BARE or SV39 (WARL).
+        for v in [c.satp, c.vsatp, c.hgatp] {
+            let mode = v >> 60;
+            assert!(mode == 0 || mode == 8, "invalid atp mode {mode}");
+        }
+    }
+}
+
+#[test]
+fn exception_routing_follows_delegation_chain() {
+    let mut rng = Rng::new(0xDEAD_BEEF);
+    let causes = [
+        ExceptionCause::IllegalInst,
+        ExceptionCause::Breakpoint,
+        ExceptionCause::EcallFromU,
+        ExceptionCause::LoadPageFault,
+        ExceptionCause::StorePageFault,
+        ExceptionCause::InstPageFault,
+        ExceptionCause::LoadGuestPageFault,
+        ExceptionCause::VirtualInstruction,
+    ];
+    for _ in 0..5000 {
+        let mut h = Hart::new(true);
+        h.prv = match rng.below(3) {
+            0 => PrivLevel::User,
+            1 => PrivLevel::Supervisor,
+            _ => PrivLevel::Machine,
+        };
+        h.virt = h.prv != PrivLevel::Machine && rng.chance(50);
+        h.csr.write_raw(csrdef::CSR_MEDELEG, rng.next());
+        h.csr.write_raw(csrdef::CSR_HEDELEG, rng.next());
+        let cause = causes[rng.below(causes.len() as u64) as usize];
+        let code = cause.code();
+        let medeleg = h.csr.medeleg;
+        let hedeleg = h.csr.hedeleg;
+        let (prv0, virt0) = (h.prv, h.virt);
+        let target = trap::take_exception(&mut h, &Exception::new(cause, 0));
+        // Oracle.
+        let want = if prv0 == PrivLevel::Machine || medeleg & (1 << code) == 0 {
+            TrapTarget::M
+        } else if virt0 && hedeleg & (1 << code) != 0 {
+            TrapTarget::VS
+        } else {
+            TrapTarget::HS
+        };
+        assert_eq!(target, want, "cause={cause:?} prv={prv0:?} virt={virt0}");
+        // V must drop unless the trap stayed in the guest.
+        match target {
+            TrapTarget::VS => assert!(h.virt),
+            _ => assert!(!h.virt),
+        }
+        // Handler privilege.
+        match target {
+            TrapTarget::M => assert_eq!(h.prv, PrivLevel::Machine),
+            _ => assert_eq!(h.prv, PrivLevel::Supervisor),
+        }
+    }
+}
+
+#[test]
+fn interrupt_selection_is_highest_priority_enabled() {
+    use hvsim::isa::InterruptCause as IC;
+    let mut rng = Rng::new(0xFEED);
+    for _ in 0..5000 {
+        let mut h = Hart::new(true);
+        h.prv = match rng.below(3) {
+            0 => PrivLevel::User,
+            1 => PrivLevel::Supervisor,
+            _ => PrivLevel::Machine,
+        };
+        h.virt = h.prv != PrivLevel::Machine && rng.chance(50);
+        h.csr.mip = rng.next() & (irq::M_MASK | irq::S_MASK | irq::VS_MASK);
+        h.csr.mie = rng.next() & (irq::M_MASK | irq::S_MASK | irq::VS_MASK);
+        h.csr.write_raw(csrdef::CSR_MIDELEG, rng.next());
+        h.csr.write_raw(csrdef::CSR_HIDELEG, rng.next());
+        if rng.chance(50) {
+            h.csr.mstatus |= mstatus::MIE;
+        }
+        if rng.chance(50) {
+            h.csr.mstatus |= mstatus::SIE;
+        }
+        if rng.chance(50) {
+            h.csr.vsstatus |= mstatus::SIE;
+        }
+        let got = check_interrupts(&h);
+        if let Some((cause, target)) = got {
+            // 1. It must be pending and enabled.
+            assert_ne!(h.csr.mip_read() & h.csr.mie & cause.mask(), 0);
+            // 2. Target must not be below current privilege.
+            match (target, h.prv, h.virt) {
+                (TrapTarget::HS, PrivLevel::Machine, _) => panic!("HS trap while in M"),
+                (TrapTarget::VS, PrivLevel::Machine, _) => panic!("VS trap while in M"),
+                (TrapTarget::VS, PrivLevel::Supervisor, false) => panic!("VS trap while in HS"),
+                _ => {}
+            }
+            // 3. No higher-priority interrupt was also deliverable.
+            for &c in IC::PRIORITY.iter() {
+                if c == cause {
+                    break;
+                }
+                // If c were deliverable, check_interrupts must have picked
+                // it; emulate by clearing everything else and re-asking.
+                let mut h2 = h.clone();
+                h2.csr.mip &= c.mask() | !cause.mask();
+                h2.csr.mip &= c.mask();
+                h2.csr.hgeip = 0;
+                if let Some((c2, _)) = check_interrupts(&h2) {
+                    assert_ne!(
+                        c2, c,
+                        "higher-priority {c:?} was deliverable but {cause:?} chosen"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Naive fully-associative oracle for TLB behaviour under random
+/// insert/lookup/fence sequences.
+#[test]
+fn tlb_agrees_with_naive_model() {
+    let mut rng = Rng::new(0xAB5EED);
+    for _round in 0..200 {
+        let mut tlb = Tlb::new(4, 2);
+        // Oracle: map key -> entry for everything inserted & not evicted.
+        // Because sets are tiny, we only check *negative* consistency
+        // (entries the real TLB returns must have been inserted with the
+        // same data and not flushed) and flush completeness.
+        let mut inserted: Vec<TlbEntry> = Vec::new();
+        for _ in 0..200 {
+            match rng.below(10) {
+                0..=5 => {
+                    let e = TlbEntry {
+                        valid: true,
+                        vpn: rng.below(32),
+                        asid: rng.below(4) as u16,
+                        vmid: rng.below(4) as u16,
+                        virt: rng.chance(50),
+                        host_ppn: rng.below(1 << 20),
+                        guest_ppn: rng.below(1 << 20),
+                        vs_perms: pte::V | pte::R | pte::A,
+                        g_perms: pte::V | pte::R | pte::U | pte::A,
+                        vs_level: 0,
+                        g_level: 0,
+                        global: rng.chance(10),
+                        s1_bare: false,
+                        lru: 0,
+                    };
+                    inserted.push(e);
+                    tlb.insert(e);
+                }
+                6 => {
+                    tlb.fence_vma(None, None);
+                    inserted.retain(|e| e.virt);
+                }
+                7 => {
+                    let vmid = rng.below(4) as u16;
+                    tlb.fence_vvma(vmid, None, None);
+                    inserted.retain(|e| !e.virt || e.vmid != vmid);
+                }
+                8 => {
+                    tlb.fence_gvma(None, None);
+                    inserted.retain(|e| !e.virt);
+                }
+                _ => {
+                    let vpn = rng.below(32);
+                    let asid = rng.below(4) as u16;
+                    let vmid = rng.below(4) as u16;
+                    let virt = rng.chance(50);
+                    if let Some(hit) = tlb.lookup(vpn, asid, vmid, virt) {
+                        let hit = *hit;
+                        // Must correspond to some non-flushed insert.
+                        let found = inserted.iter().any(|e| {
+                            e.vpn == vpn
+                                && e.virt == virt
+                                && (e.global || e.asid == asid)
+                                && (!virt || e.vmid == vmid)
+                                && e.host_ppn == hit.host_ppn
+                                && e.guest_ppn == hit.guest_ppn
+                        });
+                        assert!(found, "TLB returned a translation never inserted/flushed");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decoder_total_on_random_words() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..200_000 {
+        let raw = rng.next() as u32;
+        let inst = decode(raw);
+        // Nothing to assert beyond "no panic" and field sanity:
+        assert!(inst.rd < 32 && inst.rs1 < 32 && inst.rs2 < 32);
+    }
+}
+
+#[test]
+fn assembler_round_trips_through_decoder() {
+    // Every mnemonic the OS sources rely on must decode back to the same
+    // fields it was assembled from (spot-check with random operands).
+    let mut rng = Rng::new(0x1234);
+    for _ in 0..2000 {
+        let rd = rng.below(32);
+        let rs1 = rng.below(32);
+        let rs2 = rng.below(32);
+        let imm = (rng.next() as i64 % 2048).abs();
+        let cases = [
+            format!("add x{rd}, x{rs1}, x{rs2}"),
+            format!("addi x{rd}, x{rs1}, {imm}"),
+            format!("ld x{rd}, {imm}(x{rs1})"),
+            format!("sd x{rs2}, {imm}(x{rs1})"),
+            format!("csrrw x{rd}, mstatus, x{rs1}"),
+            format!("hlv.w x{rd}, (x{rs1})"),
+            format!("amoadd.d x{rd}, x{rs2}, (x{rs1})"),
+        ];
+        let src = cases[rng.below(cases.len() as u64) as usize].clone();
+        let img = hvsim::asm::assemble(&src, 0).unwrap();
+        let raw = u32::from_le_bytes(img.data[..4].try_into().unwrap());
+        let inst = decode(raw);
+        assert_ne!(inst.op, hvsim::isa::Op::Illegal, "{src} must decode");
+    }
+}
+
+#[test]
+fn checkpoint_round_trip_random_state() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..50 {
+        let mut m = hvsim::sim::Machine::new(1 << 20, true);
+        for i in 1..32 {
+            m.core.hart.regs[i] = rng.next();
+        }
+        m.core.hart.pc = rng.next() & !3;
+        m.core.hart.csr.write_raw(csrdef::CSR_MSTATUS, rng.next());
+        m.core.hart.csr.write_raw(csrdef::CSR_HGATP, rng.next());
+        m.core.hart.csr.write_raw(csrdef::CSR_VSATP, rng.next());
+        m.bus.write(hvsim::mem::RAM_BASE + rng.below(0xF_F000), 8, rng.next()).unwrap();
+        let blob = hvsim::sim::checkpoint::save(&m);
+        let mut m2 = hvsim::sim::Machine::new(1 << 20, true);
+        hvsim::sim::checkpoint::restore(&mut m2, &blob).unwrap();
+        assert_eq!(m.core.hart.regs, m2.core.hart.regs);
+        assert_eq!(m.core.hart.pc, m2.core.hart.pc);
+        assert_eq!(m.core.hart.csr.mstatus, m2.core.hart.csr.mstatus);
+        assert_eq!(m.core.hart.csr.hgatp, m2.core.hart.csr.hgatp);
+        assert_eq!(m.bus.ram_bytes(), m2.bus.ram_bytes());
+    }
+}
