@@ -1,0 +1,94 @@
+//! vmm_switch: world-switch latency and scheduled multi-guest throughput.
+//!
+//! Three measurements, in the spirit of the embedded-virtualization
+//! literature's vCPU switch microbenchmarks:
+//!   1. raw world-switch latency (hart+bus+stats swap, per TLB policy),
+//!   2. the VS/H CSR-file bulk swap alone (`CsrFile::vs_swap`),
+//!   3. end-to-end consolidated throughput: 2 guests round-robin on one
+//!      hart vs the same work run back-to-back.
+
+include!("bench_common.rs");
+
+use std::time::Instant;
+
+use hvsim::cpu::CsrFile;
+use hvsim::sim::Machine;
+use hvsim::vmm::{build_node, world_swap, FlushPolicy, VmmScheduler};
+
+const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("vmm_switch", "world-switch latency + consolidation throughput");
+
+    // ---- 1. raw world-switch latency per flush policy ----
+    let reps: u64 = 200_000;
+    for policy in [FlushPolicy::Partitioned, FlushPolicy::FlushVmid, FlushPolicy::FlushAll] {
+        let mut guests = build_node(&["bitcount"], 1, 1, RAM)?;
+        let g = &mut guests[0];
+        let mut m = Machine::new(RAM, true);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            world_swap(&mut m, g);
+            match policy {
+                FlushPolicy::FlushAll => m.core.tlb.flush_all(),
+                FlushPolicy::FlushVmid => m.core.tlb.flush_vmid(g.vmid),
+                FlushPolicy::Partitioned => m.core.tlb.bump_generation(),
+            }
+            world_swap(&mut m, g);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+        println!("world-switch (in+out, {:<12}): {ns:>8.1} ns", policy.name());
+    }
+
+    // ---- 2. VS/H CSR-file bulk swap alone ----
+    let mut live = CsrFile::new(true);
+    live.write_raw(hvsim::isa::csr::CSR_HGATP, (8u64 << 60) | (1 << 44) | 0x80180);
+    let mut parked = live.vs_save();
+    let reps2: u64 = 2_000_000;
+    let t0 = Instant::now();
+    for _ in 0..reps2 {
+        live.vs_swap(&mut parked);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / reps2 as f64;
+    println!("vs-csr-file bulk swap           : {ns:>8.1} ns");
+
+    // ---- 3. consolidated throughput: 2 guests vs back-to-back ----
+    // Guest-stack assembly (build_node) stays outside every timed region
+    // so serial and consolidated runs are measured the same way.
+    let scale = bench_scale();
+    let serial = median_secs(1, || {
+        let mut nodes = Vec::new();
+        for bench in ["qsort", "bitcount"] {
+            let guests = build_node(&[bench], scale, 1, RAM)?;
+            nodes.push((VmmScheduler::new(guests, 250_000, FlushPolicy::Partitioned), Machine::new(RAM, true)));
+        }
+        let t = Instant::now();
+        for (mut sched, mut m) in nodes {
+            let out = m.run_scheduled(&mut sched, u64::MAX);
+            anyhow::ensure!(out.all_passed, "serial guest failed");
+        }
+        Ok(t.elapsed().as_secs_f64())
+    })?;
+    for (policy, label) in [
+        (FlushPolicy::Partitioned, "partitioned"),
+        (FlushPolicy::FlushAll, "flush-all"),
+    ] {
+        let guests = build_node(&["qsort", "bitcount"], scale, 2, RAM)?;
+        let mut sched = VmmScheduler::new(guests, 250_000, policy);
+        let mut m = Machine::new(RAM, true);
+        let t = Instant::now();
+        let out = m.run_scheduled(&mut sched, u64::MAX);
+        let secs = t.elapsed().as_secs_f64();
+        anyhow::ensure!(out.all_passed, "scheduled guests failed");
+        let insts: u64 = sched.guests.iter().map(|g| g.stats.sim_insts).sum();
+        println!(
+            "2-guest node ({label:<11}): {secs:.3}s vs serial {serial:.3}s \
+             ({:.2}x), {} switches @ {:.0} ns, {:.1} M inst/s",
+            secs / serial,
+            out.world_switches,
+            out.avg_switch_ns,
+            insts as f64 / secs / 1e6,
+        );
+    }
+    Ok(())
+}

@@ -101,12 +101,7 @@ pub fn run_one(cfg: &SimConfig, bench: &str, vm: bool, with_trace: bool) -> Resu
     for ((cause, _), n) in &m.stats.exceptions {
         *exc_by_cause.entry(*cause).or_insert(0) += n;
     }
-    let checksum = m
-        .console()
-        .lines()
-        .find(|l| l.len() == 16 && l.chars().all(|c| c.is_ascii_hexdigit()))
-        .unwrap_or("")
-        .to_string();
+    let checksum = checksum_line(&m.console());
     Ok(BenchResult {
         name: bench.to_string(),
         vm,
@@ -125,6 +120,16 @@ pub fn run_one(cfg: &SimConfig, bench: &str, vm: bool, with_trace: bool) -> Resu
         checksum,
         trace: m.core.trace.take(),
     })
+}
+
+/// The benchmark checksum line: exactly 16 hex digits (see prelude.s
+/// print_hex64). Empty string when absent.
+pub fn checksum_line(console: &str) -> String {
+    console
+        .lines()
+        .find(|l| l.len() == 16 && l.chars().all(|c| c.is_ascii_hexdigit()))
+        .unwrap_or("")
+        .to_string()
 }
 
 /// A native/guest pair for one workload.
@@ -320,6 +325,186 @@ pub fn timing_table(rows: &[(String, bool, TraceReport)]) -> String {
             r.misses,
             100.0 * r.miss_rate(),
             r.overhead_ratio(),
+        ));
+    }
+    s
+}
+
+// ------------------------------------------------- consolidation sweep
+
+use crate::vmm::{self, FlushPolicy, VmmScheduler};
+
+/// One row of the consolidation sweep: N guests time-sliced onto one hart.
+#[derive(Clone, Debug)]
+pub struct ConsolidationRow {
+    pub guests: usize,
+    /// The actual workload composition of this node (benches cycled over
+    /// the guest count) — the count=1 row runs only the first benchmark.
+    pub mix: String,
+    pub slice_ticks: u64,
+    pub policy: FlushPolicy,
+    pub all_passed: bool,
+    /// Every guest's checksum matched its solo (1-guest) run.
+    pub checksums_ok: bool,
+    /// Global scheduled ticks until the last guest powered off.
+    pub total_ticks: u64,
+    /// Mean completion latency over guests (global ticks at power-off).
+    pub avg_finish_ticks: f64,
+    /// Mean of finish / solo-finish per guest — the per-guest slowdown
+    /// (≈ N for fair round-robin, plus world-switch overhead).
+    pub avg_slowdown: f64,
+    pub world_switches: u64,
+    pub avg_switch_ns: f64,
+    /// Sum of the guests' TLB misses (switch-induced refill shows up here
+    /// under FlushAll vs Partitioned).
+    pub tlb_misses: u64,
+}
+
+/// RAM per consolidated guest.
+pub const GUEST_NODE_RAM: usize = crate::sw::GUEST_RAM_MIN;
+
+/// Run one consolidated node to completion (or tick budget). Honors the
+/// config's TLB geometry — the knob the flush-policy comparison is about —
+/// while sizing RAM for the guest stacks. Never bails on guest failure:
+/// the caller turns a non-passing node into a FAIL row.
+fn run_node(
+    cfg: &SimConfig,
+    benches: &[&str],
+    count: usize,
+    slice_ticks: u64,
+    policy: FlushPolicy,
+    max_ticks: u64,
+) -> Result<VmmScheduler> {
+    let guests = vmm::build_node(benches, cfg.scale, count, GUEST_NODE_RAM)?;
+    let mut sched = VmmScheduler::new(guests, slice_ticks, policy);
+    let mut m = Machine::new(GUEST_NODE_RAM, true);
+    m.core.tlb = crate::mmu::Tlb::new(cfg.tlb_sets as usize, cfg.tlb_ways as usize);
+    m.run_scheduled(&mut sched, max_ticks);
+    Ok(sched)
+}
+
+/// Summarize one scheduled node against the solo baselines.
+fn node_row(
+    sched: &VmmScheduler,
+    count: usize,
+    slice_ticks: u64,
+    policy: FlushPolicy,
+    solo: &BTreeMap<String, (u64, String)>,
+) -> ConsolidationRow {
+    let out = sched.outcome();
+    let mut checksums_ok = out.all_passed;
+    let mut finish_sum = 0.0;
+    let mut slowdown_sum = 0.0;
+    let mut tlb_misses = 0;
+    let mut finished = 0usize;
+    for g in &sched.guests {
+        tlb_misses += g.mmu.tlb_misses;
+        let Some(finish) = g.finished_at_total else { continue };
+        finished += 1;
+        finish_sum += finish as f64;
+        let (solo_ticks, solo_ck) = &solo[&g.bench];
+        slowdown_sum += finish as f64 / *solo_ticks as f64;
+        if checksum_line(&g.console()) != *solo_ck {
+            checksums_ok = false;
+        }
+    }
+    let n = finished.max(1) as f64;
+    let mix = {
+        let mut names: Vec<&str> = sched.guests.iter().map(|g| g.bench.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        names.join("+")
+    };
+    ConsolidationRow {
+        guests: count,
+        mix,
+        slice_ticks,
+        policy,
+        all_passed: out.all_passed,
+        checksums_ok,
+        total_ticks: out.total_ticks,
+        avg_finish_ticks: finish_sum / n,
+        avg_slowdown: slowdown_sum / n,
+        world_switches: out.world_switches,
+        avg_switch_ns: out.avg_switch_ns,
+        tlb_misses,
+    }
+}
+
+/// The consolidation-sweep experiment: run 1/2/4/… guests per node
+/// (cycling through `benches` so distinct kernels interleave), and report
+/// per-guest slowdown and world-switch cost — the multi-tenant analog of
+/// the paper's Fig. 4–7 overhead tables. A failing node becomes a FAIL
+/// row rather than aborting the sweep.
+pub fn consolidation_sweep(
+    cfg: &SimConfig,
+    benches: &[&str],
+    counts: &[usize],
+    slice_ticks: u64,
+    policy: FlushPolicy,
+) -> Result<Vec<ConsolidationRow>> {
+    if benches.is_empty() {
+        bail!("consolidation sweep needs at least one benchmark");
+    }
+    // Solo baselines: completion ticks + checksum per distinct benchmark.
+    // These must pass — nothing downstream is meaningful otherwise. The
+    // scheduler for benches[0] doubles as the count=1 row (no re-run).
+    let mut solo: BTreeMap<String, (u64, String)> = BTreeMap::new();
+    let mut solo_first: Option<VmmScheduler> = None;
+    for &bench in benches {
+        if solo.contains_key(bench) {
+            continue;
+        }
+        let sched = run_node(cfg, &[bench], 1, slice_ticks, policy, cfg.max_ticks)?;
+        let g = &sched.guests[0];
+        let Some(ticks) = g.finished_at_total.filter(|_| g.passed()) else {
+            bail!("solo baseline {bench} did not pass ({:?}); console:\n{}", g.exit, g.console());
+        };
+        solo.insert(bench.to_string(), (ticks, checksum_line(&g.console())));
+        if solo_first.is_none() {
+            solo_first = Some(sched);
+        }
+    }
+
+    let mut rows = Vec::new();
+    for &count in counts {
+        if count == 1 {
+            let sched = solo_first.as_ref().expect("baseline exists");
+            rows.push(node_row(sched, 1, slice_ticks, policy, &solo));
+            continue;
+        }
+        let budget = cfg.max_ticks.saturating_mul(count as u64);
+        let sched = run_node(cfg, benches, count, slice_ticks, policy, budget)?;
+        rows.push(node_row(&sched, count, slice_ticks, policy, &solo));
+    }
+    Ok(rows)
+}
+
+/// Render the consolidation table (per-guest slowdown + world-switch cost).
+/// Each row shows the workload mix it actually ran — the 1-guest baseline
+/// row runs only the first benchmark of the requested mix.
+pub fn consolidation_table(rows: &[ConsolidationRow], benches: &[&str]) -> String {
+    let mut s = format!(
+        "Consolidation sweep — guests per node vs per-guest slowdown\n\
+         requested mix: {} | slice: {} ticks | TLB policy: {}\n\
+         guests  mix                pass  cksum  total_ticks   avg_finish  slowdown  switches  switch(ns)  tlb_misses\n",
+        benches.join("+"),
+        rows.first().map(|r| r.slice_ticks).unwrap_or(0),
+        rows.first().map(|r| r.policy.name()).unwrap_or("-"),
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<7} {:<18} {:<5} {:<6} {:>11} {:>12.0} {:>8.2}x {:>9} {:>11.0} {:>11}\n",
+            r.guests,
+            r.mix,
+            if r.all_passed { "ok" } else { "FAIL" },
+            if r.checksums_ok { "ok" } else { "FAIL" },
+            r.total_ticks,
+            r.avg_finish_ticks,
+            r.avg_slowdown,
+            r.world_switches,
+            r.avg_switch_ns,
+            r.tlb_misses,
         ));
     }
     s

@@ -632,6 +632,96 @@ impl CsrFile {
     pub fn clear_mip_bits(&mut self, bits: u64) {
         self.mip &= !bits;
     }
+
+    /// Snapshot the per-guest VS/H CSR world (used by the vmm world-switch
+    /// engine): the whole vs* bank, the hypervisor-configuration CSRs
+    /// (including `hgatp` with its VMID) and the VS-level pending/enable
+    /// interrupt bits of mip/mie.
+    pub fn vs_save(&self) -> VsCsrFile {
+        VsCsrFile {
+            vsstatus: self.vsstatus,
+            vstvec: self.vstvec,
+            vsscratch: self.vsscratch,
+            vsepc: self.vsepc,
+            vscause: self.vscause,
+            vstval: self.vstval,
+            vsatp: self.vsatp,
+            hstatus: self.hstatus,
+            hedeleg: self.hedeleg,
+            hideleg: self.hideleg,
+            hgatp: self.hgatp,
+            htval: self.htval,
+            htinst: self.htinst,
+            htimedelta: self.htimedelta,
+            hcounteren: self.hcounteren,
+            henvcfg: self.henvcfg,
+            hgeie: self.hgeie,
+            hgeip: self.hgeip,
+            vs_mip: self.mip & irq::VS_MASK,
+            vs_mie: self.mie & irq::VS_MASK,
+        }
+    }
+
+    /// Restore a snapshot taken with [`CsrFile::vs_save`].
+    pub fn vs_restore(&mut self, s: &VsCsrFile) {
+        self.vsstatus = s.vsstatus;
+        self.vstvec = s.vstvec;
+        self.vsscratch = s.vsscratch;
+        self.vsepc = s.vsepc;
+        self.vscause = s.vscause;
+        self.vstval = s.vstval;
+        self.vsatp = s.vsatp;
+        self.hstatus = s.hstatus;
+        self.hedeleg = s.hedeleg;
+        self.hideleg = s.hideleg;
+        self.hgatp = s.hgatp;
+        self.htval = s.htval;
+        self.htinst = s.htinst;
+        self.htimedelta = s.htimedelta;
+        self.hcounteren = s.hcounteren;
+        self.henvcfg = s.henvcfg;
+        self.hgeie = s.hgeie;
+        self.hgeip = s.hgeip;
+        self.mip = (self.mip & !irq::VS_MASK) | (s.vs_mip & irq::VS_MASK);
+        self.mie = (self.mie & !irq::VS_MASK) | (s.vs_mie & irq::VS_MASK);
+    }
+
+    /// Bulk world-switch primitive: exchange the live VS/H CSR file with a
+    /// parked vCPU's in one call (the paper-adjacent "world switch" cost
+    /// the vmm benchmarks measure).
+    pub fn vs_swap(&mut self, s: &mut VsCsrFile) {
+        let current = self.vs_save();
+        self.vs_restore(s);
+        *s = current;
+    }
+}
+
+/// The bulk-swappable per-guest VS/H CSR state — everything `hgatp`-tagged
+/// world switching must replace (GPRs/pc/mode live in [`crate::cpu::Hart`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VsCsrFile {
+    pub vsstatus: u64,
+    pub vstvec: u64,
+    pub vsscratch: u64,
+    pub vsepc: u64,
+    pub vscause: u64,
+    pub vstval: u64,
+    pub vsatp: u64,
+    pub hstatus: u64,
+    pub hedeleg: u64,
+    pub hideleg: u64,
+    pub hgatp: u64,
+    pub htval: u64,
+    pub htinst: u64,
+    pub htimedelta: u64,
+    pub hcounteren: u64,
+    pub henvcfg: u64,
+    pub hgeie: u64,
+    pub hgeip: u64,
+    /// VS-level bits of mip (hvip view), at their native bit positions.
+    pub vs_mip: u64,
+    /// VS-level bits of mie, at their native bit positions.
+    pub vs_mie: u64,
 }
 
 #[cfg(test)]
@@ -812,6 +902,52 @@ mod tests {
         c.hcounteren = 7;
         assert_eq!(c.read(CSR_TIME, P::Supervisor, false).unwrap(), 1000);
         assert_eq!(c.read(CSR_TIME, P::Supervisor, true).unwrap(), 1234);
+    }
+
+    #[test]
+    fn vs_swap_exchanges_guest_worlds() {
+        let mut c = csr();
+        c.write_raw(CSR_VSSCRATCH, 0x1111);
+        c.write_raw(CSR_VSATP, (atp::MODE_SV39 << atp::MODE_SHIFT) | 0x100);
+        c.write_raw(CSR_HGATP, (atp::MODE_SV39X4 << atp::MODE_SHIFT) | (1 << atp::VMID_SHIFT) | 0x200);
+        c.write_raw(CSR_HVIP, irq::VSSIP);
+        let mut parked = crate::cpu::csr::VsCsrFile {
+            vsscratch: 0x2222,
+            hgatp: (atp::MODE_SV39X4 << atp::MODE_SHIFT) | (2 << atp::VMID_SHIFT) | 0x300,
+            vs_mip: irq::VSTIP,
+            ..Default::default()
+        };
+        c.vs_swap(&mut parked);
+        // Live CSR file now holds the parked guest.
+        assert_eq!(c.vsscratch, 0x2222);
+        assert_eq!(atp::vmid(c.hgatp), 2);
+        assert_eq!(c.mip & irq::VS_MASK, irq::VSTIP);
+        // The snapshot captured the previous guest, VMID and pending bits
+        // included.
+        assert_eq!(parked.vsscratch, 0x1111);
+        assert_eq!(atp::vmid(parked.hgatp), 1);
+        assert_eq!(parked.vs_mip, irq::VSSIP);
+        // Round trip restores the original world exactly.
+        c.vs_swap(&mut parked);
+        assert_eq!(c.vsscratch, 0x1111);
+        assert_eq!(atp::vmid(c.hgatp), 1);
+        assert_eq!(c.mip & irq::VS_MASK, irq::VSSIP);
+    }
+
+    #[test]
+    fn vs_save_does_not_leak_non_vs_irq_bits() {
+        let mut c = csr();
+        c.mip = irq::MTIP | irq::SSIP | irq::VSTIP;
+        c.mie = irq::MTIP | irq::VSSIP;
+        let s = c.vs_save();
+        assert_eq!(s.vs_mip, irq::VSTIP);
+        assert_eq!(s.vs_mie, irq::VSSIP);
+        // Restoring another guest's VS bits must keep M/S bits intact.
+        let other = crate::cpu::csr::VsCsrFile::default();
+        c.vs_restore(&other);
+        assert_eq!(c.mip & (irq::MTIP | irq::SSIP), irq::MTIP | irq::SSIP);
+        assert_eq!(c.mip & irq::VS_MASK, 0);
+        assert_eq!(c.mie & irq::MTIP, irq::MTIP);
     }
 
     #[test]

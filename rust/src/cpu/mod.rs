@@ -10,7 +10,7 @@ pub mod execute;
 pub mod interrupts;
 pub mod trap;
 
-pub use csr::{CsrFile, CsrError};
+pub use csr::{CsrError, CsrFile, VsCsrFile};
 pub use execute::{step, Core, StepEvent};
 
 use crate::isa::PrivLevel;

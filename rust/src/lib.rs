@@ -13,10 +13,14 @@
 //!   stack (SBI firmware, the `xvisor-rs` hypervisor, the `mini-os`
 //!   kernel, MiBench-analog benchmarks).
 //! - [`sim`]: machine assembly, the tick loop, stats and checkpoints.
+//! - [`vmm`]: the multi-guest VMM layer — vCPU world snapshots, the
+//!   world-switch engine with VMID-partitioned TLB policies, and the
+//!   round-robin scheduler that turns one hart into a consolidated
+//!   multi-tenant "cloud node" (consolidation-sweep experiment).
 //! - [`trace`], [`runtime`]: trace capture and the PJRT-loaded XLA timing
 //!   model (Layer 2/1 artifacts).
 //! - [`coordinator`]: experiment orchestration — regenerates every figure
-//!   of the paper's evaluation.
+//!   of the paper's evaluation, plus the consolidation sweep.
 
 pub mod asm;
 pub mod config;
@@ -30,3 +34,4 @@ pub mod runtime;
 pub mod sim;
 pub mod sw;
 pub mod trace;
+pub mod vmm;

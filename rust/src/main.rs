@@ -4,6 +4,8 @@
 //! hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE]
 //!             [--stats] [--echo] [--max-ticks N]
 //! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
+//! hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--scale N]
+//!             [--policy all|vmid|none] [--out FILE]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
 //! hvsim boot  [--config FILE]
 //! hvsim list
@@ -164,6 +166,49 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The consolidation sweep: 1/2/4/…/N guests time-sliced onto one hart.
+fn cmd_vmm(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let max_guests = args.u64("guests")?.unwrap_or(4).max(1) as usize;
+    let slice = args.u64("slice")?.unwrap_or(200_000).max(1);
+    let policy = match args.get("policy") {
+        None => hvsim::vmm::FlushPolicy::Partitioned,
+        Some(p) => hvsim::vmm::FlushPolicy::parse(p)
+            .with_context(|| format!("unknown --policy '{p}' (all|vmid|none)"))?,
+    };
+    // Two distinct guest kernels interleave by default.
+    let bench_arg = args.get("bench").unwrap_or("qsort,bitcount").to_string();
+    let benches: Vec<&str> = bench_arg.split(',').filter(|s| !s.is_empty()).collect();
+    // Guest counts: powers of two up to N, plus N itself.
+    let mut counts = Vec::new();
+    let mut c = 1usize;
+    while c <= max_guests {
+        counts.push(c);
+        c *= 2;
+    }
+    if *counts.last().unwrap() != max_guests {
+        counts.push(max_guests);
+    }
+
+    let rows = coordinator::consolidation_sweep(&cfg, &benches, &counts, slice, policy)?;
+    let mut out = coordinator::consolidation_table(&rows, &benches);
+    let all_ok = rows.iter().all(|r| r.all_passed && r.checksums_ok);
+    out.push('\n');
+    if all_ok {
+        out.push_str("consolidation check: ALL GUESTS POWERED OFF PASS, CHECKSUMS MATCH SOLO\n");
+    } else {
+        out.push_str("consolidation check: FAILURES\n");
+    }
+    match args.get("out") {
+        Some(path) => std::fs::write(path, &out)?,
+        None => print!("{out}"),
+    }
+    if !all_ok {
+        bail!("consolidation sweep failed");
+    }
+    Ok(())
+}
+
 fn cmd_timing(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
     let dir = args.get("artifacts").map(PathBuf::from).unwrap_or_else(TimingEngine::default_dir);
@@ -195,6 +240,7 @@ fn usage() -> ! {
         "hvsim — gem5-style RISC-V simulator with the H extension\n\
          usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
+         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
          hvsim boot  [--bench NAME]\n  hvsim list"
     );
@@ -208,6 +254,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
+        "vmm" => cmd_vmm(&args),
         "timing" => cmd_timing(&args),
         "boot" => cmd_boot(&args),
         "list" => {

@@ -231,6 +231,34 @@ impl Tlb {
         }
     }
 
+    /// VMID-selective flush: drop every guest (V=1) entry tagged with
+    /// `vmid`, leaving other guests' partitions and native entries alone.
+    /// This is the vmm world-switch / guest-teardown primitive — the
+    /// software-visible analog is `hfence.gvma x0, rs2`.
+    pub fn flush_vmid(&mut self, vmid: u16) {
+        self.generation += 1;
+        for e in &mut self.entries {
+            if e.valid && e.virt && e.vmid == vmid {
+                e.valid = false;
+            }
+        }
+    }
+
+    /// Invalidate the CPU's page-translation fast paths *without* dropping
+    /// any TLB entry. The one-entry fetch/load/store caches in front of the
+    /// TLB are keyed by (vpn, priv, V, generation) only — not by VMID/ASID
+    /// — so a flushless VMID-partitioned world switch must bump the
+    /// generation to keep them from serving the previous guest's
+    /// translations.
+    pub fn bump_generation(&mut self) {
+        self.generation += 1;
+    }
+
+    /// Count of live guest entries for a VMID (isolation diagnostics).
+    pub fn count_vmid(&self, vmid: u16) -> usize {
+        self.entries.iter().filter(|e| e.valid && e.virt && e.vmid == vmid).count()
+    }
+
     /// sfence.vma: flush *native* entries matching optional (vaddr, asid).
     /// Global pages survive ASID-targeted flushes.
     pub fn fence_vma(&mut self, vaddr: Option<u64>, asid: Option<u16>) {
@@ -406,6 +434,30 @@ mod tests {
         // VMID-only flush clears the rest.
         t.fence_gvma(None, Some(3));
         assert!(t.lookup(0x41, 1, 3, true).is_none());
+    }
+
+    #[test]
+    fn flush_vmid_partitions_guests() {
+        let mut t = Tlb::new(16, 2);
+        t.insert(native_entry(0x50, 1));
+        t.insert(guest_entry(0x50, 1, 1));
+        t.insert(guest_entry(0x51, 1, 2));
+        t.flush_vmid(1);
+        assert!(t.lookup(0x50, 1, 1, true).is_none(), "vmid 1 flushed");
+        assert!(t.lookup(0x51, 1, 2, true).is_some(), "vmid 2 untouched");
+        assert!(t.lookup(0x50, 1, 0, false).is_some(), "native untouched");
+        assert_eq!(t.count_vmid(1), 0);
+        assert_eq!(t.count_vmid(2), 1);
+    }
+
+    #[test]
+    fn bump_generation_keeps_entries() {
+        let mut t = Tlb::new(16, 2);
+        t.insert(guest_entry(0x60, 1, 3));
+        let g0 = t.generation();
+        t.bump_generation();
+        assert_eq!(t.generation(), g0 + 1, "page caches must re-probe");
+        assert!(t.lookup(0x60, 1, 3, true).is_some(), "TLB entry survives");
     }
 
     #[test]

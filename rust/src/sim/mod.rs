@@ -32,8 +32,11 @@ pub struct Machine {
     pub bus: Bus,
     pub stats: SimStats,
     /// Ticks remaining until the next device update (§Perf: avoids a
-    /// modulo in the hot loop).
-    device_countdown: u64,
+    /// modulo in the hot loop). `pub(crate)` so the vmm world-switch can
+    /// swap it per guest — the device timebase phase is part of a guest's
+    /// world, and inheriting a co-tenant's phase would make consolidated
+    /// runs diverge from solo runs.
+    pub(crate) device_countdown: u64,
 }
 
 impl Machine {
@@ -163,6 +166,18 @@ impl Machine {
         };
         self.stats.host_time += start.elapsed();
         reason
+    }
+
+    /// Run as a consolidated multi-tenant node: the scheduler world-switches
+    /// its guests onto this machine's hart until every guest powers off or
+    /// the global tick budget is spent. The machine's own (scratch) world is
+    /// parked during each slice and restored afterwards. See [`crate::vmm`].
+    pub fn run_scheduled(
+        &mut self,
+        sched: &mut crate::vmm::VmmScheduler,
+        max_total_ticks: u64,
+    ) -> crate::vmm::ScheduleOutcome {
+        sched.run(self, max_total_ticks)
     }
 
     /// Console output so far.

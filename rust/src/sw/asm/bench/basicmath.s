@@ -1,0 +1,61 @@
+# bench/basicmath.s — MiBench basicmath analog: integer square roots
+# (bit-by-bit) and Euclid GCDs over a derived sequence, with per-iteration
+# results stored to the heap.
+.equ BM_N_BASE, 4096
+
+bench_main:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    li   s1, BM_N_BASE
+    li   t0, SCALE
+    mul  s1, s1, t0             # n
+    li   s2, 0                  # acc
+    li   s3, 1                  # k
+    li   s0, HEAP0              # results array
+bm_loop:
+    # x = (k * 2654435761) mod 2^32
+    li   t0, 2654435761
+    mul  t1, s3, t0
+    slli t1, t1, 32
+    srli t1, t1, 32
+    # isqrt(x): res in t2
+    li   t2, 0
+    li   t3, 1 << 30
+1:
+    beqz t3, 3f
+    add  t4, t2, t3             # res + bit
+    bltu t1, t4, 2f
+    sub  t1, t1, t4
+    srli t2, t2, 1
+    add  t2, t2, t3
+    j    9f
+2:
+    srli t2, t2, 1
+9:
+    srli t3, t3, 2
+    j    1b
+3:
+    # gcd(k, 31k + 7): result in t3
+    mv   t3, s3
+    slli t4, s3, 5
+    sub  t4, t4, s3
+    addi t4, t4, 7
+4:
+    beqz t4, 5f
+    remu t5, t3, t4
+    mv   t3, t4
+    mv   t4, t5
+    j    4b
+5:
+    xor  t5, t2, t3
+    sd   t5, 0(s0)
+    addi s0, s0, 8
+    add  s2, s2, t5
+    addi s3, s3, 1
+    addi s1, s1, -1
+    bnez s1, bm_loop
+    mv   a0, s2
+    call print_hex64
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret

@@ -1,0 +1,43 @@
+# bench/bitcount.s — MiBench bitcount analog: population count over a
+# pseudo-random stream (Kernighan clear-lowest-bit loop) plus a popcount
+# histogram kept in the demand-paged heap.
+.equ BC_N_BASE, 32768
+
+bench_main:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    li   s0, BC_N_BASE
+    li   t0, SCALE
+    mul  s0, s0, t0             # n values
+    li   s1, 0                  # total set bits
+    li   s2, HEAP0              # hist[65] of per-word popcounts
+    li   a0, 0x123456789abcdef
+1:
+    call xorshift64
+    mv   t1, a0
+    li   t2, 0
+2:
+    beqz t1, 3f
+    addi t3, t1, -1
+    and  t1, t1, t3             # clear lowest set bit
+    addi t2, t2, 1
+    j    2b
+3:
+    add  s1, s1, t2
+    slli t3, t2, 3
+    add  t3, s2, t3
+    ld   t4, 0(t3)
+    addi t4, t4, 1
+    sd   t4, 0(t3)              # hist[popcount]++
+    addi s0, s0, -1
+    bnez s0, 1b
+    # checksum = total ^ (hist[32] << 32)
+    li   t0, 32 << 3
+    add  t0, s2, t0
+    ld   t1, 0(t0)
+    slli t1, t1, 32
+    xor  a0, s1, t1
+    call print_hex64
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret

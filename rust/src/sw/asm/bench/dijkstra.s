@@ -1,0 +1,116 @@
+# bench/dijkstra.s — MiBench dijkstra analog: O(V^2) single-source
+# shortest paths on a dense random 64-node graph, SCALE*8 sources.
+# Adjacency matrix, dist[] and visited[] all live in the heap.
+.equ DJ_V,    64
+.equ DJ_W,    HEAP0              # w[64][64], u64 weights 1..256
+.equ DJ_DIST, HEAP0 + 0x10000    # dist[64]
+.equ DJ_VIS,  HEAP0 + 0x10800    # visited[64]
+.equ DJ_BIG,  1 << 30
+
+bench_main:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    # fill the adjacency matrix
+    li   s0, DJ_W
+    li   s1, DJ_V * DJ_V
+    li   a0, 0x777
+    mv   s2, s0
+1:
+    call xorshift64
+    andi t0, a0, 0xff
+    addi t0, t0, 1
+    sd   t0, 0(s2)
+    addi s2, s2, 8
+    addi s1, s1, -1
+    bnez s1, 1b
+    li   s4, 8
+    li   t0, SCALE
+    mul  s4, s4, t0             # rounds
+    li   s5, 0                  # checksum
+dj_round:
+    beqz s4, dj_done
+    # init dist = BIG, visited = 0; dist[src] = 0 with src = round & 63
+    li   t0, DJ_DIST
+    li   t1, DJ_VIS
+    li   t2, DJ_BIG
+    li   t3, DJ_V
+2:
+    sd   t2, 0(t0)
+    sd   x0, 0(t1)
+    addi t0, t0, 8
+    addi t1, t1, 8
+    addi t3, t3, -1
+    bnez t3, 2b
+    andi t0, s4, 63             # src
+    slli t0, t0, 3
+    li   t1, DJ_DIST
+    add  t0, t1, t0
+    sd   x0, 0(t0)
+    # V iterations: pick unvisited min, relax its 64 edges
+    li   s6, DJ_V               # iterations left
+dj_iter:
+    beqz s6, dj_sum
+    # --- find unvisited min: index s7, value s8 ---
+    li   s7, -1
+    li   s8, DJ_BIG + 1
+    li   t2, 0                  # i
+    li   t0, DJ_DIST
+    li   t1, DJ_VIS
+3:
+    ld   t3, 0(t1)
+    bnez t3, 4f
+    ld   t4, 0(t0)
+    bgeu t4, s8, 4f
+    mv   s8, t4
+    mv   s7, t2
+4:
+    addi t0, t0, 8
+    addi t1, t1, 8
+    addi t2, t2, 1
+    li   t3, DJ_V
+    bltu t2, t3, 3b
+    bltz s7, dj_sum             # all visited/unreachable
+    # mark visited
+    li   t0, DJ_VIS
+    slli t1, s7, 3
+    add  t0, t0, t1
+    li   t1, 1
+    sd   t1, 0(t0)
+    # --- relax edges of s7 ---
+    li   t0, DJ_W
+    slli t1, s7, 9              # s7 * 64 * 8
+    add  t0, t0, t1             # &w[s7][0]
+    li   t1, DJ_DIST
+    li   t2, 0                  # j
+5:
+    ld   t3, 0(t0)              # w[s7][j]
+    add  t3, t3, s8             # cand = dist[s7] + w
+    ld   t4, 0(t1)              # dist[j]
+    bgeu t3, t4, 6f
+    sd   t3, 0(t1)
+6:
+    addi t0, t0, 8
+    addi t1, t1, 8
+    addi t2, t2, 1
+    li   t3, DJ_V
+    bltu t2, t3, 5b
+    addi s6, s6, -1
+    j    dj_iter
+dj_sum:
+    # checksum += sum(dist[])
+    li   t0, DJ_DIST
+    li   t1, DJ_V
+7:
+    ld   t2, 0(t0)
+    add  s5, s5, t2
+    addi t0, t0, 8
+    addi t1, t1, -1
+    bnez t1, 7b
+    addi s4, s4, -1
+    j    dj_round
+dj_done:
+    mv   a0, s5
+    call print_hex64
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret

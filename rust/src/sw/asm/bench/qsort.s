@@ -1,0 +1,69 @@
+# bench/qsort.s — MiBench qsort analog: shell-sort SCALE*4096 pseudo-random
+# u64 keys living in the demand-paged heap; checksum is order-sensitive.
+.equ QS_N_BASE, 4096
+
+bench_main:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    li   s0, HEAP0              # a[]
+    li   s1, QS_N_BASE
+    li   t0, SCALE
+    mul  s1, s1, t0             # n
+    # fill with xorshift64 keys
+    li   a0, 0x9e3779b97f4a7c15
+    mv   s2, s0
+    mv   s3, s1
+1:
+    call xorshift64
+    sd   a0, 0(s2)
+    addi s2, s2, 8
+    addi s3, s3, -1
+    bnez s3, 1b
+    # shell sort (gap sequence n/2, n/4, ..., 1)
+    srli s2, s1, 1              # gap
+qs_gap:
+    beqz s2, qs_check
+    mv   s3, s2                 # i = gap
+qs_outer:
+    bgeu s3, s1, qs_gap_next
+    slli t0, s3, 3
+    add  t0, s0, t0
+    ld   s4, 0(t0)              # tmp = a[i]
+    mv   s5, s3                 # j = i
+qs_inner:
+    bltu s5, s2, qs_place
+    sub  t1, s5, s2             # j - gap
+    slli t2, t1, 3
+    add  t2, s0, t2
+    ld   t3, 0(t2)              # a[j-gap]
+    bgeu s4, t3, qs_place       # tmp >= a[j-gap]: insertion point found
+    slli t4, s5, 3
+    add  t4, s0, t4
+    sd   t3, 0(t4)              # a[j] = a[j-gap]
+    mv   s5, t1
+    j    qs_inner
+qs_place:
+    slli t0, s5, 3
+    add  t0, s0, t0
+    sd   s4, 0(t0)
+    addi s3, s3, 1
+    j    qs_outer
+qs_gap_next:
+    srli s2, s2, 1
+    j    qs_gap
+qs_check:
+    # checksum = sum(a[i] * (i+1)), wrapping
+    li   a0, 0
+    li   t0, 0
+    mv   t1, s0
+2:
+    ld   t2, 0(t1)
+    addi t0, t0, 1
+    mul  t2, t2, t0
+    add  a0, a0, t2
+    addi t1, t1, 8
+    bltu t0, s1, 2b
+    call print_hex64
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret

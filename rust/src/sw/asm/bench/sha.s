@@ -1,0 +1,46 @@
+# bench/sha.s — MiBench sha analog: a rotate-xor-multiply sponge absorbed
+# over a generated message, six rounds per run. Not cryptographic — the
+# point is the deterministic compute/memory profile.
+.equ SHA_N_BASE, 8192
+
+bench_main:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    li   s0, HEAP0              # message words
+    li   s1, SHA_N_BASE
+    li   t0, SCALE
+    mul  s1, s1, t0             # n dwords
+    li   a0, 0x5a5a5a5a5a5a5a5
+    mv   s2, s0
+    mv   s3, s1
+1:
+    call xorshift64
+    sd   a0, 0(s2)
+    addi s2, s2, 8
+    addi s3, s3, -1
+    bnez s3, 1b
+    # absorb: h = ror64(h, 19) ^ w; h = h * 0x9e3779b1 + round
+    li   s4, 6                  # rounds
+    li   s5, 0x12345678         # h
+2:
+    mv   s2, s0
+    mv   s3, s1
+3:
+    ld   t0, 0(s2)
+    srli t1, s5, 19
+    slli t2, s5, 45
+    or   s5, t1, t2
+    xor  s5, s5, t0
+    li   t3, 0x9e3779b1
+    mul  s5, s5, t3
+    add  s5, s5, s4
+    addi s2, s2, 8
+    addi s3, s3, -1
+    bnez s3, 3b
+    addi s4, s4, -1
+    bnez s4, 2b
+    mv   a0, s5
+    call print_hex64
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret

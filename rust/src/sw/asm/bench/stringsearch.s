@@ -1,0 +1,56 @@
+# bench/stringsearch.s — MiBench stringsearch analog: naive substring scan
+# of a 4-byte needle over a generated 8-letter-alphabet text in the heap.
+# Byte-wise compares only (no unaligned word loads).
+.equ SS_N_BASE, 16384
+
+bench_main:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    li   s0, HEAP0              # text
+    li   s1, SS_N_BASE
+    li   t0, SCALE
+    mul  s1, s1, t0             # n bytes
+    li   a0, 0xabcdef12345
+    mv   s2, s0
+    mv   s3, s1
+1:
+    call xorshift64
+    andi t0, a0, 7
+    addi t0, t0, 'a'
+    sb   t0, 0(s2)
+    addi s2, s2, 1
+    addi s3, s3, -1
+    bnez s3, 1b
+    # needle: text[97..101]
+    lbu  s6, 97(s0)
+    lbu  s7, 98(s0)
+    lbu  s8, 99(s0)
+    lbu  s9, 100(s0)
+    li   s4, 0                  # match count
+    li   s5, 0                  # position hash
+    li   t4, 0                  # i
+    addi s3, s1, -4             # last start position
+2:
+    bgtu t4, s3, 5f
+    add  t0, s0, t4
+    lbu  t1, 0(t0)
+    bne  t1, s6, 4f
+    lbu  t1, 1(t0)
+    bne  t1, s7, 4f
+    lbu  t1, 2(t0)
+    bne  t1, s8, 4f
+    lbu  t1, 3(t0)
+    bne  t1, s9, 4f
+    addi s4, s4, 1
+    slli s5, s5, 1
+    add  s5, s5, t4
+4:
+    addi t4, t4, 1
+    j    2b
+5:
+    slli a0, s4, 48
+    xor  a0, a0, s5
+    call print_hex64
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret

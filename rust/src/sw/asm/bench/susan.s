@@ -1,0 +1,98 @@
+# bench/susan.s — MiBench susan analog: 3x3 box smoothing plus an
+# edge-count threshold over a 64x64 8-bit "image", SCALE passes; the output
+# of each pass becomes the next pass's input.
+.equ SU_W,   64
+.equ SU_IMG, HEAP0
+.equ SU_OUT, HEAP0 + 0x2000
+
+bench_main:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    # fill the image with pseudo-random bytes
+    li   s0, SU_IMG
+    li   s1, SU_W * SU_W
+    li   a0, 0xbeefcafe
+1:
+    call xorshift64
+    sb   a0, 0(s0)
+    addi s0, s0, 1
+    addi s1, s1, -1
+    bnez s1, 1b
+    li   s10, SCALE             # passes
+    li   s9, 0                  # edge count
+    li   s8, 0                  # output sum
+su_pass:
+    beqz s10, su_done
+    li   s2, 1                  # y
+su_row:
+    li   t0, SU_W - 1
+    bgeu s2, t0, su_copy
+    li   s3, 1                  # x
+su_col:
+    li   t0, SU_W - 1
+    bgeu s3, t0, su_row_next
+    # sum the 3x3 neighbourhood around (y, x)
+    slli t0, s2, 6
+    add  t0, t0, s3             # y*64 + x
+    li   t1, SU_IMG
+    add  t1, t1, t0             # &img[y][x]
+    li   s4, 0                  # sum
+    li   t2, 0                  # dy index 0..2
+2:
+    addi t3, t2, -1             # dy
+    slli t3, t3, 6
+    add  t3, t1, t3             # row pointer
+    lbu  t4, -1(t3)
+    add  s4, s4, t4
+    lbu  t4, 0(t3)
+    add  s4, s4, t4
+    lbu  t4, 1(t3)
+    add  s4, s4, t4
+    addi t2, t2, 1
+    li   t4, 3
+    bltu t2, t4, 2b
+    # out = sum / 9
+    li   t2, 9
+    divu t3, s4, t2
+    li   t4, SU_OUT
+    add  t4, t4, t0
+    sb   t3, 0(t4)
+    add  s8, s8, t3
+    # edge if |9*center - sum| > 120
+    lbu  t4, 0(t1)
+    li   t2, 9
+    mul  t4, t4, t2
+    sub  t4, t4, s4
+    bgez t4, 3f
+    neg  t4, t4
+3:
+    li   t2, 120
+    bleu t4, t2, 4f
+    addi s9, s9, 1
+4:
+    addi s3, s3, 1
+    j    su_col
+su_row_next:
+    addi s2, s2, 1
+    j    su_row
+su_copy:
+    # img <- out (interior only; borders stay put)
+    li   t0, SU_IMG
+    li   t1, SU_OUT
+    li   t2, SU_W * SU_W
+5:
+    lbu  t3, 0(t1)
+    sb   t3, 0(t0)
+    addi t0, t0, 1
+    addi t1, t1, 1
+    addi t2, t2, -1
+    bnez t2, 5b
+    addi s10, s10, -1
+    j    su_pass
+su_done:
+    slli a0, s9, 32
+    xor  a0, a0, s8
+    call print_hex64
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret

@@ -1,0 +1,100 @@
+# firmware.s — M-mode SBI firmware (DESIGN.md S11).
+#
+# Boot protocol (set up by sw::setup_native / sw::setup_guest):
+#   a0 = hartid, a1 = next-stage entry (kernel or hypervisor), a2 = 0 native / 1 guest
+#
+# Responsibilities:
+#   - install the M trap vector and delegation registers
+#   - drop to (H)S mode at the next stage via mret
+#   - serve the SBI calls of the software stack:
+#       a7 = 0  putchar(a0)       — write one byte to the UART
+#       a7 = 1  shutdown(a0)      — SYSCON poweroff: 0 => pass, else fail
+#   Any unexpected trap or unknown SBI function fail-stops the machine.
+#
+# The firmware never prints on the boot path: the console contract is that
+# the kernel banner is the first UART output (the coordinator keys its
+# checkpoint methodology on that).
+
+.equ UART,        0x10000000
+.equ SYSCON,      0x100000
+.equ PASS_CODE,   0x5555
+.equ FAIL_CODE,   0x3333
+
+fw_entry:
+    la   t0, m_trap
+    csrw mtvec, t0
+    la   t0, m_stack_top
+    csrw mscratch, t0
+
+    # Delegate to (H)S everything the OS stack handles itself:
+    #   0  inst misaligned      3  breakpoint       4/6 misaligned ld/st
+    #   8  ecall-from-U         12/13/15 page faults
+    # and to HS (guest runs; the bits simply don't stick without H):
+    #   10 ecall-from-VS        20/21/23 guest-page faults
+    #   22 virtual instruction
+    li   t0, (1<<0)|(1<<3)|(1<<4)|(1<<6)|(1<<8)|(1<<12)|(1<<13)|(1<<15)|(1<<10)|(1<<20)|(1<<21)|(1<<22)|(1<<23)
+    csrw medeleg, t0
+    csrw mideleg, x0
+
+    # MPP = S (01): drop into the next stage in (H)S mode.
+    li   t0, 3 << 11
+    csrc mstatus, t0
+    li   t0, 1 << 11
+    csrs mstatus, t0
+    csrw mepc, a1
+    mret
+
+# ---------------------------------------------------------------- M trap
+.align 2
+m_trap:
+    csrrw sp, mscratch, sp
+    sd   t0, -8(sp)
+    sd   t1, -16(sp)
+
+    csrr t0, mcause
+    li   t1, 9                  # ecall from (H)S — the SBI entry
+    beq  t0, t1, m_sbi
+    li   t1, 11                 # ecall from M (not used, but route as SBI)
+    beq  t0, t1, m_sbi
+    j    m_fail                 # anything else: fail-stop
+
+m_sbi:
+    bnez a7, 1f
+    # --- putchar(a0) ---
+    li   t0, UART
+    sb   a0, 0(t0)
+    j    m_sbi_ret
+1:
+    li   t0, 1
+    bne  a7, t0, m_fail
+    # --- shutdown(a0): 0 => pass, else fail ---
+    li   t0, SYSCON
+    li   t1, PASS_CODE
+    beqz a0, 2f
+    li   t1, FAIL_CODE
+2:
+    sw   t1, 0(t0)
+3:
+    j    3b
+
+m_sbi_ret:
+    csrr t0, mepc
+    addi t0, t0, 4
+    csrw mepc, t0
+    ld   t1, -16(sp)
+    ld   t0, -8(sp)
+    csrrw sp, mscratch, sp
+    mret
+
+m_fail:
+    li   t0, SYSCON
+    li   t1, FAIL_CODE
+    sw   t1, 0(t0)
+4:
+    j    4b
+
+# ------------------------------------------------------------- M stack
+.align 4
+m_stack:
+    .space 256
+m_stack_top:

@@ -1,0 +1,304 @@
+# hypervisor.s — xvisor-rs, a type-1 hypervisor running in HS mode
+# (DESIGN.md S12).
+#
+# Assembled by sw::hypervisor_image(), which textually prepends
+#   .equ GUEST_VMID, <n>
+# so every guest instance can carry a distinct VMID (the TLB partitioning
+# key the vmm subsystem relies on). Do not define GUEST_VMID here.
+#
+# Boot: entered from the firmware in HS mode (a1 = HV_BASE). Sets up
+#   - hedeleg/hideleg so the guest kernel handles its own traps at VS
+#   - an Sv39x4 G-stage page table with *demand paging*: guest-physical
+#     pages are mapped lazily, on guest-page faults (causes 20/21/23),
+#     to host physical = guest physical + GUEST_OFF
+#   - then enters the guest kernel at KERNEL_BASE in VS mode via sret
+#
+# Runtime: VS ecalls (cause 10) are forwarded SBI calls —
+#   putchar is relayed to the firmware (one more M-level trap, exactly the
+#   Fig. 7 "three-level" shape), shutdown first prints the exit summary:
+#     xvisor: pf/ecall/irq/virt P/E/I/V
+# The hypervisor prints nothing before guest shutdown: the console must
+# start with the guest kernel's own output (functional-equivalence check).
+
+.equ HPT_ROOT,     0x80180000    # Sv39x4 root, 16 KiB, 16K-aligned
+.equ HPT_POOL,     0x80184000    # bump pool for G-stage L1/L0 tables
+.equ HPT_POOL_END, 0x801A0000
+.equ HVDATA,       0x801A0000    # pf@0 ecall@8 irq@16 virt@24 pool_next@32
+.equ GPA_LO,       0x80000000    # guest-physical RAM window
+.equ GPA_HI,       0x81000000
+.equ GUEST_OFF,    0x2000000     # host backing offset of guest-physical
+.equ KERNEL_BASE,  0x80200000    # guest kernel entry (guest-physical)
+
+hv_entry:
+    la   t0, hs_trap
+    csrw stvec, t0
+    la   t0, hv_stack_top
+    csrw sscratch, t0
+    mv   sp, t0
+
+    # Guest-handled exceptions go straight to VS.
+    li   t0, (1<<0)|(1<<3)|(1<<4)|(1<<6)|(1<<8)|(1<<12)|(1<<13)|(1<<15)
+    csrw hedeleg, t0
+    # VS-level interrupts (if ever raised) are the guest's business.
+    li   t0, (1<<2)|(1<<6)|(1<<10)
+    csrw hideleg, t0
+
+    # G-stage: Sv39x4, tagged with this guest's VMID.
+    li   t0, HPT_ROOT
+    srli t0, t0, 12
+    li   t1, GUEST_VMID
+    slli t1, t1, 44
+    or   t0, t0, t1
+    li   t1, 8 << 60
+    or   t0, t0, t1
+    csrw hgatp, t0
+    hfence.gvma x0, x0
+
+    # Table-frame bump allocator.
+    li   t0, HVDATA
+    li   t1, HPT_POOL
+    sd   t1, 32(t0)
+
+    # Enter the guest: hstatus.SPV=1 (return into V=1), SPVP=1 (VS).
+    li   t0, (1<<7)|(1<<8)
+    csrs hstatus, t0
+    li   t0, KERNEL_BASE
+    csrw sepc, t0
+    sret
+
+# ---------------------------------------------------------------- HS trap
+.align 2
+hs_trap:
+    csrrw sp, sscratch, sp
+    addi sp, sp, -80
+    sd   t0, 0(sp)
+    sd   t1, 8(sp)
+    sd   t2, 16(sp)
+    sd   t3, 24(sp)
+    sd   t4, 32(sp)
+    sd   t5, 40(sp)
+    sd   t6, 48(sp)
+    sd   ra, 56(sp)
+
+    csrr t0, scause
+    bltz t0, hs_irq
+    li   t1, 10
+    beq  t0, t1, hs_ecall
+    li   t1, 20
+    beq  t0, t1, hs_gpf
+    li   t1, 21
+    beq  t0, t1, hs_gpf
+    li   t1, 23
+    beq  t0, t1, hs_gpf
+    li   t1, 22
+    beq  t0, t1, hs_virt
+    j    hv_panic
+
+# --- guest-page fault: demand-map one 4 KiB guest page -------------------
+hs_gpf:
+    csrr t0, htval              # GPA >> 2 (paper Table 1)
+    slli t0, t0, 2
+    srli t0, t0, 12
+    slli t0, t0, 12             # page-aligned guest-physical address
+    li   t1, GPA_LO
+    bltu t0, t1, hv_panic
+    li   t1, GPA_HI
+    bgeu t0, t1, hv_panic
+
+    # Level 2 (Sv39x4 root: 11 index bits).
+    srli t1, t0, 30
+    li   t2, 0x7ff
+    and  t1, t1, t2
+    li   t2, HPT_ROOT
+    slli t1, t1, 3
+    add  t2, t2, t1
+    call hv_pte_next
+    # Level 1.
+    srli t1, t0, 21
+    andi t1, t1, 0x1ff
+    slli t1, t1, 3
+    add  t2, t2, t1
+    call hv_pte_next
+    # Level 0 leaf: host = guest + GUEST_OFF, perms V|R|W|X|U|A|D.
+    srli t1, t0, 12
+    andi t1, t1, 0x1ff
+    slli t1, t1, 3
+    add  t2, t2, t1
+    li   t1, GUEST_OFF
+    add  t1, t0, t1
+    srli t1, t1, 12
+    slli t1, t1, 10
+    ori  t1, t1, 0xDF
+    sd   t1, 0(t2)
+
+    li   t1, HVDATA             # pf++
+    ld   t2, 0(t1)
+    addi t2, t2, 1
+    sd   t2, 0(t1)
+    j    hs_ret                 # sepc unchanged: retry the access
+
+# t2 = &pte slot. Returns t2 = base of next-level table, allocating a
+# zeroed pool frame if the slot is empty. Clobbers t3, t4, t5.
+hv_pte_next:
+    ld   t3, 0(t2)
+    bnez t3, 1f
+    li   t3, HVDATA
+    ld   t4, 32(t3)             # pool_next
+    li   t3, HPT_POOL_END
+    bgeu t4, t3, hv_panic
+    li   t3, HVDATA
+    addi t5, t4, 4096
+    sd   t5, 32(t3)
+    srli t3, t4, 12
+    slli t3, t3, 10
+    ori  t3, t3, 1              # pointer PTE: V only
+    sd   t3, 0(t2)
+    mv   t2, t4
+    ret
+1:
+    srli t3, t3, 10
+    slli t3, t3, 12
+    mv   t2, t3
+    ret
+
+# --- forwarded SBI (ecall from VS) ---------------------------------------
+hs_ecall:
+    li   t1, HVDATA             # ecall++
+    ld   t2, 8(t1)
+    addi t2, t2, 1
+    sd   t2, 8(t1)
+    bnez a7, 1f
+    # putchar: relay to the firmware (a0/a7 pass straight through).
+    ecall
+    j    hs_ecall_ret
+1:
+    li   t0, 1
+    bne  a7, t0, hv_panic
+    # shutdown: print the exit summary, then forward the guest's code.
+    mv   s2, a0
+    call hv_summary
+    mv   a0, s2
+    li   a7, 1
+    ecall                       # never returns
+2:
+    j    2b
+
+hs_ecall_ret:
+    csrr t0, sepc
+    addi t0, t0, 4
+    csrw sepc, t0
+    j    hs_ret
+
+# --- bookkeeping-only paths ----------------------------------------------
+hs_virt:
+    li   t1, HVDATA             # virt++ (unexpected from this guest stack)
+    ld   t2, 24(t1)
+    addi t2, t2, 1
+    sd   t2, 24(t1)
+    j    hv_panic
+
+hs_irq:
+    li   t1, HVDATA             # irq++
+    ld   t2, 16(t1)
+    addi t2, t2, 1
+    sd   t2, 16(t1)
+    j    hs_ret
+
+hs_ret:
+    ld   ra, 56(sp)
+    ld   t6, 48(sp)
+    ld   t5, 40(sp)
+    ld   t4, 32(sp)
+    ld   t3, 24(sp)
+    ld   t2, 16(sp)
+    ld   t1, 8(sp)
+    ld   t0, 0(sp)
+    addi sp, sp, 80
+    csrrw sp, sscratch, sp
+    sret
+
+# --- exit summary --------------------------------------------------------
+hv_summary:
+    addi sp, sp, -16
+    sd   ra, 0(sp)
+    la   a0, hv_s_head
+    call hv_puts
+    li   t0, HVDATA
+    ld   a0, 0(t0)
+    call hv_putdec
+    la   a0, hv_s_slash
+    call hv_puts
+    li   t0, HVDATA
+    ld   a0, 8(t0)
+    call hv_putdec
+    la   a0, hv_s_slash
+    call hv_puts
+    li   t0, HVDATA
+    ld   a0, 16(t0)
+    call hv_putdec
+    la   a0, hv_s_slash
+    call hv_puts
+    li   t0, HVDATA
+    ld   a0, 24(t0)
+    call hv_putdec
+    li   a0, '\n'
+    li   a7, 0
+    ecall
+    ld   ra, 0(sp)
+    addi sp, sp, 16
+    ret
+
+hv_puts:
+    mv   t2, a0
+1:
+    lbu  a0, 0(t2)
+    beqz a0, 2f
+    li   a7, 0
+    ecall
+    addi t2, t2, 1
+    j    1b
+2:
+    ret
+
+hv_putdec:
+    addi sp, sp, -48
+    sd   ra, 0(sp)
+    addi t0, sp, 47
+    li   t1, 10
+    li   t2, 0
+1:
+    remu t3, a0, t1
+    addi t3, t3, '0'
+    addi t0, t0, -1
+    sb   t3, 0(t0)
+    addi t2, t2, 1
+    divu a0, a0, t1
+    bnez a0, 1b
+2:
+    lbu  a0, 0(t0)
+    li   a7, 0
+    ecall
+    addi t0, t0, 1
+    addi t2, t2, -1
+    bnez t2, 2b
+    ld   ra, 0(sp)
+    addi sp, sp, 48
+    ret
+
+hv_panic:
+    la   a0, hv_s_panic
+    call hv_puts
+    li   a0, 1
+    li   a7, 1
+    ecall                       # shutdown(fail); never returns
+3:
+    j    3b
+
+hv_s_head:  .asciz "xvisor: pf/ecall/irq/virt "
+hv_s_slash: .asciz "/"
+hv_s_panic: .asciz "HV! fatal\n"
+
+.align 4
+hv_stack:
+    .space 1024
+hv_stack_top:

@@ -1,0 +1,253 @@
+# kernel.s — the mini-os kernel (DESIGN.md S13).
+#
+# Runs identically in HS-mode (native boot) and VS-mode (under xvisor-rs):
+# every privileged access below is either redirected to the vs* bank by the
+# H extension or hits the real supervisor CSRs, and all console/power I/O
+# goes through SBI ecalls, so the binary is bit-identical in both worlds.
+#
+# Address space (guest-physical constants; PC-relative code, so the image
+# may be assembled at KERNEL_BASE or at its host backing):
+#   0x8020_0000  kernel text/data, then the U-mode window [ucode_start,
+#                ucode_end) holding the prelude + benchmark
+#   0x8030_0000  Sv39 tables: root, L1, and three L0 tables
+#   0x8030_5000  kernel data page (heap-pool counter)
+#   0x8031_0000  kernel stack top
+#   0x8040_0000  user heap (demand-paged, pool of 1024 pages = 4 MiB)
+#   0x8080_0000  heap end = user stack top (grows down into the pool)
+#
+# Boot: build the page tables, turn on Sv39, print "mini-os: up", drop to
+# U-mode at u_start. The banner is the *first* console output of the whole
+# stack and marks the boot/benchmark measurement boundary (§4.1 analog).
+#
+# Traps handled at S (VS in a guest):
+#   8  ecall-from-U:  a7=0 putchar (relayed via SBI), a7=1 exit(a0)
+#   12/13/15 page faults in [HEAP0, HEAP_END): demand-map one page
+#   anything else: panic ("K! ..."), SBI shutdown(fail)
+
+.equ KPT_ROOT,   0x80300000
+.equ KPT_L1,     0x80301000
+.equ KPT_IMG,    0x80302000
+.equ KPT_H0,     0x80303000
+.equ KPT_H1,     0x80304000
+.equ KDATA,      0x80305000
+.equ KSTACK_TOP, 0x80310000
+.equ IMG_BASE,   0x80200000
+.equ HEAP0,      0x80400000
+.equ HEAP_END,   0x80800000
+.equ HEAP_PAGES, 1024
+.equ USTACK_TOP, 0x80800000
+.equ PAGE,       4096
+# PTE permission bytes: V|R|W|X|A|D, +U for user pages, no X for heap.
+.equ PTE_S_RWX,  0xCF
+.equ PTE_U_RWX,  0xDF
+.equ PTE_U_RW,   0xD7
+.equ PTE_PTR,    0x01
+
+k_entry:
+    li   sp, KSTACK_TOP
+    la   t0, k_trap
+    csrw stvec, t0
+    li   t0, KSTACK_TOP
+    csrw sscratch, t0
+
+    call k_build_pt
+
+    # satp: Sv39, ASID 1, root.
+    li   t0, KPT_ROOT
+    srli t0, t0, 12
+    li   t1, 8 << 60
+    or   t0, t0, t1
+    li   t1, 1 << 44
+    or   t0, t0, t1
+    csrw satp, t0
+    sfence.vma
+
+    la   a0, k_s_banner
+    call k_puts
+
+    # Enter U-mode at the prelude entry.
+    la   t0, u_start
+    csrw sepc, t0
+    li   t0, 1 << 8             # sstatus.SPP = U
+    csrc sstatus, t0
+    li   t0, 1 << 5             # sstatus.SPIE
+    csrs sstatus, t0
+    sret
+
+# ------------------------------------------------------------ page tables
+# Identity-mapped Sv39: root[2] -> L1; L1[1] -> 4K table over the image
+# megapage (S perms, except the U window); L1[2]/L1[3] -> initially-empty
+# heap tables (demand paging). RAM is zero-initialised, so only non-zero
+# PTEs are written.
+k_build_pt:
+    li   t0, KPT_ROOT
+    li   t1, KPT_L1
+    srli t2, t1, 12
+    slli t2, t2, 10
+    ori  t2, t2, PTE_PTR
+    sd   t2, 16(t0)             # root[2]: VA 0x8000_0000 GiB region
+
+    li   t0, KPT_L1
+    li   t1, KPT_IMG
+    srli t2, t1, 12
+    slli t2, t2, 10
+    ori  t2, t2, PTE_PTR
+    sd   t2, 8(t0)              # L1[1]: 0x8020_0000 megapage
+    li   t1, KPT_H0
+    srli t2, t1, 12
+    slli t2, t2, 10
+    ori  t2, t2, PTE_PTR
+    sd   t2, 16(t0)             # L1[2]: 0x8040_0000 megapage (heap)
+    li   t1, KPT_H1
+    srli t2, t1, 12
+    slli t2, t2, 10
+    ori  t2, t2, PTE_PTR
+    sd   t2, 24(t0)             # L1[3]: 0x8060_0000 megapage (heap)
+
+    # 512 identity 4K PTEs over the image megapage; the U window
+    # [ucode_start, ucode_end) gets the U bit.
+    la   t3, ucode_start
+    la   t4, ucode_end
+    li   t0, KPT_IMG
+    li   t1, IMG_BASE
+    li   t5, 512
+    li   t6, PAGE
+1:
+    srli t2, t1, 12
+    slli t2, t2, 10
+    ori  t2, t2, PTE_S_RWX
+    bltu t1, t3, 2f
+    bgeu t1, t4, 2f
+    ori  t2, t2, 0x10           # U
+2:
+    sd   t2, 0(t0)
+    addi t0, t0, 8
+    add  t1, t1, t6
+    addi t5, t5, -1
+    bnez t5, 1b
+    ret
+
+# ---------------------------------------------------------------- S trap
+.align 2
+k_trap:
+    csrrw sp, sscratch, sp
+    addi sp, sp, -64
+    sd   t0, 0(sp)
+    sd   t1, 8(sp)
+    sd   t2, 16(sp)
+    sd   t3, 24(sp)
+    sd   ra, 32(sp)
+    sd   a0, 40(sp)
+
+    csrr t0, scause
+    li   t1, 8
+    beq  t0, t1, k_syscall
+    li   t1, 13
+    beq  t0, t1, k_pf
+    li   t1, 15
+    beq  t0, t1, k_pf
+    li   t1, 12
+    beq  t0, t1, k_pf
+    j    k_panic_trap
+
+# --- demand pager: map one zeroed identity page from the heap pool -------
+k_pf:
+    csrr t0, stval
+    li   t1, HEAP0
+    bltu t0, t1, k_panic_trap
+    li   t1, HEAP_END
+    bgeu t0, t1, k_panic_trap
+
+    li   t1, KDATA              # pool accounting
+    ld   t2, 0(t1)
+    li   t3, HEAP_PAGES
+    bgeu t2, t3, k_panic_oom
+    addi t2, t2, 1
+    sd   t2, 0(t1)
+
+    srli t2, t0, 12
+    slli t2, t2, 12             # faulting page VA
+    li   t1, 0x80600000
+    li   t3, KPT_H0
+    bltu t2, t1, 3f
+    li   t3, KPT_H1
+3:
+    srli t1, t2, 12
+    andi t1, t1, 0x1ff
+    slli t1, t1, 3
+    add  t3, t3, t1
+    srli t1, t2, 12
+    slli t1, t1, 10
+    ori  t1, t1, PTE_U_RW
+    sd   t1, 0(t3)
+    sfence.vma
+    j    k_ret                  # sepc unchanged: retry the access
+
+# --- syscalls ------------------------------------------------------------
+k_syscall:
+    bnez a7, 4f
+    # putchar(a0): relay to SBI (one more trap level — Fig. 6/7 shape).
+    ecall
+    csrr t0, sepc
+    addi t0, t0, 4
+    csrw sepc, t0
+    j    k_ret
+4:
+    li   t0, 1
+    bne  a7, t0, k_panic_trap
+    # exit(a0): end-of-benchmark banner, then power off.
+    la   a0, k_s_done
+    call k_puts
+    ld   a0, 40(sp)             # user exit code: 0 = pass
+    li   a7, 1
+    ecall                       # SBI shutdown; never returns
+5:
+    j    5b
+
+k_ret:
+    ld   a0, 40(sp)
+    ld   ra, 32(sp)
+    ld   t3, 24(sp)
+    ld   t2, 16(sp)
+    ld   t1, 8(sp)
+    ld   t0, 0(sp)
+    addi sp, sp, 64
+    csrrw sp, sscratch, sp
+    sret
+
+# --- panic ---------------------------------------------------------------
+k_panic_oom:
+    la   a0, k_s_oom
+    j    k_panic
+k_panic_trap:
+    la   a0, k_s_trap
+k_panic:
+    call k_puts
+    li   a0, 1
+    li   a7, 1
+    ecall                       # shutdown(fail)
+6:
+    j    6b
+
+# --- console (SBI relay) -------------------------------------------------
+# a0 = NUL-terminated string; clobbers t2, a0, a7.
+k_puts:
+    mv   t2, a0
+7:
+    lbu  a0, 0(t2)
+    beqz a0, 8f
+    li   a7, 0
+    ecall
+    addi t2, t2, 1
+    j    7b
+8:
+    ret
+
+k_s_banner: .asciz "mini-os: up\n"
+k_s_done:   .asciz "mini-os: benchmark done\n"
+k_s_oom:    .asciz "K! out of memory\n"
+k_s_trap:   .asciz "K! unexpected trap\n"
+
+# Everything from here on is the U-mode window.
+.align 12
+ucode_start:

@@ -74,9 +74,17 @@ pub fn firmware_image() -> Result<Image> {
     assemble(FIRMWARE_S, FW_BASE).context("assembling firmware")
 }
 
-/// Assemble the hypervisor image.
+/// Assemble the hypervisor image with the default VMID (1).
 pub fn hypervisor_image() -> Result<Image> {
-    assemble(HYPERVISOR_S, HV_BASE).context("assembling hypervisor")
+    hypervisor_image_with_vmid(1)
+}
+
+/// Assemble the hypervisor image for one guest instance of a multi-tenant
+/// node: `vmid` is baked into the hgatp it programs, so every guest's TLB
+/// entries are tagged with a distinct VMID (the vmm partitioning key).
+pub fn hypervisor_image_with_vmid(vmid: u16) -> Result<Image> {
+    let src = format!(".equ GUEST_VMID, {vmid}\n{HYPERVISOR_S}");
+    assemble(&src, HV_BASE).with_context(|| format!("assembling hypervisor (vmid {vmid})"))
 }
 
 /// Assemble kernel + prelude + benchmark into one image. `base` differs
@@ -131,20 +139,34 @@ pub fn setup_guest(m: &mut Machine, bench: &str, scale: u64) -> Result<()> {
     if !m.core.hart.csr.h_enabled {
         bail!("guest run requires the H extension (machine.h_extension = true)");
     }
-    if m.bus.ram_size() < GUEST_RAM_MIN as u64 {
+    setup_guest_world(&mut m.bus, &mut m.core.hart, bench, scale, 1)
+}
+
+/// Build one guest's complete world directly on a (bus, hart) pair — the
+/// vmm subsystem uses this to stamp out N tenants, each with its own RAM,
+/// device claim and VMID, without going through a full [`Machine`].
+pub fn setup_guest_world(
+    bus: &mut crate::mem::Bus,
+    hart: &mut crate::cpu::Hart,
+    bench: &str,
+    scale: u64,
+    vmid: u16,
+) -> Result<()> {
+    if bus.ram_size() < GUEST_RAM_MIN as u64 {
         bail!("guest run needs ≥ {} MiB RAM", GUEST_RAM_MIN >> 20);
     }
     let fw = firmware_image()?;
-    let hv = hypervisor_image()?;
+    let hv = hypervisor_image_with_vmid(vmid)?;
     // The kernel is loaded at the host backing of guest PA KERNEL_BASE.
     let kernel = kernel_image(bench, scale, KERNEL_BASE + GUEST_OFF)?;
-    m.load(&fw)?;
-    m.load(&hv)?;
-    m.load(&kernel)?;
-    m.set_entry(FW_BASE);
-    m.core.hart.regs[10] = 0;
-    m.core.hart.regs[11] = HV_BASE;
-    m.core.hart.regs[12] = 1;
+    for img in [&fw, &hv, &kernel] {
+        bus.load_image(img.base, &img.data)
+            .map_err(|_| anyhow::anyhow!("image at {:#x} does not fit in guest RAM", img.base))?;
+    }
+    hart.pc = FW_BASE;
+    hart.regs[10] = 0; // a0 = hartid
+    hart.regs[11] = HV_BASE; // a1 = next stage
+    hart.regs[12] = 1; // a2 = guest
     Ok(())
 }
 

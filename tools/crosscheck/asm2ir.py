@@ -1,0 +1,310 @@
+#!/usr/bin/env python3
+"""Parse the hvsim .s dialect into an IR stream with a faithful address
+layout (li expansion sizes mirror rust/src/asm/encode.rs)."""
+import re
+
+class AsmError(Exception):
+    pass
+
+def strip_comment(raw):
+    out, instr, i = "", False, 0
+    while i < len(raw):
+        c = raw[i]
+        if c == '"':
+            instr = not instr
+        if c == '\\' and instr:
+            out += raw[i:i+2]; i += 2; continue
+        if c == '#' and not instr:
+            break
+        if c == '/' and not instr and i + 1 < len(raw) and raw[i+1] == '/':
+            break
+        out += c; i += 1
+    return out
+
+def split_ops(s):
+    out, depth, cur, instr = [], 0, "", False
+    for c in s:
+        if c == '"':
+            instr = not instr; cur += c
+        elif c == '(' and not instr:
+            depth += 1; cur += c
+        elif c == ')' and not instr:
+            depth -= 1; cur += c
+        elif c == ',' and not instr and depth == 0:
+            out.append(cur.strip()); cur = ""
+        else:
+            cur += c
+    if cur.strip():
+        out.append(cur.strip())
+    return out
+
+def parse_string(s):
+    s = s.strip()
+    assert s.startswith('"') and s.endswith('"')
+    inner = s[1:-1]
+    out = bytearray()
+    it = iter(range(len(inner)))
+    i = 0
+    while i < len(inner):
+        c = inner[i]
+        if c == '\\':
+            i += 1
+            m = {'n': 10, 't': 9, 'r': 13, '0': 0, '\\': 92, '"': 34}
+            out.append(m[inner[i]])
+        else:
+            out.extend(c.encode())
+        i += 1
+    return bytes(out)
+
+# expression evaluator (mirrors expr.rs precedence)
+def eval_expr(s, syms):
+    tokens = re.findall(r"0[xX][0-9a-fA-F_]+|0b[01_]+|\d[\d_]*|'(?:\\.|[^'])'|<<|>>|[A-Za-z_.$][A-Za-z0-9_.$]*|[()+\-*/%|&^~]", s)
+    pos = [0]
+    def peek():
+        return tokens[pos[0]] if pos[0] < len(tokens) else None
+    def eat():
+        t = tokens[pos[0]]; pos[0] += 1; return t
+    def unary():
+        t = peek()
+        if t == '-':
+            eat(); return (-unary()) & 0xFFFFFFFFFFFFFFFF
+        if t == '~':
+            eat(); return (~unary()) & 0xFFFFFFFFFFFFFFFF
+        if t == '(':
+            eat(); v = or_(); assert eat() == ')'; return v
+        t = eat()
+        if t.startswith("'"):
+            body = t[1:-1]
+            if body.startswith('\\'):
+                return {'n': 10, 't': 9, '0': 0, '\\': 92, "'": 39}[body[1]]
+            return ord(body)
+        if re.fullmatch(r"0[xX][0-9a-fA-F_]+", t):
+            return int(t.replace('_', ''), 16)
+        if re.fullmatch(r"0b[01_]+", t):
+            return int(t[2:].replace('_', ''), 2)
+        if re.fullmatch(r"\d[\d_]*", t):
+            return int(t.replace('_', ''))
+        if t in syms:
+            return syms[t] & 0xFFFFFFFFFFFFFFFF
+        raise AsmError(f"unknown symbol {t!r} in {s!r}")
+    def mul():
+        v = unary()
+        while peek() in ('*', '/', '%'):
+            op = eat(); r = unary()
+            if op == '*': v = (v * r) & 0xFFFFFFFFFFFFFFFF
+            elif op == '/': v = v // r
+            else: v = v % r
+        return v
+    def add():
+        v = mul()
+        while peek() in ('+', '-'):
+            op = eat(); r = mul()
+            v = (v + r if op == '+' else v - r) & 0xFFFFFFFFFFFFFFFF
+        return v
+    def shift():
+        v = add()
+        while peek() in ('<<', '>>'):
+            op = eat(); r = add()
+            v = (v << r if op == '<<' else v >> r) & 0xFFFFFFFFFFFFFFFF
+        return v
+    def and_():
+        v = shift()
+        while peek() == '&':
+            eat(); v &= shift()
+        return v
+    def xor():
+        v = and_()
+        while peek() == '^':
+            eat(); v ^= and_()
+        return v
+    def or_():
+        v = xor()
+        while peek() == '|':
+            eat(); v |= xor()
+        return v
+    v = or_()
+    if pos[0] != len(tokens):
+        raise AsmError(f"trailing tokens in {s!r}")
+    return v
+
+def sext(v, bits):
+    v &= (1 << bits) - 1
+    if v & (1 << (bits - 1)):
+        v -= 1 << bits
+    return v
+
+def li_len(imm):
+    """Mirror encode.rs expand_li: number of 4-byte words."""
+    if -2048 <= imm <= 2047:
+        return 1
+    if -(1 << 31) <= imm <= (1 << 31) - 1:
+        hi = ((imm + 0x800) >> 12) & 0xFFFFF
+        lo = imm - sext(hi << 12, 32)
+        return 1 + (1 if lo != 0 else 0)
+    lo12 = sext(imm, 12)
+    hi = (imm - lo12) >> 12
+    return li_len(hi) + 1 + (1 if lo12 != 0 else 0)
+
+REGS = {f"x{i}": i for i in range(32)}
+REGS.update({f"f{i}": i for i in range(32)})
+ABI = ["zero","ra","sp","gp","tp","t0","t1","t2","s0","s1","a0","a1","a2","a3","a4",
+       "a5","a6","a7","s2","s3","s4","s5","s6","s7","s8","s9","s10","s11","t3","t4","t5","t6"]
+REGS.update({n: i for i, n in enumerate(ABI)})
+REGS["fp"] = 8
+
+def reg(s):
+    s = s.strip()
+    if s not in REGS:
+        raise AsmError(f"bad register {s!r}")
+    return REGS[s]
+
+def mem_operand(s, syms):
+    s = s.strip()
+    open_i = s.find('(')
+    if open_i < 0 or not s.endswith(')'):
+        raise AsmError(f"bad mem operand {s!r}")
+    off_str = s[:open_i].strip()
+    off = sext(eval_expr(off_str, syms), 64) if off_str else 0
+    return off, reg(s[open_i+1:-1])
+
+def assemble(src, base):
+    """Two-pass; returns (ir_by_addr dict, data bytes list [(addr, bytes)], symbols)."""
+    # parse statements
+    stmts = []
+    for lineno, raw in enumerate(src.splitlines(), 1):
+        rest = strip_comment(raw).strip()
+        while True:
+            m = re.match(r'^([A-Za-z0-9_.$]+):', rest)
+            if not m:
+                break
+            stmts.append((lineno, 'label', m.group(1), []))
+            rest = rest[m.end():].strip()
+        if not rest:
+            continue
+        parts = rest.split(None, 1)
+        head = parts[0]
+        ops = split_ops(parts[1]) if len(parts) > 1 else []
+        kind = 'dir' if head.startswith('.') else 'inst'
+        stmts.append((lineno, kind, head.lower() if kind == 'inst' else head, ops))
+
+    # resolve numeric labels into unique names (mirrors resolve_numeric_labels)
+    counters, defs = {}, {}
+    for i, (ln, kind, head, ops) in enumerate(stmts):
+        if kind == 'label' and head.isdigit():
+            k = counters.get(head, 0)
+            uniq = f".L{head}.{k}"
+            counters[head] = k + 1
+            defs.setdefault(head, []).append(i)
+            stmts[i] = (ln, 'label', uniq, ops)
+    for i, (ln, kind, head, ops) in enumerate(stmts):
+        if kind != 'inst':
+            continue
+        new_ops = []
+        for op in ops:
+            t = op.strip()
+            m = re.fullmatch(r"(\d+)([fb])", t)
+            if m:
+                digit, d = m.groups()
+                lst = defs.get(digit, [])
+                if d == 'f':
+                    ords = [j for j, s in enumerate(lst) if s > i]
+                else:
+                    ords = [j for j, s in enumerate(lst) if s < i]
+                    ords = ords[-1:]  # nearest backward
+                if not ords:
+                    raise AsmError(f"line {ln}: unresolved numeric label {t}")
+                k = ords[0]
+                new_ops.append(f".L{digit}.{k}")
+            else:
+                new_ops.append(op)
+        stmts[i] = (ln, kind, head, new_ops)
+
+    # pass 1: layout
+    syms = {}
+    lc = base
+    sizes = []
+    for (ln, kind, head, ops) in stmts:
+        if kind == 'label':
+            syms[head] = lc
+            sizes.append(0)
+            continue
+        if kind == 'dir':
+            start = lc
+            if head in ('.equ', '.set'):
+                syms[ops[0]] = eval_expr(ops[1], syms)
+            elif head == '.align':
+                n = eval_expr(ops[0], syms)
+                a = 1 << n
+                lc = (lc + a - 1) & ~(a - 1)
+            elif head == '.org':
+                lc = eval_expr(ops[0], syms)
+            elif head == '.byte':
+                lc += len(ops)
+            elif head == '.half':
+                lc += 2 * len(ops)
+            elif head == '.word':
+                lc += 4 * len(ops)
+            elif head in ('.dword', '.quad'):
+                lc += 8 * len(ops)
+            elif head in ('.space', '.zero'):
+                lc += eval_expr(ops[0], syms)
+            elif head in ('.ascii',):
+                lc += len(parse_string(ops[0]))
+            elif head in ('.asciz', '.string'):
+                lc += len(parse_string(ops[0])) + 1
+            elif head in ('.global', '.globl', '.text', '.data', '.section', '.option'):
+                pass
+            else:
+                raise AsmError(f"line {ln}: unknown directive {head}")
+            sizes.append(lc - start)
+            continue
+        # instruction sizing
+        if head == 'li':
+            v = sext(eval_expr(ops[1], syms), 64)
+            n = 4 * li_len(v)
+        elif head == 'la':
+            n = 8
+        else:
+            n = 4
+        sizes.append(n)
+        lc += n
+
+    # pass 2: emit IR + data
+    ir = {}
+    data = []
+    lc = base
+    for idx, (ln, kind, head, ops) in enumerate(stmts):
+        if kind == 'label':
+            continue
+        if kind == 'dir':
+            if head in ('.equ', '.set', '.global', '.globl', '.text', '.data', '.section', '.option'):
+                pass
+            elif head == '.align':
+                n = eval_expr(ops[0], syms)
+                a = 1 << n
+                lc = (lc + a - 1) & ~(a - 1)
+            elif head == '.org':
+                lc = eval_expr(ops[0], syms)
+            elif head in ('.byte', '.half', '.word', '.dword', '.quad'):
+                size = {'.byte': 1, '.half': 2, '.word': 4, '.dword': 8, '.quad': 8}[head]
+                blob = bytearray()
+                for a in ops:
+                    v = eval_expr(a, syms)
+                    blob.extend((v & ((1 << (8*size)) - 1)).to_bytes(size, 'little'))
+                data.append((lc, bytes(blob)))
+                lc += len(blob)
+            elif head in ('.space', '.zero'):
+                n = eval_expr(ops[0], syms)
+                data.append((lc, bytes(n)))
+                lc += n
+            elif head in ('.ascii',):
+                b = parse_string(ops[0])
+                data.append((lc, b)); lc += len(b)
+            elif head in ('.asciz', '.string'):
+                b = parse_string(ops[0]) + b'\0'
+                data.append((lc, b)); lc += len(b)
+            continue
+        size = sizes[idx]
+        ir[lc] = (ln, head, ops, size, syms)
+        lc += size
+    return ir, data, syms

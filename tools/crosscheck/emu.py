@@ -1,0 +1,504 @@
+#!/usr/bin/env python3
+"""RV64 M/HS/VS/U emulator over the asm2ir IR, mirroring hvsim's Rust
+semantics (cpu/trap.rs, cpu/csr.rs redirection, mmu/walker.rs two-stage
+Sv39/Sv39x4). Used to cross-check the embedded software stack offline."""
+import os, sys
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from asm2ir import assemble, sext, eval_expr, reg, mem_operand
+
+M64 = (1 << 64) - 1
+RAM_BASE = 0x8000_0000
+UART = 0x1000_0000
+SYSCON = 0x10_0000
+
+# mstatus bits
+SIE, MIE, SPIE, MPIE, SPP = 1 << 1, 1 << 3, 1 << 5, 1 << 7, 1 << 8
+MPP_SHIFT = 11
+SUM_BIT, MXR = 1 << 18, 1 << 19
+MPV, GVA = 1 << 39, 1 << 38
+# hstatus bits
+H_GVA, SPV, SPVP = 1 << 6, 1 << 7, 1 << 8
+
+class Trap(Exception):
+    def __init__(self, cause, tval, gpa=0, gva=False):
+        self.cause, self.tval, self.gpa, self.gva = cause, tval, gpa, gva
+
+class Machine:
+    def __init__(self, ram_mb=64):
+        self.ram = bytearray(ram_mb << 20)
+        self.regs = [0] * 32
+        self.pc = 0
+        self.prv = 3
+        self.virt = False
+        self.csr = {n: 0 for n in (
+            'mstatus vsstatus medeleg mideleg hedeleg hideleg mie mip mtvec stvec vstvec '
+            'mscratch sscratch vsscratch mepc sepc vsepc mcause scause vscause mtval stval '
+            'vstval mtval2 htval mtinst htinst satp vsatp hgatp hstatus htimedelta '
+            'mcounteren scounteren hcounteren'
+        ).split()}
+        self.uart = bytearray()
+        self.poweroff = None
+        self.ir = {}
+        self.insts = 0
+        self.exc_counts = {}
+
+    # ---------------- physical memory ----------------
+    def pread(self, pa, size):
+        if RAM_BASE <= pa and pa + size <= RAM_BASE + len(self.ram):
+            off = pa - RAM_BASE
+            return int.from_bytes(self.ram[off:off + size], 'little')
+        if pa == SYSCON:
+            return 0
+        raise Trap(5, pa)  # load access fault (approx)
+
+    def pwrite(self, pa, size, val):
+        if RAM_BASE <= pa and pa + size <= RAM_BASE + len(self.ram):
+            off = pa - RAM_BASE
+            self.ram[off:off + size] = (val & ((1 << (8 * size)) - 1)).to_bytes(size, 'little')
+            return
+        if UART <= pa < UART + 0x100:
+            if pa == UART:
+                self.uart.append(val & 0xFF)
+            return
+        if pa == SYSCON:
+            self.poweroff = val & 0xFFFFFFFF
+            return
+        raise Trap(7, pa)
+
+    # ---------------- translation (walker.rs) ----------------
+    def walk_g(self, va, gpa, access, implicit):
+        cause = {'x': 20, 'r': 21, 'w': 23}[access]
+        if gpa >> 41:
+            raise Trap(cause, va, gpa, True)
+        a = (self.csr['hgatp'] & ((1 << 44) - 1)) << 12
+        level = 2
+        while True:
+            idx = (gpa >> 30) & 0x7FF if level == 2 else (gpa >> (12 + 9 * level)) & 0x1FF
+            raw = self.pread(a + idx * 8, 8)
+            perms = raw & 0xFF
+            ppn = (raw >> 10) & ((1 << 44) - 1)
+            V, R, W, X, U, A, D = (perms & 1, perms & 2, perms & 4, perms & 8,
+                                   perms & 16, perms & 64, perms & 128)
+            if not V or (not R and W):
+                raise Trap(cause, va, gpa, True)
+            if R or X:
+                span = (1 << (9 * level)) - 1
+                if ppn & span:
+                    raise Trap(cause, va, gpa, True)
+                if implicit and (not U or not R or not A):
+                    raise Trap(cause, va, gpa, True)
+                # final-access perms checked here for the non-implicit case
+                if not implicit:
+                    if not U:
+                        raise Trap(cause, va, gpa, True)
+                    ok = {'x': X, 'r': R, 'w': W}[access]
+                    if not ok:
+                        raise Trap(cause, va, gpa, True)
+                    if not A or (access == 'w' and not D):
+                        raise Trap(cause, va, gpa, True)
+                page = (ppn & ~span) | ((gpa >> 12) & span)
+                return (page << 12) | (gpa & 0xFFF)
+            if perms & (16 | 64 | 128):
+                raise Trap(cause, va, gpa, True)
+            level -= 1
+            if level < 0:
+                raise Trap(cause, va, gpa, True)
+            a = ppn << 12
+
+    def translate(self, va, access, prv=None, virt=None):
+        prv = self.prv if prv is None else prv
+        virt = self.virt if virt is None else virt
+        cause1 = {'x': 12, 'r': 13, 'w': 15}[access]
+        if virt:
+            s1_atp = self.csr['vsatp']
+            s1_on = (s1_atp >> 60) == 8
+        elif prv == 3:
+            s1_on, s1_atp = False, 0
+        else:
+            s1_atp = self.csr['satp']
+            s1_on = (s1_atp >> 60) == 8
+        s2_on = virt and (self.csr['hgatp'] >> 60) == 8
+        if not s1_on and not s2_on:
+            return va
+        if s1_on:
+            if sext(va, 39) & M64 != va:
+                raise Trap(cause1, va, 0, virt)
+            a = (s1_atp & ((1 << 44) - 1)) << 12
+            level = 2
+            while True:
+                idx = (va >> (12 + 9 * level)) & 0x1FF
+                pte_addr = a + idx * 8
+                pte_pa = self.walk_g(va, pte_addr, 'r', True) if s2_on else pte_addr
+                raw = self.pread(pte_pa, 8)
+                perms = raw & 0xFF
+                ppn = (raw >> 10) & ((1 << 44) - 1)
+                V, R, W, X, U, A, D = (perms & 1, perms & 2, perms & 4, perms & 8,
+                                       perms & 16, perms & 64, perms & 128)
+                if not V or (not R and W):
+                    raise Trap(cause1, va, 0, virt)
+                if R or X:
+                    span = (1 << (9 * level)) - 1
+                    if ppn & span:
+                        raise Trap(cause1, va, 0, virt)
+                    # stage-1 permission check (tlb.rs check_permissions)
+                    st = self.csr['vsstatus'] if virt else self.csr['mstatus']
+                    sum_ok = bool(st & SUM_BIT)
+                    user = prv == 0
+                    if user and not U:
+                        raise Trap(cause1, va, 0, virt)
+                    if not user and U and (not sum_ok or access == 'x'):
+                        raise Trap(cause1, va, 0, virt)
+                    ok = {'x': X, 'r': R, 'w': W}[access]
+                    if not ok:
+                        raise Trap(cause1, va, 0, virt)
+                    if not A or (access == 'w' and not D):
+                        raise Trap(cause1, va, 0, virt)
+                    page = (ppn & ~span) | ((va >> 12) & span)
+                    gpa = (page << 12) | (va & 0xFFF)
+                    break
+                if perms & (16 | 64 | 128):
+                    raise Trap(cause1, va, 0, virt)
+                level -= 1
+                if level < 0:
+                    raise Trap(cause1, va, 0, virt)
+                a = ppn << 12
+        else:
+            gpa = va
+        if s2_on:
+            return self.walk_g(va, gpa, access, False)
+        return gpa
+
+    # ---------------- CSR access (csr.rs redirection subset) --------------
+    REDIR = {'sstatus': 'vsstatus', 'stvec': 'vstvec', 'sscratch': 'vsscratch',
+             'sepc': 'vsepc', 'scause': 'vscause', 'stval': 'vstval',
+             'satp': 'vsatp', 'sie': 'vsie', 'sip': 'vsip'}
+    SSTATUS_MASK = SIE | SPIE | SPP | SUM_BIT | MXR | (3 << 13)
+
+    def csr_read(self, name):
+        if self.virt and name in self.REDIR:
+            name = self.REDIR[name]
+        if name == 'sstatus':
+            return self.csr['mstatus'] & self.SSTATUS_MASK
+        if name == 'vsstatus':
+            return self.csr['vsstatus'] & self.SSTATUS_MASK
+        if name == 'mip' or name == 'mie':
+            return self.csr[name]
+        return self.csr[name]
+
+    def csr_write(self, name, val):
+        if self.virt and name in self.REDIR:
+            name = self.REDIR[name]
+        if name == 'sstatus':
+            self.csr['mstatus'] = (self.csr['mstatus'] & ~self.SSTATUS_MASK) | (val & self.SSTATUS_MASK)
+            return
+        if name == 'vsstatus':
+            self.csr['vsstatus'] = (self.csr['vsstatus'] & ~self.SSTATUS_MASK) | (val & self.SSTATUS_MASK)
+            return
+        if name in ('satp', 'vsatp', 'hgatp'):
+            mode = val >> 60
+            if mode in (0, 8):
+                self.csr[name] = val & ~(3 if name == 'hgatp' else 0)
+            return
+        if name == 'medeleg':
+            wmask = 0xB109 | (1 << 4) | (1 << 6) | (1 << 9) | (1 << 10) | (0xF << 20)
+            self.csr[name] = val & wmask
+            return
+        if name == 'hedeleg':
+            wmask = (0x1FF | (1 << 12) | (1 << 13) | (1 << 15))
+            self.csr[name] = val & wmask
+            return
+        if name == 'hstatus':
+            wmask = H_GVA | SPV | SPVP | (1 << 9) | (0x3F << 12) | (7 << 20)
+            self.csr[name] = (self.csr[name] & ~wmask) | (val & wmask)
+            return
+        self.csr[name] = val & M64
+
+    # ---------------- traps (trap.rs) ----------------
+    def exception_target(self, code):
+        if self.prv == 3:
+            return 'M'
+        if not (self.csr['medeleg'] >> code) & 1:
+            return 'M'
+        if self.virt and (self.csr['hedeleg'] >> code) & 1:
+            return 'VS'
+        return 'HS'
+
+    def take_trap(self, t):
+        code = t.cause
+        target = self.exception_target(code)
+        self.exc_counts[(code, target)] = self.exc_counts.get((code, target), 0) + 1
+        if target == 'M':
+            st = self.csr['mstatus']
+            st &= ~(MPV | GVA | (3 << MPP_SHIFT) | MPIE)
+            if self.virt:
+                st |= MPV
+            if t.gva:
+                st |= GVA
+            st |= self.prv << MPP_SHIFT
+            if st & MIE:
+                st |= MPIE
+            st &= ~MIE
+            self.csr['mstatus'] = st
+            self.csr['mepc'] = self.pc
+            self.csr['mcause'] = code
+            self.csr['mtval'] = t.tval
+            self.csr['mtval2'] = t.gpa >> 2
+            self.virt = False
+            self.prv = 3
+            self.pc = self.csr['mtvec'] & ~3
+        elif target == 'HS':
+            hs = self.csr['hstatus'] & ~(SPV | H_GVA)
+            if self.virt:
+                hs |= SPV
+                hs &= ~SPVP
+                if self.prv == 1:
+                    hs |= SPVP
+            if t.gva:
+                hs |= H_GVA
+            self.csr['hstatus'] = hs
+            st = self.csr['mstatus'] & ~(SPP | SPIE)
+            if self.prv == 1:
+                st |= SPP
+            if st & SIE:
+                st |= SPIE
+            st &= ~SIE
+            self.csr['mstatus'] = st
+            self.csr['sepc'] = self.pc
+            self.csr['scause'] = code
+            self.csr['stval'] = t.tval
+            self.csr['htval'] = t.gpa >> 2
+            self.virt = False
+            self.prv = 1
+            self.pc = self.csr['stvec'] & ~3
+        else:  # VS
+            st = self.csr['vsstatus'] & ~(SPP | SPIE)
+            if self.prv == 1:
+                st |= SPP
+            if st & SIE:
+                st |= SPIE
+            st &= ~SIE
+            self.csr['vsstatus'] = st
+            self.csr['vsepc'] = self.pc
+            self.csr['vscause'] = code
+            self.csr['vstval'] = t.tval
+            self.virt = True
+            self.prv = 1
+            self.pc = self.csr['vstvec'] & ~3
+
+    def mret(self):
+        st = self.csr['mstatus']
+        mpp = (st >> MPP_SHIFT) & 3
+        mpv = bool(st & MPV)
+        new = st & ~MIE
+        if st & MPIE:
+            new |= MIE
+        new |= MPIE
+        new &= ~((3 << MPP_SHIFT) | MPV)
+        self.csr['mstatus'] = new
+        self.prv = mpp
+        self.virt = mpv and mpp != 3
+        self.pc = self.csr['mepc']
+
+    def sret(self):
+        if self.virt:  # sret_vs
+            st = self.csr['vsstatus']
+            spp = 1 if st & SPP else 0
+            new = st & ~SIE
+            if st & SPIE:
+                new |= SIE
+            new |= SPIE
+            new &= ~SPP
+            self.csr['vsstatus'] = new
+            self.prv = spp
+            self.pc = self.csr['vsepc']
+        else:  # sret_hs
+            st = self.csr['mstatus']
+            spp = 1 if st & SPP else 0
+            spv = bool(self.csr['hstatus'] & SPV)
+            new = st & ~SIE
+            if st & SPIE:
+                new |= SIE
+            new |= SPIE
+            new &= ~SPP
+            self.csr['mstatus'] = new
+            self.csr['hstatus'] &= ~SPV
+            if spv:
+                self.prv = 1 if self.csr['hstatus'] & SPVP else 0
+            else:
+                self.prv = spp
+            self.virt = spv
+            self.pc = self.csr['sepc']
+
+    # ---------------- data access ----------------
+    def load(self, va, size, signed=False):
+        pa = self.translate(va, 'r')
+        v = self.pread(pa, size)
+        if signed:
+            v = sext(v, 8 * size) & M64
+        return v
+
+    def store(self, va, size, val):
+        pa = self.translate(va, 'w')
+        self.pwrite(pa, size, val)
+
+    # ---------------- execute ----------------
+    def set_reg(self, r, v):
+        if r != 0:
+            self.regs[r] = v & M64
+
+    def step(self):
+        try:
+            pa = self.translate(self.pc, 'x')
+        except Trap as t:
+            self.take_trap(t)
+            return
+        ent = self.ir.get(pa)
+        if ent is None:
+            raise RuntimeError(f"fetch of non-code address pc={self.pc:#x} pa={pa:#x}")
+        ln, head, ops, size, syms = ent
+        rg = self.regs
+        nxt = (self.pc + size) & M64
+
+        def ev(s):
+            return eval_expr(s, syms) & M64
+
+        try:
+            if head == 'li':
+                self.set_reg(reg(ops[0]), ev(ops[1]))
+            elif head == 'la':
+                # auipc-based: target computed from link-time delta
+                target = ev(ops[1])
+                link_pc = pa  # IR keyed by link address
+                delta = (target - link_pc) & M64
+                self.set_reg(reg(ops[0]), (self.pc + delta) & M64)
+            elif head == 'mv':
+                self.set_reg(reg(ops[0]), rg[reg(ops[1])])
+            elif head == 'neg':
+                self.set_reg(reg(ops[0]), (-rg[reg(ops[1])]) & M64)
+            elif head in ('add', 'sub', 'and', 'or', 'xor', 'mul', 'divu', 'remu', 'srl', 'sll'):
+                a, b = rg[reg(ops[1])], rg[reg(ops[2])]
+                if head == 'add':
+                    v = a + b
+                elif head == 'sub':
+                    v = a - b
+                elif head == 'and':
+                    v = a & b
+                elif head == 'or':
+                    v = a | b
+                elif head == 'xor':
+                    v = a ^ b
+                elif head == 'mul':
+                    v = a * b
+                elif head == 'divu':
+                    v = M64 if b == 0 else a // b
+                elif head == 'remu':
+                    v = a if b == 0 else a % b
+                elif head == 'srl':
+                    v = a >> (b & 63)
+                else:
+                    v = a << (b & 63)
+                self.set_reg(reg(ops[0]), v & M64)
+            elif head in ('addi', 'andi', 'ori', 'xori'):
+                a = rg[reg(ops[1])]
+                imm = sext(ev(ops[2]), 64) & M64
+                if head == 'addi':
+                    v = a + imm
+                elif head == 'andi':
+                    v = a & imm
+                elif head == 'ori':
+                    v = a | imm
+                else:
+                    v = a ^ imm
+                self.set_reg(reg(ops[0]), v & M64)
+            elif head == 'slli':
+                self.set_reg(reg(ops[0]), (rg[reg(ops[1])] << (ev(ops[2]) & 63)) & M64)
+            elif head == 'srli':
+                self.set_reg(reg(ops[0]), rg[reg(ops[1])] >> (ev(ops[2]) & 63))
+            elif head == 'srai':
+                self.set_reg(reg(ops[0]), (sext(rg[reg(ops[1])], 64) >> (ev(ops[2]) & 63)) & M64)
+            elif head in ('ld', 'lw', 'lbu'):
+                off, base = mem_operand(ops[1], syms)
+                va = (rg[base] + off) & M64
+                if head == 'ld':
+                    v = self.load(va, 8)
+                elif head == 'lw':
+                    v = self.load(va, 4, signed=True)
+                else:
+                    v = self.load(va, 1)
+                self.set_reg(reg(ops[0]), v)
+            elif head in ('sd', 'sw', 'sb'):
+                off, base = mem_operand(ops[1], syms)
+                va = (rg[base] + off) & M64
+                size_b = {'sd': 8, 'sw': 4, 'sb': 1}[head]
+                self.store(va, size_b, rg[reg(ops[0])])
+            elif head in ('beq', 'bne', 'blt', 'bltu', 'bgeu', 'bgt', 'ble', 'bgtu', 'bleu'):
+                a, b = rg[reg(ops[0])], rg[reg(ops[1])]
+                sa, sb = sext(a, 64), sext(b, 64)
+                take = {'beq': a == b, 'bne': a != b, 'blt': sa < sb, 'bltu': a < b,
+                        'bgeu': a >= b, 'bgt': sa > sb, 'ble': sa <= sb,
+                        'bgtu': a > b, 'bleu': a <= b}[head]
+                if take:
+                    self.pc = self.pc + (ev(ops[2]) - pa)
+                    return
+            elif head in ('beqz', 'bnez', 'bgez', 'bltz', 'blez', 'bgtz'):
+                a = sext(rg[reg(ops[0])], 64)
+                take = {'beqz': a == 0, 'bnez': a != 0, 'bgez': a >= 0,
+                        'bltz': a < 0, 'blez': a <= 0, 'bgtz': a > 0}[head]
+                if take:
+                    self.pc = self.pc + (ev(ops[1]) - pa)
+                    return
+            elif head in ('j', 'tail'):
+                self.pc = self.pc + (ev(ops[0]) - pa)
+                return
+            elif head in ('jal', 'call'):
+                target = ops[-1]
+                rd = 1 if head == 'call' or len(ops) == 1 else reg(ops[0])
+                self.set_reg(rd, nxt)
+                self.pc = self.pc + (ev(target) - pa)
+                return
+            elif head == 'ret':
+                self.pc = rg[1]
+                return
+            elif head == 'jr':
+                self.pc = rg[reg(ops[0])]
+                return
+            elif head == 'csrw':
+                self.csr_write(ops[0], rg[reg(ops[1])])
+            elif head == 'csrr':
+                self.set_reg(reg(ops[0]), self.csr_read(ops[1]))
+            elif head == 'csrs':
+                self.csr_write(ops[0], self.csr_read(ops[0]) | rg[reg(ops[1])])
+            elif head == 'csrc':
+                self.csr_write(ops[0], self.csr_read(ops[0]) & ~rg[reg(ops[1])])
+            elif head == 'csrrw':
+                old = self.csr_read(ops[1])
+                self.csr_write(ops[1], rg[reg(ops[2])])
+                self.set_reg(reg(ops[0]), old)
+            elif head == 'ecall':
+                cause = {(0, False): 8, (0, True): 8, (1, False): 9, (1, True): 10,
+                         (3, False): 11, (3, True): 11}[(self.prv, self.virt)]
+                raise Trap(cause, 0)
+            elif head == 'mret':
+                self.mret()
+                return
+            elif head == 'sret':
+                self.sret()
+                return
+            elif head in ('sfence.vma', 'hfence.gvma', 'hfence.vvma', 'fence', 'fence.i', 'nop'):
+                pass
+            elif head == 'wfi':
+                raise RuntimeError("wfi reached (stack should never wfi)")
+            else:
+                raise RuntimeError(f"emulator: unhandled mnemonic {head!r} at line {ln}")
+        except Trap as t:
+            self.take_trap(t)
+            return
+        self.pc = nxt
+        self.insts += 1
+
+    def run(self, max_steps):
+        for _ in range(max_steps):
+            if self.poweroff is not None:
+                return 'poweroff'
+            self.step()
+        return 'limit'

@@ -1,0 +1,147 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The build image carries no libxla/PJRT shared object, so
+//! [`PjRtClient::cpu`] always fails with a descriptive error. Everything the
+//! simulator's timing-model path needs still typechecks, and the literal
+//! utilities are real so unit code that only shapes data keeps working. The
+//! `runtime::TimingEngine` callers treat a failed client construction as
+//! "artifacts not built" and skip analytics gracefully.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error("PJRT runtime unavailable in this offline build (stub xla crate)".into()))
+}
+
+/// Dense host-side literal: a flat i32 buffer plus a shape. Only the i32
+/// element type is needed by the timing model.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<i32>,
+    shape: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(v: &[i32]) -> Literal {
+        Literal { data: v.to_vec(), shape: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), shape: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: FromI32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_i32(v)).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Element conversion trait for [`Literal::to_vec`].
+pub trait FromI32 {
+    fn from_i32(v: i32) -> Self;
+}
+
+impl FromI32 for i32 {
+    fn from_i32(v: i32) -> i32 {
+        v
+    }
+}
+
+impl FromI32 for i64 {
+    fn from_i32(v: i32) -> i64 {
+        v as i64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle returned by an execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the offline stub: there is no PJRT plugin to load.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_shapes() {
+        let l = Literal::vec1(&[1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(l.to_vec::<i64>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+}
