@@ -1,0 +1,84 @@
+//! fleet_scale: host-thread scaling curve of the sharded fleet engine,
+//! plus the checkpoint-fork construction advantage over per-guest setup.
+//!
+//! Two measurements:
+//!   1. construction: forking M×N guests from per-benchmark templates vs
+//!      assembling every guest's software stack from source,
+//!   2. the scaling curve: the same 8-node fleet executed on 1/2/4/8
+//!      worker threads — wall time, speedup, completion percentiles and
+//!      aggregate instruction throughput.
+
+include!("bench_common.rs");
+
+use std::time::Instant;
+
+use hvsim::fleet::{run_fleet, FleetSpec};
+use hvsim::vmm::{build_node, FlushPolicy, GuestFactory};
+
+const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
+const NODES: usize = 8;
+const GUESTS: usize = 2;
+
+fn spec(threads: usize, scale: u64) -> FleetSpec {
+    FleetSpec {
+        nodes: NODES,
+        guests_per_node: GUESTS,
+        threads,
+        slice_ticks: 200_000,
+        policy: FlushPolicy::Partitioned,
+        benches: vec!["qsort".into(), "bitcount".into()],
+        scale,
+        ram_bytes: RAM,
+        max_node_ticks: u64::MAX,
+        tlb_sets: 64,
+        tlb_ways: 4,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_banner("fleet_scale", "fleet thread-scaling + checkpoint-fork construction");
+    let scale = bench_scale();
+    let benches = ["qsort", "bitcount"];
+
+    // ---- 1. construction: checkpoint-forked vs per-guest full setup ----
+    let t0 = Instant::now();
+    let mut factory = GuestFactory::new(scale, RAM);
+    for _ in 0..NODES {
+        let node = factory.node(&benches, GUESTS)?;
+        anyhow::ensure!(node.len() == GUESTS, "forked node construction came up short");
+    }
+    let forked = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for _ in 0..NODES {
+        let node = build_node(&benches, scale, GUESTS, RAM)?;
+        anyhow::ensure!(node.len() == GUESTS, "full node construction came up short");
+    }
+    let full = t1.elapsed().as_secs_f64();
+    println!(
+        "construction ({NODES} nodes × {GUESTS} guests): forked {forked:.3}s \
+         ({} assemblies) vs full {full:.3}s ({:.2}x)",
+        factory.assemblies(),
+        full / forked.max(1e-9),
+    );
+    drop(factory);
+
+    // ---- 2. thread-scaling curve ----
+    let mut base_wall = None;
+    for threads in [1usize, 2, 4, 8] {
+        let rep = run_fleet(&spec(threads, scale))?;
+        anyhow::ensure!(rep.all_passed(), "fleet failed at {threads} threads");
+        let wall = rep.wall_seconds;
+        let base = *base_wall.get_or_insert(wall);
+        println!(
+            "threads {threads}: wall {wall:.3}s speedup {:.2}x | p50 {} p99 {} ticks | \
+             {:.1} M inst/s | {} switches @ {:.0} ns",
+            base / wall.max(1e-9),
+            rep.latency_percentile(0.50).unwrap_or(0),
+            rep.latency_percentile(0.99).unwrap_or(0),
+            rep.minst_per_sec(),
+            rep.world_switches(),
+            rep.avg_switch_ns(),
+        );
+    }
+    Ok(())
+}

@@ -80,10 +80,16 @@ fn main() -> anyhow::Result<()> {
         let out = m.run_scheduled(&mut sched, u64::MAX);
         let secs = t.elapsed().as_secs_f64();
         anyhow::ensure!(out.all_passed, "scheduled guests failed");
+        // `world_switches` reports full in+out pairs (one per slice);
+        // half-switch accounting stays available on SwitchStats.
+        anyhow::ensure!(
+            sched.switch.half_switches == 2 * out.world_switches,
+            "switch accounting out of sync"
+        );
         let insts: u64 = sched.guests.iter().map(|g| g.stats.sim_insts).sum();
         println!(
             "2-guest node ({label:<11}): {secs:.3}s vs serial {serial:.3}s \
-             ({:.2}x), {} switches @ {:.0} ns, {:.1} M inst/s",
+             ({:.2}x), {} full switches @ {:.0} ns, {:.1} M inst/s",
             secs / serial,
             out.world_switches,
             out.avg_switch_ns,

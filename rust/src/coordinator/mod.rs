@@ -510,6 +510,98 @@ pub fn consolidation_table(rows: &[ConsolidationRow], benches: &[&str]) -> Strin
     s
 }
 
+// --------------------------------------------------------- fleet report
+
+use crate::fleet::{FleetReport, FleetSpec};
+
+/// Render the fleet experiment: per-node rows plus fleet-level aggregates
+/// (completion percentiles, throughput, switch overhead), the
+/// checkpoint-fork construction comparison, the parallel speedup vs a
+/// 1-thread baseline, and the console-vs-solo verdict.
+pub fn fleet_table(
+    spec: &FleetSpec,
+    report: &FleetReport,
+    baseline: Option<&FleetReport>,
+    full_construct: Option<(f64, u64)>,
+    console_mismatches: &[String],
+) -> String {
+    let mut s = format!(
+        "Fleet — {} nodes × {} guests (mix {}), {} threads\n\
+         slice: {} ticks | TLB policy: {}\n\
+         node  pass   total_ticks     switches  switch(ns)   host(s)\n",
+        spec.nodes,
+        spec.guests_per_node,
+        spec.benches.join("+"),
+        report.threads,
+        spec.slice_ticks,
+        spec.policy.name(),
+    );
+    for n in &report.nodes {
+        let passed = n.guests.iter().filter(|g| g.passed).count();
+        s.push_str(&format!(
+            "{:<5} {:>2}/{:<2} {:>13} {:>12} {:>11.0} {:>9.3}\n",
+            n.node,
+            passed,
+            n.guests.len(),
+            n.total_ticks,
+            n.world_switches,
+            if n.world_switches > 0 {
+                n.switch_host_ns as f64 / n.world_switches as f64
+            } else {
+                0.0
+            },
+            n.host_seconds,
+        ));
+    }
+    s.push_str(&format!(
+        "fleet: {}/{} guests passed | completion p50 {} / p99 {} ticks\n\
+         throughput: {:.2} guests/s, {:.1} M inst/s | {} world switches @ {:.0} ns | wall {:.3}s\n",
+        report.guests().filter(|g| g.passed).count(),
+        spec.total_guests(),
+        report.latency_percentile(0.50).unwrap_or(0),
+        report.latency_percentile(0.99).unwrap_or(0),
+        report.guests_per_sec(),
+        report.minst_per_sec(),
+        report.world_switches(),
+        report.avg_switch_ns(),
+        report.wall_seconds,
+    ));
+    s.push_str(&format!(
+        "construction (checkpoint-forked): {:.3}s, {} assemblies",
+        report.construct_seconds, report.construct_assemblies,
+    ));
+    if let Some((full_secs, full_asm)) = full_construct {
+        s.push_str(&format!(
+            " | full per-guest setup: {:.3}s, {} assemblies ({})\n",
+            full_secs,
+            full_asm,
+            if report.construct_assemblies < full_asm { "forked CHEAPER" } else { "forked NOT cheaper" },
+        ));
+    } else {
+        s.push('\n');
+    }
+    if let Some(base) = baseline {
+        s.push_str(&format!(
+            "parallel speedup vs 1 thread: {:.2}x (wall {:.3}s → {:.3}s)\n",
+            if report.wall_seconds > 0.0 { base.wall_seconds / report.wall_seconds } else { 0.0 },
+            base.wall_seconds,
+            report.wall_seconds,
+        ));
+    }
+    if console_mismatches.is_empty() {
+        s.push_str(&format!(
+            "consoles vs solo: ok ({} byte-identical)\n",
+            spec.total_guests()
+        ));
+    } else {
+        s.push_str("consoles vs solo: MISMATCH\n");
+        for m in console_mismatches {
+            s.push_str(&format!("  - {m}\n"));
+        }
+    }
+    s
+}
+
 /// Validate the paper's qualitative claims against a sweep; returns the
 /// violated claims (empty = all hold).
 pub fn check_paper_claims(pairs: &[Pair]) -> Vec<String> {
@@ -584,6 +676,55 @@ mod tests {
         ] {
             assert!(table.contains("qsort"));
         }
+    }
+
+    #[test]
+    fn fleet_table_renders() {
+        use crate::fleet::{FleetReport, FleetSpec, GuestOutcome, NodeOutcome};
+        use crate::vmm::FlushPolicy;
+        let spec = FleetSpec {
+            nodes: 1,
+            guests_per_node: 1,
+            threads: 1,
+            slice_ticks: 100,
+            policy: FlushPolicy::Partitioned,
+            benches: vec!["qsort".into()],
+            scale: 1,
+            ram_bytes: 1 << 20,
+            max_node_ticks: 1_000,
+            tlb_sets: 64,
+            tlb_ways: 4,
+        };
+        let report = FleetReport {
+            nodes: vec![NodeOutcome {
+                node: 0,
+                total_ticks: 500,
+                world_switches: 5,
+                switch_host_ns: 5_000,
+                host_seconds: 0.1,
+                guests: vec![GuestOutcome {
+                    node: 0,
+                    id: 0,
+                    bench: "qsort".into(),
+                    passed: true,
+                    finished_at_total: Some(500),
+                    sim_insts: 400,
+                    console: "x".into(),
+                }],
+            }],
+            threads: 1,
+            construct_seconds: 0.01,
+            construct_assemblies: 3,
+            wall_seconds: 0.1,
+        };
+        let t = fleet_table(&spec, &report, None, None, &[]);
+        assert!(t.contains("1 nodes × 1 guests"));
+        assert!(t.contains("1/1 guests passed"));
+        assert!(t.contains("consoles vs solo: ok"));
+        let t2 = fleet_table(&spec, &report, Some(&report), Some((0.02, 9)), &["bad".into()]);
+        assert!(t2.contains("forked CHEAPER"));
+        assert!(t2.contains("parallel speedup vs 1 thread"));
+        assert!(t2.contains("MISMATCH"));
     }
 
     #[test]

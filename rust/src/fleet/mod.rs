@@ -1,0 +1,352 @@
+//! The fleet engine: M consolidated nodes — each a [`Machine`] +
+//! [`VmmScheduler`] with N guests — sharded across K host threads via
+//! `std::thread::scope`. This is the scale-out layer on top of the
+//! single-node vmm subsystem (ROADMAP: production-scale node counts, as
+//! fast as the host allows).
+//!
+//! Construction uses checkpoint-forked guests ([`crate::vmm::GuestFactory`]):
+//! each benchmark's guest world is assembled once, then cloned per tenant
+//! with only the VMID and the hypervisor RAM image rebound — O(#benches)
+//! kernel assembly for an entire M×N fleet instead of O(M·N).
+//!
+//! Reported fleet-level stats: guest completion (pass/fail + p50/p99
+//! completion latency in scheduled ticks), aggregate throughput (guests/s
+//! and Minst/s of host wall-clock), world-switch overhead, and the
+//! wall-clock numbers a caller needs to compute host-side parallel speedup
+//! (run the same spec with `threads = 1` and divide).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::mmu::Tlb;
+use crate::sim::Machine;
+use crate::vmm::{FlushPolicy, GuestFactory, GuestVm, VmmScheduler};
+
+/// Everything that defines a fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Consolidated nodes (M).
+    pub nodes: usize,
+    /// Guests per node (N), cycling through `benches`.
+    pub guests_per_node: usize,
+    /// Host worker threads (K); clamped to the node count.
+    pub threads: usize,
+    /// Scheduler time slice, in ticks.
+    pub slice_ticks: u64,
+    pub policy: FlushPolicy,
+    /// Benchmark mix; guest i of every node runs `benches[i % len]`.
+    pub benches: Vec<String>,
+    pub scale: u64,
+    /// RAM per guest (and per carrier machine).
+    pub ram_bytes: usize,
+    /// Scheduled-tick budget per node.
+    pub max_node_ticks: u64,
+    /// TLB geometry of each node's carrier machine.
+    pub tlb_sets: usize,
+    pub tlb_ways: usize,
+}
+
+impl FleetSpec {
+    pub fn total_guests(&self) -> usize {
+        self.nodes * self.guests_per_node
+    }
+}
+
+/// One guest's result, lifted out of the scheduler.
+#[derive(Clone, Debug)]
+pub struct GuestOutcome {
+    pub node: usize,
+    pub id: usize,
+    pub bench: String,
+    pub passed: bool,
+    /// Node-scheduled ticks at power-off (the completion latency).
+    pub finished_at_total: Option<u64>,
+    pub sim_insts: u64,
+    pub console: String,
+}
+
+/// One node's result.
+#[derive(Clone, Debug)]
+pub struct NodeOutcome {
+    pub node: usize,
+    pub total_ticks: u64,
+    /// Full world switches (in+out pairs).
+    pub world_switches: u64,
+    pub switch_host_ns: u128,
+    pub host_seconds: f64,
+    pub guests: Vec<GuestOutcome>,
+}
+
+/// Aggregate result of a fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Per-node outcomes, ordered by node id.
+    pub nodes: Vec<NodeOutcome>,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Host seconds spent constructing the fleet (checkpoint-forked).
+    pub construct_seconds: f64,
+    /// Image assemblies the construction cost (upper bound; see
+    /// [`GuestFactory::assemblies`]).
+    pub construct_assemblies: u64,
+    /// Host wall-clock seconds of the sharded execution phase.
+    pub wall_seconds: f64,
+}
+
+impl FleetReport {
+    pub fn guests(&self) -> impl Iterator<Item = &GuestOutcome> {
+        self.nodes.iter().flat_map(|n| n.guests.iter())
+    }
+
+    pub fn all_passed(&self) -> bool {
+        !self.nodes.is_empty() && self.guests().all(|g| g.passed)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.guests().filter(|g| g.finished_at_total.is_some()).count()
+    }
+
+    pub fn total_insts(&self) -> u64 {
+        self.guests().map(|g| g.sim_insts).sum()
+    }
+
+    pub fn world_switches(&self) -> u64 {
+        self.nodes.iter().map(|n| n.world_switches).sum()
+    }
+
+    /// Mean host nanoseconds per full world switch across the fleet.
+    pub fn avg_switch_ns(&self) -> f64 {
+        let total: u128 = self.nodes.iter().map(|n| n.switch_host_ns).sum();
+        let switches = self.world_switches();
+        if switches == 0 {
+            0.0
+        } else {
+            total as f64 / switches as f64
+        }
+    }
+
+    /// Completion latencies (scheduled ticks at power-off) of every
+    /// finished guest, ascending.
+    pub fn latencies(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.guests().filter_map(|g| g.finished_at_total).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Nearest-rank percentile (`q` in 0..=1) over completion latencies.
+    pub fn latency_percentile(&self, q: f64) -> Option<u64> {
+        let v = self.latencies();
+        if v.is_empty() {
+            return None;
+        }
+        let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        Some(v[rank - 1])
+    }
+
+    /// Completed guests per host wall-clock second.
+    pub fn guests_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.completed() as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate millions of retired guest instructions per wall second —
+    /// the host-side parallelism payoff.
+    pub fn minst_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.total_insts() as f64 / self.wall_seconds / 1e6
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run a fleet: checkpoint-forked construction, then M nodes executed to
+/// completion (or budget) across K worker threads. Nodes are handed out
+/// work-stealing style (an atomic cursor over the job list), so uneven
+/// node runtimes don't idle workers.
+pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
+    if spec.nodes == 0 || spec.guests_per_node == 0 {
+        bail!("fleet needs at least one node and one guest per node");
+    }
+    if spec.benches.is_empty() {
+        bail!("fleet needs at least one benchmark");
+    }
+    let benches: Vec<&str> = spec.benches.iter().map(String::as_str).collect();
+
+    // ---- checkpoint-forked construction ----
+    let t0 = Instant::now();
+    let mut factory = GuestFactory::new(spec.scale, spec.ram_bytes);
+    let mut jobs: Vec<Mutex<Option<(usize, Vec<GuestVm>)>>> = Vec::with_capacity(spec.nodes);
+    for node in 0..spec.nodes {
+        jobs.push(Mutex::new(Some((node, factory.node(&benches, spec.guests_per_node)?))));
+    }
+    let construct_seconds = t0.elapsed().as_secs_f64();
+    let construct_assemblies = factory.assemblies();
+    drop(factory); // release the template worlds before the run phase
+
+    // ---- sharded execution ----
+    let threads = spec.threads.clamp(1, spec.nodes);
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<NodeOutcome>> = Mutex::new(Vec::with_capacity(spec.nodes));
+    let t1 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (node, guests) = jobs[i].lock().unwrap().take().expect("each job runs once");
+                let mut sched = VmmScheduler::new(guests, spec.slice_ticks, spec.policy);
+                let mut m = Machine::new(spec.ram_bytes, true);
+                m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
+                let t_node = Instant::now();
+                m.run_scheduled(&mut sched, spec.max_node_ticks);
+                let host_seconds = t_node.elapsed().as_secs_f64();
+                let out = sched.outcome();
+                let guests = sched
+                    .guests
+                    .iter()
+                    .map(|g| GuestOutcome {
+                        node,
+                        id: g.id,
+                        bench: g.bench.clone(),
+                        passed: g.passed(),
+                        finished_at_total: g.finished_at_total,
+                        sim_insts: g.stats.sim_insts,
+                        console: g.console(),
+                    })
+                    .collect();
+                results.lock().unwrap().push(NodeOutcome {
+                    node,
+                    total_ticks: out.total_ticks,
+                    world_switches: out.world_switches,
+                    switch_host_ns: sched.switch.switch_host_ns,
+                    host_seconds,
+                    guests,
+                });
+            });
+        }
+    });
+    let wall_seconds = t1.elapsed().as_secs_f64();
+
+    let mut nodes = results.into_inner().unwrap();
+    nodes.sort_by_key(|n| n.node);
+    Ok(FleetReport { nodes, threads, construct_seconds, construct_assemblies, wall_seconds })
+}
+
+/// Solo baseline consoles: each distinct benchmark run alone on a 1-guest
+/// node with the spec's slice/policy/TLB. The fleet's correctness claim is
+/// that every fleet guest's console is byte-identical to these.
+pub fn solo_consoles(spec: &FleetSpec) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for bench in &spec.benches {
+        if out.contains_key(bench) {
+            continue;
+        }
+        let guests = vec![GuestVm::new(0, bench, spec.scale, spec.ram_bytes)?];
+        let mut sched = VmmScheduler::new(guests, spec.slice_ticks, spec.policy);
+        let mut m = Machine::new(spec.ram_bytes, true);
+        m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
+        m.run_scheduled(&mut sched, spec.max_node_ticks);
+        let g = &sched.guests[0];
+        if !g.passed() {
+            bail!("solo baseline {bench} failed ({:?}); console:\n{}", g.exit, g.console());
+        }
+        out.insert(bench.clone(), g.console());
+    }
+    Ok(out)
+}
+
+/// Compare every fleet guest's console with its solo baseline; returns
+/// human-readable mismatch descriptions (empty = all byte-identical).
+pub fn console_mismatches(report: &FleetReport, solos: &BTreeMap<String, String>) -> Vec<String> {
+    let mut bad = Vec::new();
+    for g in report.guests() {
+        match solos.get(&g.bench) {
+            Some(solo) if *solo == g.console => {}
+            Some(_) => bad.push(format!(
+                "node {} guest {} ({}): console diverged from solo run",
+                g.node, g.id, g.bench
+            )),
+            None => bad.push(format!(
+                "node {} guest {} ({}): no solo baseline",
+                g.node, g.id, g.bench
+            )),
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> FleetSpec {
+        FleetSpec {
+            nodes: 3,
+            guests_per_node: 2,
+            threads: 2,
+            slice_ticks: 1_000,
+            policy: FlushPolicy::Partitioned,
+            benches: vec!["bitcount".into()],
+            scale: 1,
+            ram_bytes: crate::sw::GUEST_RAM_MIN,
+            max_node_ticks: u64::MAX,
+            tlb_sets: 64,
+            tlb_ways: 4,
+        }
+    }
+
+    #[test]
+    fn spec_validation() {
+        let mut s = tiny_spec();
+        s.nodes = 0;
+        assert!(run_fleet(&s).is_err());
+        let mut s = tiny_spec();
+        s.benches.clear();
+        assert!(run_fleet(&s).is_err());
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mk = |lat: &[u64]| FleetReport {
+            nodes: vec![NodeOutcome {
+                node: 0,
+                total_ticks: 0,
+                world_switches: 0,
+                switch_host_ns: 0,
+                host_seconds: 0.0,
+                guests: lat
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| GuestOutcome {
+                        node: 0,
+                        id: i,
+                        bench: "b".into(),
+                        passed: true,
+                        finished_at_total: Some(t),
+                        sim_insts: 0,
+                        console: String::new(),
+                    })
+                    .collect(),
+            }],
+            threads: 1,
+            construct_seconds: 0.0,
+            construct_assemblies: 0,
+            wall_seconds: 1.0,
+        };
+        let r = mk(&[40, 10, 30, 20]);
+        assert_eq!(r.latency_percentile(0.50), Some(20));
+        assert_eq!(r.latency_percentile(0.99), Some(40));
+        assert_eq!(r.latency_percentile(1.0), Some(40));
+        assert_eq!(mk(&[]).latency_percentile(0.5), None);
+    }
+}

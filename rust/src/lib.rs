@@ -17,6 +17,9 @@
 //!   world-switch engine with VMID-partitioned TLB policies, and the
 //!   round-robin scheduler that turns one hart into a consolidated
 //!   multi-tenant "cloud node" (consolidation-sweep experiment).
+//! - [`fleet`]: the scale-out layer — M consolidated nodes sharded across
+//!   K host threads, built from checkpoint-forked guest worlds
+//!   (`hvsim fleet`, fleet-scaling experiment).
 //! - [`trace`], [`runtime`]: trace capture and the PJRT-loaded XLA timing
 //!   model (Layer 2/1 artifacts).
 //! - [`coordinator`]: experiment orchestration — regenerates every figure
@@ -27,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cpu;
 pub mod dev;
+pub mod fleet;
 pub mod isa;
 pub mod mem;
 pub mod mmu;

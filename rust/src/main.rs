@@ -6,6 +6,9 @@
 //! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
 //! hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--scale N]
 //!             [--policy all|vmid|none] [--out FILE]
+//! hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T]
+//!             [--bench A,B] [--scale N] [--policy all|vmid|none]
+//!             [--out FILE]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
 //! hvsim boot  [--config FILE]
 //! hvsim list
@@ -79,6 +82,27 @@ fn load_cfg(args: &Args) -> Result<SimConfig> {
         cfg.uart_echo = true;
     }
     Ok(cfg)
+}
+
+/// Shared `--policy` parsing for the vmm/fleet subcommands.
+fn parse_policy(args: &Args) -> Result<hvsim::vmm::FlushPolicy> {
+    Ok(match args.get("policy") {
+        None => hvsim::vmm::FlushPolicy::Partitioned,
+        Some(p) => hvsim::vmm::FlushPolicy::parse(p)
+            .with_context(|| format!("unknown --policy '{p}' (all|vmid|none)"))?,
+    })
+}
+
+/// Shared `--bench` parsing (comma-separated mix, two distinct guest
+/// kernels interleave by default) for the vmm/fleet subcommands.
+fn parse_benches(args: &Args) -> Result<Vec<String>> {
+    let arg = args.get("bench").unwrap_or("qsort,bitcount");
+    let benches: Vec<String> =
+        arg.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect();
+    if benches.is_empty() {
+        bail!("--bench must name at least one benchmark");
+    }
+    Ok(benches)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -171,14 +195,9 @@ fn cmd_vmm(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
     let max_guests = args.u64("guests")?.unwrap_or(4).max(1) as usize;
     let slice = args.u64("slice")?.unwrap_or(200_000).max(1);
-    let policy = match args.get("policy") {
-        None => hvsim::vmm::FlushPolicy::Partitioned,
-        Some(p) => hvsim::vmm::FlushPolicy::parse(p)
-            .with_context(|| format!("unknown --policy '{p}' (all|vmid|none)"))?,
-    };
-    // Two distinct guest kernels interleave by default.
-    let bench_arg = args.get("bench").unwrap_or("qsort,bitcount").to_string();
-    let benches: Vec<&str> = bench_arg.split(',').filter(|s| !s.is_empty()).collect();
+    let policy = parse_policy(args)?;
+    let benches_owned = parse_benches(args)?;
+    let benches: Vec<&str> = benches_owned.iter().map(String::as_str).collect();
     // Guest counts: powers of two up to N, plus N itself.
     let mut counts = Vec::new();
     let mut c = 1usize;
@@ -205,6 +224,102 @@ fn cmd_vmm(args: &Args) -> Result<()> {
     }
     if !all_ok {
         bail!("consolidation sweep failed");
+    }
+    Ok(())
+}
+
+/// The fleet experiment: M consolidated nodes × N guests sharded across K
+/// host threads, with checkpoint-forked construction, a 1-thread baseline
+/// for the parallel-speedup figure, and a console-vs-solo byte check.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let nodes = args.u64("nodes")?.unwrap_or(2).max(1) as usize;
+    let guests = args.u64("guests")?.unwrap_or(2).max(1) as usize;
+    let threads = match args.u64("threads")? {
+        Some(t) => t.max(1) as usize,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(nodes),
+    };
+    let slice = args.u64("slice")?.unwrap_or(200_000).max(1);
+    let policy = parse_policy(args)?;
+    let benches = parse_benches(args)?;
+    let spec = hvsim::fleet::FleetSpec {
+        nodes,
+        guests_per_node: guests,
+        threads,
+        slice_ticks: slice,
+        policy,
+        benches,
+        scale: cfg.scale,
+        ram_bytes: coordinator::GUEST_NODE_RAM,
+        max_node_ticks: cfg.max_ticks.saturating_mul(guests as u64),
+        tlb_sets: cfg.tlb_sets as usize,
+        tlb_ways: cfg.tlb_ways as usize,
+    };
+
+    // Full per-guest construction cost, for the checkpoint-fork
+    // comparison. Counted in firmware+kernel assemblies only: the per-VMID
+    // hypervisor image cache serves both construction paths, so including
+    // its (cache-order-dependent) assemblies would skew whichever pass
+    // runs second. Nodes are identical, so one full node is built and
+    // extrapolated ×M — paying the whole O(M·N) assembly bill here would
+    // defeat the optimization being measured. Counters are exact: the CLI
+    // is single-threaded outside the run phase.
+    let bench_refs: Vec<&str> = spec.benches.iter().map(String::as_str).collect();
+    let fw_kernel_delta = |asm0: u64, hv0: u64| {
+        (hvsim::sw::assembly_count() - asm0) - (hvsim::sw::hv_assembly_count() - hv0)
+    };
+    let (asm0, hv0) = (hvsim::sw::assembly_count(), hvsim::sw::hv_assembly_count());
+    let t0 = std::time::Instant::now();
+    let node = hvsim::vmm::build_node(&bench_refs, spec.scale, guests, spec.ram_bytes)?;
+    drop(node);
+    let full_construct = (
+        t0.elapsed().as_secs_f64() * spec.nodes as f64,
+        fw_kernel_delta(asm0, hv0) * spec.nodes as u64,
+    );
+
+    let (asm1, hv1) = (hvsim::sw::assembly_count(), hvsim::sw::hv_assembly_count());
+    let mut report = hvsim::fleet::run_fleet(&spec)?;
+    // Replace the factory's conservative upper bound with the exact
+    // firmware+kernel assembly count of this construction (execution
+    // assembles nothing).
+    report.construct_assemblies = fw_kernel_delta(asm1, hv1);
+    // 1-thread baseline of the same fleet for the host-speedup figure
+    // (report.threads is already clamped to the node count, so a 1-node
+    // fleet never re-runs as its own baseline).
+    let baseline = if report.threads > 1 {
+        let mut solo = spec.clone();
+        solo.threads = 1;
+        Some(hvsim::fleet::run_fleet(&solo)?)
+    } else {
+        None
+    };
+    // Solo baselines: every fleet guest's console must be byte-identical.
+    let solos = hvsim::fleet::solo_consoles(&spec)?;
+    let mismatches = hvsim::fleet::console_mismatches(&report, &solos);
+
+    let out = coordinator::fleet_table(
+        &spec,
+        &report,
+        baseline.as_ref(),
+        Some(full_construct),
+        &mismatches,
+    );
+    match args.get("out") {
+        Some(path) => std::fs::write(path, &out)?,
+        None => print!("{out}"),
+    }
+    if !report.all_passed() {
+        bail!("fleet run failed: not all guests passed");
+    }
+    if !mismatches.is_empty() {
+        bail!("fleet run failed: {} console(s) diverged from solo runs", mismatches.len());
+    }
+    if spec.total_guests() > spec.benches.len() && report.construct_assemblies >= full_construct.1 {
+        bail!(
+            "checkpoint-forked construction not cheaper: {} vs {} assemblies",
+            report.construct_assemblies,
+            full_construct.1
+        );
     }
     Ok(())
 }
@@ -241,6 +356,7 @@ fn usage() -> ! {
          usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
          hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none]\n  \
+         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
          hvsim boot  [--bench NAME]\n  hvsim list"
     );
@@ -255,6 +371,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
         "vmm" => cmd_vmm(&args),
+        "fleet" => cmd_fleet(&args),
         "timing" => cmd_timing(&args),
         "boot" => cmd_boot(&args),
         "list" => {

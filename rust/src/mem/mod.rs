@@ -30,7 +30,10 @@ pub const SYSCON_FAIL: u32 = 0x3333;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AccessFault;
 
-/// The system bus: RAM plus devices.
+/// The system bus: RAM plus devices. `Clone` supports checkpoint-forked
+/// guest construction (the vmm/fleet layers assemble one guest world per
+/// benchmark, then stamp out tenants by cloning the whole bus).
+#[derive(Clone)]
 pub struct Bus {
     ram: Vec<u8>,
     pub clint: Clint,

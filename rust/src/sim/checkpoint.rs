@@ -10,7 +10,11 @@ use anyhow::{bail, Context, Result};
 
 use super::Machine;
 
-const MAGIC: &[u8; 8] = b"HVSIMCK1";
+// CK2: adds the device-timebase phase (`Machine::device_countdown`) —
+// without it a restored machine's CLINT updates drift out of phase with a
+// straight-through run, breaking the tick-exactness the paper's §4.1
+// "checkpoint per benchmark" methodology (and fleet forking) relies on.
+const MAGIC: &[u8; 8] = b"HVSIMCK2";
 const PAGE: usize = 4096;
 
 struct Writer {
@@ -144,9 +148,10 @@ pub fn save(m: &Machine) -> Vec<u8> {
     w.u32(m.bus.plic.enable[1]);
     w.u32(m.bus.plic.threshold[0]);
     w.u32(m.bus.plic.threshold[1]);
-    // Sim counters.
+    // Sim counters + device-timebase phase.
     w.u64(m.stats.sim_ticks);
     w.u64(m.stats.sim_insts);
+    w.u64(m.device_countdown);
     // RAM: sparse non-zero pages.
     let ram = m.bus.ram_bytes();
     w.u64(ram.len() as u64);
@@ -202,6 +207,7 @@ pub fn restore(m: &mut Machine, blob: &[u8]) -> Result<()> {
     m.bus.plic.threshold[1] = r.u32()?;
     m.stats.sim_ticks = r.u64()?;
     m.stats.sim_insts = r.u64()?;
+    m.device_countdown = r.u64()?;
     let ram_len = r.u64()? as usize;
     if ram_len != m.bus.ram_bytes().len() {
         bail!("checkpoint RAM size {} != machine RAM {}", ram_len, m.bus.ram_bytes().len());
@@ -266,6 +272,53 @@ mod tests {
         assert_eq!(m2.core.hart.pc, m.core.hart.pc);
         assert_eq!(m2.run(100_000), ExitReason::PowerOff(0x5555));
         assert_eq!(m2.core.hart.regs[5], 100);
+    }
+
+    #[test]
+    fn restored_device_timebase_matches_straight_through() {
+        // mtimecmp-driven program on a *busy* loop (no WFI): the interrupt
+        // fires at an exact mtime, so any device-timebase phase drift in a
+        // restored machine shifts its poweroff tick. Checkpoint mid-phase
+        // (device_countdown != 0) and require the restored machine to
+        // finish tick-exactly with the straight-through run.
+        let src = r#"
+            la t0, handler
+            csrw mtvec, t0
+            li t0, 0x2000000 + 0x4000
+            li t1, 40           # mtimecmp = 40 (mtime advances 1/100 ticks)
+            sd t1, 0(t0)
+            li t0, 1 << 7       # MTIE
+            csrw mie, t0
+            csrsi mstatus, 8    # MIE
+        spin:
+            addi t2, t2, 1
+            j spin
+        .align 2
+        handler:
+            li t0, 0x100000
+            li t1, 0x5555
+            sw t1, 0(t0)
+            j handler
+        "#;
+        let img = assemble(src, RAM_BASE).unwrap();
+        let mut m = crate::sim::Machine::new(1 << 20, true);
+        m.load(&img).unwrap();
+        m.set_entry(RAM_BASE);
+        assert_eq!(m.run(137), ExitReason::Limit);
+        assert_ne!(m.device_countdown, 0, "checkpoint must land mid-phase");
+        let blob = save(&m);
+
+        let mut m2 = crate::sim::Machine::new(1 << 20, true);
+        restore(&mut m2, &blob).unwrap();
+        assert_eq!(m2.device_countdown, m.device_countdown);
+
+        let r1 = m.run(1_000_000);
+        let r2 = m2.run(1_000_000);
+        assert_eq!(r1, ExitReason::PowerOff(0x5555));
+        assert_eq!(r2, r1);
+        assert_eq!(m2.stats.sim_ticks, m.stats.sim_ticks, "tick-exact restore");
+        assert_eq!(m2.bus.clint.mtime, m.bus.clint.mtime);
+        assert_eq!(m2.core.hart.regs[7], m.core.hart.regs[7], "same spin count");
     }
 
     #[test]

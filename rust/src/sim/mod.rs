@@ -70,6 +70,16 @@ impl Machine {
     /// One tick: device update + CPU step + stats accounting.
     #[inline]
     pub fn tick(&mut self) -> StepEvent {
+        self.tick_bounded(u64::MAX)
+    }
+
+    /// One tick whose WFI fast-forward never advances `sim_ticks` past
+    /// `limit`. `run`/`run_until` pass their absolute tick budget here so
+    /// a parked machine lands exactly on the budget instead of overshooting
+    /// by up to `TIME_DIVIDER - 1` ticks — which would let a scheduler
+    /// slice leak past `VmmScheduler::max_total_ticks`.
+    #[inline]
+    fn tick_bounded(&mut self, limit: u64) -> StepEvent {
         // Device timebase (coarse: every TIME_DIVIDER ticks).
         if self.device_countdown == 0 {
             self.device_countdown = TIME_DIVIDER;
@@ -124,8 +134,12 @@ impl Machine {
                 self.stats.wfi_ticks += 1;
                 // Fast-forward the timebase while parked so WFI terminates
                 // in O(1) host work instead of TIME_DIVIDER idle spins.
-                self.stats.sim_ticks += self.device_countdown;
-                self.device_countdown = 0;
+                // Clamped to the tick budget; the unspent countdown stays
+                // in `device_countdown`, keeping the device phase identical
+                // to a straight tick-by-tick run.
+                let ff = self.device_countdown.min(limit.saturating_sub(self.stats.sim_ticks));
+                self.stats.sim_ticks += ff;
+                self.device_countdown -= ff;
             }
         }
         ev
@@ -142,7 +156,7 @@ impl Machine {
             if self.stats.sim_ticks >= limit {
                 break ExitReason::Limit;
             }
-            self.tick();
+            self.tick_bounded(limit);
         };
         self.stats.host_time += start.elapsed();
         reason
@@ -159,7 +173,7 @@ impl Machine {
             if self.stats.sim_ticks >= limit {
                 break ExitReason::Limit;
             }
-            self.tick();
+            self.tick_bounded(limit);
             if pred(self) {
                 break ExitReason::Predicate;
             }
@@ -228,6 +242,21 @@ mod tests {
         let mut m = boot("loop: j loop\n");
         assert_eq!(m.run(100), ExitReason::Limit);
         assert_eq!(m.stats.sim_ticks, 100);
+    }
+
+    #[test]
+    fn wfi_fast_forward_respects_tick_limit_exactly() {
+        // A machine parked in WFI fast-forwards the device countdown; the
+        // fast-forward must clamp to the run budget, not overshoot it by
+        // up to TIME_DIVIDER-1 ticks.
+        let mut m = boot("park: wfi\n j park\n");
+        assert_eq!(m.run(1000), ExitReason::Limit);
+        assert_eq!(m.stats.sim_ticks, 1000, "budget is exact under WFI");
+        assert!(m.stats.wfi_ticks > 0);
+        // The clamped countdown keeps the device phase consistent, so a
+        // resumed run lands exactly on its budget too.
+        assert_eq!(m.run(250), ExitReason::Limit);
+        assert_eq!(m.stats.sim_ticks, 1250);
     }
 
     #[test]

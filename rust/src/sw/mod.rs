@@ -12,13 +12,42 @@
 //!                0x8020_0000 + 0x0200_0000 backing offset)
 //! ```
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
 use anyhow::{bail, Context, Result};
 
 use crate::asm::{assemble, Image};
 use crate::sim::Machine;
 
+/// Assembler invocations performed by this module (cache hits excluded).
+static ASSEMBLIES: AtomicU64 = AtomicU64::new(0);
+/// The hypervisor-image subset of [`ASSEMBLIES`].
+static HV_ASSEMBLIES: AtomicU64 = AtomicU64::new(0);
+
+/// How many real `asm::assemble` runs this module has performed since
+/// process start. Assembly dominates guest-world construction cost, so the
+/// fleet layer's checkpoint-fork comparison (clone a template world vs
+/// assemble every guest from source) is asserted in this currency.
+pub fn assembly_count() -> u64 {
+    ASSEMBLIES.load(Ordering::Relaxed)
+}
+
+/// Hypervisor-image assemblies (a subset of [`assembly_count`]; cache hits
+/// excluded). The per-VMID image cache serves full setup and forked
+/// construction alike, so a fair forked-vs-full comparison subtracts this
+/// cache-order-dependent component from both sides.
+pub fn hv_assembly_count() -> u64 {
+    HV_ASSEMBLIES.load(Ordering::Relaxed)
+}
+
 pub const FW_BASE: u64 = 0x8000_0000;
 pub const HV_BASE: u64 = 0x8010_0000;
+/// End of the hypervisor *image* slot: everything from here (HPT_ROOT in
+/// hypervisor.s — the G-stage table pool and HVDATA scratch) is runtime
+/// state, zero in a pre-boot world.
+pub const HV_REGION_END: u64 = 0x8018_0000;
 pub const KERNEL_BASE: u64 = 0x8020_0000;
 /// Host-physical backing offset of guest-physical memory.
 pub const GUEST_OFF: u64 = 0x0200_0000;
@@ -71,6 +100,7 @@ fn bench_source(name: &str) -> Result<&'static str> {
 
 /// Assemble the firmware image.
 pub fn firmware_image() -> Result<Image> {
+    ASSEMBLIES.fetch_add(1, Ordering::Relaxed);
     assemble(FIRMWARE_S, FW_BASE).context("assembling firmware")
 }
 
@@ -82,9 +112,20 @@ pub fn hypervisor_image() -> Result<Image> {
 /// Assemble the hypervisor image for one guest instance of a multi-tenant
 /// node: `vmid` is baked into the hgatp it programs, so every guest's TLB
 /// entries are tagged with a distinct VMID (the vmm partitioning key).
+/// Cached per VMID — the source is deterministic in `vmid`, and the fleet
+/// layer rebinds the same node-local VMIDs over and over when forking.
 pub fn hypervisor_image_with_vmid(vmid: u16) -> Result<Image> {
+    static CACHE: Mutex<BTreeMap<u16, Image>> = Mutex::new(BTreeMap::new());
+    if let Some(img) = CACHE.lock().unwrap().get(&vmid) {
+        return Ok(img.clone());
+    }
+    ASSEMBLIES.fetch_add(1, Ordering::Relaxed);
+    HV_ASSEMBLIES.fetch_add(1, Ordering::Relaxed);
     let src = format!(".equ GUEST_VMID, {vmid}\n{HYPERVISOR_S}");
-    assemble(&src, HV_BASE).with_context(|| format!("assembling hypervisor (vmid {vmid})"))
+    let img =
+        assemble(&src, HV_BASE).with_context(|| format!("assembling hypervisor (vmid {vmid})"))?;
+    CACHE.lock().unwrap().insert(vmid, img.clone());
+    Ok(img)
 }
 
 /// Assemble kernel + prelude + benchmark into one image. `base` differs
@@ -92,6 +133,7 @@ pub fn hypervisor_image_with_vmid(vmid: u16) -> Result<Image> {
 /// code itself is position-independent, and all absolute constants are
 /// guest-physical either way.
 pub fn kernel_image(bench: &str, scale: u64, base: u64) -> Result<Image> {
+    ASSEMBLIES.fetch_add(1, Ordering::Relaxed);
     let bench_src = bench_source(bench)?;
     // fft ships a Q14 twiddle ROM generated here (no trig in the ISA).
     let extra = if bench == "fft" { fft_twiddle_rom(1024) } else { String::new() };
@@ -156,17 +198,53 @@ pub fn setup_guest_world(
         bail!("guest run needs ≥ {} MiB RAM", GUEST_RAM_MIN >> 20);
     }
     let fw = firmware_image()?;
-    let hv = hypervisor_image_with_vmid(vmid)?;
     // The kernel is loaded at the host backing of guest PA KERNEL_BASE.
     let kernel = kernel_image(bench, scale, KERNEL_BASE + GUEST_OFF)?;
-    for img in [&fw, &hv, &kernel] {
+    for img in [&fw, &kernel] {
         bus.load_image(img.base, &img.data)
             .map_err(|_| anyhow::anyhow!("image at {:#x} does not fit in guest RAM", img.base))?;
     }
+    rebind_guest_vmid(bus, hart, vmid)?;
     hart.pc = FW_BASE;
     hart.regs[10] = 0; // a0 = hartid
     hart.regs[11] = HV_BASE; // a1 = next stage
     hart.regs[12] = 1; // a2 = guest
+    Ok(())
+}
+
+/// VMID-rebind hook: (re)load the hypervisor image carrying `vmid` over
+/// the guest world's HV region — the only part of an assembled guest world
+/// that depends on the VMID. Checkpoint-forked guests
+/// ([`crate::vmm::GuestVm::fork`]) clone a template world and call this
+/// instead of re-assembling the whole stack. Only sound before the guest's
+/// hypervisor has programmed hgatp (the old VMID would already be live in
+/// CSR state and TLB tags), which is enforced here.
+pub fn rebind_guest_vmid(
+    bus: &mut crate::mem::Bus,
+    hart: &crate::cpu::Hart,
+    vmid: u16,
+) -> Result<()> {
+    if crate::isa::csr::atp::vmid(hart.csr.hgatp) != 0 {
+        bail!("cannot rebind VMID to {vmid}: hgatp is already live (guest has booted)");
+    }
+    if bus.ram_size() < HV_REGION_END - crate::mem::RAM_BASE {
+        bail!("guest RAM too small to hold the hypervisor region");
+    }
+    // Zero the whole HV image slot first: images may differ in length
+    // across VMIDs, and a rebound world must be byte-identical to a
+    // freshly assembled one.
+    let lo = (HV_BASE - crate::mem::RAM_BASE) as usize;
+    let hi = (HV_REGION_END - crate::mem::RAM_BASE) as usize;
+    bus.ram_bytes_mut()[lo..hi].fill(0);
+    let hv = hypervisor_image_with_vmid(vmid)?;
+    // The image must stay inside the slot being zeroed: past HV_REGION_END
+    // lives the G-stage table pool, and stale bytes beyond the zeroed
+    // range would break the fork-equals-fresh invariant.
+    if hv.data.len() as u64 > HV_REGION_END - HV_BASE {
+        bail!("hypervisor image ({} bytes) outgrew its {} byte slot", hv.data.len(), HV_REGION_END - HV_BASE);
+    }
+    bus.load_image(hv.base, &hv.data)
+        .map_err(|_| anyhow::anyhow!("hypervisor image at {:#x} does not fit in guest RAM", hv.base))?;
     Ok(())
 }
 
@@ -208,6 +286,30 @@ mod tests {
         for b in BENCHMARKS {
             kernel_image(b, 1, KERNEL_BASE).unwrap();
         }
+    }
+
+    #[test]
+    fn vmid_rebind_matches_fresh_setup() {
+        // A world set up for VMID 1 then rebound to 3 must be byte-for-byte
+        // the world assembled for VMID 3 directly.
+        let mut a = Machine::new(64 << 20, true);
+        setup_guest(&mut a, "bitcount", 1).unwrap();
+        rebind_guest_vmid(&mut a.bus, &a.core.hart, 3).unwrap();
+        let mut b = Machine::new(64 << 20, true);
+        setup_guest_world(&mut b.bus, &mut b.core.hart, "bitcount", 1, 3).unwrap();
+        assert!(a.bus.ram_bytes() == b.bus.ram_bytes(), "rebound RAM differs from fresh setup");
+        assert_eq!(a.core.hart.pc, b.core.hart.pc);
+    }
+
+    #[test]
+    fn vmid_rebind_rejected_after_boot() {
+        let mut m = Machine::new(64 << 20, true);
+        setup_guest(&mut m, "bitcount", 1).unwrap();
+        // Boot until the hypervisor programs hgatp — rebinding now would
+        // leave the live VMID inconsistent with the image.
+        let r = m.run_until(50_000_000, |m| m.core.hart.csr.hgatp != 0);
+        assert_eq!(r, ExitReason::Predicate);
+        assert!(rebind_guest_vmid(&mut m.bus, &m.core.hart, 2).is_err());
     }
 
     #[test]

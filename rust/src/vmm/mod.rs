@@ -24,9 +24,10 @@
 //!
 //! Entry point: [`crate::sim::Machine::run_scheduled`].
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::cpu::{Hart, VsCsrFile};
 use crate::isa::csr::atp;
@@ -60,6 +61,8 @@ impl Vcpu {
 }
 
 /// A complete tenant: vCPU + memory region + device claim + private stats.
+/// `Clone` supports checkpoint-forked construction ([`GuestVm::fork`]).
+#[derive(Clone)]
 pub struct GuestVm {
     pub id: usize,
     /// VMID assigned by the VMM (baked into this guest's hypervisor).
@@ -102,12 +105,90 @@ impl GuestVm {
         })
     }
 
+    /// Checkpoint-fork: clone this parked *pre-boot* world into a new
+    /// tenant, rebinding only the VMID and the hypervisor RAM image that
+    /// carries it ([`sw::rebind_guest_vmid`]) — everything else in an
+    /// assembled guest world is VMID-independent. O(RAM memcpy) instead of
+    /// re-assembling the whole software stack; the fleet layer uses this
+    /// to stamp out M×N tenants from one template per benchmark.
+    pub fn fork(&self, id: usize, vmid: u16) -> Result<GuestVm> {
+        // Pre-boot only — a world that has run carries execution state
+        // (RAM, console, poweroff latch) that a "new" tenant must not
+        // inherit, whether or not the VMID changes.
+        if self.stats.sim_ticks != 0
+            || self.bus.poweroff.is_some()
+            || atp::vmid(self.vcpu.hart.csr.hgatp) != 0
+        {
+            bail!("can only fork a pre-boot guest world (guest {} has already run)", self.id);
+        }
+        let mut g = self.clone();
+        g.id = id;
+        g.stats = SimStats::default();
+        g.mmu = MmuStats::default();
+        g.exit = None;
+        g.finished_at_total = None;
+        g.slices_run = 0;
+        g.dev_countdown = 0;
+        if vmid != g.vmid {
+            sw::rebind_guest_vmid(&mut g.bus, &g.vcpu.hart, vmid)?;
+            g.vmid = vmid;
+        }
+        Ok(g)
+    }
+
     pub fn passed(&self) -> bool {
         matches!(self.exit, Some(ExitReason::PowerOff(code)) if code == crate::mem::SYSCON_PASS)
     }
 
     pub fn console(&self) -> String {
         self.bus.uart.output_string()
+    }
+}
+
+/// Checkpoint-fork guest factory: assembles each distinct benchmark's
+/// guest world exactly once (the "checkpoint"), then stamps out tenants by
+/// [`GuestVm::fork`] — O(#benches) kernel assembly for an entire fleet
+/// instead of O(nodes × guests).
+pub struct GuestFactory {
+    scale: u64,
+    ram_bytes: usize,
+    templates: BTreeMap<String, GuestVm>,
+    assemblies: u64,
+}
+
+impl GuestFactory {
+    pub fn new(scale: u64, ram_bytes: usize) -> GuestFactory {
+        GuestFactory { scale, ram_bytes, templates: BTreeMap::new(), assemblies: 0 }
+    }
+
+    /// Upper bound on image assemblies this factory has caused: 3 per
+    /// template (firmware + hypervisor + kernel) and 1 per VMID rebind
+    /// (an over-count — rebinds to an already-seen VMID are served from
+    /// the `sw` image cache). Kept factory-local so tests stay exact under
+    /// a parallel test harness, unlike the global [`sw::assembly_count`].
+    pub fn assemblies(&self) -> u64 {
+        self.assemblies
+    }
+
+    /// One tenant, forked from the benchmark's template world (which is
+    /// assembled on first use).
+    pub fn guest(&mut self, id: usize, bench: &str, vmid: u16) -> Result<GuestVm> {
+        if !self.templates.contains_key(bench) {
+            let t = GuestVm::new(id, bench, self.scale, self.ram_bytes)?;
+            self.assemblies += 3;
+            self.templates.insert(bench.to_string(), t);
+        }
+        if self.templates[bench].vmid != vmid {
+            self.assemblies += 1;
+        }
+        self.templates[bench].fork(id, vmid)
+    }
+
+    /// A consolidated node: `count` guests cycling through `benches` with
+    /// node-local VMIDs id+1 — the same layout as [`build_node`], minus
+    /// the per-guest assembly cost.
+    pub fn node(&mut self, benches: &[&str], count: usize) -> Result<Vec<GuestVm>> {
+        (0..count).map(|id| self.guest(id, benches[id % benches.len()], id as u16 + 1)).collect()
     }
 }
 
@@ -156,23 +237,33 @@ impl FlushPolicy {
 /// World-switch accounting.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SwitchStats {
-    /// Half-switches performed (one in + one out per slice).
-    pub world_switches: u64,
+    /// Half-switches performed (one switch-in plus one switch-out per
+    /// scheduled slice).
+    pub half_switches: u64,
     /// Host nanoseconds spent inside the switch engine.
     pub switch_host_ns: u128,
 }
 
 impl SwitchStats {
-    /// Mean host nanoseconds per half-switch. Note: measured in-line with
-    /// two clock reads around each half-switch, so it includes timer
-    /// overhead comparable to the swap itself — treat as an upper bound;
-    /// `benches/vmm_switch.rs` amortizes the timer over a tight loop for
-    /// the precise figure.
+    /// Full world switches — one in+out pair per scheduled slice. This is
+    /// the figure [`ScheduleOutcome`] and the CLI report; a previous
+    /// version reported the half-switch count under this name, inflating
+    /// it 2×.
+    pub fn world_switches(&self) -> u64 {
+        self.half_switches / 2
+    }
+
+    /// Mean host nanoseconds per full world switch (in + out). Note:
+    /// measured in-line with two clock reads around each half-switch, so
+    /// it includes timer overhead comparable to the swap itself — treat as
+    /// an upper bound; `benches/vmm_switch.rs` amortizes the timer over a
+    /// tight loop for the precise figure.
     pub fn avg_ns(&self) -> f64 {
-        if self.world_switches == 0 {
+        let full = self.world_switches();
+        if full == 0 {
             0.0
         } else {
-            self.switch_host_ns as f64 / self.world_switches as f64
+            self.switch_host_ns as f64 / full as f64
         }
     }
 }
@@ -183,7 +274,9 @@ pub struct ScheduleOutcome {
     pub total_ticks: u64,
     pub completed: usize,
     pub all_passed: bool,
+    /// Full world switches (in+out pairs), one per scheduled slice.
     pub world_switches: u64,
+    /// Mean host nanoseconds per full world switch.
     pub avg_switch_ns: f64,
 }
 
@@ -257,7 +350,7 @@ impl VmmScheduler {
                 // keyed by generation only — always bump.
                 FlushPolicy::FlushVmid | FlushPolicy::Partitioned => m.core.tlb.bump_generation(),
             }
-            self.switch.world_switches += 1;
+            self.switch.half_switches += 1;
             self.switch.switch_host_ns += t0.elapsed().as_nanos();
 
             // ---- run one slice ----
@@ -272,7 +365,7 @@ impl VmmScheduler {
                 m.core.tlb.flush_vmid(self.guests[idx].vmid);
             }
             world_swap(m, &mut self.guests[idx]);
-            self.switch.world_switches += 1;
+            self.switch.half_switches += 1;
             self.switch.switch_host_ns += t1.elapsed().as_nanos();
 
             let g = &mut self.guests[idx];
@@ -295,7 +388,7 @@ impl VmmScheduler {
             total_ticks: self.total_ticks,
             completed,
             all_passed: completed == self.guests.len() && self.guests.iter().all(|g| g.passed()),
-            world_switches: self.switch.world_switches,
+            world_switches: self.switch.world_switches(),
             avg_switch_ns: self.switch.avg_ns(),
         }
     }
@@ -307,15 +400,11 @@ mod tests {
     use crate::asm::assemble;
     use crate::mem::{RAM_BASE, SYSCON_BASE, SYSCON_PASS};
 
-    /// A synthetic single-stage guest: counts to `n`, then powers off.
-    /// Exercises the scheduler/world-switch machinery without the full
-    /// hypervisor stack (those paths are covered by tests/vmm_isolation).
-    fn tiny_guest(id: usize, n: u64) -> GuestVm {
-        let src = format!(
-            "li t0, 0\n li t1, {n}\n loop:\n addi t0, t0, 1\n blt t0, t1, loop\n \
-             li t2, {SYSCON_BASE}\n li t3, {SYSCON_PASS}\n sw t3, 0(t2)\n wfi\n"
-        );
-        let img = assemble(&src, RAM_BASE).unwrap();
+    /// A synthetic single-stage guest running `src`. Exercises the
+    /// scheduler/world-switch machinery without the full hypervisor stack
+    /// (those paths are covered by tests/vmm_isolation and tests/fleet).
+    fn raw_guest(id: usize, src: &str) -> GuestVm {
+        let img = assemble(src, RAM_BASE).unwrap();
         let mut bus = Bus::new(1 << 20);
         bus.load_image(img.base, &img.data).unwrap();
         let mut vcpu = Vcpu::new(true);
@@ -333,6 +422,21 @@ mod tests {
             slices_run: 0,
             dev_countdown: 0,
         }
+    }
+
+    /// Counts to `n`, then powers off.
+    fn tiny_guest(id: usize, n: u64) -> GuestVm {
+        let src = format!(
+            "li t0, 0\n li t1, {n}\n loop:\n addi t0, t0, 1\n blt t0, t1, loop\n \
+             li t2, {SYSCON_BASE}\n li t3, {SYSCON_PASS}\n sw t3, 0(t2)\n wfi\n"
+        );
+        raw_guest(id, &src)
+    }
+
+    /// Parks in WFI forever (no interrupt source enabled): every scheduled
+    /// tick takes the WFI fast-forward path.
+    fn wfi_guest(id: usize) -> GuestVm {
+        raw_guest(id, "park: wfi\n j park\n")
     }
 
     #[test]
@@ -368,20 +472,81 @@ mod tests {
         // The short guest finished before the long one.
         let f = |i: usize| sched.guests[i].finished_at_total.unwrap();
         assert!(f(1) < f(0), "10k-count guest must finish before 50k-count");
-        // Switch accounting: two half-switches per slice.
-        assert_eq!(out.world_switches % 2, 0);
-        assert!(out.world_switches as u64 >= 2 * sched.guests.iter().map(|g| g.slices_run).sum::<u64>());
+        // Switch accounting: one *full* (in+out) world switch per slice —
+        // not the half-switch double count the report used to show.
+        let slices: u64 = sched.guests.iter().map(|g| g.slices_run).sum();
+        assert_eq!(out.world_switches, slices);
+        assert_eq!(sched.switch.half_switches, 2 * slices);
     }
 
     #[test]
     fn tick_budget_is_respected() {
+        // Busy guest: each tick is one instruction, the budget lands exact.
         let guests = vec![tiny_guest(0, u64::MAX / 2)]; // never finishes
         let mut sched = VmmScheduler::new(guests, 500, FlushPolicy::FlushAll);
         let mut m = Machine::new(1 << 20, true);
         let out = sched.run(&mut m, 10_000);
         assert!(!out.all_passed);
         assert_eq!(out.completed, 0);
-        assert!(out.total_ticks >= 10_000 && out.total_ticks < 11_000);
+        assert_eq!(out.total_ticks, 10_000, "busy guest: exact budget");
+
+        // WFI-parked guest: the timebase fast-forward must clamp to the
+        // slice budget instead of overshooting by up to TIME_DIVIDER-1
+        // ticks per slice (which let total_ticks exceed max_total_ticks).
+        let mut sched = VmmScheduler::new(vec![wfi_guest(0)], 500, FlushPolicy::FlushAll);
+        let mut m = Machine::new(1 << 20, true);
+        let out = sched.run(&mut m, 10_000);
+        assert_eq!(out.completed, 0);
+        assert_eq!(out.total_ticks, 10_000, "wfi guest: exact budget");
+    }
+
+    #[test]
+    fn checkpoint_fork_rebinds_vmid_only() {
+        let a = GuestVm::new(0, "bitcount", 1, crate::sw::GUEST_RAM_MIN).unwrap();
+        let b = a.fork(3, 4).unwrap();
+        assert_eq!(b.id, 3);
+        assert_eq!(b.vmid, 4);
+        assert_eq!(b.vcpu.hart.pc, a.vcpu.hart.pc);
+        assert!(b.exit.is_none());
+        // RAM is identical outside the hypervisor image slot, and the slot
+        // holds exactly the VMID-4 image.
+        let lo = (crate::sw::HV_BASE - RAM_BASE) as usize;
+        let hi = (crate::sw::HV_REGION_END - RAM_BASE) as usize;
+        assert!(a.bus.ram_bytes()[..lo] == b.bus.ram_bytes()[..lo]);
+        assert!(a.bus.ram_bytes()[hi..] == b.bus.ram_bytes()[hi..]);
+        let hv = crate::sw::hypervisor_image_with_vmid(4).unwrap();
+        assert!(b.bus.ram_bytes()[lo..lo + hv.data.len()] == hv.data[..]);
+        // Byte-identical to a world assembled for VMID 4 directly.
+        let fresh = GuestVm::new(3, "bitcount", 1, crate::sw::GUEST_RAM_MIN).unwrap();
+        assert_eq!(fresh.vmid, 4);
+        assert!(b.bus.ram_bytes() == fresh.bus.ram_bytes(), "fork differs from fresh world");
+    }
+
+    #[test]
+    fn fork_of_a_run_world_is_rejected() {
+        // A world that has executed (even without changing VMID) must not
+        // be forkable — the clone would inherit mid-run RAM and console.
+        let mut g = tiny_guest(0, 10);
+        g.stats.sim_ticks = 5;
+        assert!(g.fork(1, 1).is_err());
+        assert!(g.fork(1, 2).is_err());
+        g.stats.sim_ticks = 0;
+        g.bus.poweroff = Some(crate::mem::SYSCON_PASS);
+        assert!(g.fork(1, 2).is_err());
+    }
+
+    #[test]
+    fn factory_forks_are_cheaper_than_full_setup() {
+        let mut f = GuestFactory::new(1, crate::sw::GUEST_RAM_MIN);
+        let node1 = f.node(&["bitcount", "stringsearch"], 2).unwrap();
+        drop(node1);
+        let node2 = f.node(&["bitcount", "stringsearch"], 2).unwrap();
+        assert_eq!(node2.iter().map(|g| g.vmid).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(node2[1].bench, "stringsearch");
+        // Two templates (3 assemblies each), no rebinds needed here; full
+        // per-guest setup would have assembled ≥ 2 images (firmware +
+        // kernel) for each of the 4 guests.
+        assert!(f.assemblies() < 2 * 4, "forked {} vs full ≥ 8 assemblies", f.assemblies());
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Fleet engine end-to-end: checkpoint-forked construction of M×N full
+//! guest stacks, sharded execution across host threads, per-guest console
+//! equality with solo runs, and sharding-independence of the results.
+
+use hvsim::fleet::{console_mismatches, run_fleet, solo_consoles, FleetSpec};
+use hvsim::vmm::FlushPolicy;
+
+const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
+
+fn spec(nodes: usize, guests: usize, threads: usize) -> FleetSpec {
+    FleetSpec {
+        nodes,
+        guests_per_node: guests,
+        threads,
+        slice_ticks: 100_000,
+        policy: FlushPolicy::Partitioned,
+        benches: vec!["bitcount".into(), "stringsearch".into()],
+        scale: 1,
+        ram_bytes: RAM,
+        max_node_ticks: 8_000_000_000,
+        tlb_sets: 64,
+        tlb_ways: 4,
+    }
+}
+
+#[test]
+fn fleet_completes_and_consoles_match_solo() {
+    let s = spec(2, 2, 2);
+    let report = run_fleet(&s).unwrap();
+    assert!(
+        report.all_passed(),
+        "fleet guests failed: {:?}",
+        report.guests().map(|g| (g.node, g.id, g.bench.clone(), g.passed)).collect::<Vec<_>>()
+    );
+    assert_eq!(report.completed(), 4);
+    assert_eq!(report.nodes.len(), 2);
+
+    // Per-guest consoles byte-identical to solo runs: consolidation and
+    // sharding must be invisible to every tenant.
+    let solos = solo_consoles(&s).unwrap();
+    let bad = console_mismatches(&report, &solos);
+    assert!(bad.is_empty(), "console mismatches: {bad:?}");
+
+    // Fleet-level stats are well-formed.
+    assert_eq!(report.latencies().len(), 4);
+    let p50 = report.latency_percentile(0.50).unwrap();
+    let p99 = report.latency_percentile(0.99).unwrap();
+    assert!(p50 <= p99);
+    assert!(report.world_switches() > 0);
+    assert!(report.total_insts() > 0);
+
+    // Checkpoint-forked construction is cheaper than per-guest full setup:
+    // 2 templates (3 assemblies each) vs ≥ 2 assemblies (firmware +
+    // kernel) for each of the 4 guests.
+    let full_floor = 2 * s.total_guests() as u64;
+    assert!(
+        report.construct_assemblies < full_floor,
+        "forked construction cost {} assemblies, full setup needs ≥ {full_floor}",
+        report.construct_assemblies
+    );
+}
+
+#[test]
+fn fleet_results_are_sharding_independent() {
+    // The same fleet on 1 thread and on 2 threads must produce identical
+    // per-guest consoles and completion ticks — nodes are isolated, so
+    // host-side parallelism may only change wall-clock time.
+    let r1 = run_fleet(&spec(2, 2, 1)).unwrap();
+    let r2 = run_fleet(&spec(2, 2, 2)).unwrap();
+    assert!(r1.all_passed() && r2.all_passed());
+    assert_eq!(r1.threads, 1);
+    assert_eq!(r2.threads, 2);
+    let key = |r: &hvsim::fleet::FleetReport| {
+        r.guests()
+            .map(|g| (g.node, g.id, g.bench.clone(), g.finished_at_total, g.console.clone()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(key(&r1), key(&r2));
+    assert_eq!(r1.world_switches(), r2.world_switches());
+}

@@ -65,6 +65,30 @@ fn two_guests_interleaved_no_cross_guest_leakage() {
 }
 
 #[test]
+fn flush_policies_are_behavior_equivalent() {
+    // The three TLB policies differ only in flush cost, never in behavior:
+    // a mixed-bench node must produce identical per-guest consoles and
+    // identical completion ticks (hence completion order) under all of
+    // them. This is the correctness claim the fleet layer builds on.
+    let mut baseline: Option<(FlushPolicy, Vec<(String, Option<u64>)>)> = None;
+    for policy in [FlushPolicy::FlushAll, FlushPolicy::FlushVmid, FlushPolicy::Partitioned] {
+        let guests = build_node(&["bitcount", "stringsearch"], 1, 2, RAM).unwrap();
+        let mut sched = VmmScheduler::new(guests, 20_000, policy);
+        let mut m = Machine::new(RAM, true);
+        let out = m.run_scheduled(&mut sched, BUDGET);
+        assert!(out.all_passed, "{policy:?} failed: {:?}",
+            sched.guests.iter().map(|g| (g.bench.clone(), g.exit)).collect::<Vec<_>>());
+        let observed: Vec<(String, Option<u64>)> =
+            sched.guests.iter().map(|g| (g.console(), g.finished_at_total)).collect();
+        if let Some((base_policy, base)) = &baseline {
+            assert_eq!(base, &observed, "{policy:?} diverged from {base_policy:?}");
+        } else {
+            baseline = Some((policy, observed));
+        }
+    }
+}
+
+#[test]
 fn tlb_partitions_by_vmid_across_switches() {
     // Manual world switching (no flush at all): after running guest 0 then
     // guest 1, the shared TLB holds both partitions, keyed by VMID, and a
