@@ -13,7 +13,7 @@ include!("bench_common.rs");
 use std::time::Instant;
 
 use hvsim::fleet::{run_fleet, FleetSpec};
-use hvsim::vmm::{build_node, FlushPolicy, GuestFactory};
+use hvsim::vmm::{build_node, FlushPolicy, GuestFactory, SchedKind};
 
 const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
 const NODES: usize = 8;
@@ -26,6 +26,7 @@ fn spec(threads: usize, scale: u64) -> FleetSpec {
         threads,
         slice_ticks: 200_000,
         policy: FlushPolicy::Partitioned,
+        sched: SchedKind::RoundRobin,
         benches: vec!["qsort".into(), "bitcount".into()],
         scale,
         ram_bytes: RAM,

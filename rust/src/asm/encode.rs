@@ -108,7 +108,7 @@ fn expand_li(rd: u32, imm: i64) -> Vec<u32> {
     if (-2048..=2047).contains(&imm) {
         return vec![enc_i(imm, 0, 0b000, rd, 0b0010011)]; // addi rd, x0, imm
     }
-    if imm >= i32::MIN as i64 && imm <= i32::MAX as i64 {
+    if (i32::MIN as i64..=i32::MAX as i64).contains(&imm) {
         let hi = ((imm as i32 as i64 + 0x800) >> 12) & 0xfffff;
         let lo = imm - (((hi << 12) as i32) as i64); // residual after sign-extended lui
         let mut v = vec![enc_u(hi as u64, rd, 0b0110111)]; // lui

@@ -70,7 +70,7 @@ pub fn run_one(cfg: &SimConfig, bench: &str, vm: bool, with_trace: bool) -> Resu
     }
     // ---- boot phase (excluded from measurement, §4.1) ----
     let banner_len = BOOT_BANNER.len();
-    let r = m.run_until(cfg.max_ticks, |m| m.bus.uart.output.len() >= banner_len);
+    let r = m.run_pred(cfg.max_ticks, |m| m.bus.uart.output.len() >= banner_len);
     if r != ExitReason::Predicate {
         bail!("{bench} vm={vm}: boot did not reach banner ({r:?}); console:\n{}", m.console());
     }
@@ -332,7 +332,7 @@ pub fn timing_table(rows: &[(String, bool, TraceReport)]) -> String {
 
 // ------------------------------------------------- consolidation sweep
 
-use crate::vmm::{self, FlushPolicy, VmmScheduler};
+use crate::vmm::{self, FlushPolicy, SchedKind, VmmScheduler};
 
 /// One row of the consolidation sweep: N guests time-sliced onto one hart.
 #[derive(Clone, Debug)]
@@ -373,10 +373,12 @@ fn run_node(
     count: usize,
     slice_ticks: u64,
     policy: FlushPolicy,
+    sched_kind: &SchedKind,
     max_ticks: u64,
 ) -> Result<VmmScheduler> {
     let guests = vmm::build_node(benches, cfg.scale, count, GUEST_NODE_RAM)?;
-    let mut sched = VmmScheduler::new(guests, slice_ticks, policy);
+    let sched_policy = sched_kind.build(slice_ticks, &guests);
+    let mut sched = VmmScheduler::with_policy(guests, policy, sched_policy);
     let mut m = Machine::new(GUEST_NODE_RAM, true);
     m.core.tlb = crate::mmu::Tlb::new(cfg.tlb_sets as usize, cfg.tlb_ways as usize);
     m.run_scheduled(&mut sched, max_ticks);
@@ -442,6 +444,7 @@ pub fn consolidation_sweep(
     counts: &[usize],
     slice_ticks: u64,
     policy: FlushPolicy,
+    sched_kind: &SchedKind,
 ) -> Result<Vec<ConsolidationRow>> {
     if benches.is_empty() {
         bail!("consolidation sweep needs at least one benchmark");
@@ -455,7 +458,7 @@ pub fn consolidation_sweep(
         if solo.contains_key(bench) {
             continue;
         }
-        let sched = run_node(cfg, &[bench], 1, slice_ticks, policy, cfg.max_ticks)?;
+        let sched = run_node(cfg, &[bench], 1, slice_ticks, policy, sched_kind, cfg.max_ticks)?;
         let g = &sched.guests[0];
         let Some(ticks) = g.finished_at_total.filter(|_| g.passed()) else {
             bail!("solo baseline {bench} did not pass ({:?}); console:\n{}", g.exit, g.console());
@@ -474,23 +477,38 @@ pub fn consolidation_sweep(
             continue;
         }
         let budget = cfg.max_ticks.saturating_mul(count as u64);
-        let sched = run_node(cfg, benches, count, slice_ticks, policy, budget)?;
+        let row_kind = fair_share_kind(sched_kind, &solo, count);
+        let sched = run_node(cfg, benches, count, slice_ticks, policy, &row_kind, budget)?;
         rows.push(node_row(&sched, count, slice_ticks, policy, &solo));
     }
     Ok(rows)
 }
 
+/// SLO fair-share defaulting for one consolidation row, via
+/// [`SchedKind::fill_fair_share`] — without it, an empty `SloDeadline`
+/// target map would degenerate EDF into index-order FIFO.
+fn fair_share_kind(
+    kind: &SchedKind,
+    solo: &BTreeMap<String, (u64, String)>,
+    count: usize,
+) -> SchedKind {
+    let mut kind = kind.clone();
+    kind.fill_fair_share(solo.iter().map(|(b, (ticks, _))| (b.as_str(), *ticks)), count as u64);
+    kind
+}
+
 /// Render the consolidation table (per-guest slowdown + world-switch cost).
 /// Each row shows the workload mix it actually ran — the 1-guest baseline
 /// row runs only the first benchmark of the requested mix.
-pub fn consolidation_table(rows: &[ConsolidationRow], benches: &[&str]) -> String {
+pub fn consolidation_table(rows: &[ConsolidationRow], benches: &[&str], sched: &SchedKind) -> String {
     let mut s = format!(
         "Consolidation sweep — guests per node vs per-guest slowdown\n\
-         requested mix: {} | slice: {} ticks | TLB policy: {}\n\
+         requested mix: {} | slice: {} ticks | TLB policy: {} | sched: {}\n\
          guests  mix                pass  cksum  total_ticks   avg_finish  slowdown  switches  switch(ns)  tlb_misses\n",
         benches.join("+"),
         rows.first().map(|r| r.slice_ticks).unwrap_or(0),
         rows.first().map(|r| r.policy.name()).unwrap_or("-"),
+        sched.name(),
     );
     for r in rows {
         s.push_str(&format!(
@@ -527,7 +545,7 @@ pub fn fleet_table(
 ) -> String {
     let mut s = format!(
         "Fleet — {} nodes × {} guests (mix {}), {} threads\n\
-         slice: {} ticks | TLB policy: {}\n\
+         slice: {} ticks | TLB policy: {} | sched: {}\n\
          node  pass   total_ticks     switches  switch(ns)   host(s)\n",
         spec.nodes,
         spec.guests_per_node,
@@ -535,6 +553,7 @@ pub fn fleet_table(
         report.threads,
         spec.slice_ticks,
         spec.policy.name(),
+        spec.sched.name(),
     );
     for n in &report.nodes {
         let passed = n.guests.iter().filter(|g| g.passed).count();
@@ -688,6 +707,7 @@ mod tests {
             threads: 1,
             slice_ticks: 100,
             policy: FlushPolicy::Partitioned,
+            sched: crate::vmm::SchedKind::RoundRobin,
             benches: vec!["qsort".into()],
             scale: 1,
             ram_bytes: 1 << 20,

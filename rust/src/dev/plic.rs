@@ -74,7 +74,7 @@ impl Plic {
                     _ => 0,
                 }
             }
-            o if o >= ENABLE_BASE && o < CONTEXT_BASE => {
+            o if (ENABLE_BASE..CONTEXT_BASE).contains(&o) => {
                 let ctx = ((o - ENABLE_BASE) / ENABLE_STRIDE) as usize;
                 if ctx < 2 {
                     self.enable[ctx] as u64
@@ -82,7 +82,7 @@ impl Plic {
                     0
                 }
             }
-            o if o >= PENDING_BASE && o < ENABLE_BASE => self.pending as u64,
+            o if (PENDING_BASE..ENABLE_BASE).contains(&o) => self.pending as u64,
             o => {
                 let src = (o - PRIORITY_BASE) / 4;
                 if (src as usize) < NSRC {
@@ -122,7 +122,7 @@ impl Plic {
                     _ => {}
                 }
             }
-            o if o >= ENABLE_BASE && o < CONTEXT_BASE => {
+            o if (ENABLE_BASE..CONTEXT_BASE).contains(&o) => {
                 let ctx = ((o - ENABLE_BASE) / ENABLE_STRIDE) as usize;
                 if ctx < 2 {
                     self.enable[ctx] = val as u32;

@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 
 use crate::mmu::Tlb;
 use crate::sim::Machine;
-use crate::vmm::{FlushPolicy, GuestFactory, GuestVm, VmmScheduler};
+use crate::vmm::{FlushPolicy, GuestFactory, GuestVm, SchedKind, VmmScheduler};
 
 /// Everything that defines a fleet run.
 #[derive(Clone, Debug)]
@@ -35,9 +35,12 @@ pub struct FleetSpec {
     pub guests_per_node: usize,
     /// Host worker threads (K); clamped to the node count.
     pub threads: usize,
-    /// Scheduler time slice, in ticks.
+    /// Scheduler time slice, in ticks (base slice for weighted policies).
     pub slice_ticks: u64,
+    /// TLB hygiene on world switch.
     pub policy: FlushPolicy,
+    /// Scheduling policy; instantiated per node via [`SchedKind::build`].
+    pub sched: SchedKind,
     /// Benchmark mix; guest i of every node runs `benches[i % len]`.
     pub benches: Vec<String>,
     pub scale: u64,
@@ -183,7 +186,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
     // ---- checkpoint-forked construction ----
     let t0 = Instant::now();
     let mut factory = GuestFactory::new(spec.scale, spec.ram_bytes);
-    let mut jobs: Vec<Mutex<Option<(usize, Vec<GuestVm>)>>> = Vec::with_capacity(spec.nodes);
+    let mut jobs = Vec::with_capacity(spec.nodes);
     for node in 0..spec.nodes {
         jobs.push(Mutex::new(Some((node, factory.node(&benches, spec.guests_per_node)?))));
     }
@@ -204,7 +207,8 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                     break;
                 }
                 let (node, guests) = jobs[i].lock().unwrap().take().expect("each job runs once");
-                let mut sched = VmmScheduler::new(guests, spec.slice_ticks, spec.policy);
+                let policy = spec.sched.build(spec.slice_ticks, &guests);
+                let mut sched = VmmScheduler::with_policy(guests, spec.policy, policy);
                 let mut m = Machine::new(spec.ram_bytes, true);
                 m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
                 let t_node = Instant::now();
@@ -242,11 +246,21 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
     Ok(FleetReport { nodes, threads, construct_seconds, construct_assemblies, wall_seconds })
 }
 
-/// Solo baseline consoles: each distinct benchmark run alone on a 1-guest
-/// node with the spec's slice/policy/TLB. The fleet's correctness claim is
+/// One benchmark's solo (1-guest node) baseline: the console every fleet
+/// guest must reproduce byte-for-byte, and the completion ticks the SLO
+/// scheduler derives fair-share latency targets from.
+#[derive(Clone, Debug)]
+pub struct SoloBaseline {
+    pub console: String,
+    pub ticks: u64,
+}
+
+/// Solo baselines: each distinct benchmark run alone on a 1-guest node
+/// with the spec's slice/policy/TLB (scheduling policy is irrelevant for
+/// one guest, so round-robin is used). The fleet's correctness claim is
 /// that every fleet guest's console is byte-identical to these.
-pub fn solo_consoles(spec: &FleetSpec) -> Result<BTreeMap<String, String>> {
-    let mut out = BTreeMap::new();
+pub fn solo_baselines(spec: &FleetSpec) -> Result<BTreeMap<String, SoloBaseline>> {
+    let mut out: BTreeMap<String, SoloBaseline> = BTreeMap::new();
     for bench in &spec.benches {
         if out.contains_key(bench) {
             continue;
@@ -257,12 +271,18 @@ pub fn solo_consoles(spec: &FleetSpec) -> Result<BTreeMap<String, String>> {
         m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
         m.run_scheduled(&mut sched, spec.max_node_ticks);
         let g = &sched.guests[0];
-        if !g.passed() {
+        let Some(ticks) = g.finished_at_total.filter(|_| g.passed()) else {
             bail!("solo baseline {bench} failed ({:?}); console:\n{}", g.exit, g.console());
-        }
-        out.insert(bench.clone(), g.console());
+        };
+        out.insert(bench.clone(), SoloBaseline { console: g.console(), ticks });
     }
     Ok(out)
+}
+
+/// Console half of [`solo_baselines`] (compat surface for callers that
+/// only byte-check consoles).
+pub fn solo_consoles(spec: &FleetSpec) -> Result<BTreeMap<String, String>> {
+    Ok(solo_baselines(spec)?.into_iter().map(|(k, v)| (k, v.console)).collect())
 }
 
 /// Compare every fleet guest's console with its solo baseline; returns
@@ -296,6 +316,7 @@ mod tests {
             threads: 2,
             slice_ticks: 1_000,
             policy: FlushPolicy::Partitioned,
+            sched: SchedKind::RoundRobin,
             benches: vec!["bitcount".into()],
             scale: 1,
             ram_bytes: crate::sw::GUEST_RAM_MIN,

@@ -14,9 +14,11 @@
 //!   kernel, MiBench-analog benchmarks).
 //! - [`sim`]: machine assembly, the tick loop, stats and checkpoints.
 //! - [`vmm`]: the multi-guest VMM layer — vCPU world snapshots, the
-//!   world-switch engine with VMID-partitioned TLB policies, and the
-//!   round-robin scheduler that turns one hart into a consolidated
-//!   multi-tenant "cloud node" (consolidation-sweep experiment).
+//!   world-switch engine with VMID-partitioned TLB policies, the
+//!   KVM-style `Vcpu::run -> VmExit` execution boundary and the pluggable
+//!   `SchedPolicy` schedulers (round-robin, SLO deadline, weighted slice)
+//!   that turn one hart into a consolidated multi-tenant "cloud node"
+//!   (consolidation-sweep experiment).
 //! - [`fleet`]: the scale-out layer — M consolidated nodes sharded across
 //!   K host threads, built from checkpoint-forked guest worlds
 //!   (`hvsim fleet`, fleet-scaling experiment).

@@ -5,9 +5,11 @@
 //!             [--stats] [--echo] [--max-ticks N]
 //! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
 //! hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--scale N]
-//!             [--policy all|vmid|none] [--out FILE]
+//!             [--policy all|vmid|none] [--sched rr|slo|weighted:W,...]
+//!             [--slo BENCH=TICKS,...] [--out FILE]
 //! hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T]
 //!             [--bench A,B] [--scale N] [--policy all|vmid|none]
+//!             [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]
 //!             [--out FILE]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
 //! hvsim boot  [--config FILE]
@@ -23,6 +25,7 @@ use hvsim::coordinator;
 use hvsim::runtime::TimingEngine;
 use hvsim::sim::ExitReason;
 use hvsim::sw;
+use hvsim::vmm::SchedKind;
 
 struct Args {
     flags: std::collections::BTreeMap<String, String>,
@@ -84,13 +87,67 @@ fn load_cfg(args: &Args) -> Result<SimConfig> {
     Ok(cfg)
 }
 
-/// Shared `--policy` parsing for the vmm/fleet subcommands.
+/// Shared `--policy` (TLB flush) parsing for the vmm/fleet subcommands.
+/// The `FromStr` error names the valid choices.
 fn parse_policy(args: &Args) -> Result<hvsim::vmm::FlushPolicy> {
-    Ok(match args.get("policy") {
-        None => hvsim::vmm::FlushPolicy::Partitioned,
-        Some(p) => hvsim::vmm::FlushPolicy::parse(p)
-            .with_context(|| format!("unknown --policy '{p}' (all|vmid|none)"))?,
-    })
+    match args.get("policy") {
+        None => Ok(hvsim::vmm::FlushPolicy::Partitioned),
+        Some(p) => p.parse().context("bad --policy"),
+    }
+}
+
+/// Shared `--sched` (scheduling policy) parsing for the vmm/fleet
+/// subcommands. The `FromStr` error names the valid choices.
+fn parse_sched(args: &Args) -> Result<hvsim::vmm::SchedKind> {
+    match args.get("sched") {
+        None => Ok(hvsim::vmm::SchedKind::RoundRobin),
+        Some(s) => s.parse().context("bad --sched"),
+    }
+}
+
+/// Validate `--slo` overrides against the benchmark mix and fold them
+/// into an SLO scheduling policy. Explicit targets win over the
+/// fair-share defaulting applied later ([`SchedKind::fill_fair_share`]
+/// only fills missing benchmarks). Shared by the vmm and fleet
+/// subcommands so the `--slo` rules cannot diverge.
+fn apply_slo_overrides(
+    sched: &mut SchedKind,
+    overrides: std::collections::BTreeMap<String, u64>,
+    benches: &[String],
+) -> Result<()> {
+    if overrides.is_empty() {
+        return Ok(());
+    }
+    for bench in overrides.keys() {
+        if !benches.contains(bench) {
+            bail!("--slo names unknown benchmark '{bench}' (mix: {})", benches.join(","));
+        }
+    }
+    match sched {
+        SchedKind::SloDeadline { targets } => {
+            targets.extend(overrides);
+            Ok(())
+        }
+        _ => bail!("--slo requires --sched slo"),
+    }
+}
+
+/// Optional `--slo bench=ticks,bench=ticks` latency targets for
+/// `--sched slo` (unset benchmarks fall back to solo-derived fair-share
+/// targets in the fleet subcommand).
+fn parse_slo_targets(args: &Args) -> Result<std::collections::BTreeMap<String, u64>> {
+    let mut targets = std::collections::BTreeMap::new();
+    if let Some(spec) = args.get("slo") {
+        for item in spec.split(',').filter(|s| !s.is_empty()) {
+            let (bench, ticks) = item
+                .split_once('=')
+                .with_context(|| format!("--slo entry '{item}' is not bench=ticks"))?;
+            let ticks: u64 =
+                ticks.parse().with_context(|| format!("--slo entry '{item}': bad tick count"))?;
+            targets.insert(bench.to_string(), ticks);
+        }
+    }
+    Ok(targets)
 }
 
 /// Shared `--bench` parsing (comma-separated mix, two distinct guest
@@ -209,8 +266,10 @@ fn cmd_vmm(args: &Args) -> Result<()> {
         counts.push(max_guests);
     }
 
-    let rows = coordinator::consolidation_sweep(&cfg, &benches, &counts, slice, policy)?;
-    let mut out = coordinator::consolidation_table(&rows, &benches);
+    let mut sched = parse_sched(args)?;
+    apply_slo_overrides(&mut sched, parse_slo_targets(args)?, &benches_owned)?;
+    let rows = coordinator::consolidation_sweep(&cfg, &benches, &counts, slice, policy, &sched)?;
+    let mut out = coordinator::consolidation_table(&rows, &benches, &sched);
     let all_ok = rows.iter().all(|r| r.all_passed && r.checksums_ok);
     out.push('\n');
     if all_ok {
@@ -241,13 +300,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     let slice = args.u64("slice")?.unwrap_or(200_000).max(1);
     let policy = parse_policy(args)?;
+    let mut sched = parse_sched(args)?;
     let benches = parse_benches(args)?;
-    let spec = hvsim::fleet::FleetSpec {
+    apply_slo_overrides(&mut sched, parse_slo_targets(args)?, &benches)?;
+    let mut spec = hvsim::fleet::FleetSpec {
         nodes,
         guests_per_node: guests,
         threads,
         slice_ticks: slice,
         policy,
+        sched,
         benches,
         scale: cfg.scale,
         ram_bytes: coordinator::GUEST_NODE_RAM,
@@ -255,6 +317,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         tlb_sets: cfg.tlb_sets as usize,
         tlb_ways: cfg.tlb_ways as usize,
     };
+
+    // Solo baselines up front: the byte-check oracle for every fleet
+    // guest's console, and the work estimate the SLO scheduler's default
+    // fair-share targets (solo ticks × guests per node) derive from.
+    // Explicit --slo targets (already merged) win over the derived ones.
+    let solos = hvsim::fleet::solo_baselines(&spec)?;
+    spec.sched
+        .fill_fair_share(solos.iter().map(|(b, s)| (b.as_str(), s.ticks)), guests as u64);
 
     // Full per-guest construction cost, for the checkpoint-fork
     // comparison. Counted in firmware+kernel assemblies only: the per-VMID
@@ -293,17 +363,63 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     } else {
         None
     };
-    // Solo baselines: every fleet guest's console must be byte-identical.
-    let solos = hvsim::fleet::solo_consoles(&spec)?;
-    let mismatches = hvsim::fleet::console_mismatches(&report, &solos);
+    // Every fleet guest's console must be byte-identical to its solo run.
+    let solo_consoles: std::collections::BTreeMap<String, String> =
+        solos.iter().map(|(k, v)| (k.clone(), v.console.clone())).collect();
+    let mismatches = hvsim::fleet::console_mismatches(&report, &solo_consoles);
 
-    let out = coordinator::fleet_table(
+    let mut out = coordinator::fleet_table(
         &spec,
         &report,
         baseline.as_ref(),
         Some(full_construct),
         &mismatches,
     );
+
+    // The SLO scheduler is compared against a round-robin run of the
+    // identical fleet, and hard-bails if completion p99 regresses (CI
+    // smokes on this). Other non-RR policies skip the comparison — an
+    // extra whole-fleet run is not worth one informational line, and
+    // weighted-slice deliberately skews slices anyway.
+    let mut p99_regressed = None;
+    if matches!(spec.sched, SchedKind::SloDeadline { .. }) {
+        let mut rr_spec = spec.clone();
+        rr_spec.sched = SchedKind::RoundRobin;
+        let rr = hvsim::fleet::run_fleet(&rr_spec)?;
+        if rr.all_passed() {
+            let (p50, p99) = (
+                report.latency_percentile(0.50).unwrap_or(0),
+                report.latency_percentile(0.99).unwrap_or(0),
+            );
+            let (rr_p50, rr_p99) = (
+                rr.latency_percentile(0.50).unwrap_or(0),
+                rr.latency_percentile(0.99).unwrap_or(0),
+            );
+            out.push_str(&format!(
+                "sched {} vs round-robin: completion p50 {} vs {} ({:+.2}%), p99 {} vs {} ({:+.2}%)\n",
+                spec.sched.name(),
+                p50,
+                rr_p50,
+                100.0 * (p50 as f64 - rr_p50 as f64) / rr_p50.max(1) as f64,
+                p99,
+                rr_p99,
+                100.0 * (p99 as f64 - rr_p99 as f64) / rr_p99.max(1) as f64,
+            ));
+            if p99 > rr_p99 {
+                p99_regressed = Some((p99, rr_p99));
+            }
+        } else {
+            // Percentiles over a partially-finished baseline would compare
+            // different populations; with the SLO fleet fully passed (or
+            // bailing below on its own), a failing RR baseline means the
+            // SLO run was no worse — skip the gate, say so.
+            out.push_str(
+                "sched slo-deadline vs round-robin: baseline did not finish within budget; \
+                 p99 gate skipped\n",
+            );
+        }
+    }
+
     match args.get("out") {
         Some(path) => std::fs::write(path, &out)?,
         None => print!("{out}"),
@@ -313,6 +429,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     if !mismatches.is_empty() {
         bail!("fleet run failed: {} console(s) diverged from solo runs", mismatches.len());
+    }
+    if let Some((p99, rr_p99)) = p99_regressed {
+        bail!(
+            "fleet run failed: {} p99 completion latency {} regressed past round-robin {}",
+            spec.sched.name(),
+            p99,
+            rr_p99
+        );
     }
     if spec.total_guests() > spec.benches.len() && report.construct_assemblies >= full_construct.1 {
         bail!(
@@ -355,8 +479,8 @@ fn usage() -> ! {
         "hvsim — gem5-style RISC-V simulator with the H extension\n\
          usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
-         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none]\n  \
-         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none]\n  \
+         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]\n  \
+         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
          hvsim boot  [--bench NAME]\n  hvsim list"
     );

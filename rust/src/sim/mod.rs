@@ -15,7 +15,11 @@ use crate::mem::Bus;
 /// (instructions), mimicking a 10 MHz timebase on a ~1 GIPS core.
 pub const TIME_DIVIDER: u64 = 100;
 
-/// Why a run loop returned.
+/// Why a run loop returned — the legacy scalar exit, kept for the
+/// [`Machine::run`]/[`Machine::run_pred`] surfaces and the checkpoint
+/// tooling. The structured boundary (and the single underlying run loop)
+/// is [`crate::vmm::VmExit`] via [`crate::vmm::Vcpu::run`]; this enum is
+/// a projection of it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExitReason {
     /// SYSCON poweroff: code 0x5555 = pass, anything else = fail.
@@ -74,12 +78,13 @@ impl Machine {
     }
 
     /// One tick whose WFI fast-forward never advances `sim_ticks` past
-    /// `limit`. `run`/`run_until` pass their absolute tick budget here so
-    /// a parked machine lands exactly on the budget instead of overshooting
-    /// by up to `TIME_DIVIDER - 1` ticks — which would let a scheduler
-    /// slice leak past `VmmScheduler::max_total_ticks`.
+    /// `limit`. The [`crate::vmm::Vcpu::run`] exit loop (and through it
+    /// every run surface) passes its absolute tick budget here so a parked
+    /// machine lands exactly on the budget instead of overshooting by up
+    /// to `TIME_DIVIDER - 1` ticks — which would let a scheduler slice
+    /// leak past the node budget.
     #[inline]
-    fn tick_bounded(&mut self, limit: u64) -> StepEvent {
+    pub(crate) fn tick_bounded(&mut self, limit: u64) -> StepEvent {
         // Device timebase (coarse: every TIME_DIVIDER ticks).
         if self.device_countdown == 0 {
             self.device_countdown = TIME_DIVIDER;
@@ -145,13 +150,35 @@ impl Machine {
         ev
     }
 
-    /// Run until poweroff or `max_ticks`.
+    /// Run until poweroff or `max_ticks`. A thin projection of the
+    /// structured boundary: the loop itself lives in
+    /// [`crate::vmm::Vcpu::run`]; the latched SYSCON code supplies the
+    /// `PowerOff` payload.
     pub fn run(&mut self, max_ticks: u64) -> ExitReason {
+        use crate::vmm::{RunBudget, Vcpu, VmExit};
+        match Vcpu::run(self, RunBudget::ticks(max_ticks)) {
+            VmExit::GuestDone { .. } => {
+                ExitReason::PowerOff(self.bus.poweroff.expect("GuestDone implies a latched code"))
+            }
+            _ => ExitReason::Limit,
+        }
+    }
+
+    /// Run until a predicate over the machine fires (checked every tick,
+    /// and before the first one). Exit precedence matches the
+    /// [`crate::vmm::VmExit`] mapping: poweroff, then predicate, then tick
+    /// budget — a predicate that already holds is reported as `Predicate`
+    /// even when the budget is simultaneously exhausted (the legacy
+    /// `run_until` conflated that case into `Limit`).
+    pub fn run_pred(&mut self, max_ticks: u64, mut pred: impl FnMut(&Machine) -> bool) -> ExitReason {
         let start = Instant::now();
         let limit = self.stats.sim_ticks.saturating_add(max_ticks);
         let reason = loop {
             if let Some(code) = self.bus.poweroff {
                 break ExitReason::PowerOff(code);
+            }
+            if pred(self) {
+                break ExitReason::Predicate;
             }
             if self.stats.sim_ticks >= limit {
                 break ExitReason::Limit;
@@ -162,24 +189,13 @@ impl Machine {
         reason
     }
 
-    /// Run until a predicate over the machine fires (checked every tick).
-    pub fn run_until(&mut self, max_ticks: u64, mut pred: impl FnMut(&Machine) -> bool) -> ExitReason {
-        let start = Instant::now();
-        let limit = self.stats.sim_ticks.saturating_add(max_ticks);
-        let reason = loop {
-            if let Some(code) = self.bus.poweroff {
-                break ExitReason::PowerOff(code);
-            }
-            if self.stats.sim_ticks >= limit {
-                break ExitReason::Limit;
-            }
-            self.tick_bounded(limit);
-            if pred(self) {
-                break ExitReason::Predicate;
-            }
-        };
-        self.stats.host_time += start.elapsed();
-        reason
+    /// Deprecated name for [`Machine::run_pred`], kept one release as a
+    /// deprecation cycle for out-of-tree callers of the historical
+    /// signature (all in-repo callers are migrated; the equivalence is
+    /// pinned by `run_until_shim_matches_run_pred`).
+    #[deprecated(since = "0.1.0", note = "use Machine::run_pred (same exit semantics as the VmExit mapping)")]
+    pub fn run_until(&mut self, max_ticks: u64, pred: impl FnMut(&Machine) -> bool) -> ExitReason {
+        self.run_pred(max_ticks, pred)
     }
 
     /// Run as a consolidated multi-tenant node: the scheduler world-switches
@@ -257,6 +273,34 @@ mod tests {
         // resumed run lands exactly on its budget too.
         assert_eq!(m.run(250), ExitReason::Limit);
         assert_eq!(m.stats.sim_ticks, 1250);
+    }
+
+    #[test]
+    fn run_pred_predicate_beats_tick_budget() {
+        // A predicate that already holds is Predicate, not Limit — even
+        // with a zero budget (the legacy run_until reported Limit here,
+        // conflating the two exits).
+        let mut m = boot("loop: j loop\n");
+        assert_eq!(m.run_pred(0, |_| true), ExitReason::Predicate);
+        assert_eq!(m.stats.sim_ticks, 0, "entry-true predicate runs no ticks");
+        // A predicate satisfied exactly on the last budgeted tick is still
+        // a predicate hit.
+        assert_eq!(m.run_pred(10, |m| m.stats.sim_ticks >= 10), ExitReason::Predicate);
+        assert_eq!(m.stats.sim_ticks, 10);
+        // And an unsatisfiable predicate is a Limit.
+        assert_eq!(m.run_pred(5, |_| false), ExitReason::Limit);
+        assert_eq!(m.stats.sim_ticks, 15);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn run_until_shim_matches_run_pred() {
+        let mut a = boot("loop: j loop\n");
+        let mut b = boot("loop: j loop\n");
+        let ra = a.run_pred(1_000, |m| m.stats.sim_ticks >= 123);
+        let rb = b.run_until(1_000, |m| m.stats.sim_ticks >= 123);
+        assert_eq!(ra, rb);
+        assert_eq!(a.stats.sim_ticks, b.stats.sim_ticks);
     }
 
     #[test]

@@ -307,7 +307,7 @@ mod tests {
         setup_guest(&mut m, "bitcount", 1).unwrap();
         // Boot until the hypervisor programs hgatp — rebinding now would
         // leave the live VMID inconsistent with the image.
-        let r = m.run_until(50_000_000, |m| m.core.hart.csr.hgatp != 0);
+        let r = m.run_pred(50_000_000, |m| m.core.hart.csr.hgatp != 0);
         assert_eq!(r, ExitReason::Predicate);
         assert!(rebind_guest_vmid(&mut m.bus, &m.core.hart, 2).is_err());
     }

@@ -1,0 +1,327 @@
+//! The KVM-style exit-reason boundary: one run loop ([`Vcpu::run`]) that
+//! drives the world currently resident on a [`Machine`] until something a
+//! VMM cares about happens, reported as a structured [`VmExit`].
+//!
+//! This is the single execution entry point the scheduler stack is built
+//! on. The legacy surfaces are thin shims over it:
+//! [`Machine::run`](crate::sim::Machine::run) maps `VmExit` back to the
+//! scalar [`sim::ExitReason`](crate::sim::ExitReason), and
+//! [`VmmScheduler::run`](super::VmmScheduler::run) consumes the exit
+//! stream through a [`SchedPolicy`](super::SchedPolicy) instead of poking
+//! at `Machine` internals. The shape follows production RISC-V
+//! hypervisors (Bao's per-trap dispatch, arceos' `Vcpu::run() ->
+//! ExitReason`): the vCPU run loop is mechanism, the reaction to each
+//! exit is policy.
+
+use std::time::Instant;
+
+use crate::cpu::StepEvent;
+use crate::isa::csr::irq;
+use crate::isa::ExceptionCause;
+use crate::mem::SYSCON_PASS;
+use crate::sim::{Machine, TIME_DIVIDER};
+
+use super::Vcpu;
+
+/// Why [`Vcpu::run`] returned control to the VMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VmExit {
+    /// The slice budget was consumed while the guest was still runnable.
+    SliceExpired,
+    /// The guest parked in WFI and the budget asked for halt exits
+    /// ([`RunBudget::wfi_exit`]). `parked_until` estimates the simulated
+    /// tick at which the guest's armed timer will wake it (`None` when no
+    /// wakeup source is armed — the guest sleeps forever).
+    Wfi { parked_until: Option<u64> },
+    /// The guest powered off via SYSCON; `passed` is true for the
+    /// `SYSCON_PASS` code. The raw code stays latched in `bus.poweroff`.
+    GuestDone { passed: bool },
+    /// The guest executed an environment call and the budget asked for
+    /// trap exits ([`RunBudget::trap_exit`]). The trap has already been
+    /// delivered architecturally; the exit is an observation point.
+    Ecall,
+    /// Any other guest exception under [`RunBudget::trap_exit`] (page
+    /// fault, access fault, illegal instruction, ...). Also already
+    /// delivered architecturally.
+    Fault,
+    /// The node-global tick budget ran out (the slice was clamped by
+    /// [`RunBudget::total_remaining`], and that clamp was hit).
+    BudgetExhausted,
+}
+
+/// How long (and under which exit conditions) one [`Vcpu::run`] call may
+/// execute.
+#[derive(Clone, Copy, Debug)]
+pub struct RunBudget {
+    /// Ticks this slice may consume.
+    pub slice_ticks: u64,
+    /// Node-global ticks remaining; the run never consumes more than
+    /// `min(slice_ticks, total_remaining)`. When the clamp binds, the run
+    /// reports [`VmExit::BudgetExhausted`] instead of
+    /// [`VmExit::SliceExpired`].
+    pub total_remaining: u64,
+    /// Exit with [`VmExit::Wfi`] when the guest parks instead of
+    /// fast-forwarding the idle time away inside the slice. Note: guests
+    /// carry a *private* device timebase that only advances while they
+    /// run, so a parked guest's idle ticks are part of its virtual time —
+    /// the bundled [`SchedPolicy`](super::SchedPolicy) implementations
+    /// leave this off and let WFI burn the slice, which is what keeps
+    /// consolidated consoles byte-identical to solo runs. The exit exists
+    /// for global-timebase schedulers (multi-hart nodes, ROADMAP).
+    pub wfi_exit: bool,
+    /// Exit with [`VmExit::Ecall`]/[`VmExit::Fault`] on every guest
+    /// exception (KVM debug-exit analog). Off for normal scheduling.
+    pub trap_exit: bool,
+}
+
+impl RunBudget {
+    /// A plain tick budget: run up to `slice_ticks`, no halt or trap
+    /// exits, no node-global clamp.
+    pub fn ticks(slice_ticks: u64) -> RunBudget {
+        RunBudget { slice_ticks, total_remaining: u64::MAX, wfi_exit: false, trap_exit: false }
+    }
+
+    /// Clamp against a node-global remaining budget.
+    pub fn with_total(mut self, total_remaining: u64) -> RunBudget {
+        self.total_remaining = total_remaining;
+        self
+    }
+
+    /// Request halt exits ([`VmExit::Wfi`]).
+    pub fn with_wfi_exit(mut self) -> RunBudget {
+        self.wfi_exit = true;
+        self
+    }
+
+    /// Request trap exits ([`VmExit::Ecall`]/[`VmExit::Fault`]).
+    pub fn with_trap_exit(mut self) -> RunBudget {
+        self.trap_exit = true;
+        self
+    }
+}
+
+/// Estimate the simulated tick at which the parked hart's armed timer
+/// fires: the next device update lands in `device_countdown` ticks, each
+/// further mtime increment costs [`TIME_DIVIDER`] ticks. An estimate (the
+/// fast-forward path may already have consumed part of the countdown),
+/// good to within one device period — enough for a scheduler to decide
+/// when a parked guest is worth re-slicing.
+fn wfi_parked_until(m: &Machine) -> Option<u64> {
+    if !m.core.hart.wfi {
+        return None; // woke during the idle tick; not parked anymore
+    }
+    let clint = &m.bus.clint;
+    // mtimecmp == u64::MAX is the reset value and the standard "timer
+    // disabled" idiom — not an armed wakeup.
+    let timer_armed = m.core.hart.csr.mie & irq::MTIP != 0
+        && clint.mtimecmp != u64::MAX
+        && clint.mtimecmp > clint.mtime;
+    if !timer_armed {
+        return None;
+    }
+    let updates = clint.mtimecmp - clint.mtime;
+    Some(
+        m.stats
+            .sim_ticks
+            .saturating_add(m.device_countdown)
+            .saturating_add((updates - 1).saturating_mul(TIME_DIVIDER)),
+    )
+}
+
+impl Vcpu {
+    /// The exit-reason run loop (KVM's `KVM_RUN` analog): drive the world
+    /// currently resident on `m` until a [`VmExit`] condition holds.
+    ///
+    /// An associated function rather than a method: during a slice the
+    /// vCPU's architectural state *is* `m.core.hart` (see
+    /// [`super::world_swap`]), so there is no parked `&self` to speak of.
+    ///
+    /// Exit precedence per iteration: poweroff, then budget, then the
+    /// optional halt/trap exits of the tick itself. Host wall-clock spent
+    /// here accrues to the resident world's `stats.host_time`.
+    pub fn run(m: &mut Machine, budget: RunBudget) -> VmExit {
+        let start = Instant::now();
+        let allowed = budget.slice_ticks.min(budget.total_remaining);
+        let limit = m.stats.sim_ticks.saturating_add(allowed);
+        let exit = loop {
+            if let Some(code) = m.bus.poweroff {
+                break VmExit::GuestDone { passed: code == SYSCON_PASS };
+            }
+            if m.stats.sim_ticks >= limit {
+                break if budget.total_remaining <= budget.slice_ticks {
+                    VmExit::BudgetExhausted
+                } else {
+                    VmExit::SliceExpired
+                };
+            }
+            match m.tick_bounded(limit) {
+                StepEvent::WfiIdle if budget.wfi_exit => {
+                    break VmExit::Wfi { parked_until: wfi_parked_until(m) };
+                }
+                StepEvent::Exception(cause, _) if budget.trap_exit => {
+                    break match cause {
+                        ExceptionCause::EcallFromU
+                        | ExceptionCause::EcallFromS
+                        | ExceptionCause::EcallFromVS
+                        | ExceptionCause::EcallFromM => VmExit::Ecall,
+                        _ => VmExit::Fault,
+                    };
+                }
+                _ => {}
+            }
+        };
+        m.stats.host_time += start.elapsed();
+        exit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::SYSCON_BASE;
+    use crate::vmm::GuestVm;
+
+    /// Boot a synthetic guest world onto a fresh machine.
+    fn resident(src: &str) -> (Machine, GuestVm) {
+        let mut m = Machine::new(1 << 20, true);
+        let mut g = GuestVm::synthetic(0, src).unwrap();
+        crate::vmm::world_swap(&mut m, &mut g);
+        (m, g)
+    }
+
+    #[test]
+    fn slice_expired_when_busy_and_total_is_larger() {
+        let (mut m, _g) = resident("loop: j loop\n");
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(100).with_total(10_000));
+        assert_eq!(exit, VmExit::SliceExpired);
+        assert_eq!(m.stats.sim_ticks, 100, "slice budget is exact");
+    }
+
+    #[test]
+    fn budget_exhausted_when_total_clamp_binds() {
+        let (mut m, _g) = resident("loop: j loop\n");
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(1_000).with_total(100));
+        assert_eq!(exit, VmExit::BudgetExhausted);
+        assert_eq!(m.stats.sim_ticks, 100, "total budget is exact");
+        // Equal slice and total also counts as the global clamp binding.
+        let (mut m, _g) = resident("loop: j loop\n");
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(100).with_total(100)), VmExit::BudgetExhausted);
+    }
+
+    #[test]
+    fn guest_done_reports_pass_and_fail() {
+        let pass = format!("li t0, {SYSCON_BASE}\n li t1, {SYSCON_PASS}\n sw t1, 0(t0)\n wfi\n");
+        let (mut m, _g) = resident(&pass);
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(1_000)), VmExit::GuestDone { passed: true });
+        assert_eq!(m.bus.poweroff, Some(SYSCON_PASS), "raw code stays latched on the bus");
+
+        let fail = format!("li t0, {SYSCON_BASE}\n li t1, 0x3333\n sw t1, 0(t0)\n wfi\n");
+        let (mut m, _g) = resident(&fail);
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(1_000)), VmExit::GuestDone { passed: false });
+        assert_eq!(m.bus.poweroff, Some(0x3333));
+    }
+
+    #[test]
+    fn wfi_exit_fires_only_when_requested() {
+        // Without wfi_exit the park is fast-forwarded inside the slice
+        // (legacy behavior, keeps consolidated runs byte-exact).
+        let (mut m, _g) = resident("park: wfi\n j park\n");
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(1_000)), VmExit::SliceExpired);
+        assert!(m.stats.wfi_ticks > 0);
+
+        // With wfi_exit and no armed wakeup source: parked forever.
+        let (mut m, _g) = resident("park: wfi\n j park\n");
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(1_000).with_wfi_exit());
+        assert_eq!(exit, VmExit::Wfi { parked_until: None });
+        assert!(m.stats.sim_ticks < 1_000, "halt exit does not idle the slice away");
+    }
+
+    #[test]
+    fn wfi_exit_estimates_timer_wakeup() {
+        // Arm mtimecmp = 50 device updates, enable MTIE, park. The
+        // parked_until estimate must land within one device period of
+        // 50 * TIME_DIVIDER ticks from the start.
+        let src = r#"
+            li t0, 0x2004000
+            li t1, 50
+            sd t1, 0(t0)
+            li t0, 1 << 7
+            csrw mie, t0
+            park: wfi
+            j park
+        "#;
+        let (mut m, _g) = resident(src);
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(1_000_000).with_wfi_exit());
+        let VmExit::Wfi { parked_until: Some(t) } = exit else {
+            panic!("expected a timer-armed Wfi exit, got {exit:?}");
+        };
+        assert!(t >= m.stats.sim_ticks, "wakeup estimate is in the future");
+        assert!(
+            t <= 51 * TIME_DIVIDER,
+            "wakeup estimate {t} beyond one period of the armed timer"
+        );
+        // Resuming (without halt exits) up to one device period past the
+        // estimate must cross the wakeup: the hart is no longer parked.
+        let resume = t - m.stats.sim_ticks + TIME_DIVIDER;
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(resume)), VmExit::SliceExpired);
+        assert!(!m.core.hart.wfi, "timer fired by the estimated tick");
+    }
+
+    #[test]
+    fn trap_exit_maps_ecall_and_fault() {
+        // An M-mode ecall (no handler installed — the exit observes the
+        // architectural trap, it does not replace it).
+        let (mut m, _g) = resident("ecall\n loop: j loop\n");
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(1_000).with_trap_exit());
+        assert_eq!(exit, VmExit::Ecall);
+
+        // A load from unmapped physical space is a fault.
+        let (mut m, _g) = resident("li t0, 0x1\n ld t1, 0(t0)\n loop: j loop\n");
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(1_000).with_trap_exit());
+        assert_eq!(exit, VmExit::Fault);
+
+        // Without trap_exit the same guest just burns its slice.
+        let (mut m, _g) = resident("ecall\n loop: j loop\n");
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(1_000)), VmExit::SliceExpired);
+    }
+
+    #[test]
+    fn run_resumes_across_calls() {
+        // Two slices of 500 equal one run of 1000 (same tick accounting
+        // as the legacy Machine::run loop).
+        let (mut m, _g) = resident("li t0, 0\n loop: addi t0, t0, 1\n j loop\n");
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(500)), VmExit::SliceExpired);
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(500)), VmExit::SliceExpired);
+        let two_slices = m.core.hart.regs[5];
+        let (mut m2, _g) = resident("li t0, 0\n loop: addi t0, t0, 1\n j loop\n");
+        assert_eq!(Vcpu::run(&mut m2, RunBudget::ticks(1_000)), VmExit::SliceExpired);
+        assert_eq!(m2.core.hart.regs[5], two_slices);
+    }
+
+    #[test]
+    fn parked_until_is_none_without_armed_timer() {
+        // mtimecmp armed but MTIE masked: WFI parks with no wakeup.
+        let src = r#"
+            li t0, 0x2004000
+            li t1, 50
+            sd t1, 0(t0)
+            park: wfi
+            j park
+        "#;
+        let (mut m, _g) = resident(src);
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(10_000).with_wfi_exit());
+        assert_eq!(exit, VmExit::Wfi { parked_until: None });
+
+        // MTIE enabled but mtimecmp left at the u64::MAX reset/disable
+        // idiom: also no wakeup (and no overflow in the estimate).
+        let src = r#"
+            li t0, 1 << 7
+            csrw mie, t0
+            park: wfi
+            j park
+        "#;
+        let (mut m, _g) = resident(src);
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(10_000).with_wfi_exit());
+        assert_eq!(exit, VmExit::Wfi { parked_until: None });
+    }
+}

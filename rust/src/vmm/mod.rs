@@ -1,8 +1,9 @@
 //! The multi-guest VMM subsystem: vCPU state capture, the world-switch
-//! engine, and a round-robin scheduler that multiplexes N complete guest
-//! stacks (firmware + xvisor-rs + mini-os, each with its own RAM, device
-//! claim and VMID) onto the one simulated hart — turning the simulator
-//! into a consolidated "cloud node" (ROADMAP: many workloads per node).
+//! engine, the KVM-style [`VmExit`] execution boundary and the pluggable
+//! [`SchedPolicy`] schedulers that multiplex N complete guest stacks
+//! (firmware + xvisor-rs + mini-os, each with its own RAM, device claim
+//! and VMID) onto the one simulated hart — turning the simulator into a
+//! consolidated "cloud node" (ROADMAP: many workloads per node).
 //!
 //! Design:
 //! - [`Vcpu`] snapshots the full per-guest architectural world: GPRs,
@@ -13,9 +14,17 @@
 //! - [`GuestVm`] owns everything a tenant claims: its vCPU, its RAM and
 //!   devices ([`Bus`]), and its private stats. Guests are memory-isolated
 //!   by construction *and* TLB-isolated by VMID tagging.
-//! - [`VmmScheduler`] is a round-robin time-slicer. A world switch swaps
-//!   (hart, bus, stats, mmu-stats) in O(1) and applies a [`FlushPolicy`]
-//!   to the shared TLB:
+//! - [`Vcpu::run`] (in [`exit`]) is the KVM-style execution boundary: one
+//!   run loop that drives the resident world until a structured [`VmExit`]
+//!   (`SliceExpired`, `Wfi`, `GuestDone`, `Ecall`, `Fault`,
+//!   `BudgetExhausted`) under a [`RunBudget`].
+//! - [`SchedPolicy`] (in [`policy`]) reacts to the exit stream and decides
+//!   which guest runs next, and for how long: [`RoundRobin`] (bit-exact
+//!   with the pre-redesign scheduler), [`SloDeadline`] (EDF on per-guest
+//!   latency targets) and [`WeightedSlice`] (heterogeneous slices).
+//! - [`VmmScheduler`] is the driver that owns the mechanism. A world
+//!   switch swaps (hart, bus, stats, mmu-stats) in O(1) and applies a
+//!   [`FlushPolicy`] to the shared TLB:
 //!     - `FlushAll`: conservative full flush (no-VMID hardware model);
 //!     - `FlushVmid`: VMID-selective teardown of the departing guest;
 //!     - `Partitioned`: flushless — distinct VMIDs keep entries disjoint,
@@ -24,7 +33,14 @@
 //!
 //! Entry point: [`crate::sim::Machine::run_scheduled`].
 
+pub mod exit;
+pub mod policy;
+
+pub use exit::{RunBudget, VmExit};
+pub use policy::{Decision, NodeState, RoundRobin, SchedKind, SchedPolicy, SloDeadline, WeightedSlice};
+
 use std::collections::BTreeMap;
+use std::str::FromStr;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -33,7 +49,7 @@ use crate::cpu::{Hart, VsCsrFile};
 use crate::isa::csr::atp;
 use crate::mem::Bus;
 use crate::mmu::MmuStats;
-use crate::sim::{ExitReason, Machine, SimStats};
+use crate::sim::{Machine, SimStats};
 use crate::sw;
 
 /// One virtual CPU: the complete parked architectural world of a guest.
@@ -72,8 +88,8 @@ pub struct GuestVm {
     pub bus: Bus,
     pub stats: SimStats,
     pub mmu: MmuStats,
-    /// Set once the guest powers off.
-    pub exit: Option<ExitReason>,
+    /// Set once the guest powers off ([`VmExit::GuestDone`]).
+    pub exit: Option<VmExit>,
     /// Global scheduled tick count at the moment this guest finished —
     /// the "completion latency" the consolidation sweep reports.
     pub finished_at_total: Option<u64>,
@@ -136,8 +152,34 @@ impl GuestVm {
         Ok(g)
     }
 
+    /// A synthetic single-stage guest running `src` bare (M-mode at
+    /// `RAM_BASE`, no firmware/hypervisor stack, 1 MiB RAM). Scheduler
+    /// tests and benchmarks use this to stamp out many cheap guests whose
+    /// tick counts are easy to reason about.
+    pub fn synthetic(id: usize, src: &str) -> Result<GuestVm> {
+        let img = crate::asm::assemble(src, crate::mem::RAM_BASE)?;
+        let mut bus = Bus::new(1 << 20);
+        bus.load_image(img.base, &img.data)
+            .map_err(|_| anyhow::anyhow!("synthetic guest image does not fit in RAM"))?;
+        let mut vcpu = Vcpu::new(true);
+        vcpu.hart.pc = crate::mem::RAM_BASE;
+        Ok(GuestVm {
+            id,
+            vmid: id as u16 + 1,
+            bench: "synthetic".to_string(),
+            vcpu,
+            bus,
+            stats: SimStats::default(),
+            mmu: MmuStats::default(),
+            exit: None,
+            finished_at_total: None,
+            slices_run: 0,
+            dev_countdown: 0,
+        })
+    }
+
     pub fn passed(&self) -> bool {
-        matches!(self.exit, Some(ExitReason::PowerOff(code)) if code == crate::mem::SYSCON_PASS)
+        matches!(self.exit, Some(VmExit::GuestDone { passed: true }))
     }
 
     pub fn console(&self) -> String {
@@ -172,6 +214,9 @@ impl GuestFactory {
 
     /// One tenant, forked from the benchmark's template world (which is
     /// assembled on first use).
+    // contains_key+insert instead of the entry API: template construction
+    // is fallible, and the error must not leave a vacant entry occupied.
+    #[allow(clippy::map_entry)]
     pub fn guest(&mut self, id: usize, bench: &str, vmid: u16) -> Result<GuestVm> {
         if !self.templates.contains_key(bench) {
             let t = GuestVm::new(id, bench, self.scale, self.ram_bytes)?;
@@ -215,16 +260,23 @@ pub enum FlushPolicy {
     Partitioned,
 }
 
-impl FlushPolicy {
-    pub fn parse(s: &str) -> Option<FlushPolicy> {
-        Some(match s {
+impl FromStr for FlushPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<FlushPolicy> {
+        Ok(match s {
             "all" | "flush-all" => FlushPolicy::FlushAll,
             "vmid" | "flush-vmid" => FlushPolicy::FlushVmid,
             "none" | "partitioned" => FlushPolicy::Partitioned,
-            _ => return None,
+            _ => bail!(
+                "unknown TLB flush policy '{s}' (expected one of: all|flush-all, \
+                 vmid|flush-vmid, none|partitioned)"
+            ),
         })
     }
+}
 
+impl FlushPolicy {
     pub fn name(self) -> &'static str {
         match self {
             FlushPolicy::FlushAll => "flush-all",
@@ -280,16 +332,21 @@ pub struct ScheduleOutcome {
     pub avg_switch_ns: f64,
 }
 
-/// Round-robin multiplexer of N guests onto one [`Machine`].
+/// Multiplexer of N guests onto one [`Machine`]: the mechanism half of
+/// the scheduler. It world-switches, keeps the TLB honest per
+/// [`FlushPolicy`], enforces the node budget and feeds the [`VmExit`]
+/// stream to the pluggable [`SchedPolicy`] that owns all placement and
+/// slice-length decisions.
 pub struct VmmScheduler {
     pub guests: Vec<GuestVm>,
-    /// Time slice, in simulator ticks.
-    pub slice_ticks: u64,
     pub policy: FlushPolicy,
+    /// The scheduling policy consuming the exit stream.
+    pub sched: Box<dyn SchedPolicy>,
     pub switch: SwitchStats,
     /// Global scheduled ticks across all guests.
     pub total_ticks: u64,
-    next: usize,
+    /// Exit of the last completed slice, handed to the next `pick_next`.
+    last: Option<(usize, VmExit)>,
 }
 
 /// O(1) world swap: exchange the machine's live (hart, bus, stats,
@@ -307,14 +364,25 @@ pub fn world_swap(m: &mut Machine, g: &mut GuestVm) {
 }
 
 impl VmmScheduler {
+    /// Round-robin node with a fixed slice — the historical constructor;
+    /// bit-exact with the pre-redesign inlined scheduler.
     pub fn new(guests: Vec<GuestVm>, slice_ticks: u64, policy: FlushPolicy) -> VmmScheduler {
+        VmmScheduler::with_policy(guests, policy, Box::new(RoundRobin::new(slice_ticks)))
+    }
+
+    /// A node driven by an arbitrary [`SchedPolicy`].
+    pub fn with_policy(
+        guests: Vec<GuestVm>,
+        policy: FlushPolicy,
+        sched: Box<dyn SchedPolicy>,
+    ) -> VmmScheduler {
         VmmScheduler {
             guests,
-            slice_ticks: slice_ticks.max(1),
             policy,
+            sched,
             switch: SwitchStats::default(),
             total_ticks: 0,
-            next: 0,
+            last: None,
         }
     }
 
@@ -323,22 +391,22 @@ impl VmmScheduler {
         self.guests.iter().filter(|g| g.exit.is_none()).count()
     }
 
-    fn pick_next(&mut self) -> Option<usize> {
-        let n = self.guests.len();
-        for k in 0..n {
-            let idx = (self.next + k) % n;
-            if self.guests[idx].exit.is_none() {
-                self.next = (idx + 1) % n;
-                return Some(idx);
-            }
-        }
-        None
-    }
-
-    /// Run until every guest powers off or `max_total_ticks` elapse.
+    /// Run until the policy stops picking (every guest powered off) or
+    /// `max_total_ticks` elapse. Each iteration is: ask the policy, world-
+    /// switch in, [`Vcpu::run`] under the decided [`RunBudget`], world-
+    /// switch out, record the [`VmExit`] and hand it to the next pick.
     pub fn run(&mut self, m: &mut Machine, max_total_ticks: u64) -> ScheduleOutcome {
         while self.total_ticks < max_total_ticks {
-            let Some(idx) = self.pick_next() else { break };
+            let node = NodeState {
+                guests: &self.guests,
+                total_ticks: self.total_ticks,
+                max_total_ticks,
+            };
+            let Some(d) = self.sched.pick_next(&node, self.last.take()) else { break };
+            let idx = d.guest;
+            if idx >= self.guests.len() || self.guests[idx].exit.is_some() {
+                break; // defensive: a buggy policy ends the run, not the process
+            }
 
             // ---- world switch in ----
             let t0 = Instant::now();
@@ -353,10 +421,15 @@ impl VmmScheduler {
             self.switch.half_switches += 1;
             self.switch.switch_host_ns += t0.elapsed().as_nanos();
 
-            // ---- run one slice ----
-            let slice = self.slice_ticks.min(max_total_ticks - self.total_ticks);
+            // ---- run one slice through the exit boundary ----
+            let budget = RunBudget {
+                slice_ticks: d.slice_ticks.max(1),
+                total_remaining: max_total_ticks - self.total_ticks,
+                wfi_exit: d.wfi_exit,
+                trap_exit: false,
+            };
             let before = m.stats.sim_ticks;
-            let reason = m.run(slice);
+            let exit = Vcpu::run(m, budget);
             self.total_ticks += m.stats.sim_ticks - before;
 
             // ---- world switch out ----
@@ -370,10 +443,11 @@ impl VmmScheduler {
 
             let g = &mut self.guests[idx];
             g.slices_run += 1;
-            if let ExitReason::PowerOff(_) = reason {
-                g.exit = Some(reason);
+            if let VmExit::GuestDone { .. } = exit {
+                g.exit = Some(exit);
                 g.finished_at_total = Some(self.total_ticks);
             }
+            self.last = Some((idx, exit));
         }
         // Hand the carrier machine back clean: the last guest's VMID-tagged
         // TLB entries and current-generation page caches must not be
@@ -397,31 +471,13 @@ impl VmmScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::asm::assemble;
     use crate::mem::{RAM_BASE, SYSCON_BASE, SYSCON_PASS};
 
     /// A synthetic single-stage guest running `src`. Exercises the
     /// scheduler/world-switch machinery without the full hypervisor stack
     /// (those paths are covered by tests/vmm_isolation and tests/fleet).
     fn raw_guest(id: usize, src: &str) -> GuestVm {
-        let img = assemble(src, RAM_BASE).unwrap();
-        let mut bus = Bus::new(1 << 20);
-        bus.load_image(img.base, &img.data).unwrap();
-        let mut vcpu = Vcpu::new(true);
-        vcpu.hart.pc = RAM_BASE;
-        GuestVm {
-            id,
-            vmid: id as u16 + 1,
-            bench: "tiny".into(),
-            vcpu,
-            bus,
-            stats: SimStats::default(),
-            mmu: MmuStats::default(),
-            exit: None,
-            finished_at_total: None,
-            slices_run: 0,
-            dev_countdown: 0,
-        }
+        GuestVm::synthetic(id, src).unwrap()
     }
 
     /// Counts to `n`, then powers off.

@@ -1,0 +1,352 @@
+//! Scheduling policy over the [`VmExit`] boundary: the [`SchedPolicy`]
+//! trait decides *which guest runs next and for how long*; the
+//! [`VmmScheduler`](super::VmmScheduler) driver owns the mechanism (world
+//! switching, TLB hygiene, budget accounting) and consumes the exit
+//! stream. Three implementations ship:
+//!
+//! - [`RoundRobin`] — fixed slice, cyclic order; bit-exact with the
+//!   pre-redesign inlined scheduler.
+//! - [`SloDeadline`] — earliest-deadline-first over per-guest latency
+//!   targets (the ROADMAP latency-SLO policy). With targets proportional
+//!   to guest work this is SJF, which minimizes every completion-latency
+//!   order statistic a work-conserving policy can.
+//! - [`WeightedSlice`] — cyclic order with per-guest slice weights (the
+//!   CVA6-DSE-style heterogeneous-slice sweep axis).
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{GuestVm, VmExit};
+
+/// Read-only node view handed to [`SchedPolicy::pick_next`].
+pub struct NodeState<'a> {
+    pub guests: &'a [GuestVm],
+    /// Ticks scheduled so far across all guests.
+    pub total_ticks: u64,
+    /// The node-global tick budget.
+    pub max_total_ticks: u64,
+}
+
+impl NodeState<'_> {
+    /// Indices of guests that have not powered off yet.
+    pub fn runnable(&self) -> impl Iterator<Item = usize> + '_ {
+        self.guests.iter().enumerate().filter(|(_, g)| g.exit.is_none()).map(|(i, _)| i)
+    }
+
+    /// Ticks left in the node budget.
+    pub fn remaining(&self) -> u64 {
+        self.max_total_ticks.saturating_sub(self.total_ticks)
+    }
+}
+
+/// One scheduling decision: run `guest` for `slice_ticks` (the driver
+/// clamps against the node budget via
+/// [`RunBudget::total_remaining`](super::RunBudget::total_remaining)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub guest: usize,
+    pub slice_ticks: u64,
+    /// Ask the run loop for halt exits ([`VmExit::Wfi`]). See the note on
+    /// [`RunBudget::wfi_exit`](super::RunBudget::wfi_exit) for why the
+    /// bundled policies leave it off.
+    pub wfi_exit: bool,
+}
+
+impl Decision {
+    pub fn slice(guest: usize, slice_ticks: u64) -> Decision {
+        Decision { guest, slice_ticks, wfi_exit: false }
+    }
+}
+
+/// A pluggable scheduling policy reacting to the vCPU exit stream.
+pub trait SchedPolicy {
+    /// Short human-readable name (CLI reports, tables).
+    fn name(&self) -> &'static str;
+
+    /// Decide what runs next. `last` carries the guest index and
+    /// [`VmExit`] of the slice that just ended (`None` on the first call
+    /// of a run). Returning `None` stops scheduling (typically: no
+    /// runnable guest left).
+    fn pick_next(&mut self, node: &NodeState, last: Option<(usize, VmExit)>) -> Option<Decision>;
+}
+
+/// Fixed-slice cyclic scheduler — bit-exact with the pre-redesign
+/// `VmmScheduler` loop: same cursor semantics, same slice clamping, so
+/// per-guest consoles and completion ticks reproduce byte-for-byte.
+pub struct RoundRobin {
+    pub slice_ticks: u64,
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new(slice_ticks: u64) -> RoundRobin {
+        RoundRobin { slice_ticks: slice_ticks.max(1), next: 0 }
+    }
+}
+
+impl SchedPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick_next(&mut self, node: &NodeState, _last: Option<(usize, VmExit)>) -> Option<Decision> {
+        let n = node.guests.len();
+        for k in 0..n {
+            let idx = (self.next + k) % n;
+            if node.guests[idx].exit.is_none() {
+                self.next = (idx + 1) % n;
+                return Some(Decision::slice(idx, self.slice_ticks));
+            }
+        }
+        None
+    }
+}
+
+/// Earliest-deadline-first on per-guest latency targets: every slice goes
+/// to the runnable guest with the smallest absolute deadline (ties break
+/// by index, which keeps the policy deterministic). Deadlines are in
+/// node-scheduled ticks; a guest without a target sorts last
+/// (`u64::MAX`). Static deadlines make EDF run each guest to completion
+/// in deadline order — with targets proportional to solo runtimes that is
+/// shortest-job-first, which provably (exchange argument) minimizes every
+/// order statistic of completion latency, p50 and p99 included.
+pub struct SloDeadline {
+    pub slice_ticks: u64,
+    /// Absolute completion deadline per guest index.
+    pub targets: Vec<u64>,
+}
+
+impl SloDeadline {
+    pub fn new(slice_ticks: u64, targets: Vec<u64>) -> SloDeadline {
+        SloDeadline { slice_ticks: slice_ticks.max(1), targets }
+    }
+}
+
+impl SchedPolicy for SloDeadline {
+    fn name(&self) -> &'static str {
+        "slo-deadline"
+    }
+
+    fn pick_next(&mut self, node: &NodeState, _last: Option<(usize, VmExit)>) -> Option<Decision> {
+        node.runnable()
+            .min_by_key(|&i| (self.targets.get(i).copied().unwrap_or(u64::MAX), i))
+            .map(|i| Decision::slice(i, self.slice_ticks))
+    }
+}
+
+/// Cyclic order with heterogeneous slice lengths: guest `i` gets
+/// `base_slice * weights[i % weights.len()]` ticks per turn — the same
+/// cycling rule the benchmark mix uses, so a 2-element weight vector
+/// pairs naturally with a 2-benchmark mix.
+pub struct WeightedSlice {
+    pub base_slice: u64,
+    pub weights: Vec<u64>,
+    next: usize,
+}
+
+impl WeightedSlice {
+    pub fn new(base_slice: u64, weights: Vec<u64>) -> WeightedSlice {
+        let weights = if weights.is_empty() { vec![1] } else { weights };
+        WeightedSlice { base_slice: base_slice.max(1), weights, next: 0 }
+    }
+
+    fn weight(&self, idx: usize) -> u64 {
+        self.weights[idx % self.weights.len()].max(1)
+    }
+}
+
+impl SchedPolicy for WeightedSlice {
+    fn name(&self) -> &'static str {
+        "weighted-slice"
+    }
+
+    fn pick_next(&mut self, node: &NodeState, _last: Option<(usize, VmExit)>) -> Option<Decision> {
+        let n = node.guests.len();
+        for k in 0..n {
+            let idx = (self.next + k) % n;
+            if node.guests[idx].exit.is_none() {
+                self.next = (idx + 1) % n;
+                return Some(Decision::slice(idx, self.base_slice.saturating_mul(self.weight(idx))));
+            }
+        }
+        None
+    }
+}
+
+/// Serializable selection of a [`SchedPolicy`] — what a [`FleetSpec`]
+/// (`Clone + Debug`) carries and what the CLI `--sched` flag parses.
+/// [`SchedKind::build`] instantiates the concrete (stateful) policy for
+/// one node's guest list.
+///
+/// [`FleetSpec`]: crate::fleet::FleetSpec
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    RoundRobin,
+    /// Per-benchmark latency targets in node ticks; a guest's deadline is
+    /// the target of its benchmark (missing → `u64::MAX`, i.e. best
+    /// effort). The fleet CLI fills empty targets from solo baselines
+    /// (fair share: solo ticks × guests per node).
+    SloDeadline { targets: BTreeMap<String, u64> },
+    /// Per-guest slice weights, cycled like the benchmark mix.
+    WeightedSlice { weights: Vec<u64> },
+}
+
+impl SchedKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::RoundRobin => "round-robin",
+            SchedKind::SloDeadline { .. } => "slo-deadline",
+            SchedKind::WeightedSlice { .. } => "weighted-slice",
+        }
+    }
+
+    /// Default any missing SLO target to its fair share — solo completion
+    /// ticks × the node's guest count (explicit targets win). The single
+    /// derivation both `hvsim fleet --sched slo` and the consolidation
+    /// sweep use; a no-op for non-SLO policies.
+    pub fn fill_fair_share<'a>(
+        &mut self,
+        solo_ticks: impl IntoIterator<Item = (&'a str, u64)>,
+        guests_per_node: u64,
+    ) {
+        if let SchedKind::SloDeadline { targets } = self {
+            for (bench, ticks) in solo_ticks {
+                targets.entry(bench.to_string()).or_insert(ticks.saturating_mul(guests_per_node));
+            }
+        }
+    }
+
+    /// Instantiate the policy for one node.
+    pub fn build(&self, slice_ticks: u64, guests: &[GuestVm]) -> Box<dyn SchedPolicy> {
+        match self {
+            SchedKind::RoundRobin => Box::new(RoundRobin::new(slice_ticks)),
+            SchedKind::SloDeadline { targets } => {
+                let per_guest = guests
+                    .iter()
+                    .map(|g| targets.get(&g.bench).copied().unwrap_or(u64::MAX))
+                    .collect();
+                Box::new(SloDeadline::new(slice_ticks, per_guest))
+            }
+            SchedKind::WeightedSlice { weights } => {
+                Box::new(WeightedSlice::new(slice_ticks, weights.clone()))
+            }
+        }
+    }
+}
+
+impl FromStr for SchedKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SchedKind> {
+        if let Some(list) = s.strip_prefix("weighted:") {
+            let mut weights = Vec::new();
+            for w in list.split(',') {
+                let w: u64 = w
+                    .parse()
+                    .map_err(|_| anyhow!("bad weight '{w}' in scheduling policy '{s}' (weights are positive integers)"))?;
+                if w == 0 {
+                    bail!("bad weight 0 in scheduling policy '{s}' (weights are positive integers)");
+                }
+                weights.push(w);
+            }
+            return Ok(SchedKind::WeightedSlice { weights });
+        }
+        Ok(match s {
+            "rr" | "round-robin" => SchedKind::RoundRobin,
+            "slo" | "slo-deadline" => SchedKind::SloDeadline { targets: BTreeMap::new() },
+            "weighted" | "weighted-slice" => SchedKind::WeightedSlice { weights: vec![1] },
+            _ => bail!(
+                "unknown scheduling policy '{s}' (expected one of: rr|round-robin, \
+                 slo|slo-deadline, weighted|weighted-slice[:W1,W2,...])"
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn guests(n: usize) -> Vec<GuestVm> {
+        (0..n).map(|i| GuestVm::synthetic(i, "loop: j loop\n").unwrap()).collect()
+    }
+
+    fn node(guests: &[GuestVm]) -> NodeState<'_> {
+        NodeState { guests, total_ticks: 0, max_total_ticks: u64::MAX }
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_finished() {
+        let mut gs = guests(3);
+        gs[1].exit = Some(VmExit::GuestDone { passed: true });
+        let mut rr = RoundRobin::new(100);
+        let picks: Vec<usize> =
+            (0..4).map(|_| rr.pick_next(&node(&gs), None).unwrap().guest).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        for g in gs.iter_mut() {
+            g.exit = Some(VmExit::GuestDone { passed: true });
+        }
+        assert!(rr.pick_next(&node(&gs), None).is_none());
+    }
+
+    #[test]
+    fn slo_deadline_picks_earliest_target_first() {
+        let gs = guests(3);
+        let mut slo = SloDeadline::new(100, vec![3_000, 1_000, 2_000]);
+        assert_eq!(slo.pick_next(&node(&gs), None).unwrap().guest, 1);
+        let mut gs = gs;
+        gs[1].exit = Some(VmExit::GuestDone { passed: true });
+        assert_eq!(slo.pick_next(&node(&gs), None).unwrap().guest, 2);
+        // Missing targets sort last; ties break by index.
+        let gs2 = guests(3);
+        let mut slo = SloDeadline::new(100, vec![]);
+        assert_eq!(slo.pick_next(&node(&gs2), None).unwrap().guest, 0);
+    }
+
+    #[test]
+    fn weighted_slice_scales_per_guest() {
+        let gs = guests(2);
+        let mut w = WeightedSlice::new(100, vec![3, 1]);
+        let d0 = w.pick_next(&node(&gs), None).unwrap();
+        let d1 = w.pick_next(&node(&gs), None).unwrap();
+        assert_eq!((d0.guest, d0.slice_ticks), (0, 300));
+        assert_eq!((d1.guest, d1.slice_ticks), (1, 100));
+    }
+
+    #[test]
+    fn sched_kind_parses_and_errors_name_choices() {
+        assert_eq!("rr".parse::<SchedKind>().unwrap(), SchedKind::RoundRobin);
+        assert_eq!("round-robin".parse::<SchedKind>().unwrap(), SchedKind::RoundRobin);
+        assert!(matches!("slo".parse::<SchedKind>().unwrap(), SchedKind::SloDeadline { .. }));
+        assert_eq!(
+            "weighted:2,1".parse::<SchedKind>().unwrap(),
+            SchedKind::WeightedSlice { weights: vec![2, 1] }
+        );
+        assert_eq!(
+            "weighted".parse::<SchedKind>().unwrap(),
+            SchedKind::WeightedSlice { weights: vec![1] }
+        );
+        let err = "fifo".parse::<SchedKind>().unwrap_err().to_string();
+        for choice in ["round-robin", "slo-deadline", "weighted"] {
+            assert!(err.contains(choice), "error must list '{choice}': {err}");
+        }
+        assert!("weighted:0".parse::<SchedKind>().is_err());
+        assert!("weighted:2,x".parse::<SchedKind>().is_err());
+    }
+
+    #[test]
+    fn kind_builds_per_guest_slo_targets_by_bench() {
+        let mut gs = guests(2);
+        gs[0].bench = "qsort".into();
+        gs[1].bench = "bitcount".into();
+        let kind = SchedKind::SloDeadline {
+            targets: BTreeMap::from([("bitcount".to_string(), 500u64)]),
+        };
+        let mut policy = kind.build(100, &gs);
+        assert_eq!(policy.name(), "slo-deadline");
+        // bitcount has the only finite target: it goes first.
+        assert_eq!(policy.pick_next(&node(&gs), None).unwrap().guest, 1);
+    }
+}

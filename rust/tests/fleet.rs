@@ -2,8 +2,8 @@
 //! guest stacks, sharded execution across host threads, per-guest console
 //! equality with solo runs, and sharding-independence of the results.
 
-use hvsim::fleet::{console_mismatches, run_fleet, solo_consoles, FleetSpec};
-use hvsim::vmm::FlushPolicy;
+use hvsim::fleet::{console_mismatches, run_fleet, solo_baselines, solo_consoles, FleetSpec};
+use hvsim::vmm::{FlushPolicy, SchedKind};
 
 const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
 
@@ -14,6 +14,7 @@ fn spec(nodes: usize, guests: usize, threads: usize) -> FleetSpec {
         threads,
         slice_ticks: 100_000,
         policy: FlushPolicy::Partitioned,
+        sched: SchedKind::RoundRobin,
         benches: vec!["bitcount".into(), "stringsearch".into()],
         scale: 1,
         ram_bytes: RAM,
@@ -58,6 +59,40 @@ fn fleet_completes_and_consoles_match_solo() {
         "forked construction cost {} assemblies, full setup needs ≥ {full_floor}",
         report.construct_assemblies
     );
+}
+
+#[test]
+fn slo_fleet_passes_with_p99_no_worse_than_round_robin() {
+    // The SLO scheduler on a mixed fleet: fair-share targets derived from
+    // solo completion ticks (what `hvsim fleet --sched slo` does), every
+    // guest still passes with a byte-identical console, and completion
+    // p99 never regresses past round-robin. (On identically-composed
+    // nodes the last finisher is the whole node's work under any
+    // work-conserving policy, so p99 is typically equal — the strict p50
+    // improvement lives in tests/sched_api.rs.)
+    let rr_spec = spec(2, 2, 2);
+    let solos = solo_baselines(&rr_spec).unwrap();
+    let mut slo_spec = rr_spec.clone();
+    slo_spec.sched = SchedKind::SloDeadline {
+        targets: solos
+            .iter()
+            .map(|(b, s)| (b.clone(), s.ticks * rr_spec.guests_per_node as u64))
+            .collect(),
+    };
+    let rr = run_fleet(&rr_spec).unwrap();
+    let slo = run_fleet(&slo_spec).unwrap();
+    assert!(rr.all_passed() && slo.all_passed());
+
+    let consoles: std::collections::BTreeMap<String, String> =
+        solos.iter().map(|(k, v)| (k.clone(), v.console.clone())).collect();
+    assert!(console_mismatches(&slo, &consoles).is_empty(), "slo scheduling leaked into guests");
+
+    let rr_p99 = rr.latency_percentile(0.99).unwrap();
+    let slo_p99 = slo.latency_percentile(0.99).unwrap();
+    assert!(slo_p99 <= rr_p99, "slo p99 {slo_p99} regressed past round-robin {rr_p99}");
+    let rr_p50 = rr.latency_percentile(0.50).unwrap();
+    let slo_p50 = slo.latency_percentile(0.50).unwrap();
+    assert!(slo_p50 <= rr_p50, "slo p50 {slo_p50} regressed past round-robin {rr_p50}");
 }
 
 #[test]

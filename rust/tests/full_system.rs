@@ -44,7 +44,7 @@ fn checkpoint_resume_mid_guest_run() {
     let mut m = cfg().build_machine();
     sw::setup_guest(&mut m, "crc32", 1).unwrap();
     // Run past boot, into the benchmark.
-    let r = m.run_until(1_000_000_000, |m| m.stats.sim_insts > 500_000);
+    let r = m.run_pred(1_000_000_000, |m| m.stats.sim_insts > 500_000);
     assert_eq!(r, ExitReason::Predicate);
     let blob = checkpoint::save(&m);
     let console_at_ck = m.console().len();
