@@ -599,6 +599,30 @@ pub fn fleet_table(
     } else {
         s.push('\n');
     }
+    // CoW fork cost + memory columns: pages copied at construction vs the
+    // per-fork template-page budget, and the resident-bytes proxy vs what
+    // full per-guest RAM copies would have cost.
+    s.push_str(&format!(
+        "fork cost: {} pages across {} forks ({:.3}% of the {}-page/guest template budget)\n",
+        report.construct_pages_forked,
+        report.construct_forks,
+        100.0 * report.fork_page_fraction(),
+        report.page_slots_per_guest,
+    ));
+    let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
+    s.push_str(&format!(
+        "memory: {:.1} MiB resident after construction vs {:.1} MiB full-copy (saved {:.1}%)\n",
+        mib(report.construct_resident_bytes),
+        mib(report.construct_full_copy_bytes),
+        if report.construct_full_copy_bytes > 0 {
+            100.0
+                * (1.0
+                    - report.construct_resident_bytes as f64
+                        / report.construct_full_copy_bytes as f64)
+        } else {
+            0.0
+        },
+    ));
     if let Some(base) = baseline {
         s.push_str(&format!(
             "parallel speedup vs 1 thread: {:.2}x (wall {:.3}s → {:.3}s)\n",
@@ -729,18 +753,26 @@ mod tests {
                     passed: true,
                     finished_at_total: Some(500),
                     sim_insts: 400,
-                    console: "x".into(),
+                    console: crate::util::ConsoleDigest::of_bytes(b"x"),
+                    pages_forked: 2,
                 }],
             }],
             threads: 1,
             construct_seconds: 0.01,
             construct_assemblies: 3,
+            construct_forks: 1,
+            construct_pages_forked: 2,
+            page_slots_per_guest: 256,
+            construct_resident_bytes: 10 * 4096,
+            construct_full_copy_bytes: 1 << 20,
             wall_seconds: 0.1,
         };
         let t = fleet_table(&spec, &report, None, None, &[]);
         assert!(t.contains("1 nodes × 1 guests"));
         assert!(t.contains("1/1 guests passed"));
         assert!(t.contains("consoles vs solo: ok"));
+        assert!(t.contains("fork cost: 2 pages across 1 forks"), "table:\n{t}");
+        assert!(t.contains("MiB full-copy"), "table:\n{t}");
         let t2 = fleet_table(&spec, &report, Some(&report), Some((0.02, 9)), &["bad".into()]);
         assert!(t2.contains("forked CHEAPER"));
         assert!(t2.contains("parallel speedup vs 1 thread"));

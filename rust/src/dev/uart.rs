@@ -1,6 +1,16 @@
 //! Minimal 8250-style UART: transmit-only console with an optional capture
 //! buffer (tests and the sweep harness read the captured output instead of
 //! the host terminal).
+//!
+//! Two capture modes:
+//! - **retained** (default): every byte is kept in `output` — full-console
+//!   consumers (`output_string`) see everything;
+//! - **streamed** ([`Uart::stream_digest`]): bytes beyond a bounded tail
+//!   are folded into a rolling SHA-256, so a fleet of hundreds of guests
+//!   holds O(tail) console bytes per guest instead of O(console). Either
+//!   mode produces the same [`ConsoleDigest`] for the same byte stream.
+
+use crate::util::{ConsoleDigest, Sha256, CONSOLE_TAIL};
 
 const THR: u64 = 0; // transmit holding register (write) / RBR (read)
 const LSR: u64 = 5; // line status register
@@ -8,17 +18,46 @@ const LSR: u64 = 5; // line status register
 /// LSR: transmitter empty + THR empty — always ready.
 const LSR_READY: u64 = 0x60;
 
+/// Fold threshold for streamed mode: when the retained buffer grows past
+/// this, everything but the last [`CONSOLE_TAIL`] bytes is hashed and
+/// dropped (amortized O(1) per byte).
+const FOLD_AT: usize = 4 * 1024;
+
+#[derive(Clone, Debug)]
+struct Stream {
+    hasher: Sha256,
+    /// Bytes already folded into `hasher` (and no longer in `output`).
+    folded: u64,
+}
+
 #[derive(Clone, Debug)]
 pub struct Uart {
-    /// Captured output (always recorded).
+    /// Captured output: the full stream (retained mode) or its bounded
+    /// tail (streamed mode).
     pub output: Vec<u8>,
     /// Mirror writes to the host stdout.
     pub echo: bool,
+    stream: Option<Stream>,
 }
 
 impl Uart {
     pub fn new() -> Uart {
-        Uart { output: Vec::new(), echo: false }
+        Uart { output: Vec::new(), echo: false, stream: None }
+    }
+
+    /// Switch to streamed capture: keep a bounded tail, fold the rest
+    /// into a rolling SHA-256. Bytes already captured stay unfolded until
+    /// the buffer next grows past the threshold, so enabling this at any
+    /// point preserves the digest of the whole stream.
+    pub fn stream_digest(&mut self) {
+        if self.stream.is_none() {
+            self.stream = Some(Stream { hasher: Sha256::new(), folded: 0 });
+        }
+    }
+
+    /// True when output beyond the tail is being folded into a digest.
+    pub fn is_streaming(&self) -> bool {
+        self.stream.is_some()
     }
 
     pub fn read(&self, off: u64) -> u64 {
@@ -38,12 +77,37 @@ impl Uart {
                     let _ = std::io::stdout().flush();
                 }
             }
+            if let Some(st) = &mut self.stream {
+                if self.output.len() > FOLD_AT {
+                    let cut = self.output.len() - CONSOLE_TAIL;
+                    st.hasher.update(&self.output[..cut]);
+                    st.folded += cut as u64;
+                    self.output.drain(..cut);
+                }
+            }
         }
     }
 
-    /// Captured output as a lossy string.
+    /// Captured output as a lossy string — the full console in retained
+    /// mode, the bounded tail in streamed mode.
     pub fn output_string(&self) -> String {
         String::from_utf8_lossy(&self.output).into_owned()
+    }
+
+    /// Digest of the complete byte stream seen so far (identical across
+    /// capture modes).
+    pub fn digest(&self) -> ConsoleDigest {
+        let (mut hasher, folded) = match &self.stream {
+            Some(st) => (st.hasher.clone(), st.folded),
+            None => (Sha256::new(), 0),
+        };
+        hasher.update(&self.output);
+        let tail_at = self.output.len().saturating_sub(CONSOLE_TAIL);
+        ConsoleDigest {
+            sha256: hasher.finalize(),
+            len: folded + self.output.len() as u64,
+            tail: String::from_utf8_lossy(&self.output[tail_at..]).into_owned(),
+        }
     }
 }
 
@@ -70,5 +134,48 @@ mod tests {
     fn lsr_always_ready() {
         let u = Uart::new();
         assert_eq!(u.read(LSR) & 0x20, 0x20);
+    }
+
+    #[test]
+    fn streamed_digest_matches_retained() {
+        // Long enough to force several folds.
+        let msg: Vec<u8> = (0..20_000u32).map(|i| b'A' + (i % 23) as u8).collect();
+        let mut full = Uart::new();
+        let mut streamed = Uart::new();
+        streamed.stream_digest();
+        for &b in &msg {
+            full.write(THR, b);
+            streamed.write(THR, b);
+        }
+        assert!(streamed.output.len() <= FOLD_AT, "tail stays bounded");
+        assert_eq!(full.digest(), streamed.digest());
+        assert_eq!(full.digest(), ConsoleDigest::of_bytes(&msg));
+        assert_eq!(streamed.digest().len, msg.len() as u64);
+        assert_eq!(streamed.digest().tail.as_bytes(), &msg[msg.len() - CONSOLE_TAIL..]);
+    }
+
+    #[test]
+    fn short_streams_never_fold() {
+        let mut u = Uart::new();
+        u.stream_digest();
+        for b in b"mini-os: up\n" {
+            u.write(THR, *b);
+        }
+        assert_eq!(u.output_string(), "mini-os: up\n");
+        assert_eq!(u.digest(), ConsoleDigest::of_bytes(b"mini-os: up\n"));
+    }
+
+    #[test]
+    fn enabling_mid_stream_keeps_whole_stream_digest() {
+        let msg: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let mut u = Uart::new();
+        for &b in &msg[..5_000] {
+            u.write(THR, b);
+        }
+        u.stream_digest();
+        for &b in &msg[5_000..] {
+            u.write(THR, b);
+        }
+        assert_eq!(u.digest(), ConsoleDigest::of_bytes(&msg));
     }
 }

@@ -5,15 +5,21 @@
 //! fast as the host allows).
 //!
 //! Construction uses checkpoint-forked guests ([`crate::vmm::GuestFactory`]):
-//! each benchmark's guest world is assembled once, then cloned per tenant
-//! with only the VMID and the hypervisor RAM image rebound — O(#benches)
-//! kernel assembly for an entire M×N fleet instead of O(M·N).
+//! each benchmark's guest world is assembled once into a frozen template,
+//! then every tenant forks it — O(#benches) kernel assembly for an entire
+//! M×N fleet, and (on the CoW RAM store) O(dirty pages) memory per fork:
+//! only the rebound hypervisor-image pages are copied, everything else
+//! rides the template's shared frames. Guest consoles are streamed into
+//! rolling SHA-256 digests with a bounded tail ([`crate::util`]) instead
+//! of retained as full `String`s per guest.
 //!
 //! Reported fleet-level stats: guest completion (pass/fail + p50/p99
 //! completion latency in scheduled ticks), aggregate throughput (guests/s
-//! and Minst/s of host wall-clock), world-switch overhead, and the
-//! wall-clock numbers a caller needs to compute host-side parallel speedup
-//! (run the same spec with `threads = 1` and divide).
+//! and Minst/s of host wall-clock), world-switch overhead, construction
+//! cost (pages forked vs the template page budget, resident bytes vs the
+//! full-copy bill), and the wall-clock numbers a caller needs to compute
+//! host-side parallel speedup (run the same spec with `threads = 1` and
+//! divide).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -22,8 +28,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::mem::PAGE_SIZE;
 use crate::mmu::Tlb;
 use crate::sim::Machine;
+use crate::util::ConsoleDigest;
 use crate::vmm::{FlushPolicy, GuestFactory, GuestVm, SchedKind, VmmScheduler};
 
 /// Everything that defines a fleet run.
@@ -59,7 +67,10 @@ impl FleetSpec {
     }
 }
 
-/// One guest's result, lifted out of the scheduler.
+/// One guest's result, lifted out of the scheduler. The console is a
+/// streaming digest (SHA-256 + length + bounded tail), not a retained
+/// `String` — at hundreds of nodes the report stays O(fleet), not
+/// O(fleet × console).
 #[derive(Clone, Debug)]
 pub struct GuestOutcome {
     pub node: usize,
@@ -69,7 +80,9 @@ pub struct GuestOutcome {
     /// Node-scheduled ticks at power-off (the completion latency).
     pub finished_at_total: Option<u64>,
     pub sim_insts: u64,
-    pub console: String,
+    pub console: ConsoleDigest,
+    /// RAM pages this guest's fork materialized at construction.
+    pub pages_forked: u64,
 }
 
 /// One node's result.
@@ -96,6 +109,21 @@ pub struct FleetReport {
     /// Image assemblies the construction cost (upper bound; see
     /// [`GuestFactory::assemblies`]).
     pub construct_assemblies: u64,
+    /// Forks performed at construction (one per guest).
+    pub construct_forks: u64,
+    /// RAM pages materialized by those forks (Σ per-guest
+    /// [`GuestVm::construct_pages`]) — the fork-cost numerator of the
+    /// "< 5% of template pages" acceptance gate.
+    pub construct_pages_forked: u64,
+    /// 4 KiB page slots per guest RAM (the per-fork gate denominator).
+    pub page_slots_per_guest: u64,
+    /// Peak-RSS proxy right after construction: template frames + pages
+    /// privately materialized by forks, in bytes. Compare with
+    /// [`FleetReport::construct_full_copy_bytes`].
+    pub construct_resident_bytes: u64,
+    /// What construction would have resided with one full RAM copy per
+    /// guest (`total_guests × ram_bytes`).
+    pub construct_full_copy_bytes: u64,
     /// Host wall-clock seconds of the sharded execution phase.
     pub wall_seconds: f64,
 }
@@ -129,6 +157,17 @@ impl FleetReport {
             0.0
         } else {
             total as f64 / switches as f64
+        }
+    }
+
+    /// Mean fraction of a template's page slots each fork materialized
+    /// (the acceptance gate requires < 0.05).
+    pub fn fork_page_fraction(&self) -> f64 {
+        let budget = self.construct_forks.saturating_mul(self.page_slots_per_guest);
+        if budget == 0 {
+            0.0
+        } else {
+            self.construct_pages_forked as f64 / budget as f64
         }
     }
 
@@ -186,13 +225,32 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
     // ---- checkpoint-forked construction ----
     let t0 = Instant::now();
     let mut factory = GuestFactory::new(spec.scale, spec.ram_bytes);
-    let mut jobs = Vec::with_capacity(spec.nodes);
+    let mut built: Vec<(usize, Vec<GuestVm>)> = Vec::with_capacity(spec.nodes);
     for node in 0..spec.nodes {
-        jobs.push(Mutex::new(Some((node, factory.node(&benches, spec.guests_per_node)?))));
+        let mut guests = factory.node(&benches, spec.guests_per_node)?;
+        for g in &mut guests {
+            // Stream consoles: fold everything beyond a bounded tail into
+            // a rolling digest instead of retaining per-guest strings.
+            g.bus.uart.stream_digest();
+        }
+        built.push((node, guests));
     }
     let construct_seconds = t0.elapsed().as_secs_f64();
     let construct_assemblies = factory.assemblies();
+    let construct_forks = factory.forks();
+    let construct_pages_forked = factory.pages_forked();
+    let page_slots_per_guest = factory.page_slots_per_guest();
+    // Peak-RSS proxy at the end of construction: the frozen templates'
+    // frames plus every page a fork privately materialized. (Template
+    // frames are freed when `factory` drops below, but construction had
+    // to hold them — a peak, not a steady-state, figure.)
+    let construct_resident_bytes = (factory.template_allocated_pages()
+        + construct_pages_forked)
+        .saturating_mul(PAGE_SIZE as u64);
+    let construct_full_copy_bytes = (spec.total_guests() as u64).saturating_mul(spec.ram_bytes as u64);
     drop(factory); // release the template worlds before the run phase
+    let jobs: Vec<Mutex<Option<(usize, Vec<GuestVm>)>>> =
+        built.into_iter().map(|job| Mutex::new(Some(job))).collect();
 
     // ---- sharded execution ----
     let threads = spec.threads.clamp(1, spec.nodes);
@@ -225,7 +283,8 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                         passed: g.passed(),
                         finished_at_total: g.finished_at_total,
                         sim_insts: g.stats.sim_insts,
-                        console: g.console(),
+                        console: g.console_digest(),
+                        pages_forked: g.construct_pages,
                     })
                     .collect();
                 results.lock().unwrap().push(NodeOutcome {
@@ -243,15 +302,29 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
 
     let mut nodes = results.into_inner().unwrap();
     nodes.sort_by_key(|n| n.node);
-    Ok(FleetReport { nodes, threads, construct_seconds, construct_assemblies, wall_seconds })
+    Ok(FleetReport {
+        nodes,
+        threads,
+        construct_seconds,
+        construct_assemblies,
+        construct_forks,
+        construct_pages_forked,
+        page_slots_per_guest,
+        construct_resident_bytes,
+        construct_full_copy_bytes,
+        wall_seconds,
+    })
 }
 
 /// One benchmark's solo (1-guest node) baseline: the console every fleet
-/// guest must reproduce byte-for-byte, and the completion ticks the SLO
-/// scheduler derives fair-share latency targets from.
+/// guest must reproduce byte-for-byte (checked by digest), and the
+/// completion ticks the SLO scheduler derives fair-share latency targets
+/// from. Solo runs are O(#benches), so the full console is retained here
+/// alongside its digest.
 #[derive(Clone, Debug)]
 pub struct SoloBaseline {
     pub console: String,
+    pub digest: ConsoleDigest,
     pub ticks: u64,
 }
 
@@ -274,27 +347,47 @@ pub fn solo_baselines(spec: &FleetSpec) -> Result<BTreeMap<String, SoloBaseline>
         let Some(ticks) = g.finished_at_total.filter(|_| g.passed()) else {
             bail!("solo baseline {bench} failed ({:?}); console:\n{}", g.exit, g.console());
         };
-        out.insert(bench.clone(), SoloBaseline { console: g.console(), ticks });
+        out.insert(
+            bench.clone(),
+            SoloBaseline { console: g.console(), digest: g.console_digest(), ticks },
+        );
     }
     Ok(out)
 }
 
 /// Console half of [`solo_baselines`] (compat surface for callers that
-/// only byte-check consoles).
+/// still want the retained solo strings).
 pub fn solo_consoles(spec: &FleetSpec) -> Result<BTreeMap<String, String>> {
     Ok(solo_baselines(spec)?.into_iter().map(|(k, v)| (k, v.console)).collect())
 }
 
-/// Compare every fleet guest's console with its solo baseline; returns
-/// human-readable mismatch descriptions (empty = all byte-identical).
-pub fn console_mismatches(report: &FleetReport, solos: &BTreeMap<String, String>) -> Vec<String> {
+/// Digest half of [`solo_baselines`] — the oracle [`console_mismatches`]
+/// compares every streamed fleet console against.
+pub fn solo_digests(spec: &FleetSpec) -> Result<BTreeMap<String, ConsoleDigest>> {
+    Ok(solo_baselines(spec)?.into_iter().map(|(k, v)| (k, v.digest)).collect())
+}
+
+/// Compare every fleet guest's console digest with its solo baseline;
+/// returns human-readable mismatch descriptions (empty = every stream
+/// byte-identical by SHA-256 + length + tail).
+pub fn console_mismatches(
+    report: &FleetReport,
+    solos: &BTreeMap<String, ConsoleDigest>,
+) -> Vec<String> {
     let mut bad = Vec::new();
     for g in report.guests() {
         match solos.get(&g.bench) {
             Some(solo) if *solo == g.console => {}
-            Some(_) => bad.push(format!(
-                "node {} guest {} ({}): console diverged from solo run",
-                g.node, g.id, g.bench
+            Some(solo) => bad.push(format!(
+                "node {} guest {} ({}): console diverged from solo run \
+                 (sha {} len {} vs solo sha {} len {})",
+                g.node,
+                g.id,
+                g.bench,
+                g.console.short_hex(),
+                g.console.len,
+                solo.short_hex(),
+                solo.len,
             )),
             None => bad.push(format!(
                 "node {} guest {} ({}): no solo baseline",
@@ -355,13 +448,19 @@ mod tests {
                         passed: true,
                         finished_at_total: Some(t),
                         sim_insts: 0,
-                        console: String::new(),
+                        console: ConsoleDigest::of_bytes(b""),
+                        pages_forked: 0,
                     })
                     .collect(),
             }],
             threads: 1,
             construct_seconds: 0.0,
             construct_assemblies: 0,
+            construct_forks: 0,
+            construct_pages_forked: 0,
+            page_slots_per_guest: 0,
+            construct_resident_bytes: 0,
+            construct_full_copy_bytes: 0,
             wall_seconds: 1.0,
         };
         let r = mk(&[40, 10, 30, 20]);

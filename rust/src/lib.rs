@@ -20,8 +20,10 @@
 //!   that turn one hart into a consolidated multi-tenant "cloud node"
 //!   (consolidation-sweep experiment).
 //! - [`fleet`]: the scale-out layer — M consolidated nodes sharded across
-//!   K host threads, built from checkpoint-forked guest worlds
-//!   (`hvsim fleet`, fleet-scaling experiment).
+//!   K host threads, built from guest worlds forked off copy-on-write RAM
+//!   templates in O(dirty pages), with consoles streamed as SHA-256
+//!   digests (`hvsim fleet`, fleet-scaling experiment).
+//! - [`util`]: dependency-free SHA-256 and the console-digest type.
 //! - [`trace`], [`runtime`]: trace capture and the PJRT-loaded XLA timing
 //!   model (Layer 2/1 artifacts).
 //! - [`coordinator`]: experiment orchestration — regenerates every figure
@@ -40,4 +42,5 @@ pub mod runtime;
 pub mod sim;
 pub mod sw;
 pub mod trace;
+pub mod util;
 pub mod vmm;

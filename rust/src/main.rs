@@ -363,10 +363,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     } else {
         None
     };
-    // Every fleet guest's console must be byte-identical to its solo run.
-    let solo_consoles: std::collections::BTreeMap<String, String> =
-        solos.iter().map(|(k, v)| (k.clone(), v.console.clone())).collect();
-    let mismatches = hvsim::fleet::console_mismatches(&report, &solo_consoles);
+    // Every fleet guest's console must be byte-identical to its solo run
+    // (checked by streaming digest: SHA-256 + length + tail).
+    let solo_digests: std::collections::BTreeMap<String, hvsim::util::ConsoleDigest> =
+        solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+    let mismatches = hvsim::fleet::console_mismatches(&report, &solo_digests);
 
     let mut out = coordinator::fleet_table(
         &spec,
@@ -443,6 +444,20 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             "checkpoint-forked construction not cheaper: {} vs {} assemblies",
             report.construct_assemblies,
             full_construct.1
+        );
+    }
+    // CoW acceptance gate: forked construction must materialize < 5% of
+    // the template's pages per guest (a rebind touches only the
+    // hypervisor-image pages; everything else rides shared frames). CI
+    // smokes this at 128 nodes.
+    if report.fork_page_fraction() >= 0.05 {
+        bail!(
+            "fleet construction not copy-on-write enough: {} pages across {} forks \
+             is {:.2}% of the {}-page/guest template budget (gate: < 5%)",
+            report.construct_pages_forked,
+            report.construct_forks,
+            100.0 * report.fork_page_fraction(),
+            report.page_slots_per_guest
         );
     }
     Ok(())

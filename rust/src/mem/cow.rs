@@ -1,0 +1,709 @@
+//! Page-granular guest RAM stores.
+//!
+//! [`CowRam`] is the copy-on-write store the fleet layer's O(dirty-pages)
+//! forking is built on: RAM is a table of 4 KiB pages, each either a
+//! logical zero page (`None`) or an `Arc`-shared frame. `Clone` copies the
+//! page *table* (refcount bumps, ~8 bytes/page), not the pages; the first
+//! write to a shared page clones that one frame (`Arc::make_mut`). A
+//! forked 48 MiB guest therefore costs one 12K-entry pointer table up
+//! front and one 4 KiB copy per page it actually dirties, instead of a
+//! 48 MiB memcpy per tenant.
+//!
+//! [`FlatRam`] is the historical flat-`Vec` store, kept as the reference
+//! implementation: `tests/cow_mem.rs` runs every benchmark on both stores
+//! and requires byte-identical final RAM, consoles and tick counts, and
+//! drives randomized op sequences against a model to prove fork siblings
+//! never leak writes.
+//!
+//! Both stores share the same contract, pinned by tests:
+//! - offsets are RAM-relative; an access must lie entirely inside the
+//!   store (`off + size <= len`) or the store panics *before* mutating
+//!   anything (the flat `Vec` used to partially apply a byte-loop write
+//!   before hitting the slice bound — see `write_oob_mutates_nothing`);
+//! - multi-byte accesses may straddle page boundaries (the flat store got
+//!   this for free; the paged store takes a byte-loop slow path);
+//! - zero-length loads/fills are no-ops anywhere in `0..=len`.
+
+use std::sync::Arc;
+
+/// log2 of the page size (4 KiB pages, matching Sv39 leaf granularity and
+/// the checkpoint format).
+pub const PAGE_SHIFT: u32 = 12;
+/// Guest RAM page size in bytes.
+pub const PAGE_SIZE: usize = 1 << PAGE_SHIFT;
+
+type Page = [u8; PAGE_SIZE];
+
+/// Which RAM store backs a [`crate::mem::Bus`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    /// Copy-on-write paged store (the default).
+    Cow,
+    /// Flat `Vec<u8>` reference store (differential testing).
+    Flat,
+}
+
+/// Copy-on-write paged RAM. See the module docs for the contract.
+#[derive(Clone)]
+pub struct CowRam {
+    /// One slot per 4 KiB page; `None` is a logical zero page.
+    pages: Vec<Option<Arc<Page>>>,
+    len: usize,
+    /// Pages privately materialized (allocated fresh or cloned off a
+    /// shared frame) by writes since construction / the last
+    /// [`CowRam::reset_touched`]. This is the fork-cost currency the
+    /// fleet report asserts on.
+    touched: u64,
+}
+
+impl CowRam {
+    pub fn new(len: usize) -> CowRam {
+        CowRam { pages: vec![None; len.div_ceil(PAGE_SIZE)], len, touched: 0 }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Little-endian read of `size` bytes ({1,2,4,8} take fixed-width
+    /// paths). Panics if the access is not entirely in `0..len`.
+    #[inline]
+    pub fn read(&self, off: usize, size: u64) -> u64 {
+        let n = size as usize;
+        assert!(off + n <= self.len, "RAM read out of range: {off:#x}+{n} > {:#x}", self.len);
+        let po = off & (PAGE_SIZE - 1);
+        if po + n <= PAGE_SIZE {
+            match &self.pages[off >> PAGE_SHIFT] {
+                Some(p) => match size {
+                    1 => p[po] as u64,
+                    2 => u16::from_le_bytes(p[po..po + 2].try_into().unwrap()) as u64,
+                    4 => u32::from_le_bytes(p[po..po + 4].try_into().unwrap()) as u64,
+                    8 => u64::from_le_bytes(p[po..po + 8].try_into().unwrap()),
+                    _ => {
+                        let mut v = 0u64;
+                        for i in 0..n {
+                            v |= (p[po + i] as u64) << (8 * i);
+                        }
+                        v
+                    }
+                },
+                None => 0,
+            }
+        } else {
+            self.read_straddle(off, n)
+        }
+    }
+
+    /// Slow path: a multi-byte access crossing a page boundary.
+    #[cold]
+    fn read_straddle(&self, off: usize, n: usize) -> u64 {
+        let mut v = 0u64;
+        for i in 0..n {
+            v |= (self.byte(off + i) as u64) << (8 * i);
+        }
+        v
+    }
+
+    #[inline]
+    fn byte(&self, off: usize) -> u8 {
+        match &self.pages[off >> PAGE_SHIFT] {
+            Some(p) => p[off & (PAGE_SIZE - 1)],
+            None => 0,
+        }
+    }
+
+    /// Little-endian write. Panics (before mutating anything) if the
+    /// access is not entirely in `0..len`.
+    #[inline]
+    pub fn write(&mut self, off: usize, size: u64, val: u64) {
+        let n = size as usize;
+        assert!(off + n <= self.len, "RAM write out of range: {off:#x}+{n} > {:#x}", self.len);
+        let po = off & (PAGE_SIZE - 1);
+        if po + n <= PAGE_SIZE {
+            let p = self.page_mut(off >> PAGE_SHIFT);
+            match size {
+                1 => p[po] = val as u8,
+                2 => p[po..po + 2].copy_from_slice(&(val as u16).to_le_bytes()),
+                4 => p[po..po + 4].copy_from_slice(&(val as u32).to_le_bytes()),
+                8 => p[po..po + 8].copy_from_slice(&val.to_le_bytes()),
+                _ => {
+                    for i in 0..n {
+                        p[po + i] = (val >> (8 * i)) as u8;
+                    }
+                }
+            }
+        } else {
+            self.write_straddle(off, n, val);
+        }
+    }
+
+    #[cold]
+    fn write_straddle(&mut self, off: usize, n: usize, val: u64) {
+        for i in 0..n {
+            let b = (val >> (8 * i)) as u8;
+            let p = self.page_mut((off + i) >> PAGE_SHIFT);
+            p[(off + i) & (PAGE_SIZE - 1)] = b;
+        }
+    }
+
+    /// A writable view of page `idx`, materializing it privately first:
+    /// zero pages allocate a fresh frame, shared frames clone-on-write.
+    #[inline]
+    fn page_mut(&mut self, idx: usize) -> &mut Page {
+        let slot = &mut self.pages[idx];
+        match slot {
+            Some(p) => {
+                if Arc::strong_count(p) > 1 {
+                    self.touched += 1;
+                }
+                Arc::make_mut(p)
+            }
+            None => {
+                self.touched += 1;
+                Arc::make_mut(slot.insert(Arc::new([0u8; PAGE_SIZE])))
+            }
+        }
+    }
+
+    /// Bulk load. Fully-covered pages are replaced wholesale (one
+    /// allocation, no copy-on-write of bytes about to be overwritten).
+    /// Zero-length loads are no-ops for any `off <= len`.
+    pub fn load(&mut self, off: usize, bytes: &[u8]) {
+        assert!(
+            off + bytes.len() <= self.len,
+            "RAM load out of range: {off:#x}+{} > {:#x}",
+            bytes.len(),
+            self.len
+        );
+        let mut off = off;
+        let mut rest = bytes;
+        while !rest.is_empty() {
+            let po = off & (PAGE_SIZE - 1);
+            let take = (PAGE_SIZE - po).min(rest.len());
+            let pi = off >> PAGE_SHIFT;
+            if po == 0 && take == PAGE_SIZE {
+                let slot = &mut self.pages[pi];
+                match slot {
+                    // Already privately owned: overwrite in place — not a
+                    // new materialization, so not counted.
+                    Some(p) if Arc::strong_count(p) == 1 => {
+                        Arc::make_mut(p).copy_from_slice(&rest[..PAGE_SIZE]);
+                    }
+                    // Zero or shared: replace wholesale (one allocation,
+                    // no CoW copy of bytes about to be overwritten).
+                    _ => {
+                        let mut page = [0u8; PAGE_SIZE];
+                        page.copy_from_slice(&rest[..PAGE_SIZE]);
+                        self.touched += 1;
+                        *slot = Some(Arc::new(page));
+                    }
+                }
+            } else {
+                self.page_mut(pi)[po..po + take].copy_from_slice(&rest[..take]);
+            }
+            off += take;
+            rest = &rest[take..];
+        }
+    }
+
+    /// Zero a range. Fully-covered pages drop back to logical zero pages
+    /// (releasing private frames and template references alike); partial
+    /// pages that are already zero pages are left untouched — so zeroing
+    /// never *materializes* anything.
+    pub fn fill_zero(&mut self, off: usize, flen: usize) {
+        assert!(
+            off + flen <= self.len,
+            "RAM fill out of range: {off:#x}+{flen} > {:#x}",
+            self.len
+        );
+        let mut off = off;
+        let mut rest = flen;
+        while rest > 0 {
+            let po = off & (PAGE_SIZE - 1);
+            let take = (PAGE_SIZE - po).min(rest);
+            let pi = off >> PAGE_SHIFT;
+            if po == 0 && take == PAGE_SIZE {
+                self.pages[pi] = None;
+            } else if self.pages[pi].is_some() {
+                self.page_mut(pi)[po..po + take].fill(0);
+            }
+            off += take;
+            rest -= take;
+        }
+    }
+
+    /// Copy a range out into a fresh `Vec`.
+    pub fn slice_to_vec(&self, off: usize, n: usize) -> Vec<u8> {
+        assert!(off + n <= self.len, "RAM slice out of range: {off:#x}+{n} > {:#x}", self.len);
+        let mut out = Vec::with_capacity(n);
+        let mut off = off;
+        let mut rest = n;
+        while rest > 0 {
+            let po = off & (PAGE_SIZE - 1);
+            let take = (PAGE_SIZE - po).min(rest);
+            match &self.pages[off >> PAGE_SHIFT] {
+                Some(p) => out.extend_from_slice(&p[po..po + take]),
+                None => out.resize(out.len() + take, 0),
+            }
+            off += take;
+            rest -= take;
+        }
+        out
+    }
+
+    /// Materialize the whole store (test/checkpoint use; O(len)).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.slice_to_vec(0, self.len)
+    }
+
+    /// Number of page slots (the last one may be partial).
+    #[inline]
+    pub fn num_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// The live bytes of page `i`, or `None` for a logical zero page. The
+    /// last page is truncated to the store length.
+    pub fn page_bytes(&self, i: usize) -> Option<&[u8]> {
+        let live = PAGE_SIZE.min(self.len - (i << PAGE_SHIFT));
+        self.pages[i].as_deref().map(|p| &p[..live])
+    }
+
+    /// True when page `i` of both stores is backed by the same frame (or
+    /// both are zero pages) — a content-equality fast path for diffing.
+    pub fn page_ptr_eq(&self, other: &CowRam, i: usize) -> bool {
+        match (&self.pages[i], &other.pages[i]) {
+            (None, None) => true,
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// Materialized pages (zero pages excluded).
+    pub fn allocated_pages(&self) -> u64 {
+        self.pages.iter().filter(|p| p.is_some()).count() as u64
+    }
+
+    /// Materialized pages whose frame is shared with at least one other
+    /// store (a template or a fork sibling).
+    pub fn shared_pages(&self) -> u64 {
+        self.pages
+            .iter()
+            .flatten()
+            .filter(|p| Arc::strong_count(p) > 1)
+            .count() as u64
+    }
+
+    /// Materialized pages privately owned by this store — the frames a
+    /// fork has actually paid for.
+    pub fn dirty_pages(&self) -> u64 {
+        self.pages
+            .iter()
+            .flatten()
+            .filter(|p| Arc::strong_count(p) == 1)
+            .count() as u64
+    }
+
+    /// Monotonic count of private materializations (see field docs).
+    pub fn pages_touched(&self) -> u64 {
+        self.touched
+    }
+
+    /// Reset the materialization counter (forks call this right after the
+    /// table clone, so the counter reads "pages this tenant paid for").
+    pub fn reset_touched(&mut self) {
+        self.touched = 0;
+    }
+}
+
+/// The flat `Vec<u8>` reference store. Deep-copied on `Clone` — forking a
+/// flat bus costs the full RAM memcpy the CoW store exists to avoid — and
+/// its accounting reports exactly that: every page is always materialized
+/// and private.
+#[derive(Clone)]
+pub struct FlatRam {
+    data: Vec<u8>,
+}
+
+impl FlatRam {
+    pub fn new(len: usize) -> FlatRam {
+        FlatRam { data: vec![0u8; len] }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn read(&self, off: usize, size: u64) -> u64 {
+        let n = size as usize;
+        assert!(off + n <= self.data.len(), "RAM read out of range: {off:#x}+{n}");
+        match size {
+            1 => self.data[off] as u64,
+            2 => u16::from_le_bytes(self.data[off..off + 2].try_into().unwrap()) as u64,
+            4 => u32::from_le_bytes(self.data[off..off + 4].try_into().unwrap()) as u64,
+            8 => u64::from_le_bytes(self.data[off..off + 8].try_into().unwrap()),
+            _ => {
+                let mut v = 0u64;
+                for i in 0..n {
+                    v |= (self.data[off + i] as u64) << (8 * i);
+                }
+                v
+            }
+        }
+    }
+
+    #[inline]
+    pub fn write(&mut self, off: usize, size: u64, val: u64) {
+        let n = size as usize;
+        // Checked up front so an out-of-range byte-loop write can no
+        // longer partially apply before panicking.
+        assert!(off + n <= self.data.len(), "RAM write out of range: {off:#x}+{n}");
+        match size {
+            1 => self.data[off] = val as u8,
+            2 => self.data[off..off + 2].copy_from_slice(&(val as u16).to_le_bytes()),
+            4 => self.data[off..off + 4].copy_from_slice(&(val as u32).to_le_bytes()),
+            8 => self.data[off..off + 8].copy_from_slice(&val.to_le_bytes()),
+            _ => {
+                for i in 0..n {
+                    self.data[off + i] = (val >> (8 * i)) as u8;
+                }
+            }
+        }
+    }
+
+    pub fn load(&mut self, off: usize, bytes: &[u8]) {
+        assert!(off + bytes.len() <= self.data.len(), "RAM load out of range");
+        self.data[off..off + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn fill_zero(&mut self, off: usize, flen: usize) {
+        assert!(off + flen <= self.data.len(), "RAM fill out of range");
+        self.data[off..off + flen].fill(0);
+    }
+
+    pub fn slice_to_vec(&self, off: usize, n: usize) -> Vec<u8> {
+        assert!(off + n <= self.data.len(), "RAM slice out of range");
+        self.data[off..off + n].to_vec()
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.data.clone()
+    }
+
+    #[inline]
+    pub fn num_pages(&self) -> usize {
+        self.data.len().div_ceil(PAGE_SIZE)
+    }
+
+    /// Always `Some`: a flat store has no zero-page representation.
+    pub fn page_bytes(&self, i: usize) -> Option<&[u8]> {
+        let lo = i << PAGE_SHIFT;
+        Some(&self.data[lo..(lo + PAGE_SIZE).min(self.data.len())])
+    }
+
+    pub fn allocated_pages(&self) -> u64 {
+        self.num_pages() as u64
+    }
+
+    pub fn shared_pages(&self) -> u64 {
+        0
+    }
+
+    pub fn dirty_pages(&self) -> u64 {
+        self.num_pages() as u64
+    }
+
+    /// A flat store materializes everything at construction; reporting
+    /// the full page count keeps fork-cost metrics honest when the
+    /// reference store is swapped in.
+    pub fn pages_touched(&self) -> u64 {
+        self.num_pages() as u64
+    }
+
+    pub fn reset_touched(&mut self) {}
+}
+
+/// The RAM store behind a [`crate::mem::Bus`]: CoW-paged by default, flat
+/// for the differential reference. A two-variant match on the hot path is
+/// one predicted branch — the price of keeping a bit-exact reference
+/// implementation permanently in-tree.
+#[derive(Clone)]
+pub enum RamStore {
+    Cow(CowRam),
+    Flat(FlatRam),
+}
+
+macro_rules! both {
+    ($self:expr, $s:ident => $e:expr) => {
+        match $self {
+            RamStore::Cow($s) => $e,
+            RamStore::Flat($s) => $e,
+        }
+    };
+}
+
+impl RamStore {
+    pub fn new(len: usize, kind: StoreKind) -> RamStore {
+        match kind {
+            StoreKind::Cow => RamStore::Cow(CowRam::new(len)),
+            StoreKind::Flat => RamStore::Flat(FlatRam::new(len)),
+        }
+    }
+
+    pub fn kind(&self) -> StoreKind {
+        match self {
+            RamStore::Cow(_) => StoreKind::Cow,
+            RamStore::Flat(_) => StoreKind::Flat,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        both!(self, s => s.len())
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        both!(self, s => s.is_empty())
+    }
+
+    #[inline]
+    pub fn read(&self, off: usize, size: u64) -> u64 {
+        both!(self, s => s.read(off, size))
+    }
+
+    #[inline]
+    pub fn write(&mut self, off: usize, size: u64, val: u64) {
+        both!(self, s => s.write(off, size, val))
+    }
+
+    pub fn load(&mut self, off: usize, bytes: &[u8]) {
+        both!(self, s => s.load(off, bytes))
+    }
+
+    pub fn fill_zero(&mut self, off: usize, flen: usize) {
+        both!(self, s => s.fill_zero(off, flen))
+    }
+
+    pub fn slice_to_vec(&self, off: usize, n: usize) -> Vec<u8> {
+        both!(self, s => s.slice_to_vec(off, n))
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        both!(self, s => s.to_vec())
+    }
+
+    pub fn num_pages(&self) -> usize {
+        both!(self, s => s.num_pages())
+    }
+
+    pub fn page_bytes(&self, i: usize) -> Option<&[u8]> {
+        both!(self, s => s.page_bytes(i))
+    }
+
+    /// Frame-identity fast path; `false` for flat stores (content compare
+    /// decides).
+    pub fn page_ptr_eq(&self, other: &RamStore, i: usize) -> bool {
+        match (self, other) {
+            (RamStore::Cow(a), RamStore::Cow(b)) => a.page_ptr_eq(b, i),
+            _ => false,
+        }
+    }
+
+    pub fn allocated_pages(&self) -> u64 {
+        both!(self, s => s.allocated_pages())
+    }
+
+    pub fn shared_pages(&self) -> u64 {
+        both!(self, s => s.shared_pages())
+    }
+
+    pub fn dirty_pages(&self) -> u64 {
+        both!(self, s => s.dirty_pages())
+    }
+
+    pub fn pages_touched(&self) -> u64 {
+        both!(self, s => s.pages_touched())
+    }
+
+    pub fn reset_touched(&mut self) {
+        both!(self, s => s.reset_touched())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_pages_read_zero_and_allocate_nothing() {
+        let r = CowRam::new(4 * PAGE_SIZE);
+        assert_eq!(r.allocated_pages(), 0);
+        assert_eq!(r.read(0, 8), 0);
+        assert_eq!(r.read(3 * PAGE_SIZE + 100, 4), 0);
+        assert_eq!(r.page_bytes(2), None);
+    }
+
+    #[test]
+    fn first_write_materializes_exactly_one_page() {
+        let mut r = CowRam::new(4 * PAGE_SIZE);
+        r.write(PAGE_SIZE + 8, 8, 0xdead_beef_0bad_f00d);
+        assert_eq!(r.allocated_pages(), 1);
+        assert_eq!(r.pages_touched(), 1);
+        assert_eq!(r.dirty_pages(), 1);
+        assert_eq!(r.read(PAGE_SIZE + 8, 8), 0xdead_beef_0bad_f00d);
+        // A second write to the same page is free.
+        r.write(PAGE_SIZE + 100, 4, 7);
+        assert_eq!(r.pages_touched(), 1);
+    }
+
+    #[test]
+    fn clone_shares_until_write() {
+        let mut a = CowRam::new(4 * PAGE_SIZE);
+        a.write(0, 8, 0x1111);
+        a.write(PAGE_SIZE, 8, 0x2222);
+        let mut b = a.clone();
+        assert_eq!(a.shared_pages(), 2);
+        assert_eq!(b.shared_pages(), 2);
+        assert_eq!(b.dirty_pages(), 0);
+        assert!(a.page_ptr_eq(&b, 0));
+
+        b.reset_touched();
+        b.write(0, 8, 0x3333);
+        assert_eq!(b.pages_touched(), 1, "one CoW break");
+        assert!(!a.page_ptr_eq(&b, 0));
+        assert!(a.page_ptr_eq(&b, 1), "untouched page still shared");
+        assert_eq!(a.read(0, 8), 0x1111, "writer did not leak into sibling");
+        assert_eq!(b.read(0, 8), 0x3333);
+        assert_eq!(b.read(PAGE_SIZE, 8), 0x2222);
+    }
+
+    #[test]
+    fn straddling_accesses_cross_pages() {
+        let mut r = CowRam::new(2 * PAGE_SIZE);
+        let v = 0x0102_0304_0506_0708u64;
+        r.write(PAGE_SIZE - 3, 8, v);
+        assert_eq!(r.allocated_pages(), 2, "straddle touched both pages");
+        assert_eq!(r.read(PAGE_SIZE - 3, 8), v);
+        assert_eq!(r.read(PAGE_SIZE - 1, 1), (v >> 16) as u8 as u64);
+        // Same bytes as the flat reference.
+        let mut f = FlatRam::new(2 * PAGE_SIZE);
+        f.write(PAGE_SIZE - 3, 8, v);
+        assert_eq!(r.to_vec(), f.to_vec());
+    }
+
+    #[test]
+    fn load_replaces_full_pages_and_merges_partial_ones() {
+        let mut r = CowRam::new(4 * PAGE_SIZE);
+        r.write(10, 1, 0xAA); // pre-existing content in page 0
+        let img: Vec<u8> = (0..PAGE_SIZE + 100).map(|i| (i % 251) as u8).collect();
+        r.load(PAGE_SIZE - 50, &img);
+        let mut model = vec![0u8; 4 * PAGE_SIZE];
+        model[10] = 0xAA;
+        model[PAGE_SIZE - 50..PAGE_SIZE - 50 + img.len()].copy_from_slice(&img);
+        assert_eq!(r.to_vec(), model);
+        // Zero-length loads are no-ops anywhere in 0..=len.
+        let touched = r.pages_touched();
+        r.load(0, &[]);
+        r.load(4 * PAGE_SIZE, &[]);
+        assert_eq!(r.pages_touched(), touched);
+    }
+
+    #[test]
+    fn reloading_a_private_page_is_not_a_new_materialization() {
+        let mut r = CowRam::new(2 * PAGE_SIZE);
+        let img_a = vec![0x11u8; PAGE_SIZE];
+        let img_b = vec![0x22u8; PAGE_SIZE];
+        r.load(0, &img_a);
+        assert_eq!(r.pages_touched(), 1);
+        // Same page, already private: an in-place overwrite, not a copy.
+        r.load(0, &img_b);
+        assert_eq!(r.pages_touched(), 1, "reload of a private page must not count");
+        assert_eq!(r.read(0, 8), 0x2222_2222_2222_2222);
+        // But reloading a page shared with a sibling is a materialization.
+        let sibling = r.clone();
+        r.load(0, &img_a);
+        assert_eq!(r.pages_touched(), 2, "reload of a shared page is a CoW break");
+        assert_eq!(sibling.read(0, 8), 0x2222_2222_2222_2222, "sibling kept its frame");
+    }
+
+    #[test]
+    fn fill_zero_releases_full_pages_without_materializing_partials() {
+        let mut a = CowRam::new(4 * PAGE_SIZE);
+        let fives = vec![0x55u8; 3 * PAGE_SIZE];
+        a.load(0, &fives);
+        let b = a.clone();
+        a.reset_touched();
+        // Zero pages 1..3 fully plus a partial head of page 0.
+        a.fill_zero(PAGE_SIZE - 16, 2 * PAGE_SIZE + 16);
+        assert_eq!(a.pages_touched(), 1, "only the partial page materialized");
+        assert_eq!(a.allocated_pages(), 1);
+        assert_eq!(a.read(PAGE_SIZE + 8, 8), 0);
+        assert_eq!(b.read(PAGE_SIZE + 8, 8), 0x5555_5555_5555_5555, "sibling kept its frames");
+        // Partial fill over a zero page stays a zero page.
+        let before = a.pages_touched();
+        a.fill_zero(3 * PAGE_SIZE + 8, 64);
+        assert_eq!(a.pages_touched(), before);
+        assert_eq!(a.allocated_pages(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn cow_write_past_end_panics() {
+        let mut r = CowRam::new(PAGE_SIZE);
+        r.write(PAGE_SIZE - 4, 8, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn flat_write_past_end_panics_without_mutating() {
+        let mut f = FlatRam::new(PAGE_SIZE);
+        f.write(PAGE_SIZE - 4, 8, 0xffff_ffff_ffff_ffff);
+    }
+
+    #[test]
+    fn flat_oob_write_mutates_nothing() {
+        // The historical byte-loop arm wrote the in-range prefix before
+        // panicking; the contract is now "panic before mutating".
+        let mut f = FlatRam::new(PAGE_SIZE);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f.write(PAGE_SIZE - 2, 3, 0xAABBCC);
+        }));
+        assert!(r.is_err());
+        assert_eq!(f.read(PAGE_SIZE - 2, 2), 0, "no partial write survived");
+
+        let mut c = CowRam::new(PAGE_SIZE);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.write(PAGE_SIZE - 2, 3, 0xAABBCC);
+        }));
+        assert!(r.is_err());
+        assert_eq!(c.read(PAGE_SIZE - 2, 2), 0);
+        assert_eq!(c.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn partial_last_page_is_bounded() {
+        let mut r = CowRam::new(PAGE_SIZE + 100);
+        assert_eq!(r.num_pages(), 2);
+        r.write(PAGE_SIZE + 92, 8, 0x7777);
+        assert_eq!(r.read(PAGE_SIZE + 92, 8), 0x7777);
+        assert_eq!(r.page_bytes(1).unwrap().len(), 100);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            r.write(PAGE_SIZE + 96, 8, 0);
+        }));
+        assert!(caught.is_err(), "write past logical end must panic even inside the page slot");
+    }
+}

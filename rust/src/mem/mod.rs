@@ -10,6 +10,15 @@
 //!   0x1000_0000  UART   (8250-subset console)
 //!   0x8000_0000  RAM
 //! ```
+//!
+//! RAM is a page-granular store ([`cow`]): copy-on-write [`CowRam`] by
+//! default, so cloning a `Bus` (checkpoint-forked guest construction)
+//! shares pages until first write, or the flat reference store for the
+//! differential memory-equivalence harness (`tests/cow_mem.rs`).
+
+pub mod cow;
+
+pub use cow::{CowRam, FlatRam, RamStore, StoreKind, PAGE_SHIFT, PAGE_SIZE};
 
 use crate::dev::{Clint, Plic, Uart};
 
@@ -31,11 +40,11 @@ pub const SYSCON_FAIL: u32 = 0x3333;
 pub struct AccessFault;
 
 /// The system bus: RAM plus devices. `Clone` supports checkpoint-forked
-/// guest construction (the vmm/fleet layers assemble one guest world per
-/// benchmark, then stamp out tenants by cloning the whole bus).
+/// guest construction; with the default CoW store a clone copies the page
+/// table only, and the first write to each shared page pays its 4 KiB.
 #[derive(Clone)]
 pub struct Bus {
-    ram: Vec<u8>,
+    ram: RamStore,
     pub clint: Clint,
     pub uart: Uart,
     pub plic: Plic,
@@ -44,14 +53,25 @@ pub struct Bus {
 }
 
 impl Bus {
+    /// A bus over the default copy-on-write paged RAM store.
     pub fn new(ram_bytes: usize) -> Bus {
+        Bus::with_store(ram_bytes, StoreKind::Cow)
+    }
+
+    /// A bus over an explicit RAM store (the flat reference store exists
+    /// for differential testing against the CoW store).
+    pub fn with_store(ram_bytes: usize, kind: StoreKind) -> Bus {
         Bus {
-            ram: vec![0u8; ram_bytes],
+            ram: RamStore::new(ram_bytes, kind),
             clint: Clint::new(),
             uart: Uart::new(),
             plic: Plic::new(),
             poweroff: None,
         }
+    }
+
+    pub fn store_kind(&self) -> StoreKind {
+        self.ram.kind()
     }
 
     pub fn ram_size(&self) -> u64 {
@@ -64,64 +84,107 @@ impl Bus {
     }
 
     /// Fast path: RAM read, little-endian, any size in {1,2,4,8}.
-    /// Fixed-width `from_le_bytes` loads instead of byte loops (§Perf).
+    /// Panics when the access is not entirely inside RAM (callers
+    /// pre-check with [`Bus::in_ram`]; [`Bus::read`] returns a fault).
     #[inline]
     pub fn read_ram(&self, addr: u64, size: u64) -> u64 {
-        let off = (addr - RAM_BASE) as usize;
-        match size {
-            1 => self.ram[off] as u64,
-            2 => u16::from_le_bytes(self.ram[off..off + 2].try_into().unwrap()) as u64,
-            4 => u32::from_le_bytes(self.ram[off..off + 4].try_into().unwrap()) as u64,
-            8 => u64::from_le_bytes(self.ram[off..off + 8].try_into().unwrap()),
-            _ => {
-                let mut v = 0u64;
-                for i in 0..size as usize {
-                    v |= (self.ram[off + i] as u64) << (8 * i);
-                }
-                v
-            }
-        }
+        self.ram.read((addr - RAM_BASE) as usize, size)
     }
 
+    /// RAM write, little-endian. Panics — before mutating anything — when
+    /// the access is not entirely inside RAM.
     #[inline]
     pub fn write_ram(&mut self, addr: u64, size: u64, val: u64) {
-        let off = (addr - RAM_BASE) as usize;
-        match size {
-            1 => self.ram[off] = val as u8,
-            2 => self.ram[off..off + 2].copy_from_slice(&(val as u16).to_le_bytes()),
-            4 => self.ram[off..off + 4].copy_from_slice(&(val as u32).to_le_bytes()),
-            8 => self.ram[off..off + 8].copy_from_slice(&val.to_le_bytes()),
-            _ => {
-                for i in 0..size as usize {
-                    self.ram[off + i] = (val >> (8 * i)) as u8;
-                }
-            }
-        }
+        self.ram.write((addr - RAM_BASE) as usize, size, val)
     }
 
-    /// Bulk load (program images, checkpoint restore).
+    /// Bulk load (program images, checkpoint restore). Zero-length loads
+    /// are accepted (and are no-ops) anywhere in `RAM_BASE..=RAM_END`.
     pub fn load_image(&mut self, addr: u64, bytes: &[u8]) -> Result<(), AccessFault> {
         if !self.in_ram(addr, bytes.len() as u64) {
             return Err(AccessFault);
         }
-        let off = (addr - RAM_BASE) as usize;
-        self.ram[off..off + bytes.len()].copy_from_slice(bytes);
+        self.ram.load((addr - RAM_BASE) as usize, bytes);
         Ok(())
     }
 
-    pub fn ram_slice(&self, addr: u64, len: u64) -> Result<&[u8], AccessFault> {
+    /// Zero a RAM range. On the CoW store, fully-covered pages drop back
+    /// to zero pages (releasing their frames) — zeroing never copies.
+    pub fn fill_ram(&mut self, addr: u64, len: u64) -> Result<(), AccessFault> {
         if !self.in_ram(addr, len) {
             return Err(AccessFault);
         }
-        let off = (addr - RAM_BASE) as usize;
-        Ok(&self.ram[off..off + len as usize])
+        self.ram.fill_zero((addr - RAM_BASE) as usize, len as usize);
+        Ok(())
     }
 
-    pub fn ram_bytes(&self) -> &[u8] {
-        &self.ram
+    /// Copy of a RAM range (the paged store has no contiguous backing to
+    /// borrow from, so this materializes; test/tooling use).
+    pub fn ram_slice(&self, addr: u64, len: u64) -> Result<Vec<u8>, AccessFault> {
+        if !self.in_ram(addr, len) {
+            return Err(AccessFault);
+        }
+        Ok(self.ram.slice_to_vec((addr - RAM_BASE) as usize, len as usize))
     }
-    pub fn ram_bytes_mut(&mut self) -> &mut [u8] {
-        &mut self.ram
+
+    /// Materialized copy of all of RAM — O(ram_size), test/checkpoint
+    /// tooling only. Hot paths use [`Bus::read_ram`]/[`Bus::ram_page`].
+    pub fn ram_bytes(&self) -> Vec<u8> {
+        self.ram.to_vec()
+    }
+
+    // ---- page-level surface (checkpoints, fork accounting) ----
+
+    /// Number of 4 KiB page slots (the last may be partial).
+    pub fn ram_pages(&self) -> usize {
+        self.ram.num_pages()
+    }
+
+    /// Live bytes of RAM page `i`; `None` is a known-zero page.
+    pub fn ram_page(&self, i: usize) -> Option<&[u8]> {
+        self.ram.page_bytes(i)
+    }
+
+    /// Frame-identity fast path for page diffing (always `false` unless
+    /// both buses use the CoW store).
+    pub fn ram_page_ptr_eq(&self, other: &Bus, i: usize) -> bool {
+        self.ram.page_ptr_eq(&other.ram, i)
+    }
+
+    /// Replace this bus's RAM with a shared clone of `template`'s (O(page
+    /// table) on the CoW store). Sizes must match. The store kind follows
+    /// the template.
+    pub fn clone_ram_from(&mut self, template: &Bus) -> Result<(), AccessFault> {
+        if self.ram.len() != template.ram.len() {
+            return Err(AccessFault);
+        }
+        self.ram = template.ram.clone();
+        Ok(())
+    }
+
+    /// Materialized (non-zero-backed) pages.
+    pub fn ram_allocated_pages(&self) -> u64 {
+        self.ram.allocated_pages()
+    }
+
+    /// Pages whose frames are shared with a template or fork sibling.
+    pub fn ram_shared_pages(&self) -> u64 {
+        self.ram.shared_pages()
+    }
+
+    /// Pages privately owned by this bus (the frames a fork paid for).
+    pub fn ram_dirty_pages(&self) -> u64 {
+        self.ram.dirty_pages()
+    }
+
+    /// Monotonic count of pages privately materialized by writes since
+    /// construction / the last [`Bus::reset_ram_touch_accounting`].
+    pub fn ram_pages_touched(&self) -> u64 {
+        self.ram.pages_touched()
+    }
+
+    pub fn reset_ram_touch_accounting(&mut self) {
+        self.ram.reset_touched()
     }
 
     /// Physical read with full device decode.
@@ -176,11 +239,14 @@ mod tests {
 
     #[test]
     fn ram_round_trip_all_sizes() {
-        let mut bus = Bus::new(1 << 20);
-        for (size, val) in [(1u64, 0xabu64), (2, 0xbeef), (4, 0xdead_beef), (8, 0x0123_4567_89ab_cdef)]
-        {
-            bus.write(RAM_BASE + 0x100, size, val).unwrap();
-            assert_eq!(bus.read(RAM_BASE + 0x100, size).unwrap(), val);
+        for kind in [StoreKind::Cow, StoreKind::Flat] {
+            let mut bus = Bus::with_store(1 << 20, kind);
+            for (size, val) in
+                [(1u64, 0xabu64), (2, 0xbeef), (4, 0xdead_beef), (8, 0x0123_4567_89ab_cdef)]
+            {
+                bus.write(RAM_BASE + 0x100, size, val).unwrap();
+                assert_eq!(bus.read(RAM_BASE + 0x100, size).unwrap(), val);
+            }
         }
     }
 
@@ -203,6 +269,29 @@ mod tests {
     }
 
     #[test]
+    fn writes_straddling_the_last_page_stay_in_bounds() {
+        // Two pages of RAM: an 8-byte write crossing into the last page
+        // round-trips; the same write shifted past the end faults at the
+        // bus layer and panics (without mutating) at the raw layer.
+        for kind in [StoreKind::Cow, StoreKind::Flat] {
+            let mut bus = Bus::with_store(2 * PAGE_SIZE, kind);
+            let addr = RAM_BASE + PAGE_SIZE as u64 - 4;
+            bus.write(addr, 8, 0x1122_3344_5566_7788).unwrap();
+            assert_eq!(bus.read(addr, 8).unwrap(), 0x1122_3344_5566_7788);
+            let end = RAM_BASE + 2 * PAGE_SIZE as u64;
+            assert_eq!(bus.write(end - 4, 8, 0), Err(AccessFault));
+            assert_eq!(bus.read(end - 4, 8), Err(AccessFault));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn raw_write_ram_past_end_panics() {
+        let mut bus = Bus::new(4096);
+        bus.write_ram(RAM_BASE + 4094, 4, 0);
+    }
+
+    #[test]
     fn syscon_poweroff() {
         let mut bus = Bus::new(4096);
         assert_eq!(bus.poweroff, None);
@@ -216,5 +305,45 @@ mod tests {
         bus.load_image(RAM_BASE + 8, &[1, 2, 3, 4]).unwrap();
         assert_eq!(bus.read(RAM_BASE + 8, 4).unwrap(), 0x0403_0201);
         assert!(bus.load_image(RAM_BASE + 4094, &[0; 8]).is_err());
+    }
+
+    #[test]
+    fn zero_length_loads_are_noops_with_explicit_bounds() {
+        // Pinned behavior (satellite fix): a zero-length load anywhere in
+        // RAM_BASE..=RAM_END succeeds and changes nothing; below RAM it
+        // faults like any other miss.
+        let mut bus = Bus::new(4096);
+        bus.load_image(RAM_BASE, &[]).unwrap();
+        bus.load_image(RAM_BASE + 4096, &[]).unwrap(); // end boundary: ok
+        assert_eq!(bus.load_image(RAM_BASE - 1, &[]), Err(AccessFault));
+        assert_eq!(bus.load_image(0, &[]), Err(AccessFault));
+        assert_eq!(bus.ram_allocated_pages(), 0, "no page materialized");
+    }
+
+    #[test]
+    fn fill_ram_and_clone_share_pages() {
+        let mut a = Bus::new(4 * PAGE_SIZE);
+        a.load_image(RAM_BASE, &[7u8; 3 * PAGE_SIZE]).unwrap();
+        let mut b = a.clone();
+        assert_eq!(b.ram_shared_pages(), 3);
+        b.reset_ram_touch_accounting();
+        b.fill_ram(RAM_BASE, 2 * PAGE_SIZE as u64).unwrap();
+        assert_eq!(b.ram_pages_touched(), 0, "page-aligned zeroing copies nothing");
+        assert_eq!(b.read(RAM_BASE, 8).unwrap(), 0);
+        assert_eq!(a.read(RAM_BASE, 8).unwrap(), 0x0707_0707_0707_0707);
+        assert!(b.fill_ram(RAM_BASE + 3 * PAGE_SIZE as u64, PAGE_SIZE as u64 + 1).is_err());
+    }
+
+    #[test]
+    fn clone_ram_from_requires_matching_size() {
+        let mut a = Bus::new(2 * PAGE_SIZE);
+        let mut t = Bus::new(2 * PAGE_SIZE);
+        t.write(RAM_BASE, 8, 0xfeed).unwrap();
+        a.write(RAM_BASE, 8, 0xdead).unwrap();
+        a.clone_ram_from(&t).unwrap();
+        assert_eq!(a.read(RAM_BASE, 8).unwrap(), 0xfeed);
+        assert!(a.ram_page_ptr_eq(&t, 0), "restored page is shared, not copied");
+        let small = Bus::new(PAGE_SIZE);
+        assert_eq!(a.clone_ram_from(&small), Err(AccessFault));
     }
 }

@@ -45,9 +45,20 @@ pub struct Machine {
 
 impl Machine {
     pub fn new(ram_bytes: usize, h_enabled: bool) -> Machine {
+        Machine::with_store(ram_bytes, h_enabled, crate::mem::StoreKind::Cow)
+    }
+
+    /// A machine over an explicit RAM store. The flat reference store
+    /// exists so `tests/cow_mem.rs` can run every benchmark on both
+    /// substrates and require bit-identical behavior.
+    pub fn with_store(
+        ram_bytes: usize,
+        h_enabled: bool,
+        kind: crate::mem::StoreKind,
+    ) -> Machine {
         Machine {
             core: Core::new(h_enabled),
-            bus: Bus::new(ram_bytes),
+            bus: Bus::with_store(ram_bytes, kind),
             stats: SimStats::default(),
             device_countdown: 0,
         }
@@ -213,6 +224,12 @@ impl Machine {
     /// Console output so far.
     pub fn console(&self) -> String {
         self.bus.uart.output_string()
+    }
+
+    /// Streaming digest of the console byte stream (see
+    /// [`crate::util::ConsoleDigest`]).
+    pub fn console_digest(&self) -> crate::util::ConsoleDigest {
+        self.bus.uart.digest()
     }
 
     /// Formatted gem5-style stats dump.

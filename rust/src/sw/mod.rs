@@ -232,10 +232,12 @@ pub fn rebind_guest_vmid(
     }
     // Zero the whole HV image slot first: images may differ in length
     // across VMIDs, and a rebound world must be byte-identical to a
-    // freshly assembled one.
-    let lo = (HV_BASE - crate::mem::RAM_BASE) as usize;
-    let hi = (HV_REGION_END - crate::mem::RAM_BASE) as usize;
-    bus.ram_bytes_mut()[lo..hi].fill(0);
+    // freshly assembled one. The slot is page-aligned, so on the CoW
+    // store this drops the template's frames without copying anything —
+    // the only pages a fork materializes are the ones the new image
+    // lands on below.
+    bus.fill_ram(HV_BASE, HV_REGION_END - HV_BASE)
+        .map_err(|_| anyhow::anyhow!("hypervisor slot outside guest RAM"))?;
     let hv = hypervisor_image_with_vmid(vmid)?;
     // The image must stay inside the slot being zeroed: past HV_REGION_END
     // lives the G-stage table pool, and stale bytes beyond the zeroed

@@ -1,0 +1,244 @@
+//! Small self-contained utilities: a dependency-free SHA-256 and the
+//! [`ConsoleDigest`] the fleet layer streams guest consoles into.
+//!
+//! The fleet layer used to retain every guest's full console `String` in
+//! its report; at hundreds of nodes that is O(fleet) live strings for a
+//! byte-equality check. A console is now summarized as a rolling SHA-256
+//! over the full stream plus a bounded tail (for human diagnostics) —
+//! equality of (`sha256`, `len`, `tail`) is the fleet's console-vs-solo
+//! oracle.
+
+/// Bytes of console tail retained for diagnostics (and for the bounded
+/// buffer the streaming UART keeps).
+pub const CONSOLE_TAIL: usize = 256;
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+/// Incremental SHA-256 (FIPS 180-4). `Clone` is cheap, so a rolling
+/// hasher can be snapshotted to produce a digest mid-stream.
+#[derive(Clone, Debug)]
+pub struct Sha256 {
+    state: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Sha256::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Sha256 {
+        Sha256 { state: H0, buf: [0u8; 64], buf_len: 0, total: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            } else {
+                // Chunk fully absorbed without filling the block; the
+                // trailing store below must not clobber buf_len.
+                return;
+            }
+        }
+        while data.len() >= 64 {
+            let (block, rest) = data.split_at(64);
+            self.compress(block.try_into().unwrap());
+            data = rest;
+        }
+        self.buf[..data.len()].copy_from_slice(data);
+        self.buf_len = data.len();
+    }
+
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bits = self.total.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // The length update must not recount padding: bypass update().
+        self.buf[56..64].copy_from_slice(&bits.to_be_bytes());
+        let block = self.buf;
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, w) in self.state.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, c) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes(c.try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        for (s, v) in self.state.iter_mut().zip([a, b, c, d, e, f, g, h]) {
+            *s = s.wrapping_add(v);
+        }
+    }
+
+    /// One-shot convenience.
+    pub fn digest(data: &[u8]) -> [u8; 32] {
+        let mut h = Sha256::new();
+        h.update(data);
+        h.finalize()
+    }
+}
+
+/// Streaming summary of a console: SHA-256 over the full byte stream,
+/// total length, and the last [`CONSOLE_TAIL`] bytes for diagnostics.
+/// Equality means "byte-identical stream" (modulo SHA-256 collisions).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConsoleDigest {
+    pub sha256: [u8; 32],
+    pub len: u64,
+    pub tail: String,
+}
+
+impl ConsoleDigest {
+    /// Digest a fully-retained console (solo baselines take this path;
+    /// streamed fleet guests produce the same value incrementally).
+    pub fn of_bytes(bytes: &[u8]) -> ConsoleDigest {
+        let tail_at = bytes.len().saturating_sub(CONSOLE_TAIL);
+        ConsoleDigest {
+            sha256: Sha256::digest(bytes),
+            len: bytes.len() as u64,
+            tail: String::from_utf8_lossy(&bytes[tail_at..]).into_owned(),
+        }
+    }
+
+    /// Lowercase hex of the SHA-256.
+    pub fn hex(&self) -> String {
+        self.sha256.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    /// Short hex prefix for reports.
+    pub fn short_hex(&self) -> String {
+        self.hex()[..12].to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(d: [u8; 32]) -> String {
+        d.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn sha256_known_vectors() {
+        assert_eq!(
+            hex(Sha256::digest(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(Sha256::digest(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(Sha256::digest(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq")),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn incremental_updates_match_one_shot() {
+        // Cover every buffer-boundary case: sub-block, exactly-one-block,
+        // and straddling chunk sizes.
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let want = Sha256::digest(&data);
+        for chunk in [1usize, 3, 63, 64, 65, 127, 997] {
+            let mut h = Sha256::new();
+            for c in data.chunks(chunk) {
+                h.update(c);
+            }
+            assert_eq!(h.finalize(), want, "chunk size {chunk}");
+        }
+        // 55/56/64-byte messages hit the padding edge cases.
+        for n in [55usize, 56, 63, 64] {
+            let mut h = Sha256::new();
+            h.update(&data[..n]);
+            assert_eq!(h.finalize(), Sha256::digest(&data[..n]), "len {n}");
+        }
+    }
+
+    #[test]
+    fn snapshot_hasher_resumes() {
+        let mut h = Sha256::new();
+        h.update(b"hello ");
+        let snap = h.clone();
+        h.update(b"world");
+        assert_eq!(h.finalize(), Sha256::digest(b"hello world"));
+        let mut h2 = snap;
+        h2.update(b"fleet");
+        assert_eq!(h2.finalize(), Sha256::digest(b"hello fleet"));
+    }
+
+    #[test]
+    fn console_digest_tail_and_equality() {
+        let short = ConsoleDigest::of_bytes(b"ok\n");
+        assert_eq!(short.tail, "ok\n");
+        assert_eq!(short.len, 3);
+        let long: Vec<u8> = (0..1000).map(|i| b'a' + (i % 26) as u8).collect();
+        let d = ConsoleDigest::of_bytes(&long);
+        assert_eq!(d.tail.len(), CONSOLE_TAIL);
+        assert_eq!(d.tail.as_bytes(), &long[1000 - CONSOLE_TAIL..]);
+        assert_ne!(d, ConsoleDigest::of_bytes(&long[..999]));
+        assert_eq!(d, ConsoleDigest::of_bytes(&long));
+        assert_eq!(d.short_hex().len(), 12);
+    }
+}

@@ -94,6 +94,11 @@ pub struct GuestVm {
     /// the "completion latency" the consolidation sweep reports.
     pub finished_at_total: Option<u64>,
     pub slices_run: u64,
+    /// RAM pages privately materialized to construct this guest: the full
+    /// image-page set for a [`GuestVm::new`] world, only the rebound
+    /// hypervisor-image pages for a [`GuestVm::fork`] — the fleet's
+    /// fork-cost metric.
+    pub construct_pages: u64,
     /// Parked device-timebase phase (see `Machine::device_countdown`).
     pub(crate) dev_countdown: u64,
 }
@@ -106,6 +111,7 @@ impl GuestVm {
         let mut vcpu = Vcpu::new(true);
         let vmid = id as u16 + 1;
         sw::setup_guest_world(&mut bus, &mut vcpu.hart, bench, scale, vmid)?;
+        let construct_pages = bus.ram_pages_touched();
         Ok(GuestVm {
             id,
             vmid,
@@ -117,6 +123,7 @@ impl GuestVm {
             exit: None,
             finished_at_total: None,
             slices_run: 0,
+            construct_pages,
             dev_countdown: 0,
         })
     }
@@ -124,9 +131,12 @@ impl GuestVm {
     /// Checkpoint-fork: clone this parked *pre-boot* world into a new
     /// tenant, rebinding only the VMID and the hypervisor RAM image that
     /// carries it ([`sw::rebind_guest_vmid`]) — everything else in an
-    /// assembled guest world is VMID-independent. O(RAM memcpy) instead of
-    /// re-assembling the whole software stack; the fleet layer uses this
-    /// to stamp out M×N tenants from one template per benchmark.
+    /// assembled guest world is VMID-independent. With the CoW RAM store
+    /// the clone copies the page *table* only and the rebind materializes
+    /// just the hypervisor-image pages, so a fork is O(dirty pages), not
+    /// O(ram_bytes); [`GuestVm::construct_pages`] records exactly what it
+    /// paid. The fleet layer uses this to stamp out M×N tenants from one
+    /// template per benchmark.
     pub fn fork(&self, id: usize, vmid: u16) -> Result<GuestVm> {
         // Pre-boot only — a world that has run carries execution state
         // (RAM, console, poweroff latch) that a "new" tenant must not
@@ -145,10 +155,14 @@ impl GuestVm {
         g.finished_at_total = None;
         g.slices_run = 0;
         g.dev_countdown = 0;
+        // Count only what *this tenant* materializes on top of the shared
+        // template pages.
+        g.bus.reset_ram_touch_accounting();
         if vmid != g.vmid {
             sw::rebind_guest_vmid(&mut g.bus, &g.vcpu.hart, vmid)?;
             g.vmid = vmid;
         }
+        g.construct_pages = g.bus.ram_pages_touched();
         Ok(g)
     }
 
@@ -163,6 +177,7 @@ impl GuestVm {
             .map_err(|_| anyhow::anyhow!("synthetic guest image does not fit in RAM"))?;
         let mut vcpu = Vcpu::new(true);
         vcpu.hart.pc = crate::mem::RAM_BASE;
+        let construct_pages = bus.ram_pages_touched();
         Ok(GuestVm {
             id,
             vmid: id as u16 + 1,
@@ -174,6 +189,7 @@ impl GuestVm {
             exit: None,
             finished_at_total: None,
             slices_run: 0,
+            construct_pages,
             dev_countdown: 0,
         })
     }
@@ -185,22 +201,40 @@ impl GuestVm {
     pub fn console(&self) -> String {
         self.bus.uart.output_string()
     }
+
+    /// Streaming digest of this guest's complete console (works in both
+    /// retained and streamed UART capture modes).
+    pub fn console_digest(&self) -> crate::util::ConsoleDigest {
+        self.bus.uart.digest()
+    }
 }
 
 /// Checkpoint-fork guest factory: assembles each distinct benchmark's
-/// guest world exactly once (the "checkpoint"), then stamps out tenants by
-/// [`GuestVm::fork`] — O(#benches) kernel assembly for an entire fleet
-/// instead of O(nodes × guests).
+/// guest world exactly once (the frozen "checkpoint" template), then
+/// stamps out tenants by [`GuestVm::fork`] — O(#benches) kernel assembly
+/// and O(dirty pages) RAM per tenant for an entire fleet instead of
+/// O(nodes × guests) assemblies and full RAM copies. Templates stay
+/// frozen: forks clone the page table and CoW away from it, so a
+/// template's frames are never written through.
 pub struct GuestFactory {
     scale: u64,
     ram_bytes: usize,
     templates: BTreeMap<String, GuestVm>,
     assemblies: u64,
+    forks: u64,
+    pages_forked: u64,
 }
 
 impl GuestFactory {
     pub fn new(scale: u64, ram_bytes: usize) -> GuestFactory {
-        GuestFactory { scale, ram_bytes, templates: BTreeMap::new(), assemblies: 0 }
+        GuestFactory {
+            scale,
+            ram_bytes,
+            templates: BTreeMap::new(),
+            assemblies: 0,
+            forks: 0,
+            pages_forked: 0,
+        }
     }
 
     /// Upper bound on image assemblies this factory has caused: 3 per
@@ -210,6 +244,37 @@ impl GuestFactory {
     /// a parallel test harness, unlike the global [`sw::assembly_count`].
     pub fn assemblies(&self) -> u64 {
         self.assemblies
+    }
+
+    /// Forks performed by this factory.
+    pub fn forks(&self) -> u64 {
+        self.forks
+    }
+
+    /// RAM pages materialized by all forks so far (each fork's
+    /// [`GuestVm::construct_pages`], summed) — the numerator of the
+    /// "< 5% of template pages copied" fleet gate.
+    pub fn pages_forked(&self) -> u64 {
+        self.pages_forked
+    }
+
+    /// 4 KiB page slots per guest RAM — the per-fork denominator of the
+    /// fork-cost gate.
+    pub fn page_slots_per_guest(&self) -> u64 {
+        self.ram_bytes.div_ceil(crate::mem::PAGE_SIZE) as u64
+    }
+
+    /// Pages actually materialized across all frozen templates (the
+    /// shared base the whole fleet rides on).
+    pub fn template_allocated_pages(&self) -> u64 {
+        self.templates.values().map(|t| t.bus.ram_allocated_pages()).sum()
+    }
+
+    /// The frozen template world for `bench`, if one has been built —
+    /// the base for template-relative checkpoints
+    /// ([`crate::sim::checkpoint::save_vs_template`]).
+    pub fn template(&self, bench: &str) -> Option<&GuestVm> {
+        self.templates.get(bench)
     }
 
     /// One tenant, forked from the benchmark's template world (which is
@@ -226,7 +291,10 @@ impl GuestFactory {
         if self.templates[bench].vmid != vmid {
             self.assemblies += 1;
         }
-        self.templates[bench].fork(id, vmid)
+        let g = self.templates[bench].fork(id, vmid)?;
+        self.forks += 1;
+        self.pages_forked += g.construct_pages;
+        Ok(g)
     }
 
     /// A consolidated node: `count` guests cycling through `benches` with
@@ -603,6 +671,67 @@ mod tests {
         // per-guest setup would have assembled ≥ 2 images (firmware +
         // kernel) for each of the 4 guests.
         assert!(f.assemblies() < 2 * 4, "forked {} vs full ≥ 8 assemblies", f.assemblies());
+    }
+
+    #[test]
+    fn fork_cost_is_o_dirty_pages() {
+        let t = GuestVm::new(0, "bitcount", 1, crate::sw::GUEST_RAM_MIN).unwrap();
+        let template_alloc = t.bus.ram_allocated_pages();
+        assert!(template_alloc > 0);
+        assert_eq!(t.construct_pages, template_alloc, "fresh world pays for every image page");
+
+        // Same-VMID fork: nothing rebinds, nothing is copied.
+        let same = t.fork(7, 1).unwrap();
+        assert_eq!(same.construct_pages, 0, "same-VMID fork must copy zero pages");
+        assert_eq!(same.bus.ram_dirty_pages(), 0);
+        assert!(same.bus.ram_shared_pages() > 0, "everything rides the template frames");
+
+        // Rebinding fork: pays only for the hypervisor-image pages, a
+        // small fraction of the template.
+        let rebound = t.fork(3, 4).unwrap();
+        assert!(rebound.construct_pages > 0);
+        let hv_slot_pages = (crate::sw::HV_REGION_END - crate::sw::HV_BASE) / 4096;
+        assert!(
+            rebound.construct_pages <= hv_slot_pages,
+            "rebind touched {} pages, more than the {}-page HV slot",
+            rebound.construct_pages,
+            hv_slot_pages
+        );
+        assert!(
+            rebound.construct_pages * 20 < t.bus.ram_pages() as u64,
+            "fork must materialize < 5% of the template's page slots"
+        );
+
+        // The frozen template was never written through.
+        assert_eq!(t.bus.ram_pages_touched(), t.construct_pages);
+        assert_eq!(t.bus.ram_allocated_pages(), template_alloc);
+
+        // Running a fork dirties its own pages, never the siblings'.
+        let mut m = Machine::new(crate::sw::GUEST_RAM_MIN, true);
+        let mut runner = t.fork(1, 2).unwrap();
+        world_swap(&mut m, &mut runner);
+        m.run(100_000);
+        world_swap(&mut m, &mut runner);
+        assert!(runner.bus.ram_dirty_pages() > 0, "boot dirtied pages");
+        assert!(same.bus.ram_dirty_pages() == 0, "sibling untouched");
+        assert_eq!(t.bus.ram_pages_touched(), t.construct_pages, "template still frozen");
+    }
+
+    #[test]
+    fn factory_reports_fork_page_costs() {
+        let mut f = GuestFactory::new(1, crate::sw::GUEST_RAM_MIN);
+        let node = f.node(&["bitcount"], 4).unwrap();
+        assert_eq!(f.forks(), 4);
+        let per_guest: Vec<u64> = node.iter().map(|g| g.construct_pages).collect();
+        assert_eq!(f.pages_forked(), per_guest.iter().sum::<u64>());
+        // VMID 1 matches the template (zero pages); VMIDs 2..4 rebind.
+        assert_eq!(per_guest[0], 0);
+        assert!(per_guest[1] > 0);
+        // Whole-node fork cost stays under the 5% gate the CLI enforces.
+        assert!(f.pages_forked() * 20 < f.forks() * f.page_slots_per_guest());
+        assert!(f.template_allocated_pages() > 0);
+        assert!(f.template("bitcount").is_some());
+        assert!(f.template("qsort").is_none());
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Differential memory-equivalence harness for the CoW paged RAM store.
+//!
+//! Two layers of evidence that swapping the flat `Vec<u8>` RAM for the
+//! copy-on-write page store changed *nothing* observable:
+//!
+//! 1. **Benchmark differential**: every benchmark runs twice — once on the
+//!    flat reference bus, once on the CoW bus — and must produce
+//!    byte-identical final RAM, consoles, and completion tick/instruction
+//!    counts. (The full guest-mode sweep is release-only; CI runs it with
+//!    `--include-ignored`.)
+//! 2. **Property-style randomized sequences**: random
+//!    read/write/load_image/fill_ram programs applied in lockstep to a
+//!    CoW bus, a flat bus, and a plain `Vec<u8>` model — including forks
+//!    (bus clones) — must agree everywhere, and writes to one fork
+//!    sibling must never leak into another or into the template.
+
+use hvsim::mem::{Bus, StoreKind, PAGE_SIZE, RAM_BASE};
+use hvsim::sim::{ExitReason, Machine};
+use hvsim::sw;
+
+/// xorshift64* — deterministic, dependency-free.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+// ---------------------------------------------------------------- layer 1
+
+fn run_bench(bench: &str, vm: bool, kind: StoreKind) -> Machine {
+    let mut m = Machine::with_store(64 << 20, true, kind);
+    if vm {
+        sw::setup_guest(&mut m, bench, 1).unwrap();
+    } else {
+        sw::setup_native(&mut m, bench, 1).unwrap();
+    }
+    let r = m.run(3_000_000_000);
+    assert_eq!(
+        r,
+        ExitReason::PowerOff(hvsim::mem::SYSCON_PASS),
+        "{bench} (vm={vm}, {kind:?}) failed; console:\n{}",
+        m.console()
+    );
+    m
+}
+
+fn assert_equivalent(bench: &str, vm: bool) {
+    let cow = run_bench(bench, vm, StoreKind::Cow);
+    let flat = run_bench(bench, vm, StoreKind::Flat);
+    assert_eq!(cow.console(), flat.console(), "{bench} vm={vm}: consoles diverged");
+    assert_eq!(
+        cow.stats.sim_ticks, flat.stats.sim_ticks,
+        "{bench} vm={vm}: completion ticks diverged"
+    );
+    assert_eq!(
+        cow.stats.sim_insts, flat.stats.sim_insts,
+        "{bench} vm={vm}: retired instructions diverged"
+    );
+    assert!(
+        cow.bus.ram_bytes() == flat.bus.ram_bytes(),
+        "{bench} vm={vm}: final RAM diverged between CoW and flat stores"
+    );
+    assert_eq!(
+        cow.console_digest(),
+        flat.console_digest(),
+        "{bench} vm={vm}: console digests diverged"
+    );
+}
+
+/// Every benchmark, native mode, flat vs CoW.
+#[test]
+fn native_benchmarks_equivalent_on_flat_and_cow() {
+    for bench in sw::BENCHMARKS {
+        assert_equivalent(bench, false);
+    }
+}
+
+/// One full hypervisor-stack guest run, flat vs CoW (cheap enough for the
+/// debug tier-1 pass; the full guest sweep is below).
+#[test]
+fn guest_bitcount_equivalent_on_flat_and_cow() {
+    assert_equivalent("bitcount", true);
+}
+
+/// The full 9-benchmark guest-mode differential sweep.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "guest-mode sweep is release-only; CI runs it with --release -- --include-ignored"
+)]
+fn guest_benchmarks_equivalent_on_flat_and_cow() {
+    for bench in sw::BENCHMARKS {
+        assert_equivalent(bench, true);
+    }
+}
+
+// ---------------------------------------------------------------- layer 2
+
+/// A bus under differential test, paired with its plain-`Vec` model.
+struct Pair {
+    bus: Bus,
+    model: Vec<u8>,
+}
+
+const DIFF_RAM: usize = 64 * PAGE_SIZE;
+
+impl Pair {
+    fn new(kind: StoreKind) -> Pair {
+        Pair { bus: Bus::with_store(DIFF_RAM, kind), model: vec![0u8; DIFF_RAM] }
+    }
+
+    fn fork(&self) -> Pair {
+        Pair { bus: self.bus.clone(), model: self.model.clone() }
+    }
+
+    fn apply(&mut self, op: &Op) {
+        match op {
+            Op::Write(off, size, val) => {
+                self.bus.write_ram(RAM_BASE + off, *size, *val);
+                for i in 0..*size as usize {
+                    self.model[*off as usize + i] = (val >> (8 * i)) as u8;
+                }
+            }
+            Op::Load(off, bytes) => {
+                self.bus.load_image(RAM_BASE + off, bytes).unwrap();
+                self.model[*off as usize..*off as usize + bytes.len()].copy_from_slice(bytes);
+            }
+            Op::Fill(off, len) => {
+                self.bus.fill_ram(RAM_BASE + off, *len).unwrap();
+                self.model[*off as usize..(*off + *len) as usize].fill(0);
+            }
+        }
+    }
+
+    fn check_read(&self, off: u64, size: u64) {
+        let got = self.bus.read_ram(RAM_BASE + off, size);
+        let mut want = 0u64;
+        for i in 0..size as usize {
+            want |= (self.model[off as usize + i] as u64) << (8 * i);
+        }
+        assert_eq!(got, want, "read_ram({off:#x}, {size}) diverged from model");
+    }
+
+    fn check_full(&self, who: &str) {
+        assert!(self.bus.ram_bytes() == self.model, "{who}: full RAM diverged from model");
+        // Spot-check the slice surface too.
+        let s = self.bus.ram_slice(RAM_BASE + 100, 4096).unwrap();
+        assert_eq!(&s[..], &self.model[100..100 + 4096], "{who}: ram_slice diverged");
+    }
+}
+
+enum Op {
+    /// (offset, size, value) — size in 1..=8, in-bounds.
+    Write(u64, u64, u64),
+    Load(u64, Vec<u8>),
+    Fill(u64, u64),
+}
+
+fn random_op(rng: &mut Rng) -> Op {
+    match rng.below(10) {
+        // Writes dominate, with offsets biased toward page edges so
+        // straddles happen constantly.
+        0..=5 => {
+            let size = [1u64, 2, 4, 8, 3, 5, 7][rng.below(7) as usize];
+            let off = if rng.below(2) == 0 {
+                // Near a page boundary (possibly straddling it).
+                let page = rng.below((DIFF_RAM / PAGE_SIZE) as u64 - 1);
+                page * PAGE_SIZE as u64 + PAGE_SIZE as u64 - rng.below(12)
+            } else {
+                rng.below(DIFF_RAM as u64 - 8)
+            };
+            let off = off.min(DIFF_RAM as u64 - size);
+            Op::Write(off, size, rng.next())
+        }
+        6..=7 => {
+            let len = rng.below(3 * PAGE_SIZE as u64) as usize;
+            let off = rng.below((DIFF_RAM - len).max(1) as u64);
+            let bytes = (0..len).map(|_| rng.next() as u8).collect();
+            Op::Load(off, bytes)
+        }
+        _ => {
+            let len = rng.below(4 * PAGE_SIZE as u64);
+            let off = rng.below((DIFF_RAM as u64 - len).max(1));
+            Op::Fill(off, len)
+        }
+    }
+}
+
+#[test]
+fn randomized_sequences_agree_with_model_and_flat_reference() {
+    let mut rng = Rng::new(0x00C0_FFEE);
+    let mut cow = Pair::new(StoreKind::Cow);
+    let mut flat = Pair::new(StoreKind::Flat);
+    for step in 0..4_000 {
+        let op = random_op(&mut rng);
+        cow.apply(&op);
+        flat.apply(&op);
+        // Random probe after every op; straddle-biased like the writes.
+        let size = [1u64, 2, 4, 8][rng.below(4) as usize];
+        let off = rng.below(DIFF_RAM as u64 - 8);
+        cow.check_read(off, size);
+        flat.check_read(off, size);
+        if step % 500 == 0 {
+            cow.check_full("cow");
+            flat.check_full("flat");
+        }
+    }
+    cow.check_full("cow(final)");
+    flat.check_full("flat(final)");
+    // The CoW store must not have silently materialized the world: the
+    // model is mostly zeros-after-fill, and zero fills release frames.
+    assert!(cow.bus.ram_allocated_pages() <= cow.bus.ram_pages() as u64);
+}
+
+#[test]
+fn fork_families_never_leak_writes_between_siblings() {
+    // A template plus a family of forks, every member shadowed by its own
+    // model. Writes land on random members; every member must always
+    // agree with its *own* model — any CoW aliasing bug (a write tearing
+    // through a shared frame) shows up as a sibling/model divergence.
+    let mut rng = Rng::new(0xF0F0_1234);
+    let mut template = Pair::new(StoreKind::Cow);
+    // Seed the template with an "image" so forks share non-zero frames.
+    let img: Vec<u8> = (0..16 * PAGE_SIZE).map(|i| (i % 253) as u8).collect();
+    template.apply(&Op::Load(PAGE_SIZE as u64, img));
+    let template_snapshot = template.model.clone();
+
+    let mut family: Vec<Pair> = Vec::new();
+    for _ in 0..6 {
+        family.push(template.fork());
+    }
+    for _ in 0..3_000 {
+        let victim = rng.below(family.len() as u64) as usize;
+        let op = random_op(&mut rng);
+        family[victim].apply(&op);
+        // Occasionally fork a member mid-history (up to a cap).
+        if family.len() < 12 && rng.below(100) == 0 {
+            let src = rng.below(family.len() as u64) as usize;
+            family.push(family[src].fork());
+        }
+    }
+    for (i, p) in family.iter().enumerate() {
+        p.check_full(&format!("fork {i}"));
+    }
+    // The template itself was never written after the forks were taken.
+    assert!(
+        template.bus.ram_bytes() == template_snapshot,
+        "template mutated by its forks"
+    );
+    // And the family genuinely shared memory: siblings still hold shared
+    // frames wherever they never diverged.
+    assert!(
+        family.iter().any(|p| p.bus.ram_shared_pages() > 0),
+        "no page sharing survived — CoW not engaged at all"
+    );
+}
+
+#[test]
+fn fork_accounting_tracks_private_materialization() {
+    let mut template = Pair::new(StoreKind::Cow);
+    let img: Vec<u8> = (0..8 * PAGE_SIZE).map(|i| (i % 89) as u8).collect();
+    template.apply(&Op::Load(0, img));
+    let t_alloc = template.bus.ram_allocated_pages();
+    assert_eq!(t_alloc, 8);
+
+    let mut child = template.fork();
+    child.bus.reset_ram_touch_accounting();
+    assert_eq!(child.bus.ram_dirty_pages(), 0);
+    assert_eq!(child.bus.ram_shared_pages(), 8);
+
+    // One byte in a shared page: exactly one CoW break.
+    child.apply(&Op::Write(3 * PAGE_SIZE as u64 + 17, 1, 0xAB));
+    assert_eq!(child.bus.ram_pages_touched(), 1);
+    assert_eq!(child.bus.ram_dirty_pages(), 1);
+    assert_eq!(child.bus.ram_shared_pages(), 7);
+    // A fresh (template-less) page materializes too.
+    child.apply(&Op::Write(20 * PAGE_SIZE as u64, 8, 1));
+    assert_eq!(child.bus.ram_pages_touched(), 2);
+    // The template saw none of it.
+    assert_eq!(template.bus.ram_pages_touched(), 8, "template counter untouched by child");
+    assert_eq!(template.bus.ram_dirty_pages(), 0, "template pages all still shared");
+    template.check_full("template");
+    child.check_full("child");
+}
+
+// ------------------------------------------------- bounds-handling pins
+
+#[test]
+fn straddling_the_last_page_works_up_to_the_boundary() {
+    for kind in [StoreKind::Cow, StoreKind::Flat] {
+        let mut bus = Bus::with_store(4 * PAGE_SIZE, kind);
+        let end = RAM_BASE + 4 * PAGE_SIZE as u64;
+        // The last legal 8-byte write, flush against the end of RAM.
+        bus.write_ram(end - 8, 8, 0x1020_3040_5060_7080);
+        assert_eq!(bus.read_ram(end - 8, 8), 0x1020_3040_5060_7080);
+        // Straddling the boundary between the last two pages.
+        bus.write_ram(end - PAGE_SIZE as u64 - 3, 8, 0xAABB_CCDD_EEFF_0011);
+        assert_eq!(bus.read_ram(end - PAGE_SIZE as u64 - 3, 8), 0xAABB_CCDD_EEFF_0011);
+        // One past the end faults at the decoded-bus layer.
+        assert!(bus.write(end - 7, 8, 0).is_err());
+        assert!(bus.read(end - 7, 8).is_err());
+    }
+}
+
+#[test]
+fn zero_length_loads_pin_their_bounds() {
+    for kind in [StoreKind::Cow, StoreKind::Flat] {
+        let mut bus = Bus::with_store(PAGE_SIZE, kind);
+        bus.load_image(RAM_BASE, &[]).unwrap();
+        bus.load_image(RAM_BASE + PAGE_SIZE as u64, &[]).unwrap();
+        assert!(bus.load_image(RAM_BASE - 1, &[]).is_err());
+        assert!(bus.load_image(RAM_BASE + PAGE_SIZE as u64 + 1, &[]).is_err());
+        // And a zero-length fill behaves the same way.
+        bus.fill_ram(RAM_BASE + PAGE_SIZE as u64, 0).unwrap();
+        assert!(bus.fill_ram(RAM_BASE + PAGE_SIZE as u64 + 1, 0).is_err());
+    }
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn cow_raw_write_straddling_past_the_end_panics() {
+    let mut bus = Bus::with_store(PAGE_SIZE, StoreKind::Cow);
+    bus.write_ram(RAM_BASE + PAGE_SIZE as u64 - 2, 4, 0);
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn flat_raw_write_straddling_past_the_end_panics() {
+    let mut bus = Bus::with_store(PAGE_SIZE, StoreKind::Flat);
+    bus.write_ram(RAM_BASE + PAGE_SIZE as u64 - 2, 4, 0);
+}

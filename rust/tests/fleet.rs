@@ -1,8 +1,10 @@
 //! Fleet engine end-to-end: checkpoint-forked construction of M×N full
-//! guest stacks, sharded execution across host threads, per-guest console
-//! equality with solo runs, and sharding-independence of the results.
+//! guest stacks over copy-on-write RAM, sharded execution across host
+//! threads, per-guest console equality with solo runs (by streaming
+//! digest), sharding-independence of the results, and the O(dirty-pages)
+//! fork-cost gate at scale.
 
-use hvsim::fleet::{console_mismatches, run_fleet, solo_baselines, solo_consoles, FleetSpec};
+use hvsim::fleet::{console_mismatches, run_fleet, solo_baselines, solo_digests, FleetSpec};
 use hvsim::vmm::{FlushPolicy, SchedKind};
 
 const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
@@ -36,11 +38,16 @@ fn fleet_completes_and_consoles_match_solo() {
     assert_eq!(report.completed(), 4);
     assert_eq!(report.nodes.len(), 2);
 
-    // Per-guest consoles byte-identical to solo runs: consolidation and
-    // sharding must be invisible to every tenant.
-    let solos = solo_consoles(&s).unwrap();
+    // Per-guest console digests identical to solo runs: consolidation and
+    // sharding must be invisible to every tenant. (Fleet consoles are
+    // streamed — only the digest + bounded tail is retained.)
+    let solos = solo_digests(&s).unwrap();
     let bad = console_mismatches(&report, &solos);
     assert!(bad.is_empty(), "console mismatches: {bad:?}");
+    for g in report.guests() {
+        assert!(g.console.len > 0, "digest carries the stream length");
+        assert!(!g.console.tail.is_empty(), "bounded tail retained for diagnostics");
+    }
 
     // Fleet-level stats are well-formed.
     assert_eq!(report.latencies().len(), 4);
@@ -58,6 +65,24 @@ fn fleet_completes_and_consoles_match_solo() {
         report.construct_assemblies < full_floor,
         "forked construction cost {} assemblies, full setup needs ≥ {full_floor}",
         report.construct_assemblies
+    );
+
+    // CoW fork cost: every guest forked, and the pages materialized stay
+    // far under the 5%-of-template gate; the resident-bytes proxy beats
+    // the full-copy bill by a wide margin.
+    assert_eq!(report.construct_forks, 4);
+    assert!(
+        report.fork_page_fraction() < 0.05,
+        "fork fraction {:.4} (pages {} / budget {})",
+        report.fork_page_fraction(),
+        report.construct_pages_forked,
+        report.construct_forks * report.page_slots_per_guest
+    );
+    assert!(
+        report.construct_resident_bytes < report.construct_full_copy_bytes / 4,
+        "CoW construction resident {} vs full-copy {}",
+        report.construct_resident_bytes,
+        report.construct_full_copy_bytes
     );
 }
 
@@ -83,9 +108,9 @@ fn slo_fleet_passes_with_p99_no_worse_than_round_robin() {
     let slo = run_fleet(&slo_spec).unwrap();
     assert!(rr.all_passed() && slo.all_passed());
 
-    let consoles: std::collections::BTreeMap<String, String> =
-        solos.iter().map(|(k, v)| (k.clone(), v.console.clone())).collect();
-    assert!(console_mismatches(&slo, &consoles).is_empty(), "slo scheduling leaked into guests");
+    let digests: std::collections::BTreeMap<String, hvsim::util::ConsoleDigest> =
+        solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+    assert!(console_mismatches(&slo, &digests).is_empty(), "slo scheduling leaked into guests");
 
     let rr_p99 = rr.latency_percentile(0.99).unwrap();
     let slo_p99 = slo.latency_percentile(0.99).unwrap();
@@ -98,7 +123,7 @@ fn slo_fleet_passes_with_p99_no_worse_than_round_robin() {
 #[test]
 fn fleet_results_are_sharding_independent() {
     // The same fleet on 1 thread and on 2 threads must produce identical
-    // per-guest consoles and completion ticks — nodes are isolated, so
+    // per-guest digests and completion ticks — nodes are isolated, so
     // host-side parallelism may only change wall-clock time.
     let r1 = run_fleet(&spec(2, 2, 1)).unwrap();
     let r2 = run_fleet(&spec(2, 2, 2)).unwrap();
@@ -112,4 +137,50 @@ fn fleet_results_are_sharding_independent() {
     };
     assert_eq!(key(&r1), key(&r2));
     assert_eq!(r1.world_switches(), r2.world_switches());
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "64-node fleet is release-only; CI runs it with --release -- --include-ignored"
+)]
+fn fleet_at_scale_64_nodes_digests_match_solo_across_threads() {
+    // The scale target the CoW store exists for: a 64-node forked fleet
+    // whose construction materializes almost nothing, with console
+    // digests byte-identical to the solo baseline on 1/2/4 host threads.
+    let mk = |threads: usize| {
+        let mut s = spec(64, 1, threads);
+        s.benches = vec!["bitcount".into()];
+        s
+    };
+    let solos = solo_digests(&mk(1)).unwrap();
+    let mut keys: Vec<Vec<(usize, usize, hvsim::util::ConsoleDigest, Option<u64>)>> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let r = run_fleet(&mk(threads)).unwrap();
+        assert!(r.all_passed(), "{threads}-thread fleet failed");
+        assert_eq!(r.completed(), 64);
+        let bad = console_mismatches(&r, &solos);
+        assert!(bad.is_empty(), "{threads}-thread mismatches: {bad:?}");
+        // O(dirty pages) forking at scale: 64 same-VMID forks copy zero
+        // pages; the gate has orders-of-magnitude headroom.
+        assert_eq!(r.construct_forks, 64);
+        assert!(
+            r.fork_page_fraction() < 0.05,
+            "fork fraction {:.4} at {threads} threads",
+            r.fork_page_fraction()
+        );
+        assert!(
+            r.construct_resident_bytes < r.construct_full_copy_bytes / 16,
+            "resident {} vs full-copy {} at {threads} threads",
+            r.construct_resident_bytes,
+            r.construct_full_copy_bytes
+        );
+        keys.push(
+            r.guests()
+                .map(|g| (g.node, g.id, g.console.clone(), g.finished_at_total))
+                .collect(),
+        );
+    }
+    assert_eq!(keys[0], keys[1], "1-thread vs 2-thread digests diverged");
+    assert_eq!(keys[0], keys[2], "1-thread vs 4-thread digests diverged");
 }
