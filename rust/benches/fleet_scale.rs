@@ -33,6 +33,7 @@ fn spec(threads: usize, scale: u64) -> FleetSpec {
         max_node_ticks: u64::MAX,
         tlb_sets: 64,
         tlb_ways: 4,
+        engine: hvsim::sim::EngineKind::default(),
     }
 }
 

@@ -26,6 +26,9 @@ pub struct SimConfig {
     pub max_ticks: u64,
     pub uart_echo: bool,
     pub trace_cap: u64,
+    /// Execution engine: basic-block translation cache (default) or the
+    /// per-tick reference interpreter.
+    pub engine: crate::sim::EngineKind,
     // [timing] — the XLA analytics model (E9)
     pub artifacts_dir: String,
 }
@@ -43,6 +46,7 @@ impl Default for SimConfig {
             max_ticks: 2_000_000_000,
             uart_echo: false,
             trace_cap: 8_000_000,
+            engine: crate::sim::EngineKind::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -69,6 +73,7 @@ impl SimConfig {
                 "sim.max_ticks" => cfg.max_ticks = val.int()?,
                 "sim.uart_echo" => cfg.uart_echo = val.boolean()?,
                 "sim.trace_cap" => cfg.trace_cap = val.int()?,
+                "sim.engine" => cfg.engine = val.string()?.parse()?,
                 "timing.artifacts_dir" => cfg.artifacts_dir = val.string()?,
                 other => bail!("unknown config key '{other}'"),
             }
@@ -89,6 +94,7 @@ impl SimConfig {
         let mut m = crate::sim::Machine::new(self.ram_bytes(), self.h_extension);
         m.core.tlb = crate::mmu::Tlb::new(self.tlb_sets as usize, self.tlb_ways as usize);
         m.bus.uart.echo = self.uart_echo;
+        m.engine = self.engine;
         m
     }
 }
@@ -205,6 +211,16 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(SimConfig::from_str("[machine]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn engine_key_parses_and_defaults_to_block() {
+        use crate::sim::EngineKind;
+        assert_eq!(SimConfig::default().engine, EngineKind::Block);
+        let c = SimConfig::from_str("[sim]\nengine = \"tick\"\n").unwrap();
+        assert_eq!(c.engine, EngineKind::Tick);
+        assert_eq!(c.build_machine().engine, EngineKind::Tick);
+        assert!(SimConfig::from_str("[sim]\nengine = \"warp\"\n").is_err());
     }
 
     #[test]

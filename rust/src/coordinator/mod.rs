@@ -381,6 +381,7 @@ fn run_node(
     let mut sched = VmmScheduler::with_policy(guests, policy, sched_policy);
     let mut m = Machine::new(GUEST_NODE_RAM, true);
     m.core.tlb = crate::mmu::Tlb::new(cfg.tlb_sets as usize, cfg.tlb_ways as usize);
+    m.engine = cfg.engine;
     m.run_scheduled(&mut sched, max_ticks);
     Ok(sched)
 }
@@ -545,7 +546,7 @@ pub fn fleet_table(
 ) -> String {
     let mut s = format!(
         "Fleet — {} nodes × {} guests (mix {}), {} threads\n\
-         slice: {} ticks | TLB policy: {} | sched: {}\n\
+         slice: {} ticks | TLB policy: {} | sched: {} | engine: {}\n\
          node  pass   total_ticks     switches  switch(ns)   host(s)\n",
         spec.nodes,
         spec.guests_per_node,
@@ -554,6 +555,7 @@ pub fn fleet_table(
         spec.slice_ticks,
         spec.policy.name(),
         spec.sched.name(),
+        spec.engine.name(),
     );
     for n in &report.nodes {
         let passed = n.guests.iter().filter(|g| g.passed).count();
@@ -738,6 +740,7 @@ mod tests {
             max_node_ticks: 1_000,
             tlb_sets: 64,
             tlb_ways: 4,
+            engine: crate::sim::EngineKind::default(),
         };
         let report = FleetReport {
             nodes: vec![NodeOutcome {

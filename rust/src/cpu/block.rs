@@ -1,0 +1,417 @@
+//! The basic-block execution engine: predecode straight-line instruction
+//! runs once, then dispatch whole blocks — one interrupt check, one fetch
+//! translation and one stats/device-countdown update per *block* instead
+//! of per instruction.
+//!
+//! A block is a maximal straight-line run starting at some physical
+//! address: it ends at the first [`crate::isa::Op::ends_block`] instruction (branch/
+//! jump, CSR/system, fence, WFI, trap), at a page boundary (one fetch
+//! translation must cover every instruction), or at [`MAX_BLOCK_INSTS`].
+//! The ender is *included* as the final instruction, so every block holds
+//! at least one instruction and dispatch always makes progress.
+//!
+//! Bit-exactness with the per-tick engine rests on one invariant — the
+//! interrupt-delivery inputs (`mip`/`mie`/`mstatus`/`vsstatus`/delegation)
+//! are constant inside a block:
+//!
+//! - device-driven `mip` lines change only at a device-timebase update,
+//!   and the dispatcher clamps block length to `device_countdown`, so a
+//!   block never spans one (MMIO stores to CLINT/PLIC change *device*
+//!   state, which reaches `csr.mip` only at that update — same as the
+//!   per-tick engine);
+//! - software changes them only via CSR/system instructions, which end
+//!   blocks;
+//! - trap entry changes them too, but an exception terminates block
+//!   execution on the spot.
+//!
+//! Hence checking interrupts once per dispatch is *exactly* the per-tick
+//! `CheckInterrupts()` cadence: every tick on which the answer could
+//! differ from the previous tick starts a new dispatch. DESIGN.md §19
+//! states the invariant; `tests/block_engine.rs` proves it differentially.
+//!
+//! Cached blocks are keyed by (physical address, privilege, V, TLB
+//! generation). Three things can invalidate a block, matching the three
+//! ways code changes underneath us:
+//!
+//! 1. **Guest stores to predecoded pages** (self-modifying code): the bus
+//!    keeps a per-page code bitmap ([`crate::mem::code`]); a hit bumps
+//!    `Bus::code_seq`, which the execution loop re-checks after every
+//!    instruction (intra-block) and the dispatcher drains before every
+//!    lookup (cross-block).
+//! 2. **TLB flushes and flushless world switches**: the existing
+//!    generation bump makes every cached block unreachable (the
+//!    generation is part of the key), which also guarantees two guests'
+//!    identical physical addresses can never alias each other's blocks
+//!    across a world switch.
+//! 3. **Fork / VMID rebind / checkpoint restore**: the block cache is
+//!    derived state — bus clones reset the code tracker, bulk RAM writes
+//!    queue a flush-everything sentinel, and restore calls
+//!    [`Core::reset_derived`]. Nothing is ever serialized into CK3.
+
+use crate::isa::{decode, Inst};
+use crate::mem::{Bus, CODE_DIRTY_ALL, RAM_BASE};
+
+use super::execute::{execute, fetch_translate};
+use super::trap;
+use super::{Core, StepEvent};
+
+/// Upper bound on instructions per block. Longer straight-line runs are
+/// split; execution already chunks at the device period
+/// ([`crate::sim::TIME_DIVIDER`] = 100 ticks), so 128 covers a full
+/// period with headroom while bounding per-slot memory.
+pub const MAX_BLOCK_INSTS: usize = 128;
+
+/// Direct-mapped slot count (power of two).
+const BLOCK_SLOTS: usize = 2048;
+
+/// One predecoded straight-line run.
+struct CachedBlock {
+    /// Physical address of the first instruction.
+    pa: u64,
+    prv: u8,
+    virt: bool,
+    /// TLB generation at build time; any flush or generation bump orphans
+    /// the block (lookups compare against the live generation).
+    gen: u64,
+    insts: Vec<Inst>,
+}
+
+/// Direct-mapped cache of predecoded blocks. Lives in [`Core`] (one per
+/// machine, like the decode cache); guests never own one, so forks have
+/// nothing to clone.
+pub struct BlockCache {
+    slots: Vec<Option<Box<CachedBlock>>>,
+    /// Last drained `Bus::code_seq` (see [`Core::drain_code_invalidations`]).
+    seq_seen: u64,
+    /// Blocks predecoded (cache misses).
+    pub builds: u64,
+    /// Dispatches served from the cache.
+    pub hits: u64,
+    /// Blocks dropped by code-page invalidation.
+    pub invalidated: u64,
+}
+
+impl BlockCache {
+    pub fn new() -> BlockCache {
+        let mut slots = Vec::with_capacity(BLOCK_SLOTS);
+        slots.resize_with(BLOCK_SLOTS, || None);
+        BlockCache { slots, seq_seen: 0, builds: 0, hits: 0, invalidated: 0 }
+    }
+
+    #[inline]
+    fn slot_of(pa: u64) -> usize {
+        ((pa >> 2) ^ (pa >> 13)) as usize & (BLOCK_SLOTS - 1)
+    }
+
+    /// Drop every cached block (bulk invalidation / checkpoint restore).
+    pub fn clear(&mut self) {
+        for s in &mut self.slots {
+            if s.take().is_some() {
+                self.invalidated += 1;
+            }
+        }
+    }
+
+    /// Drop blocks predecoded from the given RAM page (index relative to
+    /// `RAM_BASE`). O(slots), paid only on an actual self-modifying-code
+    /// event.
+    fn invalidate_ram_page(&mut self, page: u32) {
+        for s in &mut self.slots {
+            let stale = s
+                .as_ref()
+                .is_some_and(|b| ((b.pa - RAM_BASE) >> 12) as u32 == page);
+            if stale {
+                *s = None;
+                self.invalidated += 1;
+            }
+        }
+    }
+}
+
+impl Default for BlockCache {
+    fn default() -> Self {
+        BlockCache::new()
+    }
+}
+
+impl Core {
+    /// Apply the bus's queued code-page invalidations to the block cache.
+    /// [`run_block`] calls it after translating and before every lookup;
+    /// a no-op (one u64 compare) unless a store actually hit a predecoded
+    /// page since the last drain.
+    #[inline]
+    pub(crate) fn drain_code_invalidations(&mut self, bus: &mut Bus) {
+        if bus.code_seq() == self.block_cache.seq_seen {
+            return;
+        }
+        self.block_cache.seq_seen = bus.code_seq();
+        for page in bus.take_code_dirty() {
+            if page == CODE_DIRTY_ALL {
+                self.block_cache.clear();
+            } else {
+                self.block_cache.invalidate_ram_page(page);
+            }
+        }
+    }
+}
+
+/// Outcome of one block dispatch.
+pub struct BlockRun {
+    /// Ticks consumed: retired instructions plus a trailing exception
+    /// tick, when one ended the block.
+    pub executed: u64,
+    /// Instructions retired.
+    pub retired: u64,
+    /// Terminal event: `Retired` for a clean (or clamped) run,
+    /// `Exception(..)` when the block ended in a delivered trap. The
+    /// caller folds it into the stats and the `VmExit` mapping.
+    pub event: StepEvent,
+}
+
+/// Execute up to `max_insts` instructions of the basic block at the
+/// current PC. Returns `None` when the fast lane cannot run — misaligned
+/// PC, faulting fetch translation, or a non-RAM (MMIO) fetch — and the
+/// caller must fall back to one per-tick step, which raises any pending
+/// fetch fault with exact per-tick semantics.
+///
+/// Preconditions (owned by [`crate::sim::Machine::block_step`]): the
+/// device timebase is fresh (`device_countdown > 0`), the hart is not
+/// parked in WFI, no interrupt is deliverable, and `max_insts >= 1`.
+pub fn run_block(core: &mut Core, bus: &mut Bus, max_insts: u64) -> Option<BlockRun> {
+    debug_assert!(max_insts >= 1, "block dispatch needs a tick of budget");
+    let pc = core.hart.pc;
+    if pc & 3 != 0 {
+        return None;
+    }
+    let Ok(pa) = fetch_translate(core, bus, pc) else {
+        return None;
+    };
+    if !bus.in_ram(pa, 4) {
+        return None;
+    }
+    // The production walker never writes RAM during translation (Svade
+    // semantics: missing A/D bits fault instead of being set in
+    // hardware), but guard the invariant anyway: if a translation ever
+    // does dirty a predecoded page — e.g. a future hardware-A/D walker
+    // whose PTE pages share a page with code — drain before the lookup
+    // below could serve the stale block. One u64 compare when idle.
+    core.drain_code_invalidations(bus);
+
+    let prv = core.hart.prv.bits() as u8;
+    let virt = core.hart.virt;
+    let gen = core.tlb.generation();
+    let idx = BlockCache::slot_of(pa);
+    let hit = core.block_cache.slots[idx]
+        .as_ref()
+        .is_some_and(|b| b.pa == pa && b.prv == prv && b.virt == virt && b.gen == gen);
+    if hit {
+        core.block_cache.hits += 1;
+    } else {
+        let insts = build_block(bus, pa);
+        bus.note_code_page(pa);
+        core.block_cache.builds += 1;
+        core.block_cache.slots[idx] = Some(Box::new(CachedBlock { pa, prv, virt, gen, insts }));
+    }
+
+    // Take the block out of its slot so `execute` can borrow the core
+    // mutably; put it back below (the pre-lookup drain removes it next
+    // dispatch if an invalidation landed meanwhile).
+    let blk = core.block_cache.slots[idx].take().expect("slot filled above");
+    let seq0 = bus.code_seq();
+    let mut executed = 0u64;
+    let mut retired = 0u64;
+    let mut event = StepEvent::Retired;
+    for inst in blk.insts.iter() {
+        if executed >= max_insts {
+            break;
+        }
+        if let Some(t) = &mut core.trace {
+            t.push(core.hart.pc, crate::trace::KIND_FETCH);
+        }
+        match execute(core, bus, inst) {
+            Ok(next_pc) => {
+                core.hart.pc = next_pc;
+                core.hart.csr.minstret = core.hart.csr.minstret.wrapping_add(1);
+                executed += 1;
+                retired += 1;
+                // A store may have latched SYSCON poweroff or patched a
+                // predecoded code page; both must end the dispatch before
+                // the next (possibly stale) instruction runs — exactly
+                // where the per-tick engine would re-fetch.
+                if bus.poweroff.is_some() || bus.code_seq() != seq0 {
+                    break;
+                }
+            }
+            Err(e) => {
+                let target = trap::take_exception(&mut core.hart, &e);
+                executed += 1;
+                event = StepEvent::Exception(e.cause, target);
+                break;
+            }
+        }
+    }
+    core.block_cache.slots[idx] = Some(blk);
+    Some(BlockRun { executed, retired, event })
+}
+
+/// Predecode the block starting at physical address `pa` (known to be in
+/// RAM). Decodes each word exactly once per build — the raw-bits decode
+/// cache stays dedicated to the per-tick engine.
+fn build_block(bus: &Bus, pa: u64) -> Vec<Inst> {
+    let mut insts = Vec::with_capacity(16);
+    let mut at = pa;
+    loop {
+        let inst = decode(bus.read_ram(at, 4) as u32);
+        let terminal = inst.op.ends_block();
+        insts.push(inst);
+        at += 4;
+        if terminal
+            || insts.len() >= MAX_BLOCK_INSTS
+            || at & 0xfff == 0
+            || !bus.in_ram(at, 4)
+        {
+            break;
+        }
+    }
+    insts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::PAGE_SIZE;
+
+    fn world() -> (Core, Bus) {
+        let mut core = Core::new(true);
+        core.hart.pc = RAM_BASE;
+        (core, Bus::new(4 << 20))
+    }
+
+    fn addi(rd: u32, rs1: u32, imm: i32) -> u32 {
+        ((imm as u32 & 0xfff) << 20) | (rs1 << 15) | (rd << 7) | 0b0010011
+    }
+
+    const JAL_SELF: u32 = 0b1101111; // jal x0, 0
+
+    fn load_words(bus: &mut Bus, at: u64, words: &[u32]) {
+        let mut bytes = Vec::new();
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        bus.load_image(at, &bytes).unwrap();
+    }
+
+    #[test]
+    fn build_stops_at_enders_page_edges_and_cap() {
+        let (_, mut bus) = world();
+        // addi, addi, jal — the jump is included as the terminal inst.
+        load_words(&mut bus, RAM_BASE, &[addi(5, 5, 1), addi(6, 6, 2), JAL_SELF, addi(7, 7, 3)]);
+        let b = build_block(&bus, RAM_BASE);
+        assert_eq!(b.len(), 3);
+        assert!(b[2].op.ends_block());
+
+        // A straight-line run up to the page edge stops there.
+        let edge = RAM_BASE + PAGE_SIZE as u64 - 8;
+        load_words(&mut bus, edge, &[addi(5, 5, 1), addi(5, 5, 1), addi(5, 5, 1)]);
+        let b = build_block(&bus, edge);
+        assert_eq!(b.len(), 2, "block must not cross its fetch page");
+
+        // An endless straight line hits the cap.
+        let run = vec![addi(5, 5, 1); MAX_BLOCK_INSTS + 9];
+        load_words(&mut bus, RAM_BASE + 2 * PAGE_SIZE as u64, &run);
+        let b = build_block(&bus, RAM_BASE + 2 * PAGE_SIZE as u64);
+        assert_eq!(b.len(), MAX_BLOCK_INSTS);
+    }
+
+    #[test]
+    fn run_block_executes_and_caches() {
+        let (mut core, mut bus) = world();
+        load_words(&mut bus, RAM_BASE, &[addi(5, 5, 1), addi(6, 5, 2), JAL_SELF]);
+        let r = run_block(&mut core, &mut bus, 100).expect("fast lane runs");
+        assert_eq!(r.retired, 3);
+        assert_eq!(r.executed, 3);
+        assert_eq!(r.event, StepEvent::Retired);
+        assert_eq!(core.hart.regs[5], 1);
+        assert_eq!(core.hart.regs[6], 3);
+        assert_eq!(core.hart.pc, RAM_BASE + 8, "jal x0,0 lands on itself");
+        assert_eq!(core.block_cache.builds, 1);
+        // Second dispatch at the jal target builds its own block; the
+        // original start address stays cached.
+        core.hart.pc = RAM_BASE;
+        let r = run_block(&mut core, &mut bus, 100).unwrap();
+        assert_eq!(r.retired, 3);
+        assert_eq!(core.block_cache.hits, 1);
+    }
+
+    #[test]
+    fn clamp_stops_mid_block_and_resumes() {
+        let (mut core, mut bus) = world();
+        load_words(&mut bus, RAM_BASE, &[addi(5, 5, 1), addi(5, 5, 1), addi(5, 5, 1), JAL_SELF]);
+        let r = run_block(&mut core, &mut bus, 2).unwrap();
+        assert_eq!(r.retired, 2);
+        assert_eq!(core.hart.pc, RAM_BASE + 8, "clamped mid-block");
+        // Resuming mid-block builds a block at the new offset.
+        let r = run_block(&mut core, &mut bus, 100).unwrap();
+        assert_eq!(r.retired, 2);
+        assert_eq!(core.hart.regs[5], 3);
+        assert_eq!(core.block_cache.builds, 2);
+    }
+
+    #[test]
+    fn generation_bump_orphans_cached_blocks() {
+        let (mut core, mut bus) = world();
+        load_words(&mut bus, RAM_BASE, &[addi(5, 5, 1), JAL_SELF]);
+        core.hart.pc = RAM_BASE;
+        run_block(&mut core, &mut bus, 100).unwrap();
+        core.hart.pc = RAM_BASE;
+        core.tlb.bump_generation(); // flushless world switch
+        run_block(&mut core, &mut bus, 100).unwrap();
+        assert_eq!(core.block_cache.builds, 2, "stale generation must rebuild");
+        assert_eq!(core.block_cache.hits, 0);
+    }
+
+    #[test]
+    fn store_into_cached_page_invalidates_blocks() {
+        let (mut core, mut bus) = world();
+        load_words(&mut bus, RAM_BASE, &[addi(5, 5, 1), JAL_SELF]);
+        core.hart.pc = RAM_BASE;
+        run_block(&mut core, &mut bus, 100).unwrap();
+        assert_eq!(bus.code_pages_marked(), 1);
+
+        // Patch the first instruction: addi x5, x5, 1 -> addi x5, x5, 7.
+        let seq0 = bus.code_seq();
+        bus.write(RAM_BASE, 4, addi(5, 5, 7) as u64).unwrap();
+        assert_eq!(bus.code_seq(), seq0 + 1);
+        core.drain_code_invalidations(&mut bus);
+        assert!(core.block_cache.invalidated > 0);
+
+        core.hart.pc = RAM_BASE;
+        run_block(&mut core, &mut bus, 100).unwrap();
+        assert_eq!(core.hart.regs[5], 1 + 7, "patched bytes must execute");
+        assert_eq!(core.block_cache.builds, 2, "rebuilt after the patch");
+    }
+
+    #[test]
+    fn exception_mid_block_ends_execution_with_correct_pc() {
+        let (mut core, mut bus) = world();
+        // addi; ld from unmapped physical space (fault); addi (must not run).
+        let bad_ld = (0 << 20) | (7 << 15) | (0b011 << 12) | (6 << 7) | 0b0000011; // ld x6, 0(x7)
+        core.hart.regs[7] = 0x10; // below every device: access fault
+        load_words(&mut bus, RAM_BASE, &[addi(5, 5, 1), bad_ld, addi(5, 5, 100), JAL_SELF]);
+        let r = run_block(&mut core, &mut bus, 100).unwrap();
+        assert_eq!(r.retired, 1);
+        assert_eq!(r.executed, 2, "the faulting instruction consumes its tick");
+        assert!(matches!(r.event, StepEvent::Exception(..)));
+        assert_eq!(core.hart.regs[5], 1, "nothing after the fault ran");
+        assert_eq!(core.hart.csr.mepc, RAM_BASE + 4, "trap PC is the faulting inst");
+    }
+
+    #[test]
+    fn fast_lane_declines_misaligned_and_mmio_pcs() {
+        let (mut core, mut bus) = world();
+        core.hart.pc = RAM_BASE + 2;
+        assert!(run_block(&mut core, &mut bus, 10).is_none(), "misaligned");
+        core.hart.pc = crate::mem::UART_BASE;
+        assert!(run_block(&mut core, &mut bus, 10).is_none(), "MMIO fetch");
+    }
+}

@@ -49,6 +49,10 @@ pub struct Core {
     /// Optional virtual-reference trace (fetch/load/store) feeding the XLA
     /// analytics model — see [`crate::trace`].
     pub trace: Option<crate::trace::TraceBuf>,
+    /// Predecoded basic blocks (the block engine; see [`super::block`]).
+    /// Like every cache below, derived state: reachable entries are keyed
+    /// by the TLB generation, so flushes and world switches orphan them.
+    pub block_cache: super::block::BlockCache,
     /// Decoded-instruction cache keyed by raw bits (hot-path optimization;
     /// see DESIGN.md §Perf).
     decode_cache: Vec<(u32, Inst)>,
@@ -68,6 +72,7 @@ impl Core {
             tlb: Tlb::default(),
             mmu_stats: MmuStats::default(),
             trace: None,
+            block_cache: super::block::BlockCache::new(),
             decode_cache: vec![(0xffff_ffff, decode(0xffff_ffff)); DECODE_CACHE_SIZE],
             fetch_cache: PageCache::default(),
             load_cache: PageCache::default(),
@@ -85,6 +90,19 @@ impl Core {
         let inst = decode(raw);
         self.decode_cache[idx] = (raw, inst);
         inst
+    }
+
+    /// Drop every derived (non-architectural) cache: cached blocks and the
+    /// one-entry page-translation caches. Checkpoint restore calls this —
+    /// derived state is never serialized — and it is the honest baseline
+    /// for any caller that rebinds the core to fresh RAM contents. The
+    /// decode cache survives: it is keyed by raw instruction bits alone
+    /// (a pure function) and can never go stale.
+    pub fn reset_derived(&mut self) {
+        self.block_cache.clear();
+        self.fetch_cache = PageCache::default();
+        self.load_cache = PageCache::default();
+        self.store_cache = PageCache::default();
     }
 }
 
@@ -149,30 +167,37 @@ fn fetch(core: &mut Core, bus: &mut Bus, pc: u64) -> Result<u32, Exception> {
     if let Some(t) = &mut core.trace {
         t.push(pc, crate::trace::KIND_FETCH);
     }
-    // Fetch-page fast path (§Perf): SUM/MXR don't affect execute checks.
+    let pa = fetch_translate(core, bus, pc)?;
+    bus.read(pa, 4)
+        .map(|v| v as u32)
+        .map_err(|_| Exception::new(ExceptionCause::InstAccessFault, pc))
+}
+
+/// Instruction-fetch translation only (no byte read, no trace push): the
+/// shared fetch-page fast path of both engines. The per-tick engine calls
+/// it once per instruction through [`fetch`]; the block engine once per
+/// block dispatch (the amortization §Perf is about). SUM/MXR don't affect
+/// execute checks, so the page-cache key uses 0 there.
+pub(crate) fn fetch_translate(core: &mut Core, bus: &mut Bus, pc: u64) -> Result<u64, Exception> {
     let vpn = pc >> 12;
     let prv = core.hart.prv.bits() as u8;
     let virt = core.hart.virt;
     let gen = core.tlb.generation();
-    let pa = if core.fetch_cache.hit(vpn, prv, virt, 0, gen) {
-        core.fetch_cache.pa_page | (pc & 0xfff)
-    } else {
-        let ctx = TranslateCtx {
-            csr: &core.hart.csr,
-            prv: core.hart.prv,
-            virt,
-            access: Access::Execute,
-            flags: XlateFlags::default(),
-            tinst: 0, // fetch guest-page faults report tinst = 0 (paper §3.4)
-        };
-        let pa = mmu::translate(&mut core.tlb, &mut core.mmu_stats, bus, &ctx, pc)?;
-        core.fetch_cache =
-            PageCache { valid: true, vpn, pa_page: pa & !0xfff, prv, virt, sum_mxr: 0, gen };
-        pa
+    if core.fetch_cache.hit(vpn, prv, virt, 0, gen) {
+        return Ok(core.fetch_cache.pa_page | (pc & 0xfff));
+    }
+    let ctx = TranslateCtx {
+        csr: &core.hart.csr,
+        prv: core.hart.prv,
+        virt,
+        access: Access::Execute,
+        flags: XlateFlags::default(),
+        tinst: 0, // fetch guest-page faults report tinst = 0 (paper §3.4)
     };
-    bus.read(pa, 4)
-        .map(|v| v as u32)
-        .map_err(|_| Exception::new(ExceptionCause::InstAccessFault, pc))
+    let pa = mmu::translate(&mut core.tlb, &mut core.mmu_stats, bus, &ctx, pc)?;
+    core.fetch_cache =
+        PageCache { valid: true, vpn, pa_page: pa & !0xfff, prv, virt, sum_mxr: 0, gen };
+    Ok(pa)
 }
 
 /// Status bits that participate in data-access permission checks and thus

@@ -2,14 +2,17 @@
 //!
 //! The hart owns the architectural register state, the CSR file, and the
 //! current (privilege, virtualization) pair. Instruction semantics live in
-//! [`execute`]; trap entry/exit in [`trap`]; interrupt detection (gem5's
-//! `CheckInterrupts()`, paper Fig. 2) in [`interrupts`].
+//! [`execute`] (one body shared by both engines); the basic-block
+//! translation cache in [`block`]; trap entry/exit in [`trap`]; interrupt
+//! detection (gem5's `CheckInterrupts()`, paper Fig. 2) in [`interrupts`].
 
+pub mod block;
 pub mod csr;
 pub mod execute;
 pub mod interrupts;
 pub mod trap;
 
+pub use block::{BlockCache, BlockRun, MAX_BLOCK_INSTS};
 pub use csr::{CsrError, CsrFile, VsCsrFile};
 pub use execute::{step, Core, StepEvent};
 

@@ -59,6 +59,10 @@ pub struct FleetSpec {
     /// TLB geometry of each node's carrier machine.
     pub tlb_sets: usize,
     pub tlb_ways: usize,
+    /// Execution engine of every node's carrier machine (block-translation
+    /// cache by default; engines are bit-exact, so this only changes
+    /// wall-clock numbers).
+    pub engine: crate::sim::EngineKind,
 }
 
 impl FleetSpec {
@@ -269,6 +273,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                 let mut sched = VmmScheduler::with_policy(guests, spec.policy, policy);
                 let mut m = Machine::new(spec.ram_bytes, true);
                 m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
+                m.engine = spec.engine;
                 let t_node = Instant::now();
                 m.run_scheduled(&mut sched, spec.max_node_ticks);
                 let host_seconds = t_node.elapsed().as_secs_f64();
@@ -342,6 +347,7 @@ pub fn solo_baselines(spec: &FleetSpec) -> Result<BTreeMap<String, SoloBaseline>
         let mut sched = VmmScheduler::new(guests, spec.slice_ticks, spec.policy);
         let mut m = Machine::new(spec.ram_bytes, true);
         m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
+        m.engine = spec.engine;
         m.run_scheduled(&mut sched, spec.max_node_ticks);
         let g = &sched.guests[0];
         let Some(ticks) = g.finished_at_total.filter(|_| g.passed()) else {
@@ -416,6 +422,7 @@ mod tests {
             max_node_ticks: u64::MAX,
             tlb_sets: 64,
             tlb_ways: 4,
+            engine: crate::sim::EngineKind::default(),
         }
     }
 

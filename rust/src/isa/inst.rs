@@ -175,6 +175,39 @@ impl Op {
         matches!(self, Op::HlvxHu | Op::HlvxWu)
     }
 
+    /// True for ops that terminate a predecoded basic block
+    /// (`cpu::block`). A block may contain only instructions that cannot
+    /// change the control flow or the interrupt-delivery inputs
+    /// (mip/mie/mstatus/vsstatus/hstatus and the delegation registers)
+    /// mid-block; everything that can is a block *ender* — it may appear
+    /// only as the final instruction of a block:
+    ///
+    /// - branches and jumps (control flow leaves the straight line);
+    /// - CSR accesses, `mret`/`sret`, `wfi` (interrupt state / privilege);
+    /// - fences, `sfence.vma`, `hfence.{vvma,gvma}` (translation state —
+    ///   `fence.i` is also the architectural self-modifying-code barrier);
+    /// - `ecall`/`ebreak`/`Illegal` (unconditional traps).
+    ///
+    /// Plain loads/stores, AMOs, LR/SC, HLV/HSV and FP ops stay inside
+    /// blocks: they can *fault* (which ends block execution dynamically),
+    /// but a successful execution cannot alter the interrupt decision —
+    /// device MMIO writes reach `csr.mip` only at the next device-timebase
+    /// update, and blocks never span one (see DESIGN.md §19).
+    pub fn ends_block(self) -> bool {
+        use Op::*;
+        matches!(
+            self,
+            Jal | Jalr
+                | Beq | Bne | Blt | Bge | Bltu | Bgeu
+                | Fence | FenceI
+                | Ecall | Ebreak
+                | Csrrw | Csrrs | Csrrc | Csrrwi | Csrrsi | Csrrci
+                | Mret | Sret | Wfi
+                | SfenceVma | HfenceVvma | HfenceGvma
+                | Illegal
+        )
+    }
+
     /// Memory access size in bytes for loads/stores/AMOs (0 otherwise).
     pub fn access_size(self) -> u64 {
         use Op::*;
@@ -240,6 +273,25 @@ mod tests {
         assert!(!Op::HlvW.is_hlvx());
         assert!(Op::HsvD.is_hsv());
         assert!(!Op::HsvD.is_hlv());
+    }
+
+    #[test]
+    fn block_ender_classification() {
+        // Control flow, CSR/system, fences and traps end blocks...
+        for op in [
+            Op::Jal, Op::Jalr, Op::Beq, Op::Bgeu, Op::Ecall, Op::Ebreak, Op::Mret, Op::Sret,
+            Op::Wfi, Op::SfenceVma, Op::HfenceVvma, Op::HfenceGvma, Op::Csrrw, Op::Csrrci,
+            Op::Fence, Op::FenceI, Op::Illegal,
+        ] {
+            assert!(op.ends_block(), "{op:?} must end a block");
+        }
+        // ...straight-line ALU/memory ops do not.
+        for op in [
+            Op::Add, Op::Addi, Op::Lui, Op::Auipc, Op::Ld, Op::Sd, Op::Mul, Op::LrD, Op::ScW,
+            Op::AmoAddD, Op::HlvW, Op::HsvD, Op::Flw, Op::FaddS,
+        ] {
+            assert!(!op.ends_block(), "{op:?} must stay inside a block");
+        }
     }
 
     #[test]

@@ -2,15 +2,15 @@
 //!
 //! ```text
 //! hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE]
-//!             [--stats] [--echo] [--max-ticks N]
+//!             [--stats] [--echo] [--max-ticks N] [--engine block|tick]
 //! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
 //! hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--scale N]
 //!             [--policy all|vmid|none] [--sched rr|slo|weighted:W,...]
-//!             [--slo BENCH=TICKS,...] [--out FILE]
+//!             [--slo BENCH=TICKS,...] [--engine block|tick] [--out FILE]
 //! hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T]
 //!             [--bench A,B] [--scale N] [--policy all|vmid|none]
 //!             [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]
-//!             [--out FILE]
+//!             [--engine block|tick] [--out FILE]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
 //! hvsim boot  [--config FILE]
 //! hvsim list
@@ -83,6 +83,9 @@ fn load_cfg(args: &Args) -> Result<SimConfig> {
     }
     if args.has("echo") {
         cfg.uart_echo = true;
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = e.parse().context("bad --engine")?;
     }
     Ok(cfg)
 }
@@ -316,6 +319,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         max_node_ticks: cfg.max_ticks.saturating_mul(guests as u64),
         tlb_sets: cfg.tlb_sets as usize,
         tlb_ways: cfg.tlb_ways as usize,
+        engine: cfg.engine,
     };
 
     // Solo baselines up front: the byte-check oracle for every fleet
@@ -325,6 +329,36 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let solos = hvsim::fleet::solo_baselines(&spec)?;
     spec.sched
         .fill_fair_share(solos.iter().map(|(b, s)| (b.as_str(), s.ticks)), guests as u64);
+
+    // Engine A/B smoke: the solo baselines re-run under the *other*
+    // execution engine must be bit-exact — same console digest, same
+    // completion tick. O(#benches), so the fleet smoke path carries a
+    // standing cross-engine differential check (CI runs this).
+    let engine_ab_line = {
+        let mut alt = spec.clone();
+        alt.engine = spec.engine.other();
+        let alt_solos = hvsim::fleet::solo_baselines(&alt)?;
+        for (bench, s) in &solos {
+            let a = &alt_solos[bench];
+            if a.digest != s.digest || a.ticks != s.ticks {
+                bail!(
+                    "engine A/B mismatch for {bench}: {} sha {} / {} ticks vs {} sha {} / {} ticks",
+                    spec.engine.name(),
+                    s.digest.short_hex(),
+                    s.ticks,
+                    alt.engine.name(),
+                    a.digest.short_hex(),
+                    a.ticks,
+                );
+            }
+        }
+        format!(
+            "engine A/B ({} vs {}): {} solo console digest(s) + completion ticks identical\n",
+            spec.engine.name(),
+            alt.engine.name(),
+            solos.len()
+        )
+    };
 
     // Full per-guest construction cost, for the checkpoint-fork
     // comparison. Counted in firmware+kernel assemblies only: the per-VMID
@@ -376,6 +410,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         Some(full_construct),
         &mismatches,
     );
+    out.push_str(&engine_ab_line);
 
     // The SLO scheduler is compared against a round-robin run of the
     // identical fleet, and hard-bails if completion p99 regresses (CI
@@ -492,10 +527,10 @@ fn cmd_boot(args: &Args) -> Result<()> {
 fn usage() -> ! {
     eprintln!(
         "hvsim — gem5-style RISC-V simulator with the H extension\n\
-         usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo]\n  \
+         usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo] [--engine block|tick]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
-         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]\n  \
-         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]\n  \
+         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick]\n  \
+         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
          hvsim boot  [--bench NAME]\n  hvsim list"
     );

@@ -1,0 +1,243 @@
+//! Per-page predecoded-code tracking for the basic-block engine.
+//!
+//! The block engine (`cpu::block`) predecodes straight-line instruction
+//! runs out of RAM. A later guest store into one of those pages (the
+//! self-modifying-code path the hypervisor's demand pager exercises) must
+//! make the stale predecode unreachable *before the next instruction
+//! dispatched from that page executes*. The [`CodeTracker`] is the bus
+//! half of that contract:
+//!
+//! - the block builder marks the page it decoded from ([`CodeTracker::mark`]);
+//! - every RAM write consults the bitmap ([`CodeTracker::note_write`],
+//!   one word-load + mask on the store hot path, skipped entirely while
+//!   nothing is marked); a hit clears the mark, queues the page index and
+//!   bumps a monotonic sequence number;
+//! - bulk RAM mutations that bypass the store path (`load_image`,
+//!   `fill_ram`, `clone_ram_from`, checkpoint restore) conservatively
+//!   queue a flush-everything sentinel ([`CODE_DIRTY_ALL`]);
+//! - the engine compares the sequence number after every executed
+//!   instruction (intra-block) and drains the queue before every block
+//!   lookup (cross-block), dropping the affected cached blocks.
+//!
+//! The tracker is *derived* state: it describes what the executing
+//! machine's block cache has predecoded, never anything architectural.
+//! Cloning a bus (checkpoint-forked guest construction) therefore resets
+//! it instead of copying it — a fork has no cached blocks, and carrying a
+//! template's marks would tax every store the fork ever does.
+
+use super::cow::PAGE_SHIFT;
+
+/// Queue sentinel: "invalidate every cached block" (bulk RAM mutation, or
+/// the bounded queue overflowed).
+pub const CODE_DIRTY_ALL: u32 = u32::MAX;
+
+/// Cap on the per-bus dirty-page queue; beyond it the tracker escalates to
+/// the flush-everything sentinel rather than growing without bound.
+const DIRTY_QUEUE_CAP: usize = 64;
+
+/// See the module docs. One instance per [`super::Bus`].
+#[derive(Debug)]
+pub struct CodeTracker {
+    /// One bit per RAM page: "the block cache holds code from this page".
+    bits: Vec<u64>,
+    num_pages: usize,
+    /// Count of set bits (fast "anything marked?" gate for the store path).
+    marked: u32,
+    /// Page indices whose mark was hit by a write; drained by the engine.
+    dirty: Vec<u32>,
+    /// Monotonic: bumped on every code-page hit / bulk invalidation.
+    seq: u64,
+}
+
+impl CodeTracker {
+    pub fn new(num_pages: usize) -> CodeTracker {
+        CodeTracker {
+            bits: vec![0u64; num_pages.div_ceil(64)],
+            num_pages,
+            marked: 0,
+            dirty: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    /// Anything marked at all? (Gates the store-path check.)
+    #[inline]
+    pub fn any(&self) -> bool {
+        self.marked > 0
+    }
+
+    /// Pages currently marked as predecoded code.
+    pub fn marked_pages(&self) -> u64 {
+        self.marked as u64
+    }
+
+    /// Monotonic invalidation sequence number.
+    #[inline]
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    #[inline]
+    fn is_marked(&self, page: usize) -> bool {
+        page < self.num_pages && self.bits[page >> 6] & (1u64 << (page & 63)) != 0
+    }
+
+    /// Mark `page` as holding predecoded code (block builder).
+    pub fn mark(&mut self, page: usize) {
+        debug_assert!(page < self.num_pages, "code mark past end of RAM");
+        let w = &mut self.bits[page >> 6];
+        let bit = 1u64 << (page & 63);
+        if *w & bit == 0 {
+            *w |= bit;
+            self.marked += 1;
+        }
+    }
+
+    /// A write of `len >= 1` bytes at RAM offset `off` — unmark and queue
+    /// any hit page. Out-of-range offsets are ignored here; the RAM store
+    /// itself panics on them (panic-before-mutate is its contract, and a
+    /// spurious bump of derived state is harmless).
+    #[inline]
+    pub fn note_write(&mut self, off: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let first = off >> PAGE_SHIFT;
+        self.note_page(first);
+        let last = (off + len - 1) >> PAGE_SHIFT;
+        if last != first {
+            self.note_page(last);
+        }
+    }
+
+    fn note_page(&mut self, page: usize) {
+        if !self.is_marked(page) {
+            return;
+        }
+        self.bits[page >> 6] &= !(1u64 << (page & 63));
+        self.marked -= 1;
+        self.seq += 1;
+        if self.dirty.len() >= DIRTY_QUEUE_CAP {
+            self.invalidate_all();
+        } else {
+            self.dirty.push(page as u32);
+        }
+    }
+
+    /// Bulk RAM mutation: drop every mark and queue the flush-everything
+    /// sentinel. No-op while nothing is marked and nothing is queued, so
+    /// image loading on a fresh bus costs nothing.
+    pub fn invalidate_all(&mut self) {
+        if self.marked == 0 && self.dirty.is_empty() {
+            return;
+        }
+        self.bits.fill(0);
+        self.marked = 0;
+        self.dirty.clear();
+        self.dirty.push(CODE_DIRTY_ALL);
+        self.seq += 1;
+    }
+
+    /// Hand the queued invalidations to the engine (clears the queue).
+    pub fn take_dirty(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.dirty)
+    }
+}
+
+impl Clone for CodeTracker {
+    /// Derived state never travels with a cloned bus: a checkpoint-forked
+    /// guest starts with no predecoded code (see module docs).
+    fn clone(&self) -> CodeTracker {
+        CodeTracker::new(self.num_pages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::PAGE_SIZE;
+
+    #[test]
+    fn mark_hit_queue_cycle() {
+        let mut t = CodeTracker::new(8);
+        assert!(!t.any());
+        let s0 = t.seq();
+        // Unmarked pages: writes are free.
+        t.note_write(100, 8);
+        assert_eq!(t.seq(), s0);
+
+        t.mark(0);
+        t.mark(3);
+        t.mark(3); // idempotent
+        assert_eq!(t.marked_pages(), 2);
+
+        // A write into page 3 unmarks it, queues it, bumps seq.
+        t.note_write(3 * PAGE_SIZE + 8, 8);
+        assert_eq!(t.seq(), s0 + 1);
+        assert_eq!(t.marked_pages(), 1);
+        assert_eq!(t.take_dirty(), vec![3]);
+        // Second write to the same (now unmarked) page is free again.
+        t.note_write(3 * PAGE_SIZE + 16, 8);
+        assert_eq!(t.seq(), s0 + 1);
+    }
+
+    #[test]
+    fn straddling_write_hits_both_pages() {
+        let mut t = CodeTracker::new(4);
+        t.mark(1);
+        t.mark(2);
+        t.note_write(2 * PAGE_SIZE - 4, 8);
+        assert_eq!(t.marked_pages(), 0);
+        let mut d = t.take_dirty();
+        d.sort_unstable();
+        assert_eq!(d, vec![1, 2]);
+    }
+
+    #[test]
+    fn bulk_invalidation_uses_sentinel_and_is_free_when_empty() {
+        let mut t = CodeTracker::new(4);
+        let s0 = t.seq();
+        t.invalidate_all();
+        assert_eq!(t.seq(), s0, "nothing marked: free");
+        t.mark(2);
+        t.invalidate_all();
+        assert_eq!(t.seq(), s0 + 1);
+        assert_eq!(t.take_dirty(), vec![CODE_DIRTY_ALL]);
+        assert!(!t.any());
+    }
+
+    #[test]
+    fn queue_overflow_escalates_to_sentinel() {
+        let mut t = CodeTracker::new(2 * DIRTY_QUEUE_CAP);
+        for p in 0..DIRTY_QUEUE_CAP + 8 {
+            t.mark(p);
+        }
+        for p in 0..DIRTY_QUEUE_CAP + 8 {
+            t.note_write(p * PAGE_SIZE, 1);
+        }
+        let d = t.take_dirty();
+        assert!(d.contains(&CODE_DIRTY_ALL), "overflow must escalate");
+    }
+
+    #[test]
+    fn out_of_range_pages_are_ignored() {
+        let mut t = CodeTracker::new(2);
+        let s0 = t.seq();
+        // A (buggy-caller) write past the end must not panic here — the
+        // RAM store's own bounds assert owns that failure.
+        t.note_write(5 * PAGE_SIZE, 8);
+        assert_eq!(t.seq(), s0);
+    }
+
+    #[test]
+    fn clone_resets_derived_state() {
+        let mut t = CodeTracker::new(8);
+        t.mark(1);
+        t.note_write(PAGE_SIZE, 8);
+        let c = t.clone();
+        assert!(!c.any());
+        assert_eq!(c.seq(), 0);
+        assert!(c.dirty.is_empty());
+        assert_eq!(c.num_pages, 8);
+    }
+}

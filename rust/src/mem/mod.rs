@@ -16,8 +16,10 @@
 //! shares pages until first write, or the flat reference store for the
 //! differential memory-equivalence harness (`tests/cow_mem.rs`).
 
+pub mod code;
 pub mod cow;
 
+pub use code::{CodeTracker, CODE_DIRTY_ALL};
 pub use cow::{CowRam, FlatRam, RamStore, StoreKind, PAGE_SHIFT, PAGE_SIZE};
 
 use crate::dev::{Clint, Plic, Uart};
@@ -50,6 +52,10 @@ pub struct Bus {
     pub plic: Plic,
     /// Set when the SYSCON device is written: Some(exit code).
     pub poweroff: Option<u32>,
+    /// Predecoded-code page tracking for the block engine ([`code`]).
+    /// Derived state: its `Clone` resets rather than copies, so forks
+    /// never inherit a template's marks.
+    code: CodeTracker,
 }
 
 impl Bus {
@@ -61,12 +67,15 @@ impl Bus {
     /// A bus over an explicit RAM store (the flat reference store exists
     /// for differential testing against the CoW store).
     pub fn with_store(ram_bytes: usize, kind: StoreKind) -> Bus {
+        let ram = RamStore::new(ram_bytes, kind);
+        let code = CodeTracker::new(ram.num_pages());
         Bus {
-            ram: RamStore::new(ram_bytes, kind),
+            ram,
             clint: Clint::new(),
             uart: Uart::new(),
             plic: Plic::new(),
             poweroff: None,
+            code,
         }
     }
 
@@ -91,29 +100,39 @@ impl Bus {
         self.ram.read((addr - RAM_BASE) as usize, size)
     }
 
-    /// RAM write, little-endian. Panics — before mutating anything — when
-    /// the access is not entirely inside RAM.
+    /// RAM write, little-endian. Panics — before mutating RAM — when the
+    /// access is not entirely inside RAM. Consults the predecoded-code
+    /// bitmap (one word-load while any block is cached, skipped otherwise)
+    /// so self-modifying code invalidates stale blocks.
     #[inline]
     pub fn write_ram(&mut self, addr: u64, size: u64, val: u64) {
-        self.ram.write((addr - RAM_BASE) as usize, size, val)
+        let off = (addr - RAM_BASE) as usize;
+        if self.code.any() {
+            self.code.note_write(off, size as usize);
+        }
+        self.ram.write(off, size, val)
     }
 
     /// Bulk load (program images, checkpoint restore). Zero-length loads
     /// are accepted (and are no-ops) anywhere in `RAM_BASE..=RAM_END`.
+    /// Conservatively invalidates every cached block.
     pub fn load_image(&mut self, addr: u64, bytes: &[u8]) -> Result<(), AccessFault> {
         if !self.in_ram(addr, bytes.len() as u64) {
             return Err(AccessFault);
         }
+        self.code.invalidate_all();
         self.ram.load((addr - RAM_BASE) as usize, bytes);
         Ok(())
     }
 
     /// Zero a RAM range. On the CoW store, fully-covered pages drop back
     /// to zero pages (releasing their frames) — zeroing never copies.
+    /// Conservatively invalidates every cached block.
     pub fn fill_ram(&mut self, addr: u64, len: u64) -> Result<(), AccessFault> {
         if !self.in_ram(addr, len) {
             return Err(AccessFault);
         }
+        self.code.invalidate_all();
         self.ram.fill_zero((addr - RAM_BASE) as usize, len as usize);
         Ok(())
     }
@@ -158,8 +177,37 @@ impl Bus {
         if self.ram.len() != template.ram.len() {
             return Err(AccessFault);
         }
+        self.code.invalidate_all();
         self.ram = template.ram.clone();
         Ok(())
+    }
+
+    // ---- predecoded-code tracking (block engine; see mem::code) ----
+
+    /// Mark the RAM page containing `addr` as predecoded code. Caller
+    /// (the block builder) guarantees `addr` is in RAM.
+    pub fn note_code_page(&mut self, addr: u64) {
+        self.code.mark(((addr - RAM_BASE) as usize) >> PAGE_SHIFT);
+    }
+
+    /// Monotonic sequence number bumped whenever a write lands in (or a
+    /// bulk mutation may have touched) a predecoded code page. The block
+    /// engine compares it after every executed instruction.
+    #[inline]
+    pub fn code_seq(&self) -> u64 {
+        self.code.seq()
+    }
+
+    /// RAM pages currently marked as predecoded code (diagnostics; the
+    /// fork-cost tests pin that clones reset this to zero).
+    pub fn code_pages_marked(&self) -> u64 {
+        self.code.marked_pages()
+    }
+
+    /// Drain the queued code-page invalidations ([`CODE_DIRTY_ALL`] =
+    /// drop everything).
+    pub(crate) fn take_code_dirty(&mut self) -> Vec<u32> {
+        self.code.take_dirty()
     }
 
     /// Materialized (non-zero-backed) pages.
@@ -332,6 +380,38 @@ mod tests {
         assert_eq!(b.read(RAM_BASE, 8).unwrap(), 0);
         assert_eq!(a.read(RAM_BASE, 8).unwrap(), 0x0707_0707_0707_0707);
         assert!(b.fill_ram(RAM_BASE + 3 * PAGE_SIZE as u64, PAGE_SIZE as u64 + 1).is_err());
+    }
+
+    #[test]
+    fn code_tracking_hits_marked_pages_and_resets_on_clone() {
+        let mut bus = Bus::new(4 * PAGE_SIZE);
+        let s0 = bus.code_seq();
+        // Unmarked: stores are free.
+        bus.write(RAM_BASE, 8, 1).unwrap();
+        assert_eq!(bus.code_seq(), s0);
+
+        bus.note_code_page(RAM_BASE + PAGE_SIZE as u64);
+        assert_eq!(bus.code_pages_marked(), 1);
+        // A store into the marked page queues it and bumps the sequence.
+        bus.write(RAM_BASE + PAGE_SIZE as u64 + 64, 4, 7).unwrap();
+        assert_eq!(bus.code_seq(), s0 + 1);
+        assert_eq!(bus.code_pages_marked(), 0);
+        assert_eq!(bus.take_code_dirty(), vec![1]);
+
+        // Bulk mutations invalidate everything via the sentinel.
+        bus.note_code_page(RAM_BASE);
+        bus.load_image(RAM_BASE + 2 * PAGE_SIZE as u64, &[1, 2, 3]).unwrap();
+        assert_eq!(bus.take_code_dirty(), vec![CODE_DIRTY_ALL]);
+        bus.note_code_page(RAM_BASE);
+        bus.fill_ram(RAM_BASE + PAGE_SIZE as u64, 8).unwrap();
+        assert_eq!(bus.take_code_dirty(), vec![CODE_DIRTY_ALL]);
+
+        // A cloned bus (checkpoint fork) starts with a clean tracker.
+        bus.note_code_page(RAM_BASE);
+        let forked = bus.clone();
+        assert_eq!(forked.code_pages_marked(), 0, "derived state reset, not cloned");
+        assert_eq!(forked.code_seq(), 0);
+        assert_eq!(bus.code_pages_marked(), 1, "original keeps its marks");
     }
 
     #[test]

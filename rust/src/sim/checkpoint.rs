@@ -327,8 +327,11 @@ pub fn restore(m: &mut Machine, blob: &[u8]) -> Result<()> {
     read_state(m, &mut r)?;
     m.bus.fill_ram(RAM_BASE, ram_len as u64).expect("full-RAM fill is in range");
     apply_pages(m, &mut r, ram_len)?;
-    // Microarchitectural (non-architectural) state resets.
+    // Microarchitectural (non-architectural) state resets: the TLB, and
+    // every derived cache over the replaced RAM (predecoded blocks are
+    // never serialized — they are rebuilt on demand).
     m.core.tlb.flush_all();
+    m.core.reset_derived();
     Ok(())
 }
 
@@ -369,6 +372,7 @@ pub fn restore_vs_template(
         .map_err(|_| anyhow::anyhow!("template RAM size does not match machine"))?;
     apply_pages(m, &mut r, ram_len)?;
     m.core.tlb.flush_all();
+    m.core.reset_derived();
     Ok(())
 }
 
@@ -403,6 +407,7 @@ fn restore_ck2_body(m: &mut Machine, r: &mut Reader) -> Result<()> {
     m.bus.fill_ram(RAM_BASE, ram_len as u64).expect("full-RAM fill is in range");
     apply_pages(m, r, ram_len)?;
     m.core.tlb.flush_all();
+    m.core.reset_derived();
     Ok(())
 }
 

@@ -15,6 +15,51 @@ use crate::mem::Bus;
 /// (instructions), mimicking a 10 MHz timebase on a ~1 GIPS core.
 pub const TIME_DIVIDER: u64 = 100;
 
+/// Which execution engine drives [`crate::vmm::Vcpu::run`] (and through
+/// it every run surface): the reference per-tick interpreter, or the
+/// basic-block translation cache ([`crate::cpu::block`]). The two are
+/// bit-exact — console bytes, `sim_ticks`, `sim_insts`, exception and
+/// interrupt histograms, final RAM — which `tests/block_engine.rs` proves
+/// differentially on every benchmark; `block` is simply faster.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// One fetch/decode/dispatch per instruction (the reference engine).
+    Tick,
+    /// Predecoded basic blocks: one interrupt check, fetch translation
+    /// and stats update per straight-line block (the default).
+    #[default]
+    Block,
+}
+
+impl EngineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Tick => "tick",
+            EngineKind::Block => "block",
+        }
+    }
+
+    /// The other engine (A/B comparisons).
+    pub fn other(self) -> EngineKind {
+        match self {
+            EngineKind::Tick => EngineKind::Block,
+            EngineKind::Block => EngineKind::Tick,
+        }
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<EngineKind> {
+        Ok(match s {
+            "block" => EngineKind::Block,
+            "tick" => EngineKind::Tick,
+            _ => anyhow::bail!("unknown engine '{s}' (expected one of: block, tick)"),
+        })
+    }
+}
+
 /// Why a run loop returned — the legacy scalar exit, kept for the
 /// [`Machine::run`]/[`Machine::run_pred`] surfaces and the checkpoint
 /// tooling. The structured boundary (and the single underlying run loop)
@@ -35,6 +80,11 @@ pub struct Machine {
     pub core: Core,
     pub bus: Bus,
     pub stats: SimStats,
+    /// Execution engine behind [`crate::vmm::Vcpu::run`]. A machine
+    /// property (like the TLB), not part of any guest's world: world
+    /// switches keep it, and both engines are bit-exact, so it can even
+    /// be flipped between slices without observable effect.
+    pub engine: EngineKind,
     /// Ticks remaining until the next device update (§Perf: avoids a
     /// modulo in the hot loop). `pub(crate)` so the vmm world-switch can
     /// swap it per guest — the device timebase phase is part of a guest's
@@ -60,6 +110,7 @@ impl Machine {
             core: Core::new(h_enabled),
             bus: Bus::with_store(ram_bytes, kind),
             stats: SimStats::default(),
+            engine: EngineKind::default(),
             device_countdown: 0,
         }
     }
@@ -98,40 +149,7 @@ impl Machine {
     pub(crate) fn tick_bounded(&mut self, limit: u64) -> StepEvent {
         // Device timebase (coarse: every TIME_DIVIDER ticks).
         if self.device_countdown == 0 {
-            self.device_countdown = TIME_DIVIDER;
-            self.bus.clint.tick(1);
-            let csr = &mut self.core.hart.csr;
-            csr.time = self.bus.clint.mtime;
-            // mcycle advances at device granularity (TIME_DIVIDER ticks);
-            // fine for the software stack, cheaper than a per-tick store.
-            csr.mcycle = self.stats.sim_ticks;
-            // Refresh device-driven mip lines.
-            use crate::isa::csr::irq;
-            let mut set = 0u64;
-            let mut clr = 0u64;
-            if self.bus.clint.mtip() {
-                set |= irq::MTIP;
-            } else {
-                clr |= irq::MTIP;
-            }
-            if self.bus.clint.msip() {
-                set |= irq::MSIP;
-            } else {
-                clr |= irq::MSIP;
-            }
-            let (meip, seip) = self.bus.plic.irq_lines();
-            if meip {
-                set |= irq::MEIP;
-            } else {
-                clr |= irq::MEIP;
-            }
-            if seip {
-                set |= irq::SEIP;
-            } else {
-                clr |= irq::SEIP;
-            }
-            csr.set_mip_bits(set);
-            csr.clear_mip_bits(clr);
+            self.device_update();
         }
         self.device_countdown -= 1;
         let ev = step(&mut self.core, &mut self.bus);
@@ -161,6 +179,88 @@ impl Machine {
         ev
     }
 
+    /// Device-timebase update: advance the CLINT, mirror time/mcycle into
+    /// the CSR file and refresh the device-driven `mip` lines. Rearms
+    /// `device_countdown` to [`TIME_DIVIDER`]. One shared body so the
+    /// per-tick and block engines keep an identical device phase — and
+    /// the interrupt-equivalence invariant (DESIGN.md §19) holds: this is
+    /// the *only* place device state reaches `csr.mip`.
+    fn device_update(&mut self) {
+        self.device_countdown = TIME_DIVIDER;
+        self.bus.clint.tick(1);
+        let csr = &mut self.core.hart.csr;
+        csr.time = self.bus.clint.mtime;
+        // mcycle advances at device granularity (TIME_DIVIDER ticks);
+        // fine for the software stack, cheaper than a per-tick store.
+        csr.mcycle = self.stats.sim_ticks;
+        // Refresh device-driven mip lines.
+        use crate::isa::csr::irq;
+        let mut set = 0u64;
+        let mut clr = 0u64;
+        if self.bus.clint.mtip() {
+            set |= irq::MTIP;
+        } else {
+            clr |= irq::MTIP;
+        }
+        if self.bus.clint.msip() {
+            set |= irq::MSIP;
+        } else {
+            clr |= irq::MSIP;
+        }
+        let (meip, seip) = self.bus.plic.irq_lines();
+        if meip {
+            set |= irq::MEIP;
+        } else {
+            clr |= irq::MEIP;
+        }
+        if seip {
+            set |= irq::SEIP;
+        } else {
+            clr |= irq::SEIP;
+        }
+        csr.set_mip_bits(set);
+        csr.clear_mip_bits(clr);
+    }
+
+    /// One block-engine dispatch: at most one device update, one
+    /// invalidation drain, one interrupt check and one fetch translation,
+    /// then a whole predecoded block executes — with its length clamped to
+    /// `min(device_countdown, limit - sim_ticks)` so tick accounting, the
+    /// device-timebase phase and `VmExit` budgets land on exactly the same
+    /// ticks as the per-tick engine. Falls back to [`Machine::tick_bounded`]
+    /// for the slow lane (parked WFI, deliverable interrupt, faulting or
+    /// non-RAM fetch), which *is* the per-tick engine — so the slow lane is
+    /// exact by construction.
+    #[inline]
+    pub(crate) fn block_step(&mut self, limit: u64) -> StepEvent {
+        if self.device_countdown == 0 {
+            self.device_update();
+        }
+        // Slow lane: parked harts and pending interrupts need the exact
+        // per-tick semantics (wakeup, WFI fast-forward, trap entry).
+        // Queued self-modifying-code invalidations are drained inside
+        // `run_block`, right before its cache lookup.
+        if self.core.hart.wfi
+            || crate::cpu::interrupts::check_interrupts(&self.core.hart).is_some()
+        {
+            return self.tick_bounded(limit);
+        }
+        let max_insts = self.device_countdown.min(limit.saturating_sub(self.stats.sim_ticks));
+        debug_assert!(max_insts >= 1, "block_step called with no tick budget");
+        match crate::cpu::block::run_block(&mut self.core, &mut self.bus, max_insts) {
+            Some(run) => {
+                self.stats.sim_ticks += run.executed;
+                self.device_countdown -= run.executed;
+                self.stats.sim_insts += run.retired;
+                if let StepEvent::Exception(cause, target) = run.event {
+                    self.stats.record_exception(cause, target);
+                }
+                run.event
+            }
+            None => self.tick_bounded(limit),
+        }
+    }
+
     /// Run until poweroff or `max_ticks`. A thin projection of the
     /// structured boundary: the loop itself lives in
     /// [`crate::vmm::Vcpu::run`]; the latched SYSCON code supplies the
@@ -176,7 +276,11 @@ impl Machine {
     }
 
     /// Run until a predicate over the machine fires (checked every tick,
-    /// and before the first one). Exit precedence matches the
+    /// and before the first one). Always executes per-tick regardless of
+    /// [`Machine::engine`] — an arbitrary predicate must be evaluated
+    /// between every two instructions, which is exactly what block
+    /// dispatch amortizes away — so its results are engine-independent by
+    /// construction. Exit precedence matches the
     /// [`crate::vmm::VmExit`] mapping: poweroff, then predicate, then tick
     /// budget — a predicate that already holds is reported as `Predicate`
     /// even when the budget is simultaneously exhausted (the legacy
@@ -318,6 +422,84 @@ mod tests {
         let rb = b.run_until(1_000, |m| m.stats.sim_ticks >= 123);
         assert_eq!(ra, rb);
         assert_eq!(a.stats.sim_ticks, b.stats.sim_ticks);
+    }
+
+    /// Both engines, same program: identical ticks, insts and histograms.
+    fn engine_pair(src: &str, max_ticks: u64) -> (Machine, Machine) {
+        let mut b = boot(src);
+        b.engine = EngineKind::Block;
+        let mut t = boot(src);
+        t.engine = EngineKind::Tick;
+        let rb = b.run(max_ticks);
+        let rt = t.run(max_ticks);
+        assert_eq!(rb, rt, "exit reasons diverged");
+        assert_eq!(b.stats.sim_ticks, t.stats.sim_ticks, "ticks diverged");
+        assert_eq!(b.stats.sim_insts, t.stats.sim_insts, "insts diverged");
+        assert_eq!(b.stats.wfi_ticks, t.stats.wfi_ticks, "wfi ticks diverged");
+        assert_eq!(b.stats.exceptions, t.stats.exceptions, "exceptions diverged");
+        assert_eq!(b.stats.interrupts, t.stats.interrupts, "interrupts diverged");
+        assert_eq!(b.core.hart.regs, t.core.hart.regs, "registers diverged");
+        assert_eq!(b.console(), t.console(), "consoles diverged");
+        (b, t)
+    }
+
+    #[test]
+    fn engines_agree_on_alu_loop_and_exact_budget() {
+        // A budget landing mid-block and mid-device-period must be exact.
+        let (b, _) = engine_pair("li t0, 0\n loop:\n addi t0, t0, 1\n xor t1, t0, t2\n j loop\n", 12_347);
+        assert_eq!(b.stats.sim_ticks, 12_347);
+        assert!(b.core.block_cache.hits > 0, "block engine actually engaged");
+    }
+
+    #[test]
+    fn engines_agree_on_timer_interrupt_program() {
+        // The interrupt-equivalence invariant, end to end: the machine
+        // timer must fire on the same tick under both engines.
+        let src = r#"
+            .equ CLINT, 0x2000000
+            .equ SYSCON, 0x100000
+            la t0, handler
+            csrw mtvec, t0
+            li t0, CLINT + 0x4000
+            li t1, 37
+            sd t1, 0(t0)
+            li t0, 1 << 7
+            csrw mie, t0
+            csrsi mstatus, 8
+        spin:
+            addi t2, t2, 1
+            j spin
+        .align 2
+        handler:
+            li t0, SYSCON
+            li t1, 0x5555
+            sw t1, 0(t0)
+            wfi
+        "#;
+        let (b, _) = engine_pair(src, 1_000_000);
+        assert_eq!(b.stats.interrupts_at("M"), 1);
+        assert!(matches!(
+            b.bus.poweroff,
+            Some(code) if code == SYSCON_PASS
+        ));
+    }
+
+    #[test]
+    fn engines_agree_on_wfi_fast_forward() {
+        let (b, _) = engine_pair("park: wfi\n j park\n", 5_000);
+        assert_eq!(b.stats.sim_ticks, 5_000, "budget exact under WFI in both engines");
+        assert!(b.stats.wfi_ticks > 0);
+    }
+
+    #[test]
+    fn engine_kind_parses_with_choice_listing_errors() {
+        assert_eq!("block".parse::<EngineKind>().unwrap(), EngineKind::Block);
+        assert_eq!("tick".parse::<EngineKind>().unwrap(), EngineKind::Tick);
+        let err = "qemu".parse::<EngineKind>().unwrap_err().to_string();
+        assert!(err.contains("block") && err.contains("tick"), "error lists choices: {err}");
+        assert_eq!(EngineKind::default(), EngineKind::Block);
+        assert_eq!(EngineKind::Block.other(), EngineKind::Tick);
+        assert_eq!(EngineKind::Tick.name(), "tick");
     }
 
     #[test]

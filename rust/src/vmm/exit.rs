@@ -19,7 +19,7 @@ use crate::cpu::StepEvent;
 use crate::isa::csr::irq;
 use crate::isa::ExceptionCause;
 use crate::mem::SYSCON_PASS;
-use crate::sim::{Machine, TIME_DIVIDER};
+use crate::sim::{EngineKind, Machine, TIME_DIVIDER};
 
 use super::Vcpu;
 
@@ -137,10 +137,17 @@ impl Vcpu {
     /// [`super::world_swap`]), so there is no parked `&self` to speak of.
     ///
     /// Exit precedence per iteration: poweroff, then budget, then the
-    /// optional halt/trap exits of the tick itself. Host wall-clock spent
+    /// optional halt/trap exits of the step itself. Host wall-clock spent
     /// here accrues to the resident world's `stats.host_time`.
+    ///
+    /// One loop serves both engines: an iteration is a single tick under
+    /// [`EngineKind::Tick`] and a whole predecoded block (clamped to the
+    /// same budgets) under [`EngineKind::Block`] — the block dispatcher
+    /// guarantees every condition checked here can only change at a
+    /// dispatch boundary, so checking per block *is* checking per tick.
     pub fn run(m: &mut Machine, budget: RunBudget) -> VmExit {
         let start = Instant::now();
+        let engine = m.engine;
         let allowed = budget.slice_ticks.min(budget.total_remaining);
         let limit = m.stats.sim_ticks.saturating_add(allowed);
         let exit = loop {
@@ -154,7 +161,11 @@ impl Vcpu {
                     VmExit::SliceExpired
                 };
             }
-            match m.tick_bounded(limit) {
+            let ev = match engine {
+                EngineKind::Tick => m.tick_bounded(limit),
+                EngineKind::Block => m.block_step(limit),
+            };
+            match ev {
                 StepEvent::WfiIdle if budget.wfi_exit => {
                     break VmExit::Wfi { parked_until: wfi_parked_until(m) };
                 }
@@ -283,6 +294,29 @@ mod tests {
         // Without trap_exit the same guest just burns its slice.
         let (mut m, _g) = resident("ecall\n loop: j loop\n");
         assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(1_000)), VmExit::SliceExpired);
+    }
+
+    #[test]
+    fn slice_expiry_lands_on_the_same_tick_in_both_engines() {
+        // The budget-exactness pin at the exit boundary: a slice expiring
+        // mid-block must stop on exactly the same tick (and with the same
+        // architectural state) as the per-tick engine.
+        for budget in [1u64, 7, 99, 100, 101, 12_345] {
+            let (mut b, _g) = resident("li t0, 0\n loop:\n addi t0, t0, 1\n addi t1, t1, 2\n addi t2, t2, 3\n j loop\n");
+            b.engine = EngineKind::Block;
+            let (mut t, _g) = resident("li t0, 0\n loop:\n addi t0, t0, 1\n addi t1, t1, 2\n addi t2, t2, 3\n j loop\n");
+            t.engine = EngineKind::Tick;
+            assert_eq!(Vcpu::run(&mut b, RunBudget::ticks(budget)), Vcpu::run(&mut t, RunBudget::ticks(budget)));
+            assert_eq!(b.stats.sim_ticks, budget, "block engine budget exact at {budget}");
+            assert_eq!(b.stats.sim_ticks, t.stats.sim_ticks);
+            assert_eq!(b.stats.sim_insts, t.stats.sim_insts, "insts at budget {budget}");
+            assert_eq!(b.core.hart.regs, t.core.hart.regs, "registers at budget {budget}");
+        }
+        // And the node-global clamp reports BudgetExhausted identically.
+        let (mut b, _g) = resident("loop: j loop\n");
+        b.engine = EngineKind::Block;
+        assert_eq!(Vcpu::run(&mut b, RunBudget::ticks(1_000).with_total(250)), VmExit::BudgetExhausted);
+        assert_eq!(b.stats.sim_ticks, 250);
     }
 
     #[test]

@@ -137,6 +137,13 @@ impl GuestVm {
     /// O(ram_bytes); [`GuestVm::construct_pages`] records exactly what it
     /// paid. The fleet layer uses this to stamp out M×N tenants from one
     /// template per benchmark.
+    ///
+    /// Derived execution caches are never part of the bill: the decode,
+    /// page-translation and block caches live on the carrier machine's
+    /// [`crate::cpu::Core`] (a `GuestVm` owns none of them), and the
+    /// bus-side predecoded-code tracker resets on clone instead of being
+    /// copied ([`crate::mem::code`]).
+    /// `tests/fleet.rs::fork_cost_excludes_derived_caches` pins this.
     pub fn fork(&self, id: usize, vmid: u16) -> Result<GuestVm> {
         // Pre-boot only — a world that has run carries execution state
         // (RAM, console, poweroff latch) that a "new" tenant must not

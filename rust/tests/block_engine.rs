@@ -1,0 +1,242 @@
+//! Differential lockstep harness: the basic-block engine vs the per-tick
+//! reference engine.
+//!
+//! The block engine's whole claim is *bit-exactness*: amortizing
+//! fetch/decode/dispatch/interrupt-check over straight-line blocks must
+//! change nothing observable — console bytes, `sim_ticks`, `sim_insts`,
+//! exception and interrupt histograms, final RAM, final registers. Every
+//! benchmark runs under both engines, native and guest (the full guest
+//! sweep is release-only; CI runs it with `--include-ignored`), plus
+//! regressions for the hard cases: self-modifying code (intra-block and
+//! cross-block) and tick-exact budget expiry.
+
+use hvsim::mem::{RAM_BASE, SYSCON_BASE, SYSCON_PASS};
+use hvsim::sim::{EngineKind, ExitReason, Machine};
+use hvsim::sw;
+use hvsim::vmm::{RunBudget, Vcpu, VmExit};
+
+fn run_bench(bench: &str, vm: bool, engine: EngineKind) -> Machine {
+    let mut m = Machine::new(64 << 20, true);
+    m.engine = engine;
+    if vm {
+        sw::setup_guest(&mut m, bench, 1).unwrap();
+    } else {
+        sw::setup_native(&mut m, bench, 1).unwrap();
+    }
+    let r = m.run(3_000_000_000);
+    assert_eq!(
+        r,
+        ExitReason::PowerOff(SYSCON_PASS),
+        "{bench} (vm={vm}, engine={}) failed; console:\n{}",
+        engine.name(),
+        m.console()
+    );
+    m
+}
+
+fn assert_engines_equivalent(bench: &str, vm: bool) {
+    let b = run_bench(bench, vm, EngineKind::Block);
+    let t = run_bench(bench, vm, EngineKind::Tick);
+    assert_eq!(b.console(), t.console(), "{bench} vm={vm}: consoles diverged");
+    assert_eq!(
+        b.console_digest(),
+        t.console_digest(),
+        "{bench} vm={vm}: console digests diverged"
+    );
+    assert_eq!(b.stats.sim_ticks, t.stats.sim_ticks, "{bench} vm={vm}: ticks diverged");
+    assert_eq!(b.stats.sim_insts, t.stats.sim_insts, "{bench} vm={vm}: insts diverged");
+    assert_eq!(b.stats.wfi_ticks, t.stats.wfi_ticks, "{bench} vm={vm}: wfi ticks diverged");
+    assert_eq!(
+        b.stats.exceptions, t.stats.exceptions,
+        "{bench} vm={vm}: exception histograms diverged"
+    );
+    assert_eq!(
+        b.stats.interrupts, t.stats.interrupts,
+        "{bench} vm={vm}: interrupt histograms diverged"
+    );
+    assert_eq!(b.core.hart.regs, t.core.hart.regs, "{bench} vm={vm}: registers diverged");
+    assert_eq!(b.core.hart.pc, t.core.hart.pc, "{bench} vm={vm}: final PC diverged");
+    assert!(
+        b.bus.ram_bytes() == t.bus.ram_bytes(),
+        "{bench} vm={vm}: final RAM diverged between engines"
+    );
+    assert!(
+        b.core.block_cache.hits > 0,
+        "{bench} vm={vm}: block engine never hit its cache — fast lane not engaged"
+    );
+}
+
+/// Every benchmark, native mode, block vs tick.
+#[test]
+fn native_benchmarks_bit_exact_across_engines() {
+    for bench in sw::BENCHMARKS {
+        assert_engines_equivalent(bench, false);
+    }
+}
+
+/// One full hypervisor-stack guest run, block vs tick (cheap enough for
+/// the debug tier-1 pass; the full sweep is below).
+#[test]
+fn guest_bitcount_bit_exact_across_engines() {
+    assert_engines_equivalent("bitcount", true);
+}
+
+/// The full 9-benchmark guest-mode differential sweep.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "guest-mode sweep is release-only; CI runs it with --release -- --include-ignored"
+)]
+fn guest_benchmarks_bit_exact_across_engines() {
+    for bench in sw::BENCHMARKS {
+        assert_engines_equivalent(bench, true);
+    }
+}
+
+// --------------------------------------------------- targeted regressions
+
+fn boot(src: &str, engine: EngineKind) -> Machine {
+    let img = hvsim::asm::assemble(src, RAM_BASE).unwrap();
+    let mut m = Machine::new(8 << 20, true);
+    m.engine = engine;
+    m.load(&img).unwrap();
+    m.set_entry(RAM_BASE);
+    m
+}
+
+/// Run `src` to poweroff under both engines; both must pass and agree on
+/// every counter and register. Returns the block-engine machine.
+fn both_engines_to_poweroff(src: &str) -> (Machine, Machine) {
+    let mut b = boot(src, EngineKind::Block);
+    let mut t = boot(src, EngineKind::Tick);
+    assert_eq!(b.run(10_000_000), ExitReason::PowerOff(SYSCON_PASS), "block engine failed");
+    assert_eq!(t.run(10_000_000), ExitReason::PowerOff(SYSCON_PASS), "tick engine failed");
+    assert_eq!(b.stats.sim_ticks, t.stats.sim_ticks, "ticks diverged");
+    assert_eq!(b.stats.sim_insts, t.stats.sim_insts, "insts diverged");
+    assert_eq!(b.core.hart.regs, t.core.hart.regs, "registers diverged");
+    (b, t)
+}
+
+// `addi x28, x0, 42` — the patch word the SMC tests store over an
+// `addi x28, x0, 1` site.
+const PATCHED_ADDI_T3_42: u32 = 0x02A0_0E13;
+
+/// Self-modifying code, intra-block: the store patches an instruction a
+/// few slots *ahead of it in the same straight-line block*. The per-tick
+/// engine refetches every instruction and naturally executes the new
+/// bytes; the block engine must notice the store into its own (cached,
+/// currently-executing) code page and re-translate before the patched
+/// slot is reached.
+#[test]
+fn self_modifying_code_within_one_block_reexecutes_patched_bytes() {
+    let src = format!(
+        r#"
+        la t0, patch
+        li t2, {PATCHED_ADDI_T3_42}
+        sw t2, 0(t0)
+    patch:
+        addi t3, x0, 1
+        li t0, {SYSCON_BASE}
+        li t1, {SYSCON_PASS}
+        sw t1, 0(t0)
+        wfi
+    "#
+    );
+    let (b, _t) = both_engines_to_poweroff(&src);
+    assert_eq!(b.core.hart.regs[28], 42, "patched instruction must execute, not the stale decode");
+}
+
+/// Self-modifying code, cross-block: a loop body is predecoded and
+/// executed once, then patched from a *different* block, then re-entered.
+/// Exercises the per-page code bitmap + invalidation-drain path (the
+/// demand-pager scenario: code pages rewritten after they have run).
+#[test]
+fn self_modifying_code_across_blocks_reexecutes_patched_bytes() {
+    let src = format!(
+        r#"
+        li s0, 0
+        li s1, 0
+    loop:
+        addi t3, x0, 1
+        add s1, s1, t3
+        bne s0, x0, done
+        la t0, loop
+        li t2, {PATCHED_ADDI_T3_42}
+        sw t2, 0(t0)
+        addi s0, s0, 1
+        j loop
+    done:
+        li t0, {SYSCON_BASE}
+        li t1, {SYSCON_PASS}
+        sw t1, 0(t0)
+        wfi
+    "#
+    );
+    let (b, _t) = both_engines_to_poweroff(&src);
+    assert_eq!(
+        b.core.hart.regs[9],
+        1 + 42,
+        "second loop pass must run the patched bytes (s1 = 1 + 42)"
+    );
+    assert!(b.core.block_cache.invalidated > 0, "the stale loop block was invalidated");
+}
+
+/// Budget-exactness pin: `VmExit::SliceExpired` lands on the same tick in
+/// both engines, for budgets that cut blocks at every awkward place
+/// (mid-block, on device-period edges, mid-device-period).
+#[test]
+fn slice_expired_lands_on_same_tick_in_both_engines() {
+    let src = "li t0, 0\nloop:\n addi t0, t0, 1\n xor t1, t0, t2\n slli t2, t1, 3\n and t4, t2, t0\n j loop\n";
+    for budget in [1u64, 5, 99, 100, 101, 199, 200, 1_234, 54_321] {
+        let mut b = boot(src, EngineKind::Block);
+        let mut t = boot(src, EngineKind::Tick);
+        assert_eq!(Vcpu::run(&mut b, RunBudget::ticks(budget)), VmExit::SliceExpired);
+        assert_eq!(Vcpu::run(&mut t, RunBudget::ticks(budget)), VmExit::SliceExpired);
+        assert_eq!(b.stats.sim_ticks, budget, "block engine: exact budget {budget}");
+        assert_eq!(t.stats.sim_ticks, budget, "tick engine: exact budget {budget}");
+        assert_eq!(b.stats.sim_insts, t.stats.sim_insts, "insts at budget {budget}");
+        assert_eq!(b.core.hart.regs, t.core.hart.regs, "registers at budget {budget}");
+        assert_eq!(b.core.hart.pc, t.core.hart.pc, "pc at budget {budget}");
+        // Resuming after the cut stays in lockstep too (mid-block resume
+        // builds a block at the cut offset).
+        assert_eq!(Vcpu::run(&mut b, RunBudget::ticks(157)), VmExit::SliceExpired);
+        assert_eq!(Vcpu::run(&mut t, RunBudget::ticks(157)), VmExit::SliceExpired);
+        assert_eq!(b.core.hart.regs, t.core.hart.regs, "registers after resume at {budget}");
+    }
+}
+
+/// Interrupt equivalence end to end: an armed timer preempting a busy
+/// loop must fire on the same tick (same interrupt histogram, same
+/// loop-counter value at the handler) under both engines.
+#[test]
+fn timer_preemption_is_tick_exact_across_engines() {
+    let src = r#"
+        .equ CLINT, 0x2000000
+        .equ SYSCON, 0x100000
+        la t0, handler
+        csrw mtvec, t0
+        li t0, CLINT + 0x4000
+        li t1, 23
+        sd t1, 0(t0)
+        li t0, 1 << 7
+        csrw mie, t0
+        csrsi mstatus, 8
+    spin:
+        addi t2, t2, 1
+        addi t3, t3, 2
+        j spin
+    .align 2
+    handler:
+        li t0, SYSCON
+        li t1, 0x5555
+        sw t1, 0(t0)
+        wfi
+    "#;
+    let (b, t) = both_engines_to_poweroff(src);
+    assert_eq!(b.stats.interrupts_at("M"), 1);
+    assert_eq!(t.stats.interrupts_at("M"), 1);
+    assert_eq!(
+        b.stats.interrupts, t.stats.interrupts,
+        "interrupt histograms diverged"
+    );
+}

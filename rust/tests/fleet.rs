@@ -23,6 +23,7 @@ fn spec(nodes: usize, guests: usize, threads: usize) -> FleetSpec {
         max_node_ticks: 8_000_000_000,
         tlb_sets: 64,
         tlb_ways: 4,
+        engine: hvsim::sim::EngineKind::default(),
     }
 }
 
@@ -118,6 +119,45 @@ fn slo_fleet_passes_with_p99_no_worse_than_round_robin() {
     let rr_p50 = rr.latency_percentile(0.50).unwrap();
     let slo_p50 = slo.latency_percentile(0.50).unwrap();
     assert!(slo_p50 <= rr_p50, "slo p50 {slo_p50} regressed past round-robin {rr_p50}");
+}
+
+#[test]
+fn fork_cost_excludes_derived_caches() {
+    // A fork clones architectural state only. Derived execution caches
+    // live on the carrier machine's Core (block cache, decode cache,
+    // page-translation caches) — a GuestVm carries none of them — and the
+    // bus-side code-page tracker resets on clone instead of being copied.
+    // Pinning both keeps fork cost at O(page table), the PR-4 guarantee,
+    // with the block engine in the picture.
+    use hvsim::vmm::GuestVm;
+    let template = GuestVm::new(0, "bitcount", 1, RAM).unwrap();
+
+    // Run a sibling fork on a block-engine machine so the template's
+    // *machine* has cached blocks and marked code pages somewhere.
+    let mut m = hvsim::sim::Machine::new(RAM, true);
+    assert_eq!(m.engine, hvsim::sim::EngineKind::Block);
+    let mut runner = template.fork(1, 2).unwrap();
+    hvsim::vmm::world_swap(&mut m, &mut runner);
+    m.run(200_000);
+    hvsim::vmm::world_swap(&mut m, &mut runner);
+    assert!(runner.bus.code_pages_marked() > 0, "block engine marked the runner's code pages");
+
+    // Forking the (never-run) template stays zero-copy and mark-free.
+    let same_vmid = template.fork(3, template.vmid).unwrap();
+    assert_eq!(same_vmid.construct_pages, 0, "same-VMID fork must copy zero pages");
+    assert_eq!(same_vmid.bus.code_pages_marked(), 0, "fork resets derived code tracking");
+    assert_eq!(same_vmid.bus.code_seq(), 0);
+
+    // A rebinding fork still pays only for the hypervisor-image pages.
+    let rebound = template.fork(4, 9).unwrap();
+    assert!(rebound.construct_pages > 0);
+    assert!(
+        rebound.construct_pages * 20 < template.bus.ram_pages() as u64,
+        "rebind fork materialized {} of {} pages",
+        rebound.construct_pages,
+        template.bus.ram_pages()
+    );
+    assert_eq!(rebound.bus.code_pages_marked(), 0);
 }
 
 #[test]
