@@ -47,7 +47,7 @@ fn main() -> Result<()> {
                 for r in [&p.native, &p.guest] {
                     if let Some(tr) = &r.trace {
                         eng.reset();
-                        rows.push((r.name.clone(), r.vm, eng.analyze(tr)?));
+                        rows.push((r.name.clone(), r.vm, eng.analyze(tr)?, tr.dropped));
                     }
                 }
             }

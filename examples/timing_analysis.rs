@@ -56,6 +56,29 @@ fn main() -> Result<()> {
         ratio > 0.1 && ratio < 10.0,
         "model and functional TLB disagree wildly"
     );
+
+    // Telemetry timeline (DESIGN.md §20): the same workload re-run with
+    // the event layer on, exported as the JSONL stream that event-level
+    // timing models ingest alongside the reference trace.
+    let mut m = cfg.build_machine();
+    if vm {
+        hvsim::sw::setup_guest(&mut m, bench, cfg.scale)?;
+    } else {
+        hvsim::sw::setup_native(&mut m, bench, cfg.scale)?;
+    }
+    m.enable_telemetry(0, 4096);
+    m.run(cfg.max_ticks);
+    let nt = m.finish_telemetry().expect("telemetry was enabled");
+    let jsonl = hvsim::telemetry::write_jsonl(std::slice::from_ref(&nt));
+    println!("\n== telemetry timeline (JSONL head) ==");
+    println!(
+        "{} events, {} dropped by the bounded ring",
+        nt.counters.events, nt.counters.events_dropped
+    );
+    for line in jsonl.lines().take(5) {
+        println!("  {line}");
+    }
+
     println!("\nOK");
     Ok(())
 }

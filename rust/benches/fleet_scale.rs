@@ -34,6 +34,7 @@ fn spec(threads: usize, scale: u64) -> FleetSpec {
         tlb_sets: 64,
         tlb_ways: 4,
         engine: hvsim::sim::EngineKind::default(),
+        telemetry: None,
     }
 }
 

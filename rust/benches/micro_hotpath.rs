@@ -19,11 +19,18 @@ use hvsim::mem::RAM_BASE;
 use hvsim::sim::{EngineKind, Machine};
 
 fn mips_of(src: &str, ticks: u64, engine: EngineKind) -> f64 {
+    mips_of_telemetry(src, ticks, engine, false)
+}
+
+fn mips_of_telemetry(src: &str, ticks: u64, engine: EngineKind, telemetry: bool) -> f64 {
     let img = assemble(src, RAM_BASE).unwrap();
     let mut m = Machine::new(16 << 20, true);
     m.engine = engine;
     m.load(&img).unwrap();
     m.set_entry(RAM_BASE);
+    if telemetry {
+        m.enable_telemetry(0, 1 << 14);
+    }
     m.run(ticks / 10); // warm-up
     let t0 = Instant::now();
     let start = m.stats.sim_insts;
@@ -110,6 +117,19 @@ fn main() -> anyhow::Result<()> {
         if alu_speedup >= 2.0 { "MET" } else { "MISSED (report-only)" }
     );
 
+    // Telemetry disabled-path cost (DESIGN.md §20): the ALU loop with the
+    // event layer off vs on. Off is the shipping default and must stay
+    // within noise of the plain block engine; on pays the emit-point diffs
+    // (report-only — the < 2% gate lives in the acceptance run, not here).
+    let tele_off = rows[0].block_mips;
+    let tele_on = mips_of_telemetry(alu, 30_000_000, EngineKind::Block, true);
+    println!(
+        "telemetry (block):   off {:>8.1} MIPS | on {:>8.1} MIPS | on/off {:>5.2}x",
+        tele_off,
+        tele_on,
+        tele_on / tele_off.max(1e-9)
+    );
+
     // 5. Checkpoint save/restore throughput (engine-independent).
     let mut m = Machine::new(64 << 20, true);
     hvsim::sw::setup_guest(&mut m, "qsort", 1)?;
@@ -146,9 +166,11 @@ fn main() -> anyhow::Result<()> {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"alu_speedup\": {:.3},\n  \"alu_target_2x_met\": {},\n  \"checkpoint_save_ms\": {:.2},\n  \"checkpoint_restore_ms\": {:.2}\n}}\n",
+        "  ],\n  \"alu_speedup\": {:.3},\n  \"alu_target_2x_met\": {},\n  \"telemetry_off_block_mips\": {:.2},\n  \"telemetry_on_block_mips\": {:.2},\n  \"checkpoint_save_ms\": {:.2},\n  \"checkpoint_restore_ms\": {:.2}\n}}\n",
         alu_speedup,
         alu_speedup >= 2.0,
+        tele_off,
+        tele_on,
         save_t * 1e3,
         restore_t * 1e3,
     ));

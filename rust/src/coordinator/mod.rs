@@ -310,21 +310,28 @@ pub fn boot_table(pairs: &[Pair]) -> String {
     s
 }
 
-/// E9: XLA timing-model analytics table for traced runs.
-pub fn timing_table(rows: &[(String, bool, TraceReport)]) -> String {
+/// E9: XLA timing-model analytics table for traced runs. The last tuple
+/// element is `TraceBuf::dropped` for that run — a truncated capture must
+/// be visible in the driver's summary, not just stored on the buffer.
+pub fn timing_table(rows: &[(String, bool, TraceReport, u64)]) -> String {
     let mut s = String::from(
         "E9 — XLA timing model (TLB miss rate + modeled two-stage overhead)\n\
-         benchmark     mode    refs        misses   miss%   xlat-overhead\n",
+         benchmark     mode    refs        misses   miss%   xlat-overhead  trace\n",
     );
-    for (name, vm, r) in rows {
+    for (name, vm, r, dropped) in rows {
         s.push_str(&format!(
-            "{:<12} {:<6} {:>10} {:>10} {:>6.2}% {:>11.4}x\n",
+            "{:<12} {:<6} {:>10} {:>10} {:>6.2}% {:>11.4}x  {}\n",
             name,
             if *vm { "guest" } else { "native" },
             r.refs,
             r.misses,
             100.0 * r.miss_rate(),
             r.overhead_ratio(),
+            if *dropped == 0 {
+                "complete".to_string()
+            } else {
+                format!("TRUNCATED ({dropped} refs dropped)")
+            },
         ));
     }
     s
@@ -375,15 +382,20 @@ fn run_node(
     policy: FlushPolicy,
     sched_kind: &SchedKind,
     max_ticks: u64,
-) -> Result<VmmScheduler> {
+    telemetry: Option<(u32, crate::telemetry::TelemetryCfg)>,
+) -> Result<(VmmScheduler, Option<crate::telemetry::NodeTelemetry>)> {
     let guests = vmm::build_node(benches, cfg.scale, count, GUEST_NODE_RAM)?;
     let sched_policy = sched_kind.build(slice_ticks, &guests);
     let mut sched = VmmScheduler::with_policy(guests, policy, sched_policy);
     let mut m = Machine::new(GUEST_NODE_RAM, true);
     m.core.tlb = crate::mmu::Tlb::new(cfg.tlb_sets as usize, cfg.tlb_ways as usize);
     m.engine = cfg.engine;
+    if let Some((node, t)) = telemetry {
+        m.enable_telemetry(node, t.ring_cap);
+    }
     m.run_scheduled(&mut sched, max_ticks);
-    Ok(sched)
+    let telemetry = m.finish_telemetry();
+    Ok((sched, telemetry))
 }
 
 /// Summarize one scheduled node against the solo baselines.
@@ -446,20 +458,23 @@ pub fn consolidation_sweep(
     slice_ticks: u64,
     policy: FlushPolicy,
     sched_kind: &SchedKind,
-) -> Result<Vec<ConsolidationRow>> {
+    telemetry: Option<crate::telemetry::TelemetryCfg>,
+) -> Result<(Vec<ConsolidationRow>, Vec<crate::telemetry::NodeTelemetry>)> {
     if benches.is_empty() {
         bail!("consolidation sweep needs at least one benchmark");
     }
     // Solo baselines: completion ticks + checksum per distinct benchmark.
     // These must pass — nothing downstream is meaningful otherwise. The
     // scheduler for benches[0] doubles as the count=1 row (no re-run).
+    // Baselines run untelemetered: they are oracles, not subjects.
     let mut solo: BTreeMap<String, (u64, String)> = BTreeMap::new();
     let mut solo_first: Option<VmmScheduler> = None;
     for &bench in benches {
         if solo.contains_key(bench) {
             continue;
         }
-        let sched = run_node(cfg, &[bench], 1, slice_ticks, policy, sched_kind, cfg.max_ticks)?;
+        let (sched, _) =
+            run_node(cfg, &[bench], 1, slice_ticks, policy, sched_kind, cfg.max_ticks, None)?;
         let g = &sched.guests[0];
         let Some(ticks) = g.finished_at_total.filter(|_| g.passed()) else {
             bail!("solo baseline {bench} did not pass ({:?}); console:\n{}", g.exit, g.console());
@@ -471,18 +486,27 @@ pub fn consolidation_sweep(
     }
 
     let mut rows = Vec::new();
-    for &count in counts {
-        if count == 1 {
+    let mut collected = Vec::new();
+    for (i, &count) in counts.iter().enumerate() {
+        if count == 1 && telemetry.is_none() {
             let sched = solo_first.as_ref().expect("baseline exists");
             rows.push(node_row(sched, 1, slice_ticks, policy, &solo));
             continue;
         }
+        let benches_row: &[&str] = if count == 1 { &benches[..1] } else { benches };
         let budget = cfg.max_ticks.saturating_mul(count as u64);
         let row_kind = fair_share_kind(sched_kind, &solo, count);
-        let sched = run_node(cfg, benches, count, slice_ticks, policy, &row_kind, budget)?;
+        // One telemetry "node" per sweep row, labeled by its guest count.
+        let t = telemetry.map(|t| (i as u32, t));
+        let (sched, node_t) =
+            run_node(cfg, benches_row, count, slice_ticks, policy, &row_kind, budget, t)?;
         rows.push(node_row(&sched, count, slice_ticks, policy, &solo));
+        if let Some(mut nt) = node_t {
+            nt.label = format!("sweep {count} guests");
+            collected.push(nt);
+        }
     }
-    Ok(rows)
+    Ok((rows, collected))
 }
 
 /// SLO fair-share defaulting for one consolidation row, via
@@ -524,6 +548,59 @@ pub fn consolidation_table(rows: &[ConsolidationRow], benches: &[&str], sched: &
             r.world_switches,
             r.avg_switch_ns,
             r.tlb_misses,
+        ));
+    }
+    s
+}
+
+// ----------------------------------------------------- telemetry report
+
+/// Render a counter snapshot (plus its per-node breakdown) as the CLI
+/// telemetry summary — the human-readable companion of `--metrics-out`.
+pub fn telemetry_table(nodes: &[crate::telemetry::NodeTelemetry]) -> String {
+    use crate::vmm::VmExit;
+    let c = crate::telemetry::counters::merge_all(nodes);
+    let mut s = format!(
+        "Telemetry — {} events across {} node(s){}\n",
+        c.events,
+        nodes.len(),
+        if c.events_dropped == 0 {
+            String::from(" (rings complete)")
+        } else {
+            format!(" (TRUNCATED: {} events dropped by bounded rings)", c.events_dropped)
+        },
+    );
+    let mut exits = String::new();
+    for (i, n) in c.vm_exits.iter().enumerate() {
+        if *n > 0 {
+            exits.push_str(&format!(" {}={}", VmExit::variant_name_of(i), n));
+        }
+    }
+    s.push_str(&format!(
+        "vm exits: {}{} | world switches: {} | decisions: {}\n\
+         traps: {} exceptions, {} interrupts, {} returns | tlb: {} flushes, {} gen bumps\n\
+         block cache: {} hits, {} builds, {} invalidated\n",
+        c.total_vm_exits(),
+        if exits.is_empty() { String::new() } else { format!(" ({})", exits.trim_start()) },
+        c.world_switches,
+        c.decisions,
+        c.exceptions,
+        c.interrupts,
+        c.trap_returns,
+        c.tlb_flushes,
+        c.tlb_gen_bumps,
+        c.block_hits,
+        c.block_builds,
+        c.block_invalidated,
+    ));
+    for n in nodes {
+        s.push_str(&format!(
+            "  {:<18} {:>9} events  {:>7} exits  {:>7} switches  {:>5} dropped\n",
+            n.label,
+            n.counters.events,
+            n.counters.total_vm_exits(),
+            n.counters.world_switches,
+            n.counters.events_dropped,
         ));
     }
     s
@@ -631,6 +708,21 @@ pub fn fleet_table(
             if report.wall_seconds > 0.0 { base.wall_seconds / report.wall_seconds } else { 0.0 },
             base.wall_seconds,
             report.wall_seconds,
+        ));
+    }
+    if let Some(c) = report.merged_counters() {
+        s.push_str(&format!(
+            "telemetry: {} events ({} exits, {} switches, {} exceptions, {} interrupts){}\n",
+            c.events,
+            c.total_vm_exits(),
+            c.world_switches,
+            c.exceptions,
+            c.interrupts,
+            if c.events_dropped == 0 {
+                String::from(", rings complete")
+            } else {
+                format!(", TRUNCATED: {} events dropped", c.events_dropped)
+            },
         ));
     }
     if console_mismatches.is_empty() {
@@ -741,6 +833,7 @@ mod tests {
             tlb_sets: 64,
             tlb_ways: 4,
             engine: crate::sim::EngineKind::default(),
+            telemetry: None,
         };
         let report = FleetReport {
             nodes: vec![NodeOutcome {
@@ -756,9 +849,12 @@ mod tests {
                     passed: true,
                     finished_at_total: Some(500),
                     sim_insts: 400,
+                    exceptions: 0,
+                    interrupts: 0,
                     console: crate::util::ConsoleDigest::of_bytes(b"x"),
                     pages_forked: 2,
                 }],
+                telemetry: None,
             }],
             threads: 1,
             construct_seconds: 0.01,

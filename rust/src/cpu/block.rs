@@ -91,7 +91,21 @@ pub struct BlockCache {
     pub invalidated: u64,
 }
 
+/// Counter snapshot of a [`BlockCache`] — what `SimStats::dump` prints
+/// and `Machine::finish_telemetry` folds into the counter registry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub builds: u64,
+    pub hits: u64,
+    pub invalidated: u64,
+}
+
 impl BlockCache {
+    /// Snapshot the dispatch counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { builds: self.builds, hits: self.hits, invalidated: self.invalidated }
+    }
+
     pub fn new() -> BlockCache {
         let mut slots = Vec::with_capacity(BLOCK_SLOTS);
         slots.resize_with(BLOCK_SLOTS, || None);

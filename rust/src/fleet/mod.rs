@@ -63,6 +63,12 @@ pub struct FleetSpec {
     /// cache by default; engines are bit-exact, so this only changes
     /// wall-clock numbers).
     pub engine: crate::sim::EngineKind,
+    /// Telemetry layer (DESIGN.md §20): `Some` installs a per-node event
+    /// ring + counter registry on each carrier machine (thread-confined,
+    /// so emission is lock-free by construction) and collects the frozen
+    /// [`crate::telemetry::NodeTelemetry`] into the report. `None` (the
+    /// default) leaves every emit point a single never-taken branch.
+    pub telemetry: Option<crate::telemetry::TelemetryCfg>,
 }
 
 impl FleetSpec {
@@ -84,6 +90,11 @@ pub struct GuestOutcome {
     /// Node-scheduled ticks at power-off (the completion latency).
     pub finished_at_total: Option<u64>,
     pub sim_insts: u64,
+    /// Architectural exceptions/interrupts this guest took (totals of its
+    /// `SimStats` histograms) — the oracle the telemetry counter
+    /// cross-check compares against.
+    pub exceptions: u64,
+    pub interrupts: u64,
     pub console: ConsoleDigest,
     /// RAM pages this guest's fork materialized at construction.
     pub pages_forked: u64,
@@ -99,6 +110,9 @@ pub struct NodeOutcome {
     pub switch_host_ns: u128,
     pub host_seconds: f64,
     pub guests: Vec<GuestOutcome>,
+    /// Frozen telemetry of this node's carrier machine (when the spec
+    /// enabled it).
+    pub telemetry: Option<crate::telemetry::NodeTelemetry>,
 }
 
 /// Aggregate result of a fleet run.
@@ -193,6 +207,30 @@ impl FleetReport {
         Some(v[rank - 1])
     }
 
+    /// Frozen telemetry of every node that collected it, node order.
+    pub fn node_telemetry(&self) -> Vec<&crate::telemetry::NodeTelemetry> {
+        self.nodes.iter().filter_map(|n| n.telemetry.as_ref()).collect()
+    }
+
+    /// The fleet-merged counter snapshot (`None` when telemetry was off).
+    pub fn merged_counters(&self) -> Option<crate::telemetry::Counters> {
+        let nodes = self.node_telemetry();
+        if nodes.is_empty() {
+            return None;
+        }
+        let mut total = crate::telemetry::Counters::default();
+        for n in nodes {
+            total.merge(&n.counters);
+        }
+        Some(total)
+    }
+
+    /// Telemetry ring events dropped fleet-wide (0 when off — but when
+    /// on, a truncated timeline is always visible, never silent).
+    pub fn telemetry_events_dropped(&self) -> u64 {
+        self.merged_counters().map(|c| c.events_dropped).unwrap_or(0)
+    }
+
     /// Completed guests per host wall-clock second.
     pub fn guests_per_sec(&self) -> f64 {
         if self.wall_seconds > 0.0 {
@@ -274,9 +312,16 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                 let mut m = Machine::new(spec.ram_bytes, true);
                 m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
                 m.engine = spec.engine;
+                // The registry is created in (and never leaves) this
+                // worker thread until the frozen snapshot is pushed into
+                // the results — per-thread and lock-free by construction.
+                if let Some(cfg) = spec.telemetry {
+                    m.enable_telemetry(node as u32, cfg.ring_cap);
+                }
                 let t_node = Instant::now();
                 m.run_scheduled(&mut sched, spec.max_node_ticks);
                 let host_seconds = t_node.elapsed().as_secs_f64();
+                let telemetry = m.finish_telemetry();
                 let out = sched.outcome();
                 let guests = sched
                     .guests
@@ -288,6 +333,8 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                         passed: g.passed(),
                         finished_at_total: g.finished_at_total,
                         sim_insts: g.stats.sim_insts,
+                        exceptions: g.stats.total_exceptions(),
+                        interrupts: g.stats.interrupts.values().sum(),
                         console: g.console_digest(),
                         pages_forked: g.construct_pages,
                     })
@@ -299,6 +346,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                     switch_host_ns: sched.switch.switch_host_ns,
                     host_seconds,
                     guests,
+                    telemetry,
                 });
             });
         }
@@ -404,6 +452,34 @@ pub fn console_mismatches(
     bad
 }
 
+/// Cross-check the telemetry counter registry against the simulator's
+/// own accounting (`SwitchStats` via [`NodeOutcome::world_switches`],
+/// `SimStats` histogram totals via [`GuestOutcome`]): the two views are
+/// computed independently and must agree *bit-exactly*. Returns
+/// human-readable mismatch descriptions; empty when telemetry is off or
+/// every total matches.
+pub fn counter_mismatches(report: &FleetReport) -> Vec<String> {
+    let mut bad = Vec::new();
+    let Some(c) = report.merged_counters() else {
+        return bad;
+    };
+    let mut check = |what: &str, counter: u64, oracle: u64| {
+        if counter != oracle {
+            bad.push(format!(
+                "telemetry {what} = {counter} but the simulator recorded {oracle}"
+            ));
+        }
+    };
+    check("world_switches", c.world_switches, report.world_switches());
+    check("exceptions", c.exceptions, report.guests().map(|g| g.exceptions).sum());
+    check("interrupts", c.interrupts, report.guests().map(|g| g.interrupts).sum());
+    // Structural invariant of the scheduler loop: every slice is exactly
+    // one decision, one full switch and one VM exit.
+    check("decisions", c.decisions, c.world_switches);
+    check("vm_exits", c.total_vm_exits(), c.world_switches);
+    bad
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -423,6 +499,7 @@ mod tests {
             tlb_sets: 64,
             tlb_ways: 4,
             engine: crate::sim::EngineKind::default(),
+            telemetry: None,
         }
     }
 
@@ -455,10 +532,13 @@ mod tests {
                         passed: true,
                         finished_at_total: Some(t),
                         sim_insts: 0,
+                        exceptions: 0,
+                        interrupts: 0,
                         console: ConsoleDigest::of_bytes(b""),
                         pages_forked: 0,
                     })
                     .collect(),
+                telemetry: None,
             }],
             threads: 1,
             construct_seconds: 0.0,

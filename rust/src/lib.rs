@@ -23,6 +23,10 @@
 //!   K host threads, built from guest worlds forked off copy-on-write RAM
 //!   templates in O(dirty pages), with consoles streamed as SHA-256
 //!   digests (`hvsim fleet`, fleet-scaling experiment).
+//! - [`telemetry`]: the observability layer — per-guest bounded event
+//!   timelines, per-node hypervisor counters merged at fleet join, and
+//!   the Chrome-trace / JSONL / metrics exporters (default-off; one
+//!   branch on a niche-packed `Option` when disabled).
 //! - [`util`]: dependency-free SHA-256 and the console-digest type.
 //! - [`trace`], [`runtime`]: trace capture and the PJRT-loaded XLA timing
 //!   model (Layer 2/1 artifacts).
@@ -41,6 +45,7 @@ pub mod mmu;
 pub mod runtime;
 pub mod sim;
 pub mod sw;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod vmm;

@@ -3,18 +3,26 @@
 //! ```text
 //! hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE]
 //!             [--stats] [--echo] [--max-ticks N] [--engine block|tick]
+//!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
 //! hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--scale N]
 //!             [--policy all|vmid|none] [--sched rr|slo|weighted:W,...]
 //!             [--slo BENCH=TICKS,...] [--engine block|tick] [--out FILE]
+//!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T]
 //!             [--bench A,B] [--scale N] [--policy all|vmid|none]
 //!             [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]
 //!             [--engine block|tick] [--out FILE]
+//!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
 //! hvsim boot  [--config FILE]
 //! hvsim list
 //! ```
+//!
+//! Telemetry (DESIGN.md §20) is enabled iff any of the three output
+//! flags is present: `--trace-out` writes Chrome Trace Event JSON
+//! (chrome://tracing / Perfetto), `--metrics-out` the merged counter
+//! snapshot, `--events-out` the JSONL event stream.
 
 use std::path::PathBuf;
 
@@ -165,13 +173,61 @@ fn parse_benches(args: &Args) -> Result<Vec<String>> {
     Ok(benches)
 }
 
+/// The shared `--trace-out` / `--metrics-out` / `--events-out` telemetry
+/// plumbing of the run/vmm/fleet subcommands: any present flag enables
+/// event capture; each writes one export format from the same frozen
+/// per-node timelines.
+struct TelemetryOut {
+    trace: Option<PathBuf>,
+    metrics: Option<PathBuf>,
+    events: Option<PathBuf>,
+}
+
+impl TelemetryOut {
+    fn parse(args: &Args) -> TelemetryOut {
+        TelemetryOut {
+            trace: args.get("trace-out").map(PathBuf::from),
+            metrics: args.get("metrics-out").map(PathBuf::from),
+            events: args.get("events-out").map(PathBuf::from),
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.trace.is_some() || self.metrics.is_some() || self.events.is_some()
+    }
+
+    fn cfg(&self) -> Option<hvsim::telemetry::TelemetryCfg> {
+        self.enabled().then(hvsim::telemetry::TelemetryCfg::default)
+    }
+
+    fn write(&self, nodes: &[hvsim::telemetry::NodeTelemetry]) -> Result<()> {
+        let mut emit = |path: &Option<PathBuf>, text: String| -> Result<()> {
+            if let Some(p) = path {
+                std::fs::write(p, text).with_context(|| format!("writing {}", p.display()))?;
+            }
+            Ok(())
+        };
+        emit(&self.trace, hvsim::telemetry::chrome::chrome_trace(nodes))?;
+        emit(&self.metrics, hvsim::telemetry::counters::metrics_json(nodes))?;
+        emit(&self.events, hvsim::telemetry::write_jsonl(nodes))?;
+        Ok(())
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
+    let tele = TelemetryOut::parse(args);
     let mut m = cfg.build_machine();
     if cfg.vm {
         sw::setup_guest(&mut m, &cfg.workload, cfg.scale)?;
     } else {
         sw::setup_native(&mut m, &cfg.workload, cfg.scale)?;
+    }
+    if let Some(tcfg) = tele.cfg() {
+        m.enable_telemetry(0, tcfg.ring_cap);
+        if let Some(t) = m.telemetry.as_mut() {
+            t.label = format!("{} ({})", cfg.workload, if cfg.vm { "guest" } else { "native" });
+        }
     }
     let r = m.run(cfg.max_ticks);
     if !cfg.uart_echo {
@@ -192,6 +248,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if args.has("stats") {
         println!("{}", m.stats_txt());
+    }
+    if let Some(nt) = m.finish_telemetry() {
+        eprint!("{}", coordinator::telemetry_table(std::slice::from_ref(&nt)));
+        tele.write(std::slice::from_ref(&nt))?;
     }
     Ok(())
 }
@@ -233,7 +293,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             for r in [&p.native, &p.guest] {
                 if let Some(tr) = &r.trace {
                     eng.reset();
-                    rows.push((r.name.clone(), r.vm, eng.analyze(tr)?));
+                    rows.push((r.name.clone(), r.vm, eng.analyze(tr)?, tr.dropped));
                 }
             }
         }
@@ -271,7 +331,16 @@ fn cmd_vmm(args: &Args) -> Result<()> {
 
     let mut sched = parse_sched(args)?;
     apply_slo_overrides(&mut sched, parse_slo_targets(args)?, &benches_owned)?;
-    let rows = coordinator::consolidation_sweep(&cfg, &benches, &counts, slice, policy, &sched)?;
+    let tele = TelemetryOut::parse(args);
+    let (rows, tnodes) = coordinator::consolidation_sweep(
+        &cfg,
+        &benches,
+        &counts,
+        slice,
+        policy,
+        &sched,
+        tele.cfg(),
+    )?;
     let mut out = coordinator::consolidation_table(&rows, &benches, &sched);
     let all_ok = rows.iter().all(|r| r.all_passed && r.checksums_ok);
     out.push('\n');
@@ -279,6 +348,11 @@ fn cmd_vmm(args: &Args) -> Result<()> {
         out.push_str("consolidation check: ALL GUESTS POWERED OFF PASS, CHECKSUMS MATCH SOLO\n");
     } else {
         out.push_str("consolidation check: FAILURES\n");
+    }
+    if !tnodes.is_empty() {
+        out.push('\n');
+        out.push_str(&coordinator::telemetry_table(&tnodes));
+        tele.write(&tnodes)?;
     }
     match args.get("out") {
         Some(path) => std::fs::write(path, &out)?,
@@ -306,6 +380,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut sched = parse_sched(args)?;
     let benches = parse_benches(args)?;
     apply_slo_overrides(&mut sched, parse_slo_targets(args)?, &benches)?;
+    let tele = TelemetryOut::parse(args);
     let mut spec = hvsim::fleet::FleetSpec {
         nodes,
         guests_per_node: guests,
@@ -320,6 +395,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         tlb_sets: cfg.tlb_sets as usize,
         tlb_ways: cfg.tlb_ways as usize,
         engine: cfg.engine,
+        telemetry: tele.cfg(),
     };
 
     // Solo baselines up front: the byte-check oracle for every fleet
@@ -393,6 +469,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let baseline = if report.threads > 1 {
         let mut solo = spec.clone();
         solo.threads = 1;
+        // The baseline exists for the speedup figure only — keep it
+        // untelemetered so its rings don't shadow the measured fleet's.
+        solo.telemetry = None;
         Some(hvsim::fleet::run_fleet(&solo)?)
     } else {
         None
@@ -421,6 +500,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if matches!(spec.sched, SchedKind::SloDeadline { .. }) {
         let mut rr_spec = spec.clone();
         rr_spec.sched = SchedKind::RoundRobin;
+        rr_spec.telemetry = None;
         let rr = hvsim::fleet::run_fleet(&rr_spec)?;
         if rr.all_passed() {
             let (p50, p99) = (
@@ -456,9 +536,28 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         }
     }
 
+    // Telemetry exports + the counter cross-check: the event-derived
+    // counters must agree bit-exactly with the independently maintained
+    // scheduler/guest statistics, or the timeline cannot be trusted.
+    let mut counter_bad = Vec::new();
+    if tele.enabled() {
+        let tnodes: Vec<hvsim::telemetry::NodeTelemetry> =
+            report.nodes.iter().filter_map(|n| n.telemetry.clone()).collect();
+        out.push('\n');
+        out.push_str(&coordinator::telemetry_table(&tnodes));
+        tele.write(&tnodes)?;
+        counter_bad = hvsim::fleet::counter_mismatches(&report);
+    }
+
     match args.get("out") {
         Some(path) => std::fs::write(path, &out)?,
         None => print!("{out}"),
+    }
+    if !counter_bad.is_empty() {
+        bail!(
+            "fleet run failed: telemetry counters diverged from scheduler stats:\n  {}",
+            counter_bad.join("\n  ")
+        );
     }
     if !report.all_passed() {
         bail!("fleet run failed: not all guests passed");
@@ -527,12 +626,13 @@ fn cmd_boot(args: &Args) -> Result<()> {
 fn usage() -> ! {
     eprintln!(
         "hvsim — gem5-style RISC-V simulator with the H extension\n\
-         usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo] [--engine block|tick]\n  \
+         usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo] [--engine block|tick] [telemetry]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
-         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick]\n  \
-         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick]\n  \
+         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
+         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
-         hvsim boot  [--bench NAME]\n  hvsim list"
+         hvsim boot  [--bench NAME]\n  hvsim list\n\
+         telemetry: [--trace-out chrome.json] [--metrics-out metrics.json] [--events-out events.jsonl]"
     );
     std::process::exit(2);
 }

@@ -353,6 +353,37 @@ impl Default for Tlb {
 mod tests {
     use super::*;
 
+    #[test]
+    fn every_flush_kind_bumps_the_generation() {
+        // The telemetry layer *detects* TLB hygiene by diffing the
+        // generation (and `MmuStats::flushes`) around a dispatch instead
+        // of instrumenting each fence site — which is only sound if every
+        // invalidation path bumps the generation exactly here.
+        let mut t = Tlb::new(16, 2);
+        let mut last = t.generation();
+        let mut bumped = |t: &Tlb, what: &str, last: &mut u64| {
+            assert_eq!(t.generation(), *last + 1, "{what} must bump the generation once");
+            *last = t.generation();
+        };
+        t.flush_all();
+        bumped(&t, "flush_all", &mut last);
+        t.flush_vmid(3);
+        bumped(&t, "flush_vmid", &mut last);
+        t.bump_generation();
+        bumped(&t, "bump_generation", &mut last);
+        t.fence_vma(None, None);
+        bumped(&t, "fence_vma", &mut last);
+        t.fence_vvma(1, None, None);
+        bumped(&t, "fence_vvma", &mut last);
+        t.fence_gvma(None, None);
+        bumped(&t, "fence_gvma", &mut last);
+        // And lookups/inserts must NOT (a bump per access would make the
+        // gen-delta emit point fire on every dispatch).
+        t.insert(native_entry(0x10, 0));
+        t.lookup(0x10, 0, 0, false);
+        assert_eq!(t.generation(), last);
+    }
+
     fn native_entry(vpn: u64, asid: u16) -> TlbEntry {
         TlbEntry {
             valid: true,

@@ -91,6 +91,24 @@ pub struct Machine {
     /// world, and inheriting a co-tenant's phase would make consolidated
     /// runs diverge from solo runs.
     pub(crate) device_countdown: u64,
+    /// The telemetry layer (DESIGN.md §20). Default `None`; like
+    /// [`Machine::engine`] it is a machine/node property, *not* part of a
+    /// guest's world — world switches keep it and retag its context. The
+    /// `Option<Box<_>>` is niche-packed, so every emit point in the hot
+    /// paths costs one branch on a pointer-sized word while disabled.
+    pub telemetry: Option<Box<crate::telemetry::Telemetry>>,
+}
+
+/// Pre-dispatch snapshot the telemetry emit points diff against: traps
+/// and TLB hygiene are *detected* (from state the simulator already
+/// maintains) rather than instrumented inline, keeping the disabled
+/// path free of any bookkeeping.
+#[derive(Clone, Copy)]
+struct EmitPre {
+    prv: crate::isa::PrivLevel,
+    virt: bool,
+    tlb_gen: u64,
+    flushes: u64,
 }
 
 impl Machine {
@@ -112,12 +130,82 @@ impl Machine {
             stats: SimStats::default(),
             engine: EngineKind::default(),
             device_countdown: 0,
+            telemetry: None,
         }
     }
 
     /// Enable virtual-reference tracing (feeds the XLA timing model).
     pub fn enable_trace(&mut self, cap: usize) {
         self.core.trace = Some(crate::trace::TraceBuf::new(cap));
+    }
+
+    /// Enable the telemetry layer (DESIGN.md §20): per-guest bounded
+    /// event rings plus the node counter registry. `node` tags every
+    /// exported event; solo runs use node 0.
+    pub fn enable_telemetry(&mut self, node: u32, ring_cap: usize) {
+        self.telemetry = Some(Box::new(crate::telemetry::Telemetry::new(node, ring_cap)));
+    }
+
+    /// Detach and freeze the telemetry layer, folding in the counters
+    /// that are cheaper to read off machine-global state at the end than
+    /// to observe per event: block-cache totals (hits are deliberately
+    /// counter-only — one ring event per dispatch would evict every
+    /// informative event from the bounded rings). `None` if telemetry
+    /// was never enabled.
+    pub fn finish_telemetry(&mut self) -> Option<crate::telemetry::NodeTelemetry> {
+        let t = self.telemetry.take()?;
+        let mut n = t.finish();
+        let cache = self.core.block_cache.stats();
+        n.counters.block_hits = cache.hits;
+        n.counters.block_builds = cache.builds;
+        n.counters.block_invalidated = cache.invalidated;
+        Some(n)
+    }
+
+    /// Snapshot the simulator state the post-dispatch emit points diff
+    /// against. Only called when telemetry is enabled.
+    fn telemetry_pre(&self) -> EmitPre {
+        EmitPre {
+            prv: self.core.hart.prv,
+            virt: self.core.hart.virt,
+            tlb_gen: self.core.tlb.generation(),
+            flushes: self.core.mmu_stats.flushes,
+        }
+    }
+
+    /// Post-dispatch emit point shared by both engines: diff the machine
+    /// against `pre` and record trap enter/return and TLB flush /
+    /// generation-bump events. Exact at dispatch granularity — traps end
+    /// basic blocks, and xRET instructions end them too, so a privilege
+    /// transition can only happen once per dispatch in either engine.
+    fn telemetry_post(&mut self, pre: EmitPre, ev: StepEvent) {
+        use crate::telemetry::EventKind;
+        let ticks = self.stats.sim_ticks;
+        let eff = self.core.hart.eff_priv();
+        let priv_changed =
+            (self.core.hart.prv, self.core.hart.virt) != (pre.prv, pre.virt);
+        let tlb_gen = self.core.tlb.generation();
+        let flushes = self.core.mmu_stats.flushes;
+        let t = self.telemetry.as_mut().expect("telemetry_post with telemetry off");
+        match ev {
+            StepEvent::Exception(cause, target) => t.emit(
+                ticks,
+                EventKind::TrapEnter { cause: cause.code(), interrupt: false, target: target.name() },
+            ),
+            StepEvent::Interrupt(cause, target) => t.emit(
+                ticks,
+                EventKind::TrapEnter { cause: cause.code(), interrupt: true, target: target.name() },
+            ),
+            StepEvent::Retired if priv_changed => {
+                t.emit(ticks, EventKind::TrapReturn { to: eff.name() });
+            }
+            _ => {}
+        }
+        if flushes > pre.flushes {
+            t.emit(ticks, EventKind::TlbFlush { flushes: flushes - pre.flushes });
+        } else if tlb_gen != pre.tlb_gen {
+            t.emit(ticks, EventKind::TlbGenBump);
+        }
     }
 
     /// Load an assembled image into RAM.
@@ -152,6 +240,9 @@ impl Machine {
             self.device_update();
         }
         self.device_countdown -= 1;
+        // Telemetry emit point: one branch on a niche-packed Option when
+        // disabled (the hard cost requirement of DESIGN.md §20).
+        let pre = if self.telemetry.is_some() { Some(self.telemetry_pre()) } else { None };
         let ev = step(&mut self.core, &mut self.bus);
         self.stats.sim_ticks += 1;
         match ev {
@@ -175,6 +266,9 @@ impl Machine {
                 self.stats.sim_ticks += ff;
                 self.device_countdown -= ff;
             }
+        }
+        if let Some(pre) = pre {
+            self.telemetry_post(pre, ev);
         }
         ev
     }
@@ -245,9 +339,19 @@ impl Machine {
         {
             return self.tick_bounded(limit);
         }
+        // Telemetry emit point (same single-branch disabled cost as the
+        // tick engine). Block-cache deltas are diffed around the whole
+        // dispatch so invalidation drains on the fallback lane are seen
+        // too; trap/TLB events for the fallback lane are emitted by
+        // `tick_bounded` itself.
+        let pre = if self.telemetry.is_some() {
+            Some((self.telemetry_pre(), self.core.block_cache.stats()))
+        } else {
+            None
+        };
         let max_insts = self.device_countdown.min(limit.saturating_sub(self.stats.sim_ticks));
         debug_assert!(max_insts >= 1, "block_step called with no tick budget");
-        match crate::cpu::block::run_block(&mut self.core, &mut self.bus, max_insts) {
+        let ev = match crate::cpu::block::run_block(&mut self.core, &mut self.bus, max_insts) {
             Some(run) => {
                 self.stats.sim_ticks += run.executed;
                 self.device_countdown -= run.executed;
@@ -255,10 +359,29 @@ impl Machine {
                 if let StepEvent::Exception(cause, target) = run.event {
                     self.stats.record_exception(cause, target);
                 }
+                if let Some((p, _)) = pre {
+                    self.telemetry_post(p, run.event);
+                }
                 run.event
             }
             None => self.tick_bounded(limit),
+        };
+        if let Some((_, cache0)) = pre {
+            use crate::telemetry::EventKind;
+            let cache = self.core.block_cache.stats();
+            let ticks = self.stats.sim_ticks;
+            let t = self.telemetry.as_mut().expect("telemetry vanished mid-dispatch");
+            if cache.builds > cache0.builds {
+                t.emit(ticks, EventKind::BlockBuild);
+            }
+            if cache.invalidated > cache0.invalidated {
+                t.emit(
+                    ticks,
+                    EventKind::BlockInvalidate { blocks: cache.invalidated - cache0.invalidated },
+                );
+            }
         }
+        ev
     }
 
     /// Run until poweroff or `max_ticks`. A thin projection of the
@@ -336,9 +459,15 @@ impl Machine {
         self.bus.uart.digest()
     }
 
-    /// Formatted gem5-style stats dump.
+    /// Formatted gem5-style stats dump (CPU, MMU, block cache and code
+    /// bitmap).
     pub fn stats_txt(&self) -> String {
-        self.stats.dump(&self.core.mmu_stats)
+        self.stats.dump(
+            &self.core.mmu_stats,
+            &self.core.block_cache.stats(),
+            self.bus.code_pages_marked(),
+            self.bus.code_seq(),
+        )
     }
 
     /// Reset *measurement* counters (after boot, before a benchmark) —

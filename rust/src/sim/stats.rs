@@ -57,8 +57,18 @@ impl SimStats {
         self.exceptions.iter().filter(|((c, _), _)| *c == code).map(|(_, v)| v).sum()
     }
 
-    /// Render a gem5-flavoured `stats.txt` section.
-    pub fn dump(&self, mmu: &crate::mmu::MmuStats) -> String {
+    /// Render a gem5-flavoured `stats.txt` section. Besides the CPU/MMU
+    /// counters this folds in the block-translation-cache dispatch stats
+    /// and the code-bitmap activity (pages currently marked executable +
+    /// invalidation events), which were previously invisible in `hvsim
+    /// run` output.
+    pub fn dump(
+        &self,
+        mmu: &crate::mmu::MmuStats,
+        cache: &crate::cpu::block::CacheStats,
+        code_pages_marked: u64,
+        code_flushes: u64,
+    ) -> String {
         let mut s = String::new();
         s.push_str("---------- Begin Simulation Statistics ----------\n");
         let mut line = |k: &str, v: u64, desc: &str| {
@@ -74,6 +84,11 @@ impl SimStats {
         line("system.cpu.mmu.walker.g_walks", mmu.g_walks, "G-stage walks (walkGStage)");
         line("system.cpu.mmu.walker.g_steps", mmu.g_walk_steps, "G-stage page-table accesses");
         line("system.cpu.mmu.tlb.flushes", mmu.flushes, "sfence/hfence flushes");
+        line("system.cpu.bcache.hits", cache.hits, "Block-cache dispatch hits");
+        line("system.cpu.bcache.builds", cache.builds, "Basic blocks predecoded (misses)");
+        line("system.cpu.bcache.invalidated", cache.invalidated, "Blocks dropped by code-page invalidation");
+        line("system.mem.code_pages", code_pages_marked, "RAM pages currently marked as code");
+        line("system.mem.code_flushes", code_flushes, "Code-bitmap invalidation events (SMC)");
         for ((code, level), v) in &self.exceptions {
             s.push_str(&format!(
                 "system.cpu.exceptions.cause{code:02}.{level:<10} {v:>16}  # exceptions (cause {code}) handled at {level}\n"
@@ -117,9 +132,15 @@ mod tests {
         let mut st = SimStats::default();
         st.sim_insts = 1234;
         st.record_exception(ExceptionCause::EcallFromU, TrapTarget::HS);
-        let txt = st.dump(&crate::mmu::MmuStats::default());
+        let cache = crate::cpu::block::CacheStats { builds: 7, hits: 99, invalidated: 2 };
+        let txt = st.dump(&crate::mmu::MmuStats::default(), &cache, 3, 5);
         assert!(txt.contains("sim_insts"));
         assert!(txt.contains("1234"));
         assert!(txt.contains("cause08.HS"));
+        assert!(txt.contains("system.cpu.bcache.hits"));
+        assert!(txt.contains("system.cpu.bcache.builds"));
+        assert!(txt.contains("system.cpu.bcache.invalidated"));
+        assert!(txt.contains("system.mem.code_pages"));
+        assert!(txt.contains("system.mem.code_flushes"));
     }
 }

@@ -1,0 +1,143 @@
+//! Chrome Trace Event Format exporter (`--trace-out trace.json`).
+//!
+//! Renders the fleet's event timelines as one JSON document that opens
+//! directly in `about://tracing` / Perfetto: pid = node, tid = guest (so
+//! each (node, guest) pair gets its own track), `ts` in simulated ticks.
+//! Resident slices (SwitchIn → SwitchOut pairs) become "X" complete
+//! events; everything else is an "i" instant on its guest's track.
+//!
+//! Schema reference: the Trace Event Format document ("JSON Array
+//! Format" with a `traceEvents` wrapper plus "M" metadata records for
+//! process/thread names). Hand-rolled like the repo's other artifact
+//! writers — the dependency closure has no serde.
+
+use super::{Event, EventKind, NodeTelemetry};
+
+fn meta(name: &str, pid: u32, tid: Option<u32>, value: &str) -> String {
+    let tid_part = match tid {
+        Some(t) => format!("\"tid\": {t}, "),
+        None => String::new(),
+    };
+    format!(
+        "{{\"name\": \"{name}\", \"ph\": \"M\", \"pid\": {pid}, {tid_part}\"args\": {{\"name\": \"{value}\"}}}}"
+    )
+}
+
+fn instant(node: u32, e: &Event) -> String {
+    let args = e.kind.args_json();
+    format!(
+        "{{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \"pid\": {}, \"tid\": {}, \"ts\": {}, \"args\": {{{}}}}}",
+        e.kind.name(),
+        node,
+        e.guest,
+        e.tick,
+        args
+    )
+}
+
+/// Render all node timelines as one Chrome Trace Event JSON document.
+pub fn chrome_trace(nodes: &[NodeTelemetry]) -> String {
+    let mut records: Vec<String> = Vec::new();
+    for n in nodes {
+        records.push(meta("process_name", n.node, None, &n.label.replace('"', "'")));
+        for (gi, ring) in n.rings.iter().enumerate() {
+            if ring.is_empty() {
+                continue;
+            }
+            let vmid = ring.events[0].vmid;
+            records.push(meta(
+                "thread_name",
+                n.node,
+                Some(gi as u32),
+                &format!("guest {gi} (vmid {vmid})"),
+            ));
+        }
+        // Pair SwitchIn..SwitchOut per guest into "X" slices; emit the
+        // rest as instants. Events are walked in canonical (tick, guest)
+        // order so output is deterministic across thread counts.
+        let mut open: Vec<Option<(u64, &'static str)>> = vec![None; n.rings.len()];
+        for e in n.events_ordered() {
+            match e.kind {
+                EventKind::SwitchIn { flush } => {
+                    open[e.guest as usize] = Some((e.tick, flush));
+                    records.push(instant(n.node, e));
+                }
+                EventKind::SwitchOut => {
+                    if let Some((start, flush)) = open[e.guest as usize].take() {
+                        records.push(format!(
+                            "{{\"name\": \"resident\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {}, \"dur\": {}, \"args\": {{\"vmid\": {}, \"flush\": \"{}\"}}}}",
+                            n.node,
+                            e.guest,
+                            start,
+                            e.tick.saturating_sub(start),
+                            e.vmid,
+                            flush
+                        ));
+                    } else {
+                        records.push(instant(n.node, e));
+                    }
+                }
+                _ => records.push(instant(n.node, e)),
+            }
+        }
+    }
+    let mut out = String::from("{\"traceEvents\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(r);
+        if i + 1 < records.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Telemetry;
+    use crate::vmm::VmExit;
+
+    fn sample() -> Vec<NodeTelemetry> {
+        let mut t = Telemetry::new(0, 64);
+        t.emit_at(0, 1, 0, EventKind::Decision { policy: "rr", slice_ticks: 100, wfi_exit: false });
+        t.emit_at(0, 1, 0, EventKind::SwitchIn { flush: "flush-all" });
+        t.emit_at(0, 1, 90, EventKind::VmExit(VmExit::SliceExpired));
+        t.emit_at(0, 1, 100, EventKind::SwitchOut);
+        t.emit_at(1, 2, 100, EventKind::SwitchIn { flush: "flush-all" });
+        t.emit_at(1, 2, 200, EventKind::SwitchOut);
+        vec![t.finish()]
+    }
+
+    #[test]
+    fn pairs_switches_into_complete_events() {
+        let j = chrome_trace(&sample());
+        assert!(j.starts_with("{\"traceEvents\": ["));
+        assert!(j.contains("\"ph\": \"X\""));
+        assert!(j.contains("\"dur\": 100"));
+        assert!(j.contains("\"name\": \"vm_exit\""));
+        assert!(j.contains("\"name\": \"decision\""));
+    }
+
+    #[test]
+    fn one_track_per_node_guest() {
+        let j = chrome_trace(&sample());
+        assert!(j.contains("\"name\": \"guest 0 (vmid 1)\""));
+        assert!(j.contains("\"name\": \"guest 1 (vmid 2)\""));
+        assert!(j.contains("\"name\": \"process_name\""));
+        // tid distinguishes guests within the node's pid.
+        assert!(j.contains("\"tid\": 0,"));
+        assert!(j.contains("\"tid\": 1,"));
+    }
+
+    #[test]
+    fn unmatched_switch_out_degrades_to_instant() {
+        let mut t = Telemetry::new(2, 8);
+        t.emit_at(0, 1, 50, EventKind::SwitchOut);
+        let j = chrome_trace(&[t.finish()]);
+        assert!(j.contains("\"name\": \"switch_out\""));
+        assert!(!j.contains("\"ph\": \"X\""));
+    }
+}

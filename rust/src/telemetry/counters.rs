@@ -1,0 +1,206 @@
+//! Hypervisor counter registry.
+//!
+//! One [`Counters`] per node machine; each fleet worker thread owns the
+//! registries of the nodes it runs, so counting at emit time needs no
+//! atomics or locks. Fleets [`Counters::merge`] the per-node registries
+//! at join time into the snapshot that `--metrics-out` serializes.
+//!
+//! The totals here are *recomputed observations* of state the simulator
+//! already tracks (`SwitchStats`, `SimStats`, `BlockCache`); the fleet
+//! layer cross-checks them bit-exactly against those sources so the two
+//! views can never drift apart silently.
+
+use super::{EventKind, NodeTelemetry};
+use crate::vmm::VmExit;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Every emit, including ones a full ring dropped.
+    pub events: u64,
+    /// Ring overflow, folded in by `Telemetry::finish` (never silent).
+    pub events_dropped: u64,
+    /// Per-variant VM-exit totals, indexed by [`VmExit::variant`].
+    pub vm_exits: [u64; VmExit::VARIANTS],
+    /// Full in+out round trips (one per completed slice).
+    pub world_switches: u64,
+    pub decisions: u64,
+    pub exceptions: u64,
+    pub interrupts: u64,
+    pub trap_returns: u64,
+    /// Block-cache dispatch hits (counter-only — see module docs in
+    /// `telemetry`; folded from `BlockCache` at finish).
+    pub block_hits: u64,
+    pub block_builds: u64,
+    pub block_invalidated: u64,
+    pub tlb_flushes: u64,
+    pub tlb_gen_bumps: u64,
+}
+
+impl Counters {
+    /// Accumulate one event at its emit site.
+    #[inline]
+    pub fn count(&mut self, kind: &EventKind) {
+        self.events += 1;
+        match kind {
+            EventKind::VmExit(e) => self.vm_exits[e.variant()] += 1,
+            EventKind::SwitchIn { .. } => self.world_switches += 1,
+            EventKind::SwitchOut => {}
+            EventKind::Decision { .. } => self.decisions += 1,
+            EventKind::BlockBuild => self.block_builds += 1,
+            EventKind::BlockInvalidate { blocks } => self.block_invalidated += blocks,
+            EventKind::TlbFlush { flushes } => self.tlb_flushes += flushes,
+            EventKind::TlbGenBump => self.tlb_gen_bumps += 1,
+            EventKind::TrapEnter { interrupt, .. } => {
+                if *interrupt {
+                    self.interrupts += 1;
+                } else {
+                    self.exceptions += 1;
+                }
+            }
+            EventKind::TrapReturn { .. } => self.trap_returns += 1,
+        }
+    }
+
+    /// Fold another registry into this one (fleet join).
+    pub fn merge(&mut self, other: &Counters) {
+        self.events += other.events;
+        self.events_dropped += other.events_dropped;
+        for (a, b) in self.vm_exits.iter_mut().zip(other.vm_exits.iter()) {
+            *a += b;
+        }
+        self.world_switches += other.world_switches;
+        self.decisions += other.decisions;
+        self.exceptions += other.exceptions;
+        self.interrupts += other.interrupts;
+        self.trap_returns += other.trap_returns;
+        self.block_hits += other.block_hits;
+        self.block_builds += other.block_builds;
+        self.block_invalidated += other.block_invalidated;
+        self.tlb_flushes += other.tlb_flushes;
+        self.tlb_gen_bumps += other.tlb_gen_bumps;
+    }
+
+    pub fn total_vm_exits(&self) -> u64 {
+        self.vm_exits.iter().sum()
+    }
+
+    /// JSON object body (`{...}`), hand-rolled like the rest of the
+    /// repo's artifact writers (no serde in the dependency closure).
+    pub fn to_json(&self) -> String {
+        let mut exits = String::new();
+        for (i, n) in self.vm_exits.iter().enumerate() {
+            if i > 0 {
+                exits.push_str(", ");
+            }
+            exits.push_str(&format!("\"{}\": {}", VmExit::variant_name_of(i), n));
+        }
+        format!(
+            concat!(
+                "{{\"events\": {}, \"events_dropped\": {}, \"vm_exits\": {{{}}}, ",
+                "\"world_switches\": {}, \"decisions\": {}, \"exceptions\": {}, ",
+                "\"interrupts\": {}, \"trap_returns\": {}, \"block_hits\": {}, ",
+                "\"block_builds\": {}, \"block_invalidated\": {}, \"tlb_flushes\": {}, ",
+                "\"tlb_gen_bumps\": {}}}"
+            ),
+            self.events,
+            self.events_dropped,
+            exits,
+            self.world_switches,
+            self.decisions,
+            self.exceptions,
+            self.interrupts,
+            self.trap_returns,
+            self.block_hits,
+            self.block_builds,
+            self.block_invalidated,
+            self.tlb_flushes,
+            self.tlb_gen_bumps,
+        )
+    }
+}
+
+/// Merge all node registries into one snapshot.
+pub fn merge_all(nodes: &[NodeTelemetry]) -> Counters {
+    let mut total = Counters::default();
+    for n in nodes {
+        total.merge(&n.counters);
+    }
+    total
+}
+
+/// The `--metrics-out` document: merged counters plus the per-node
+/// breakdown.
+pub fn metrics_json(nodes: &[NodeTelemetry]) -> String {
+    let merged = merge_all(nodes);
+    let mut per_node = String::new();
+    for (i, n) in nodes.iter().enumerate() {
+        if i > 0 {
+            per_node.push_str(", ");
+        }
+        per_node.push_str(&format!(
+            "{{\"node\": {}, \"label\": \"{}\", \"counters\": {}}}",
+            n.node,
+            n.label.replace('"', "'"),
+            n.counters.to_json()
+        ));
+    }
+    format!(
+        "{{\n  \"schema\": 1,\n  \"nodes\": {},\n  \"counters\": {},\n  \"per_node\": [{}]\n}}\n",
+        nodes.len(),
+        merged.to_json(),
+        per_node
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_routes_kinds_to_fields() {
+        let mut c = Counters::default();
+        c.count(&EventKind::VmExit(VmExit::SliceExpired));
+        c.count(&EventKind::VmExit(VmExit::Fault));
+        c.count(&EventKind::SwitchIn { flush: "flush-all" });
+        c.count(&EventKind::SwitchOut);
+        c.count(&EventKind::Decision { policy: "rr", slice_ticks: 1, wfi_exit: false });
+        c.count(&EventKind::TrapEnter { cause: 8, interrupt: false, target: "HS" });
+        c.count(&EventKind::TrapEnter { cause: 5, interrupt: true, target: "M" });
+        c.count(&EventKind::TrapReturn { to: "VU" });
+        c.count(&EventKind::BlockInvalidate { blocks: 3 });
+        c.count(&EventKind::TlbFlush { flushes: 2 });
+        assert_eq!(c.events, 10);
+        assert_eq!(c.total_vm_exits(), 2);
+        assert_eq!(c.vm_exits[VmExit::SliceExpired.variant()], 1);
+        assert_eq!(c.vm_exits[VmExit::Fault.variant()], 1);
+        assert_eq!(c.world_switches, 1, "one per switch-in, i.e. one per slice");
+        assert_eq!(c.decisions, 1);
+        assert_eq!((c.exceptions, c.interrupts, c.trap_returns), (1, 1, 1));
+        assert_eq!(c.block_invalidated, 3);
+        assert_eq!(c.tlb_flushes, 2);
+    }
+
+    #[test]
+    fn merge_adds_every_field() {
+        let mut a = Counters::default();
+        a.count(&EventKind::VmExit(VmExit::Ecall));
+        a.block_hits = 5;
+        let mut b = a;
+        b.count(&EventKind::TlbGenBump);
+        a.merge(&b);
+        assert_eq!(a.events, 3);
+        assert_eq!(a.vm_exits[VmExit::Ecall.variant()], 2);
+        assert_eq!(a.block_hits, 10);
+        assert_eq!(a.tlb_gen_bumps, 1);
+    }
+
+    #[test]
+    fn json_snapshot_names_every_exit_variant() {
+        let c = Counters::default();
+        let j = c.to_json();
+        for i in 0..VmExit::VARIANTS {
+            assert!(j.contains(VmExit::variant_name_of(i)), "missing {}", VmExit::variant_name_of(i));
+        }
+        assert!(j.starts_with('{') && j.ends_with('}'));
+    }
+}

@@ -1,0 +1,380 @@
+//! Fleet-wide telemetry: structured event timelines, hypervisor counters
+//! and trace exporters (DESIGN.md §20).
+//!
+//! The layer is always compiled in and default-off. A [`Telemetry`]
+//! handle lives on [`crate::sim::Machine`] as an `Option<Box<Telemetry>>`
+//! — niche-packed, so every emit point in the tick/block hot paths costs
+//! exactly one branch on a pointer-sized word while disabled. When
+//! enabled:
+//!
+//! - every structured event (VM exit, world switch in/out, scheduler
+//!   decision, block-cache build/invalidate, TLB flush/generation bump,
+//!   trap enter/return) lands in a bounded per-guest [`EventRing`],
+//!   tagged `(node, guest, vmid, tick)` on the *node* timeline (scheduled
+//!   ticks, so a fleet node's guests interleave correctly in a trace
+//!   viewer);
+//! - a per-node [`Counters`] registry accumulates totals at the same
+//!   emit sites. Fleets give each worker thread its own registry (one per
+//!   node machine — no atomics, no locks) and merge them at join time;
+//!   the merged snapshot serializes to `--metrics-out metrics.json` and
+//!   must agree bit-exactly with `SwitchStats`/`SimStats`
+//!   ([`crate::fleet::counter_mismatches`] enforces this).
+//! - exporters render the collected [`NodeTelemetry`] as Chrome Trace
+//!   Event Format JSON ([`chrome::chrome_trace`], `--trace-out`, one
+//!   track per (node, guest), opens in `about://tracing`/Perfetto) and as
+//!   a JSONL event stream ([`write_jsonl`], `--events-out`, the E9
+//!   timing-engine input shape).
+//!
+//! Rings follow the [`crate::trace::TraceBuf`] convention: bounded, and
+//! overflow is *reported* via an explicit `dropped` count, never silent.
+//! Block-cache *hits* are deliberately counter-only — one ring event per
+//! dispatch would evict every informative event from the bounded ring;
+//! builds (misses) and invalidations are rare and are ring events.
+
+pub mod chrome;
+pub mod counters;
+pub mod ring;
+
+pub use counters::Counters;
+pub use ring::EventRing;
+
+/// Default per-guest ring capacity (events). Big enough to hold every
+/// switch/decision/exit event of a CI-sized fleet run with room for the
+/// trap/TLB stream; overflow drops the newest events and counts them.
+pub const DEFAULT_RING_CAP: usize = 1 << 14;
+
+/// Telemetry knobs carried by a [`crate::fleet::FleetSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TelemetryCfg {
+    /// Per-guest event-ring capacity.
+    pub ring_cap: usize,
+}
+
+impl Default for TelemetryCfg {
+    fn default() -> TelemetryCfg {
+        TelemetryCfg { ring_cap: DEFAULT_RING_CAP }
+    }
+}
+
+/// What happened (the structured payload of an [`Event`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// [`crate::vmm::Vcpu::run`] returned to the VMM (variant + payload).
+    VmExit(crate::vmm::VmExit),
+    /// World switch in, with the TLB hygiene applied on entry.
+    SwitchIn { flush: &'static str },
+    /// World switch out (end of the slice).
+    SwitchOut,
+    /// Scheduler decision: which policy granted how many ticks.
+    Decision { policy: &'static str, slice_ticks: u64, wfi_exit: bool },
+    /// Block-cache miss: a basic block was predecoded.
+    BlockBuild,
+    /// Cached blocks dropped by a code-page invalidation.
+    BlockInvalidate { blocks: u64 },
+    /// Explicit TLB flush(es) executed this dispatch (sfence/hfence).
+    TlbFlush { flushes: u64 },
+    /// Page-cache generation bump without an entry flush.
+    TlbGenBump,
+    /// Trap delivered to `target` ("M"/"HS"/"VS").
+    TrapEnter { cause: u64, interrupt: bool, target: &'static str },
+    /// Trap return (mret/sret): privilege dropped back to `to`.
+    TrapReturn { to: &'static str },
+}
+
+impl EventKind {
+    /// Stable schema identifier (Chrome/JSONL event name).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::VmExit(_) => "vm_exit",
+            EventKind::SwitchIn { .. } => "switch_in",
+            EventKind::SwitchOut => "switch_out",
+            EventKind::Decision { .. } => "decision",
+            EventKind::BlockBuild => "block_build",
+            EventKind::BlockInvalidate { .. } => "block_invalidate",
+            EventKind::TlbFlush { .. } => "tlb_flush",
+            EventKind::TlbGenBump => "tlb_gen_bump",
+            EventKind::TrapEnter { .. } => "trap_enter",
+            EventKind::TrapReturn { .. } => "trap_return",
+        }
+    }
+
+    /// The `"k": v, ...` argument payload, as JSON object members (no
+    /// braces). Shared by the Chrome and JSONL exporters so the two
+    /// schemas cannot drift.
+    pub fn args_json(&self) -> String {
+        use crate::vmm::VmExit;
+        match self {
+            EventKind::VmExit(e) => {
+                let mut s = format!("\"variant\": \"{}\"", e.variant_name());
+                match e {
+                    VmExit::GuestDone { passed } => {
+                        s.push_str(&format!(", \"passed\": {passed}"));
+                    }
+                    VmExit::Wfi { parked_until } => match parked_until {
+                        Some(t) => s.push_str(&format!(", \"parked_until\": {t}")),
+                        None => s.push_str(", \"parked_until\": null"),
+                    },
+                    _ => {}
+                }
+                s
+            }
+            EventKind::SwitchIn { flush } => format!("\"flush\": \"{flush}\""),
+            EventKind::SwitchOut => String::new(),
+            EventKind::Decision { policy, slice_ticks, wfi_exit } => {
+                format!("\"policy\": \"{policy}\", \"slice_ticks\": {slice_ticks}, \"wfi_exit\": {wfi_exit}")
+            }
+            EventKind::BlockBuild => String::new(),
+            EventKind::BlockInvalidate { blocks } => format!("\"blocks\": {blocks}"),
+            EventKind::TlbFlush { flushes } => format!("\"flushes\": {flushes}"),
+            EventKind::TlbGenBump => String::new(),
+            EventKind::TrapEnter { cause, interrupt, target } => {
+                format!("\"cause\": {cause}, \"interrupt\": {interrupt}, \"target\": \"{target}\"")
+            }
+            EventKind::TrapReturn { to } => format!("\"to\": \"{to}\""),
+        }
+    }
+}
+
+/// One timestamped structured event. `tick` is on the node timeline
+/// (scheduled ticks for a vmm/fleet run; raw `sim_ticks` for a solo
+/// machine). The node id lives on the owning [`NodeTelemetry`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub tick: u64,
+    pub guest: u32,
+    pub vmid: u16,
+    pub kind: EventKind,
+}
+
+/// The live per-node telemetry handle (one per [`crate::sim::Machine`];
+/// each fleet worker thread owns the handles of the nodes it runs, so
+/// emission is lock-free by construction).
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    pub node: u32,
+    /// Human label for the node track in exports (defaults to "node N").
+    pub label: String,
+    ring_cap: usize,
+    /// Resident-guest context, maintained by the world-switch driver.
+    cur_guest: u32,
+    cur_vmid: u16,
+    /// `tick_base + resident sim_ticks` = node-timeline tick. Zero for a
+    /// solo machine (node time *is* guest time).
+    tick_base: u64,
+    /// Per-guest bounded rings, indexed by guest id.
+    rings: Vec<EventRing>,
+    pub counters: Counters,
+}
+
+impl Telemetry {
+    pub fn new(node: u32, ring_cap: usize) -> Telemetry {
+        Telemetry {
+            node,
+            label: format!("node {node}"),
+            ring_cap: ring_cap.max(1),
+            cur_guest: 0,
+            cur_vmid: 0,
+            tick_base: 0,
+            rings: Vec::new(),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> Telemetry {
+        self.label = label.into();
+        self
+    }
+
+    /// Point subsequent [`Telemetry::emit`] calls at the resident guest.
+    /// `tick_base` is the node-timeline tick minus the guest's current
+    /// `sim_ticks` (so emit sites can pass raw `sim_ticks`).
+    pub fn set_context(&mut self, guest: u32, vmid: u16, tick_base: u64) {
+        self.cur_guest = guest;
+        self.cur_vmid = vmid;
+        self.tick_base = tick_base;
+    }
+
+    /// Emit against the current guest context. `sim_ticks` is the
+    /// resident world's tick counter; the node-timeline offset is added
+    /// here.
+    #[inline]
+    pub fn emit(&mut self, sim_ticks: u64, kind: EventKind) {
+        let tick = self.tick_base.saturating_add(sim_ticks);
+        self.emit_at(self.cur_guest, self.cur_vmid, tick, kind);
+    }
+
+    /// Emit with an explicit tag (scheduler-side events that fire while
+    /// no guest is resident, e.g. a [`EventKind::Decision`]).
+    pub fn emit_at(&mut self, guest: u32, vmid: u16, tick: u64, kind: EventKind) {
+        self.counters.count(&kind);
+        let gi = guest as usize;
+        if gi >= self.rings.len() {
+            self.rings.resize_with(gi + 1, || EventRing::new(self.ring_cap));
+        }
+        self.rings[gi].push(Event { tick, guest, vmid, kind });
+    }
+
+    /// Events dropped across all rings so far (bounded-ring overflow —
+    /// reported, never silent).
+    pub fn events_dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Freeze into the exportable snapshot, folding ring overflow into
+    /// the counters.
+    pub fn finish(mut self) -> NodeTelemetry {
+        self.counters.events_dropped = self.events_dropped();
+        NodeTelemetry {
+            node: self.node,
+            label: self.label,
+            rings: self.rings,
+            counters: self.counters,
+        }
+    }
+}
+
+/// One node's frozen telemetry: what the exporters and the fleet report
+/// consume.
+#[derive(Clone, Debug)]
+pub struct NodeTelemetry {
+    pub node: u32,
+    pub label: String,
+    /// Per-guest event timelines, indexed by guest id.
+    pub rings: Vec<EventRing>,
+    pub counters: Counters,
+}
+
+impl NodeTelemetry {
+    /// All events of this node, in (tick, guest) order — the canonical
+    /// serialization order of both exporters, and what the determinism
+    /// digest hashes.
+    pub fn events_ordered(&self) -> Vec<&Event> {
+        let mut evs: Vec<&Event> = self.rings.iter().flat_map(|r| r.events.iter()).collect();
+        evs.sort_by_key(|e| (e.tick, e.guest));
+        evs
+    }
+
+    /// SHA-256 over the debug serialization of the ordered event
+    /// timeline — the `tests/fleet.rs`-style digest the thread-count
+    /// determinism check compares.
+    pub fn timeline_digest(&self) -> [u8; 32] {
+        let mut text = String::new();
+        for e in self.events_ordered() {
+            text.push_str(&format!("{e:?}\n"));
+        }
+        crate::util::Sha256::digest(text.as_bytes())
+    }
+}
+
+/// One JSONL line per event: `{"node":N,"guest":G,"vmid":V,"tick":T,
+/// "name":"...", ...args}` — the flat stream shape the E9 timing-engine
+/// ingestion expects (ROADMAP).
+pub fn write_jsonl(nodes: &[NodeTelemetry]) -> String {
+    let mut s = String::new();
+    for n in nodes {
+        for e in n.events_ordered() {
+            let args = e.kind.args_json();
+            s.push_str(&format!(
+                "{{\"node\": {}, \"guest\": {}, \"vmid\": {}, \"tick\": {}, \"name\": \"{}\"{}{}}}\n",
+                n.node,
+                e.guest,
+                e.vmid,
+                e.tick,
+                e.kind.name(),
+                if args.is_empty() { "" } else { ", " },
+                args,
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_drop_newest_and_count() {
+        let mut t = Telemetry::new(0, 4);
+        for i in 0..10u64 {
+            t.emit(i, EventKind::TlbGenBump);
+        }
+        assert_eq!(t.rings[0].events.len(), 4);
+        assert_eq!(t.rings[0].events[3].tick, 3, "drop-newest keeps the oldest events");
+        assert_eq!(t.events_dropped(), 6);
+        assert_eq!(t.counters.events, 10, "counters see every emit, dropped or not");
+        assert_eq!(t.counters.tlb_gen_bumps, 10);
+        let n = t.finish();
+        assert_eq!(n.counters.events_dropped, 6, "overflow folded into the snapshot");
+    }
+
+    #[test]
+    fn context_tags_and_tick_base() {
+        let mut t = Telemetry::new(3, 64);
+        t.set_context(2, 7, 1_000);
+        t.emit(5, EventKind::SwitchOut);
+        t.emit_at(0, 1, 42, EventKind::SwitchOut);
+        let n = t.finish();
+        assert_eq!(n.rings.len(), 3);
+        let e = n.rings[2].events[0];
+        assert_eq!((e.tick, e.guest, e.vmid), (1_005, 2, 7));
+        let e = n.rings[0].events[0];
+        assert_eq!((e.tick, e.guest, e.vmid), (42, 0, 1));
+    }
+
+    #[test]
+    fn jsonl_one_line_per_event_ordered_by_tick() {
+        let mut t = Telemetry::new(1, 64);
+        t.emit_at(1, 2, 20, EventKind::SwitchOut);
+        t.emit_at(0, 1, 10, EventKind::Decision { policy: "rr", slice_ticks: 100, wfi_exit: false });
+        let s = write_jsonl(&[t.finish()]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"tick\": 10") && lines[0].contains("\"decision\""));
+        assert!(lines[1].contains("\"tick\": 20") && lines[1].contains("\"switch_out\""));
+        for l in &lines {
+            assert!(l.starts_with('{') && l.ends_with('}'));
+        }
+    }
+
+    #[test]
+    fn event_names_are_stable_schema_identifiers() {
+        // Exporters and downstream consumers key on these names; renaming
+        // one is a schema break and must be deliberate.
+        let kinds = [
+            EventKind::VmExit(crate::vmm::VmExit::SliceExpired),
+            EventKind::SwitchIn { flush: "partitioned" },
+            EventKind::SwitchOut,
+            EventKind::Decision { policy: "rr", slice_ticks: 1, wfi_exit: false },
+            EventKind::BlockBuild,
+            EventKind::BlockInvalidate { blocks: 1 },
+            EventKind::TlbFlush { flushes: 1 },
+            EventKind::TlbGenBump,
+            EventKind::TrapEnter { cause: 8, interrupt: false, target: "HS" },
+            EventKind::TrapReturn { to: "VU" },
+        ];
+        let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "vm_exit", "switch_in", "switch_out", "decision", "block_build",
+                "block_invalidate", "tlb_flush", "tlb_gen_bump", "trap_enter", "trap_return"
+            ]
+        );
+        for k in &kinds {
+            let a = k.args_json();
+            assert!(!a.contains('{') && !a.contains('}'), "args are braceless members: {a}");
+        }
+    }
+
+    #[test]
+    fn timeline_digest_is_order_canonical() {
+        let mut a = Telemetry::new(0, 64);
+        a.emit_at(0, 1, 10, EventKind::SwitchOut);
+        a.emit_at(1, 2, 5, EventKind::SwitchOut);
+        let mut b = Telemetry::new(0, 64);
+        b.emit_at(1, 2, 5, EventKind::SwitchOut);
+        b.emit_at(0, 1, 10, EventKind::SwitchOut);
+        assert_eq!(a.finish().timeline_digest(), b.finish().timeline_digest());
+    }
+}

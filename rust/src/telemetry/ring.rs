@@ -1,0 +1,70 @@
+//! Bounded per-guest event ring.
+//!
+//! Same overflow contract as [`crate::trace::TraceBuf`]: push until the
+//! cap, then count drops explicitly — a truncated timeline must never
+//! look identical to a complete one. Drop-newest keeps the *front* of
+//! the run (boot, first switches, first traps), which is the part a
+//! bounded ring can preserve deterministically regardless of run length.
+
+use super::Event;
+
+#[derive(Clone, Debug)]
+pub struct EventRing {
+    pub events: Vec<Event>,
+    pub cap: usize,
+    /// Events dropped after hitting `cap` (reported, never silent).
+    pub dropped: u64,
+}
+
+impl EventRing {
+    pub fn new(cap: usize) -> EventRing {
+        EventRing { events: Vec::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::EventKind;
+
+    fn ev(tick: u64) -> Event {
+        Event { tick, guest: 0, vmid: 0, kind: EventKind::SwitchOut }
+    }
+
+    #[test]
+    fn cap_drops_newest_and_counts() {
+        let mut r = EventRing::new(3);
+        for i in 0..7 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped, 4);
+        assert_eq!(r.events[2].tick, 2, "oldest events survive");
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let mut r = EventRing::new(0);
+        r.push(ev(0));
+        r.push(ev(1));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped, 1);
+    }
+}

@@ -135,4 +135,29 @@ mod tests {
         let t = TraceBuf::new(8);
         assert_eq!(WindowBatcher::new(&t).count(), 0);
     }
+
+    #[test]
+    fn batcher_exact_multiple_has_no_padded_tail() {
+        // A trace whose length is an exact multiple of WINDOW must yield
+        // only full windows — no spurious empty (all-padding) tail window,
+        // which would feed the timing kernel a window of fake references.
+        let mut t = TraceBuf::new(WINDOW * 2);
+        for i in 0..(WINDOW * 2) as u64 {
+            t.push((i + 1) << 12, KIND_FETCH);
+        }
+        let ws: Vec<_> = WindowBatcher::new(&t).collect();
+        assert_eq!(ws.len(), 2);
+        for (w, valid) in &ws {
+            assert_eq!(*valid, WINDOW, "every window fully valid");
+            assert_eq!(w.len(), WINDOW);
+        }
+        // One-entry trace: a single window padded with WINDOW-1 zeros.
+        let mut t = TraceBuf::new(8);
+        t.push(0x5000, KIND_STORE);
+        let ws: Vec<_> = WindowBatcher::new(&t).collect();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].1, 1);
+        assert_eq!(ws[0].0.len(), WINDOW);
+        assert!(ws[0].0[1..].iter().all(|&r| r == 0), "tail is zero padding");
+    }
 }

@@ -49,6 +49,42 @@ pub enum VmExit {
     BudgetExhausted,
 }
 
+impl VmExit {
+    /// Number of exit variants ([`VmExit::variant`] indexes a
+    /// `[u64; VARIANTS]` counter array in `telemetry::Counters`).
+    pub const VARIANTS: usize = 6;
+
+    /// Dense variant index, stable across payloads.
+    pub fn variant(&self) -> usize {
+        match self {
+            VmExit::SliceExpired => 0,
+            VmExit::Wfi { .. } => 1,
+            VmExit::GuestDone { .. } => 2,
+            VmExit::Ecall => 3,
+            VmExit::Fault => 4,
+            VmExit::BudgetExhausted => 5,
+        }
+    }
+
+    /// Stable schema name of this exit's variant (telemetry exports).
+    pub fn variant_name(&self) -> &'static str {
+        Self::variant_name_of(self.variant())
+    }
+
+    /// Name for a dense variant index (counter-snapshot serialization).
+    pub fn variant_name_of(variant: usize) -> &'static str {
+        match variant {
+            0 => "slice_expired",
+            1 => "wfi",
+            2 => "guest_done",
+            3 => "ecall",
+            4 => "fault",
+            5 => "budget_exhausted",
+            _ => "unknown",
+        }
+    }
+}
+
 /// How long (and under which exit conditions) one [`Vcpu::run`] call may
 /// execute.
 #[derive(Clone, Copy, Debug)]
@@ -182,6 +218,12 @@ impl Vcpu {
             }
         };
         m.stats.host_time += start.elapsed();
+        // Telemetry: the exit is recorded while the world is still
+        // resident, so the guest/vmid context and tick base are current.
+        let ticks = m.stats.sim_ticks;
+        if let Some(t) = m.telemetry.as_mut() {
+            t.emit(ticks, crate::telemetry::EventKind::VmExit(exit));
+        }
         exit
     }
 }
@@ -330,6 +372,44 @@ mod tests {
         let (mut m2, _g) = resident("li t0, 0\n loop: addi t0, t0, 1\n j loop\n");
         assert_eq!(Vcpu::run(&mut m2, RunBudget::ticks(1_000)), VmExit::SliceExpired);
         assert_eq!(m2.core.hart.regs[5], two_slices);
+    }
+
+    #[test]
+    fn variant_indices_and_names_are_stable() {
+        // Telemetry counter arrays and JSON schemas key on these; a
+        // reorder is a schema break and must be deliberate.
+        let exits = [
+            VmExit::SliceExpired,
+            VmExit::Wfi { parked_until: None },
+            VmExit::GuestDone { passed: true },
+            VmExit::Ecall,
+            VmExit::Fault,
+            VmExit::BudgetExhausted,
+        ];
+        assert_eq!(exits.len(), VmExit::VARIANTS);
+        for (i, e) in exits.iter().enumerate() {
+            assert_eq!(e.variant(), i);
+            assert_eq!(e.variant_name(), VmExit::variant_name_of(i));
+        }
+        let names: Vec<&str> = (0..VmExit::VARIANTS).map(VmExit::variant_name_of).collect();
+        assert_eq!(
+            names,
+            ["slice_expired", "wfi", "guest_done", "ecall", "fault", "budget_exhausted"]
+        );
+    }
+
+    #[test]
+    fn run_emits_vm_exit_event_when_telemetry_enabled() {
+        let (mut m, _g) = resident("loop: j loop\n");
+        m.enable_telemetry(0, 64);
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(100)), VmExit::SliceExpired);
+        let n = m.finish_telemetry().unwrap();
+        let c = n.counters;
+        assert_eq!(c.vm_exits[VmExit::SliceExpired.variant()], 1);
+        let evs = n.events_ordered();
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e.kind, crate::telemetry::EventKind::VmExit(VmExit::SliceExpired))));
     }
 
     #[test]

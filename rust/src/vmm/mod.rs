@@ -482,6 +482,21 @@ impl VmmScheduler {
             if idx >= self.guests.len() || self.guests[idx].exit.is_some() {
                 break; // defensive: a buggy policy ends the run, not the process
             }
+            // Telemetry: decision events carry node-timeline ticks and are
+            // emitted outside the Instant-timed switch windows below, so
+            // switch_host_ns stays an honest swap-cost measurement.
+            if let Some(t) = m.telemetry.as_mut() {
+                t.emit_at(
+                    idx as u32,
+                    self.guests[idx].vmid,
+                    self.total_ticks,
+                    crate::telemetry::EventKind::Decision {
+                        policy: self.sched.name(),
+                        slice_ticks: d.slice_ticks,
+                        wfi_exit: d.wfi_exit,
+                    },
+                );
+            }
 
             // ---- world switch in ----
             let t0 = Instant::now();
@@ -495,6 +510,21 @@ impl VmmScheduler {
             }
             self.switch.half_switches += 1;
             self.switch.switch_host_ns += t0.elapsed().as_nanos();
+            // Retag the telemetry context at the resident guest. The tick
+            // base maps the guest's private sim_ticks onto the node
+            // timeline: base + sim_ticks == total_ticks right now, and the
+            // guest's clock only advances while it is resident.
+            if let Some(t) = m.telemetry.as_mut() {
+                let vmid = self.guests[idx].vmid;
+                t.set_context(idx as u32, vmid, self.total_ticks - m.stats.sim_ticks);
+                let flush = self.policy.name();
+                t.emit_at(
+                    idx as u32,
+                    vmid,
+                    self.total_ticks,
+                    crate::telemetry::EventKind::SwitchIn { flush },
+                );
+            }
 
             // ---- run one slice through the exit boundary ----
             let budget = RunBudget {
@@ -515,6 +545,14 @@ impl VmmScheduler {
             world_swap(m, &mut self.guests[idx]);
             self.switch.half_switches += 1;
             self.switch.switch_host_ns += t1.elapsed().as_nanos();
+            if let Some(t) = m.telemetry.as_mut() {
+                t.emit_at(
+                    idx as u32,
+                    self.guests[idx].vmid,
+                    self.total_ticks,
+                    crate::telemetry::EventKind::SwitchOut,
+                );
+            }
 
             let g = &mut self.guests[idx];
             g.slices_run += 1;
@@ -608,6 +646,52 @@ mod tests {
         let slices: u64 = sched.guests.iter().map(|g| g.slices_run).sum();
         assert_eq!(out.world_switches, slices);
         assert_eq!(sched.switch.half_switches, 2 * slices);
+    }
+
+    #[test]
+    fn telemetry_counters_match_switch_stats_bit_exactly() {
+        let guests = vec![tiny_guest(0, 20_000), tiny_guest(1, 5_000)];
+        let mut sched = VmmScheduler::new(guests, 1_000, FlushPolicy::Partitioned);
+        let mut m = Machine::new(1 << 20, true);
+        m.enable_telemetry(0, 1 << 14);
+        let out = sched.run(&mut m, 1_000_000_000);
+        assert!(out.all_passed);
+        let n = m.finish_telemetry().unwrap();
+        let c = n.counters;
+        // The registry is a recomputed observation of SwitchStats — the
+        // two views must agree bit-exactly (acceptance criterion).
+        assert_eq!(c.world_switches, sched.switch.world_switches());
+        assert_eq!(c.world_switches, out.world_switches);
+        let slices: u64 = sched.guests.iter().map(|g| g.slices_run).sum();
+        assert_eq!(c.decisions, slices, "one decision per slice");
+        assert_eq!(c.total_vm_exits(), slices, "one exit per slice");
+        assert_eq!(
+            c.vm_exits[VmExit::GuestDone { passed: true }.variant()],
+            2,
+            "each guest exits once with GuestDone"
+        );
+        // Both guests own a timeline containing switch-in, switch-out,
+        // decision and vm-exit events, tagged with their vmid.
+        for (gi, g) in sched.guests.iter().enumerate() {
+            let ring = &n.rings[gi];
+            assert!(!ring.is_empty(), "guest {gi} has events");
+            use crate::telemetry::EventKind;
+            for want in ["switch_in", "switch_out", "decision", "vm_exit"] {
+                assert!(
+                    ring.events.iter().any(|e| e.kind.name() == want),
+                    "guest {gi} missing {want}"
+                );
+            }
+            assert!(ring.events.iter().all(|e| e.vmid == g.vmid && e.guest == gi as u32));
+            assert!(ring
+                .events
+                .iter()
+                .any(|e| matches!(e.kind, EventKind::SwitchIn { flush: "partitioned" })));
+        }
+        // Event ticks sit on the node timeline: never past the total.
+        for e in n.events_ordered() {
+            assert!(e.tick <= out.total_ticks, "event tick {} beyond node end", e.tick);
+        }
     }
 
     #[test]

@@ -278,6 +278,27 @@ mod tests {
     }
 
     #[test]
+    fn policy_names_are_stable_schema_identifiers() {
+        // Telemetry decision events and the Chrome/JSONL exports key on
+        // these names; renaming one is a schema break and must be
+        // deliberate. Kept lowercase-kebab so they embed in JSON keys and
+        // CLI flags without escaping.
+        let named: Vec<(&str, Box<dyn SchedPolicy>)> = vec![
+            ("round-robin", Box::new(RoundRobin::new(100))),
+            ("slo-deadline", Box::new(SloDeadline::new(100, vec![500]))),
+            ("weighted-slice", Box::new(WeightedSlice::new(100, vec![1]))),
+        ];
+        for (want, p) in &named {
+            assert_eq!(p.name(), *want);
+            assert!(
+                p.name().chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "{} is not a lowercase-kebab identifier",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
     fn round_robin_cycles_and_skips_finished() {
         let mut gs = guests(3);
         gs[1].exit = Some(VmExit::GuestDone { passed: true });

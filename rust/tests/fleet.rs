@@ -24,6 +24,7 @@ fn spec(nodes: usize, guests: usize, threads: usize) -> FleetSpec {
         tlb_sets: 64,
         tlb_ways: 4,
         engine: hvsim::sim::EngineKind::default(),
+        telemetry: None,
     }
 }
 

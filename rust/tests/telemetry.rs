@@ -1,0 +1,279 @@
+//! Telemetry end-to-end (DESIGN.md §20): thread-count determinism of the
+//! per-node event timelines, bit-exact agreement between event-derived
+//! counters and the scheduler's own statistics, exporter validity
+//! (Chrome Trace JSON + JSONL), and bounded-ring truncation being loud,
+//! never silent.
+
+use hvsim::fleet::{counter_mismatches, run_fleet, FleetReport, FleetSpec};
+use hvsim::telemetry::{self, NodeTelemetry, TelemetryCfg};
+use hvsim::vmm::{FlushPolicy, SchedKind};
+
+const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
+
+fn spec(threads: usize, ring_cap: usize) -> FleetSpec {
+    FleetSpec {
+        nodes: 2,
+        guests_per_node: 2,
+        threads,
+        slice_ticks: 100_000,
+        policy: FlushPolicy::Partitioned,
+        sched: SchedKind::RoundRobin,
+        benches: vec!["bitcount".into(), "stringsearch".into()],
+        scale: 1,
+        ram_bytes: RAM,
+        max_node_ticks: 8_000_000_000,
+        tlb_sets: 64,
+        tlb_ways: 4,
+        engine: hvsim::sim::EngineKind::default(),
+        telemetry: Some(TelemetryCfg { ring_cap }),
+    }
+}
+
+fn tnodes(report: &FleetReport) -> Vec<NodeTelemetry> {
+    report.nodes.iter().filter_map(|n| n.telemetry.clone()).collect()
+}
+
+// ------------------------------------------------------------------ JSON
+// A minimal validating JSON parser (no values retained) — enough to prove
+// the hand-rolled exporters emit well-formed documents without pulling a
+// serde dependency into the test closure.
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl P<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+    fn eat(&mut self, c: u8) -> bool {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+    fn lit(&mut self, w: &str) -> bool {
+        if self.b[self.i..].starts_with(w.as_bytes()) {
+            self.i += w.len();
+            true
+        } else {
+            false
+        }
+    }
+    fn value(&mut self) -> bool {
+        self.ws();
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string(),
+            Some(b't') => self.lit("true"),
+            Some(b'f') => self.lit("false"),
+            Some(b'n') => self.lit("null"),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => self.number(),
+            _ => false,
+        }
+    }
+    fn number(&mut self) -> bool {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        self.i > start
+    }
+    fn string(&mut self) -> bool {
+        if !self.eat(b'"') {
+            return false;
+        }
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => self.i += 2,
+                b'"' => {
+                    self.i += 1;
+                    return true;
+                }
+                _ => self.i += 1,
+            }
+        }
+        false
+    }
+    fn object(&mut self) -> bool {
+        if !self.eat(b'{') {
+            return false;
+        }
+        self.ws();
+        if self.eat(b'}') {
+            return true;
+        }
+        loop {
+            self.ws();
+            if !self.string() {
+                return false;
+            }
+            self.ws();
+            if !self.eat(b':') || !self.value() {
+                return false;
+            }
+            self.ws();
+            if self.eat(b',') {
+                continue;
+            }
+            return self.eat(b'}');
+        }
+    }
+    fn array(&mut self) -> bool {
+        if !self.eat(b'[') {
+            return false;
+        }
+        self.ws();
+        if self.eat(b']') {
+            return true;
+        }
+        loop {
+            if !self.value() {
+                return false;
+            }
+            self.ws();
+            if self.eat(b',') {
+                continue;
+            }
+            return self.eat(b']');
+        }
+    }
+}
+
+fn json_valid(s: &str) -> bool {
+    let mut p = P { b: s.as_bytes(), i: 0 };
+    p.value() && {
+        p.ws();
+        p.i == p.b.len()
+    }
+}
+
+#[test]
+fn json_validator_sanity() {
+    assert!(json_valid(r#"{"a": [1, -2.5e3, "x\"y", true, null], "b": {}}"#));
+    assert!(!json_valid(r#"{"a": }"#));
+    assert!(!json_valid(r#"{"a": 1} trailing"#));
+    assert!(!json_valid(r#"{"unterminated": "s"#));
+}
+
+// ----------------------------------------------------------- determinism
+
+#[test]
+fn timelines_are_thread_count_deterministic() {
+    // The same 2×2 fleet on 1/2/4 host threads: each node's event
+    // timeline (digest over the canonically ordered events) and counter
+    // snapshot must be identical — events carry simulated ticks only, so
+    // host-side sharding may never leak into the observability layer.
+    let runs: Vec<FleetReport> =
+        [1usize, 2, 4].iter().map(|&t| run_fleet(&spec(t, 1 << 14)).unwrap()).collect();
+    let keys: Vec<Vec<(u32, [u8; 32], telemetry::Counters)>> = runs
+        .iter()
+        .map(|r| {
+            assert!(r.all_passed());
+            tnodes(r).iter().map(|n| (n.node, n.timeline_digest(), n.counters)).collect()
+        })
+        .collect();
+    assert_eq!(keys[0].len(), 2, "one frozen timeline per node");
+    assert!(keys[0].iter().all(|(_, _, c)| c.events > 0));
+    assert_eq!(keys[0], keys[1], "1-thread vs 2-thread timelines diverged");
+    assert_eq!(keys[0], keys[2], "1-thread vs 4-thread timelines diverged");
+}
+
+// ---------------------------------------------------------- bit-exactness
+
+#[test]
+fn event_counters_match_scheduler_stats_bit_exactly() {
+    let r = run_fleet(&spec(2, 1 << 14)).unwrap();
+    assert!(r.all_passed());
+    let bad = counter_mismatches(&r);
+    assert!(bad.is_empty(), "telemetry counters diverged from scheduler stats: {bad:?}");
+
+    let c = r.merged_counters().unwrap();
+    assert_eq!(c.world_switches, r.world_switches(), "SwitchIn events == SwitchStats");
+    // Structural invariants of the run loop: every slice is one scheduler
+    // decision, one world switch, and ends in exactly one VmExit.
+    assert_eq!(c.decisions, c.world_switches);
+    assert_eq!(c.total_vm_exits(), c.world_switches);
+    let done = hvsim::vmm::VmExit::GuestDone { passed: true }.variant();
+    assert_eq!(c.vm_exits[done], 4, "each of the 4 guests retires exactly once");
+}
+
+// -------------------------------------------------------------- exporters
+
+#[test]
+fn chrome_trace_parses_with_one_track_per_node_guest() {
+    let r = run_fleet(&spec(2, 1 << 14)).unwrap();
+    let nodes = tnodes(&r);
+    let j = telemetry::chrome::chrome_trace(&nodes);
+    assert!(json_valid(&j), "chrome trace is not valid JSON");
+    for node in 0..2u32 {
+        assert!(
+            j.contains(&format!(
+                "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {node}, "
+            )),
+            "missing process metadata for node {node}"
+        );
+        for guest in 0..2u32 {
+            assert!(
+                j.contains(&format!(
+                    "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {node}, \"tid\": {guest}, "
+                )),
+                "missing track for node {node} guest {guest}"
+            );
+        }
+    }
+    // Resident slices paired from SwitchIn/SwitchOut, plus the instant
+    // species the acceptance criteria name.
+    assert!(j.contains("\"ph\": \"X\""), "no resident slices");
+    assert!(j.contains("\"name\": \"vm_exit\""));
+    assert!(j.contains("\"name\": \"switch_in\""));
+    assert!(j.contains("\"name\": \"decision\""));
+}
+
+#[test]
+fn jsonl_is_one_valid_object_per_ring_event() {
+    let r = run_fleet(&spec(1, 1 << 14)).unwrap();
+    let nodes = tnodes(&r);
+    let s = telemetry::write_jsonl(&nodes);
+    let mut lines = 0u64;
+    for line in s.lines() {
+        assert!(json_valid(line), "bad JSONL line: {line}");
+        assert!(line.starts_with("{\"node\": "), "line must lead with the node tag: {line}");
+        lines += 1;
+    }
+    let c = telemetry::counters::merge_all(&nodes);
+    assert!(lines > 0);
+    assert_eq!(lines, c.events - c.events_dropped, "one line per ring-resident event");
+}
+
+// -------------------------------------------------------------- bounding
+
+#[test]
+fn tiny_rings_truncate_loudly_without_touching_counters() {
+    // A 4-event ring cannot hold any real timeline: rings must stay
+    // bounded, the drop count must surface everywhere, and the counter
+    // registry (incremented before ring admission) must still reconcile
+    // bit-exactly with the scheduler's statistics.
+    let r = run_fleet(&spec(2, 4)).unwrap();
+    assert!(r.all_passed(), "telemetry truncation must not affect execution");
+    let c = r.merged_counters().unwrap();
+    assert!(c.events_dropped > 0, "4-slot rings should have overflowed");
+    assert_eq!(r.telemetry_events_dropped(), c.events_dropped);
+    let nodes = tnodes(&r);
+    for n in &nodes {
+        for ring in &n.rings {
+            assert!(ring.len() <= 4, "ring exceeded its cap");
+        }
+    }
+    assert!(counter_mismatches(&r).is_empty(), "drops lose timeline detail, never counts");
+    let table = hvsim::coordinator::telemetry_table(&nodes);
+    assert!(table.contains("TRUNCATED"), "CLI summary must surface the truncation:\n{table}");
+}
