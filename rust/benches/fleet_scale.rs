@@ -24,6 +24,7 @@ fn spec(threads: usize, scale: u64) -> FleetSpec {
         nodes: NODES,
         guests_per_node: GUESTS,
         threads,
+        harts: 1,
         slice_ticks: 200_000,
         policy: FlushPolicy::Partitioned,
         sched: SchedKind::RoundRobin,

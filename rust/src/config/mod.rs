@@ -24,6 +24,9 @@ pub struct SimConfig {
     pub scale: u64,
     // [sim]
     pub max_ticks: u64,
+    /// Simulated harts per scheduled node (H ≥ 1); 1 is the historical
+    /// single-hart node.
+    pub harts: u64,
     pub uart_echo: bool,
     pub trace_cap: u64,
     /// Execution engine: basic-block translation cache (default) or the
@@ -44,6 +47,7 @@ impl Default for SimConfig {
             vm: false,
             scale: 1,
             max_ticks: 2_000_000_000,
+            harts: 1,
             uart_echo: false,
             trace_cap: 8_000_000,
             engine: crate::sim::EngineKind::default(),
@@ -71,6 +75,7 @@ impl SimConfig {
                 "workload.vm" => cfg.vm = val.boolean()?,
                 "workload.scale" => cfg.scale = val.int()?,
                 "sim.max_ticks" => cfg.max_ticks = val.int()?,
+                "sim.harts" => cfg.harts = val.int()?,
                 "sim.uart_echo" => cfg.uart_echo = val.boolean()?,
                 "sim.trace_cap" => cfg.trace_cap = val.int()?,
                 "sim.engine" => cfg.engine = val.string()?.parse()?,
@@ -80,6 +85,9 @@ impl SimConfig {
         }
         if !cfg.tlb_sets.is_power_of_two() {
             bail!("machine.tlb_sets must be a power of two");
+        }
+        if cfg.harts == 0 {
+            bail!("sim.harts must be at least 1");
         }
         Ok(cfg)
     }
@@ -226,6 +234,14 @@ mod tests {
     #[test]
     fn non_pow2_tlb_rejected() {
         assert!(SimConfig::from_str("[machine]\ntlb_sets = 3\n").is_err());
+    }
+
+    #[test]
+    fn harts_key_parses_and_rejects_zero() {
+        assert_eq!(SimConfig::default().harts, 1);
+        let c = SimConfig::from_str("[sim]\nharts = 4\n").unwrap();
+        assert_eq!(c.harts, 4);
+        assert!(SimConfig::from_str("[sim]\nharts = 0\n").is_err());
     }
 
     #[test]

@@ -341,10 +341,12 @@ pub fn timing_table(rows: &[(String, bool, TraceReport, u64)]) -> String {
 
 use crate::vmm::{self, FlushPolicy, SchedKind, VmmScheduler};
 
-/// One row of the consolidation sweep: N guests time-sliced onto one hart.
+/// One row of the consolidation sweep: N guests time-sliced onto H harts.
 #[derive(Clone, Debug)]
 pub struct ConsolidationRow {
     pub guests: usize,
+    /// Harts the node scheduled its guests across (H ≥ 1).
+    pub harts: usize,
     /// The actual workload composition of this node (benches cycled over
     /// the guest count) — the count=1 row runs only the first benchmark.
     pub mix: String,
@@ -378,6 +380,7 @@ fn run_node(
     cfg: &SimConfig,
     benches: &[&str],
     count: usize,
+    harts: usize,
     slice_ticks: u64,
     policy: FlushPolicy,
     sched_kind: &SchedKind,
@@ -386,7 +389,7 @@ fn run_node(
 ) -> Result<(VmmScheduler, Option<crate::telemetry::NodeTelemetry>)> {
     let guests = vmm::build_node(benches, cfg.scale, count, GUEST_NODE_RAM)?;
     let sched_policy = sched_kind.build(slice_ticks, &guests);
-    let mut sched = VmmScheduler::with_policy(guests, policy, sched_policy);
+    let mut sched = VmmScheduler::with_harts(guests, policy, sched_policy, harts);
     let mut m = Machine::new(GUEST_NODE_RAM, true);
     m.core.tlb = crate::mmu::Tlb::new(cfg.tlb_sets as usize, cfg.tlb_ways as usize);
     m.engine = cfg.engine;
@@ -394,7 +397,10 @@ fn run_node(
         m.enable_telemetry(node, t.ring_cap);
     }
     m.run_scheduled(&mut sched, max_ticks);
-    let telemetry = m.finish_telemetry();
+    let mut telemetry = m.finish_telemetry();
+    if let Some(t) = telemetry.as_mut() {
+        t.hart_stats = sched.outcome().hart_stats;
+    }
     Ok((sched, telemetry))
 }
 
@@ -432,6 +438,7 @@ fn node_row(
     };
     ConsolidationRow {
         guests: count,
+        harts: sched.harts,
         mix,
         slice_ticks,
         policy,
@@ -455,6 +462,7 @@ pub fn consolidation_sweep(
     cfg: &SimConfig,
     benches: &[&str],
     counts: &[usize],
+    harts: usize,
     slice_ticks: u64,
     policy: FlushPolicy,
     sched_kind: &SchedKind,
@@ -462,6 +470,9 @@ pub fn consolidation_sweep(
 ) -> Result<(Vec<ConsolidationRow>, Vec<crate::telemetry::NodeTelemetry>)> {
     if benches.is_empty() {
         bail!("consolidation sweep needs at least one benchmark");
+    }
+    if harts == 0 {
+        bail!("consolidation sweep needs at least one hart");
     }
     // Solo baselines: completion ticks + checksum per distinct benchmark.
     // These must pass — nothing downstream is meaningful otherwise. The
@@ -474,7 +485,7 @@ pub fn consolidation_sweep(
             continue;
         }
         let (sched, _) =
-            run_node(cfg, &[bench], 1, slice_ticks, policy, sched_kind, cfg.max_ticks, None)?;
+            run_node(cfg, &[bench], 1, 1, slice_ticks, policy, sched_kind, cfg.max_ticks, None)?;
         let g = &sched.guests[0];
         let Some(ticks) = g.finished_at_total.filter(|_| g.passed()) else {
             bail!("solo baseline {bench} did not pass ({:?}); console:\n{}", g.exit, g.console());
@@ -488,7 +499,9 @@ pub fn consolidation_sweep(
     let mut rows = Vec::new();
     let mut collected = Vec::new();
     for (i, &count) in counts.iter().enumerate() {
-        if count == 1 && telemetry.is_none() {
+        // The solo baseline doubles as the count=1 row only when the sweep
+        // itself is single-hart (baselines always run H=1, untelemetered).
+        if count == 1 && harts == 1 && telemetry.is_none() {
             let sched = solo_first.as_ref().expect("baseline exists");
             rows.push(node_row(sched, 1, slice_ticks, policy, &solo));
             continue;
@@ -499,7 +512,7 @@ pub fn consolidation_sweep(
         // One telemetry "node" per sweep row, labeled by its guest count.
         let t = telemetry.map(|t| (i as u32, t));
         let (sched, node_t) =
-            run_node(cfg, benches_row, count, slice_ticks, policy, &row_kind, budget, t)?;
+            run_node(cfg, benches_row, count, harts, slice_ticks, policy, &row_kind, budget, t)?;
         rows.push(node_row(&sched, count, slice_ticks, policy, &solo));
         if let Some(mut nt) = node_t {
             nt.label = format!("sweep {count} guests");
@@ -528,17 +541,19 @@ fn fair_share_kind(
 pub fn consolidation_table(rows: &[ConsolidationRow], benches: &[&str], sched: &SchedKind) -> String {
     let mut s = format!(
         "Consolidation sweep — guests per node vs per-guest slowdown\n\
-         requested mix: {} | slice: {} ticks | TLB policy: {} | sched: {}\n\
-         guests  mix                pass  cksum  total_ticks   avg_finish  slowdown  switches  switch(ns)  tlb_misses\n",
+         requested mix: {} | harts: {} | slice: {} ticks | TLB policy: {} | sched: {}\n\
+         guests  harts  mix                pass  cksum  total_ticks   avg_finish  slowdown  switches  switch(ns)  tlb_misses\n",
         benches.join("+"),
+        rows.first().map(|r| r.harts).unwrap_or(1),
         rows.first().map(|r| r.slice_ticks).unwrap_or(0),
         rows.first().map(|r| r.policy.name()).unwrap_or("-"),
         sched.name(),
     );
     for r in rows {
         s.push_str(&format!(
-            "{:<7} {:<18} {:<5} {:<6} {:>11} {:>12.0} {:>8.2}x {:>9} {:>11.0} {:>11}\n",
+            "{:<7} {:<6} {:<18} {:<5} {:<6} {:>11} {:>12.0} {:>8.2}x {:>9} {:>11.0} {:>11}\n",
             r.guests,
+            r.harts,
             r.mix,
             if r.all_passed { "ok" } else { "FAIL" },
             if r.checksums_ok { "ok" } else { "FAIL" },
@@ -579,7 +594,7 @@ pub fn telemetry_table(nodes: &[crate::telemetry::NodeTelemetry]) -> String {
     s.push_str(&format!(
         "vm exits: {}{} | world switches: {} | decisions: {}\n\
          traps: {} exceptions, {} interrupts, {} returns | tlb: {} flushes, {} gen bumps\n\
-         block cache: {} hits, {} builds, {} invalidated\n",
+         block cache: {} hits, {} builds, {} invalidated | wfi: {} parks, {} wakes\n",
         c.total_vm_exits(),
         if exits.is_empty() { String::new() } else { format!(" ({})", exits.trim_start()) },
         c.world_switches,
@@ -592,6 +607,8 @@ pub fn telemetry_table(nodes: &[crate::telemetry::NodeTelemetry]) -> String {
         c.block_hits,
         c.block_builds,
         c.block_invalidated,
+        c.parks,
+        c.wakes,
     ));
     for n in nodes {
         s.push_str(&format!(
@@ -602,6 +619,19 @@ pub fn telemetry_table(nodes: &[crate::telemetry::NodeTelemetry]) -> String {
             n.counters.world_switches,
             n.counters.events_dropped,
         ));
+        for (h, hs) in n.hart_stats.iter().enumerate() {
+            let total = hs.busy_ticks + hs.idle_ticks;
+            s.push_str(&format!(
+                "    hart {:<2} {:>6.1}% busy ({} busy / {} idle ticks)  {:>6} slices  {:>4} parks  {:>4} wakes\n",
+                h,
+                if total > 0 { 100.0 * hs.busy_ticks as f64 / total as f64 } else { 0.0 },
+                hs.busy_ticks,
+                hs.idle_ticks,
+                hs.slices,
+                hs.parks,
+                hs.wakes,
+            ));
+        }
     }
     s
 }
@@ -622,12 +652,13 @@ pub fn fleet_table(
     console_mismatches: &[String],
 ) -> String {
     let mut s = format!(
-        "Fleet — {} nodes × {} guests (mix {}), {} threads\n\
+        "Fleet — {} nodes × {} guests (mix {}), {} harts/node, {} threads\n\
          slice: {} ticks | TLB policy: {} | sched: {} | engine: {}\n\
          node  pass   total_ticks     switches  switch(ns)   host(s)\n",
         spec.nodes,
         spec.guests_per_node,
         spec.benches.join("+"),
+        spec.harts,
         report.threads,
         spec.slice_ticks,
         spec.policy.name(),
@@ -663,6 +694,13 @@ pub fn fleet_table(
         report.world_switches(),
         report.avg_switch_ns(),
         report.wall_seconds,
+    ));
+    s.push_str(&format!(
+        "harts: {} total | idle-hart ticks: {} | wfi parks: {} | wakes: {}\n",
+        report.total_harts(),
+        report.idle_hart_ticks(),
+        report.parks(),
+        report.wakes(),
     ));
     s.push_str(&format!(
         "construction (checkpoint-forked): {:.3}s, {} assemblies",
@@ -823,6 +861,7 @@ mod tests {
             nodes: 1,
             guests_per_node: 1,
             threads: 1,
+            harts: 1,
             slice_ticks: 100,
             policy: FlushPolicy::Partitioned,
             sched: crate::vmm::SchedKind::RoundRobin,
@@ -854,6 +893,13 @@ mod tests {
                     console: crate::util::ConsoleDigest::of_bytes(b"x"),
                     pages_forked: 2,
                 }],
+                hart_stats: vec![crate::vmm::HartStats {
+                    busy_ticks: 500,
+                    idle_ticks: 0,
+                    slices: 5,
+                    parks: 0,
+                    wakes: 0,
+                }],
                 telemetry: None,
             }],
             threads: 1,
@@ -868,6 +914,8 @@ mod tests {
         };
         let t = fleet_table(&spec, &report, None, None, &[]);
         assert!(t.contains("1 nodes × 1 guests"));
+        assert!(t.contains("1 harts/node"));
+        assert!(t.contains("harts: 1 total | idle-hart ticks: 0 | wfi parks: 0 | wakes: 0"));
         assert!(t.contains("1/1 guests passed"));
         assert!(t.contains("consoles vs solo: ok"));
         assert!(t.contains("fork cost: 2 pages across 1 forks"), "table:\n{t}");

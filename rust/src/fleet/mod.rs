@@ -43,6 +43,10 @@ pub struct FleetSpec {
     pub guests_per_node: usize,
     /// Host worker threads (K); clamped to the node count.
     pub threads: usize,
+    /// Simulated harts per node (H ≥ 1). Each node's guests are gang/
+    /// affinity-scheduled across H phase-coherent hart clocks; H=1 is the
+    /// historical single-hart node, bit-exact.
+    pub harts: usize,
     /// Scheduler time slice, in ticks (base slice for weighted policies).
     pub slice_ticks: u64,
     /// TLB hygiene on world switch.
@@ -110,6 +114,8 @@ pub struct NodeOutcome {
     pub switch_host_ns: u128,
     pub host_seconds: f64,
     pub guests: Vec<GuestOutcome>,
+    /// Per-hart busy/idle/slice/park/wake accounting (length H).
+    pub hart_stats: Vec<crate::vmm::HartStats>,
     /// Frozen telemetry of this node's carrier machine (when the spec
     /// enabled it).
     pub telemetry: Option<crate::telemetry::NodeTelemetry>,
@@ -231,6 +237,27 @@ impl FleetReport {
         self.merged_counters().map(|c| c.events_dropped).unwrap_or(0)
     }
 
+    /// Simulated harts across the fleet (Σ per-node hart counts).
+    pub fn total_harts(&self) -> usize {
+        self.nodes.iter().map(|n| n.hart_stats.len()).sum()
+    }
+
+    /// Ticks harts spent idle fleet-wide — the honesty number of a
+    /// consolidation sweep: a node can "finish fast" by starving harts.
+    pub fn idle_hart_ticks(&self) -> u64 {
+        self.nodes.iter().flat_map(|n| n.hart_stats.iter()).map(|h| h.idle_ticks).sum()
+    }
+
+    /// WFI parks fleet-wide (guests descheduled into wake queues).
+    pub fn parks(&self) -> u64 {
+        self.nodes.iter().flat_map(|n| n.hart_stats.iter()).map(|h| h.parks).sum()
+    }
+
+    /// Wake-queue pops fleet-wide.
+    pub fn wakes(&self) -> u64 {
+        self.nodes.iter().flat_map(|n| n.hart_stats.iter()).map(|h| h.wakes).sum()
+    }
+
     /// Completed guests per host wall-clock second.
     pub fn guests_per_sec(&self) -> f64 {
         if self.wall_seconds > 0.0 {
@@ -261,6 +288,9 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
     }
     if spec.benches.is_empty() {
         bail!("fleet needs at least one benchmark");
+    }
+    if spec.harts == 0 {
+        bail!("fleet needs at least one hart per node");
     }
     let benches: Vec<&str> = spec.benches.iter().map(String::as_str).collect();
 
@@ -308,7 +338,8 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                 }
                 let (node, guests) = jobs[i].lock().unwrap().take().expect("each job runs once");
                 let policy = spec.sched.build(spec.slice_ticks, &guests);
-                let mut sched = VmmScheduler::with_policy(guests, spec.policy, policy);
+                let mut sched =
+                    VmmScheduler::with_harts(guests, spec.policy, policy, spec.harts);
                 let mut m = Machine::new(spec.ram_bytes, true);
                 m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
                 m.engine = spec.engine;
@@ -321,8 +352,14 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                 let t_node = Instant::now();
                 m.run_scheduled(&mut sched, spec.max_node_ticks);
                 let host_seconds = t_node.elapsed().as_secs_f64();
-                let telemetry = m.finish_telemetry();
                 let out = sched.outcome();
+                // Per-hart scheduling stats live on the node driver, not
+                // the emit path — inject them into the frozen snapshot
+                // (same pattern as the block-cache counter fold-in).
+                let mut telemetry = m.finish_telemetry();
+                if let Some(t) = telemetry.as_mut() {
+                    t.hart_stats = out.hart_stats.clone();
+                }
                 let guests = sched
                     .guests
                     .iter()
@@ -346,6 +383,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                     switch_host_ns: sched.switch.switch_host_ns,
                     host_seconds,
                     guests,
+                    hart_stats: out.hart_stats,
                     telemetry,
                 });
             });
@@ -489,6 +527,7 @@ mod tests {
             nodes: 3,
             guests_per_node: 2,
             threads: 2,
+            harts: 1,
             slice_ticks: 1_000,
             policy: FlushPolicy::Partitioned,
             sched: SchedKind::RoundRobin,
@@ -538,6 +577,7 @@ mod tests {
                         pages_forked: 0,
                     })
                     .collect(),
+                hart_stats: Vec::new(),
                 telemetry: None,
             }],
             threads: 1,

@@ -5,13 +5,13 @@
 //!             [--stats] [--echo] [--max-ticks N] [--engine block|tick]
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
-//! hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--scale N]
-//!             [--policy all|vmid|none] [--sched rr|slo|weighted:W,...]
+//! hvsim vmm   [--guests N] [--harts H] [--slice T] [--bench A,B] [--scale N]
+//!             [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang]
 //!             [--slo BENCH=TICKS,...] [--engine block|tick] [--out FILE]
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
-//! hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T]
+//! hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T]
 //!             [--bench A,B] [--scale N] [--policy all|vmid|none]
-//!             [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...]
+//!             [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...]
 //!             [--engine block|tick] [--out FILE]
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
@@ -113,6 +113,19 @@ fn parse_sched(args: &Args) -> Result<hvsim::vmm::SchedKind> {
     match args.get("sched") {
         None => Ok(hvsim::vmm::SchedKind::RoundRobin),
         Some(s) => s.parse().context("bad --sched"),
+    }
+}
+
+/// Shared `--harts` (simulated harts per node) parsing for the vmm/fleet
+/// subcommands; falls back to the config's `sim.harts` key (default 1).
+/// Like `--sched`/`--policy`, the error spells out what is accepted.
+fn parse_harts(args: &Args, cfg: &SimConfig) -> Result<usize> {
+    match args.get("harts") {
+        None => Ok(cfg.harts.max(1) as usize),
+        Some(v) => match v.parse::<usize>() {
+            Ok(h) if h >= 1 => Ok(h),
+            _ => bail!("bad --harts '{v}' (expected a positive hart count: 1, 2, 4, ...)"),
+        },
     }
 }
 
@@ -310,10 +323,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The consolidation sweep: 1/2/4/…/N guests time-sliced onto one hart.
+/// The consolidation sweep: 1/2/4/…/N guests time-sliced onto H harts.
 fn cmd_vmm(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
     let max_guests = args.u64("guests")?.unwrap_or(4).max(1) as usize;
+    let harts = parse_harts(args, &cfg)?;
     let slice = args.u64("slice")?.unwrap_or(200_000).max(1);
     let policy = parse_policy(args)?;
     let benches_owned = parse_benches(args)?;
@@ -336,6 +350,7 @@ fn cmd_vmm(args: &Args) -> Result<()> {
         &cfg,
         &benches,
         &counts,
+        harts,
         slice,
         policy,
         &sched,
@@ -371,6 +386,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
     let nodes = args.u64("nodes")?.unwrap_or(2).max(1) as usize;
     let guests = args.u64("guests")?.unwrap_or(2).max(1) as usize;
+    let harts = parse_harts(args, &cfg)?;
     let threads = match args.u64("threads")? {
         Some(t) => t.max(1) as usize,
         None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(nodes),
@@ -385,6 +401,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         nodes,
         guests_per_node: guests,
         threads,
+        harts,
         slice_ticks: slice,
         policy,
         sched,
@@ -628,8 +645,8 @@ fn usage() -> ! {
         "hvsim — gem5-style RISC-V simulator with the H extension\n\
          usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo] [--engine block|tick] [telemetry]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
-         hvsim vmm   [--guests N] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
-         hvsim fleet [--nodes M] [--guests N] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
+         hvsim vmm   [--guests N] [--harts H] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
+         hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
          hvsim boot  [--bench NAME]\n  hvsim list\n\
          telemetry: [--trace-out chrome.json] [--metrics-out metrics.json] [--events-out events.jsonl]"

@@ -60,6 +60,89 @@ impl std::str::FromStr for EngineKind {
     }
 }
 
+/// Node-global scheduling timebase for an H-hart node (DESIGN.md §21) —
+/// the tick accounting the pre-refactor `VmmScheduler` kept in a single
+/// `total_ticks` accumulator, extracted so H harts can advance against
+/// one shared clock.
+///
+/// Guests keep their *private* device timebase ([`Machine`]'s
+/// `device_countdown` swaps with each world), which is what keeps
+/// consolidated consoles byte-identical to solo runs. What multi-hart
+/// scheduling needs on top is a shared notion of node time: every hart
+/// carries a local tick count (resident slices plus idle gaps), the
+/// node's "now" is the earliest hart — the next point where a scheduling
+/// decision happens — and the makespan is the latest hart. The driver
+/// always advances the earliest hart (lowest index on ties), so harts
+/// stay phase-coherent — local times never drift more than one slice
+/// apart under equal slice lengths — and a node is deterministic by
+/// construction, independent of host threading. With H = 1 the clock
+/// degenerates to exactly the old accumulator:
+/// `now() == horizon() == hart_time(0)`.
+#[derive(Clone, Debug)]
+pub struct NodeClock {
+    /// Per-hart local times: resident (busy) ticks + idle ticks.
+    hart_ticks: Vec<u64>,
+    /// Per-hart idle ticks (gaps where the hart had nothing runnable) —
+    /// the number that keeps consolidation sweeps honest.
+    idle_ticks: Vec<u64>,
+}
+
+impl NodeClock {
+    pub fn new(harts: usize) -> NodeClock {
+        let harts = harts.max(1);
+        NodeClock { hart_ticks: vec![0; harts], idle_ticks: vec![0; harts] }
+    }
+
+    pub fn harts(&self) -> usize {
+        self.hart_ticks.len()
+    }
+
+    /// Local time of one hart (busy + idle ticks scheduled onto it).
+    pub fn hart_time(&self, hart: usize) -> u64 {
+        self.hart_ticks[hart]
+    }
+
+    /// Idle ticks accumulated by one hart.
+    pub fn idle_ticks(&self, hart: usize) -> u64 {
+        self.idle_ticks[hart]
+    }
+
+    /// Charge `ticks` of resident (busy) time to `hart`.
+    pub fn advance(&mut self, hart: usize, ticks: u64) {
+        self.hart_ticks[hart] += ticks;
+    }
+
+    /// Idle `hart` forward to the absolute node tick `t` (no-op when the
+    /// hart is already at or past `t`).
+    pub fn idle_until(&mut self, hart: usize, t: u64) {
+        let dt = t.saturating_sub(self.hart_ticks[hart]);
+        self.hart_ticks[hart] += dt;
+        self.idle_ticks[hart] += dt;
+    }
+
+    /// The hart that schedules next: minimal local time, lowest index on
+    /// ties — the discrete-event rule behind the determinism guarantee.
+    pub fn next_hart(&self) -> usize {
+        let mut best = 0;
+        for (h, &t) in self.hart_ticks.iter().enumerate() {
+            if t < self.hart_ticks[best] {
+                best = h;
+            }
+        }
+        best
+    }
+
+    /// Node-global "now": the earliest hart's local time.
+    pub fn now(&self) -> u64 {
+        self.hart_ticks.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Node makespan: the latest hart's local time.
+    pub fn horizon(&self) -> u64 {
+        self.hart_ticks.iter().copied().max().unwrap_or(0)
+    }
+}
+
 /// Why a run loop returned — the legacy scalar exit, kept for the
 /// [`Machine::run`]/[`Machine::run_pred`] surfaces and the checkpoint
 /// tooling. The structured boundary (and the single underlying run loop)
@@ -427,15 +510,6 @@ impl Machine {
         reason
     }
 
-    /// Deprecated name for [`Machine::run_pred`], kept one release as a
-    /// deprecation cycle for out-of-tree callers of the historical
-    /// signature (all in-repo callers are migrated; the equivalence is
-    /// pinned by `run_until_shim_matches_run_pred`).
-    #[deprecated(since = "0.1.0", note = "use Machine::run_pred (same exit semantics as the VmExit mapping)")]
-    pub fn run_until(&mut self, max_ticks: u64, pred: impl FnMut(&Machine) -> bool) -> ExitReason {
-        self.run_pred(max_ticks, pred)
-    }
-
     /// Run as a consolidated multi-tenant node: the scheduler world-switches
     /// its guests onto this machine's hart until every guest powers off or
     /// the global tick budget is spent. The machine's own (scratch) world is
@@ -540,17 +614,6 @@ mod tests {
         // And an unsatisfiable predicate is a Limit.
         assert_eq!(m.run_pred(5, |_| false), ExitReason::Limit);
         assert_eq!(m.stats.sim_ticks, 15);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn run_until_shim_matches_run_pred() {
-        let mut a = boot("loop: j loop\n");
-        let mut b = boot("loop: j loop\n");
-        let ra = a.run_pred(1_000, |m| m.stats.sim_ticks >= 123);
-        let rb = b.run_until(1_000, |m| m.stats.sim_ticks >= 123);
-        assert_eq!(ra, rb);
-        assert_eq!(a.stats.sim_ticks, b.stats.sim_ticks);
     }
 
     /// Both engines, same program: identical ticks, insts and histograms.
@@ -668,6 +731,40 @@ mod tests {
         assert_eq!(m.run(1_000_000), ExitReason::PowerOff(0x5555));
         assert_eq!(m.stats.interrupts_at("M"), 1);
         assert!(m.stats.wfi_ticks > 0, "WFI parked before the timer fired");
+    }
+
+    #[test]
+    fn node_clock_advances_earliest_hart_first() {
+        let mut c = NodeClock::new(2);
+        assert_eq!((c.now(), c.horizon(), c.next_hart()), (0, 0, 0));
+        c.advance(0, 100);
+        assert_eq!(c.next_hart(), 1, "earliest hart schedules next");
+        c.advance(1, 100);
+        assert_eq!(c.next_hart(), 0, "ties break to the lowest index");
+        c.advance(0, 50);
+        assert_eq!((c.now(), c.horizon()), (100, 150));
+        // Idle gaps advance local time and are accounted separately.
+        c.idle_until(1, 150);
+        assert_eq!(c.hart_time(1), 150);
+        assert_eq!(c.idle_ticks(1), 50);
+        c.idle_until(1, 100); // already past: no-op
+        assert_eq!((c.hart_time(1), c.idle_ticks(1)), (150, 50));
+        assert_eq!(c.idle_ticks(0), 0);
+    }
+
+    #[test]
+    fn node_clock_h1_degenerates_to_a_single_accumulator() {
+        // The H=1 special case the pre-refactor scheduler is bit-exact
+        // against: one hart, now == horizon == hart_time(0).
+        let mut c = NodeClock::new(1);
+        for ticks in [50_000u64, 13, 200_000] {
+            c.advance(0, ticks);
+            assert_eq!(c.now(), c.horizon());
+            assert_eq!(c.now(), c.hart_time(0));
+            assert_eq!(c.next_hart(), 0);
+        }
+        assert_eq!(c.now(), 250_013);
+        assert_eq!(NodeClock::new(0).harts(), 1, "hart counts clamp to >= 1");
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Chrome Trace Event Format exporter (`--trace-out trace.json`).
 //!
 //! Renders the fleet's event timelines as one JSON document that opens
-//! directly in `about://tracing` / Perfetto: pid = node, tid = guest (so
-//! each (node, guest) pair gets its own track), `ts` in simulated ticks.
-//! Resident slices (SwitchIn → SwitchOut pairs) become "X" complete
-//! events; everything else is an "i" instant on its guest's track.
+//! directly in `about://tracing` / Perfetto: pid = node, tid = hart (so
+//! each (node, hart) pair gets its own track — the physical-resource
+//! view; the guest a record belongs to is in its args), `ts` in
+//! simulated ticks. Resident slices (SwitchIn → SwitchOut pairs) become
+//! "X" complete events on the hart that ran them; everything else is an
+//! "i" instant on its hart's track.
 //!
 //! Schema reference: the Trace Event Format document ("JSON Array
 //! Format" with a `traceEvents` wrapper plus "M" metadata records for
@@ -26,11 +28,14 @@ fn meta(name: &str, pid: u32, tid: Option<u32>, value: &str) -> String {
 fn instant(node: u32, e: &Event) -> String {
     let args = e.kind.args_json();
     format!(
-        "{{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \"pid\": {}, \"tid\": {}, \"ts\": {}, \"args\": {{{}}}}}",
+        "{{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \"pid\": {}, \"tid\": {}, \"ts\": {}, \"args\": {{\"guest\": {}, \"vmid\": {}{}{}}}}}",
         e.kind.name(),
         node,
-        e.guest,
+        e.hart,
         e.tick,
+        e.guest,
+        e.vmid,
+        if args.is_empty() { "" } else { ", " },
         args
     )
 }
@@ -40,36 +45,32 @@ pub fn chrome_trace(nodes: &[NodeTelemetry]) -> String {
     let mut records: Vec<String> = Vec::new();
     for n in nodes {
         records.push(meta("process_name", n.node, None, &n.label.replace('"', "'")));
-        for (gi, ring) in n.rings.iter().enumerate() {
-            if ring.is_empty() {
-                continue;
-            }
-            let vmid = ring.events[0].vmid;
-            records.push(meta(
-                "thread_name",
-                n.node,
-                Some(gi as u32),
-                &format!("guest {gi} (vmid {vmid})"),
-            ));
+        let evs = n.events_ordered();
+        let harts = evs.iter().map(|e| e.hart).max().map_or(0, |h| h as usize + 1);
+        for h in 0..harts {
+            records.push(meta("thread_name", n.node, Some(h as u32), &format!("hart {h}")));
         }
-        // Pair SwitchIn..SwitchOut per guest into "X" slices; emit the
-        // rest as instants. Events are walked in canonical (tick, guest)
-        // order so output is deterministic across thread counts.
-        let mut open: Vec<Option<(u64, &'static str)>> = vec![None; n.rings.len()];
-        for e in n.events_ordered() {
+        // Pair SwitchIn..SwitchOut per hart into "X" slices (a hart runs
+        // one resident world at a time, so pairing by hart is exact);
+        // emit the rest as instants. Events are walked in canonical
+        // (tick, hart, guest) order so output is deterministic across
+        // thread counts.
+        let mut open: Vec<Option<(u64, &'static str)>> = vec![None; harts];
+        for e in evs {
             match e.kind {
                 EventKind::SwitchIn { flush } => {
-                    open[e.guest as usize] = Some((e.tick, flush));
+                    open[e.hart as usize] = Some((e.tick, flush));
                     records.push(instant(n.node, e));
                 }
                 EventKind::SwitchOut => {
-                    if let Some((start, flush)) = open[e.guest as usize].take() {
+                    if let Some((start, flush)) = open[e.hart as usize].take() {
                         records.push(format!(
-                            "{{\"name\": \"resident\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {}, \"dur\": {}, \"args\": {{\"vmid\": {}, \"flush\": \"{}\"}}}}",
+                            "{{\"name\": \"resident\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {}, \"dur\": {}, \"args\": {{\"guest\": {}, \"vmid\": {}, \"flush\": \"{}\"}}}}",
                             n.node,
-                            e.guest,
+                            e.hart,
                             start,
                             e.tick.saturating_sub(start),
+                            e.guest,
                             e.vmid,
                             flush
                         ));
@@ -102,12 +103,12 @@ mod tests {
 
     fn sample() -> Vec<NodeTelemetry> {
         let mut t = Telemetry::new(0, 64);
-        t.emit_at(0, 1, 0, EventKind::Decision { policy: "rr", slice_ticks: 100, wfi_exit: false });
-        t.emit_at(0, 1, 0, EventKind::SwitchIn { flush: "flush-all" });
-        t.emit_at(0, 1, 90, EventKind::VmExit(VmExit::SliceExpired));
-        t.emit_at(0, 1, 100, EventKind::SwitchOut);
-        t.emit_at(1, 2, 100, EventKind::SwitchIn { flush: "flush-all" });
-        t.emit_at(1, 2, 200, EventKind::SwitchOut);
+        t.emit_at(0, 1, 0, 0, EventKind::Decision { policy: "rr", slice_ticks: 100, wfi_exit: false });
+        t.emit_at(0, 1, 0, 0, EventKind::SwitchIn { flush: "flush-all" });
+        t.emit_at(0, 1, 0, 90, EventKind::VmExit(VmExit::SliceExpired));
+        t.emit_at(0, 1, 0, 100, EventKind::SwitchOut);
+        t.emit_at(1, 2, 1, 100, EventKind::SwitchIn { flush: "flush-all" });
+        t.emit_at(1, 2, 1, 200, EventKind::SwitchOut);
         vec![t.finish()]
     }
 
@@ -119,23 +120,42 @@ mod tests {
         assert!(j.contains("\"dur\": 100"));
         assert!(j.contains("\"name\": \"vm_exit\""));
         assert!(j.contains("\"name\": \"decision\""));
+        // X slices say which guest occupied the hart.
+        assert!(j.contains("\"args\": {\"guest\": 0, \"vmid\": 1, \"flush\": \"flush-all\"}"));
+        assert!(j.contains("\"args\": {\"guest\": 1, \"vmid\": 2, \"flush\": \"flush-all\"}"));
     }
 
     #[test]
-    fn one_track_per_node_guest() {
+    fn one_track_per_node_hart() {
         let j = chrome_trace(&sample());
-        assert!(j.contains("\"name\": \"guest 0 (vmid 1)\""));
-        assert!(j.contains("\"name\": \"guest 1 (vmid 2)\""));
+        assert!(j.contains("\"name\": \"hart 0\""));
+        assert!(j.contains("\"name\": \"hart 1\""));
         assert!(j.contains("\"name\": \"process_name\""));
-        // tid distinguishes guests within the node's pid.
+        // tid distinguishes harts within the node's pid.
         assert!(j.contains("\"tid\": 0,"));
         assert!(j.contains("\"tid\": 1,"));
     }
 
     #[test]
+    fn shared_boundary_tick_pairs_per_hart() {
+        // Guest 1 runs [0, 100) then guest 0 runs [100, 200) on the same
+        // hart: the boundary-tick SwitchOut must close guest 1's slice
+        // before guest 0's SwitchIn opens the next, even though guest 0
+        // sorts first at that tick.
+        let mut t = Telemetry::new(0, 64);
+        t.emit_at(1, 2, 0, 0, EventKind::SwitchIn { flush: "partitioned" });
+        t.emit_at(1, 2, 0, 100, EventKind::SwitchOut);
+        t.emit_at(0, 1, 0, 100, EventKind::SwitchIn { flush: "partitioned" });
+        t.emit_at(0, 1, 0, 200, EventKind::SwitchOut);
+        let j = chrome_trace(&[t.finish()]);
+        assert!(j.contains("\"ts\": 0, \"dur\": 100, \"args\": {\"guest\": 1, \"vmid\": 2"));
+        assert!(j.contains("\"ts\": 100, \"dur\": 100, \"args\": {\"guest\": 0, \"vmid\": 1"));
+    }
+
+    #[test]
     fn unmatched_switch_out_degrades_to_instant() {
         let mut t = Telemetry::new(2, 8);
-        t.emit_at(0, 1, 50, EventKind::SwitchOut);
+        t.emit_at(0, 1, 0, 50, EventKind::SwitchOut);
         let j = chrome_trace(&[t.finish()]);
         assert!(j.contains("\"name\": \"switch_out\""));
         assert!(!j.contains("\"ph\": \"X\""));

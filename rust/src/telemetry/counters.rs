@@ -34,6 +34,10 @@ pub struct Counters {
     pub block_invalidated: u64,
     pub tlb_flushes: u64,
     pub tlb_gen_bumps: u64,
+    /// WFI parks (guest descheduled into the wake queue).
+    pub parks: u64,
+    /// Wake-queue pops (guest made runnable again).
+    pub wakes: u64,
 }
 
 impl Counters {
@@ -58,6 +62,8 @@ impl Counters {
                 }
             }
             EventKind::TrapReturn { .. } => self.trap_returns += 1,
+            EventKind::Park { .. } => self.parks += 1,
+            EventKind::Wake { .. } => self.wakes += 1,
         }
     }
 
@@ -78,6 +84,8 @@ impl Counters {
         self.block_invalidated += other.block_invalidated;
         self.tlb_flushes += other.tlb_flushes;
         self.tlb_gen_bumps += other.tlb_gen_bumps;
+        self.parks += other.parks;
+        self.wakes += other.wakes;
     }
 
     pub fn total_vm_exits(&self) -> u64 {
@@ -100,7 +108,7 @@ impl Counters {
                 "\"world_switches\": {}, \"decisions\": {}, \"exceptions\": {}, ",
                 "\"interrupts\": {}, \"trap_returns\": {}, \"block_hits\": {}, ",
                 "\"block_builds\": {}, \"block_invalidated\": {}, \"tlb_flushes\": {}, ",
-                "\"tlb_gen_bumps\": {}}}"
+                "\"tlb_gen_bumps\": {}, \"parks\": {}, \"wakes\": {}}}"
             ),
             self.events,
             self.events_dropped,
@@ -115,6 +123,8 @@ impl Counters {
             self.block_invalidated,
             self.tlb_flushes,
             self.tlb_gen_bumps,
+            self.parks,
+            self.wakes,
         )
     }
 }
@@ -169,7 +179,10 @@ mod tests {
         c.count(&EventKind::TrapReturn { to: "VU" });
         c.count(&EventKind::BlockInvalidate { blocks: 3 });
         c.count(&EventKind::TlbFlush { flushes: 2 });
-        assert_eq!(c.events, 10);
+        c.count(&EventKind::Park { wake_at: None });
+        c.count(&EventKind::Wake { slept_ticks: 7 });
+        assert_eq!((c.parks, c.wakes), (1, 1));
+        assert_eq!(c.events, 12);
         assert_eq!(c.total_vm_exits(), 2);
         assert_eq!(c.vm_exits[VmExit::SliceExpired.variant()], 1);
         assert_eq!(c.vm_exits[VmExit::Fault.variant()], 1);

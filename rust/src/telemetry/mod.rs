@@ -8,11 +8,11 @@
 //! enabled:
 //!
 //! - every structured event (VM exit, world switch in/out, scheduler
-//!   decision, block-cache build/invalidate, TLB flush/generation bump,
-//!   trap enter/return) lands in a bounded per-guest [`EventRing`],
-//!   tagged `(node, guest, vmid, tick)` on the *node* timeline (scheduled
-//!   ticks, so a fleet node's guests interleave correctly in a trace
-//!   viewer);
+//!   decision, WFI park/wake, block-cache build/invalidate, TLB
+//!   flush/generation bump, trap enter/return) lands in a bounded
+//!   per-guest [`EventRing`], tagged `(node, guest, vmid, hart, tick)` on
+//!   the *node* timeline (scheduled ticks, so a fleet node's guests
+//!   interleave correctly in a trace viewer);
 //! - a per-node [`Counters`] registry accumulates totals at the same
 //!   emit sites. Fleets give each worker thread its own registry (one per
 //!   node machine — no atomics, no locks) and merge them at join time;
@@ -21,7 +21,7 @@
 //!   ([`crate::fleet::counter_mismatches`] enforces this).
 //! - exporters render the collected [`NodeTelemetry`] as Chrome Trace
 //!   Event Format JSON ([`chrome::chrome_trace`], `--trace-out`, one
-//!   track per (node, guest), opens in `about://tracing`/Perfetto) and as
+//!   track per (node, hart), opens in `about://tracing`/Perfetto) and as
 //!   a JSONL event stream ([`write_jsonl`], `--events-out`, the E9
 //!   timing-engine input shape).
 //!
@@ -79,6 +79,12 @@ pub enum EventKind {
     TrapEnter { cause: u64, interrupt: bool, target: &'static str },
     /// Trap return (mret/sret): privilege dropped back to `to`.
     TrapReturn { to: &'static str },
+    /// WFI park: the guest was descheduled until its timer fires at
+    /// `wake_at` (node tick; `None`: no timer armed).
+    Park { wake_at: Option<u64> },
+    /// Wake-queue pop: the guest became runnable again after sleeping
+    /// `slept_ticks` of node time off-hart.
+    Wake { slept_ticks: u64 },
 }
 
 impl EventKind {
@@ -95,6 +101,8 @@ impl EventKind {
             EventKind::TlbGenBump => "tlb_gen_bump",
             EventKind::TrapEnter { .. } => "trap_enter",
             EventKind::TrapReturn { .. } => "trap_return",
+            EventKind::Park { .. } => "park",
+            EventKind::Wake { .. } => "wake",
         }
     }
 
@@ -131,18 +139,26 @@ impl EventKind {
                 format!("\"cause\": {cause}, \"interrupt\": {interrupt}, \"target\": \"{target}\"")
             }
             EventKind::TrapReturn { to } => format!("\"to\": \"{to}\""),
+            EventKind::Park { wake_at } => match wake_at {
+                Some(t) => format!("\"wake_at\": {t}"),
+                None => "\"wake_at\": null".to_string(),
+            },
+            EventKind::Wake { slept_ticks } => format!("\"slept_ticks\": {slept_ticks}"),
         }
     }
 }
 
 /// One timestamped structured event. `tick` is on the node timeline
 /// (scheduled ticks for a vmm/fleet run; raw `sim_ticks` for a solo
-/// machine). The node id lives on the owning [`NodeTelemetry`].
+/// machine); `hart` is the hart the event fired on (0 for solo machines
+/// and single-hart nodes). The node id lives on the owning
+/// [`NodeTelemetry`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Event {
     pub tick: u64,
     pub guest: u32,
     pub vmid: u16,
+    pub hart: u32,
     pub kind: EventKind,
 }
 
@@ -158,6 +174,8 @@ pub struct Telemetry {
     /// Resident-guest context, maintained by the world-switch driver.
     cur_guest: u32,
     cur_vmid: u16,
+    /// Hart the resident guest is executing on (0 for solo machines).
+    cur_hart: u32,
     /// `tick_base + resident sim_ticks` = node-timeline tick. Zero for a
     /// solo machine (node time *is* guest time).
     tick_base: u64,
@@ -174,6 +192,7 @@ impl Telemetry {
             ring_cap: ring_cap.max(1),
             cur_guest: 0,
             cur_vmid: 0,
+            cur_hart: 0,
             tick_base: 0,
             rings: Vec::new(),
             counters: Counters::default(),
@@ -185,12 +204,13 @@ impl Telemetry {
         self
     }
 
-    /// Point subsequent [`Telemetry::emit`] calls at the resident guest.
-    /// `tick_base` is the node-timeline tick minus the guest's current
-    /// `sim_ticks` (so emit sites can pass raw `sim_ticks`).
-    pub fn set_context(&mut self, guest: u32, vmid: u16, tick_base: u64) {
+    /// Point subsequent [`Telemetry::emit`] calls at the resident guest
+    /// on `hart`. `tick_base` is the node-timeline tick minus the guest's
+    /// current `sim_ticks` (so emit sites can pass raw `sim_ticks`).
+    pub fn set_context(&mut self, guest: u32, vmid: u16, hart: u32, tick_base: u64) {
         self.cur_guest = guest;
         self.cur_vmid = vmid;
+        self.cur_hart = hart;
         self.tick_base = tick_base;
     }
 
@@ -200,18 +220,18 @@ impl Telemetry {
     #[inline]
     pub fn emit(&mut self, sim_ticks: u64, kind: EventKind) {
         let tick = self.tick_base.saturating_add(sim_ticks);
-        self.emit_at(self.cur_guest, self.cur_vmid, tick, kind);
+        self.emit_at(self.cur_guest, self.cur_vmid, self.cur_hart, tick, kind);
     }
 
     /// Emit with an explicit tag (scheduler-side events that fire while
     /// no guest is resident, e.g. a [`EventKind::Decision`]).
-    pub fn emit_at(&mut self, guest: u32, vmid: u16, tick: u64, kind: EventKind) {
+    pub fn emit_at(&mut self, guest: u32, vmid: u16, hart: u32, tick: u64, kind: EventKind) {
         self.counters.count(&kind);
         let gi = guest as usize;
         if gi >= self.rings.len() {
             self.rings.resize_with(gi + 1, || EventRing::new(self.ring_cap));
         }
-        self.rings[gi].push(Event { tick, guest, vmid, kind });
+        self.rings[gi].push(Event { tick, guest, vmid, hart, kind });
     }
 
     /// Events dropped across all rings so far (bounded-ring overflow —
@@ -221,7 +241,9 @@ impl Telemetry {
     }
 
     /// Freeze into the exportable snapshot, folding ring overflow into
-    /// the counters.
+    /// the counters. Per-hart scheduling stats are node-driver state, not
+    /// emit-path state — the fleet/coordinator layers inject them into
+    /// the snapshot afterwards (same pattern as the block-cache fold-in).
     pub fn finish(mut self) -> NodeTelemetry {
         self.counters.events_dropped = self.events_dropped();
         NodeTelemetry {
@@ -229,6 +251,7 @@ impl Telemetry {
             label: self.label,
             rings: self.rings,
             counters: self.counters,
+            hart_stats: Vec::new(),
         }
     }
 }
@@ -242,15 +265,24 @@ pub struct NodeTelemetry {
     /// Per-guest event timelines, indexed by guest id.
     pub rings: Vec<EventRing>,
     pub counters: Counters,
+    /// Per-hart busy/idle/slice/park/wake accounting, injected by the
+    /// node runner after [`Telemetry::finish`] (empty for solo machines).
+    pub hart_stats: Vec<crate::vmm::HartStats>,
 }
 
 impl NodeTelemetry {
-    /// All events of this node, in (tick, guest) order — the canonical
-    /// serialization order of both exporters, and what the determinism
-    /// digest hashes.
+    /// All events of this node, in (tick, hart, switch-outs-first, guest)
+    /// order — the canonical serialization order of both exporters, and
+    /// what the determinism digest hashes. Ranking a `SwitchOut` ahead of
+    /// anything else at the same (tick, hart) keeps back-to-back slices
+    /// well-formed for the per-hart pairing in [`chrome::chrome_trace`]:
+    /// a slice ending at tick T and the next slice starting at T on the
+    /// same hart serialize as out-then-in regardless of guest ids.
     pub fn events_ordered(&self) -> Vec<&Event> {
         let mut evs: Vec<&Event> = self.rings.iter().flat_map(|r| r.events.iter()).collect();
-        evs.sort_by_key(|e| (e.tick, e.guest));
+        evs.sort_by_key(|e| {
+            (e.tick, e.hart, !matches!(e.kind, EventKind::SwitchOut), e.guest)
+        });
         evs
     }
 
@@ -266,19 +298,20 @@ impl NodeTelemetry {
     }
 }
 
-/// One JSONL line per event: `{"node":N,"guest":G,"vmid":V,"tick":T,
-/// "name":"...", ...args}` — the flat stream shape the E9 timing-engine
-/// ingestion expects (ROADMAP).
+/// One JSONL line per event: `{"node":N,"guest":G,"vmid":V,"hart":H,
+/// "tick":T,"name":"...", ...args}` — the flat stream shape the E9
+/// timing-engine ingestion expects (ROADMAP).
 pub fn write_jsonl(nodes: &[NodeTelemetry]) -> String {
     let mut s = String::new();
     for n in nodes {
         for e in n.events_ordered() {
             let args = e.kind.args_json();
             s.push_str(&format!(
-                "{{\"node\": {}, \"guest\": {}, \"vmid\": {}, \"tick\": {}, \"name\": \"{}\"{}{}}}\n",
+                "{{\"node\": {}, \"guest\": {}, \"vmid\": {}, \"hart\": {}, \"tick\": {}, \"name\": \"{}\"{}{}}}\n",
                 n.node,
                 e.guest,
                 e.vmid,
+                e.hart,
                 e.tick,
                 e.kind.name(),
                 if args.is_empty() { "" } else { ", " },
@@ -311,27 +344,28 @@ mod tests {
     #[test]
     fn context_tags_and_tick_base() {
         let mut t = Telemetry::new(3, 64);
-        t.set_context(2, 7, 1_000);
+        t.set_context(2, 7, 1, 1_000);
         t.emit(5, EventKind::SwitchOut);
-        t.emit_at(0, 1, 42, EventKind::SwitchOut);
+        t.emit_at(0, 1, 0, 42, EventKind::SwitchOut);
         let n = t.finish();
         assert_eq!(n.rings.len(), 3);
         let e = n.rings[2].events[0];
-        assert_eq!((e.tick, e.guest, e.vmid), (1_005, 2, 7));
+        assert_eq!((e.tick, e.guest, e.vmid, e.hart), (1_005, 2, 7, 1));
         let e = n.rings[0].events[0];
-        assert_eq!((e.tick, e.guest, e.vmid), (42, 0, 1));
+        assert_eq!((e.tick, e.guest, e.vmid, e.hart), (42, 0, 1, 0));
     }
 
     #[test]
     fn jsonl_one_line_per_event_ordered_by_tick() {
         let mut t = Telemetry::new(1, 64);
-        t.emit_at(1, 2, 20, EventKind::SwitchOut);
-        t.emit_at(0, 1, 10, EventKind::Decision { policy: "rr", slice_ticks: 100, wfi_exit: false });
+        t.emit_at(1, 2, 1, 20, EventKind::SwitchOut);
+        t.emit_at(0, 1, 0, 10, EventKind::Decision { policy: "rr", slice_ticks: 100, wfi_exit: false });
         let s = write_jsonl(&[t.finish()]);
         let lines: Vec<&str> = s.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].contains("\"tick\": 10") && lines[0].contains("\"decision\""));
         assert!(lines[1].contains("\"tick\": 20") && lines[1].contains("\"switch_out\""));
+        assert!(lines[0].contains("\"hart\": 0") && lines[1].contains("\"hart\": 1"));
         for l in &lines {
             assert!(l.starts_with('{') && l.ends_with('}'));
         }
@@ -352,13 +386,16 @@ mod tests {
             EventKind::TlbGenBump,
             EventKind::TrapEnter { cause: 8, interrupt: false, target: "HS" },
             EventKind::TrapReturn { to: "VU" },
+            EventKind::Park { wake_at: Some(500) },
+            EventKind::Wake { slept_ticks: 400 },
         ];
         let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
         assert_eq!(
             names,
             [
                 "vm_exit", "switch_in", "switch_out", "decision", "block_build",
-                "block_invalidate", "tlb_flush", "tlb_gen_bump", "trap_enter", "trap_return"
+                "block_invalidate", "tlb_flush", "tlb_gen_bump", "trap_enter", "trap_return",
+                "park", "wake"
             ]
         );
         for k in &kinds {
@@ -370,11 +407,11 @@ mod tests {
     #[test]
     fn timeline_digest_is_order_canonical() {
         let mut a = Telemetry::new(0, 64);
-        a.emit_at(0, 1, 10, EventKind::SwitchOut);
-        a.emit_at(1, 2, 5, EventKind::SwitchOut);
+        a.emit_at(0, 1, 0, 10, EventKind::SwitchOut);
+        a.emit_at(1, 2, 1, 5, EventKind::SwitchOut);
         let mut b = Telemetry::new(0, 64);
-        b.emit_at(1, 2, 5, EventKind::SwitchOut);
-        b.emit_at(0, 1, 10, EventKind::SwitchOut);
+        b.emit_at(1, 2, 1, 5, EventKind::SwitchOut);
+        b.emit_at(0, 1, 0, 10, EventKind::SwitchOut);
         assert_eq!(a.finish().timeline_digest(), b.finish().timeline_digest());
     }
 }

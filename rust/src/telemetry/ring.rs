@@ -45,7 +45,7 @@ mod tests {
     use crate::telemetry::EventKind;
 
     fn ev(tick: u64) -> Event {
-        Event { tick, guest: 0, vmid: 0, kind: EventKind::SwitchOut }
+        Event { tick, guest: 0, vmid: 0, hart: 0, kind: EventKind::SwitchOut }
     }
 
     #[test]

@@ -29,9 +29,11 @@ pub enum VmExit {
     /// The slice budget was consumed while the guest was still runnable.
     SliceExpired,
     /// The guest parked in WFI and the budget asked for halt exits
-    /// ([`RunBudget::wfi_exit`]). `parked_until` estimates the simulated
-    /// tick at which the guest's armed timer will wake it (`None` when no
-    /// wakeup source is armed — the guest sleeps forever).
+    /// ([`RunBudget::wfi_exit`]). `parked_until` is the exact simulated
+    /// tick (in the guest's private timebase) at which the armed CLINT
+    /// timer fires — the wake queues of the multi-hart driver schedule
+    /// off it (`None` when no wakeup source is armed — the guest sleeps
+    /// forever).
     Wfi { parked_until: Option<u64> },
     /// The guest powered off via SYSCON; `passed` is true for the
     /// `SYSCON_PASS` code. The raw code stays latched in `bus.poweroff`.
@@ -100,10 +102,14 @@ pub struct RunBudget {
     /// fast-forwarding the idle time away inside the slice. Note: guests
     /// carry a *private* device timebase that only advances while they
     /// run, so a parked guest's idle ticks are part of its virtual time —
-    /// the bundled [`SchedPolicy`](super::SchedPolicy) implementations
+    /// the single-hart [`SchedPolicy`](super::SchedPolicy) implementations
     /// leave this off and let WFI burn the slice, which is what keeps
-    /// consolidated consoles byte-identical to solo runs. The exit exists
-    /// for global-timebase schedulers (multi-hart nodes, ROADMAP).
+    /// consolidated consoles byte-identical to solo runs. The multi-hart
+    /// [`Gang`](super::policy::Gang) driver turns it on and actually
+    /// deschedules parked guests through the
+    /// [`VmmScheduler`](super::VmmScheduler) wake queue, crediting the
+    /// slept node time back to the guest's private clock on wake — the
+    /// same virtual timeline, without holding a hart (DESIGN.md §21).
     pub wfi_exit: bool,
     /// Exit with [`VmExit::Ecall`]/[`VmExit::Fault`] on every guest
     /// exception (KVM debug-exit analog). Off for normal scheduling.
@@ -136,12 +142,27 @@ impl RunBudget {
     }
 }
 
-/// Estimate the simulated tick at which the parked hart's armed timer
-/// fires: the next device update lands in `device_countdown` ticks, each
-/// further mtime increment costs [`TIME_DIVIDER`] ticks. An estimate (the
-/// fast-forward path may already have consumed part of the countdown),
-/// good to within one device period — enough for a scheduler to decide
-/// when a parked guest is worth re-slicing.
+/// The *exact* simulated tick at which the parked hart's armed CLINT
+/// timer fires: the next device update lands in `device_countdown` ticks,
+/// each further mtime increment costs [`TIME_DIVIDER`] ticks, and the
+/// update that brings `mtime` up to `mtimecmp` raises MTIP at the start
+/// of the tick this function names — so after running exactly
+/// `parked_until - sim_ticks` further ticks the hart is still parked, and
+/// the very next tick wakes it (pinned by
+/// `wfi_parked_until_is_exact_for_clint_timer_wakeups`).
+///
+/// Why exact and not "within one device period": device updates fire when
+/// `device_countdown` reaches 0, and the WFI fast-forward moves ticks
+/// from the countdown to `sim_ticks` one-for-one, so the sum
+/// `sim_ticks + device_countdown` — the absolute tick of the next update
+/// — is invariant between updates no matter how much of the countdown a
+/// fast-forward already consumed. Each update then adds exactly
+/// [`TIME_DIVIDER`] to that sum while taking `mtimecmp - mtime` down by
+/// one. The multi-hart wake queue relies on this exactness: the sleep
+/// credit it grants on wake must land the guest's private clock exactly
+/// one tick short of the waking step, so the wake (and a possible trap
+/// delivery) happens inside the next *scheduled* slice, where telemetry
+/// is live.
 fn wfi_parked_until(m: &Machine) -> Option<u64> {
     if !m.core.hart.wfi {
         return None; // woke during the idle tick; not parked anymore
@@ -290,10 +311,11 @@ mod tests {
     }
 
     #[test]
-    fn wfi_exit_estimates_timer_wakeup() {
-        // Arm mtimecmp = 50 device updates, enable MTIE, park. The
-        // parked_until estimate must land within one device period of
-        // 50 * TIME_DIVIDER ticks from the start.
+    fn wfi_parked_until_is_exact_for_clint_timer_wakeups() {
+        // Arm mtimecmp = 50 device updates, enable MTIE, park. The wake
+        // queue schedules off parked_until, so it must be *exact*: running
+        // to precisely that tick leaves the hart parked, and the very next
+        // tick wakes it.
         let src = r#"
             li t0, 0x2004000
             li t1, 50
@@ -308,16 +330,26 @@ mod tests {
         let VmExit::Wfi { parked_until: Some(t) } = exit else {
             panic!("expected a timer-armed Wfi exit, got {exit:?}");
         };
-        assert!(t >= m.stats.sim_ticks, "wakeup estimate is in the future");
-        assert!(
-            t <= 51 * TIME_DIVIDER,
-            "wakeup estimate {t} beyond one period of the armed timer"
+        assert!(t >= m.stats.sim_ticks, "wakeup tick is in the future");
+        assert!(t <= 51 * TIME_DIVIDER, "wakeup tick {t} beyond the armed timer");
+        // The invariant behind exactness: sim_ticks + device_countdown
+        // (the absolute tick of the next device update) is preserved by
+        // the WFI fast-forward, so re-deriving the wakeup mid-park gives
+        // the same answer.
+        assert_eq!(wfi_parked_until(&m), Some(t), "wakeup tick stable while parked");
+        // Resume (without halt exits) for exactly t - sim_ticks ticks:
+        // still parked — parked_until is not an overestimate.
+        assert_eq!(
+            Vcpu::run(&mut m, RunBudget::ticks(t - m.stats.sim_ticks)),
+            VmExit::SliceExpired
         );
-        // Resuming (without halt exits) up to one device period past the
-        // estimate must cross the wakeup: the hart is no longer parked.
-        let resume = t - m.stats.sim_ticks + TIME_DIVIDER;
-        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(resume)), VmExit::SliceExpired);
-        assert!(!m.core.hart.wfi, "timer fired by the estimated tick");
+        assert_eq!(m.stats.sim_ticks, t);
+        assert!(m.core.hart.wfi, "hart must still be parked at the wakeup tick boundary");
+        assert_eq!(wfi_parked_until(&m), Some(t), "re-derived wakeup unchanged at the boundary");
+        // One more tick performs the device update that raises MTIP and
+        // the step that wakes the hart — not an underestimate either.
+        assert_eq!(Vcpu::run(&mut m, RunBudget::ticks(1)), VmExit::SliceExpired);
+        assert!(!m.core.hart.wfi, "timer fired exactly one tick after parked_until");
     }
 
     #[test]

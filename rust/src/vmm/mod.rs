@@ -2,8 +2,8 @@
 //! engine, the KVM-style [`VmExit`] execution boundary and the pluggable
 //! [`SchedPolicy`] schedulers that multiplex N complete guest stacks
 //! (firmware + xvisor-rs + mini-os, each with its own RAM, device claim
-//! and VMID) onto the one simulated hart — turning the simulator into a
-//! consolidated "cloud node" (ROADMAP: many workloads per node).
+//! and VMID) onto the node's H simulated harts — turning the simulator
+//! into a consolidated "cloud node" (ROADMAP: many workloads per node).
 //!
 //! Design:
 //! - [`Vcpu`] snapshots the full per-guest architectural world: GPRs,
@@ -19,12 +19,24 @@
 //!   (`SliceExpired`, `Wfi`, `GuestDone`, `Ecall`, `Fault`,
 //!   `BudgetExhausted`) under a [`RunBudget`].
 //! - [`SchedPolicy`] (in [`policy`]) reacts to the exit stream and decides
-//!   which guest runs next, and for how long: [`RoundRobin`] (bit-exact
-//!   with the pre-redesign scheduler), [`SloDeadline`] (EDF on per-guest
-//!   latency targets) and [`WeightedSlice`] (heterogeneous slices).
-//! - [`VmmScheduler`] is the driver that owns the mechanism. A world
-//!   switch swaps (hart, bus, stats, mmu-stats) in O(1) and applies a
-//!   [`FlushPolicy`] to the shared TLB:
+//!   which guest runs next, where, and for how long: [`RoundRobin`]
+//!   (bit-exact with the pre-redesign scheduler), [`SloDeadline`] (EDF on
+//!   per-guest latency targets), [`WeightedSlice`] (heterogeneous slices)
+//!   and [`Gang`] (co-schedules SMP-sibling gangs across harts with home-
+//!   hart affinity; the only shipped policy that requests halt exits).
+//! - [`VmmScheduler`] is the driver that owns the mechanism, now an
+//!   H-hart discrete-event loop: hart 0 rides the caller's [`Machine`],
+//!   harts 1.. ride internal carrier machines, and every hart advances
+//!   against the one [`NodeClock`] (always the earliest hart next, lowest
+//!   index on ties — deterministic by construction, independent of host
+//!   threading). WFI-parked guests are descheduled through a wake queue
+//!   keyed on [`exit::wfi_parked_until`]; the slept node time is credited
+//!   back to the guest's private clock on wake so consolidated consoles
+//!   stay byte-identical to solo runs (DESIGN.md §21). The single-hart
+//!   path is the H=1 special case of the same loop, bit-exact with the
+//!   pre-refactor driver. A world switch swaps (hart, bus, stats,
+//!   mmu-stats, device phase) in O(1) and applies a [`FlushPolicy`] to
+//!   the executing hart's TLB:
 //!     - `FlushAll`: conservative full flush (no-VMID hardware model);
 //!     - `FlushVmid`: VMID-selective teardown of the departing guest;
 //!     - `Partitioned`: flushless — distinct VMIDs keep entries disjoint,
@@ -37,7 +49,9 @@ pub mod exit;
 pub mod policy;
 
 pub use exit::{RunBudget, VmExit};
-pub use policy::{Decision, NodeState, RoundRobin, SchedKind, SchedPolicy, SloDeadline, WeightedSlice};
+pub use policy::{
+    Decision, Gang, NodeState, RoundRobin, SchedKind, SchedPolicy, SloDeadline, WeightedSlice,
+};
 
 use std::collections::BTreeMap;
 use std::str::FromStr;
@@ -49,7 +63,7 @@ use crate::cpu::{Hart, VsCsrFile};
 use crate::isa::csr::atp;
 use crate::mem::Bus;
 use crate::mmu::MmuStats;
-use crate::sim::{Machine, SimStats};
+use crate::sim::{Machine, NodeClock, SimStats};
 use crate::sw;
 
 /// One virtual CPU: the complete parked architectural world of a guest.
@@ -395,6 +409,38 @@ impl SwitchStats {
     }
 }
 
+/// Per-hart scheduling accounting. Busy/idle split the hart's clock
+/// exactly: `busy_ticks + idle_ticks == ` that hart's [`NodeClock`] time.
+/// Idle-hart ticks are the number that makes consolidation sweeps honest
+/// — a node that "finishes early" on paper may just have starved harts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HartStats {
+    /// Ticks this hart spent executing guest slices.
+    pub busy_ticks: u64,
+    /// Ticks this hart idled waiting for a wake or a residency fence.
+    pub idle_ticks: u64,
+    /// Slices dispatched on this hart.
+    pub slices: u64,
+    /// WFI parks taken out of slices that ended on this hart.
+    pub parks: u64,
+    /// Wake-queue pops this hart performed.
+    pub wakes: u64,
+}
+
+/// Wake-queue entry for a WFI-parked guest.
+#[derive(Clone, Copy, Debug)]
+struct Park {
+    /// Node tick at which the guest parked (end of the parking slice).
+    parked_at: u64,
+    /// Node tick at which the armed CLINT timer fires (`None`: no timer
+    /// armed — parked until the node ends).
+    wake_at: Option<u64>,
+    /// Private-clock ticks to credit on wake: `parked_until -
+    /// sim_ticks` at park time, landing the guest's clock exactly one
+    /// tick short of the waking step (see [`exit::wfi_parked_until`]).
+    credit: u64,
+}
+
 /// Aggregate result of a scheduled run.
 #[derive(Clone, Debug)]
 pub struct ScheduleOutcome {
@@ -405,11 +451,14 @@ pub struct ScheduleOutcome {
     pub world_switches: u64,
     /// Mean host nanoseconds per full world switch.
     pub avg_switch_ns: f64,
+    /// Per-hart busy/idle/slice/park/wake accounting (length H).
+    pub hart_stats: Vec<HartStats>,
 }
 
-/// Multiplexer of N guests onto one [`Machine`]: the mechanism half of
-/// the scheduler. It world-switches, keeps the TLB honest per
-/// [`FlushPolicy`], enforces the node budget and feeds the [`VmExit`]
+/// Multiplexer of N guests onto H harts: the mechanism half of the
+/// scheduler. It world-switches, keeps each hart's TLB honest per
+/// [`FlushPolicy`], enforces the node budget against the shared
+/// [`NodeClock`], services the WFI wake queue and feeds the [`VmExit`]
 /// stream to the pluggable [`SchedPolicy`] that owns all placement and
 /// slice-length decisions.
 pub struct VmmScheduler {
@@ -418,8 +467,29 @@ pub struct VmmScheduler {
     /// The scheduling policy consuming the exit stream.
     pub sched: Box<dyn SchedPolicy>,
     pub switch: SwitchStats,
-    /// Global scheduled ticks across all guests.
+    /// Node-global scheduled ticks: the horizon (max over harts) of
+    /// [`VmmScheduler::clock`]. At H=1 this is the same accumulator the
+    /// single-hart driver kept.
     pub total_ticks: u64,
+    /// Harts this node schedules across (H ≥ 1).
+    pub harts: usize,
+    /// The shared node timebase every hart advances against.
+    pub clock: NodeClock,
+    /// Per-hart slice/park/wake counters; busy/idle are filled in from
+    /// the clock by [`VmmScheduler::outcome`].
+    hart_stats: Vec<HartStats>,
+    /// WFI wake queue, one slot per guest.
+    parked: Vec<Option<Park>>,
+    /// Mirror of `parked` as the flag slice [`NodeState`] carries.
+    parked_flags: Vec<bool>,
+    /// Per-guest residency fence: the node tick until which the guest's
+    /// last slice occupies a hart. Another hart must not pick the guest
+    /// before its own clock passes the fence, or the same world would run
+    /// on two harts in overlapping node time.
+    busy_until: Vec<u64>,
+    /// Carrier machines for harts 1..H (hart 0 rides the caller's
+    /// machine). Built lazily on the first `run`, mirroring its engine.
+    carriers: Vec<Machine>,
     /// Exit of the last completed slice, handed to the next `pick_next`.
     last: Option<(usize, VmExit)>,
 }
@@ -445,18 +515,38 @@ impl VmmScheduler {
         VmmScheduler::with_policy(guests, policy, Box::new(RoundRobin::new(slice_ticks)))
     }
 
-    /// A node driven by an arbitrary [`SchedPolicy`].
+    /// A single-hart node driven by an arbitrary [`SchedPolicy`].
     pub fn with_policy(
         guests: Vec<GuestVm>,
         policy: FlushPolicy,
         sched: Box<dyn SchedPolicy>,
     ) -> VmmScheduler {
+        VmmScheduler::with_harts(guests, policy, sched, 1)
+    }
+
+    /// An H-hart node. `harts` is clamped to ≥ 1; H=1 is bit-exact with
+    /// the historical single-hart driver.
+    pub fn with_harts(
+        guests: Vec<GuestVm>,
+        policy: FlushPolicy,
+        sched: Box<dyn SchedPolicy>,
+        harts: usize,
+    ) -> VmmScheduler {
+        let harts = harts.max(1);
+        let n = guests.len();
         VmmScheduler {
             guests,
             policy,
             sched,
             switch: SwitchStats::default(),
             total_ticks: 0,
+            harts,
+            clock: NodeClock::new(harts),
+            hart_stats: vec![HartStats::default(); harts],
+            parked: vec![None; n],
+            parked_flags: vec![false; n],
+            busy_until: vec![0; n],
+            carriers: Vec::new(),
             last: None,
         }
     }
@@ -467,29 +557,75 @@ impl VmmScheduler {
     }
 
     /// Run until the policy stops picking (every guest powered off) or
-    /// `max_total_ticks` elapse. Each iteration is: ask the policy, world-
-    /// switch in, [`Vcpu::run`] under the decided [`RunBudget`], world-
-    /// switch out, record the [`VmExit`] and hand it to the next pick.
+    /// every hart's clock reaches `max_total_ticks`. The loop is a
+    /// discrete-event simulation over hart clocks: each iteration picks
+    /// the hart with the earliest local time (lowest index on ties),
+    /// services the wake queue up to that time, asks the policy for a
+    /// decision from that hart's vantage point, then world-switches in,
+    /// [`Vcpu::run`]s under the decided [`RunBudget`], world-switches out
+    /// and records the [`VmExit`]. At H=1 the event loop degenerates to
+    /// the historical single-hart sequence, bit-exact.
     pub fn run(&mut self, m: &mut Machine, max_total_ticks: u64) -> ScheduleOutcome {
-        while self.total_ticks < max_total_ticks {
+        self.ensure_carriers(m);
+        loop {
+            let h = self.clock.next_hart();
+            let now = self.clock.hart_time(h);
+            if now >= max_total_ticks {
+                break;
+            }
+            self.wake_due(m, now, h);
             let node = NodeState {
                 guests: &self.guests,
-                total_ticks: self.total_ticks,
+                total_ticks: now,
                 max_total_ticks,
+                hart: h,
+                harts: self.harts,
+                parked: &self.parked_flags,
+                busy_until: &self.busy_until,
             };
-            let Some(d) = self.sched.pick_next(&node, self.last.take()) else { break };
+            let Some(d) = self.sched.pick_next(&node, self.last.take()) else {
+                // Nothing runnable from this hart's vantage point. If a
+                // parked guest will wake or a residency fence will lift,
+                // idle forward to that point — both are strictly in the
+                // future (wakes due now were serviced above, fences at or
+                // before `now` make their guest runnable), so the hart
+                // clock strictly advances and the loop cannot spin.
+                // Otherwise the node has gone quiescent.
+                match self.next_event_after(now) {
+                    Some(t) => {
+                        self.clock.idle_until(h, t.min(max_total_ticks));
+                        continue;
+                    }
+                    None => break,
+                }
+            };
             let idx = d.guest;
             if idx >= self.guests.len() || self.guests[idx].exit.is_some() {
                 break; // defensive: a buggy policy ends the run, not the process
             }
+            // Placement: honor the decision's affinity, default to the
+            // asking hart. Harts 1.. execute on the node's carrier
+            // machines; the telemetry layer is a node property living on
+            // the caller's machine, lent to the executing carrier for the
+            // slice.
+            let th = d.hart.unwrap_or(h);
+            if th >= self.harts || self.clock.hart_time(th) >= max_total_ticks {
+                break; // defensive: affinity to a hart the node cannot run
+            }
+            let start = self.clock.hart_time(th);
+            if th != 0 {
+                self.carriers[th - 1].telemetry = m.telemetry.take();
+            }
+            let mc: &mut Machine = if th == 0 { &mut *m } else { &mut self.carriers[th - 1] };
             // Telemetry: decision events carry node-timeline ticks and are
             // emitted outside the Instant-timed switch windows below, so
             // switch_host_ns stays an honest swap-cost measurement.
-            if let Some(t) = m.telemetry.as_mut() {
+            if let Some(t) = mc.telemetry.as_mut() {
                 t.emit_at(
                     idx as u32,
                     self.guests[idx].vmid,
-                    self.total_ticks,
+                    th as u32,
+                    start,
                     crate::telemetry::EventKind::Decision {
                         policy: self.sched.name(),
                         slice_ticks: d.slice_ticks,
@@ -500,28 +636,30 @@ impl VmmScheduler {
 
             // ---- world switch in ----
             let t0 = Instant::now();
-            world_swap(m, &mut self.guests[idx]);
+            world_swap(mc, &mut self.guests[idx]);
             match self.policy {
-                FlushPolicy::FlushAll => m.core.tlb.flush_all(),
+                FlushPolicy::FlushAll => mc.core.tlb.flush_all(),
                 // FlushVmid tears down on the way out; nothing stale can
                 // alias (VMIDs are distinct), but the page caches are
                 // keyed by generation only — always bump.
-                FlushPolicy::FlushVmid | FlushPolicy::Partitioned => m.core.tlb.bump_generation(),
+                FlushPolicy::FlushVmid | FlushPolicy::Partitioned => mc.core.tlb.bump_generation(),
             }
             self.switch.half_switches += 1;
             self.switch.switch_host_ns += t0.elapsed().as_nanos();
             // Retag the telemetry context at the resident guest. The tick
             // base maps the guest's private sim_ticks onto the node
-            // timeline: base + sim_ticks == total_ticks right now, and the
-            // guest's clock only advances while it is resident.
-            if let Some(t) = m.telemetry.as_mut() {
+            // timeline: base + sim_ticks == the hart's local time right
+            // now, and the guest's clock only advances while it is
+            // resident (park credits are burned under its own residency).
+            if let Some(t) = mc.telemetry.as_mut() {
                 let vmid = self.guests[idx].vmid;
-                t.set_context(idx as u32, vmid, self.total_ticks - m.stats.sim_ticks);
+                t.set_context(idx as u32, vmid, th as u32, start - mc.stats.sim_ticks);
                 let flush = self.policy.name();
                 t.emit_at(
                     idx as u32,
                     vmid,
-                    self.total_ticks,
+                    th as u32,
+                    start,
                     crate::telemetry::EventKind::SwitchIn { flush },
                 );
             }
@@ -529,54 +667,176 @@ impl VmmScheduler {
             // ---- run one slice through the exit boundary ----
             let budget = RunBudget {
                 slice_ticks: d.slice_ticks.max(1),
-                total_remaining: max_total_ticks - self.total_ticks,
+                total_remaining: max_total_ticks - start,
                 wfi_exit: d.wfi_exit,
                 trap_exit: false,
             };
-            let before = m.stats.sim_ticks;
-            let exit = Vcpu::run(m, budget);
-            self.total_ticks += m.stats.sim_ticks - before;
+            let before = mc.stats.sim_ticks;
+            let exit = Vcpu::run(mc, budget);
+            let delta = mc.stats.sim_ticks - before;
+            self.clock.advance(th, delta);
+            let end = start + delta;
+            self.total_ticks = self.clock.horizon();
 
             // ---- world switch out ----
             let t1 = Instant::now();
             if self.policy == FlushPolicy::FlushVmid {
-                m.core.tlb.flush_vmid(self.guests[idx].vmid);
+                mc.core.tlb.flush_vmid(self.guests[idx].vmid);
             }
-            world_swap(m, &mut self.guests[idx]);
+            world_swap(mc, &mut self.guests[idx]);
             self.switch.half_switches += 1;
             self.switch.switch_host_ns += t1.elapsed().as_nanos();
+            if let Some(t) = mc.telemetry.as_mut() {
+                t.emit_at(
+                    idx as u32,
+                    self.guests[idx].vmid,
+                    th as u32,
+                    end,
+                    crate::telemetry::EventKind::SwitchOut,
+                );
+            }
+            self.hart_stats[th].slices += 1;
+            self.busy_until[idx] = end;
+
+            let vmid = self.guests[idx].vmid;
+            let g = &mut self.guests[idx];
+            g.slices_run += 1;
+            match exit {
+                VmExit::GuestDone { .. } => {
+                    g.exit = Some(exit);
+                    g.finished_at_total = Some(end);
+                }
+                VmExit::Wfi { parked_until } => {
+                    // Deschedule: the guest stops consuming hart time
+                    // until its timer fires (or until the node ends, if
+                    // none is armed). The credit is fixed here — the
+                    // guest's private clock is frozen while parked.
+                    let credit = parked_until.map(|t| t - g.stats.sim_ticks);
+                    let wake_at = credit.map(|c| end + c);
+                    self.parked[idx] = Some(Park {
+                        parked_at: end,
+                        wake_at,
+                        credit: credit.unwrap_or(0),
+                    });
+                    self.parked_flags[idx] = true;
+                    self.hart_stats[th].parks += 1;
+                    if let Some(t) = mc.telemetry.as_mut() {
+                        t.emit_at(
+                            idx as u32,
+                            vmid,
+                            th as u32,
+                            end,
+                            crate::telemetry::EventKind::Park { wake_at },
+                        );
+                    }
+                }
+                _ => {}
+            }
+            if th != 0 {
+                m.telemetry = self.carriers[th - 1].telemetry.take();
+            }
+            self.last = Some((idx, exit));
+        }
+        // Hand the machines back clean: the last guest's VMID-tagged TLB
+        // entries and current-generation page caches must not be servable
+        // if the caller reuses this machine for a direct run.
+        m.core.tlb.flush_all();
+        for c in &mut self.carriers {
+            c.core.tlb.flush_all();
+        }
+        self.outcome()
+    }
+
+    /// Build carrier machines for harts 1..H, mirroring the caller's
+    /// engine. Their own scratch worlds never execute (a slice swaps a
+    /// guest in first), so their RAM is token-sized.
+    fn ensure_carriers(&mut self, m: &Machine) {
+        while self.carriers.len() + 1 < self.harts {
+            let mut c = Machine::new(1 << 16, true);
+            c.engine = m.engine;
+            self.carriers.push(c);
+        }
+    }
+
+    /// Service the wake queue: every parked guest whose timer fires at or
+    /// before `now` (node time) is woken by crediting the slept node time
+    /// back to its private clock — a pure WFI fast-forward burn that
+    /// lands `sim_ticks` exactly one tick short of the waking step
+    /// ([`exit::wfi_parked_until`] is exact), so the wake and any trap
+    /// delivery happen inside the next *scheduled* slice, where telemetry
+    /// is live. The burn models no scheduling work: it runs with
+    /// telemetry suppressed and its world swaps uncounted, keeping
+    /// `decisions == world_switches == total_vm_exits` intact.
+    fn wake_due(&mut self, m: &mut Machine, now: u64, hart: usize) {
+        for idx in 0..self.guests.len() {
+            let Some(p) = self.parked[idx] else { continue };
+            let Some(wake_at) = p.wake_at else { continue };
+            if wake_at > now {
+                continue;
+            }
+            let tel = m.telemetry.take();
+            world_swap(m, &mut self.guests[idx]);
+            if p.credit > 0 {
+                let _ = Vcpu::run(m, RunBudget::ticks(p.credit));
+            }
+            world_swap(m, &mut self.guests[idx]);
+            m.telemetry = tel;
+            self.parked[idx] = None;
+            self.parked_flags[idx] = false;
+            self.hart_stats[hart].wakes += 1;
             if let Some(t) = m.telemetry.as_mut() {
                 t.emit_at(
                     idx as u32,
                     self.guests[idx].vmid,
-                    self.total_ticks,
-                    crate::telemetry::EventKind::SwitchOut,
+                    hart as u32,
+                    now,
+                    crate::telemetry::EventKind::Wake { slept_ticks: now - p.parked_at },
                 );
             }
-
-            let g = &mut self.guests[idx];
-            g.slices_run += 1;
-            if let VmExit::GuestDone { .. } = exit {
-                g.exit = Some(exit);
-                g.finished_at_total = Some(self.total_ticks);
-            }
-            self.last = Some((idx, exit));
         }
-        // Hand the carrier machine back clean: the last guest's VMID-tagged
-        // TLB entries and current-generation page caches must not be
-        // servable if the caller reuses this machine for a direct run.
-        m.core.tlb.flush_all();
-        self.outcome()
+    }
+
+    /// The earliest node tick strictly after `now` at which scheduling
+    /// state can change: a parked guest's timer firing, or a residency
+    /// fence lifting on an unfinished guest. `None` means the node is
+    /// quiescent — no future event can make a guest runnable.
+    fn next_event_after(&self, now: u64) -> Option<u64> {
+        let mut next: Option<u64> = None;
+        let mut consider = |t: u64| {
+            if t > now && next.map_or(true, |n| t < n) {
+                next = Some(t);
+            }
+        };
+        for p in self.parked.iter().flatten() {
+            if let Some(w) = p.wake_at {
+                consider(w);
+            }
+        }
+        for (i, g) in self.guests.iter().enumerate() {
+            if g.exit.is_none() && !self.parked_flags[i] {
+                consider(self.busy_until[i]);
+            }
+        }
+        next
     }
 
     pub fn outcome(&self) -> ScheduleOutcome {
         let completed = self.guests.iter().filter(|g| g.exit.is_some()).count();
+        let hart_stats = (0..self.harts)
+            .map(|h| {
+                let mut hs = self.hart_stats[h];
+                hs.idle_ticks = self.clock.idle_ticks(h);
+                hs.busy_ticks = self.clock.hart_time(h) - hs.idle_ticks;
+                hs
+            })
+            .collect();
         ScheduleOutcome {
             total_ticks: self.total_ticks,
             completed,
             all_passed: completed == self.guests.len() && self.guests.iter().all(|g| g.passed()),
             world_switches: self.switch.world_switches(),
             avg_switch_ns: self.switch.avg_ns(),
+            hart_stats,
         }
     }
 }
@@ -823,6 +1083,130 @@ mod tests {
         assert!(f.template_allocated_pages() > 0);
         assert!(f.template("bitcount").is_some());
         assert!(f.template("qsort").is_none());
+    }
+
+    /// Arms the CLINT timer (mtimecmp = 50 device updates), parks in WFI,
+    /// and powers off once the timer wakes it — the park/wake-queue
+    /// exercise guest.
+    fn timer_guest(id: usize) -> GuestVm {
+        let src = format!(
+            "li t0, 0x2004000\n li t1, 50\n sd t1, 0(t0)\n li t0, 1 << 7\n csrw mie, t0\n \
+             wfi\n li t2, {SYSCON_BASE}\n li t3, {SYSCON_PASS}\n sw t3, 0(t2)\n done: j done\n"
+        );
+        raw_guest(id, &src)
+    }
+
+    /// Final private tick count of `g` run solo (no scheduler at all) —
+    /// the oracle every scheduled run's guest timeline must match.
+    fn solo_ticks(mut g: GuestVm) -> u64 {
+        let mut m = Machine::new(1 << 20, true);
+        world_swap(&mut m, &mut g);
+        let exit = Vcpu::run(&mut m, RunBudget::ticks(u64::MAX / 2));
+        assert!(matches!(exit, VmExit::GuestDone { .. }), "solo run must finish: {exit:?}");
+        world_swap(&mut m, &mut g);
+        g.stats.sim_ticks
+    }
+
+    #[test]
+    fn gang_h1_is_bit_exact_with_round_robin() {
+        // The H=1-equivalence criterion on the synthetic node: same picks,
+        // same slice boundaries, same completion ticks, same switch
+        // counts. tests/sched_api.rs pins the same property on full guest
+        // stacks across all three flush policies.
+        let mk = || vec![tiny_guest(0, 50_000), tiny_guest(1, 10_000), tiny_guest(2, 30_000)];
+        let mut rr = VmmScheduler::new(mk(), 1_000, FlushPolicy::Partitioned);
+        let mut m1 = Machine::new(1 << 20, true);
+        let o_rr = rr.run(&mut m1, 1_000_000_000);
+        let mut gg = VmmScheduler::with_harts(
+            mk(),
+            FlushPolicy::Partitioned,
+            Box::new(Gang::new(1_000)),
+            1,
+        );
+        let mut m2 = Machine::new(1 << 20, true);
+        let o_gg = gg.run(&mut m2, 1_000_000_000);
+        assert!(o_rr.all_passed && o_gg.all_passed);
+        assert_eq!(o_rr.total_ticks, o_gg.total_ticks);
+        assert_eq!(o_rr.world_switches, o_gg.world_switches);
+        for (a, b) in rr.guests.iter().zip(&gg.guests) {
+            assert_eq!(a.stats.sim_ticks, b.stats.sim_ticks, "guest {} timeline", a.id);
+            assert_eq!(a.finished_at_total, b.finished_at_total, "guest {} completion", a.id);
+            assert_eq!(a.slices_run, b.slices_run, "guest {} slices", a.id);
+        }
+        // These guests power off before ever reaching a WFI, so the gang
+        // driver's park machinery must not have engaged.
+        assert_eq!(o_gg.hart_stats.len(), 1);
+        assert_eq!(o_gg.hart_stats[0].parks, 0);
+        assert_eq!(o_gg.hart_stats[0].idle_ticks, 0);
+        assert_eq!(o_gg.hart_stats[0].busy_ticks, o_gg.total_ticks);
+    }
+
+    #[test]
+    fn wfi_park_and_wake_preserves_the_solo_timeline() {
+        // Under gang scheduling a WFI park actually deschedules the guest;
+        // the wake credit must land its private clock exactly where the
+        // in-slice fast-forward would have — same virtual timeline, same
+        // completion tick count.
+        let oracle = solo_ticks(timer_guest(0));
+        let mut sched = VmmScheduler::with_harts(
+            vec![timer_guest(0)],
+            FlushPolicy::Partitioned,
+            Box::new(Gang::new(30)),
+            1,
+        );
+        let mut m = Machine::new(1 << 20, true);
+        let out = sched.run(&mut m, 1_000_000_000);
+        assert!(out.all_passed, "exit: {:?}", sched.guests[0].exit);
+        assert_eq!(sched.guests[0].stats.sim_ticks, oracle, "parked timeline diverged from solo");
+        let hs = out.hart_stats[0];
+        assert_eq!(hs.parks, 1, "one WFI park");
+        assert_eq!(hs.wakes, 1, "one wake-queue pop");
+        assert!(hs.idle_ticks > 0, "the hart idled while the guest slept");
+        assert_eq!(hs.busy_ticks + hs.idle_ticks, sched.clock.hart_time(0));
+        // While parked the guest held no hart: node time it slept through
+        // is idle, not busy, so the node finished in less busy time than
+        // the guest's own clock shows.
+        assert!(hs.busy_ticks < oracle);
+    }
+
+    #[test]
+    fn multi_hart_gang_completes_with_identical_guest_timelines() {
+        // H=2 over 4 guests: everything still completes, each guest's
+        // private timeline is identical to the H=1 run (scheduling must
+        // never leak into guest-visible time), and both harts did work.
+        let mk = || {
+            vec![
+                tiny_guest(0, 40_000),
+                tiny_guest(1, 10_000),
+                tiny_guest(2, 25_000),
+                tiny_guest(3, 5_000),
+            ]
+        };
+        let run = |harts: usize| {
+            let mut s = VmmScheduler::with_harts(
+                mk(),
+                FlushPolicy::Partitioned,
+                Box::new(Gang::new(1_000)),
+                harts,
+            );
+            let mut m = Machine::new(1 << 20, true);
+            let out = s.run(&mut m, 1_000_000_000);
+            (s, out)
+        };
+        let (s1, o1) = run(1);
+        let (s2, o2) = run(2);
+        assert!(o1.all_passed && o2.all_passed);
+        for (a, b) in s1.guests.iter().zip(&s2.guests) {
+            assert_eq!(a.stats.sim_ticks, b.stats.sim_ticks, "guest {} timeline", a.id);
+        }
+        assert_eq!(o2.hart_stats.len(), 2);
+        assert!(o2.hart_stats.iter().all(|h| h.slices > 0), "both harts dispatched slices");
+        // All guest execution happened under some hart's busy time.
+        let busy: u64 = o2.hart_stats.iter().map(|h| h.busy_ticks).sum();
+        let guest_ticks: u64 = s2.guests.iter().map(|g| g.stats.sim_ticks).sum();
+        assert_eq!(busy, guest_ticks);
+        // Two harts finish the node in less wall-tick horizon than one.
+        assert!(o2.total_ticks < o1.total_ticks, "H=2 horizon {} vs H=1 {}", o2.total_ticks, o1.total_ticks);
     }
 
     #[test]

@@ -12,6 +12,14 @@
 //!   order statistic a work-conserving policy can.
 //! - [`WeightedSlice`] — cyclic order with per-guest slice weights (the
 //!   CVA6-DSE-style heterogeneous-slice sweep axis).
+//! - [`Gang`] — the multi-hart policy: guests grouped into gangs of H
+//!   consecutive indices (the SMP-sibling analog) are co-scheduled across
+//!   the node's harts, with halt exits so WFI-parked members release
+//!   their hart to the wake queue (DESIGN.md §21). Degenerates to
+//!   [`RoundRobin`] at H = 1.
+//!
+//! All policies are per-hart aware: [`NodeState`] names the hart being
+//! scheduled for, and [`Decision::hart`] lets a policy pin placement.
 
 use std::collections::BTreeMap;
 use std::str::FromStr;
@@ -23,16 +31,40 @@ use super::{GuestVm, VmExit};
 /// Read-only node view handed to [`SchedPolicy::pick_next`].
 pub struct NodeState<'a> {
     pub guests: &'a [GuestVm],
-    /// Ticks scheduled so far across all guests.
+    /// Local time of the hart being scheduled for — on a single-hart node
+    /// this is the ticks scheduled so far across all guests.
     pub total_ticks: u64,
     /// The node-global tick budget.
     pub max_total_ticks: u64,
+    /// The hart this decision will run on (unless [`Decision::hart`]
+    /// pins another one).
+    pub hart: usize,
+    /// Hart count of the node (H = 1 for the single-hart case).
+    pub harts: usize,
+    /// Per-guest park flags: `true` while a guest is descheduled in WFI
+    /// awaiting its wake tick. May be shorter than `guests` (missing
+    /// entries mean "not parked" — single-hart callers pass `&[]`).
+    pub parked: &'a [bool],
+    /// Per-guest residency fences: the node tick at which the guest's
+    /// last slice ends. A guest resident on another hart must not be
+    /// picked again before the asking hart's clock reaches that point —
+    /// the same guest cannot run on two harts in overlapping node-time
+    /// windows. May be shorter than `guests` (missing entries mean 0).
+    pub busy_until: &'a [u64],
 }
 
 impl NodeState<'_> {
-    /// Indices of guests that have not powered off yet.
+    /// Can guest `i` be scheduled right now: not powered off, not parked
+    /// in WFI, and not resident on another hart in an overlapping window.
+    pub fn is_runnable(&self, i: usize) -> bool {
+        self.guests[i].exit.is_none()
+            && !self.parked.get(i).copied().unwrap_or(false)
+            && self.busy_until.get(i).copied().unwrap_or(0) <= self.total_ticks
+    }
+
+    /// Indices of guests that can be scheduled right now.
     pub fn runnable(&self) -> impl Iterator<Item = usize> + '_ {
-        self.guests.iter().enumerate().filter(|(_, g)| g.exit.is_none()).map(|(i, _)| i)
+        (0..self.guests.len()).filter(|&i| self.is_runnable(i))
     }
 
     /// Ticks left in the node budget.
@@ -50,13 +82,29 @@ pub struct Decision {
     pub slice_ticks: u64,
     /// Ask the run loop for halt exits ([`VmExit::Wfi`]). See the note on
     /// [`RunBudget::wfi_exit`](super::RunBudget::wfi_exit) for why the
-    /// bundled policies leave it off.
+    /// single-hart policies leave it off and [`Gang`] turns it on.
     pub wfi_exit: bool,
+    /// Hart affinity: pin this slice to a specific hart. `None` runs on
+    /// the hart the decision was asked for ([`NodeState::hart`]) — the
+    /// right default for work-conserving policies.
+    pub hart: Option<usize>,
 }
 
 impl Decision {
     pub fn slice(guest: usize, slice_ticks: u64) -> Decision {
-        Decision { guest, slice_ticks, wfi_exit: false }
+        Decision { guest, slice_ticks, wfi_exit: false, hart: None }
+    }
+
+    /// Pin the slice to a hart (gang home-hart placement).
+    pub fn on_hart(mut self, hart: usize) -> Decision {
+        self.hart = Some(hart);
+        self
+    }
+
+    /// Request halt exits for the slice ([`VmExit::Wfi`]).
+    pub fn with_wfi_exit(mut self) -> Decision {
+        self.wfi_exit = true;
+        self
     }
 }
 
@@ -95,7 +143,7 @@ impl SchedPolicy for RoundRobin {
         let n = node.guests.len();
         for k in 0..n {
             let idx = (self.next + k) % n;
-            if node.guests[idx].exit.is_none() {
+            if node.is_runnable(idx) {
                 self.next = (idx + 1) % n;
                 return Some(Decision::slice(idx, self.slice_ticks));
             }
@@ -166,10 +214,75 @@ impl SchedPolicy for WeightedSlice {
         let n = node.guests.len();
         for k in 0..n {
             let idx = (self.next + k) % n;
-            if node.guests[idx].exit.is_none() {
+            if node.is_runnable(idx) {
                 self.next = (idx + 1) % n;
                 return Some(Decision::slice(idx, self.base_slice.saturating_mul(self.weight(idx))));
             }
+        }
+        None
+    }
+}
+
+/// Gang scheduler for H-hart nodes: guests are grouped into gangs of H
+/// consecutive indices — the SMP-sibling analog, gang *k* owning guests
+/// `k*H .. k*H+H` — and the policy cycles gangs round-robin, dispatching a
+/// gang's members together across the node's harts before moving to the
+/// next gang. The member at gang offset *j* prefers its home hart *j*
+/// ([`Decision::on_hart`]); when that member is done, parked or already
+/// resident, the gang work-conserves by handing the asking hart another
+/// undispatched member of the same gang. Every decision requests halt
+/// exits ([`Decision::with_wfi_exit`]): a member that parks in WFI
+/// releases its hart to the driver's wake queue instead of burning the
+/// window — the idle-hart payoff the multi-hart refactor exists for.
+///
+/// H = 1 equivalence: every gang is a single guest, the home-hart
+/// preference is vacuous, and the cursor advances exactly like
+/// [`RoundRobin`]'s — so pick order, slice lengths and budgets are
+/// identical, and on guests that never halt mid-run (the benchmark
+/// stacks) the whole schedule is bit-exact with the pre-refactor
+/// scheduler (pinned by `tests/sched_api.rs`).
+pub struct Gang {
+    pub slice_ticks: u64,
+    /// Gang cursor: the gang currently being dispatched.
+    next: usize,
+}
+
+impl Gang {
+    pub fn new(slice_ticks: u64) -> Gang {
+        Gang { slice_ticks: slice_ticks.max(1), next: 0 }
+    }
+}
+
+impl SchedPolicy for Gang {
+    fn name(&self) -> &'static str {
+        "gang"
+    }
+
+    fn pick_next(&mut self, node: &NodeState, _last: Option<(usize, VmExit)>) -> Option<Decision> {
+        let n = node.guests.len();
+        if n == 0 {
+            return None;
+        }
+        let h = node.harts.max(1);
+        let gangs = n.div_ceil(h);
+        for k in 0..gangs {
+            let gang = (self.next + k) % gangs;
+            let base = gang * h;
+            let members = h.min(n - base);
+            // Home-hart placement first, then work-conserving fill.
+            let home = base + node.hart;
+            let pick = if node.hart < members && node.is_runnable(home) {
+                Some(home)
+            } else {
+                (base..base + members).find(|&i| node.is_runnable(i))
+            };
+            let Some(i) = pick else { continue };
+            // Keep dispatching this gang while it still has runnable
+            // members; once this pick exhausts it, rotate to the next
+            // gang — at H = 1 that is exactly the round-robin cursor.
+            let exhausted = !(base..base + members).any(|j| j != i && node.is_runnable(j));
+            self.next = if exhausted { (gang + 1) % gangs } else { gang };
+            return Some(Decision::slice(i, self.slice_ticks).on_hart(node.hart).with_wfi_exit());
         }
         None
     }
@@ -191,6 +304,8 @@ pub enum SchedKind {
     SloDeadline { targets: BTreeMap<String, u64> },
     /// Per-guest slice weights, cycled like the benchmark mix.
     WeightedSlice { weights: Vec<u64> },
+    /// Gang co-scheduling across the node's harts (H = 1: round-robin).
+    Gang,
 }
 
 impl SchedKind {
@@ -199,6 +314,7 @@ impl SchedKind {
             SchedKind::RoundRobin => "round-robin",
             SchedKind::SloDeadline { .. } => "slo-deadline",
             SchedKind::WeightedSlice { .. } => "weighted-slice",
+            SchedKind::Gang => "gang",
         }
     }
 
@@ -232,6 +348,7 @@ impl SchedKind {
             SchedKind::WeightedSlice { weights } => {
                 Box::new(WeightedSlice::new(slice_ticks, weights.clone()))
             }
+            SchedKind::Gang => Box::new(Gang::new(slice_ticks)),
         }
     }
 }
@@ -257,9 +374,10 @@ impl FromStr for SchedKind {
             "rr" | "round-robin" => SchedKind::RoundRobin,
             "slo" | "slo-deadline" => SchedKind::SloDeadline { targets: BTreeMap::new() },
             "weighted" | "weighted-slice" => SchedKind::WeightedSlice { weights: vec![1] },
+            "gang" => SchedKind::Gang,
             _ => bail!(
                 "unknown scheduling policy '{s}' (expected one of: rr|round-robin, \
-                 slo|slo-deadline, weighted|weighted-slice[:W1,W2,...])"
+                 slo|slo-deadline, weighted|weighted-slice[:W1,W2,...], gang)"
             ),
         })
     }
@@ -274,7 +392,20 @@ mod tests {
     }
 
     fn node(guests: &[GuestVm]) -> NodeState<'_> {
-        NodeState { guests, total_ticks: 0, max_total_ticks: u64::MAX }
+        node_on(guests, 0, 1)
+    }
+
+    /// A node view for hart `hart` of an `harts`-hart node.
+    fn node_on(guests: &[GuestVm], hart: usize, harts: usize) -> NodeState<'_> {
+        NodeState {
+            guests,
+            total_ticks: 0,
+            max_total_ticks: u64::MAX,
+            hart,
+            harts,
+            parked: &[],
+            busy_until: &[],
+        }
     }
 
     #[test]
@@ -287,6 +418,7 @@ mod tests {
             ("round-robin", Box::new(RoundRobin::new(100))),
             ("slo-deadline", Box::new(SloDeadline::new(100, vec![500]))),
             ("weighted-slice", Box::new(WeightedSlice::new(100, vec![1]))),
+            ("gang", Box::new(Gang::new(100))),
         ];
         for (want, p) in &named {
             assert_eq!(p.name(), *want);
@@ -310,6 +442,75 @@ mod tests {
             g.exit = Some(VmExit::GuestDone { passed: true });
         }
         assert!(rr.pick_next(&node(&gs), None).is_none());
+    }
+
+    #[test]
+    fn gang_on_one_hart_degenerates_to_round_robin() {
+        // H=1 equivalence: every gang holds one member, so cycling gangs is
+        // cycling guests — the pick sequence (including skip-finished) must
+        // match RoundRobin's exactly. tests/sched_api.rs pins the full
+        // end-to-end bit-exactness on real guest stacks.
+        let mut gs = guests(3);
+        gs[1].exit = Some(VmExit::GuestDone { passed: true });
+        let mut gang = Gang::new(100);
+        let mut rr = RoundRobin::new(100);
+        for _ in 0..6 {
+            let g = gang.pick_next(&node(&gs), None).unwrap();
+            let r = rr.pick_next(&node(&gs), None).unwrap();
+            assert_eq!(g.guest, r.guest);
+            assert_eq!(g.slice_ticks, r.slice_ticks);
+            // Gang decisions carry the affinity/wfi hooks RR leaves off.
+            assert_eq!(g.hart, Some(0));
+            assert!(g.wfi_exit);
+            assert_eq!(r.hart, None);
+            assert!(!r.wfi_exit);
+        }
+        for g in gs.iter_mut() {
+            g.exit = Some(VmExit::GuestDone { passed: true });
+        }
+        assert!(gang.pick_next(&node(&gs), None).is_none());
+    }
+
+    #[test]
+    fn gang_prefers_home_hart_and_fills_work_conserving() {
+        // 4 guests on H=2: gang 0 = {0,1}, gang 1 = {2,3}. Member at offset
+        // j is "vCPU j" and homes on hart j.
+        let gs = guests(4);
+        let mut gang = Gang::new(100);
+        // Hart 0 gets gang 0's vCPU 0; hart 1 gets vCPU 1.
+        assert_eq!(gang.pick_next(&node_on(&gs, 0, 2), None).unwrap().guest, 0);
+        assert_eq!(gang.pick_next(&node_on(&gs, 1, 2), None).unwrap().guest, 1);
+        // With guest 1 parked, hart 1 work-conserves inside the gang first
+        // (guest 0 is its only runnable sibling) rather than jumping gangs.
+        let parked = [false, true, false, false];
+        let ns = NodeState { parked: &parked, ..node_on(&gs, 1, 2) };
+        let mut g2 = Gang::new(100);
+        assert_eq!(g2.pick_next(&ns, None).unwrap().guest, 0);
+        // With the whole gang parked, the next gang is offered instead.
+        let parked = [true, true, false, false];
+        let ns = NodeState { parked: &parked, ..node_on(&gs, 1, 2) };
+        let mut g3 = Gang::new(100);
+        assert_eq!(g3.pick_next(&ns, None).unwrap().guest, 3);
+    }
+
+    #[test]
+    fn runnability_respects_park_and_residency_fences() {
+        let gs = guests(3);
+        let parked = [false, true];
+        let busy = [0, 0, 40];
+        let ns = NodeState {
+            total_ticks: 10,
+            parked: &parked,
+            busy_until: &busy,
+            ..node_on(&gs, 0, 2)
+        };
+        assert!(ns.is_runnable(0));
+        assert!(!ns.is_runnable(1), "parked guest is not runnable");
+        assert!(!ns.is_runnable(2), "guest resident elsewhere until t=40 is fenced");
+        assert_eq!(ns.runnable().collect::<Vec<_>>(), vec![0]);
+        // Short parked/busy_until slices default missing entries to
+        // unparked/unfenced, which is what single-hart callers rely on.
+        assert!(node(&gs).is_runnable(2));
     }
 
     #[test]
@@ -349,8 +550,9 @@ mod tests {
             "weighted".parse::<SchedKind>().unwrap(),
             SchedKind::WeightedSlice { weights: vec![1] }
         );
+        assert_eq!("gang".parse::<SchedKind>().unwrap(), SchedKind::Gang);
         let err = "fifo".parse::<SchedKind>().unwrap_err().to_string();
-        for choice in ["round-robin", "slo-deadline", "weighted"] {
+        for choice in ["round-robin", "slo-deadline", "weighted", "gang"] {
             assert!(err.contains(choice), "error must list '{choice}': {err}");
         }
         assert!("weighted:0".parse::<SchedKind>().is_err());

@@ -14,6 +14,7 @@ fn spec(nodes: usize, guests: usize, threads: usize) -> FleetSpec {
         nodes,
         guests_per_node: guests,
         threads,
+        harts: 1,
         slice_ticks: 100_000,
         policy: FlushPolicy::Partitioned,
         sched: SchedKind::RoundRobin,
@@ -159,6 +160,63 @@ fn fork_cost_excludes_derived_caches() {
         template.bus.ram_pages()
     );
     assert_eq!(rebound.bus.code_pages_marked(), 0);
+}
+
+#[test]
+fn multi_hart_fleet_digests_are_thread_and_hart_independent() {
+    // H=2 and H=4 gang-scheduled fleets: every guest's console must still
+    // match the solo oracle (multi-hart scheduling is invisible to
+    // tenants), per-guest digests and completion ticks must be identical
+    // across host thread counts (node determinism is per-node, never
+    // per-thread), and every hart must be accounted for in the per-hart
+    // stats.
+    let mk = |harts: usize, threads: usize| {
+        let mut s = spec(2, 2, threads);
+        s.harts = harts;
+        s.sched = SchedKind::Gang;
+        s
+    };
+    let solos = solo_digests(&spec(2, 2, 1)).unwrap();
+    for harts in [2usize, 4] {
+        let mut keys: Vec<Vec<(usize, usize, hvsim::util::ConsoleDigest, Option<u64>)>> =
+            Vec::new();
+        for threads in [1usize, 2, 4] {
+            let r = run_fleet(&mk(harts, threads)).unwrap();
+            assert!(r.all_passed(), "harts={harts} threads={threads} fleet failed");
+            let bad = console_mismatches(&r, &solos);
+            assert!(bad.is_empty(), "harts={harts} threads={threads} mismatches: {bad:?}");
+            for n in &r.nodes {
+                assert_eq!(n.hart_stats.len(), harts, "per-hart stats cover every hart");
+            }
+            keys.push(
+                r.guests()
+                    .map(|g| (g.node, g.id, g.console.clone(), g.finished_at_total))
+                    .collect(),
+            );
+        }
+        assert_eq!(keys[0], keys[1], "harts={harts}: 1-thread vs 2-thread results diverged");
+        assert_eq!(keys[0], keys[2], "harts={harts}: 1-thread vs 4-thread results diverged");
+    }
+}
+
+#[test]
+fn gang_h1_fleet_matches_round_robin_fleet() {
+    // The gang scheduler at H=1 degenerates to the round-robin cursor on
+    // nodes whose guests never execute WFI — same consoles, same
+    // completion ticks, same switch counts as the RoundRobin fleet.
+    let mut gang = spec(2, 2, 2);
+    gang.harts = 1;
+    gang.sched = SchedKind::Gang;
+    let rr = run_fleet(&spec(2, 2, 2)).unwrap();
+    let g = run_fleet(&gang).unwrap();
+    assert!(rr.all_passed() && g.all_passed());
+    let key = |r: &hvsim::fleet::FleetReport| {
+        r.guests()
+            .map(|x| (x.node, x.id, x.bench.clone(), x.finished_at_total, x.console.clone()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(key(&rr), key(&g), "gang H=1 diverged from round-robin");
+    assert_eq!(rr.world_switches(), g.world_switches());
 }
 
 #[test]

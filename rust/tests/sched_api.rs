@@ -14,7 +14,7 @@
 use hvsim::mem::{SYSCON_BASE, SYSCON_PASS};
 use hvsim::sim::Machine;
 use hvsim::vmm::{
-    build_node, world_swap, FlushPolicy, GuestVm, SloDeadline, VmmScheduler,
+    build_node, world_swap, FlushPolicy, Gang, GuestVm, SloDeadline, VmmScheduler,
 };
 
 const RAM: usize = hvsim::sw::GUEST_RAM_MIN;
@@ -110,6 +110,39 @@ fn round_robin_policy_is_bit_exact_with_pre_redesign_scheduler() {
             "{policy:?}: consoles/completion ticks diverged from the pre-redesign scheduler"
         );
         assert_eq!(out.world_switches, legacy_slices, "{policy:?}: slice count diverged");
+    }
+}
+
+#[test]
+fn gang_on_one_hart_is_bit_exact_with_pre_redesign_scheduler() {
+    // The H-hart refactor's H=1 equivalence gate: a gang-scheduled
+    // single-hart node reproduces the pre-redesign inlined round-robin
+    // scheduler byte-for-byte (consoles) and tick-for-tick (completion
+    // latencies) on the mixed 4-guest node, across all three flush
+    // policies. Benchmark guest stacks never execute WFI mid-run, so
+    // gang's wfi-exit run budgets change nothing here.
+    let slice = 50_000;
+    for policy in [FlushPolicy::FlushAll, FlushPolicy::FlushVmid, FlushPolicy::Partitioned] {
+        let (legacy, legacy_slices) =
+            legacy_round_robin(build_node(&MIX, 1, 4, RAM).unwrap(), slice, policy, BUDGET);
+
+        let guests = build_node(&MIX, 1, 4, RAM).unwrap();
+        let mut sched =
+            VmmScheduler::with_harts(guests, policy, Box::new(Gang::new(slice)), 1);
+        let mut m = Machine::new(RAM, true);
+        let out = sched.run(&mut m, BUDGET);
+        assert!(out.all_passed, "{policy:?}: guests failed under the gang driver");
+
+        let observed: Vec<(String, Option<u64>)> =
+            sched.guests.iter().map(|g| (g.console(), g.finished_at_total)).collect();
+        assert_eq!(
+            observed, legacy,
+            "{policy:?}: gang H=1 consoles/completion ticks diverged from the pre-redesign scheduler"
+        );
+        assert_eq!(out.world_switches, legacy_slices, "{policy:?}: slice count diverged");
+        assert_eq!(out.hart_stats.len(), 1);
+        assert_eq!(out.hart_stats[0].parks, 0, "benchmark guests never park");
+        assert_eq!(out.hart_stats[0].idle_ticks, 0, "a loaded single hart never idles");
     }
 }
 

@@ -15,6 +15,7 @@ fn spec(threads: usize, ring_cap: usize) -> FleetSpec {
         nodes: 2,
         guests_per_node: 2,
         threads,
+        harts: 1,
         slice_ticks: 100_000,
         policy: FlushPolicy::Partitioned,
         sched: SchedKind::RoundRobin,
@@ -209,7 +210,10 @@ fn event_counters_match_scheduler_stats_bit_exactly() {
 // -------------------------------------------------------------- exporters
 
 #[test]
-fn chrome_trace_parses_with_one_track_per_node_guest() {
+fn chrome_trace_parses_with_one_track_per_node_hart() {
+    // Single-hart fleet: every node exposes exactly its hart-0 track (the
+    // physical-resource view; the guest a record belongs to lives in its
+    // args, not the tid).
     let r = run_fleet(&spec(2, 1 << 14)).unwrap();
     let nodes = tnodes(&r);
     let j = telemetry::chrome::chrome_trace(&nodes);
@@ -221,21 +225,56 @@ fn chrome_trace_parses_with_one_track_per_node_guest() {
             )),
             "missing process metadata for node {node}"
         );
-        for guest in 0..2u32 {
-            assert!(
-                j.contains(&format!(
-                    "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {node}, \"tid\": {guest}, "
-                )),
-                "missing track for node {node} guest {guest}"
-            );
-        }
+        assert!(
+            j.contains(&format!(
+                "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {node}, \"tid\": 0, "
+            )),
+            "missing hart-0 track for node {node}"
+        );
+        assert!(
+            !j.contains(&format!(
+                "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {node}, \"tid\": 1, "
+            )),
+            "single-hart node {node} grew a second track"
+        );
     }
     // Resident slices paired from SwitchIn/SwitchOut, plus the instant
-    // species the acceptance criteria name.
+    // species the acceptance criteria name; X args carry the guest.
     assert!(j.contains("\"ph\": \"X\""), "no resident slices");
+    assert!(j.contains("\"args\": {\"guest\": "), "records must name their guest");
     assert!(j.contains("\"name\": \"vm_exit\""));
     assert!(j.contains("\"name\": \"switch_in\""));
     assert!(j.contains("\"name\": \"decision\""));
+}
+
+#[test]
+fn multi_hart_chrome_trace_has_one_track_per_hart_and_tags_events() {
+    // A 2-hart gang node: the trace grows a tid per hart, events are
+    // tagged with their hart, and the injected per-hart stats cover both
+    // harts with conserved busy/idle accounting.
+    let mut s = spec(1, 1 << 14);
+    s.harts = 2;
+    s.sched = SchedKind::Gang;
+    let r = run_fleet(&s).unwrap();
+    assert!(r.all_passed());
+    let nodes = tnodes(&r);
+    let j = telemetry::chrome::chrome_trace(&nodes);
+    assert!(json_valid(&j), "chrome trace is not valid JSON");
+    for node in 0..2u32 {
+        for hart in 0..2u32 {
+            assert!(
+                j.contains(&format!(
+                    "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {node}, \"tid\": {hart}, "
+                )),
+                "missing track for node {node} hart {hart}"
+            );
+        }
+    }
+    for n in &nodes {
+        assert_eq!(n.hart_stats.len(), 2, "per-hart stats injected into the snapshot");
+        assert!(n.hart_stats.iter().all(|h| h.slices > 0), "both harts ran slices");
+        assert!(n.events_ordered().iter().any(|e| e.hart == 1), "hart-1 events tagged");
+    }
 }
 
 #[test]
