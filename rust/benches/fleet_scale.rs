@@ -30,6 +30,7 @@ fn spec(threads: usize, scale: u64) -> FleetSpec {
         sched: SchedKind::RoundRobin,
         benches: vec!["qsort".into(), "bitcount".into()],
         scale,
+        rate: 1_000_000,
         ram_bytes: RAM,
         max_node_ticks: u64::MAX,
         tlb_sets: 64,

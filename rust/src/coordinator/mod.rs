@@ -702,6 +702,20 @@ pub fn fleet_table(
         report.parks(),
         report.wakes(),
     ));
+    // Request-serving workloads (DESIGN.md §22): per-request service
+    // latency percentiles + served throughput. Absent for compute-only
+    // mixes — no line is cheaper than a row of zeros.
+    if !report.request_latencies().is_empty() {
+        s.push_str(&format!(
+            "requests: {} served @ {} req/s offered | p50 {} / p99 {} ticks | {:.0} req/s served | {} errors\n",
+            report.requests_completed(),
+            spec.rate,
+            report.request_percentile(0.50).unwrap_or(0),
+            report.request_percentile(0.99).unwrap_or(0),
+            report.requests_per_sim_sec(),
+            report.request_errors(),
+        ));
+    }
     s.push_str(&format!(
         "construction (checkpoint-forked): {:.3}s, {} assemblies",
         report.construct_seconds, report.construct_assemblies,
@@ -867,6 +881,7 @@ mod tests {
             sched: crate::vmm::SchedKind::RoundRobin,
             benches: vec!["qsort".into()],
             scale: 1,
+            rate: 1_000_000,
             ram_bytes: 1 << 20,
             max_node_ticks: 1_000,
             tlb_sets: 64,
@@ -892,6 +907,9 @@ mod tests {
                     interrupts: 0,
                     console: crate::util::ConsoleDigest::of_bytes(b"x"),
                     pages_forked: 2,
+                    req_latencies: Vec::new(),
+                    req_completed: 0,
+                    req_errors: 0,
                 }],
                 hart_stats: vec![crate::vmm::HartStats {
                     busy_ticks: 500,
@@ -920,6 +938,13 @@ mod tests {
         assert!(t.contains("consoles vs solo: ok"));
         assert!(t.contains("fork cost: 2 pages across 1 forks"), "table:\n{t}");
         assert!(t.contains("MiB full-copy"), "table:\n{t}");
+        assert!(!t.contains("requests:"), "no requests line for compute-only mixes");
+        let mut req_report = report.clone();
+        req_report.nodes[0].guests[0].req_latencies = vec![10, 20];
+        req_report.nodes[0].guests[0].req_completed = 2;
+        let tr = fleet_table(&spec, &req_report, None, None, &[]);
+        assert!(tr.contains("requests: 2 served"), "table:\n{tr}");
+        assert!(tr.contains("p50 10 / p99 20 ticks"), "table:\n{tr}");
         let t2 = fleet_table(&spec, &report, Some(&report), Some((0.02, 9)), &["bad".into()]);
         assert!(t2.contains("forked CHEAPER"));
         assert!(t2.contains("parallel speedup vs 1 thread"));

@@ -1,12 +1,57 @@
 //! Platform devices: CLINT (timer + software interrupts), a UART console,
-//! and a minimal PLIC. These are the substrate the guest software stack
-//! needs (the paper's §3.5 device-tree discussion maps to this fixed
-//! Spike-like platform layout).
+//! a minimal PLIC, and the paravirtual virtio-MMIO family ([`virtio`]).
+//! These are the substrate the guest software stack needs (the paper's
+//! §3.5 device-tree discussion maps to this fixed Spike-like platform
+//! layout).
 
 mod clint;
 mod plic;
 mod uart;
+pub mod virtio;
 
 pub use clint::Clint;
 pub use plic::Plic;
 pub use uart::Uart;
+pub use virtio::{DevEvent, VirtioBlk, VirtioQueue};
+
+/// A memory-mapped device behind the [`Bus`](crate::mem::Bus)
+/// registration table. `off` is the offset within the device's
+/// registered aperture; `size` is the access width in bytes (1/2/4/8).
+///
+/// Handlers must be pure register-state machines: no guest-RAM DMA and
+/// no interrupt-line changes from inside an MMIO access. Devices with
+/// ring traffic (virtio) latch doorbells here and do the actual work in
+/// their `service` hook, which `Machine::device_update` drives on the
+/// node timebase — keeping the DESIGN.md §19 invariant that device
+/// state reaches `mip` in exactly one place.
+pub trait MmioDevice {
+    fn read(&mut self, off: u64, size: u64) -> u64;
+    fn write(&mut self, off: u64, size: u64, val: u64);
+}
+
+impl MmioDevice for Clint {
+    fn read(&mut self, off: u64, size: u64) -> u64 {
+        Clint::read(self, off, size)
+    }
+    fn write(&mut self, off: u64, size: u64, val: u64) {
+        Clint::write(self, off, size, val)
+    }
+}
+
+impl MmioDevice for Uart {
+    fn read(&mut self, off: u64, _size: u64) -> u64 {
+        Uart::read(self, off)
+    }
+    fn write(&mut self, off: u64, _size: u64, val: u64) {
+        Uart::write(self, off, val as u8)
+    }
+}
+
+impl MmioDevice for Plic {
+    fn read(&mut self, off: u64, _size: u64) -> u64 {
+        Plic::read(self, off)
+    }
+    fn write(&mut self, off: u64, _size: u64, val: u64) {
+        Plic::write(self, off, val)
+    }
+}

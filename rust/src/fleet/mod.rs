@@ -56,6 +56,11 @@ pub struct FleetSpec {
     /// Benchmark mix; guest i of every node runs `benches[i % len]`.
     pub benches: Vec<String>,
     pub scale: u64,
+    /// Open-loop request arrival rate (requests per simulated second) of
+    /// every guest's paravirtual queue device (DESIGN.md §22). Host-owned:
+    /// programmed into each guest world at construction, before boot.
+    /// Only request-serving workloads (`kvstore`, `echo`) consume it.
+    pub rate: u64,
     /// RAM per guest (and per carrier machine).
     pub ram_bytes: usize,
     /// Scheduled-tick budget per node.
@@ -102,6 +107,13 @@ pub struct GuestOutcome {
     pub console: ConsoleDigest,
     /// RAM pages this guest's fork materialized at construction.
     pub pages_forked: u64,
+    /// Per-request service latencies (node ticks, completion − scheduled
+    /// arrival) captured by this guest's queue device; empty for
+    /// compute-only benchmarks.
+    pub req_latencies: Vec<u64>,
+    /// Requests served / failed validation on this guest's queue device.
+    pub req_completed: u32,
+    pub req_errors: u32,
 }
 
 /// One node's result.
@@ -213,6 +225,45 @@ impl FleetReport {
         Some(v[rank - 1])
     }
 
+    /// Per-request service latencies (node ticks) across every guest,
+    /// ascending. Empty unless the mix includes request-serving workloads.
+    pub fn request_latencies(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.guests().flat_map(|g| g.req_latencies.iter().copied()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Nearest-rank percentile (`q` in 0..=1) over request latencies.
+    pub fn request_percentile(&self, q: f64) -> Option<u64> {
+        let v = self.request_latencies();
+        if v.is_empty() {
+            return None;
+        }
+        let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        Some(v[rank - 1])
+    }
+
+    /// Requests served fleet-wide.
+    pub fn requests_completed(&self) -> u64 {
+        self.guests().map(|g| g.req_completed as u64).sum()
+    }
+
+    /// Requests that failed response validation fleet-wide.
+    pub fn request_errors(&self) -> u64 {
+        self.guests().map(|g| g.req_errors as u64).sum()
+    }
+
+    /// Served requests per simulated second (ticks are nominal
+    /// nanoseconds), over the longest node's scheduled horizon.
+    pub fn requests_per_sim_sec(&self) -> f64 {
+        let horizon = self.nodes.iter().map(|n| n.total_ticks).max().unwrap_or(0);
+        if horizon == 0 {
+            0.0
+        } else {
+            self.requests_completed() as f64 * 1e9 / horizon as f64
+        }
+    }
+
     /// Frozen telemetry of every node that collected it, node order.
     pub fn node_telemetry(&self) -> Vec<&crate::telemetry::NodeTelemetry> {
         self.nodes.iter().filter_map(|n| n.telemetry.as_ref()).collect()
@@ -304,6 +355,9 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
             // Stream consoles: fold everything beyond a bounded tail into
             // a rolling digest instead of retaining per-guest strings.
             g.bus.uart.stream_digest();
+            // Host-owned arrival rate, programmed pre-boot (§22): forked
+            // worlds inherit the template's power-on device state.
+            g.bus.vq.rate = spec.rate;
         }
         built.push((node, guests));
     }
@@ -374,6 +428,9 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                         interrupts: g.stats.interrupts.values().sum(),
                         console: g.console_digest(),
                         pages_forked: g.construct_pages,
+                        req_latencies: g.bus.vq.latencies.clone(),
+                        req_completed: g.bus.vq.completed,
+                        req_errors: g.bus.vq.errors,
                     })
                     .collect();
                 results.lock().unwrap().push(NodeOutcome {
@@ -429,7 +486,8 @@ pub fn solo_baselines(spec: &FleetSpec) -> Result<BTreeMap<String, SoloBaseline>
         if out.contains_key(bench) {
             continue;
         }
-        let guests = vec![GuestVm::new(0, bench, spec.scale, spec.ram_bytes)?];
+        let mut guests = vec![GuestVm::new(0, bench, spec.scale, spec.ram_bytes)?];
+        guests[0].bus.vq.rate = spec.rate;
         let mut sched = VmmScheduler::new(guests, spec.slice_ticks, spec.policy);
         let mut m = Machine::new(spec.ram_bytes, true);
         m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
@@ -533,6 +591,7 @@ mod tests {
             sched: SchedKind::RoundRobin,
             benches: vec!["bitcount".into()],
             scale: 1,
+            rate: 1_000_000,
             ram_bytes: crate::sw::GUEST_RAM_MIN,
             max_node_ticks: u64::MAX,
             tlb_sets: 64,
@@ -557,7 +616,7 @@ mod tests {
         let mk = |lat: &[u64]| FleetReport {
             nodes: vec![NodeOutcome {
                 node: 0,
-                total_ticks: 0,
+                total_ticks: 1_000_000,
                 world_switches: 0,
                 switch_host_ns: 0,
                 host_seconds: 0.0,
@@ -575,6 +634,9 @@ mod tests {
                         interrupts: 0,
                         console: ConsoleDigest::of_bytes(b""),
                         pages_forked: 0,
+                        req_latencies: vec![t, t + 1],
+                        req_completed: 2,
+                        req_errors: 0,
                     })
                     .collect(),
                 hart_stats: Vec::new(),
@@ -595,5 +657,17 @@ mod tests {
         assert_eq!(r.latency_percentile(0.99), Some(40));
         assert_eq!(r.latency_percentile(1.0), Some(40));
         assert_eq!(mk(&[]).latency_percentile(0.5), None);
+
+        // Request metrics: same nearest-rank rule over the pooled
+        // per-request latencies, throughput over the node horizon.
+        assert_eq!(r.request_latencies(), vec![10, 11, 20, 21, 30, 31, 40, 41]);
+        assert_eq!(r.request_percentile(0.50), Some(21));
+        assert_eq!(r.request_percentile(0.99), Some(41));
+        assert_eq!(r.requests_completed(), 8);
+        assert_eq!(r.request_errors(), 0);
+        // 8 requests over 1e6 ticks (nominal ns) = 8000 req/s.
+        assert!((r.requests_per_sim_sec() - 8000.0).abs() < 1e-9);
+        assert_eq!(mk(&[]).request_percentile(0.5), None);
+        assert_eq!(mk(&[]).requests_per_sim_sec(), 0.0);
     }
 }

@@ -5,14 +5,16 @@
 //!             [--stats] [--echo] [--max-ticks N] [--engine block|tick]
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim sweep [--scale N] [--config FILE] [--trace] [--out FILE]
-//! hvsim vmm   [--guests N] [--harts H] [--slice T] [--bench A,B] [--scale N]
+//! hvsim vmm   [--guests N] [--harts H] [--slice T] [--bench A,B]
+//!             [--workload kv|echo] [--scale N]
 //!             [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang]
 //!             [--slo BENCH=TICKS,...] [--engine block|tick] [--out FILE]
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T]
-//!             [--bench A,B] [--scale N] [--policy all|vmid|none]
+//!             [--bench A,B] [--workload kv|echo] [--rate R] [--scale N]
+//!             [--policy all|vmid|none]
 //!             [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...]
-//!             [--engine block|tick] [--out FILE]
+//!             [--engine block|tick] [--out FILE] [--requests-out F]
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
 //! hvsim boot  [--config FILE]
@@ -176,14 +178,42 @@ fn parse_slo_targets(args: &Args) -> Result<std::collections::BTreeMap<String, u
 
 /// Shared `--bench` parsing (comma-separated mix, two distinct guest
 /// kernels interleave by default) for the vmm/fleet subcommands.
+/// `--workload kv|echo` (comma list) folds the request-serving guest
+/// kernels (DESIGN.md §22) into the mix: alone it *is* the mix, alongside
+/// `--bench` it extends it.
 fn parse_benches(args: &Args) -> Result<Vec<String>> {
-    let arg = args.get("bench").unwrap_or("qsort,bitcount");
-    let benches: Vec<String> =
+    let mut workloads = Vec::new();
+    if let Some(spec) = args.get("workload") {
+        for w in spec.split(',').filter(|s| !s.is_empty()) {
+            workloads.push(match w {
+                "kv" | "kvstore" => "kvstore".to_string(),
+                "echo" => "echo".to_string(),
+                other => bail!("unknown --workload '{other}' (expected kv, echo)"),
+            });
+        }
+        if workloads.is_empty() {
+            bail!("--workload must name at least one workload");
+        }
+    }
+    let arg = match args.get("bench") {
+        Some(b) => b,
+        None if !workloads.is_empty() => "",
+        None => "qsort,bitcount",
+    };
+    let mut benches: Vec<String> =
         arg.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect();
+    benches.extend(workloads);
     if benches.is_empty() {
         bail!("--bench must name at least one benchmark");
     }
     Ok(benches)
+}
+
+/// Shared `--rate` parsing: open-loop request arrivals per simulated
+/// second on every guest's paravirtual queue device. Only the
+/// request-serving workloads consume it.
+fn parse_rate(args: &Args) -> Result<u64> {
+    Ok(args.u64("rate")?.unwrap_or(1_000_000).max(1))
 }
 
 /// The shared `--trace-out` / `--metrics-out` / `--events-out` telemetry
@@ -407,6 +437,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         sched,
         benches,
         scale: cfg.scale,
+        rate: parse_rate(args)?,
         ram_bytes: coordinator::GUEST_NODE_RAM,
         max_node_ticks: cfg.max_ticks.saturating_mul(guests as u64),
         tlb_sets: cfg.tlb_sets as usize,
@@ -509,28 +540,37 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     out.push_str(&engine_ab_line);
 
     // The SLO scheduler is compared against a round-robin run of the
-    // identical fleet, and hard-bails if completion p99 regresses (CI
-    // smokes on this). Other non-RR policies skip the comparison — an
+    // identical fleet, and hard-bails if p99 regresses (CI smokes on
+    // this). When the mix serves requests, the gated metric is *request*
+    // p99 — the tail a cloud operator actually sells — instead of guest
+    // completion ticks. Other non-RR policies skip the comparison — an
     // extra whole-fleet run is not worth one informational line, and
     // weighted-slice deliberately skews slices anyway.
     let mut p99_regressed = None;
+    let mut p99_metric = "completion";
     if matches!(spec.sched, SchedKind::SloDeadline { .. }) {
         let mut rr_spec = spec.clone();
         rr_spec.sched = SchedKind::RoundRobin;
         rr_spec.telemetry = None;
         let rr = hvsim::fleet::run_fleet(&rr_spec)?;
         if rr.all_passed() {
-            let (p50, p99) = (
-                report.latency_percentile(0.50).unwrap_or(0),
-                report.latency_percentile(0.99).unwrap_or(0),
-            );
-            let (rr_p50, rr_p99) = (
-                rr.latency_percentile(0.50).unwrap_or(0),
-                rr.latency_percentile(0.99).unwrap_or(0),
-            );
+            let requests = !report.request_latencies().is_empty();
+            let pick = |r: &hvsim::fleet::FleetReport, q: f64| {
+                if requests {
+                    r.request_percentile(q).unwrap_or(0)
+                } else {
+                    r.latency_percentile(q).unwrap_or(0)
+                }
+            };
+            if requests {
+                p99_metric = "request";
+            }
+            let (p50, p99) = (pick(&report, 0.50), pick(&report, 0.99));
+            let (rr_p50, rr_p99) = (pick(&rr, 0.50), pick(&rr, 0.99));
             out.push_str(&format!(
-                "sched {} vs round-robin: completion p50 {} vs {} ({:+.2}%), p99 {} vs {} ({:+.2}%)\n",
+                "sched {} vs round-robin: {} p50 {} vs {} ({:+.2}%), p99 {} vs {} ({:+.2}%)\n",
                 spec.sched.name(),
+                p99_metric,
                 p50,
                 rr_p50,
                 100.0 * (p50 as f64 - rr_p50 as f64) / rr_p50.max(1) as f64,
@@ -566,6 +606,60 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         counter_bad = hvsim::fleet::counter_mismatches(&report);
     }
 
+    // Report-only request-latency export (CI uploads it as
+    // BENCH_requests.json): fleet-wide and per-workload p50/p99 plus
+    // served-request throughput. Ticks are nominal nanoseconds.
+    if let Some(path) = args.get("requests-out") {
+        let mut workloads = String::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for g in report.guests() {
+            if g.req_latencies.is_empty() || seen.contains(&g.bench.as_str()) {
+                continue;
+            }
+            seen.push(&g.bench);
+            let mut v: Vec<u64> = report
+                .guests()
+                .filter(|x| x.bench == g.bench)
+                .flat_map(|x| x.req_latencies.iter().copied())
+                .collect();
+            v.sort_unstable();
+            let pct =
+                |q: f64| v[((q * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1];
+            let completed: u64 = report
+                .guests()
+                .filter(|x| x.bench == g.bench)
+                .map(|x| x.req_completed as u64)
+                .sum();
+            if !workloads.is_empty() {
+                workloads.push_str(",\n");
+            }
+            workloads.push_str(&format!(
+                "    {{\"workload\": \"{}\", \"completed\": {}, \"p50_ticks\": {}, \"p99_ticks\": {}}}",
+                g.bench,
+                completed,
+                pct(0.50),
+                pct(0.99)
+            ));
+        }
+        let json = format!(
+            "{{\n  \"schema\": \"hvsim-requests-v1\",\n  \"rate_per_sec\": {},\n  \
+             \"nodes\": {},\n  \"guests\": {},\n  \"requests_completed\": {},\n  \
+             \"request_errors\": {},\n  \"request_p50_ticks\": {},\n  \
+             \"request_p99_ticks\": {},\n  \"requests_per_sim_sec\": {:.3},\n  \
+             \"workloads\": [\n{}\n  ]\n}}\n",
+            spec.rate,
+            spec.nodes,
+            spec.total_guests(),
+            report.requests_completed(),
+            report.request_errors(),
+            report.request_percentile(0.50).unwrap_or(0),
+            report.request_percentile(0.99).unwrap_or(0),
+            report.requests_per_sim_sec(),
+            workloads
+        );
+        std::fs::write(path, json).with_context(|| format!("writing {path}"))?;
+    }
+
     match args.get("out") {
         Some(path) => std::fs::write(path, &out)?,
         None => print!("{out}"),
@@ -584,8 +678,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     if let Some((p99, rr_p99)) = p99_regressed {
         bail!(
-            "fleet run failed: {} p99 completion latency {} regressed past round-robin {}",
+            "fleet run failed: {} p99 {} latency {} regressed past round-robin {}",
             spec.sched.name(),
+            p99_metric,
             p99,
             rr_p99
         );
@@ -646,7 +741,7 @@ fn usage() -> ! {
          usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo] [--engine block|tick] [telemetry]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
          hvsim vmm   [--guests N] [--harts H] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
-         hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
+         hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T] [--bench A,B] [--workload kv|echo] [--rate R] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [--requests-out F] [telemetry]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
          hvsim boot  [--bench NAME]\n  hvsim list\n\
          telemetry: [--trace-out chrome.json] [--metrics-out metrics.json] [--events-out events.jsonl]"

@@ -8,8 +8,14 @@
 //!   0x0200_0000  CLINT  (msip, mtimecmp, mtime)
 //!   0x0c00_0000  PLIC   (minimal)
 //!   0x1000_0000  UART   (8250-subset console)
+//!   0x1000_1000  virtio queue/net device (open-loop request source)
+//!   0x1000_2000  virtio block device (read-only host image)
 //!   0x8000_0000  RAM
 //! ```
+//!
+//! Device decode goes through a registration table of
+//! ([`MmioDevice`](crate::dev::MmioDevice)) apertures built at
+//! construction — see [`Bus::mmio_map`].
 //!
 //! RAM is a page-granular store ([`cow`]): copy-on-write [`CowRam`] by
 //! default, so cloning a `Bus` (checkpoint-forked guest construction)
@@ -22,7 +28,8 @@ pub mod cow;
 pub use code::{CodeTracker, CODE_DIRTY_ALL};
 pub use cow::{CowRam, FlatRam, RamStore, StoreKind, PAGE_SHIFT, PAGE_SIZE};
 
-use crate::dev::{Clint, Plic, Uart};
+use crate::dev::virtio::{VIRTIO_BLK_BASE, VIRTIO_QUEUE_BASE, VIRTIO_SIZE};
+use crate::dev::{Clint, DevEvent, MmioDevice, Plic, Uart, VirtioBlk, VirtioQueue};
 
 pub const SYSCON_BASE: u64 = 0x0010_0000;
 pub const CLINT_BASE: u64 = 0x0200_0000;
@@ -41,6 +48,32 @@ pub const SYSCON_FAIL: u32 = 0x3333;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AccessFault;
 
+/// Identity of a device in the MMIO registration table. The table maps
+/// apertures to ids rather than boxed trait objects so `Bus` stays
+/// `Clone` and the dispatch is a branch-predictable match.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DevId {
+    Clint,
+    Uart,
+    Plic,
+    /// Exact-address test device: registered with a 1-byte aperture so
+    /// only `SYSCON_BASE` itself decodes (pinned behavior).
+    Syscon,
+    VirtioQueue,
+    VirtioBlk,
+}
+
+/// One registered MMIO aperture: `base..base + size` → `dev`. Matching
+/// follows the historical dispatch: the *start* address selects the
+/// device (accesses straddling an aperture end are the device's
+/// problem, exactly as before the table existed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MmioRange {
+    pub base: u64,
+    pub size: u64,
+    pub dev: DevId,
+}
+
 /// The system bus: RAM plus devices. `Clone` supports checkpoint-forked
 /// guest construction; with the default CoW store a clone copies the page
 /// table only, and the first write to each shared page pays its 4 KiB.
@@ -50,8 +83,20 @@ pub struct Bus {
     pub clint: Clint,
     pub uart: Uart,
     pub plic: Plic,
+    /// Paravirtual queue/net device (open-loop request source).
+    pub vq: VirtioQueue,
+    /// Paravirtual read-only block device.
+    pub vblk: VirtioBlk,
     /// Set when the SYSCON device is written: Some(exit code).
     pub poweroff: Option<u32>,
+    /// MMIO registration table ([`MmioRange`]), probed in order.
+    mmio_map: Vec<MmioRange>,
+    /// Node-tick of this bus's tick 0: the VMM layer sets it at every
+    /// switch-in so device service sees the shared node timebase
+    /// (`node_now = node_tick_base + sim_ticks`); 0 for solo machines.
+    pub node_tick_base: u64,
+    /// Device events latched since the last `device_update` drain.
+    pub(crate) dev_events: Vec<DevEvent>,
     /// Predecoded-code page tracking for the block engine ([`code`]).
     /// Derived state: its `Clone` resets rather than copies, so forks
     /// never inherit a template's marks.
@@ -69,14 +114,51 @@ impl Bus {
     pub fn with_store(ram_bytes: usize, kind: StoreKind) -> Bus {
         let ram = RamStore::new(ram_bytes, kind);
         let code = CodeTracker::new(ram.num_pages());
-        Bus {
+        let mut bus = Bus {
             ram,
             clint: Clint::new(),
             uart: Uart::new(),
             plic: Plic::new(),
+            vq: VirtioQueue::new(),
+            vblk: VirtioBlk::new(),
             poweroff: None,
+            mmio_map: Vec::new(),
+            node_tick_base: 0,
+            dev_events: Vec::new(),
             code,
+        };
+        bus.register(CLINT_BASE, CLINT_SIZE, DevId::Clint);
+        bus.register(UART_BASE, UART_SIZE, DevId::Uart);
+        bus.register(PLIC_BASE, PLIC_SIZE, DevId::Plic);
+        bus.register(SYSCON_BASE, 1, DevId::Syscon);
+        bus.register(VIRTIO_QUEUE_BASE, VIRTIO_SIZE, DevId::VirtioQueue);
+        bus.register(VIRTIO_BLK_BASE, VIRTIO_SIZE, DevId::VirtioBlk);
+        bus
+    }
+
+    /// Register an MMIO aperture. Panics on overlap with an existing
+    /// registration — the address map is a platform invariant.
+    pub fn register(&mut self, base: u64, size: u64, dev: DevId) {
+        assert!(size > 0, "empty MMIO aperture");
+        for r in &self.mmio_map {
+            assert!(
+                base + size <= r.base || r.base + r.size <= base,
+                "MMIO aperture {base:#x}+{size:#x} overlaps {:?}",
+                r.dev
+            );
         }
+        self.mmio_map.push(MmioRange { base, size, dev });
+    }
+
+    /// The registered MMIO address map (diagnostics / pin tests).
+    pub fn mmio_map(&self) -> &[MmioRange] {
+        &self.mmio_map
+    }
+
+    /// Table lookup: the aperture containing `addr`, if any.
+    #[inline]
+    fn decode(&self, addr: u64) -> Option<MmioRange> {
+        self.mmio_map.iter().copied().find(|r| addr >= r.base && addr < r.base + r.size)
     }
 
     pub fn store_kind(&self) -> StoreKind {
@@ -235,49 +317,72 @@ impl Bus {
         self.ram.reset_touched()
     }
 
-    /// Physical read with full device decode.
+    /// Physical read with full device decode through the registration
+    /// table.
     pub fn read(&mut self, addr: u64, size: u64) -> Result<u64, AccessFault> {
         if self.in_ram(addr, size) {
             return Ok(self.read_ram(addr, size));
         }
-        if (CLINT_BASE..CLINT_BASE + CLINT_SIZE).contains(&addr) {
-            return Ok(self.clint.read(addr - CLINT_BASE, size));
-        }
-        if (UART_BASE..UART_BASE + UART_SIZE).contains(&addr) {
-            return Ok(self.uart.read(addr - UART_BASE));
-        }
-        if (PLIC_BASE..PLIC_BASE + PLIC_SIZE).contains(&addr) {
-            return Ok(self.plic.read(addr - PLIC_BASE));
-        }
-        if addr == SYSCON_BASE {
-            return Ok(0);
-        }
-        Err(AccessFault)
+        let Some(r) = self.decode(addr) else { return Err(AccessFault) };
+        let off = addr - r.base;
+        Ok(match r.dev {
+            DevId::Clint => MmioDevice::read(&mut self.clint, off, size),
+            DevId::Uart => MmioDevice::read(&mut self.uart, off, size),
+            DevId::Plic => MmioDevice::read(&mut self.plic, off, size),
+            DevId::Syscon => 0,
+            DevId::VirtioQueue => {
+                self.dev_events.push(DevEvent::MmioAccess { addr, write: false });
+                MmioDevice::read(&mut self.vq, off, size)
+            }
+            DevId::VirtioBlk => {
+                self.dev_events.push(DevEvent::MmioAccess { addr, write: false });
+                MmioDevice::read(&mut self.vblk, off, size)
+            }
+        })
     }
 
-    /// Physical write with full device decode.
+    /// Physical write with full device decode through the registration
+    /// table.
     pub fn write(&mut self, addr: u64, size: u64, val: u64) -> Result<(), AccessFault> {
         if self.in_ram(addr, size) {
             self.write_ram(addr, size, val);
             return Ok(());
         }
-        if (CLINT_BASE..CLINT_BASE + CLINT_SIZE).contains(&addr) {
-            self.clint.write(addr - CLINT_BASE, size, val);
-            return Ok(());
+        let Some(r) = self.decode(addr) else { return Err(AccessFault) };
+        let off = addr - r.base;
+        match r.dev {
+            DevId::Clint => MmioDevice::write(&mut self.clint, off, size, val),
+            DevId::Uart => MmioDevice::write(&mut self.uart, off, size, val),
+            DevId::Plic => MmioDevice::write(&mut self.plic, off, size, val),
+            DevId::Syscon => self.poweroff = Some(val as u32),
+            DevId::VirtioQueue => {
+                self.dev_events.push(DevEvent::MmioAccess { addr, write: true });
+                MmioDevice::write(&mut self.vq, off, size, val);
+            }
+            DevId::VirtioBlk => {
+                self.dev_events.push(DevEvent::MmioAccess { addr, write: true });
+                MmioDevice::write(&mut self.vblk, off, size, val);
+            }
         }
-        if (UART_BASE..UART_BASE + UART_SIZE).contains(&addr) {
-            self.uart.write(addr - UART_BASE, val as u8);
-            return Ok(());
-        }
-        if (PLIC_BASE..PLIC_BASE + PLIC_SIZE).contains(&addr) {
-            self.plic.write(addr - PLIC_BASE, val);
-            return Ok(());
-        }
-        if addr == SYSCON_BASE {
-            self.poweroff = Some(val as u32);
-            return Ok(());
-        }
-        Err(AccessFault)
+        Ok(())
+    }
+
+    /// Deferred virtio service: all DMA, request generation, completion
+    /// validation and PLIC line changes happen here, on the node
+    /// timebase. Called from `Machine::device_update` (only).
+    pub(crate) fn service_devices(&mut self, node_now: u64) {
+        self.vq.service(node_now, &mut self.ram, &mut self.code, &mut self.plic, &mut self.dev_events);
+        self.vblk.service(&mut self.ram, &mut self.code, &mut self.plic, &mut self.dev_events);
+    }
+
+    /// Drain device events latched since the last call (telemetry).
+    pub(crate) fn take_dev_events(&mut self) -> Vec<DevEvent> {
+        std::mem::take(&mut self.dev_events)
+    }
+
+    /// Drop latched device events without emitting (telemetry off).
+    pub(crate) fn clear_dev_events(&mut self) {
+        self.dev_events.clear();
     }
 }
 
@@ -337,6 +442,53 @@ mod tests {
     fn raw_write_ram_past_end_panics() {
         let mut bus = Bus::new(4096);
         bus.write_ram(RAM_BASE + 4094, 4, 0);
+    }
+
+    #[test]
+    fn mmio_registration_table_pins_the_address_map() {
+        // Regression pin for the MmioDevice refactor: the platform
+        // address map is an ABI for every assembled guest image.
+        let mut bus = Bus::new(4096);
+        let map: Vec<(u64, u64, DevId)> =
+            bus.mmio_map().iter().map(|r| (r.base, r.size, r.dev)).collect();
+        assert_eq!(
+            map,
+            vec![
+                (CLINT_BASE, CLINT_SIZE, DevId::Clint),
+                (UART_BASE, UART_SIZE, DevId::Uart),
+                (PLIC_BASE, PLIC_SIZE, DevId::Plic),
+                (SYSCON_BASE, 1, DevId::Syscon),
+                (VIRTIO_QUEUE_BASE, VIRTIO_SIZE, DevId::VirtioQueue),
+                (VIRTIO_BLK_BASE, VIRTIO_SIZE, DevId::VirtioBlk),
+            ]
+        );
+        // Behavior through the table is bit-exact with the historical
+        // hardcoded dispatch.
+        bus.clint.mtime = 0x1234_5678;
+        assert_eq!(bus.read(CLINT_BASE + 0xbff8, 8).unwrap(), 0x1234_5678);
+        assert_eq!(bus.read(UART_BASE + 5, 1).unwrap(), 0x60, "UART LSR: THR empty");
+        bus.write(UART_BASE, 1, b'x' as u64).unwrap();
+        assert_eq!(bus.uart.output_string(), "x");
+        bus.write(PLIC_BASE + 4 * 4, 4, 7).unwrap();
+        assert_eq!(bus.plic.priority[4], 7);
+        // SYSCON keeps its exact-address semantics: base decodes,
+        // base+4 does not.
+        assert_eq!(bus.read(SYSCON_BASE, 4).unwrap(), 0);
+        assert_eq!(bus.read(SYSCON_BASE + 4, 4), Err(AccessFault));
+        // The virtio apertures decode; just past them faults.
+        assert_eq!(bus.read(VIRTIO_QUEUE_BASE, 4).unwrap(), 0x7472_6976);
+        assert_eq!(bus.read(VIRTIO_BLK_BASE + 4, 4).unwrap(), 2);
+        assert_eq!(bus.read(VIRTIO_BLK_BASE + VIRTIO_SIZE, 4), Err(AccessFault));
+        // The gap between the UART aperture end and the queue device
+        // still faults.
+        assert_eq!(bus.read(UART_BASE + UART_SIZE, 4), Err(AccessFault));
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps")]
+    fn overlapping_registration_rejected() {
+        let mut bus = Bus::new(4096);
+        bus.register(UART_BASE + 8, 8, DevId::Syscon);
     }
 
     #[test]

@@ -45,6 +45,19 @@ pub struct TlbEntry {
 }
 
 impl TlbEntry {
+    /// The level (page-size exponent) at which this entry may satisfy
+    /// lookups: the *smaller* of the two stage page sizes. A VS-stage
+    /// gigapage backed by a 4K G-stage frame is only a valid translation
+    /// within that 4K frame — matching at the VS span would alias every
+    /// page of the gigapage onto one host frame.
+    pub fn match_level(&self) -> u8 {
+        if self.virt {
+            self.vs_level.min(self.g_level)
+        } else {
+            self.vs_level
+        }
+    }
+
     pub const INVALID: TlbEntry = TlbEntry {
         valid: false,
         vpn: 0,
@@ -190,7 +203,7 @@ impl Tlb {
         let clock = self.clock;
         for e in &mut self.entries[base..base + self.ways] {
             if e.valid
-                && e.vpn == vpn
+                && Self::vpn_hit(e, vpn)
                 && e.virt == virt
                 && (e.global || e.asid == asid)
                 && (!virt || e.vmid == vmid)
@@ -269,7 +282,7 @@ impl Tlb {
                 continue;
             }
             if let Some(v) = vpn {
-                if !Self::vpn_match(e, v) {
+                if !Self::vpn_covers(e, v) {
                     continue;
                 }
             }
@@ -293,7 +306,7 @@ impl Tlb {
                 continue;
             }
             if let Some(v) = vpn {
-                if !Self::vpn_match(e, v) {
+                if !Self::vpn_covers(e, v) {
                     continue;
                 }
             }
@@ -331,8 +344,20 @@ impl Tlb {
         }
     }
 
-    fn vpn_match(e: &TlbEntry, vpn: u64) -> bool {
-        // Honor superpage span at the VS-stage level.
+    /// Lookup predicate: the entry translates `vpn`. Matches at the
+    /// effective (min-stage) level — translate() recomputes the in-span
+    /// PA from the same base, so a native gigapage serves its whole span
+    /// while a VS gigapage over a 4K G frame serves only that frame.
+    fn vpn_hit(e: &TlbEntry, vpn: u64) -> bool {
+        let span = 1u64 << (9 * e.match_level() as u64);
+        let base = e.vpn & !(span - 1);
+        (base..base + span).contains(&vpn)
+    }
+
+    /// Fence predicate: the entry *could* translate `vpn` — conservative
+    /// at the full VS-stage span, so flushing any address inside a
+    /// megapage drops every cached fragment of it.
+    fn vpn_covers(e: &TlbEntry, vpn: u64) -> bool {
         let span = 1u64 << (9 * e.vs_level as u64);
         let base = e.vpn & !(span - 1);
         (base..base + span).contains(&vpn)
@@ -512,6 +537,27 @@ mod tests {
         // Flushing an address inside the megapage (vpn 0x2ff) hits it.
         t.fence_vvma(3, Some(0x2ff << 12), None);
         assert!(t.lookup(0x200, 1, 3, true).is_none());
+    }
+
+    #[test]
+    fn superpage_lookup_spans_at_min_stage_level() {
+        let mut t = Tlb::new(16, 2);
+        // Native gigapage (vs_level 2): serves every same-set VPN in its
+        // 1G span — the MMIO gigapage the mini-os kernel maps at VA 0.
+        let mut e = native_entry(0x10001, 1);
+        e.vs_level = 2;
+        t.insert(e);
+        assert_eq!(e.match_level(), 2);
+        assert!(t.lookup(0x10011, 1, 0, false).is_some(), "in-span, same-set vpn hits");
+        assert!(t.lookup(0x40001, 1, 0, false).is_none(), "same set, next gigapage misses");
+        // Guest VS gigapage backed by a 4K G-stage frame: the combined
+        // entry is only valid within that one frame.
+        let mut g = guest_entry(0x10001, 1, 3);
+        g.vs_level = 2;
+        assert_eq!(g.match_level(), 0);
+        t.insert(g);
+        assert!(t.lookup(0x10011, 1, 3, true).is_none(), "no span hit across G frames");
+        assert!(t.lookup(0x10001, 1, 3, true).is_some(), "own vpn still hits");
     }
 
     #[test]

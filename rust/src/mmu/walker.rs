@@ -113,14 +113,25 @@ pub fn translate(
         let entry = *entry;
         stats.tlb_hits += 1;
         check_entry(ctx, &entry, va)?;
-        return Ok((entry.host_ppn << PAGE_SHIFT) | (va & 0xfff));
+        return Ok(entry_pa(&entry, va));
     }
     stats.tlb_misses += 1;
 
     let entry = walk(stats, bus, ctx, va, s1_on, s2_on, s1_atp, asid, vmid)?;
     check_entry(ctx, &entry, va)?;
     tlb.insert(entry);
-    Ok((entry.host_ppn << PAGE_SHIFT) | (va & 0xfff))
+    Ok(entry_pa(&entry, va))
+}
+
+/// Physical address of `va` through `entry`. A superpage entry matches
+/// every VPN in its span (see `Tlb::vpn_hit`) but stores the host frame
+/// of the VPN it was walked for, so the in-span offset is re-applied from
+/// the span base. For 4K entries the mask is 0 and this is `host_ppn`
+/// verbatim.
+fn entry_pa(entry: &TlbEntry, va: u64) -> u64 {
+    let mask = (1u64 << (9 * entry.match_level() as u64)) - 1;
+    let ppn = (entry.host_ppn & !mask) | ((va >> PAGE_SHIFT) & mask);
+    (ppn << PAGE_SHIFT) | (va & 0xfff)
 }
 
 /// Apply `checkPermissions()` and convert a stage tag into the right fault.

@@ -5,29 +5,38 @@
 //! (§4.1); [`save`]/[`restore`] provide the same capability.
 //!
 //! Formats:
-//! - **CK3** (current writer): `magic, ram_len, template-name, machine
-//!   state, dirty pages` — the header precedes the state block so a
-//!   restorer validates RAM size and template identity *before* mutating
-//!   anything. RAM is a set of 4 KiB pages relative to a *base*. A plain
-//!   [`save`] uses the zero base
-//!   (pages that differ from all-zeros — the CK2 sparse set under a new
-//!   header); [`save_vs_template`] records only the pages that differ
-//!   from a named template world, so a checkpoint of a forked fleet guest
-//!   is O(dirty pages) on disk, exactly like the fork itself is in RAM.
+//! - **CK4** (current writer): `magic, ram_len, template-name, machine
+//!   state, paravirtual-device state, dirty pages` — the header precedes
+//!   the state block so a restorer validates RAM size and template
+//!   identity *before* mutating anything. The device section captures the
+//!   virtio queue/blk devices in full: ring cursors, the open-loop
+//!   generator (RNG word, arrival clock, backlog), in-flight requests,
+//!   the KV shadow, and captured latencies — a restored request-serving
+//!   guest resumes tick-exactly, mid-request. RAM is a set of 4 KiB pages
+//!   relative to a *base*: a plain [`save`] uses the zero base;
+//!   [`save_vs_template`] records only the pages that differ from a named
+//!   template world, so a checkpoint of a forked fleet guest is O(dirty
+//!   pages) on disk, exactly like the fork itself is in RAM.
 //!   [`restore_vs_template`] rebuilds by CoW-sharing the template's page
 //!   table and applying the dirty pages.
-//! - **CK2** (legacy): fully self-contained sparse-page blob. [`restore`]
-//!   falls back to the CK2 reader on its magic, so pre-CK3 blobs keep
-//!   restoring; [`save_ck2`] is kept for compatibility tooling and for
-//!   pinning the fallback path in tests.
+//! - **CK3/CK2** (legacy): pre-device-state layouts. [`restore`] falls
+//!   back to the matching reader on their magics — such blobs predate the
+//!   paravirtual devices, so the devices are explicitly reset to
+//!   power-on state rather than left holding whatever the target machine
+//!   had (a legacy blob can never silently mis-restore device state).
+//!   [`save_ck2`] is kept for compatibility tooling and for pinning the
+//!   fallback path in tests.
 
 use anyhow::{bail, Context, Result};
 
 use super::Machine;
+use crate::dev::{VirtioBlk, VirtioQueue};
+use crate::dev::virtio::{Req, Virtq};
 use crate::mem::{Bus, RAM_BASE};
 
 const MAGIC_CK2: &[u8; 8] = b"HVSIMCK2";
 const MAGIC_CK3: &[u8; 8] = b"HVSIMCK3";
+const MAGIC_CK4: &[u8; 8] = b"HVSIMCK4";
 const PAGE: usize = crate::mem::PAGE_SIZE;
 
 struct Writer {
@@ -204,6 +213,185 @@ fn read_state(m: &mut Machine, r: &mut Reader) -> Result<()> {
     Ok(())
 }
 
+// ---- CK4 paravirtual-device section (DESIGN.md S22) ----------------------
+
+fn write_virtq(w: &mut Writer, q: &Virtq) {
+    w.u32(q.num);
+    w.u64(q.desc);
+    w.u64(q.avail);
+    w.u64(q.used);
+    w.u32(q.avail_seen as u32);
+    w.u32(q.used_idx as u32);
+}
+
+fn read_virtq(r: &mut Reader) -> Result<Virtq> {
+    Ok(Virtq {
+        num: r.u32()?,
+        desc: r.u64()?,
+        avail: r.u64()?,
+        used: r.u64()?,
+        avail_seen: r.u32()? as u16,
+        used_idx: r.u32()? as u16,
+    })
+}
+
+fn write_req(w: &mut Writer, q: &Req) {
+    w.u32(q.id);
+    w.u64(q.op);
+    w.u64(q.key);
+    w.u64(q.val);
+    w.u64(q.expected);
+    w.u64(q.arrival);
+}
+
+fn read_req(r: &mut Reader) -> Result<Req> {
+    Ok(Req {
+        id: r.u32()?,
+        op: r.u64()?,
+        key: r.u64()?,
+        val: r.u64()?,
+        expected: r.u64()?,
+        arrival: r.u64()?,
+    })
+}
+
+fn write_u64s(w: &mut Writer, v: &[u64]) {
+    w.u32(v.len() as u32);
+    for &x in v {
+        w.u64(x);
+    }
+}
+
+fn read_u64s(r: &mut Reader) -> Result<Vec<u64>> {
+    let n = r.u32()? as usize;
+    let mut v = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        v.push(r.u64()?);
+    }
+    Ok(v)
+}
+
+/// Serialize both paravirtual devices and the bus's node timebase. The
+/// generator state (RNG word, arrival clock, backlog, in-flight set, KV
+/// shadow) makes a restored guest's request stream — content *and*
+/// timing — indistinguishable from the straight-through run.
+fn write_virtio(w: &mut Writer, bus: &Bus) {
+    let v = &bus.vq;
+    w.u32(v.status);
+    w.u32(v.int_status);
+    w.u64(v.dma_off);
+    write_virtq(w, &v.q);
+    w.u64(v.rate);
+    w.u64(v.seed);
+    w.u32(v.mode);
+    w.u32(v.req_total);
+    w.u64(v.resp);
+    w.u32(v.completed);
+    w.u32(v.errors);
+    w.u64(v.rng);
+    w.u8(v.started as u8);
+    w.u8(v.start_pending as u8);
+    w.u64(v.next_arrival);
+    w.u32(v.generated);
+    w.u32(v.backlog.len() as u32);
+    for q in &v.backlog {
+        write_req(w, q);
+    }
+    w.u32(v.inflight.len() as u32);
+    for q in &v.inflight {
+        write_req(w, q);
+    }
+    write_u64s(w, &v.shadow);
+    w.u8(v.irq_raised as u8);
+    w.u8(v.ack as u8);
+    w.u32(v.completes.len() as u32);
+    for &(id, resp) in &v.completes {
+        w.u32(id);
+        w.u64(resp);
+    }
+    write_u64s(w, &v.latencies);
+    let b = &bus.vblk;
+    w.u32(b.status);
+    w.u32(b.int_status);
+    w.u64(b.dma_off);
+    write_virtq(w, &b.q);
+    w.u32(b.ops);
+    w.u32(b.errors);
+    w.u8(b.notify as u8);
+    w.u8(b.ack as u8);
+    w.u8(b.irq_raised as u8);
+    w.u64(bus.node_tick_base);
+}
+
+/// Inverse of [`write_virtio`].
+fn read_virtio(m: &mut Machine, r: &mut Reader) -> Result<()> {
+    let mut v = VirtioQueue::new();
+    v.status = r.u32()?;
+    v.int_status = r.u32()?;
+    v.dma_off = r.u64()?;
+    v.q = read_virtq(r)?;
+    v.rate = r.u64()?;
+    v.seed = r.u64()?;
+    v.mode = r.u32()?;
+    v.req_total = r.u32()?;
+    v.resp = r.u64()?;
+    v.completed = r.u32()?;
+    v.errors = r.u32()?;
+    v.rng = r.u64()?;
+    v.started = r.u8()? != 0;
+    v.start_pending = r.u8()? != 0;
+    v.next_arrival = r.u64()?;
+    v.generated = r.u32()?;
+    let n = r.u32()? as usize;
+    v.backlog.clear();
+    for _ in 0..n {
+        v.backlog.push_back(read_req(r)?);
+    }
+    let n = r.u32()? as usize;
+    v.inflight.clear();
+    for _ in 0..n {
+        v.inflight.push(read_req(r)?);
+    }
+    let shadow = read_u64s(r)?;
+    if shadow.len() != v.shadow.len() {
+        bail!("checkpoint KV shadow has {} slots, device has {}", shadow.len(), v.shadow.len());
+    }
+    v.shadow = shadow;
+    v.irq_raised = r.u8()? != 0;
+    v.ack = r.u8()? != 0;
+    let n = r.u32()? as usize;
+    v.completes.clear();
+    for _ in 0..n {
+        v.completes.push((r.u32()?, r.u64()?));
+    }
+    v.latencies = read_u64s(r)?;
+    m.bus.vq = v;
+    let mut b = VirtioBlk::new();
+    b.status = r.u32()?;
+    b.int_status = r.u32()?;
+    b.dma_off = r.u64()?;
+    b.q = read_virtq(r)?;
+    b.ops = r.u32()?;
+    b.errors = r.u32()?;
+    b.notify = r.u8()? != 0;
+    b.ack = r.u8()? != 0;
+    b.irq_raised = r.u8()? != 0;
+    m.bus.vblk = b;
+    m.bus.node_tick_base = r.u64()?;
+    m.bus.clear_dev_events();
+    Ok(())
+}
+
+/// Legacy (CK2/CK3) restores predate the paravirtual devices: reset them
+/// to power-on state so a legacy blob can never leave the target
+/// machine's previous device state dangling.
+fn reset_virtio(m: &mut Machine) {
+    m.bus.vq = VirtioQueue::new();
+    m.bus.vblk = VirtioBlk::new();
+    m.bus.node_tick_base = 0;
+    m.bus.clear_dev_events();
+}
+
 /// Logical content of one page of a bus (`None` ⇒ all zeros).
 fn page_or_zero<'a>(bus: &'a Bus, i: usize, zeros: &'a [u8]) -> &'a [u8] {
     match bus.ram_page(i) {
@@ -265,13 +453,14 @@ fn apply_pages(m: &mut Machine, r: &mut Reader, ram_len: usize) -> Result<()> {
     Ok(())
 }
 
-/// Serialize the machine to a self-contained CK3 blob (pages relative to
+/// Serialize the machine to a self-contained CK4 blob (pages relative to
 /// the zero base).
 pub fn save(m: &Machine) -> Vec<u8> {
     let mut w = Writer { buf: Vec::with_capacity(1 << 20) };
-    w.buf.extend_from_slice(MAGIC_CK3);
+    w.buf.extend_from_slice(MAGIC_CK4);
     write_ram_header(&mut w, m, "");
     write_state(&mut w, m);
+    write_virtio(&mut w, &m.bus);
     write_dirty_pages(&mut w, m, None);
     w.buf
 }
@@ -294,25 +483,28 @@ pub fn save_vs_template(m: &Machine, template: &Bus, name: &str) -> Result<Vec<u
         bail!("template checkpoints need a non-empty name");
     }
     let mut w = Writer { buf: Vec::with_capacity(64 << 10) };
-    w.buf.extend_from_slice(MAGIC_CK3);
+    w.buf.extend_from_slice(MAGIC_CK4);
     write_ram_header(&mut w, m, name);
     write_state(&mut w, m);
+    write_virtio(&mut w, &m.bus);
     write_dirty_pages(&mut w, m, Some(template));
     Ok(w.buf)
 }
 
-/// Restore from a CK3 blob (zero base), falling back to the CK2 reader on
-/// the legacy magic. Template-relative blobs are refused by name — use
-/// [`restore_vs_template`]. The CK3 header (RAM size + template name) is
-/// validated *before* any machine state is touched, so a refused blob
-/// leaves the machine exactly as it was.
+/// Restore from a CK4 blob (zero base), falling back to the CK3/CK2
+/// readers on the legacy magics (which reset the paravirtual devices —
+/// those formats predate them). Template-relative blobs are refused by
+/// name — use [`restore_vs_template`]. The header (RAM size + template
+/// name) is validated *before* any machine state is touched, so a
+/// refused blob leaves the machine exactly as it was.
 pub fn restore(m: &mut Machine, blob: &[u8]) -> Result<()> {
     let mut r = Reader { buf: blob, pos: 0 };
     let magic = r.take(8)?;
     if magic == MAGIC_CK2 {
         return restore_ck2_body(m, &mut r);
     }
-    if magic != MAGIC_CK3 {
+    let legacy = magic == MAGIC_CK3;
+    if magic != MAGIC_CK4 && !legacy {
         bail!("bad checkpoint magic");
     }
     let ram_len = r.u64()? as usize;
@@ -325,6 +517,11 @@ pub fn restore(m: &mut Machine, blob: &[u8]) -> Result<()> {
         bail!("checkpoint is relative to template '{name}'; restore with restore_vs_template");
     }
     read_state(m, &mut r)?;
+    if legacy {
+        reset_virtio(m);
+    } else {
+        read_virtio(m, &mut r)?;
+    }
     m.bus.fill_ram(RAM_BASE, ram_len as u64).expect("full-RAM fill is in range");
     apply_pages(m, &mut r, ram_len)?;
     // Microarchitectural (non-architectural) state resets: the TLB, and
@@ -346,8 +543,12 @@ pub fn restore_vs_template(
     blob: &[u8],
 ) -> Result<()> {
     let mut r = Reader { buf: blob, pos: 0 };
-    if r.take(8)? != MAGIC_CK3 {
-        bail!("template-relative restore needs a CK3 checkpoint");
+    let magic = r.take(8)?;
+    if magic == MAGIC_CK3 {
+        bail!("legacy CK3 template checkpoint predates paravirtual-device state; re-save it");
+    }
+    if magic != MAGIC_CK4 {
+        bail!("template-relative restore needs a CK4 checkpoint");
     }
     // Header validation happens before any mutation of `m`: a wrong-size,
     // wrong-template, or zero-base blob must leave the machine untouched.
@@ -367,6 +568,7 @@ pub fn restore_vs_template(
         bail!("checkpoint was saved against template '{recorded}', not '{name}'");
     }
     read_state(m, &mut r)?;
+    read_virtio(m, &mut r)?;
     m.bus
         .clone_ram_from(template)
         .map_err(|_| anyhow::anyhow!("template RAM size does not match machine"))?;
@@ -397,9 +599,11 @@ pub fn save_ck2(m: &Machine) -> Vec<u8> {
     w.buf
 }
 
-/// CK2 body reader (magic already consumed).
+/// CK2 body reader (magic already consumed). CK2 predates the
+/// paravirtual devices: they are reset, never left dangling.
 fn restore_ck2_body(m: &mut Machine, r: &mut Reader) -> Result<()> {
     read_state(m, r)?;
+    reset_virtio(m);
     let ram_len = r.u64()? as usize;
     if ram_len != m.bus.ram_size() as usize {
         bail!("checkpoint RAM size {} != machine RAM {}", ram_len, m.bus.ram_size());
@@ -527,21 +731,117 @@ mod tests {
         m.set_entry(RAM_BASE);
         m.run(500);
         let ck2 = save_ck2(&m);
-        let ck3 = save(&m);
+        let ck4 = save(&m);
         assert_eq!(&ck2[..8], b"HVSIMCK2");
-        assert_eq!(&ck3[..8], b"HVSIMCK3");
+        assert_eq!(&ck4[..8], b"HVSIMCK4");
 
         let mut a = crate::sim::Machine::new(1 << 20, true);
+        // Pre-restore device garbage: the CK2 arm must reset it.
+        a.bus.vq.completed = 9;
+        a.bus.vq.latencies.push(1);
         restore(&mut a, &ck2).unwrap();
+        assert_eq!(a.bus.vq.completed, 0, "legacy restore resets devices");
+        assert!(a.bus.vq.latencies.is_empty());
         let mut b = crate::sim::Machine::new(1 << 20, true);
-        restore(&mut b, &ck3).unwrap();
+        restore(&mut b, &ck4).unwrap();
         let (ra, rb, rm) = (a.run(1_000_000), b.run(1_000_000), m.run(1_000_000));
         assert_eq!(ra, ExitReason::PowerOff(0x5555));
         assert_eq!(ra, rb);
         assert_eq!(ra, rm);
         assert_eq!(a.stats.sim_ticks, m.stats.sim_ticks, "CK2 restore is tick-exact");
-        assert_eq!(b.stats.sim_ticks, m.stats.sim_ticks, "CK3 restore is tick-exact");
+        assert_eq!(b.stats.sim_ticks, m.stats.sim_ticks, "CK4 restore is tick-exact");
         assert!(a.bus.ram_bytes() == m.bus.ram_bytes());
+    }
+
+    #[test]
+    fn legacy_ck3_blob_restores_with_devices_reset() {
+        // Hand-build a CK3-era blob (magic, header, state, pages — no
+        // device section): restore() must take the legacy arm, reset the
+        // paravirtual devices to power-on state, and stay tick-exact.
+        // restore_vs_template refuses CK3 outright (the template flow
+        // requires the device section).
+        let src = r#"
+            li t0, 0
+            li t1, 3000
+        loop:
+            addi t0, t0, 1
+            blt t0, t1, loop
+            li t2, 0x100000
+            li t3, 0x5555
+            sw t3, 0(t2)
+        "#;
+        let img = assemble(src, RAM_BASE).unwrap();
+        let mut m = crate::sim::Machine::new(1 << 20, true);
+        m.load(&img).unwrap();
+        m.set_entry(RAM_BASE);
+        m.run(700);
+        let mut w = Writer { buf: Vec::new() };
+        w.buf.extend_from_slice(MAGIC_CK3);
+        write_ram_header(&mut w, &m, "");
+        write_state(&mut w, &m);
+        write_dirty_pages(&mut w, &m, None);
+        let ck3 = w.buf;
+
+        let mut a = crate::sim::Machine::new(1 << 20, true);
+        a.bus.vq.completed = 5;
+        a.bus.vblk.ops = 3;
+        a.bus.node_tick_base = 77;
+        restore(&mut a, &ck3).unwrap();
+        assert_eq!(a.bus.vq.completed, 0, "legacy restore resets the queue device");
+        assert_eq!(a.bus.vblk.ops, 0, "legacy restore resets the block device");
+        assert_eq!(a.bus.node_tick_base, 0);
+        let (ra, rm) = (a.run(1_000_000), m.run(1_000_000));
+        assert_eq!(ra, ExitReason::PowerOff(0x5555));
+        assert_eq!(ra, rm);
+        assert_eq!(a.stats.sim_ticks, m.stats.sim_ticks, "CK3 restore is tick-exact");
+
+        let template = crate::sim::Machine::new(1 << 20, true);
+        let err = restore_vs_template(
+            &mut crate::sim::Machine::new(1 << 20, true),
+            &template.bus,
+            "bitcount",
+            &ck3,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("re-save"), "CK3 template refusal names the fix: {err}");
+    }
+
+    #[test]
+    fn request_serving_checkpoint_round_trips_tick_exact() {
+        // Checkpoint a kvstore machine mid-run — requests in flight, the
+        // open-loop generator mid-stream, the KV shadow partly populated —
+        // and require the restored machine to finish tick-exactly with the
+        // same per-request latencies as the straight-through run.
+        let mut m = crate::sim::Machine::new(64 << 20, true);
+        crate::sw::setup_native(&mut m, "kvstore", 1).unwrap();
+        let mut guard = 0u32;
+        while m.bus.vq.completed < 8 {
+            assert_eq!(m.run(50_000), ExitReason::Limit, "kvstore finished before mid-run ck");
+            guard += 1;
+            assert!(guard < 4_000, "kvstore never reached 8 completions");
+        }
+        assert!(m.bus.vq.completed < m.bus.vq.req_total, "checkpoint must land mid-stream");
+        let blob = save(&m);
+
+        let mut r = crate::sim::Machine::new(64 << 20, true);
+        restore(&mut r, &blob).unwrap();
+        assert_eq!(r.bus.vq.completed, m.bus.vq.completed);
+        assert_eq!(r.bus.vq.rng, m.bus.vq.rng, "generator RNG survives the round trip");
+        assert_eq!(r.bus.vq.shadow, m.bus.vq.shadow, "KV shadow survives the round trip");
+
+        let (r1, r2) = (m.run(4_000_000_000), r.run(4_000_000_000));
+        assert_eq!(
+            r1,
+            ExitReason::PowerOff(crate::mem::SYSCON_PASS),
+            "straight-through kvstore failed; console:\n{}",
+            m.console()
+        );
+        assert_eq!(r2, r1, "restored kvstore failed; console:\n{}", r.console());
+        assert_eq!(r.stats.sim_ticks, m.stats.sim_ticks, "tick-exact restore");
+        assert_eq!(r.bus.vq.latencies, m.bus.vq.latencies, "identical request latencies");
+        assert_eq!(r.bus.vq.errors, 0);
+        assert_eq!(m.bus.vq.errors, 0);
+        assert_eq!(r.bus.vq.completed, r.bus.vq.req_total, "all requests served");
     }
 
     #[test]

@@ -365,6 +365,13 @@ impl Machine {
     fn device_update(&mut self) {
         self.device_countdown = TIME_DIVIDER;
         self.bus.clint.tick(1);
+        // Deferred virtio service on the node timebase (DESIGN.md §22):
+        // runs *before* the PLIC lines are sampled below, so a completion
+        // raised here reaches mip on this very update — the §19 invariant
+        // (device state reaches mip in exactly one place) holds with the
+        // new devices included.
+        let node_now = self.bus.node_tick_base + self.stats.sim_ticks;
+        self.bus.service_devices(node_now);
         let csr = &mut self.core.hart.csr;
         csr.time = self.bus.clint.mtime;
         // mcycle advances at device granularity (TIME_DIVIDER ticks);
@@ -397,6 +404,28 @@ impl Machine {
         }
         csr.set_mip_bits(set);
         csr.clear_mip_bits(clr);
+        // Drain device events latched since the last update into the
+        // telemetry rings (tick = node time, matching the service above).
+        if self.telemetry.is_some() {
+            use crate::telemetry::EventKind;
+            let events = self.bus.take_dev_events();
+            let ticks = self.stats.sim_ticks;
+            let t = self.telemetry.as_mut().expect("telemetry vanished mid-update");
+            for ev in events {
+                let kind = match ev {
+                    crate::dev::DevEvent::MmioAccess { addr, write } => {
+                        EventKind::MmioAccess { addr, write }
+                    }
+                    crate::dev::DevEvent::IrqInject { irq } => EventKind::IrqInject { irq },
+                    crate::dev::DevEvent::VirtqComplete { id, latency } => {
+                        EventKind::VirtqComplete { id, latency }
+                    }
+                };
+                t.emit(ticks, kind);
+            }
+        } else {
+            self.bus.clear_dev_events();
+        }
     }
 
     /// One block-engine dispatch: at most one device update, one

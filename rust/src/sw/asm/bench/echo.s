@@ -1,0 +1,45 @@
+# bench/echo.s — request-serving packet echo over the paravirtual queue
+# device (DESIGN.md S22). The device's open-loop generator delivers
+# 64*SCALE packets on its own clock; the loop receives each one, computes
+# the echo/filter response key ^ val ^ id, and retires it at the device
+# (which validates the response and stamps the request latency). The
+# checksum line is a rotate-xor fold of every response, so it pins the
+# full request stream — content is rate- and schedule-independent.
+
+bench_main:
+    addi sp, sp, -32
+    sd   ra, 0(sp)
+    sd   s0, 8(sp)
+    sd   s1, 16(sp)
+    li   a0, 0                  # mode 0 = echo
+    li   a7, 2
+    ecall                       # vq_init -> a0 = total requests
+    mv   s0, a0                 # remaining
+    li   s1, 0                  # checksum
+1:
+    beqz s0, 2f
+    li   a7, 3
+    ecall                       # vq_recv -> a0 = id|op<<32, a1 = key, a2 = val
+    slli t2, a0, 32
+    srli t2, t2, 32             # id
+    xor  t3, a1, a2
+    xor  t3, t3, t2             # resp = key ^ val ^ id
+    # checksum = rotl(checksum, 1) ^ resp
+    slli t0, s1, 1
+    srli s1, s1, 63
+    or   s1, s1, t0
+    xor  s1, s1, t3
+    mv   a0, t2
+    mv   a1, t3
+    li   a7, 4
+    ecall                       # vq_complete(id, resp)
+    addi s0, s0, -1
+    j    1b
+2:
+    mv   a0, s1
+    call print_hex64
+    ld   ra, 0(sp)
+    ld   s0, 8(sp)
+    ld   s1, 16(sp)
+    addi sp, sp, 32
+    ret

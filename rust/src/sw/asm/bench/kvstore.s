@@ -1,0 +1,66 @@
+# bench/kvstore.s — request-serving key/value store over the paravirtual
+# queue device (DESIGN.md S22). Warm-up reads sector 0 through the virtio
+# block device (its xor-fold seeds the checksum), then serves 64*SCALE
+# get/put requests against a 256-slot table in the demand-paged heap. The
+# response to every request — get or put — is the *previous* value of the
+# slot, which is exactly the shadow model the device validates against,
+# so a single flipped response shows up in both the device error counter
+# and the checksum line.
+
+bench_main:
+    addi sp, sp, -48
+    sd   ra, 0(sp)
+    sd   s0, 8(sp)
+    sd   s1, 16(sp)
+    sd   s2, 24(sp)
+    # Seed the checksum from disk: blk_read(0).
+    li   a0, 0
+    li   a7, 5
+    ecall
+    mv   s1, a0                 # checksum = xor-fold of sector 0
+    li   a0, 1                  # mode 1 = kv
+    li   a7, 2
+    ecall                       # vq_init -> a0 = total requests
+    mv   s0, a0
+    # Zero the 256-slot table (first touch demand-maps the heap page).
+    li   t0, HEAP0
+    li   t1, 256
+1:
+    sd   zero, 0(t0)
+    addi t0, t0, 8
+    addi t1, t1, -1
+    bnez t1, 1b
+2:
+    beqz s0, 4f
+    li   a7, 3
+    ecall                       # vq_recv -> a0 = id|op<<32, a1 = key, a2 = val
+    mv   s2, a0
+    li   t0, HEAP0
+    slli t1, a1, 3
+    add  t0, t0, t1             # slot address
+    ld   t1, 0(t0)              # previous value = response
+    srli t2, s2, 32             # op: 0 = get, 1 = put
+    beqz t2, 3f
+    sd   a2, 0(t0)              # put: slot = val
+3:
+    # checksum = rotl(checksum, 1) ^ resp
+    slli t2, s1, 1
+    srli s1, s1, 63
+    or   s1, s1, t2
+    xor  s1, s1, t1
+    slli a0, s2, 32
+    srli a0, a0, 32             # id
+    mv   a1, t1                 # resp
+    li   a7, 4
+    ecall                       # vq_complete(id, resp)
+    addi s0, s0, -1
+    j    2b
+4:
+    mv   a0, s1
+    call print_hex64
+    ld   ra, 0(sp)
+    ld   s0, 8(sp)
+    ld   s1, 16(sp)
+    ld   s2, 24(sp)
+    addi sp, sp, 48
+    ret

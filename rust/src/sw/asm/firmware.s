@@ -19,6 +19,10 @@
 .equ SYSCON,      0x100000
 .equ PASS_CODE,   0x5555
 .equ FAIL_CODE,   0x3333
+# Paravirtual devices (DESIGN.md S22): DMA_OFF register of each aperture.
+.equ VQDEV_DMA,   0x10001040
+.equ VBLK_DMA,    0x10002040
+.equ GUEST_OFF,   0x02000000
 
 fw_entry:
     la   t0, m_trap
@@ -36,6 +40,17 @@ fw_entry:
     csrw medeleg, t0
     csrw mideleg, x0
 
+    # Guest boots: the kernel's ring addresses are guest-physical, so the
+    # paravirtual devices' DMA must be offset by the host backing of guest
+    # RAM. Programming the host-owned DMA_OFF registers here (M-mode,
+    # physical) keeps the kernel image bit-identical native vs guest.
+    beqz a2, 1f
+    li   t0, VQDEV_DMA
+    li   t1, GUEST_OFF
+    sd   t1, 0(t0)
+    li   t0, VBLK_DMA
+    sd   t1, 0(t0)
+1:
     # MPP = S (01): drop into the next stage in (H)S mode.
     li   t0, 3 << 11
     csrc mstatus, t0

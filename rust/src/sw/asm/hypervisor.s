@@ -28,6 +28,8 @@
 .equ GPA_HI,       0x81000000
 .equ GUEST_OFF,    0x2000000     # host backing offset of guest-physical
 .equ KERNEL_BASE,  0x80200000    # guest kernel entry (guest-physical)
+.equ VIRTIO_LO,    0x10001000    # paravirtual MMIO apertures (DESIGN.md
+.equ VIRTIO_HI,    0x10003000    # S22): queue device + block device
 
 hv_entry:
     la   t0, hs_trap
@@ -100,11 +102,23 @@ hs_gpf:
     slli t0, t0, 2
     srli t0, t0, 12
     slli t0, t0, 12             # page-aligned guest-physical address
+    # The virtio apertures are identity-mapped passthrough (the devices
+    # themselves apply the guest's DMA offset to ring addresses); any
+    # other GPA must fall in the guest RAM window, mapped at the host
+    # backing offset. t6 carries the leaf offset through the walk.
+    li   t6, 0
+    li   t1, VIRTIO_LO
+    bltu t0, t1, hs_gpf_ram
+    li   t1, VIRTIO_HI
+    bltu t0, t1, hs_gpf_walk
+hs_gpf_ram:
     li   t1, GPA_LO
     bltu t0, t1, hv_panic
     li   t1, GPA_HI
     bgeu t0, t1, hv_panic
+    li   t6, GUEST_OFF
 
+hs_gpf_walk:
     # Level 2 (Sv39x4 root: 11 index bits).
     srli t1, t0, 30
     li   t2, 0x7ff
@@ -119,16 +133,19 @@ hs_gpf:
     slli t1, t1, 3
     add  t2, t2, t1
     call hv_pte_next
-    # Level 0 leaf: host = guest + GUEST_OFF, perms V|R|W|X|U|A|D.
+    # Level 0 leaf: host = guest + offset. RAM gets V|R|W|X|U|A|D; the
+    # MMIO apertures are data-only (no X).
     srli t1, t0, 12
     andi t1, t1, 0x1ff
     slli t1, t1, 3
     add  t2, t2, t1
-    li   t1, GUEST_OFF
-    add  t1, t0, t1
+    add  t1, t0, t6
     srli t1, t1, 12
     slli t1, t1, 10
-    ori  t1, t1, 0xDF
+    ori  t1, t1, 0xD7
+    beqz t6, hs_gpf_leaf
+    ori  t1, t1, 0x08           # +X for guest RAM
+hs_gpf_leaf:
     sd   t1, 0(t2)
 
     li   t1, HVDATA             # pf++

@@ -20,7 +20,10 @@
 # stack and marks the boot/benchmark measurement boundary (§4.1 analog).
 #
 # Traps handled at S (VS in a guest):
-#   8  ecall-from-U:  a7=0 putchar (relayed via SBI), a7=1 exit(a0)
+#   8  ecall-from-U:  a7=0 putchar (relayed via SBI), a7=1 exit(a0),
+#                     a7=2 vq_init(mode), a7=3 vq_recv, a7=4
+#                     vq_complete(id, resp), a7=5 blk_read(sector)
+#                     (the paravirtual I/O driver — DESIGN.md S22)
 #   12/13/15 page faults in [HEAP0, HEAP_END): demand-map one page
 #   anything else: panic ("K! ..."), SBI shutdown(fail)
 
@@ -41,7 +44,15 @@
 .equ PTE_S_RWX,  0xCF
 .equ PTE_U_RWX,  0xDF
 .equ PTE_U_RW,   0xD7
+.equ PTE_S_RW,   0xC7
 .equ PTE_PTR,    0x01
+
+# Paravirtual I/O (DESIGN.md S22): virtio-MMIO apertures and the kernel
+# page holding the rings + packet buffers (inside the image megapage, so
+# it is S-mode RW and zero at boot).
+.equ VQDEV,      0x10001000
+.equ VBLK,       0x10002000
+.equ VQ_MEM,     0x80320000
 
 k_entry:
     li   sp, KSTACK_TOP
@@ -86,6 +97,9 @@ k_build_pt:
     slli t2, t2, 10
     ori  t2, t2, PTE_PTR
     sd   t2, 16(t0)             # root[2]: VA 0x8000_0000 GiB region
+    li   t2, PTE_S_RW
+    sd   t2, 0(t0)              # root[0]: identity gigapage over the
+                                # low GiB (MMIO: virtio apertures), S-only
 
     li   t0, KPT_L1
     li   t1, KPT_IMG
@@ -194,7 +208,18 @@ k_syscall:
     j    k_ret
 4:
     li   t0, 1
-    bne  a7, t0, k_panic_trap
+    beq  a7, t0, k_exit
+    li   t0, 2
+    beq  a7, t0, k_vq_init
+    li   t0, 3
+    beq  a7, t0, k_vq_recv
+    li   t0, 4
+    beq  a7, t0, k_vq_complete
+    li   t0, 5
+    beq  a7, t0, k_blk_read
+    j    k_panic_trap
+
+k_exit:
     # exit(a0): end-of-benchmark banner, then power off.
     la   a0, k_s_done
     call k_puts
@@ -203,6 +228,216 @@ k_syscall:
     ecall                       # SBI shutdown; never returns
 5:
     j    5b
+
+# --- paravirtual I/O driver (DESIGN.md S22) ------------------------------
+# Ring page layout inside VQ_MEM (zero at boot, S-only):
+#   +0x000 queue-device descriptor table (8 x 16B)
+#   +0x080 queue-device avail ring   +0x0c0 used ring
+#   +0x140 packet buffers (8 x 32B: id, op, key, val)
+#   +0x400 blk descriptor table (3 x 16B)
+#   +0x480 blk avail ring           +0x4c0 blk used ring
+#   +0x500 blk request header       +0x520 status byte
+#   +0x600 blk data buffer (512B)
+# KDATA+8 holds the driver's used-ring cursor (KDATA+0 is the pager pool).
+
+# vq_init(a0 = mode 0 echo / 1 kv): reset + program the queue device,
+# post all 8 RX buffers, seed the open-loop generator, kick DRIVER_OK.
+# Returns a0 = total request count (64 * SCALE).
+k_vq_init:
+    li   t0, VQDEV
+    sw   zero, 0x08(t0)         # status = 0: device reset
+    li   t1, 8
+    sw   t1, 0x14(t0)           # queue size
+    li   t1, VQ_MEM
+    sd   t1, 0x18(t0)           # desc base
+    li   t1, VQ_MEM + 0x80
+    sd   t1, 0x20(t0)           # avail base
+    li   t1, VQ_MEM + 0xc0
+    sd   t1, 0x28(t0)           # used base
+    # Descriptor table: 8 device-writable 32-byte packet buffers.
+    li   t1, VQ_MEM
+    li   t2, VQ_MEM + 0x140
+    li   t3, 8
+k_vqi_desc:
+    sd   t2, 0(t1)              # addr
+    li   a0, 32
+    sw   a0, 8(t1)              # len
+    li   a0, 2                  # VIRTQ_DESC_F_WRITE
+    sh   a0, 12(t1)
+    sh   zero, 14(t1)           # next
+    addi t1, t1, 16
+    addi t2, t2, 32
+    addi t3, t3, -1
+    bnez t3, k_vqi_desc
+    # Avail ring: post every descriptor once; vq_recv reposts after use.
+    li   t1, VQ_MEM + 0x80
+    sh   zero, 0(t1)            # flags
+    li   t2, 0
+k_vqi_avail:
+    slli t3, t2, 1
+    add  t3, t3, t1
+    sh   t2, 4(t3)              # ring[i] = i
+    addi t2, t2, 1
+    li   t3, 8
+    bltu t2, t3, k_vqi_avail
+    sh   t2, 2(t1)              # avail.idx = 8
+    li   t1, VQ_MEM + 0xc0
+    sh   zero, 2(t1)            # clear any stale used.idx
+    li   t1, KDATA
+    sd   zero, 8(t1)            # used-ring cursor = 0
+    # Generator parameters: fixed per-mode seed so every run — native,
+    # guest, any fleet schedule — sees the same request stream.
+    ld   t1, 40(sp)             # mode argument
+    sw   t1, 0x64(t0)           # MODE
+    li   t2, 0x5eed
+    add  t2, t2, t1
+    sd   t2, 0x58(t0)           # SEED
+    li   t1, SCALE
+    li   t2, 64
+    mul  t1, t1, t2
+    sw   t1, 0x60(t0)           # REQ_TOTAL = 64 * SCALE
+    sd   t1, 40(sp)             # return total
+    li   t1, 4                  # DRIVER_OK: generator arms
+    sw   t1, 0x08(t0)
+    j    k_sc_ret
+
+# vq_recv: poll the used ring for the next delivered request; repost its
+# buffer. Returns a0 = id | op<<32, a1 = key, a2 = val.
+k_vq_recv:
+    sd   t4, 48(sp)
+    li   t0, KDATA
+    ld   t1, 8(t0)              # cursor (kept masked to 16 bits)
+    li   t2, VQ_MEM + 0xc0
+k_vqr_poll:
+    lhu  t3, 2(t2)              # used.idx (device-written)
+    beq  t3, t1, k_vqr_poll
+    andi t3, t1, 7
+    slli t3, t3, 3
+    add  t3, t3, t2             # used elem
+    lw   t4, 4(t3)              # head descriptor index (0..7)
+    slli t3, t4, 5
+    li   t0, VQ_MEM + 0x140
+    add  t3, t3, t0             # packet buffer
+    ld   a0, 0(t3)              # id
+    ld   t0, 8(t3)              # op
+    slli t0, t0, 32
+    or   a0, a0, t0
+    ld   a1, 16(t3)             # key
+    ld   a2, 24(t3)             # val
+    sd   a0, 40(sp)             # return a0
+    # Repost: avail.ring[idx % 8] = head; avail.idx += 1.
+    li   t0, VQ_MEM + 0x80
+    lhu  t2, 2(t0)
+    andi t3, t2, 7
+    slli t3, t3, 1
+    add  t3, t3, t0
+    sh   t4, 4(t3)
+    addi t2, t2, 1
+    sh   t2, 2(t0)
+    # cursor = (cursor + 1) & 0xffff
+    addi t1, t1, 1
+    slli t1, t1, 48
+    srli t1, t1, 48
+    li   t0, KDATA
+    sd   t1, 8(t0)
+    li   t0, VQDEV
+    sw   zero, 0x38(t0)         # INT_ACK (level-triggered completion line)
+    ld   t4, 48(sp)
+    j    k_sc_ret
+
+# vq_complete(a0 = id, a1 = resp): retire one request at the device.
+k_vq_complete:
+    li   t0, VQDEV
+    sd   a1, 0x70(t0)           # RESP
+    sw   a0, 0x78(t0)           # COMPLETE doorbell
+    j    k_sc_ret
+
+# blk_read(a0 = sector): synchronous read through the block device.
+# Returns a0 = xor-fold (8-byte lanes) of the 512-byte sector, -1 on a
+# device error. The device is re-programmed every call: it is stateless
+# between requests, so this keeps the kernel free of persistent blk state.
+k_blk_read:
+    li   t0, VBLK
+    sw   zero, 0x08(t0)         # reset
+    li   t1, 8
+    sw   t1, 0x14(t0)
+    li   t1, VQ_MEM + 0x400
+    sd   t1, 0x18(t0)
+    li   t1, VQ_MEM + 0x480
+    sd   t1, 0x20(t0)
+    li   t1, VQ_MEM + 0x4c0
+    sd   t1, 0x28(t0)
+    # Request header {type = 0 (read), sector}.
+    li   t1, VQ_MEM + 0x500
+    sd   zero, 0(t1)
+    ld   t2, 40(sp)
+    sd   t2, 8(t1)
+    # Three-descriptor chain: header -> data (W) -> status (W).
+    li   t1, VQ_MEM + 0x400
+    li   t2, VQ_MEM + 0x500
+    sd   t2, 0(t1)
+    li   t2, 16
+    sw   t2, 8(t1)
+    li   t2, 1                  # NEXT
+    sh   t2, 12(t1)
+    li   t2, 1
+    sh   t2, 14(t1)
+    li   t2, VQ_MEM + 0x600
+    sd   t2, 16(t1)
+    li   t2, 512
+    sw   t2, 24(t1)
+    li   t2, 3                  # NEXT | WRITE
+    sh   t2, 28(t1)
+    li   t2, 2
+    sh   t2, 30(t1)
+    li   t2, VQ_MEM + 0x520
+    sd   t2, 32(t1)
+    li   t2, 1
+    sw   t2, 40(t1)
+    li   t2, 2                  # WRITE
+    sh   t2, 44(t1)
+    sh   zero, 46(t1)
+    # Clear stale completion state, post, kick.
+    li   t1, VQ_MEM + 0x4c0
+    sh   zero, 2(t1)
+    li   t1, VQ_MEM + 0x480
+    sh   zero, 0(t1)
+    sh   zero, 4(t1)            # ring[0] = head 0
+    li   t2, 1
+    sh   t2, 2(t1)              # avail.idx = 1
+    li   t1, 4
+    sw   t1, 0x08(t0)           # DRIVER_OK
+    sw   zero, 0x30(t0)         # queue notify
+    li   t1, VQ_MEM + 0x4c0
+k_blk_poll:
+    lhu  t2, 2(t1)
+    beqz t2, k_blk_poll
+    sw   zero, 0x38(t0)         # INT_ACK
+    li   t1, VQ_MEM + 0x520
+    lbu  t2, 0(t1)
+    beqz t2, k_blk_ok
+    li   t1, -1
+    sd   t1, 40(sp)
+    j    k_sc_ret
+k_blk_ok:
+    li   t1, VQ_MEM + 0x600
+    li   t2, 64
+    li   t3, 0
+k_blk_fold:
+    ld   a0, 0(t1)
+    xor  t3, t3, a0
+    addi t1, t1, 8
+    addi t2, t2, -1
+    bnez t2, k_blk_fold
+    sd   t3, 40(sp)
+    j    k_sc_ret
+
+# Shared syscall epilogue: step past the ecall, return to U.
+k_sc_ret:
+    csrr t0, sepc
+    addi t0, t0, 4
+    csrw sepc, t0
+    j    k_ret
 
 k_ret:
     ld   a0, 40(sp)

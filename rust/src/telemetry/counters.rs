@@ -38,6 +38,12 @@ pub struct Counters {
     pub parks: u64,
     /// Wake-queue pops (guest made runnable again).
     pub wakes: u64,
+    /// Guest accesses to paravirtual (virtio) MMIO apertures.
+    pub mmio_accesses: u64,
+    /// Device completion lines raised into the PLIC (0→1 transitions).
+    pub irq_injects: u64,
+    /// Paravirtual requests retired (latency samples captured).
+    pub virtq_completes: u64,
 }
 
 impl Counters {
@@ -64,6 +70,9 @@ impl Counters {
             EventKind::TrapReturn { .. } => self.trap_returns += 1,
             EventKind::Park { .. } => self.parks += 1,
             EventKind::Wake { .. } => self.wakes += 1,
+            EventKind::MmioAccess { .. } => self.mmio_accesses += 1,
+            EventKind::IrqInject { .. } => self.irq_injects += 1,
+            EventKind::VirtqComplete { .. } => self.virtq_completes += 1,
         }
     }
 
@@ -86,6 +95,9 @@ impl Counters {
         self.tlb_gen_bumps += other.tlb_gen_bumps;
         self.parks += other.parks;
         self.wakes += other.wakes;
+        self.mmio_accesses += other.mmio_accesses;
+        self.irq_injects += other.irq_injects;
+        self.virtq_completes += other.virtq_completes;
     }
 
     pub fn total_vm_exits(&self) -> u64 {
@@ -108,7 +120,8 @@ impl Counters {
                 "\"world_switches\": {}, \"decisions\": {}, \"exceptions\": {}, ",
                 "\"interrupts\": {}, \"trap_returns\": {}, \"block_hits\": {}, ",
                 "\"block_builds\": {}, \"block_invalidated\": {}, \"tlb_flushes\": {}, ",
-                "\"tlb_gen_bumps\": {}, \"parks\": {}, \"wakes\": {}}}"
+                "\"tlb_gen_bumps\": {}, \"parks\": {}, \"wakes\": {}, ",
+                "\"mmio_accesses\": {}, \"irq_injects\": {}, \"virtq_completes\": {}}}"
             ),
             self.events,
             self.events_dropped,
@@ -125,6 +138,9 @@ impl Counters {
             self.tlb_gen_bumps,
             self.parks,
             self.wakes,
+            self.mmio_accesses,
+            self.irq_injects,
+            self.virtq_completes,
         )
     }
 }
@@ -181,8 +197,12 @@ mod tests {
         c.count(&EventKind::TlbFlush { flushes: 2 });
         c.count(&EventKind::Park { wake_at: None });
         c.count(&EventKind::Wake { slept_ticks: 7 });
+        c.count(&EventKind::MmioAccess { addr: 0x1000_1030, write: true });
+        c.count(&EventKind::IrqInject { irq: 8 });
+        c.count(&EventKind::VirtqComplete { id: 0, latency: 900 });
         assert_eq!((c.parks, c.wakes), (1, 1));
-        assert_eq!(c.events, 12);
+        assert_eq!((c.mmio_accesses, c.irq_injects, c.virtq_completes), (1, 1, 1));
+        assert_eq!(c.events, 15);
         assert_eq!(c.total_vm_exits(), 2);
         assert_eq!(c.vm_exits[VmExit::SliceExpired.variant()], 1);
         assert_eq!(c.vm_exits[VmExit::Fault.variant()], 1);
@@ -213,6 +233,9 @@ mod tests {
         let j = c.to_json();
         for i in 0..VmExit::VARIANTS {
             assert!(j.contains(VmExit::variant_name_of(i)), "missing {}", VmExit::variant_name_of(i));
+        }
+        for key in ["mmio_accesses", "irq_injects", "virtq_completes"] {
+            assert!(j.contains(&format!("\"{key}\": 0")), "missing counter {key}");
         }
         assert!(j.starts_with('{') && j.ends_with('}'));
     }

@@ -85,6 +85,15 @@ pub enum EventKind {
     /// Wake-queue pop: the guest became runnable again after sleeping
     /// `slept_ticks` of node time off-hart.
     Wake { slept_ticks: u64 },
+    /// Guest access to a paravirtual (virtio) MMIO aperture. UART/CLINT/
+    /// PLIC accesses are deliberately not ring-logged — they would flood
+    /// the bounded rings (DESIGN.md §22).
+    MmioAccess { addr: u64, write: bool },
+    /// A device completion line raised into the PLIC (0→1 transitions).
+    IrqInject { irq: u32 },
+    /// A paravirtual request retired: enqueue→completion latency in node
+    /// ticks.
+    VirtqComplete { id: u32, latency: u64 },
 }
 
 impl EventKind {
@@ -103,6 +112,9 @@ impl EventKind {
             EventKind::TrapReturn { .. } => "trap_return",
             EventKind::Park { .. } => "park",
             EventKind::Wake { .. } => "wake",
+            EventKind::MmioAccess { .. } => "mmio_access",
+            EventKind::IrqInject { .. } => "irq_inject",
+            EventKind::VirtqComplete { .. } => "virtq_complete",
         }
     }
 
@@ -144,6 +156,13 @@ impl EventKind {
                 None => "\"wake_at\": null".to_string(),
             },
             EventKind::Wake { slept_ticks } => format!("\"slept_ticks\": {slept_ticks}"),
+            EventKind::MmioAccess { addr, write } => {
+                format!("\"addr\": {addr}, \"write\": {write}")
+            }
+            EventKind::IrqInject { irq } => format!("\"irq\": {irq}"),
+            EventKind::VirtqComplete { id, latency } => {
+                format!("\"id\": {id}, \"latency\": {latency}")
+            }
         }
     }
 }
@@ -388,6 +407,9 @@ mod tests {
             EventKind::TrapReturn { to: "VU" },
             EventKind::Park { wake_at: Some(500) },
             EventKind::Wake { slept_ticks: 400 },
+            EventKind::MmioAccess { addr: 0x1000_1030, write: true },
+            EventKind::IrqInject { irq: 8 },
+            EventKind::VirtqComplete { id: 3, latency: 1234 },
         ];
         let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
         assert_eq!(
@@ -395,7 +417,7 @@ mod tests {
             [
                 "vm_exit", "switch_in", "switch_out", "decision", "block_build",
                 "block_invalidate", "tlb_flush", "tlb_gen_bump", "trap_enter", "trap_return",
-                "park", "wake"
+                "park", "wake", "mmio_access", "irq_inject", "virtq_complete"
             ]
         );
         for k in &kinds {

@@ -646,6 +646,12 @@ impl VmmScheduler {
             }
             self.switch.half_switches += 1;
             self.switch.switch_host_ns += t0.elapsed().as_nanos();
+            // Paravirtual devices service requests on the node timeline:
+            // base + sim_ticks is this hart's local time while the guest
+            // is resident (the same mapping the telemetry tick base uses),
+            // so open-loop arrivals and request latencies are measured in
+            // shared node time, not guest virtual time.
+            mc.bus.node_tick_base = start - mc.stats.sim_ticks;
             // Retag the telemetry context at the resident guest. The tick
             // base maps the guest's private sim_ticks onto the node
             // timeline: base + sim_ticks == the hart's local time right
@@ -776,6 +782,10 @@ impl VmmScheduler {
             }
             let tel = m.telemetry.take();
             world_swap(m, &mut self.guests[idx]);
+            // The credit burn replays node time [parked_at, wake_at); keep
+            // the device timebase aligned so any service during the burn
+            // stamps node ticks, exactly as a scheduled slice would.
+            m.bus.node_tick_base = p.parked_at - m.stats.sim_ticks;
             if p.credit > 0 {
                 let _ = Vcpu::run(m, RunBudget::ticks(p.credit));
             }

@@ -20,6 +20,7 @@ fn spec(nodes: usize, guests: usize, threads: usize) -> FleetSpec {
         sched: SchedKind::RoundRobin,
         benches: vec!["bitcount".into(), "stringsearch".into()],
         scale: 1,
+        rate: 1_000_000,
         ram_bytes: RAM,
         max_node_ticks: 8_000_000_000,
         tlb_sets: 64,
@@ -121,6 +122,73 @@ fn slo_fleet_passes_with_p99_no_worse_than_round_robin() {
     let rr_p50 = rr.latency_percentile(0.50).unwrap();
     let slo_p50 = slo.latency_percentile(0.50).unwrap();
     assert!(slo_p50 <= rr_p50, "slo p50 {slo_p50} regressed past round-robin {rr_p50}");
+}
+
+#[test]
+fn request_serving_fleet_latencies_thread_and_engine_independent() {
+    // The paravirtual-I/O tentpole end-to-end: a kv+echo mix served by
+    // hypervisor guests behind G-stage-translated rings, with open-loop
+    // arrivals in node time. Consoles must match the solo oracle, every
+    // request must validate, and the per-request latency vectors must be
+    // bit-identical across host thread counts and execution engines —
+    // arrivals are scheduled on the node timeline, so host-side sharding
+    // and engine choice may only change wall-clock time.
+    let mk = |threads: usize, engine: hvsim::sim::EngineKind| {
+        let mut s = spec(2, 2, threads);
+        s.benches = vec!["kvstore".into(), "echo".into()];
+        s.engine = engine;
+        s
+    };
+    let base_engine = hvsim::sim::EngineKind::default();
+    let solos = solo_digests(&mk(1, base_engine)).unwrap();
+    let mut keys: Vec<Vec<(usize, usize, hvsim::util::ConsoleDigest, Vec<u64>)>> = Vec::new();
+    for (threads, engine) in
+        [(1, base_engine), (2, base_engine), (4, base_engine), (1, base_engine.other())]
+    {
+        let r = run_fleet(&mk(threads, engine)).unwrap();
+        assert!(r.all_passed(), "{threads}-thread {} fleet failed", engine.name());
+        let bad = console_mismatches(&r, &solos);
+        assert!(bad.is_empty(), "{threads}-thread {} mismatches: {bad:?}", engine.name());
+        assert!(r.requests_completed() > 0, "request workloads must serve requests");
+        assert_eq!(r.request_errors(), 0, "every response must validate");
+        assert_eq!(
+            r.request_latencies().len() as u64,
+            r.requests_completed(),
+            "one latency sample per served request"
+        );
+        let (p50, p99) = (r.request_percentile(0.50).unwrap(), r.request_percentile(0.99).unwrap());
+        assert!(p50 <= p99);
+        keys.push(
+            r.guests()
+                .map(|g| (g.node, g.id, g.console.clone(), g.req_latencies.clone()))
+                .collect(),
+        );
+    }
+    assert_eq!(keys[0], keys[1], "1-thread vs 2-thread request latencies diverged");
+    assert_eq!(keys[0], keys[2], "1-thread vs 4-thread request latencies diverged");
+    assert_eq!(keys[0], keys[3], "block vs tick engine request latencies diverged");
+}
+
+#[test]
+fn request_rate_shapes_latency_not_content() {
+    // Open-loop arrivals: halving the offered rate must not change what
+    // the guests compute (console digests pinned to the solo oracle at
+    // the same rate) but does change when requests arrive — the latency
+    // vectors are allowed to differ, the request *count* is not.
+    let mut fast = spec(1, 2, 1);
+    fast.benches = vec!["kvstore".into(), "echo".into()];
+    let mut slow = fast.clone();
+    slow.rate = fast.rate / 2;
+    let rf = run_fleet(&fast).unwrap();
+    let rs = run_fleet(&slow).unwrap();
+    assert!(rf.all_passed() && rs.all_passed());
+    assert_eq!(rf.requests_completed(), rs.requests_completed(), "same request stream");
+    assert_eq!(rf.request_errors() + rs.request_errors(), 0);
+    // Consoles checksum the response stream, which is schedule-independent
+    // by design: both rates must produce identical guest output.
+    let digests_fast: Vec<_> = rf.guests().map(|g| g.console.clone()).collect();
+    let digests_slow: Vec<_> = rs.guests().map(|g| g.console.clone()).collect();
+    assert_eq!(digests_fast, digests_slow, "arrival rate leaked into guest-visible content");
 }
 
 #[test]

@@ -68,6 +68,74 @@ fn plic_supervisor_context_drives_seip() {
 }
 
 #[test]
+fn plic_priority_tie_resolves_to_lowest_source_across_claim_complete() {
+    // Two sources at equal priority: best() uses strict '>', so the tie
+    // goes to the lowest source id, deterministically. The claim-register
+    // MMIO *read* is side-effect-free (repeated reads return the same
+    // source); the actual claim masks the winner so the runner-up becomes
+    // claimable next, and completion re-arms the source.
+    let mut m = Machine::new(1 << 20, true);
+    let p = &mut m.bus.plic;
+    p.write(7 * 4, 2); // priority[7] = 2
+    p.write(9 * 4, 2); // priority[9] = 2 — tie
+    p.write(0x2000, (1 << 7) | (1 << 9)); // M-context enables
+    p.raise(9); // raise order must not matter
+    p.raise(7);
+    assert_eq!(p.read(0x20_0000 + 4), 7, "tie resolves to the lowest source");
+    assert_eq!(p.read(0x20_0000 + 4), 7, "claim-register read must not latch");
+    assert_eq!(p.irq_lines(), (true, false));
+    assert_eq!(p.claim(0), 7);
+    assert_eq!(p.read(0x20_0000 + 4), 9, "runner-up surfaces once the winner is claimed");
+    assert_eq!(p.claim(0), 9);
+    assert_eq!(p.irq_lines(), (false, false), "both claimed: line drops");
+    // Complete out of claim order; the sources become claimable again.
+    p.write(0x20_0000 + 4, 9);
+    p.write(0x20_0000 + 4, 7);
+    p.raise(7);
+    p.raise(9);
+    assert_eq!(p.claim(0), 7, "completion re-arms the tie, lowest still wins");
+}
+
+#[test]
+fn clint_mtimecmp_split_word_rewrite_while_parked_wakes_machine() {
+    // Park the hart in WFI against a far-future deadline, then re-aim
+    // mtimecmp with two 32-bit MMIO halves (the sequence a 32-bit OS
+    // would use) while the hart is asleep. The wake must happen at the
+    // *new* deadline — a rewrite the parked fast-forward path must see.
+    let src = r#"
+        la   t0, handler
+        csrw mtvec, t0
+        li   t0, 0x2000000 + 0x4000
+        li   t1, -1              # mtimecmp = u64::MAX (never)
+        sd   t1, 0(t0)
+        li   t0, 1 << 7          # MTIE
+        csrw mie, t0
+        csrsi mstatus, 8         # MIE
+        wfi
+    spin:
+        j    spin
+    .align 2
+    handler:
+        li   t0, 0x100000
+        li   t1, 0x5555
+        sw   t1, 0(t0)
+    1:  j 1b
+    "#;
+    let mut m = boot(src, true);
+    assert_eq!(m.run(2_000), ExitReason::Limit);
+    assert!(m.core.hart.wfi, "hart must be parked against the far deadline");
+    // Split-word rewrite: low half first (briefly makes the compare value
+    // small-but-future), then the high half. Target: mtime + 400.
+    let target = m.bus.clint.mtime + 400;
+    m.bus.clint.write(0x4000, 4, target & 0xffff_ffff);
+    m.bus.clint.write(0x4004, 4, target >> 32);
+    assert_eq!(m.bus.clint.mtimecmp, target, "split halves compose the full compare");
+    assert_eq!(m.run(1_000_000), ExitReason::PowerOff(SYSCON_PASS), "rewrite woke the hart");
+    assert!(m.bus.clint.mtime >= target, "wake landed at or after the new deadline");
+    assert_eq!(m.core.hart.csr.mcause, 7 | (1 << 63), "MTI cause");
+}
+
+#[test]
 fn counters_readable_from_u_with_full_enable_chain() {
     // M code sets mcounteren+scounteren, drops to U; U reads cycle/instret.
     let src = r#"

@@ -21,6 +21,7 @@ fn spec(threads: usize, ring_cap: usize) -> FleetSpec {
         sched: SchedKind::RoundRobin,
         benches: vec!["bitcount".into(), "stringsearch".into()],
         scale: 1,
+        rate: 1_000_000,
         ram_bytes: RAM,
         max_node_ticks: 8_000_000_000,
         tlb_sets: 64,
@@ -291,6 +292,46 @@ fn jsonl_is_one_valid_object_per_ring_event() {
     let c = telemetry::counters::merge_all(&nodes);
     assert!(lines > 0);
     assert_eq!(lines, c.events - c.events_dropped, "one line per ring-resident event");
+}
+
+#[test]
+fn device_events_flow_through_every_exporter() {
+    // Request-serving fleet (DESIGN.md §22): the paravirtual-device event
+    // species must reach all three exporters with their pinned names, and
+    // the device counters must land in the metrics snapshot. virtq
+    // completions in the ring must equal the requests the fleet served —
+    // the device events are the same population the latency report counts.
+    let mut s = spec(1, 1 << 16);
+    s.benches = vec!["kvstore".into(), "echo".into()];
+    let r = run_fleet(&s).unwrap();
+    assert!(r.all_passed(), "request fleet failed");
+    assert!(r.requests_completed() > 0);
+    let c = r.merged_counters().unwrap();
+    assert!(c.mmio_accesses > 0, "driver register traffic must be counted");
+    assert!(c.irq_injects > 0, "completion interrupts must be counted");
+    assert_eq!(
+        c.virtq_completes,
+        r.requests_completed(),
+        "one virtq_complete event per served request"
+    );
+
+    let nodes = tnodes(&r);
+    let jsonl = telemetry::write_jsonl(&nodes);
+    for name in ["mmio_access", "irq_inject", "virtq_complete"] {
+        assert!(
+            jsonl.contains(&format!("\"name\": \"{name}\"")),
+            "JSONL stream is missing {name} events"
+        );
+    }
+    assert!(jsonl.contains("\"latency\": "), "virtq_complete lines carry the latency");
+    let chrome = telemetry::chrome::chrome_trace(&nodes);
+    assert!(json_valid(&chrome));
+    assert!(chrome.contains("\"name\": \"virtq_complete\""));
+    let metrics = telemetry::counters::metrics_json(&nodes);
+    assert!(json_valid(&metrics));
+    for key in ["mmio_accesses", "irq_injects", "virtq_completes"] {
+        assert!(metrics.contains(&format!("\"{key}\": ")), "metrics snapshot missing {key}");
+    }
 }
 
 // -------------------------------------------------------------- bounding
