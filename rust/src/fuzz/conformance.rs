@@ -1,0 +1,81 @@
+//! riscv-tests-style conformance suite runner for the H-extension surface.
+//!
+//! Each suite is a self-checking assembly program (see
+//! `src/sw/asm/conformance/`) that runs from M mode, exercises one slice of
+//! the hypervisor-extension semantics, and reports through the syscon
+//! device: `SYSCON_PASS` on success, anything else on failure. Suites use
+//! only the assembler dialect shared with `tools/crosscheck/asm2ir.py`, so
+//! the same sources also run under the Python oracle
+//! (`tools/crosscheck/run_conformance.py`) — three implementations, one
+//! program text.
+
+use super::{run_program, Engine};
+use crate::mem::SYSCON_PASS;
+
+/// All conformance suites, in run order.
+pub const SUITES: &[(&str, &str)] = &[
+    ("hlv_hsv", include_str!("../sw/asm/conformance/hlv_hsv.s")),
+    ("hlvx_xo", include_str!("../sw/asm/conformance/hlvx_xo.s")),
+    ("mxr_two_stage", include_str!("../sw/asm/conformance/mxr_two_stage.s")),
+    ("hfence", include_str!("../sw/asm/conformance/hfence.s")),
+    ("trap_csrs", include_str!("../sw/asm/conformance/trap_csrs.s")),
+    ("vs_traps", include_str!("../sw/asm/conformance/vs_traps.s")),
+    ("harness_smoke", include_str!("../sw/asm/conformance/harness_smoke.s")),
+];
+
+pub struct SuiteResult {
+    pub name: &'static str,
+    pub engine: Engine,
+    pub pass: bool,
+    pub retired: u64,
+    pub detail: String,
+}
+
+pub fn run_suite(name: &'static str, src: &str, engine: Engine) -> SuiteResult {
+    match run_program(src, engine, 2_000_000) {
+        Ok(run) => SuiteResult {
+            name,
+            engine,
+            pass: run.poweroff == Some(SYSCON_PASS),
+            retired: run.retired,
+            detail: match run.poweroff {
+                Some(SYSCON_PASS) => String::new(),
+                Some(code) => format!("syscon reported {code:#x}"),
+                None => "no poweroff within instruction cap".to_string(),
+            },
+        },
+        Err(e) => SuiteResult { name, engine, pass: false, retired: 0, detail: e },
+    }
+}
+
+/// Run every suite (optionally filtered by name) under `engine`.
+pub fn run_all(filter: Option<&str>, engine: Engine) -> Vec<SuiteResult> {
+    SUITES
+        .iter()
+        .filter(|(name, _)| match filter {
+            Some(f) => *name == f,
+            None => true,
+        })
+        .map(|(name, src)| run_suite(name, src, engine))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_suites_pass_on_both_engines() {
+        for engine in [Engine::Tick, Engine::Block] {
+            for r in run_all(None, engine) {
+                assert!(
+                    r.pass,
+                    "conformance suite {} failed on {} engine: {}",
+                    r.name,
+                    r.engine.name(),
+                    r.detail
+                );
+            }
+        }
+    }
+}

@@ -27,6 +27,12 @@
 //!   timelines, per-node hypervisor counters merged at fleet join, and
 //!   the Chrome-trace / JSONL / metrics exporters (default-off; one
 //!   branch on a niche-packed `Option` when disabled).
+//! - [`fuzz`]: the lockstep differential fuzzer — a deterministic
+//!   generator of self-assembled RV64+H instruction streams, a
+//!   dual-engine (tick/block) runner emitting sync/trap/final records for
+//!   comparison against the Python oracle in `tools/crosscheck`, and the
+//!   riscv-tests-style H-conformance suite runner (`hvsim fuzz`,
+//!   `hvsim conform`).
 //! - [`util`]: dependency-free SHA-256 and the console-digest type.
 //! - [`trace`], [`runtime`]: trace capture and the PJRT-loaded XLA timing
 //!   model (Layer 2/1 artifacts).
@@ -39,6 +45,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod dev;
 pub mod fleet;
+pub mod fuzz;
 pub mod isa;
 pub mod mem;
 pub mod mmu;

@@ -18,6 +18,9 @@
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
 //! hvsim boot  [--config FILE]
+//! hvsim fuzz  [--seed S] [--insts N] [--engine block|tick] [--selfcheck]
+//!             [--prog FILE] [--prog-out FILE] [--trace-out FILE]
+//! hvsim conform [--engine block|tick|both] [--suite NAME]
 //! hvsim list
 //! ```
 //!
@@ -51,7 +54,7 @@ impl Args {
                 bail!("unexpected argument '{a}'");
             };
             // boolean flags
-            if matches!(name, "vm" | "stats" | "echo" | "trace") {
+            if matches!(name, "vm" | "stats" | "echo" | "trace" | "selfcheck") {
                 flags.insert(name.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -735,6 +738,94 @@ fn cmd_boot(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use hvsim::fuzz::{self, Engine};
+    let seed = args.u64("seed")?.unwrap_or(1);
+    let insts = args.u64("insts")?.unwrap_or(100_000);
+    let engine = match args.get("engine") {
+        None => Engine::Block,
+        Some(s) => Engine::parse(s).with_context(|| format!("--engine {s}: expected tick|block"))?,
+    };
+    let src = match args.get("prog") {
+        Some(path) => std::fs::read_to_string(path).with_context(|| format!("--prog {path}"))?,
+        None => fuzz::generate_program(seed, insts),
+    };
+    if let Some(path) = args.get("prog-out") {
+        std::fs::write(path, &src).with_context(|| format!("--prog-out {path}"))?;
+    }
+    // The retired-instruction cap leaves generous room for trap handlers
+    // and the loop tail beyond the requested body volume.
+    let cap = insts.saturating_mul(6).saturating_add(500_000);
+    if args.has("selfcheck") {
+        match fuzz::selfcheck(&src, cap) {
+            Ok((tick, block)) => {
+                println!(
+                    "selfcheck ok: tick and block agree over {} retired insts ({} traps, {} sync records)",
+                    tick.retired,
+                    tick.traps.len(),
+                    block.syncs.len()
+                );
+                return Ok(());
+            }
+            Err(e) => {
+                eprintln!("selfcheck DIVERGENCE (seed={seed}): {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let run = fuzz::run_program(&src, engine, cap).map_err(|e| anyhow::anyhow!(e))?;
+    let trace = fuzz::trace_jsonl(&run);
+    match args.get("trace-out") {
+        Some(path) => std::fs::write(path, trace).with_context(|| format!("--trace-out {path}"))?,
+        None => print!("{trace}"),
+    }
+    if run.poweroff.is_none() {
+        bail!(
+            "fuzz program did not power off within {cap} insts (retired {}) — likely a generator or engine bug",
+            run.retired
+        );
+    }
+    eprintln!(
+        "fuzz seed={seed} engine={} retired={} traps={} syncs={}",
+        engine.name(),
+        run.retired,
+        run.traps.len(),
+        run.syncs.len()
+    );
+    Ok(())
+}
+
+fn cmd_conform(args: &Args) -> Result<()> {
+    use hvsim::fuzz::{conformance, Engine};
+    let engines = match args.get("engine") {
+        None | Some("both") => vec![Engine::Tick, Engine::Block],
+        Some(s) => {
+            vec![Engine::parse(s).with_context(|| format!("--engine {s}: expected tick|block|both"))?]
+        }
+    };
+    let filter = args.get("suite");
+    let (mut total, mut failed) = (0usize, 0usize);
+    for engine in engines {
+        for r in conformance::run_all(filter, engine) {
+            total += 1;
+            if r.pass {
+                println!("PASS {} ({}, {} insts)", r.name, r.engine.name(), r.retired);
+            } else {
+                failed += 1;
+                println!("FAIL {} ({}): {}", r.name, r.engine.name(), r.detail);
+            }
+        }
+    }
+    if total == 0 {
+        bail!("no conformance suite named {:?}", filter.unwrap_or("?"));
+    }
+    if failed > 0 {
+        bail!("{failed} of {total} conformance run(s) failed");
+    }
+    println!("all {total} conformance runs passed");
+    Ok(())
+}
+
 fn usage() -> ! {
     eprintln!(
         "hvsim — gem5-style RISC-V simulator with the H extension\n\
@@ -743,7 +834,9 @@ fn usage() -> ! {
          hvsim vmm   [--guests N] [--harts H] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
          hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T] [--bench A,B] [--workload kv|echo] [--rate R] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [--requests-out F] [telemetry]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
-         hvsim boot  [--bench NAME]\n  hvsim list\n\
+         hvsim boot  [--bench NAME]\n  \
+         hvsim fuzz  [--seed S] [--insts N] [--engine block|tick] [--selfcheck] [--prog FILE] [--prog-out FILE] [--trace-out FILE]\n  \
+         hvsim conform [--engine block|tick|both] [--suite NAME]\n  hvsim list\n\
          telemetry: [--trace-out chrome.json] [--metrics-out metrics.json] [--events-out events.jsonl]"
     );
     std::process::exit(2);
@@ -760,6 +853,8 @@ fn main() -> Result<()> {
         "fleet" => cmd_fleet(&args),
         "timing" => cmd_timing(&args),
         "boot" => cmd_boot(&args),
+        "fuzz" => cmd_fuzz(&args),
+        "conform" => cmd_conform(&args),
         "list" => {
             for b in sw::BENCHMARKS {
                 println!("{b}");

@@ -87,11 +87,20 @@ pub enum FaultStage {
 /// Permission context for a check: effective privilege is U or S;
 /// SUM/MXR come from the stage-appropriate status register (vsstatus when
 /// V=1 — paper §3.5 challenge 2 analog for memory).
+///
+/// The two MXR fields follow the privileged spec's two-stage rule: when
+/// V=1, `mstatus.MXR` makes executable pages readable at *either* stage,
+/// while `vsstatus.MXR` affects only the VS-stage check. `mxr` is the
+/// stage-1 disjunction (vsstatus.MXR || mstatus.MXR when V=1, plain
+/// mstatus.MXR otherwise); `mxr2` is mstatus.MXR alone and is consulted
+/// only by the G-stage check.
 #[derive(Clone, Copy, Debug)]
 pub struct PermCtx {
     pub user: bool,
     pub sum: bool,
     pub mxr: bool,
+    /// mstatus.MXR alone — the only MXR bit that applies at the G stage.
+    pub mxr2: bool,
     pub hlvx: bool,
 }
 
@@ -142,9 +151,11 @@ pub fn check_permissions(e: &TlbEntry, access: Access, ctx: PermCtx) -> Result<(
             Access::Execute => g & pte::X != 0,
             Access::Read => {
                 if ctx.hlvx {
+                    // HLVX requires execute permission at both stages,
+                    // regardless of either MXR bit.
                     g & pte::X != 0
                 } else {
-                    g & pte::R != 0
+                    g & pte::R != 0 || (ctx.mxr2 && g & pte::X != 0)
                 }
             }
             Access::Write => g & pte::W != 0,
@@ -562,7 +573,7 @@ mod tests {
 
     #[test]
     fn perm_check_stage1_vs_stage2() {
-        let ctx = PermCtx { user: false, sum: false, mxr: false, hlvx: false };
+        let ctx = PermCtx { user: false, sum: false, mxr: false, mxr2: false, hlvx: false };
         let mut e = guest_entry(1, 0, 0);
         assert!(check_permissions(&e, Access::Read, ctx).is_ok());
         // Remove W from VS stage → stage-1 fault (page fault).
@@ -579,19 +590,19 @@ mod tests {
         let mut e = native_entry(1, 0);
         e.vs_perms = pte::V | pte::U | pte::R | pte::A | pte::D;
         // S-mode on U page without SUM → fault; with SUM → ok.
-        let s = PermCtx { user: false, sum: false, mxr: false, hlvx: false };
+        let s = PermCtx { user: false, sum: false, mxr: false, mxr2: false, hlvx: false };
         assert_eq!(check_permissions(&e, Access::Read, s), Err(FaultStage::Vs));
         let s_sum = PermCtx { sum: true, ..s };
         assert!(check_permissions(&e, Access::Read, s_sum).is_ok());
         // MXR: execute-only page readable.
         e.vs_perms = pte::V | pte::X | pte::A;
-        let m = PermCtx { user: false, sum: false, mxr: true, hlvx: false };
+        let m = PermCtx { user: false, sum: false, mxr: true, mxr2: false, hlvx: false };
         assert!(check_permissions(&e, Access::Read, m).is_ok());
         let nm = PermCtx { mxr: false, ..m };
         assert_eq!(check_permissions(&e, Access::Read, nm), Err(FaultStage::Vs));
         // HLVX requires X instead of R.
         e.vs_perms = pte::V | pte::R | pte::A;
-        let hx = PermCtx { user: false, sum: false, mxr: false, hlvx: true };
+        let hx = PermCtx { user: false, sum: false, mxr: false, mxr2: false, hlvx: true };
         assert_eq!(check_permissions(&e, Access::Read, hx), Err(FaultStage::Vs));
         e.vs_perms = pte::V | pte::X | pte::A;
         assert!(check_permissions(&e, Access::Read, hx).is_ok());
@@ -599,7 +610,7 @@ mod tests {
 
     #[test]
     fn svade_a_d_faults() {
-        let ctx = PermCtx { user: false, sum: false, mxr: false, hlvx: false };
+        let ctx = PermCtx { user: false, sum: false, mxr: false, mxr2: false, hlvx: false };
         let mut e = native_entry(1, 0);
         e.vs_perms = pte::V | pte::R | pte::W; // no A/D
         assert_eq!(check_permissions(&e, Access::Read, ctx), Err(FaultStage::Vs));

@@ -147,7 +147,11 @@ fn check_entry(ctx: &TranslateCtx, entry: &TlbEntry, va: u64) -> Result<(), Exce
     // HLV/HSV with SPVP=1 behave as if SUM=1 (privileged spec: the
     // hypervisor may reach guest user pages through explicit accesses).
     let sum = sum || ctx.flags.forced_virt;
-    let pc = PermCtx { user: ctx.prv == PrivLevel::User, sum, mxr, hlvx: ctx.flags.hlvx };
+    // G-stage MXR: only mstatus.MXR makes executable G-stage pages
+    // readable; vsstatus.MXR is a pure VS-stage knob (priv. spec two-stage
+    // rule — the stage-1 disjunction above must not leak into stage 2).
+    let mxr2 = ctx.csr.mstatus & mstatus::MXR != 0;
+    let pc = PermCtx { user: ctx.prv == PrivLevel::User, sum, mxr, mxr2, hlvx: ctx.flags.hlvx };
     match check_permissions(entry, ctx.access, pc) {
         Ok(()) => Ok(()),
         Err(FaultStage::Vs) => Err(ctx.stage1_fault(va)),

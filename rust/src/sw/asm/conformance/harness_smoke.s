@@ -1,0 +1,252 @@
+# H-extension conformance: fuzzer-harness smoke test.
+#
+# A hand-written program shaped exactly like the ones the lockstep fuzzer
+# generator (rust/src/fuzz) emits: same page-table world, same promote/skip
+# trap handlers, same mode-entry gadgets. It tours M -> S -> VS -> U -> VU
+# using the +1G user alias window, patches a live PTE under all three
+# fences, and rewrites code bytes in place (self-modifying store +
+# fence.i). If this passes on the tick engine, the block engine, and the
+# Python oracle, the generated streams stand on validated ground.
+# Reports through syscon: 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ PASSV,    0x5555
+.equ FAILV,    0x3333
+.equ SROOT,    0x80400000
+.equ SL1,      0x80410000
+.equ VSROOT,   0x80420000
+.equ VSL1,     0x80430000
+.equ GROOT,    0x80440000
+.equ GL1,      0x80480000
+.equ DATA,     0x80600000
+.equ ALIAS,    0x40000000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+    la x31, s_handler
+    csrw stvec, x31
+    la x31, s_handler
+    csrw vstvec, x31
+
+    # HS stage 1: identity S code (root[2]), user alias at +1G (root[3]),
+    # low window VA 0x200000 -> DATA via SL1.
+    li x29, SROOT
+    li x31, 0x20104001              # table -> SL1
+    sd x31, 0(x29)
+    li x29, (SROOT + 16)
+    li x31, 0x200000CF              # 1G leaf -> 0x80000000, RWX+AD
+    sd x31, 0(x29)
+    li x29, (SROOT + 24)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, (SL1 + 8)
+    li x31, 0x201800DF              # VA 0x200000 -> DATA, RWXU+AD
+    sd x31, 0(x29)
+    # VS stage 1: same shape, low window mapping to GPA 0x200000.
+    li x29, VSROOT
+    li x31, 0x2010C001              # table -> VSL1
+    sd x31, 0(x29)
+    li x29, (VSROOT + 16)
+    li x31, 0x200000CF
+    sd x31, 0(x29)
+    li x29, (VSROOT + 24)
+    li x31, 0x200000DF
+    sd x31, 0(x29)
+    li x29, (VSL1 + 8)
+    li x31, 0x800DF                 # VA 0x200000 -> GPA 0x200000, RWXU+AD
+    sd x31, 0(x29)
+    # G stage: identity 1G + GPA 0x200000 -> DATA.
+    li x29, GROOT
+    li x31, 0x20120001              # table -> GL1
+    sd x31, 0(x29)
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF
+    sd x31, 0(x29)
+    li x29, (GL1 + 8)
+    li x31, 0x201800DF              # GPA 0x200000 -> DATA, RWXU+AD
+    sd x31, 0(x29)
+    li x29, 0x8000000000080400
+    csrw satp, x29
+    li x29, 0x8000000000080420
+    csrw vsatp, x29
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    sfence.vma
+    hfence.vvma
+    hfence.gvma
+
+    # Tour marker, seeded from M through the identity mapping.
+    li x5, DATA
+    li x6, 0x11110001
+    sw x6, 0(x5)
+    li x7, 0x200000
+
+    # --- leg 1: HS-mode, satp live, SUM for the U=1 low window ---------
+    la x31, s_leg
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrc mstatus, x29               # MPV = 0
+    mret
+s_leg:
+    li x29, 0x40000
+    csrs sstatus, x29               # SUM
+    lw x10, 0(x7)
+    bne x10, x6, fail
+    li x6, 0x22220002
+    sw x6, 0(x7)
+    ecall                           # back to M
+
+    # --- leg 2: VS-mode through both stages, plus self-modifying code --
+    la x31, vs_leg
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrs mstatus, x29               # MPV = 1
+    mret
+vs_leg:
+    li x29, 0x40000
+    csrs sstatus, x29               # redirects to vsstatus.SUM
+    lw x10, 0(x7)
+    bne x10, x6, fail
+    li x6, 0x33330003
+    sw x6, 0(x7)
+    # SMC gadget exactly as the generator emits it: reload the next
+    # instructions' own bytes and store them back, then fence.i.
+    la x29, smc_site
+    ld x31, 0(x29)
+    sd x31, 0(x29)
+    fence.i
+smc_site:
+    nop
+    nop
+    ecall                           # back to M
+
+    # --- leg 3: bare-metal U via the +1G alias window ------------------
+    la x31, u_leg
+    li x29, ALIAS
+    add x31, x31, x29
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29               # MPP = U
+    li x29, 0x8000000000
+    csrc mstatus, x29               # MPV = 0
+    mret
+u_leg:
+    lw x10, 0(x7)
+    bne x10, x6, fail
+    li x6, 0x44440004
+    sw x6, 0(x7)
+    ecall                           # promote masks the alias back off
+
+    # --- leg 4: VU via the alias window, two-stage all the way ---------
+    la x31, vu_leg
+    li x29, ALIAS
+    add x31, x31, x29
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29               # MPP = U
+    li x29, 0x8000000000
+    csrs mstatus, x29               # MPV = 1
+    mret
+vu_leg:
+    lw x10, 0(x7)
+    bne x10, x6, fail
+    li x6, 0x55550005
+    sw x6, 0(x7)
+    ecall
+
+    # --- leg 5: live PTE rewrite under the full fence set --------------
+    # Demote the low window to read-only+U; an S store must then fault 15.
+    li x29, (SL1 + 8)
+    li x31, 0x20180053              # VA 0x200000 -> DATA, RU+A
+    sd x31, 0(x29)
+    sfence.vma
+    hfence.vvma
+    hfence.gvma
+    la x31, s2_leg
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrc mstatus, x29               # MPV = 0
+    li x28, 0
+    mret
+s2_leg:
+    lw x10, 0(x7)                   # still readable
+    bne x10, x6, fail
+    sw x6, 0(x7)                    # cause 15; handler skips it
+    li x29, 15
+    bne x28, x29, fail
+    bne x27, x7, fail
+    ecall                           # back to M
+
+    # --- leg 6: one loop iteration, generator tail shape ---------------
+    li x30, 2
+tour_loop:
+    addi x30, x30, -1
+    beqz x30, tour_done
+    j tour_loop
+tour_done:
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, PASSV
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, FAILV
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+m_handler:
+    csrr x31, mcause
+    addi x31, x31, -8
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -9
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -10
+    beqz x31, m_promote
+    csrr x28, mcause
+    csrr x27, mtval
+    csrr x26, mstatus
+    csrr x25, mtval2
+    csrr x24, mtinst
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret
+m_promote:
+    csrr x31, mepc
+    addi x31, x31, 4
+    slli x31, x31, 34
+    srli x31, x31, 34
+    li x29, 0x80000000
+    or x31, x31, x29
+    jr x31
+
+# Delegated-trap handler (unused here: medeleg/hedeleg stay 0), kept to
+# match the generated-program shape, stray-fall guard included.
+s_handler:
+    csrr x31, sepc
+    addi x31, x31, 4
+    csrw sepc, x31
+    sret
+    ecall
+    j fail

@@ -1,0 +1,133 @@
+# H-extension conformance: HFENCE.GVMA / HFENCE.VVMA visibility.
+#
+# Rewrites live stage-2 and stage-1 PTEs and checks the new mappings are
+# observed after the corresponding fence. On the Rust side this exercises
+# the TLB and block-cache invalidation paths; the Python oracle walks
+# tables on every access, so any stale-translation bug shows up as a
+# divergence between the implementations running this same text.
+# Reports through syscon: 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ PASSV,    0x5555
+.equ FAILV,    0x3333
+.equ VSROOT,   0x80420000
+.equ VSL1,     0x80430000
+.equ GROOT,    0x80440000
+.equ GL1,      0x80480000
+.equ PA_A,     0x80600000
+.equ PA_B,     0x80200000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+
+    # G stage: identity 1G + GPA 0x200000 -> PA_A.
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, GROOT
+    li x31, 0x20120001              # table -> GL1
+    sd x31, 0(x29)
+    li x29, (GL1 + 8)
+    li x31, 0x201800DF              # GPA 0x200000 -> PA_A, RWXU+AD
+    sd x31, 0(x29)
+    # VS stage 1: identity guest-S code + VA 0x200000 -> GPA 0x200000.
+    li x29, (VSROOT + 16)
+    li x31, 0x200000CF              # 1G leaf -> 0x80000000, RWX+AD
+    sd x31, 0(x29)
+    li x29, VSROOT
+    li x31, 0x2010C001              # table -> VSL1
+    sd x31, 0(x29)
+    li x29, (VSL1 + 8)
+    li x31, 0x800DF                 # VA 0x200000 -> GPA 0x200000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    li x29, 0x8000000000080420
+    csrw vsatp, x29
+    hfence.gvma
+    hfence.vvma
+
+    # Distinct words behind the two physical frames.
+    li x5, PA_A
+    li x6, 0x5AAA1111
+    sw x6, 0(x5)
+    li x5, PA_B
+    li x7, 0x3BBB2222
+    sw x7, 0(x5)
+
+    li x5, 0x200000
+
+    # 1) the fresh tables resolve VA 0x200000 to PA_A.
+    li x28, 0
+    hlv.w x10, (x5)
+    bnez x28, fail
+    bne x10, x6, fail
+
+    # 2) remap GPA 0x200000 -> PA_B, hfence.gvma: new frame visible.
+    li x29, (GL1 + 8)
+    li x31, 0x200800DF              # GPA 0x200000 -> PA_B, RWXU+AD
+    sd x31, 0(x29)
+    hfence.gvma
+    li x28, 0
+    hlv.w x10, (x5)
+    bnez x28, fail
+    bne x10, x7, fail
+
+    # 3) remap VA 0x200000 -> GPA 0x400000 at stage 1 and point GPA
+    #    0x400000 back at PA_A; hfence.vvma + hfence.gvma.
+    li x29, (VSL1 + 8)
+    li x31, 0x1000DF                # VA 0x200000 -> GPA 0x400000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, (GL1 + 16)
+    li x31, 0x201800DF              # GPA 0x400000 -> PA_A, RWXU+AD
+    sd x31, 0(x29)
+    hfence.vvma
+    hfence.gvma
+    li x28, 0
+    hlv.w x10, (x5)
+    bnez x28, fail
+    bne x10, x6, fail
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, PASSV
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, FAILV
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+m_handler:
+    csrr x31, mcause
+    addi x31, x31, -8
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -9
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -10
+    beqz x31, m_promote
+    csrr x28, mcause
+    csrr x27, mtval
+    csrr x26, mstatus
+    csrr x25, mtval2
+    csrr x24, mtinst
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret
+m_promote:
+    csrr x31, mepc
+    addi x31, x31, 4
+    slli x31, x31, 34
+    srli x31, x31, 34
+    li x29, 0x80000000
+    or x31, x31, x29
+    jr x31

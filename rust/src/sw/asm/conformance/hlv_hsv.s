@@ -1,0 +1,176 @@
+# H-extension conformance: HLV/HSV forced-virtualization accesses.
+#
+# Exercises hypervisor load/store instructions from M and U (with and
+# without hstatus.HU), the guest-U view selected by hstatus.SPVP, and the
+# virtual-instruction trap raised when a V=1 hart issues them. Runs on the
+# tick engine, the block engine, and the Python oracle from the same text.
+# Reports through syscon: 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ PASSV,    0x5555
+.equ FAILV,    0x3333
+.equ VSROOT,   0x80420000
+.equ GROOT,    0x80440000
+.equ DATA,     0x80600000
+.equ ALIAS,    0x40000000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+
+    # G stage: identity-map the first RAM gigabyte (stage-2 leaves need U=1).
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    # VS stage 1: root[2] identity for guest-S code/data (U=0),
+    # root[3] guest-U alias window at VA +1G.
+    li x29, (VSROOT + 16)
+    li x31, 0x200000CF              # 1G leaf -> 0x80000000, RWX+AD
+    sd x31, 0(x29)
+    li x29, (VSROOT + 24)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    li x29, 0x8000000000080420
+    csrw vsatp, x29
+    hfence.gvma
+    hfence.vvma
+
+    li x5, DATA
+    li x6, 0x11223344
+    sw x6, 0(x5)
+
+    # 1) hlv.w from M as guest-S (hstatus.SPVP=1) reads through VS+G tables.
+    li x29, 0x100
+    csrs hstatus, x29
+    li x28, 0
+    hlv.w x7, (x5)
+    bne x7, x6, fail
+    bnez x28, fail
+
+    # 2) hsv.w from M, read back with a bare M load.
+    li x7, 0x55667788
+    li x28, 0
+    hsv.w x7, (x5)
+    bnez x28, fail
+    lw x10, 0(x5)
+    bne x10, x7, fail
+
+    # 3) guest-U view (SPVP=0): the U=1 alias window works, the U=0
+    #    identity mapping takes a stage-1 load page fault with tval = VA.
+    li x29, 0x100
+    csrc hstatus, x29
+    sd x7, 0(x5)
+    li x11, (DATA + ALIAS)
+    li x28, 0
+    hlv.d x12, (x11)
+    bnez x28, fail
+    bne x12, x7, fail
+    li x28, 0
+    hlv.w x13, (x5)
+    li x29, 13
+    bne x28, x29, fail
+    bne x27, x5, fail
+
+    # 4) from V=1, hlv.* is a virtual-instruction trap, tval = raw bits.
+    la x31, vs_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrs mstatus, x29               # MPV = 1
+    li x28, 0
+    mret
+vs_code:
+    hlv.w x6, (x5)                  # cause 22; handler skips it
+    ecall                           # promote back to M
+    li x29, 22
+    bne x28, x29, fail
+    li x29, 0x6802C373              # encoding of `hlv.w x6, (x5)`
+    bne x27, x29, fail
+
+    # 5) from U with hstatus.HU=0: illegal instruction, tval = raw bits.
+    csrw satp, x0
+    li x29, 0x200
+    csrc hstatus, x29
+    la x31, u_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29               # MPP = U
+    li x29, 0x8000000000
+    csrc mstatus, x29               # MPV = 0
+    li x28, 0
+    mret
+u_code:
+    hlv.w x6, (x5)                  # cause 2; handler skips it
+    ecall
+    li x29, 2
+    bne x28, x29, fail
+    li x29, 0x6802C373
+    bne x27, x29, fail
+
+    # 6) from U with hstatus.HU=1: the forced guest-U access goes through.
+    li x29, 0x200
+    csrs hstatus, x29
+    la x31, u2_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x28, 0
+    mret
+u2_code:
+    li x11, (DATA + ALIAS)
+    li x12, 0
+    hlv.d x12, (x11)
+    ecall
+    bnez x28, fail
+    bne x12, x7, fail
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, PASSV
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, FAILV
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+# Recording trap handler: ecalls promote to M at the (alias-masked)
+# identity address after mepc; everything else records mcause/mtval/
+# mstatus/mtval2/mtinst in x28..x24 and skips the faulting instruction.
+m_handler:
+    csrr x31, mcause
+    addi x31, x31, -8
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -9
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -10
+    beqz x31, m_promote
+    csrr x28, mcause
+    csrr x27, mtval
+    csrr x26, mstatus
+    csrr x25, mtval2
+    csrr x24, mtinst
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret
+m_promote:
+    csrr x31, mepc
+    addi x31, x31, 4
+    slli x31, x31, 34
+    srli x31, x31, 34
+    li x29, 0x80000000
+    or x31, x31, x29
+    jr x31

@@ -1,0 +1,151 @@
+# H-extension conformance: HLVX and execute-only pages across both stages.
+#
+# An execute-only stage-1 page is readable via hlvx but not via hlv (unless
+# vsstatus.MXR steps in); hlvx requires X at stage 1 AND stage 2, and a
+# stage-2 X miss is a guest load fault carrying gpa>>2 in mtval2.
+# Reports through syscon: 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ PASSV,    0x5555
+.equ FAILV,    0x3333
+.equ VSROOT,   0x80420000
+.equ VSL1,     0x80430000
+.equ GROOT,    0x80440000
+.equ GL1,      0x80480000
+.equ DATA,     0x80600000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+
+    # G stage: identity 1G plus a table for the low guest-physical windows.
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, GROOT
+    li x31, 0x20120001              # table -> GL1
+    sd x31, 0(x29)
+    li x29, (GL1 + 8)
+    li x31, 0x201800DF              # GPA 0x200000 -> DATA, RWXU+AD
+    sd x31, 0(x29)
+    li x29, (GL1 + 16)
+    li x31, 0x201800DF              # GPA 0x400000 -> DATA, RWXU+AD
+    sd x31, 0(x29)
+    li x29, (GL1 + 24)
+    li x31, 0x201800D7              # GPA 0x600000 -> DATA, RWU+AD (no X)
+    sd x31, 0(x29)
+    # VS stage 1: identity guest-S code plus low windows via VSL1.
+    li x29, (VSROOT + 16)
+    li x31, 0x200000CF              # 1G leaf -> 0x80000000, RWX+AD
+    sd x31, 0(x29)
+    li x29, VSROOT
+    li x31, 0x2010C001              # table -> VSL1
+    sd x31, 0(x29)
+    li x29, (VSL1 + 8)
+    li x31, 0x80059                 # VA 0x200000 -> GPA 0x200000, XU+A only
+    sd x31, 0(x29)
+    li x29, (VSL1 + 16)
+    li x31, 0x1000D7                # VA 0x400000 -> GPA 0x400000, RWU+AD (no X)
+    sd x31, 0(x29)
+    li x29, (VSL1 + 24)
+    li x31, 0x180059                # VA 0x600000 -> GPA 0x600000, XU+A only
+    sd x31, 0(x29)
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    li x29, 0x8000000000080420
+    csrw vsatp, x29
+    hfence.gvma
+    hfence.vvma
+
+    li x5, DATA
+    li x6, 0xBEEF
+    sw x6, 0(x5)
+
+    # All probes below run as forced guest-U accesses (hstatus.SPVP=0).
+    # a) hlvx.hu reads an execute-only stage-1 page.
+    li x7, 0x200000
+    li x28, 0
+    hlvx.hu x10, (x7)
+    bnez x28, fail
+    li x29, 0xBEEF
+    bne x10, x29, fail
+
+    # b) plain hlv.hu on the same page: R=0 and no MXR -> stage-1 fault 13.
+    li x28, 0
+    hlv.hu x10, (x7)
+    li x29, 13
+    bne x28, x29, fail
+    bne x27, x7, fail
+
+    # c) vsstatus.MXR makes the same read legal.
+    li x29, 0x80000
+    csrs vsstatus, x29
+    li x28, 0
+    hlv.hu x10, (x7)
+    bnez x28, fail
+    li x29, 0xBEEF
+    bne x10, x29, fail
+    li x29, 0x80000
+    csrc vsstatus, x29
+
+    # d) hlvx on a readable page without X: stage-1 fault 13.
+    li x7, 0x400000
+    li x28, 0
+    hlvx.hu x10, (x7)
+    li x29, 13
+    bne x28, x29, fail
+    bne x27, x7, fail
+
+    # e) hlvx with X at stage 1 but not stage 2: guest load fault 21,
+    #    mtval = guest VA, mtval2 = gpa >> 2.
+    li x7, 0x600000
+    li x28, 0
+    hlvx.hu x10, (x7)
+    li x29, 21
+    bne x28, x29, fail
+    bne x27, x7, fail
+    li x29, 0x180000
+    bne x25, x29, fail
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, PASSV
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, FAILV
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+m_handler:
+    csrr x31, mcause
+    addi x31, x31, -8
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -9
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -10
+    beqz x31, m_promote
+    csrr x28, mcause
+    csrr x27, mtval
+    csrr x26, mstatus
+    csrr x25, mtval2
+    csrr x24, mtinst
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret
+m_promote:
+    csrr x31, mepc
+    addi x31, x31, 4
+    slli x31, x31, 34
+    srli x31, x31, 34
+    li x29, 0x80000000
+    or x31, x31, x29
+    jr x31

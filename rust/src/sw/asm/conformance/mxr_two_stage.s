@@ -1,0 +1,163 @@
+# H-extension conformance: MXR semantics under two-stage translation.
+#
+# The regression matrix for the stage-2 MXR bug: vsstatus.MXR applies only
+# to the VS (stage-1) walk, mstatus.MXR applies to both stages. With the
+# page execute-only at BOTH stages:
+#   neither MXR            -> stage-1 load page fault (13)
+#   vsstatus.MXR only      -> stage 1 passes, stage 2 guest fault (21)
+#   mstatus.MXR only       -> both stages pass
+#   both                   -> both stages pass
+# Verified first with forced (hlv) accesses from M, then with a plain load
+# from V=1. Reports through syscon: 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ PASSV,    0x5555
+.equ FAILV,    0x3333
+.equ VSROOT,   0x80420000
+.equ VSL1,     0x80430000
+.equ GROOT,    0x80440000
+.equ GL1,      0x80480000
+.equ DATA,     0x80600000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+
+    # G stage: identity 1G, plus GPA 0x200000 -> DATA execute-only.
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, GROOT
+    li x31, 0x20120001              # table -> GL1
+    sd x31, 0(x29)
+    li x29, (GL1 + 8)
+    li x31, 0x20180059              # GPA 0x200000 -> DATA, XU+A only
+    sd x31, 0(x29)
+    # VS stage 1: identity guest-S code, VA 0x200000 execute-only.
+    li x29, (VSROOT + 16)
+    li x31, 0x200000CF              # 1G leaf -> 0x80000000, RWX+AD
+    sd x31, 0(x29)
+    li x29, VSROOT
+    li x31, 0x2010C001              # table -> VSL1
+    sd x31, 0(x29)
+    li x29, (VSL1 + 8)
+    li x31, 0x80059                 # VA 0x200000 -> GPA 0x200000, XU+A only
+    sd x31, 0(x29)
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    li x29, 0x8000000000080420
+    csrw vsatp, x29
+    hfence.gvma
+    hfence.vvma
+
+    li x5, DATA
+    li x6, 0xC0FFEE
+    sw x6, 0(x5)
+    li x7, 0x200000
+
+    # 1) no MXR anywhere: stage-1 execute-only read faults with cause 13.
+    li x28, 0
+    hlv.w x10, (x7)
+    li x29, 13
+    bne x28, x29, fail
+    bne x27, x7, fail
+
+    # 2) vsstatus.MXR only: stage 1 passes, stage 2 X-only faults with 21.
+    #    vsstatus.MXR must NOT leak into the G-stage permission check.
+    li x29, 0x80000
+    csrs vsstatus, x29
+    li x28, 0
+    hlv.w x10, (x7)
+    li x29, 21
+    bne x28, x29, fail
+    li x29, 0x80000
+    bne x25, x29, fail              # mtval2 = gpa >> 2
+    li x29, 0x80000
+    csrc vsstatus, x29
+
+    # 3) mstatus.MXR alone satisfies both stages.
+    li x29, 0x80000
+    csrs mstatus, x29
+    li x28, 0
+    hlv.w x10, (x7)
+    bnez x28, fail
+    li x29, 0xC0FFEE
+    bne x10, x29, fail
+
+    # 4) both set: still fine.
+    li x29, 0x80000
+    csrs vsstatus, x29
+    li x28, 0
+    hlv.w x10, (x7)
+    bnez x28, fail
+    li x29, 0xC0FFEE
+    bne x10, x29, fail
+
+    # 5) same stage-2 refusal from a resident V=1 load: vsstatus.MXR set,
+    #    mstatus.MXR clear -> guest load fault 21 with transformed mtinst.
+    li x29, 0x80000
+    csrc mstatus, x29
+    li x29, 0x40000
+    csrs vsstatus, x29              # SUM: guest-S touches a U=1 page
+    la x31, vs_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrs mstatus, x29               # MPV = 1
+    li x28, 0
+    mret
+vs_code:
+    lw x10, 0(x7)                   # cause 21; handler skips it
+    ecall                           # promote back to M
+    li x29, 21
+    bne x28, x29, fail
+    li x29, 0x80000
+    bne x25, x29, fail              # mtval2 = gpa >> 2
+    li x29, 0x2503
+    bne x24, x29, fail              # mtinst = `lw x10,0(x7)`, rs1 cleared
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, PASSV
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, FAILV
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+m_handler:
+    csrr x31, mcause
+    addi x31, x31, -8
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -9
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -10
+    beqz x31, m_promote
+    csrr x28, mcause
+    csrr x27, mtval
+    csrr x26, mstatus
+    csrr x25, mtval2
+    csrr x24, mtinst
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret
+m_promote:
+    csrr x31, mepc
+    addi x31, x31, 4
+    slli x31, x31, 34
+    srli x31, x31, 34
+    li x29, 0x80000000
+    or x31, x31, x29
+    jr x31

@@ -1,0 +1,157 @@
+# H-extension conformance: guest-fault trap CSRs and ecall cause matrix.
+#
+# A guest page fault taken from V=1 must report the guest VA in mtval, the
+# shifted guest-physical address in mtval2, the transformed instruction in
+# mtinst, and set mstatus.GVA/MPV with MPP recording the guest privilege.
+# Ecalls report cause 8/9/10 by originating mode. Reports through syscon:
+# 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ PASSV,    0x5555
+.equ FAILV,    0x3333
+.equ GROOT,    0x80440000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+
+    # G stage: identity 1G only; low guest-physical space is unmapped.
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    csrw vsatp, x0                  # stage 1 bare inside the guest
+    hfence.gvma
+    hfence.vvma
+
+    # 1) guest LOAD fault from VS: GPA 0x200000 has no stage-2 mapping.
+    la x31, vs_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrs mstatus, x29               # MPV = 1
+    li x28, 0
+    mret
+vs_code:
+    li x5, 0x200000
+    lw x6, 0(x5)                    # cause 21; handler skips it
+    ecall                           # promote back to M
+    li x29, 21
+    bne x28, x29, fail
+    bne x27, x5, fail               # mtval = guest VA
+    li x29, 0x80000
+    bne x25, x29, fail              # mtval2 = gpa >> 2
+    li x29, 0x2303
+    bne x24, x29, fail              # mtinst = `lw x6,0(x5)`, rs1 cleared
+    # mstatus captured at the guest fault: GVA=1, MPV=1, MPP=S.
+    li x29, 0x4000000000
+    and x31, x26, x29
+    beqz x31, fail
+    li x29, 0x8000000000
+    and x31, x26, x29
+    beqz x31, fail
+    li x29, 0x1800
+    and x31, x26, x29
+    li x29, 0x800
+    bne x31, x29, fail
+    # The promoting ecall itself came from VS: mcause must still read 10.
+    csrr x31, mcause
+    li x29, 10
+    bne x31, x29, fail
+
+    # 2) guest STORE fault from VS on the same unmapped window.
+    la x31, vs2_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29
+    li x29, 0x8000000000
+    csrs mstatus, x29
+    li x28, 0
+    mret
+vs2_code:
+    sw x6, 0(x5)                    # cause 23; handler skips it
+    ecall
+    li x29, 23
+    bne x28, x29, fail
+    bne x27, x5, fail
+    li x29, 0x80000
+    bne x25, x29, fail
+    li x29, 0x602023
+    bne x24, x29, fail              # mtinst = `sw x6,0(x5)`, rs1 cleared
+
+    # 3) ecall from bare U-mode reports cause 8.
+    la x31, u_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29               # MPP = U
+    li x29, 0x8000000000
+    csrc mstatus, x29               # MPV = 0
+    mret
+u_code:
+    ecall
+    csrr x31, mcause
+    li x29, 8
+    bne x31, x29, fail
+
+    # 4) ecall from HS reports cause 9.
+    la x31, s_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S, MPV = 0
+    mret
+s_code:
+    ecall
+    csrr x31, mcause
+    li x29, 9
+    bne x31, x29, fail
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, PASSV
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, FAILV
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+m_handler:
+    csrr x31, mcause
+    addi x31, x31, -8
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -9
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -10
+    beqz x31, m_promote
+    csrr x28, mcause
+    csrr x27, mtval
+    csrr x26, mstatus
+    csrr x25, mtval2
+    csrr x24, mtinst
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret
+m_promote:
+    csrr x31, mepc
+    addi x31, x31, 4
+    slli x31, x31, 34
+    srli x31, x31, 34
+    li x29, 0x80000000
+    or x31, x31, x29
+    jr x31

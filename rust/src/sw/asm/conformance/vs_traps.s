@@ -1,0 +1,173 @@
+# H-extension conformance: trap delegation into HS and into the guest.
+#
+# medeleg routes exceptions to HS where hstatus.SPV/SPVP/GVA describe the
+# interrupted (possibly virtual) context and sret resumes it; hedeleg
+# forwards VS-originated exceptions to the guest's own vstvec handler,
+# whose sepc/scause/stval accesses transparently redirect to the vs*
+# CSRs. Reports through syscon: 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ PASSV,    0x5555
+.equ FAILV,    0x3333
+.equ VSROOT,   0x80420000
+.equ GROOT,    0x80440000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+    la x31, s_rec
+    csrw stvec, x31
+    # Delegate illegal-instruction (2) and load-page-fault (13) to HS.
+    li x29, 0x2004
+    csrw medeleg, x29
+
+    # G stage identity; VS stage 1: identity guest-S code, VSROOT[0]
+    # invalid so low guest VAs stage-1 fault.
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, (VSROOT + 16)
+    li x31, 0x200000CF              # 1G leaf -> 0x80000000, RWX+AD
+    sd x31, 0(x29)
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    li x29, 0x8000000000080420
+    csrw vsatp, x29
+    hfence.gvma
+    hfence.vvma
+
+    # 1) illegal instruction in HS itself: lands in s_rec with SPV=0.
+    la x31, hs_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrc mstatus, x29               # MPV = 0
+    li x25, 0
+    mret
+hs_code:
+    csrw mscratch, x5               # M-only CSR from HS: cause 2; skipped
+    li x29, 2
+    bne x25, x29, fail
+    li x29, 0x34029073              # stval = encoding of `csrw mscratch,x5`
+    bne x24, x29, fail
+    li x29, 0x80
+    and x31, x23, x29               # hstatus.SPV = 0: trap came from V=0
+    bnez x31, fail
+    ecall                           # back to M
+
+    # 2) VS stage-1 load fault, delegated to HS: SPV=1, SPVP=1, GVA=1.
+    la x31, vs_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29               # MPP = S
+    li x29, 0x8000000000
+    csrs mstatus, x29               # MPV = 1
+    li x25, 0
+    mret
+vs_code:
+    li x5, 0x200000
+    lw x6, 0(x5)                    # stage-1 fault 13 -> s_rec in HS; skipped
+    ecall                           # promote back to M
+    li x29, 13
+    bne x25, x29, fail
+    bne x24, x5, fail               # stval = guest VA
+    li x29, 0x80
+    and x31, x23, x29               # SPV = 1
+    beqz x31, fail
+    li x29, 0x100
+    and x31, x23, x29               # SPVP = 1 (guest was in S)
+    beqz x31, fail
+    li x29, 0x40
+    and x31, x23, x29               # GVA = 1 (stval holds a guest VA)
+    beqz x31, fail
+
+    # 3) hedeleg bit 13: the same fault now goes to the guest's vstvec,
+    #    and the v_rec handler's s* CSR accesses redirect to vs*.
+    la x31, v_rec
+    csrw vstvec, x31
+    li x29, 0x2000
+    csrw hedeleg, x29
+    la x31, vs2_code
+    csrw mepc, x31
+    li x29, 0x1800
+    csrc mstatus, x29
+    li x29, 0x800
+    csrs mstatus, x29
+    li x29, 0x8000000000
+    csrs mstatus, x29
+    li x22, 0
+    mret
+vs2_code:
+    li x5, 0x200000
+    lw x6, 0(x5)                    # fault 13 -> v_rec inside the guest
+    ecall
+    li x29, 13
+    bne x22, x29, fail              # vscause seen as scause
+    bne x21, x5, fail               # vstval seen as stval
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, PASSV
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, FAILV
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+# HS-mode recorder: scause/stval/hstatus into x25/x24/x23, skip, resume.
+s_rec:
+    csrr x25, scause
+    csrr x24, stval
+    csrr x23, hstatus
+    csrr x31, sepc
+    addi x31, x31, 4
+    csrw sepc, x31
+    sret
+
+# Guest-resident recorder: runs in VS, so these s* names hit the vs* CSRs.
+v_rec:
+    csrr x22, scause
+    csrr x21, stval
+    csrr x31, sepc
+    addi x31, x31, 4
+    csrw sepc, x31
+    sret
+
+m_handler:
+    csrr x31, mcause
+    addi x31, x31, -8
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -9
+    beqz x31, m_promote
+    csrr x31, mcause
+    addi x31, x31, -10
+    beqz x31, m_promote
+    csrr x28, mcause
+    csrr x27, mtval
+    csrr x26, mstatus
+    csrr x25, mtval2
+    csrr x24, mtinst
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret
+m_promote:
+    csrr x31, mepc
+    addi x31, x31, 4
+    slli x31, x31, 34
+    srli x31, x31, 34
+    li x29, 0x80000000
+    or x31, x31, x29
+    jr x31

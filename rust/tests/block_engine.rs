@@ -240,3 +240,131 @@ fn timer_preemption_is_tick_exact_across_engines() {
         "interrupt histograms diverged"
     );
 }
+
+/// HFENCE.GVMA between two forced (HLV) probes of the same guest VA: the
+/// G-stage leaf is rewritten mid-stream and the post-fence probe must
+/// observe the new frame. HLV/HSV are not block enders, so on the block
+/// engine both probes and the PTE store sit in straight-line code whose
+/// cached translation state must not leak across the fence; two loop
+/// passes make the second iteration run entirely from the block cache.
+#[test]
+fn hfence_gvma_mid_stream_remap_observed_by_both_engines() {
+    let src = r#"
+    .equ SYSCON, 0x100000
+    .equ GROOT,  0x80440000
+    .equ GL1,    0x80448000
+    _start:
+        la t0, fail
+        csrw mtvec, t0
+        li t0, GROOT
+        li t1, 0x20112001           # table -> GL1
+        sd t1, 0(t0)
+        li t0, 0x8000000000080440
+        csrw hgatp, t0
+        li a3, 0x80200000           # frame A
+        li a4, 0x5AAA1111
+        sw a4, 0(a3)
+        li a3, 0x80600000           # frame B
+        li a4, 0x3BBB2222
+        sw a4, 0(a3)
+        li s0, 2
+    loop:
+        li t0, (GL1 + 8)
+        li t1, 0x200800DF           # GPA 0x200000 -> frame A, RWXU+AD
+        sd t1, 0(t0)
+        hfence.gvma
+        li t2, 0x200000
+        hlv.w a0, (t2)
+        li a2, 0x5AAA1111
+        bne a0, a2, fail
+        li t1, 0x201800DF           # remap -> frame B, fence mid-stream
+        sd t1, 0(t0)
+        hfence.gvma
+        hlv.w a1, (t2)
+        li a2, 0x3BBB2222
+        bne a1, a2, fail
+        addi s0, s0, -1
+        bnez s0, loop
+        li t0, SYSCON
+        li t1, 0x5555
+        sw t1, 0(t0)
+    halt:
+        j halt
+    fail:
+        li t0, SYSCON
+        li t1, 0x3333
+        sw t1, 0(t0)
+    fhalt:
+        j fhalt
+    "#;
+    both_engines_to_poweroff(src);
+}
+
+/// Guest self-modifying code under a *non-identity* G-stage superpage:
+/// the guest runs at guest-physical alias 0x4000_0000 backed by a 1G leaf
+/// pointing at RAM_BASE, and patches its own next instruction through
+/// that alias. Block invalidation is keyed by physical address, so the
+/// cached block must be retranslated even though the writing VA (guest
+/// side) and the cached block's link address (host side) never match.
+#[test]
+fn guest_smc_under_nonidentity_superpage_invalidates_by_pa() {
+    let src = format!(
+        r#"
+    .equ SYSCON, 0x100000
+    .equ GROOT,  0x80440000
+    _start:
+        la t0, mfail
+        csrw mtvec, t0
+        li t0, GROOT
+        li t1, 0xD7                 # GPA 0 -> PA 0 (syscon window), RWU+AD
+        sd t1, 0(t0)
+        li t0, (GROOT + 8)
+        li t1, 0x200000DF           # GPA 0x40000000 -> PA 0x80000000, RWXU+AD
+        sd t1, 0(t0)
+        li t0, 0x8000000000080440
+        csrw hgatp, t0
+        hfence.gvma
+        la t0, guest_code           # enter VS at the guest-physical alias
+        li t1, 0x40000000
+        sub t0, t0, t1
+        csrw mepc, t0
+        li t1, 0x1800
+        csrc mstatus, t1
+        li t1, 0x800
+        csrs mstatus, t1            # MPP = S
+        li t1, 0x8000000000
+        csrs mstatus, t1            # MPV = 1
+        mret
+    guest_code:
+        # vsatp=0: guest VAs are guest-physical; la is pc-relative, so
+        # this yields patchme's alias address, not its link address.
+        la t0, patchme
+        li t1, {patch:#x}
+        sw t1, 0(t0)
+        fence.i
+    patchme:
+        addi t3, x0, 13             # must execute as `addi t3, x0, 42`
+        li t1, 42
+        bne t3, t1, vfail
+        li t0, SYSCON
+        li t1, 0x5555
+        sw t1, 0(t0)
+    vhalt:
+        j vhalt
+    vfail:
+        li t0, SYSCON
+        li t1, 0x3333
+        sw t1, 0(t0)
+    vfhalt:
+        j vfhalt
+    mfail:                          # any machine-level trap is a failure
+        li t0, SYSCON
+        li t1, 0x2222
+        sw t1, 0(t0)
+    mhalt:
+        j mhalt
+    "#,
+        patch = PATCHED_ADDI_T3_42
+    );
+    both_engines_to_poweroff(&src);
+}

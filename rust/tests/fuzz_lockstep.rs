@@ -1,0 +1,78 @@
+//! Integration tests for the lockstep differential fuzzer (`hvsim fuzz`).
+//!
+//! The in-process half of the differential story: the same generated
+//! instruction stream must retire identically under the tick and block
+//! engines (trap history, every block-boundary sync record, final
+//! architectural state). The cross-implementation half — the Rust trace
+//! replayed against the Python oracle — runs in CI via
+//! `tools/crosscheck/fuzz_lockstep.py`. Divergences that were found and
+//! fixed live on as shrunk reproducers under `tests/fuzz_repros/`.
+
+use hvsim::fuzz::{self, Engine};
+use hvsim::mem::SYSCON_PASS;
+
+/// Two fixed seeds, ~20k instructions each: tick and block engines must
+/// agree at every sync boundary and on the final state.
+#[test]
+fn selfcheck_fixed_seeds_tick_vs_block() {
+    for seed in [1u64, 0xDECAF] {
+        let src = fuzz::generate_program(seed, 20_000);
+        let (tick, block) = fuzz::selfcheck(&src, 1_000_000)
+            .unwrap_or_else(|e| panic!("seed {seed}: tick/block divergence: {e}"));
+        assert_eq!(
+            tick.poweroff,
+            Some(SYSCON_PASS),
+            "seed {seed}: tick run did not reach the pass epilogue"
+        );
+        assert_eq!(block.poweroff, Some(SYSCON_PASS));
+        assert!(
+            tick.retired > 10_000,
+            "seed {seed}: suspiciously short run ({} retired)",
+            tick.retired
+        );
+        assert!(!tick.syncs.is_empty() && !block.syncs.is_empty());
+    }
+}
+
+/// The emitted lockstep trace is well-formed: sync + trap records and
+/// exactly one final record carrying the full state.
+#[test]
+fn trace_jsonl_is_well_formed() {
+    let src = fuzz::generate_program(7, 5_000);
+    let run = fuzz::run_program(&src, Engine::Block, 600_000).unwrap();
+    let trace = fuzz::trace_jsonl(&run);
+    assert_eq!(trace.matches("\"t\":\"f\"").count(), 1, "exactly one final record");
+    assert_eq!(trace.matches("\"t\":\"s\"").count(), run.syncs.len());
+    assert_eq!(trace.matches("\"t\":\"e\"").count(), run.traps.len());
+    let last = trace.lines().last().unwrap();
+    assert!(last.contains("\"ram\":"), "final record must carry the RAM digest");
+    assert!(last.contains("\"csr\":"));
+}
+
+/// Regression: the shrunk reproducer for the stage-2 MXR bug (vsstatus.MXR
+/// leaking into the G-stage read check) must pass on both engines.
+#[test]
+fn mxr_stage2_repro_passes_both_engines() {
+    let src = include_str!("fuzz_repros/mxr_stage2.s");
+    for engine in [Engine::Tick, Engine::Block] {
+        let run = fuzz::run_program(src, engine, 100_000)
+            .unwrap_or_else(|e| panic!("{} engine: {e}", engine.name()));
+        assert_eq!(
+            run.poweroff,
+            Some(SYSCON_PASS),
+            "mxr_stage2 reproducer regressed on the {} engine",
+            engine.name()
+        );
+    }
+}
+
+/// Determinism: the same seed yields byte-identical programs and traces.
+#[test]
+fn fuzz_runs_are_deterministic() {
+    let a = fuzz::generate_program(42, 2_000);
+    let b = fuzz::generate_program(42, 2_000);
+    assert_eq!(a, b);
+    let ra = fuzz::run_program(&a, Engine::Block, 300_000).unwrap();
+    let rb = fuzz::run_program(&b, Engine::Block, 300_000).unwrap();
+    assert_eq!(fuzz::trace_jsonl(&ra), fuzz::trace_jsonl(&rb));
+}

@@ -1,0 +1,82 @@
+# Minimal lockstep reproducer: vsstatus.MXR must not satisfy the G-stage
+# read check.
+#
+# Shrunk from a fuzzed HLV probe sequence (guest window execute-only at
+# both stages, vsstatus.MXR toggled mid-stream). The pre-fix TLB fast
+# path folded vsstatus.MXR into the stage-2 permission check, so the
+# forced load below *succeeded* on the Rust engines while the Python
+# oracle raised a guest load fault (cause 21) — the first divergence the
+# differential fuzzer flushed out. The fixed behavior: stage 1 passes
+# (vsstatus.MXR covers the X-only VS leaf), stage 2 refuses (only
+# mstatus.MXR may read through execute-only G leaves), and the trap
+# carries gpa>>2 in mtval2.
+#
+# Reports through syscon: 0x5555 pass, 0x3333 fail.
+
+.equ SYSCON,   0x100000
+.equ VSROOT,   0x80420000
+.equ VSL1,     0x80430000
+.equ GROOT,    0x80440000
+.equ GL1,      0x80480000
+.equ DATA,     0x80600000
+
+_start:
+    la x31, m_handler
+    csrw mtvec, x31
+    # G stage: identity 1G (covers the VS table walk's implicit PTE
+    # reads) plus GPA 0x200000 -> DATA, XU+A (execute-only).
+    li x29, (GROOT + 16)
+    li x31, 0x200000DF              # 1G leaf -> 0x80000000, RWXU+AD
+    sd x31, 0(x29)
+    li x29, GROOT
+    li x31, 0x20120001              # table -> GL1
+    sd x31, 0(x29)
+    li x29, (GL1 + 8)
+    li x31, 0x20180059
+    sd x31, 0(x29)
+    # VS stage 1: VA 0x200000 -> GPA 0x200000, XU+A (execute-only).
+    li x29, VSROOT
+    li x31, 0x2010C001              # table -> VSL1
+    sd x31, 0(x29)
+    li x29, (VSL1 + 8)
+    li x31, 0x80059
+    sd x31, 0(x29)
+    li x29, 0x8000000000080440
+    csrw hgatp, x29
+    li x29, 0x8000000000080420
+    csrw vsatp, x29
+    hfence.gvma
+    hfence.vvma
+
+    li x29, 0x80000
+    csrs vsstatus, x29              # vsstatus.MXR = 1, mstatus.MXR = 0
+    li x7, 0x200000
+    li x28, 0
+    hlv.w x10, (x7)                 # must fault: cause 21, not read data
+    li x29, 21
+    bne x28, x29, fail
+    li x29, 0x80000
+    bne x25, x29, fail              # mtval2 = gpa >> 2
+    j pass
+
+pass:
+    li x29, SYSCON
+    li x31, 0x5555
+    sw x31, 0(x29)
+halt:
+    j halt
+
+fail:
+    li x29, SYSCON
+    li x31, 0x3333
+    sw x31, 0(x29)
+fhalt:
+    j fhalt
+
+m_handler:
+    csrr x28, mcause
+    csrr x25, mtval2
+    csrr x31, mepc
+    addi x31, x31, 4
+    csrw mepc, x31
+    mret

@@ -701,6 +701,98 @@ mod m_and_hs_using_vs_access {
             ev => panic!("{ev:?}"),
         }
     }
+
+    /// Two-stage world where gva 0x7000 maps (VS stage, `vs_perms`) to a
+    /// guest-physical page that the G stage maps with `g_perms` — used to
+    /// pin the per-stage MXR rules below.
+    fn mxr_world(vs_perms: u64, g_perms: u64) -> World {
+        let mut w = World::new();
+        let vs_root = w.setup_two_stage();
+        // A GPA outside the eagerly mapped window so we control its
+        // G-stage permissions exactly.
+        let gpa = RAM_BASE + 0x800_0000;
+        let host_pa = RAM_BASE + 0x1F_0000;
+        w.map_vs(vs_root, 0x7000, gpa, vs_perms);
+        let g_root = (w.core.hart.csr.hgatp & ((1u64 << 44) - 1)) << 12;
+        w.map(g_root, gpa, host_pa, g_perms, true);
+        w.bus.write(host_pa, 8, 0x1122_3344_5566_7788).unwrap();
+        w.load_code(RAM_BASE, "li t0, 0x7000\n hlv.d t1, (t0)\n ebreak\n");
+        w.core.hart.prv = PrivLevel::Supervisor;
+        w.core.hart.pc = RAM_BASE;
+        w.core.hart.csr.mtvec = RAM_BASE + 0xF000;
+        w.core.hart.csr.hstatus |= hstatus::SPVP;
+        w
+    }
+
+    /// vsstatus.MXR makes a stage-1 execute-only page readable by HLV.
+    #[test]
+    fn vsstatus_mxr_reads_stage1_execute_only() {
+        let mut w = mxr_world(0xc9 | 0x10, RWXADU); // VS: V|X|A|U, no R
+        w.core.hart.csr.vsstatus |= mstatus::MXR;
+        match w.step_until_trap(20) {
+            StepEvent::Exception(ExceptionCause::Breakpoint, _) => {}
+            ev => panic!("{ev:?}"),
+        }
+        assert_eq!(w.core.hart.regs[6], 0x1122_3344_5566_7788);
+        // Without either MXR bit the same load page-faults at stage 1.
+        let mut w = mxr_world(0xc9 | 0x10, RWXADU);
+        match w.step_until_trap(20) {
+            StepEvent::Exception(ExceptionCause::LoadPageFault, TrapTarget::M) => {}
+            ev => panic!("{ev:?}"),
+        }
+    }
+
+    /// vsstatus.MXR is a pure VS-stage knob: it must NOT make a G-stage
+    /// execute-only page readable (priv. spec two-stage MXR rule).
+    #[test]
+    fn vsstatus_mxr_does_not_apply_at_g_stage() {
+        let mut w = mxr_world(RWXADU, 0x59); // G: V|X|A|U, no R
+        w.core.hart.csr.vsstatus |= mstatus::MXR;
+        match w.step_until_trap(20) {
+            StepEvent::Exception(ExceptionCause::LoadGuestPageFault, TrapTarget::M) => {}
+            ev => panic!("{ev:?}"),
+        }
+        let gpa = RAM_BASE + 0x800_0000;
+        assert_eq!(w.core.hart.csr.mtval2, gpa >> 2, "mtval2 = GPA >> 2");
+        assert_eq!(w.core.hart.csr.mtval, 0x7000, "mtval = faulting guest VA");
+        assert_ne!(w.core.hart.csr.mstatus & mstatus::GVA, 0);
+    }
+
+    /// mstatus.MXR is the bit that applies at the G stage.
+    #[test]
+    fn mstatus_mxr_reads_g_stage_execute_only() {
+        let mut w = mxr_world(RWXADU, 0x59);
+        w.core.hart.csr.mstatus |= mstatus::MXR;
+        match w.step_until_trap(20) {
+            StepEvent::Exception(ExceptionCause::Breakpoint, _) => {}
+            ev => panic!("{ev:?}"),
+        }
+        assert_eq!(w.core.hart.regs[6], 0x1122_3344_5566_7788);
+    }
+
+    /// HLVX reads a page that is execute-only at BOTH stages with no MXR
+    /// bit set anywhere — X substitutes for R at each stage for HLVX.
+    #[test]
+    fn hlvx_reads_execute_only_at_both_stages() {
+        let mut w = World::new();
+        let vs_root = w.setup_two_stage();
+        let gpa = RAM_BASE + 0x800_0000;
+        let host_pa = RAM_BASE + 0x1F_0000;
+        w.map_vs(vs_root, 0x7000, gpa, 0xc9 | 0x10); // VS: V|X|A|U
+        let g_root = (w.core.hart.csr.hgatp & ((1u64 << 44) - 1)) << 12;
+        w.map(g_root, gpa, host_pa, 0x59, true); // G: V|X|A|U
+        w.bus.write(host_pa, 4, 0xc0de_c0de).unwrap();
+        w.load_code(RAM_BASE, "li t0, 0x7000\n hlvx.wu t1, (t0)\n ebreak\n");
+        w.core.hart.prv = PrivLevel::Supervisor;
+        w.core.hart.pc = RAM_BASE;
+        w.core.hart.csr.mtvec = RAM_BASE + 0xF000;
+        w.core.hart.csr.hstatus |= hstatus::SPVP;
+        match w.step_until_trap(20) {
+            StepEvent::Exception(ExceptionCause::Breakpoint, _) => {}
+            ev => panic!("{ev:?}"),
+        }
+        assert_eq!(w.core.hart.regs[6], 0xc0de_c0de);
+    }
 }
 
 // =====================================================================

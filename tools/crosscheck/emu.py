@@ -1,7 +1,10 @@
 #!/usr/bin/env python3
 """RV64 M/HS/VS/U emulator over the asm2ir IR, mirroring hvsim's Rust
 semantics (cpu/trap.rs, cpu/csr.rs redirection, mmu/walker.rs two-stage
-Sv39/Sv39x4). Used to cross-check the embedded software stack offline."""
+Sv39/Sv39x4, and the full hypervisor-instruction surface: HLV/HSV/HLVX,
+HFENCE legality, mstatus.GVA/MPV + htval/htinst/mtinst trap writes).
+Used to cross-check the embedded software stack offline and as the
+differential-fuzzing oracle (tools/crosscheck/fuzz_lockstep.py)."""
 import os, sys
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from asm2ir import assemble, sext, eval_expr, reg, mem_operand
@@ -10,18 +13,100 @@ M64 = (1 << 64) - 1
 RAM_BASE = 0x8000_0000
 UART = 0x1000_0000
 SYSCON = 0x10_0000
+# Paravirtual MMIO apertures (dev/virtio.rs). The emulator models them as
+# passive register files (magic/version readable, all registers writable):
+# enough for the firmware's DMA_OFF programming on the guest boot path.
+# The request-serving workloads (echo/kvstore) need the live service()
+# machinery and are cross-checked natively in Rust instead.
+VIRTIO_QUEUE_BASE = 0x1000_1000
+VIRTIO_BLK_BASE = 0x1000_2000
+VIRTIO_SIZE = 0x1000
+VIRTIO_MAGIC = 0x7472_6976
 
 # mstatus bits
 SIE, MIE, SPIE, MPIE, SPP = 1 << 1, 1 << 3, 1 << 5, 1 << 7, 1 << 8
 MPP_SHIFT = 11
+FS_MASK = 3 << 13
+MPRV = 1 << 17
 SUM_BIT, MXR = 1 << 18, 1 << 19
+TVM, TW, TSR = 1 << 20, 1 << 21, 1 << 22
 MPV, GVA = 1 << 39, 1 << 38
+SD = 1 << 63
 # hstatus bits
-H_GVA, SPV, SPVP = 1 << 6, 1 << 7, 1 << 8
+H_GVA, SPV, SPVP, HU = 1 << 6, 1 << 7, 1 << 8, 1 << 9
+VGEIN_MASK = 0x3F << 12
+VTVM, VTW, VTSR = 1 << 20, 1 << 21, 1 << 22
+# interrupt bits (isa/csr.rs irq)
+SSIP, VSSIP, MSIP = 1 << 1, 1 << 2, 1 << 3
+STIP, VSTIP, MTIP = 1 << 5, 1 << 6, 1 << 7
+SEIP, VSEIP, MEIP = 1 << 9, 1 << 10, 1 << 11
+SGEIP = 1 << 12
+VS_MASK_I = VSSIP | VSTIP | VSEIP
+S_MASK_I = SSIP | STIP | SEIP
+M_MASK_I = MSIP | MTIP | MEIP
+HS_MASK_I = VS_MASK_I | SGEIP
+
+TINST_PSEUDO_PTE_READ = 0x2020
+
+# write masks (cpu/csr.rs)
+SSTATUS_WMASK = SIE | SPIE | SPP | FS_MASK | SUM_BIT | MXR
+MSTATUS_WMASK = (SIE | MIE | SPIE | MPIE | SPP | (3 << MPP_SHIFT) | FS_MASK
+                 | MPRV | SUM_BIT | MXR | TVM | TW | TSR | MPV | GVA)
+HSTATUS_WMASK = H_GVA | SPV | SPVP | HU | VGEIN_MASK | VTVM | VTW | VTSR
+HEDELEG_WMASK = 0x1FF | (1 << 12) | (1 << 13) | (1 << 15)
+MEDELEG_WMASK = HEDELEG_WMASK | (1 << 9) | (1 << 10) | (0xF << 20)
+HGEIE_MASK = 0x1FE
+
+# CSR name -> address (isa/csr.rs); used for privilege checks and for
+# reconstructing raw instruction encodings for tval/tinst.
+CSR_ADDR = {
+    'fflags': 0x001, 'frm': 0x002, 'fcsr': 0x003,
+    'cycle': 0xC00, 'time': 0xC01, 'instret': 0xC02,
+    'sstatus': 0x100, 'sie': 0x104, 'stvec': 0x105, 'scounteren': 0x106,
+    'senvcfg': 0x10A, 'sscratch': 0x140, 'sepc': 0x141, 'scause': 0x142,
+    'stval': 0x143, 'sip': 0x144, 'satp': 0x180,
+    'hstatus': 0x600, 'hedeleg': 0x602, 'hideleg': 0x603, 'hie': 0x604,
+    'htimedelta': 0x605, 'hcounteren': 0x606, 'hgeie': 0x607,
+    'henvcfg': 0x60A, 'htval': 0x643, 'hip': 0x644, 'hvip': 0x645,
+    'htinst': 0x64A, 'hgatp': 0x680, 'hgeip': 0xE12,
+    'vsstatus': 0x200, 'vsie': 0x204, 'vstvec': 0x205, 'vsscratch': 0x240,
+    'vsepc': 0x241, 'vscause': 0x242, 'vstval': 0x243, 'vsip': 0x244,
+    'vsatp': 0x280,
+    'mvendorid': 0xF11, 'marchid': 0xF12, 'mimpid': 0xF13, 'mhartid': 0xF14,
+    'mstatus': 0x300, 'misa': 0x301, 'medeleg': 0x302, 'mideleg': 0x303,
+    'mie': 0x304, 'mtvec': 0x305, 'mcounteren': 0x306, 'menvcfg': 0x30A,
+    'mscratch': 0x340, 'mepc': 0x341, 'mcause': 0x342, 'mtval': 0x343,
+    'mip': 0x344, 'mtinst': 0x34A, 'mtval2': 0x34B,
+    'mcycle': 0xB00, 'minstret': 0xB02,
+}
+H_CSRS = {'hstatus', 'hedeleg', 'hideleg', 'hie', 'htimedelta', 'hcounteren',
+          'hgeie', 'henvcfg', 'htval', 'hip', 'hvip', 'htinst', 'hgatp', 'hgeip'}
+VS_CSRS = {'vsstatus', 'vsie', 'vstvec', 'vsscratch', 'vsepc', 'vscause',
+           'vstval', 'vsip', 'vsatp'}
+
+# encodings (asm/encode.rs) for raw-instruction tval/tinst reconstruction
+LOAD_F3 = {'lb': 0, 'lh': 1, 'lw': 2, 'ld': 3, 'lbu': 4, 'lhu': 5, 'lwu': 6}
+STORE_F3 = {'sb': 0, 'sh': 1, 'sw': 2, 'sd': 3}
+HLV_CODE = {'hlv.b': (0x30, 0), 'hlv.bu': (0x30, 1), 'hlv.h': (0x32, 0),
+            'hlv.hu': (0x32, 1), 'hlvx.hu': (0x32, 3), 'hlv.w': (0x34, 0),
+            'hlv.wu': (0x34, 1), 'hlvx.wu': (0x34, 3), 'hlv.d': (0x36, 0)}
+HSV_CODE = {'hsv.b': 0x31, 'hsv.h': 0x33, 'hsv.w': 0x35, 'hsv.d': 0x37}
+# head -> (size, signed, hlvx)
+HLV_META = {'hlv.b': (1, True, False), 'hlv.bu': (1, False, False),
+            'hlv.h': (2, True, False), 'hlv.hu': (2, False, False),
+            'hlvx.hu': (2, False, True), 'hlv.w': (4, True, False),
+            'hlv.wu': (4, False, False), 'hlvx.wu': (4, False, True),
+            'hlv.d': (8, False, False)}
+HSV_SIZE = {'hsv.b': 1, 'hsv.h': 2, 'hsv.w': 4, 'hsv.d': 8}
+FENCE_F7 = {'sfence.vma': 0x09, 'hfence.vvma': 0x11, 'hfence.gvma': 0x31}
+RAW_MRET, RAW_SRET, RAW_WFI = 0x3020_0073, 0x1020_0073, 0x1050_0073
+
 
 class Trap(Exception):
-    def __init__(self, cause, tval, gpa=0, gva=False):
+    def __init__(self, cause, tval, gpa=0, gva=False, tinst=0):
         self.cause, self.tval, self.gpa, self.gva = cause, tval, gpa, gva
+        self.tinst = tinst
+
 
 class Machine:
     def __init__(self, ram_mb=64):
@@ -34,13 +119,21 @@ class Machine:
             'mstatus vsstatus medeleg mideleg hedeleg hideleg mie mip mtvec stvec vstvec '
             'mscratch sscratch vsscratch mepc sepc vsepc mcause scause vscause mtval stval '
             'vstval mtval2 htval mtinst htinst satp vsatp hgatp hstatus htimedelta '
-            'mcounteren scounteren hcounteren'
+            'mcounteren scounteren hcounteren menvcfg senvcfg henvcfg hgeie hgeip'
         ).split()}
         self.uart = bytearray()
+        self.virtio = {VIRTIO_QUEUE_BASE: bytearray(VIRTIO_SIZE),
+                       VIRTIO_BLK_BASE: bytearray(VIRTIO_SIZE)}
+        for regs in self.virtio.values():
+            regs[0:4] = VIRTIO_MAGIC.to_bytes(4, 'little')
+            regs[4:8] = (2).to_bytes(4, 'little')
         self.poweroff = None
         self.ir = {}
         self.insts = 0
         self.exc_counts = {}
+        # Optional hook: called as trap_hook(cause, target, trap) on every
+        # exception entry (the fuzzer records trap events through this).
+        self.trap_hook = None
 
     # ---------------- physical memory ----------------
     def pread(self, pa, size):
@@ -49,7 +142,10 @@ class Machine:
             return int.from_bytes(self.ram[off:off + size], 'little')
         if pa == SYSCON:
             return 0
-        raise Trap(5, pa)  # load access fault (approx)
+        for base, regs in self.virtio.items():
+            if base <= pa and pa + size <= base + VIRTIO_SIZE:
+                return int.from_bytes(regs[pa - base:pa - base + size], 'little')
+        raise Trap(5, pa)  # load access fault; callers rewrite tval to va
 
     def pwrite(self, pa, size, val):
         if RAM_BASE <= pa and pa + size <= RAM_BASE + len(self.ram):
@@ -63,13 +159,21 @@ class Machine:
         if pa == SYSCON:
             self.poweroff = val & 0xFFFFFFFF
             return
+        for base, regs in self.virtio.items():
+            if base <= pa and pa + size <= base + VIRTIO_SIZE:
+                regs[pa - base:pa - base + size] = \
+                    (val & ((1 << (8 * size)) - 1)).to_bytes(size, 'little')
+                return
         raise Trap(7, pa)
 
     # ---------------- translation (walker.rs) ----------------
-    def walk_g(self, va, gpa, access, implicit):
-        cause = {'x': 20, 'r': 21, 'w': 23}[access]
+    def walk_g(self, va, gpa, access, implicit, cause_access=None, hlvx=False, tinst=0):
+        # Guest-page-fault cause follows the ORIGINAL access (walker.rs
+        # stage2_cause uses ctx.access even for implicit PTE reads).
+        cause = {'x': 20, 'r': 21, 'w': 23}[cause_access or access]
+        ti = TINST_PSEUDO_PTE_READ if implicit else tinst
         if gpa >> 41:
-            raise Trap(cause, va, gpa, True)
+            raise Trap(cause, va, gpa, True, ti)
         a = (self.csr['hgatp'] & ((1 << 44) - 1)) << 12
         level = 2
         while True:
@@ -80,32 +184,40 @@ class Machine:
             V, R, W, X, U, A, D = (perms & 1, perms & 2, perms & 4, perms & 8,
                                    perms & 16, perms & 64, perms & 128)
             if not V or (not R and W):
-                raise Trap(cause, va, gpa, True)
+                raise Trap(cause, va, gpa, True, ti)
             if R or X:
                 span = (1 << (9 * level)) - 1
                 if ppn & span:
-                    raise Trap(cause, va, gpa, True)
+                    raise Trap(cause, va, gpa, True, ti)
                 if implicit and (not U or not R or not A):
-                    raise Trap(cause, va, gpa, True)
+                    raise Trap(cause, va, gpa, True, ti)
                 # final-access perms checked here for the non-implicit case
                 if not implicit:
                     if not U:
-                        raise Trap(cause, va, gpa, True)
-                    ok = {'x': X, 'r': R, 'w': W}[access]
+                        raise Trap(cause, va, gpa, True, ti)
+                    # G-stage MXR: only mstatus.MXR applies here; HLVX wants
+                    # X at this stage regardless (tlb.rs check_permissions).
+                    mxr2 = bool(self.csr['mstatus'] & MXR)
+                    if access == 'x':
+                        ok = X
+                    elif access == 'r':
+                        ok = X if hlvx else (R or (mxr2 and X))
+                    else:
+                        ok = W
                     if not ok:
-                        raise Trap(cause, va, gpa, True)
+                        raise Trap(cause, va, gpa, True, ti)
                     if not A or (access == 'w' and not D):
-                        raise Trap(cause, va, gpa, True)
+                        raise Trap(cause, va, gpa, True, ti)
                 page = (ppn & ~span) | ((gpa >> 12) & span)
                 return (page << 12) | (gpa & 0xFFF)
             if perms & (16 | 64 | 128):
-                raise Trap(cause, va, gpa, True)
+                raise Trap(cause, va, gpa, True, ti)
             level -= 1
             if level < 0:
-                raise Trap(cause, va, gpa, True)
+                raise Trap(cause, va, gpa, True, ti)
             a = ppn << 12
 
-    def translate(self, va, access, prv=None, virt=None):
+    def translate(self, va, access, prv=None, virt=None, hlvx=False, forced=False, tinst=0):
         prv = self.prv if prv is None else prv
         virt = self.virt if virt is None else virt
         cause1 = {'x': 12, 'r': 13, 'w': 15}[access]
@@ -128,7 +240,8 @@ class Machine:
             while True:
                 idx = (va >> (12 + 9 * level)) & 0x1FF
                 pte_addr = a + idx * 8
-                pte_pa = self.walk_g(va, pte_addr, 'r', True) if s2_on else pte_addr
+                pte_pa = (self.walk_g(va, pte_addr, 'r', True, cause_access=access)
+                          if s2_on else pte_addr)
                 raw = self.pread(pte_pa, 8)
                 perms = raw & 0xFF
                 ppn = (raw >> 10) & ((1 << 44) - 1)
@@ -140,15 +253,27 @@ class Machine:
                     span = (1 << (9 * level)) - 1
                     if ppn & span:
                         raise Trap(cause1, va, 0, virt)
-                    # stage-1 permission check (tlb.rs check_permissions)
+                    # stage-1 permission check (tlb.rs check_permissions).
+                    # HLV/HSV act "as if SUM were set" (walker.rs forced_virt)
+                    # and the stage-1 MXR disjunction is vsstatus.MXR ||
+                    # mstatus.MXR when V=1.
                     st = self.csr['vsstatus'] if virt else self.csr['mstatus']
-                    sum_ok = bool(st & SUM_BIT)
+                    sum_ok = bool(st & SUM_BIT) or forced
+                    if virt:
+                        mxr = bool((self.csr['vsstatus'] | self.csr['mstatus']) & MXR)
+                    else:
+                        mxr = bool(self.csr['mstatus'] & MXR)
                     user = prv == 0
                     if user and not U:
                         raise Trap(cause1, va, 0, virt)
                     if not user and U and (not sum_ok or access == 'x'):
                         raise Trap(cause1, va, 0, virt)
-                    ok = {'x': X, 'r': R, 'w': W}[access]
+                    if access == 'x':
+                        ok = X
+                    elif access == 'r':
+                        ok = X if hlvx else (R or (mxr and X))
+                    else:
+                        ok = W
                     if not ok:
                         raise Trap(cause1, va, 0, virt)
                     if not A or (access == 'w' and not D):
@@ -165,53 +290,154 @@ class Machine:
         else:
             gpa = va
         if s2_on:
-            return self.walk_g(va, gpa, access, False)
+            return self.walk_g(va, gpa, access, False, hlvx=hlvx, tinst=tinst)
         return gpa
 
-    # ---------------- CSR access (csr.rs redirection subset) --------------
+    # ---------------- CSR access (csr.rs) ----------------
     REDIR = {'sstatus': 'vsstatus', 'stvec': 'vstvec', 'sscratch': 'vsscratch',
              'sepc': 'vsepc', 'scause': 'vscause', 'stval': 'vstval',
              'satp': 'vsatp', 'sie': 'vsie', 'sip': 'vsip'}
-    SSTATUS_MASK = SIE | SPIE | SPP | SUM_BIT | MXR | (3 << 13)
+    SSTATUS_MASK = SSTATUS_WMASK  # compat alias
+
+    def _mip_read(self):
+        v = self.csr['mip']
+        if self.csr['hgeip'] & self.csr['hgeie']:
+            v |= SGEIP
+        return v
+
+    def _status_view(self, v):
+        out = (v & SSTATUS_WMASK) | (2 << 32)  # UXL=64
+        if v & FS_MASK == FS_MASK:
+            out |= SD
+        return out
+
+    def csr_check(self, name, raw, write):
+        """Mirror csr.rs check_access: raises Trap(2) / Trap(22); returns
+        the effective (redirected) CSR name."""
+        addr = CSR_ADDR.get(name)
+        if addr is None:
+            raise RuntimeError(f"emulator: unknown CSR {name!r}")
+        if write and (addr >> 10) & 3 == 3:
+            raise Trap(2, raw)  # read-only CSR
+        if self.virt and (name in H_CSRS or name in VS_CSRS):
+            raise Trap(22, raw)
+        eff = 3 if self.prv == 3 else (2 if (self.prv == 1 and not self.virt)
+                                       else (1 if self.prv == 1 else 0))
+        min_priv = (addr >> 8) & 3
+        if eff < min_priv:
+            if self.virt and min_priv <= 2:
+                raise Trap(22, raw)
+            raise Trap(2, raw)
+        if self.virt and name in self.REDIR:
+            return self.REDIR[name]
+        return name
 
     def csr_read(self, name):
         if self.virt and name in self.REDIR:
             name = self.REDIR[name]
+        c = self.csr
         if name == 'sstatus':
-            return self.csr['mstatus'] & self.SSTATUS_MASK
+            return self._status_view(c['mstatus'])
         if name == 'vsstatus':
-            return self.csr['vsstatus'] & self.SSTATUS_MASK
-        if name == 'mip' or name == 'mie':
-            return self.csr[name]
-        return self.csr[name]
+            return self._status_view(c['vsstatus'])
+        if name == 'mstatus':
+            v = c['mstatus']
+            return v | SD if v & FS_MASK == FS_MASK else v
+        if name == 'sie':
+            return c['mie'] & S_MASK_I
+        if name == 'sip':
+            return self._mip_read() & S_MASK_I
+        if name == 'hie':
+            return c['mie'] & HS_MASK_I
+        if name == 'hip':
+            return self._mip_read() & HS_MASK_I
+        if name == 'hvip':
+            return c['mip'] & VS_MASK_I
+        if name == 'vsie':
+            return (c['mie'] & c['hideleg'] & VS_MASK_I) >> 1
+        if name == 'vsip':
+            return (c['mip'] & c['hideleg'] & VS_MASK_I) >> 1
+        if name == 'mip':
+            return self._mip_read()
+        if name == 'mideleg':
+            return c['mideleg'] | VS_MASK_I | SGEIP
+        if name == 'misa':
+            return (2 << 62) | 1 | (1 << 5) | (1 << 7) | (1 << 8) | (1 << 12) | (1 << 18) | (1 << 20)
+        if name == 'mvendorid':
+            return 0
+        if name == 'marchid':
+            return 0x68767369
+        if name == 'mimpid':
+            return 1
+        if name == 'mhartid':
+            return 0
+        if name in ('cycle', 'time', 'instret', 'mcycle', 'minstret'):
+            raise RuntimeError("emulator: counter CSRs are not modeled")
+        return c[name]
 
     def csr_write(self, name, val):
         if self.virt and name in self.REDIR:
             name = self.REDIR[name]
+        c = self.csr
+        val &= M64
         if name == 'sstatus':
-            self.csr['mstatus'] = (self.csr['mstatus'] & ~self.SSTATUS_MASK) | (val & self.SSTATUS_MASK)
-            return
-        if name == 'vsstatus':
-            self.csr['vsstatus'] = (self.csr['vsstatus'] & ~self.SSTATUS_MASK) | (val & self.SSTATUS_MASK)
-            return
-        if name in ('satp', 'vsatp', 'hgatp'):
-            mode = val >> 60
-            if mode in (0, 8):
-                self.csr[name] = val & ~(3 if name == 'hgatp' else 0)
-            return
-        if name == 'medeleg':
-            wmask = 0xB109 | (1 << 4) | (1 << 6) | (1 << 9) | (1 << 10) | (0xF << 20)
-            self.csr[name] = val & wmask
-            return
-        if name == 'hedeleg':
-            wmask = (0x1FF | (1 << 12) | (1 << 13) | (1 << 15))
-            self.csr[name] = val & wmask
-            return
-        if name == 'hstatus':
-            wmask = H_GVA | SPV | SPVP | (1 << 9) | (0x3F << 12) | (7 << 20)
-            self.csr[name] = (self.csr[name] & ~wmask) | (val & wmask)
-            return
-        self.csr[name] = val & M64
+            c['mstatus'] = (c['mstatus'] & ~SSTATUS_WMASK) | (val & SSTATUS_WMASK)
+        elif name == 'vsstatus':
+            c['vsstatus'] = (c['vsstatus'] & ~SSTATUS_WMASK) | (val & SSTATUS_WMASK)
+        elif name == 'mstatus':
+            v = (c['mstatus'] & ~MSTATUS_WMASK) | (val & MSTATUS_WMASK)
+            if (v >> MPP_SHIFT) & 3 == 2:  # MPP WARL: only 0/1/3
+                v &= ~(3 << MPP_SHIFT)
+            c['mstatus'] = v
+        elif name == 'hstatus':
+            c['hstatus'] = (c['hstatus'] & ~HSTATUS_WMASK) | (val & HSTATUS_WMASK)
+        elif name == 'sie':
+            c['mie'] = (c['mie'] & ~S_MASK_I) | (val & S_MASK_I)
+        elif name == 'sip':
+            c['mip'] = (c['mip'] & ~SSIP) | (val & SSIP)
+        elif name == 'hie':
+            c['mie'] = (c['mie'] & ~HS_MASK_I) | (val & HS_MASK_I)
+        elif name == 'hip':
+            c['mip'] = (c['mip'] & ~VSSIP) | (val & VSSIP)
+        elif name == 'hvip':
+            c['mip'] = (c['mip'] & ~VS_MASK_I) | (val & VS_MASK_I)
+        elif name == 'vsie':
+            bits = (val << 1) & c['hideleg'] & VS_MASK_I
+            c['mie'] = (c['mie'] & ~(c['hideleg'] & VS_MASK_I)) | bits
+        elif name == 'vsip':
+            bit = (val << 1) & c['hideleg'] & VSSIP
+            c['mip'] = (c['mip'] & ~(c['hideleg'] & VSSIP)) | bit
+        elif name == 'mie':
+            c['mie'] = val & (M_MASK_I | S_MASK_I | HS_MASK_I)
+        elif name == 'mip':
+            mask = SSIP | STIP | SEIP | VS_MASK_I
+            c['mip'] = (c['mip'] & ~mask) | (val & mask)
+        elif name == 'mideleg':
+            c['mideleg'] = val & S_MASK_I
+        elif name == 'hideleg':
+            c['hideleg'] = val & VS_MASK_I
+        elif name == 'medeleg':
+            c['medeleg'] = val & MEDELEG_WMASK
+        elif name == 'hedeleg':
+            c['hedeleg'] = val & HEDELEG_WMASK
+        elif name in ('satp', 'vsatp'):
+            if val >> 60 in (0, 8):
+                c[name] = val
+        elif name == 'hgatp':
+            if val >> 60 in (0, 8):
+                c['hgatp'] = val & ~3  # 16K-aligned root (WARL)
+        elif name in ('mtvec', 'stvec', 'vstvec'):
+            c[name] = val & ~2
+        elif name in ('mepc', 'sepc', 'vsepc'):
+            c[name] = val & ~1
+        elif name in ('mcounteren', 'scounteren', 'hcounteren'):
+            c[name] = val & 7
+        elif name == 'hgeie':
+            c['hgeie'] = val & HGEIE_MASK
+        elif name in ('misa', 'mvendorid', 'marchid', 'mimpid', 'mhartid', 'hgeip'):
+            pass  # WARL-fixed / read-only
+        else:
+            c[name] = val
 
     # ---------------- traps (trap.rs) ----------------
     def exception_target(self, code):
@@ -227,6 +453,8 @@ class Machine:
         code = t.cause
         target = self.exception_target(code)
         self.exc_counts[(code, target)] = self.exc_counts.get((code, target), 0) + 1
+        if self.trap_hook:
+            self.trap_hook(code, target, t)
         if target == 'M':
             st = self.csr['mstatus']
             st &= ~(MPV | GVA | (3 << MPP_SHIFT) | MPIE)
@@ -243,6 +471,7 @@ class Machine:
             self.csr['mcause'] = code
             self.csr['mtval'] = t.tval
             self.csr['mtval2'] = t.gpa >> 2
+            self.csr['mtinst'] = t.tinst
             self.virt = False
             self.prv = 3
             self.pc = self.csr['mtvec'] & ~3
@@ -267,6 +496,7 @@ class Machine:
             self.csr['scause'] = code
             self.csr['stval'] = t.tval
             self.csr['htval'] = t.gpa >> 2
+            self.csr['htinst'] = t.tinst
             self.virt = False
             self.prv = 1
             self.pc = self.csr['stvec'] & ~3
@@ -294,6 +524,8 @@ class Machine:
             new |= MIE
         new |= MPIE
         new &= ~((3 << MPP_SHIFT) | MPV)
+        if mpp != 3:
+            new &= ~MPRV  # MPRV cleared when leaving M
         self.csr['mstatus'] = new
         self.prv = mpp
         self.virt = mpv and mpp != 3
@@ -319,7 +551,7 @@ class Machine:
             if st & SPIE:
                 new |= SIE
             new |= SPIE
-            new &= ~SPP
+            new &= ~(SPP | MPRV)
             self.csr['mstatus'] = new
             self.csr['hstatus'] &= ~SPV
             if spv:
@@ -330,16 +562,62 @@ class Machine:
             self.pc = self.csr['sepc']
 
     # ---------------- data access ----------------
-    def load(self, va, size, signed=False):
-        pa = self.translate(va, 'r')
-        v = self.pread(pa, size)
+    def data_env(self):
+        """Effective (prv, virt) for loads/stores: mstatus.MPRV substitutes
+        MPP/MPV while in M-mode (execute.rs data_access_env)."""
+        st = self.csr['mstatus']
+        if self.prv == 3 and st & MPRV:
+            mpp = (st >> MPP_SHIFT) & 3
+            mpv = bool(st & MPV) and mpp != 3
+            return mpp, mpv
+        return self.prv, self.virt
+
+    def load(self, va, size, signed=False, hlvx=False, forced=False,
+             prv=None, virt=None, tinst=0):
+        # Misaligned accesses are fine within a page; page-crossers trap.
+        if (va & 0xFFF) + size > 0x1000 and va % size != 0:
+            raise Trap(4, va)
+        if prv is None and not forced:
+            prv, virt = self.data_env()
+        pa = self.translate(va, 'r', prv=prv, virt=virt, hlvx=hlvx,
+                            forced=forced, tinst=tinst)
+        try:
+            v = self.pread(pa, size)
+        except Trap as t:
+            t.tval = va
+            raise
         if signed:
             v = sext(v, 8 * size) & M64
         return v
 
-    def store(self, va, size, val):
-        pa = self.translate(va, 'w')
-        self.pwrite(pa, size, val)
+    def store(self, va, size, val, forced=False, prv=None, virt=None, tinst=0):
+        if (va & 0xFFF) + size > 0x1000 and va % size != 0:
+            raise Trap(6, va)
+        if prv is None and not forced:
+            prv, virt = self.data_env()
+        pa = self.translate(va, 'w', prv=prv, virt=virt, forced=forced, tinst=tinst)
+        try:
+            self.pwrite(pa, size, val)
+        except Trap as t:
+            t.tval = va
+            raise
+
+    # ---------------- raw encodings for tval/tinst ----------------
+    @staticmethod
+    def _enc_csr(head, ops):
+        if head in ('csrw', 'csrs', 'csrc'):
+            name, rd, rs1 = ops[0], 0, reg(ops[1])
+            f3 = {'csrw': 1, 'csrs': 2, 'csrc': 3}[head]
+        elif head == 'csrr':
+            name, rd, rs1 = ops[1], reg(ops[0]), 0
+            f3 = 2
+        else:  # csrrw / csrrs / csrrc
+            name, rd, rs1 = ops[1], reg(ops[0]), reg(ops[2])
+            f3 = {'csrrw': 1, 'csrrs': 2, 'csrrc': 3}[head]
+        addr = CSR_ADDR.get(name.strip().lower())
+        if addr is None:
+            raise RuntimeError(f"emulator: unknown CSR {name!r}")
+        return (addr << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | 0x73
 
     # ---------------- execute ----------------
     def set_reg(self, r, v):
@@ -347,11 +625,14 @@ class Machine:
             self.regs[r] = v & M64
 
     def step(self):
+        """Execute one IR statement. Returns the statement's byte size when
+        it retires, or None when it traps (matching Rust minstret rules:
+        control flow retires, exceptions don't)."""
         try:
             pa = self.translate(self.pc, 'x')
         except Trap as t:
             self.take_trap(t)
-            return
+            return None
         ent = self.ir.get(pa)
         if ent is None:
             raise RuntimeError(f"fetch of non-code address pc={self.pc:#x} pa={pa:#x}")
@@ -375,7 +656,15 @@ class Machine:
                 self.set_reg(reg(ops[0]), rg[reg(ops[1])])
             elif head == 'neg':
                 self.set_reg(reg(ops[0]), (-rg[reg(ops[1])]) & M64)
-            elif head in ('add', 'sub', 'and', 'or', 'xor', 'mul', 'divu', 'remu', 'srl', 'sll'):
+            elif head == 'not':
+                self.set_reg(reg(ops[0]), (~rg[reg(ops[1])]) & M64)
+            elif head == 'sext.w':
+                self.set_reg(reg(ops[0]), sext(rg[reg(ops[1])], 32) & M64)
+            elif head in ('seqz', 'snez'):
+                a = rg[reg(ops[1])]
+                self.set_reg(reg(ops[0]), int(a == 0) if head == 'seqz' else int(a != 0))
+            elif head in ('add', 'sub', 'and', 'or', 'xor', 'mul', 'divu', 'remu',
+                          'srl', 'sll', 'sra', 'slt', 'sltu'):
                 a, b = rg[reg(ops[1])], rg[reg(ops[2])]
                 if head == 'add':
                     v = a + b
@@ -395,10 +684,30 @@ class Machine:
                     v = a if b == 0 else a % b
                 elif head == 'srl':
                     v = a >> (b & 63)
-                else:
+                elif head == 'sll':
                     v = a << (b & 63)
+                elif head == 'sra':
+                    v = sext(a, 64) >> (b & 63)
+                elif head == 'slt':
+                    v = int(sext(a, 64) < sext(b, 64))
+                else:
+                    v = int(a < b)
                 self.set_reg(reg(ops[0]), v & M64)
-            elif head in ('addi', 'andi', 'ori', 'xori'):
+            elif head in ('addw', 'subw', 'sllw', 'srlw', 'sraw'):
+                a, b = rg[reg(ops[1])], rg[reg(ops[2])]
+                sh = b & 31
+                if head == 'addw':
+                    v = a + b
+                elif head == 'subw':
+                    v = a - b
+                elif head == 'sllw':
+                    v = a << sh
+                elif head == 'srlw':
+                    v = (a & 0xFFFF_FFFF) >> sh
+                else:
+                    v = sext(a, 32) >> sh
+                self.set_reg(reg(ops[0]), sext(v, 32) & M64)
+            elif head in ('addi', 'andi', 'ori', 'xori', 'slti', 'sltiu'):
                 a = rg[reg(ops[1])]
                 imm = sext(ev(ops[2]), 64) & M64
                 if head == 'addi':
@@ -407,94 +716,187 @@ class Machine:
                     v = a & imm
                 elif head == 'ori':
                     v = a | imm
-                else:
+                elif head == 'xori':
                     v = a ^ imm
+                elif head == 'slti':
+                    v = int(sext(a, 64) < sext(imm, 64))
+                else:
+                    v = int(a < imm)
                 self.set_reg(reg(ops[0]), v & M64)
+            elif head == 'addiw':
+                v = rg[reg(ops[1])] + (sext(ev(ops[2]), 64) & M64)
+                self.set_reg(reg(ops[0]), sext(v, 32) & M64)
             elif head == 'slli':
                 self.set_reg(reg(ops[0]), (rg[reg(ops[1])] << (ev(ops[2]) & 63)) & M64)
             elif head == 'srli':
                 self.set_reg(reg(ops[0]), rg[reg(ops[1])] >> (ev(ops[2]) & 63))
             elif head == 'srai':
                 self.set_reg(reg(ops[0]), (sext(rg[reg(ops[1])], 64) >> (ev(ops[2]) & 63)) & M64)
-            elif head in ('ld', 'lw', 'lbu'):
-                off, base = mem_operand(ops[1], syms)
-                va = (rg[base] + off) & M64
-                if head == 'ld':
-                    v = self.load(va, 8)
-                elif head == 'lw':
-                    v = self.load(va, 4, signed=True)
+            elif head in ('slliw', 'srliw', 'sraiw'):
+                a, sh = rg[reg(ops[1])], ev(ops[2]) & 31
+                if head == 'slliw':
+                    v = a << sh
+                elif head == 'srliw':
+                    v = (a & 0xFFFF_FFFF) >> sh
                 else:
-                    v = self.load(va, 1)
-                self.set_reg(reg(ops[0]), v)
-            elif head in ('sd', 'sw', 'sb'):
+                    v = sext(a, 32) >> sh
+                self.set_reg(reg(ops[0]), sext(v, 32) & M64)
+            elif head in LOAD_F3:
                 off, base = mem_operand(ops[1], syms)
+                rd = reg(ops[0])
                 va = (rg[base] + off) & M64
-                size_b = {'sd': 8, 'sw': 4, 'sb': 1}[head]
-                self.store(va, size_b, rg[reg(ops[0])])
-            elif head in ('beq', 'bne', 'blt', 'bltu', 'bgeu', 'bgt', 'ble', 'bgtu', 'bleu'):
+                raw = ((off & 0xFFF) << 20) | (base << 15) | (LOAD_F3[head] << 12) | (rd << 7) | 0x03
+                size_b = {'lb': 1, 'lh': 2, 'lw': 4, 'ld': 8, 'lbu': 1, 'lhu': 2, 'lwu': 4}[head]
+                signed = head in ('lb', 'lh', 'lw')
+                v = self.load(va, size_b, signed=signed, tinst=raw & ~(0x1F << 15))
+                self.set_reg(rd, v)
+            elif head in STORE_F3:
+                off, base = mem_operand(ops[1], syms)
+                rs2 = reg(ops[0])
+                va = (rg[base] + off) & M64
+                raw = (((off >> 5) & 0x7F) << 25) | (rs2 << 20) | (base << 15) \
+                    | (STORE_F3[head] << 12) | ((off & 0x1F) << 7) | 0x23
+                size_b = {'sb': 1, 'sh': 2, 'sw': 4, 'sd': 8}[head]
+                self.store(va, size_b, rg[rs2], tinst=raw & ~(0x1F << 15))
+            elif head in HLV_CODE:
+                f7, rs2c = HLV_CODE[head]
+                rd = reg(ops[0])
+                off, base = mem_operand(ops[1], syms)
+                raw = (f7 << 25) | (rs2c << 20) | (base << 15) | (4 << 12) | (rd << 7) | 0x73
+                if self.virt:
+                    raise Trap(22, raw)
+                if self.prv == 0 and not (self.csr['hstatus'] & HU):
+                    raise Trap(2, raw)
+                eprv = 1 if self.csr['hstatus'] & SPVP else 0
+                size_b, signed, hlvx = HLV_META[head]
+                va = (rg[base] + off) & M64
+                v = self.load(va, size_b, signed=signed, hlvx=hlvx, forced=True,
+                              prv=eprv, virt=True, tinst=raw & ~(0x1F << 15))
+                self.set_reg(rd, v)
+            elif head in HSV_CODE:
+                rs2 = reg(ops[0])
+                off, base = mem_operand(ops[1], syms)
+                raw = (HSV_CODE[head] << 25) | (rs2 << 20) | (base << 15) | (4 << 12) | 0x73
+                if self.virt:
+                    raise Trap(22, raw)
+                if self.prv == 0 and not (self.csr['hstatus'] & HU):
+                    raise Trap(2, raw)
+                eprv = 1 if self.csr['hstatus'] & SPVP else 0
+                va = (rg[base] + off) & M64
+                self.store(va, HSV_SIZE[head], rg[rs2], forced=True,
+                           prv=eprv, virt=True, tinst=raw & ~(0x1F << 15))
+            elif head in ('beq', 'bne', 'blt', 'bltu', 'bgeu', 'bge', 'bgt', 'ble', 'bgtu', 'bleu'):
                 a, b = rg[reg(ops[0])], rg[reg(ops[1])]
                 sa, sb = sext(a, 64), sext(b, 64)
                 take = {'beq': a == b, 'bne': a != b, 'blt': sa < sb, 'bltu': a < b,
-                        'bgeu': a >= b, 'bgt': sa > sb, 'ble': sa <= sb,
+                        'bgeu': a >= b, 'bge': sa >= sb, 'bgt': sa > sb, 'ble': sa <= sb,
                         'bgtu': a > b, 'bleu': a <= b}[head]
                 if take:
-                    self.pc = self.pc + (ev(ops[2]) - pa)
-                    return
+                    nxt = (self.pc + (ev(ops[2]) - pa)) & M64
             elif head in ('beqz', 'bnez', 'bgez', 'bltz', 'blez', 'bgtz'):
                 a = sext(rg[reg(ops[0])], 64)
                 take = {'beqz': a == 0, 'bnez': a != 0, 'bgez': a >= 0,
                         'bltz': a < 0, 'blez': a <= 0, 'bgtz': a > 0}[head]
                 if take:
-                    self.pc = self.pc + (ev(ops[1]) - pa)
-                    return
+                    nxt = (self.pc + (ev(ops[1]) - pa)) & M64
             elif head in ('j', 'tail'):
-                self.pc = self.pc + (ev(ops[0]) - pa)
-                return
+                nxt = (self.pc + (ev(ops[0]) - pa)) & M64
             elif head in ('jal', 'call'):
                 target = ops[-1]
                 rd = 1 if head == 'call' or len(ops) == 1 else reg(ops[0])
                 self.set_reg(rd, nxt)
-                self.pc = self.pc + (ev(target) - pa)
-                return
+                nxt = (self.pc + (ev(target) - pa)) & M64
             elif head == 'ret':
-                self.pc = rg[1]
-                return
+                nxt = rg[1]
             elif head == 'jr':
-                self.pc = rg[reg(ops[0])]
-                return
-            elif head == 'csrw':
-                self.csr_write(ops[0], rg[reg(ops[1])])
-            elif head == 'csrr':
-                self.set_reg(reg(ops[0]), self.csr_read(ops[1]))
-            elif head == 'csrs':
-                self.csr_write(ops[0], self.csr_read(ops[0]) | rg[reg(ops[1])])
-            elif head == 'csrc':
-                self.csr_write(ops[0], self.csr_read(ops[0]) & ~rg[reg(ops[1])])
-            elif head == 'csrrw':
-                old = self.csr_read(ops[1])
-                self.csr_write(ops[1], rg[reg(ops[2])])
-                self.set_reg(reg(ops[0]), old)
+                nxt = rg[reg(ops[0])]
+            elif head in ('csrw', 'csrr', 'csrs', 'csrc', 'csrrw', 'csrrs', 'csrrc'):
+                raw = self._enc_csr(head, ops)
+                if head in ('csrw', 'csrs', 'csrc'):
+                    name, rd, rs = ops[0].strip().lower(), 0, reg(ops[1])
+                elif head == 'csrr':
+                    name, rd, rs = ops[1].strip().lower(), reg(ops[0]), 0
+                else:
+                    name, rd, rs = ops[1].strip().lower(), reg(ops[0]), reg(ops[2])
+                # TVM/VTVM gating for satp (execute.rs exec_csr).
+                if name == 'satp':
+                    if self.prv == 1 and not self.virt and self.csr['mstatus'] & TVM:
+                        raise Trap(2, raw)
+                    if self.prv == 1 and self.virt and self.csr['hstatus'] & VTVM:
+                        raise Trap(22, raw)
+                write = head in ('csrw', 'csrrw')
+                ename = self.csr_check(name, raw, write)
+                old = self.csr_read(ename)
+                if head in ('csrw', 'csrrw'):
+                    do_write, new = True, rg[rs]
+                elif head in ('csrs', 'csrrs'):
+                    do_write, new = rs != 0, old | rg[rs]
+                else:  # csrc / csrrc
+                    do_write, new = rs != 0, old & ~rg[rs]
+                if do_write:
+                    # Re-check with write intent (read-only CSR via csrs rs!=0).
+                    self.csr_check(name, raw, True)
+                    self.csr_write(ename, new)
+                self.set_reg(rd, old)
             elif head == 'ecall':
                 cause = {(0, False): 8, (0, True): 8, (1, False): 9, (1, True): 10,
                          (3, False): 11, (3, True): 11}[(self.prv, self.virt)]
                 raise Trap(cause, 0)
+            elif head == 'ebreak':
+                raise Trap(3, self.pc)
             elif head == 'mret':
+                if self.prv != 3:
+                    raise Trap(2, RAW_MRET)
                 self.mret()
-                return
+                nxt = self.pc
             elif head == 'sret':
+                if self.prv == 0:
+                    raise Trap(22 if self.virt else 2, RAW_SRET)
+                if self.prv == 1 and not self.virt and self.csr['mstatus'] & TSR:
+                    raise Trap(2, RAW_SRET)
+                if self.prv == 1 and self.virt and self.csr['hstatus'] & VTSR:
+                    raise Trap(22, RAW_SRET)
                 self.sret()
-                return
-            elif head in ('sfence.vma', 'hfence.gvma', 'hfence.vvma', 'fence', 'fence.i', 'nop'):
-                pass
+                nxt = self.pc
             elif head == 'wfi':
-                raise RuntimeError("wfi reached (stack should never wfi)")
+                if self.prv != 3 and self.csr['mstatus'] & TW:
+                    raise Trap(2, RAW_WFI)
+                if self.virt:
+                    if self.prv == 0:
+                        raise Trap(22, RAW_WFI)
+                    if self.csr['hstatus'] & VTW:
+                        raise Trap(22, RAW_WFI)
+                # Legal WFI: no interrupts are modeled, treat as nop.
+            elif head in ('sfence.vma', 'hfence.vvma', 'hfence.gvma'):
+                rs1 = reg(ops[0]) if len(ops) >= 1 else 0
+                rs2 = reg(ops[1]) if len(ops) >= 2 else 0
+                raw = (FENCE_F7[head] << 25) | (rs2 << 20) | (rs1 << 15) | 0x73
+                if head == 'sfence.vma':
+                    if self.prv == 0:
+                        raise Trap(22 if self.virt else 2, raw)
+                    if self.prv == 1 and not self.virt and self.csr['mstatus'] & TVM:
+                        raise Trap(2, raw)
+                    if self.prv == 1 and self.virt and self.csr['hstatus'] & VTVM:
+                        raise Trap(22, raw)
+                else:
+                    if self.virt:
+                        raise Trap(22, raw)
+                    if self.prv == 0:
+                        raise Trap(2, raw)
+                    if (head == 'hfence.gvma' and self.prv == 1
+                            and self.csr['mstatus'] & TVM):
+                        raise Trap(2, raw)
+                # No TLB is modeled: a legal fence is a no-op.
+            elif head in ('fence', 'fence.i', 'nop'):
+                pass
             else:
                 raise RuntimeError(f"emulator: unhandled mnemonic {head!r} at line {ln}")
         except Trap as t:
             self.take_trap(t)
-            return
+            return None
         self.pc = nxt
         self.insts += 1
+        return size
 
     def run(self, max_steps):
         for _ in range(max_steps):

@@ -1,0 +1,265 @@
+#!/usr/bin/env python3
+"""Lockstep differential replay of an hvsim fuzz trace.
+
+`hvsim fuzz --seed S --insts N --engine E --prog-out p.s --trace-out t.jsonl`
+emits the generated program plus a JSONL trace of the Rust engine's run:
+
+  {"t":"e","n":<retired>,"cause":<code>,"tgt":"M|HS|VS"}   trap events
+  {"t":"s","n":<retired>,"pc":"0x..","h":"0x.."}           sync records
+  {"t":"f","n":..,"pc":..,"prv":..,"virt":0|1,"poweroff":..,
+   "regs":[..32 hex..],"csr":{..},"ram":"<sha256>"}        final state
+
+This script re-executes the same program on the pure-Python oracle
+(emu.py) and verifies, in order: the trap history, every sync record that
+lands on an oracle statement boundary (the Rust tick engine records
+machine-instruction boundaries; multi-word `li`/`la` expansions have no
+oracle-visible interior), and the full final state — x0..x30 (x31 is the
+trap handlers' sacrificial scratch), pc, privilege, V, the raw CSR file,
+the poweroff code, and a SHA-256 over the data window of RAM.
+
+Exit codes: 0 = lockstep clean, 2 = divergence, 1 = usage/internal error.
+
+`--shrink` mode (needs `--hvsim CMD` to re-run the Rust side) greedily
+deletes instruction lines from the program while the divergence persists
+and writes a minimal reproducer.
+"""
+import argparse
+import hashlib
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from asm2ir import assemble
+from emu import Machine
+
+RAM_BASE = 0x8000_0000
+DIGEST_OFF = 0x40_0000
+DIGEST_LEN = 0x40_0000
+M64 = (1 << 64) - 1
+FNV_OFFSET = 0xCBF2_9CE4_8422_2325
+FNV_PRIME = 0x100_0000_01B3
+# mstatus.UXL/SXL are read-only 64-bit indicators the Rust side hardwires
+# to 2 and the oracle leaves at 0; everything else must match bit-exactly.
+MSTATUS_XL_MASK = 0xF << 32
+
+
+def state_hash(m):
+    h = FNV_OFFSET
+    for i in range(31):
+        for b in m.regs[i].to_bytes(8, "little"):
+            h = ((h ^ b) * FNV_PRIME) & M64
+    h = ((h ^ m.prv) * FNV_PRIME) & M64
+    h = ((h ^ (1 if m.virt else 0)) * FNV_PRIME) & M64
+    return h
+
+
+def load_trace(path):
+    syncs, traps, final = [], [], None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if rec["t"] == "s":
+                syncs.append((rec["n"], int(rec["pc"], 16), int(rec["h"], 16)))
+            elif rec["t"] == "e":
+                traps.append((rec["n"], rec["cause"], rec["tgt"]))
+            elif rec["t"] == "f":
+                final = rec
+    if final is None:
+        raise SystemExit("trace has no final ('f') record — truncated run?")
+    return syncs, traps, final
+
+
+def replay(src, sync_ats, max_steps):
+    """Run the oracle; returns (machine, boundaries{cum: pc}, hashes{cum: h},
+    traps[(cum, cause, tgt)], cum)."""
+    m = Machine(ram_mb=8)
+    ir, data, _syms = assemble(src, RAM_BASE)
+    m.ir.update(ir)
+    for addr, blob in data:
+        off = addr - RAM_BASE
+        m.ram[off:off + len(blob)] = blob
+    m.pc = RAM_BASE
+
+    cum = 0
+    boundaries, hashes, traps = {}, {}, []
+    m.trap_hook = lambda code, target, t: traps.append((cum, code, target))
+    for _ in range(max_steps):
+        if m.poweroff is not None:
+            break
+        size = m.step()
+        if size is None:
+            continue
+        cum += size // 4
+        boundaries[cum] = m.pc
+        if cum in sync_ats:
+            hashes[cum] = state_hash(m)
+    return m, boundaries, hashes, traps, cum
+
+
+def compare(src, trace_path, max_steps, verbose=True):
+    """Returns a list of divergence strings (empty = lockstep clean)."""
+    syncs, traps, final = load_trace(trace_path)
+    sync_ats = {n for n, _, _ in syncs}
+    try:
+        m, boundaries, hashes, py_traps, cum = replay(src, sync_ats, max_steps)
+    except RuntimeError as e:
+        return [f"oracle replay aborted: {e}"]
+
+    out = []
+
+    # Trap history first: a control-flow split shows up here with the
+    # retired-instruction index of the first disagreement.
+    for i, (a, b) in enumerate(zip(traps, py_traps)):
+        if a != b:
+            out.append(
+                f"trap[{i}] diverges: rust (at={a[0]}, cause={a[1]}, tgt={a[2]})"
+                f" vs oracle (at={b[0]}, cause={b[1]}, tgt={b[2]})")
+            return out
+    if len(traps) != len(py_traps):
+        out.append(f"trap count diverges: rust {len(traps)} vs oracle {len(py_traps)}")
+        return out
+
+    # Sync records at statement boundaries. Records inside a multi-word
+    # li/la expansion have no oracle counterpart and are skipped.
+    matched = 0
+    for n, pc, h in syncs:
+        if n not in boundaries:
+            continue
+        matched += 1
+        if boundaries[n] != pc:
+            out.append(
+                f"pc diverges at retired={n}: rust {pc:#x} vs oracle {boundaries[n]:#x}")
+            return out
+        if hashes.get(n) != h:
+            out.append(
+                f"state hash diverges at retired={n} (pc={pc:#x}):"
+                f" rust {h:#x} vs oracle {hashes.get(n, 0):#x}")
+            return out
+    if syncs and matched == 0:
+        out.append("no sync record landed on an oracle boundary — timeline drift")
+        return out
+
+    # Final architectural state.
+    if final["n"] != cum:
+        out.append(f"retired count diverges: rust {final['n']} vs oracle {cum}")
+    f_regs = [int(v, 16) for v in final["regs"]]
+    for i in range(31):
+        if f_regs[i] != m.regs[i]:
+            out.append(f"final x{i} diverges: rust {f_regs[i]:#x} vs oracle {m.regs[i]:#x}")
+    if int(final["pc"], 16) != m.pc:
+        out.append(f"final pc diverges: rust {int(final['pc'], 16):#x} vs oracle {m.pc:#x}")
+    if final["prv"] != m.prv:
+        out.append(f"final prv diverges: rust {final['prv']} vs oracle {m.prv}")
+    if final["virt"] != (1 if m.virt else 0):
+        out.append(f"final V diverges: rust {final['virt']} vs oracle {int(m.virt)}")
+    rust_off = final["poweroff"]
+    if rust_off != m.poweroff:
+        out.append(f"poweroff diverges: rust {rust_off} vs oracle {m.poweroff}")
+    for name, sval in final["csr"].items():
+        rv, pv = int(sval, 16), m.csr[name]
+        if name == "mstatus":
+            rv &= ~MSTATUS_XL_MASK
+            pv &= ~MSTATUS_XL_MASK
+        if rv != pv:
+            out.append(f"final {name} diverges: rust {rv:#x} vs oracle {pv:#x}")
+    sha = hashlib.sha256(m.ram[DIGEST_OFF:DIGEST_OFF + DIGEST_LEN]).hexdigest()
+    if final["ram"] != sha:
+        out.append(f"RAM digest diverges: rust {final['ram']} vs oracle {sha}")
+
+    if verbose and not out:
+        print(f"lockstep clean: {cum} retired insts, {len(py_traps)} traps, "
+              f"{matched} sync records matched")
+    return out
+
+
+# ---------------------------------------------------------------- shrink
+
+INST_RE = re.compile(r"^\s+[a-z]")
+
+
+def still_diverges(lines, hvsim, engine, max_steps, workdir):
+    src = "\n".join(lines) + "\n"
+    prog = os.path.join(workdir, "cand.s")
+    trace = os.path.join(workdir, "cand.jsonl")
+    with open(prog, "w") as f:
+        f.write(src)
+    r = subprocess.run(
+        hvsim + ["fuzz", "--prog", prog, "--engine", engine, "--trace-out", trace],
+        capture_output=True)
+    if r.returncode != 0 or not os.path.exists(trace):
+        return False  # candidate no longer even runs — reject it
+    try:
+        return bool(compare(src, trace, max_steps, verbose=False))
+    except (SystemExit, Exception):
+        return False
+
+
+def shrink(src, hvsim, engine, max_steps, out_path):
+    lines = src.splitlines()
+    with tempfile.TemporaryDirectory() as workdir:
+        if not still_diverges(lines, hvsim, engine, max_steps, workdir):
+            print("shrink: baseline does not diverge — nothing to do", file=sys.stderr)
+            return False
+        # Greedy delta-debugging over instruction lines (labels and
+        # directives stay; removing them would orphan references).
+        chunk = max(1, len(lines) // 2)
+        while chunk >= 1:
+            i = 0
+            while i < len(lines):
+                cand_idx = [
+                    j for j in range(i, min(i + chunk, len(lines)))
+                    if INST_RE.match(lines[j])
+                ]
+                if cand_idx:
+                    cand = [l for j, l in enumerate(lines) if j not in set(cand_idx)]
+                    if still_diverges(cand, hvsim, engine, max_steps, workdir):
+                        lines = cand
+                        continue  # retry same window against shifted lines
+                i += chunk
+            chunk //= 2
+    with open(out_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    kept = sum(1 for l in lines if INST_RE.match(l))
+    print(f"shrink: wrote {out_path} ({kept} instruction lines)")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--prog", required=True, help="generated .s program")
+    ap.add_argument("--trace", required=True, help="JSONL trace from hvsim fuzz")
+    ap.add_argument("--max-steps", type=int, default=5_000_000)
+    ap.add_argument("--shrink", action="store_true",
+                    help="on divergence, shrink --prog to a minimal reproducer")
+    ap.add_argument("--hvsim", default="",
+                    help="hvsim command for --shrink, e.g. 'target/release/hvsim'")
+    ap.add_argument("--engine", default="block", choices=["tick", "block"],
+                    help="engine to re-run during --shrink")
+    ap.add_argument("--shrink-out", default="repro_min.s")
+    args = ap.parse_args()
+
+    with open(args.prog) as f:
+        src = f.read()
+    problems = compare(src, args.trace, args.max_steps)
+    if not problems:
+        return
+    print("LOCKSTEP DIVERGENCE:", file=sys.stderr)
+    for p in problems:
+        print(f"  {p}", file=sys.stderr)
+    if args.shrink:
+        if not args.hvsim:
+            print("--shrink needs --hvsim CMD", file=sys.stderr)
+            sys.exit(1)
+        shrink(src, args.hvsim.split(), args.engine, args.max_steps, args.shrink_out)
+    sys.exit(2)
+
+
+if __name__ == "__main__":
+    main()

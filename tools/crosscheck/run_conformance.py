@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Run the H-extension conformance suites under the Python oracle.
+
+The suites live in rust/src/sw/asm/conformance/*.s and are the same program
+texts `hvsim conform` runs on the Rust tick and block engines; here they run
+on the third, independent implementation. Each suite must power off through
+the syscon device with the PASS code.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from asm2ir import assemble
+from emu import Machine
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SUITE_DIR = os.path.join(HERE, "..", "..", "rust", "src", "sw", "asm", "conformance")
+RAM_BASE = 0x8000_0000
+PASS_CODE = 0x5555
+
+
+def run_suite(path, max_steps=2_000_000):
+    with open(path) as f:
+        src = f.read()
+    m = Machine(ram_mb=8)
+    ir, data, _syms = assemble(src, RAM_BASE)
+    m.ir.update(ir)
+    for addr, blob in data:
+        off = addr - RAM_BASE
+        m.ram[off:off + len(blob)] = blob
+    m.pc = RAM_BASE
+    reason = m.run(max_steps)
+    return reason, m.poweroff
+
+
+def main():
+    names = sys.argv[1:] or sorted(
+        f[:-2] for f in os.listdir(SUITE_DIR) if f.endswith(".s"))
+    failed = []
+    for name in names:
+        reason, code = run_suite(os.path.join(SUITE_DIR, name + ".s"))
+        ok = reason == "poweroff" and code == PASS_CODE
+        shown = "none" if code is None else hex(code)
+        print(f"{'PASS' if ok else 'FAIL'} {name} ({reason}, syscon={shown})")
+        if not ok:
+            failed.append(name)
+    if failed:
+        print(f"{len(failed)} conformance suite(s) failed: {', '.join(failed)}")
+        sys.exit(1)
+    print(f"all {len(names)} conformance suites passed under the Python oracle")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,560 @@
+#!/usr/bin/env python3
+"""Cross-validate the Python oracle (emu.py) against the hypervisor
+semantics pinned by rust/tests/riscv_hyp_tests.rs: the same worlds —
+two-stage Sv39/Sv39x4 translation, HLV/HSV/HLVX under every privilege
+gate, the per-stage MXR rules, HFENCE/WFI/SRET legality matrices, and
+the trap CSR writes (mstatus.GVA/MPV, hstatus.SPV/SPVP, htval/mtval2,
+htinst/mtinst) — must produce the same causes, targets, and CSR values
+here as the Rust tests assert over cpu/{execute,trap}.rs and
+mmu/{walker,tlb}.rs. Run directly: python3 test_emu_hyp.py"""
+import os, sys
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from asm2ir import assemble
+from emu import (Machine, RAM_BASE, MPV, GVA, H_GVA, SPV, SPVP, HU, MXR,
+                 SUM_BIT, TW, TSR, TVM, VTW, VTSR, VTVM, VSSIP, SGEIP,
+                 VS_MASK_I, MPP_SHIFT, MPRV, TINST_PSEUDO_PTE_READ, CSR_ADDR)
+
+# pte perms
+V, R, W, X, U, A, D = 1, 2, 4, 8, 16, 64, 128
+RWXAD = V | R | W | X | A | D          # 0xcf
+RWXADU = RWXAD | U                     # 0xdf
+XO_U = V | X | A | U                   # execute-only leaf (G / user VS)
+XO_AD_U = V | X | A | D | U
+HOST_OFF = 0x100_0000                  # G-stage backing offset (world_two_stage)
+VMID_SHIFT = ASID_SHIFT = 44
+TRAMPOLINE = RAM_BASE + 0xF000
+
+
+class World:
+    """Python twin of riscv_hyp_tests.rs `World`."""
+
+    def __init__(self):
+        self.m = Machine(ram_mb=32)
+        self.alloc = RAM_BASE + 0x40_0000
+        self.gpa_alloc = RAM_BASE + 0x28_0000
+        self.traps = []
+        self.m.trap_hook = lambda code, target, t: self.traps.append(
+            (code, target, t.tval, t.gpa, t.gva, t.tinst))
+        self.m.csr['mtvec'] = TRAMPOLINE
+
+    # -- physical helpers --
+    def w64(self, pa, val):
+        off = pa - RAM_BASE
+        self.m.ram[off:off + 8] = (val & ((1 << 64) - 1)).to_bytes(8, 'little')
+
+    def r64(self, pa):
+        off = pa - RAM_BASE
+        return int.from_bytes(self.m.ram[off:off + 8], 'little')
+
+    def alloc_page(self, bytes_=0x1000):
+        self.alloc = (self.alloc + bytes_ - 1) & ~(bytes_ - 1)
+        pa = self.alloc
+        self.alloc += bytes_
+        return pa
+
+    def map(self, root, va, pa, perms, x4=False, level=0):
+        """Install a leaf at `level` (0=4K, 1=2M) in an Sv39/Sv39x4 table."""
+        a = root
+        for lvl in (2, 1, 0):
+            idx = (va >> (12 + 9 * lvl)) & (0x7FF if (x4 and lvl == 2) else 0x1FF)
+            ent = a + idx * 8
+            if lvl == level:
+                self.w64(ent, ((pa >> 12) << 10) | perms)
+                return
+            nxt = self.r64(ent)
+            if nxt & 1:
+                a = ((nxt >> 10) & ((1 << 44) - 1)) << 12
+            else:
+                t = self.alloc_page()
+                self.w64(ent, ((t >> 12) << 10) | V)
+                a = t
+
+    def setup_two_stage(self):
+        g_root = self.alloc_page(0x4000)
+        self.m.csr['hgatp'] = (8 << 60) | (7 << VMID_SHIFT) | (g_root >> 12)
+        for i in range(2048):  # eager GPA [RAM_BASE, +8M) -> host +16M
+            gpa = RAM_BASE + i * 0x1000
+            self.map(g_root, gpa, gpa + HOST_OFF, RWXADU, x4=True)
+        vs_root_gpa = RAM_BASE + 0x20_0000
+        self.m.csr['vsatp'] = (8 << 60) | (3 << ASID_SHIFT) | (vs_root_gpa >> 12)
+        return vs_root_gpa
+
+    def g_root(self):
+        return (self.m.csr['hgatp'] & ((1 << 44) - 1)) << 12
+
+    def map_vs(self, vs_root_gpa, gva, gpa, perms):
+        """VS-stage mapping; the tables live in guest RAM (host = gpa+16M)."""
+        a = vs_root_gpa
+        for lvl in (2, 1, 0):
+            idx = (gva >> (12 + 9 * lvl)) & 0x1FF
+            ent_host = a + HOST_OFF + idx * 8
+            if lvl == 0:
+                self.w64(ent_host, ((gpa >> 12) << 10) | perms)
+                return
+            nxt = self.r64(ent_host)
+            if nxt & 1:
+                a = ((nxt >> 10) & ((1 << 44) - 1)) << 12
+            else:
+                self.gpa_alloc += 0x1000
+                t = self.gpa_alloc
+                self.w64(ent_host, ((t >> 12) << 10) | V)
+                a = t
+
+    def load_code(self, pa, src):
+        ir, data, _ = assemble(src, pa)
+        self.m.ir.update(ir)
+        for addr, blob in data:
+            off = addr - RAM_BASE
+            self.m.ram[off:off + len(blob)] = blob
+
+    def run_to_trap(self, n=50):
+        for _ in range(n):
+            before = len(self.traps)
+            self.m.step()
+            if len(self.traps) > before:
+                return self.traps[-1]
+        raise AssertionError(f"no trap in {n} steps, pc={self.m.pc:#x}")
+
+
+def hs_at(src, prv=1):
+    w = World()
+    w.load_code(RAM_BASE, src)
+    w.m.pc = RAM_BASE
+    w.m.prv = prv
+    return w
+
+
+def enter_vs(w, pc):
+    w.m.prv, w.m.virt, w.m.pc = 1, True, pc
+
+
+CHECKS = []
+
+
+def check(fn):
+    CHECKS.append(fn)
+    return fn
+
+
+# ---------------- ecall / ebreak causes ----------------
+@check
+def ecall_cause_matrix():
+    for prv, virt, cause in ((3, False, 11), (1, False, 9), (1, True, 10),
+                             (0, False, 8), (0, True, 8)):
+        w = hs_at("ecall\n", prv=prv)
+        w.m.virt = virt
+        c, tgt, tval, *_ = w.run_to_trap()
+        assert (c, tgt, tval) == (cause, 'M', 0), (prv, virt, c, tgt)
+
+
+# ---------------- HLV/HSV/HLVX privilege gates ----------------
+def hlv_world():
+    w = hs_at("li t0, 0x6000\n hlv.d t1, (t0)\n ebreak\n")
+    vs_root = w.setup_two_stage()
+    gpa = RAM_BASE + 0x12000
+    w.map_vs(vs_root, 0x6000, gpa, RWXADU)
+    w.w64(gpa + HOST_OFF, 0xfeed_beef_dead_cafe)
+    w.m.csr['hstatus'] |= SPVP
+    return w
+
+
+@check
+def hlv_reads_guest_data_from_hs():
+    w = hlv_world()
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M'), (c, tgt)
+    assert w.m.regs[6] == 0xfeed_beef_dead_cafe, hex(w.m.regs[6])
+
+
+@check
+def hsv_writes_guest_data_from_m():
+    w = hs_at("li t0, 0x6000\n li t1, 0x1234\n hsv.w t1, (t0)\n ebreak\n", prv=3)
+    vs_root = w.setup_two_stage()
+    gpa = RAM_BASE + 0x12000
+    w.map_vs(vs_root, 0x6000, gpa, RWXADU)
+    w.m.csr['hstatus'] |= SPVP
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M'), (c, tgt)
+    assert w.r64(gpa + HOST_OFF) & 0xFFFF_FFFF == 0x1234
+
+
+@check
+def hlv_from_vs_is_virtual_instruction():
+    w = hlv_world()
+    enter_vs(w, RAM_BASE)
+    vs_root = RAM_BASE + 0x20_0000
+    w.map_vs(vs_root, RAM_BASE, RAM_BASE, RWXAD)  # guest identity code map
+    w.load_code(RAM_BASE + HOST_OFF, "li t0, 0x6000\n hlv.d t1, (t0)\n")
+    c, tgt, tval, *_ = w.run_to_trap()
+    raw_hlv_d = (0x36 << 25) | (5 << 15) | (4 << 12) | (6 << 7) | 0x73
+    assert (c, tgt, tval) == (22, 'M', raw_hlv_d), (c, tgt, hex(tval))
+
+
+@check
+def hlv_from_user_gated_by_hstatus_hu():
+    w = hlv_world()
+    w.m.prv = 0
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (2, 'M'), (c, tgt)
+    w = hlv_world()
+    w.m.prv = 0
+    w.m.csr['hstatus'] |= HU
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M') and w.m.regs[6] == 0xfeed_beef_dead_cafe
+
+
+@check
+def hlv_page_permission_fault():
+    w = hs_at("li t0, 0x6000\n hlv.d t1, (t0)\n")
+    vs_root = w.setup_two_stage()
+    gpa = RAM_BASE + 0x12000
+    w.map_vs(vs_root, 0x6000, gpa, V | W | A | D | U)  # no R
+    w.m.csr['hstatus'] |= SPVP
+    c, tgt, tval, gpa_r, gva, tinst = w.run_to_trap()
+    assert (c, tgt, tval, gva) == (13, 'M', 0x6000, True), (c, tgt, hex(tval))
+    # Stage-1 faults carry no transformed instruction (walker.rs
+    # stage1_fault): mtinst must be 0 and mtval2 must stay clear.
+    assert tinst == 0 and w.m.csr['mtinst'] == 0 and w.m.csr['mtval2'] == 0
+
+
+@check
+def hlvx_requires_execute_permission():
+    # R-only page: plain HLV reads it, HLVX wants X and faults.
+    for head, ok in (("hlv.w", True), ("hlvx.wu", False)):
+        w = hs_at(f"li t0, 0x6000\n {head} t1, (t0)\n ebreak\n")
+        vs_root = w.setup_two_stage()
+        gpa = RAM_BASE + 0x12000
+        w.map_vs(vs_root, 0x6000, gpa, V | R | A | U)
+        w.w64(gpa + HOST_OFF, 0x55aa_1234)
+        w.m.csr['hstatus'] |= SPVP
+        c, tgt, *_ = w.run_to_trap()
+        if ok:
+            assert (c, tgt) == (3, 'M') and w.m.regs[6] == 0x55aa_1234
+        else:
+            assert (c, tgt) == (13, 'M'), (head, c, tgt)
+
+
+# ---------------- per-stage MXR rules (riscv_hyp_tests mxr_world) --------
+def mxr_world(vs_perms, g_perms):
+    w = hs_at("li t0, 0x7000\n hlv.d t1, (t0)\n ebreak\n")
+    vs_root = w.setup_two_stage()
+    gpa = RAM_BASE + 0x800_0000          # outside the eager window
+    host_pa = RAM_BASE + 0x1F_0000
+    w.map_vs(vs_root, 0x7000, gpa, vs_perms)
+    w.map(w.g_root(), gpa, host_pa, g_perms, x4=True)
+    w.w64(host_pa, 0x1122_3344_5566_7788)
+    w.m.csr['hstatus'] |= SPVP
+    return w
+
+
+@check
+def vsstatus_mxr_reads_stage1_execute_only():
+    w = mxr_world(XO_AD_U, RWXADU)
+    w.m.csr['vsstatus'] |= MXR
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M') and w.m.regs[6] == 0x1122_3344_5566_7788
+    w = mxr_world(XO_AD_U, RWXADU)       # no MXR anywhere -> stage-1 fault
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (13, 'M'), (c, tgt)
+
+
+@check
+def vsstatus_mxr_does_not_apply_at_g_stage():
+    w = mxr_world(RWXADU, XO_U)
+    w.m.csr['vsstatus'] |= MXR
+    c, tgt, tval, gpa_r, gva, _ = w.run_to_trap()
+    assert (c, tgt, tval, gva) == (21, 'M', 0x7000, True), (c, tgt)
+    assert w.m.csr['mtval2'] == (RAM_BASE + 0x800_0000) >> 2
+    assert w.m.csr['mtval'] == 0x7000
+    assert w.m.csr['mstatus'] & GVA
+
+
+@check
+def mstatus_mxr_reads_g_stage_execute_only():
+    w = mxr_world(RWXADU, XO_U)
+    w.m.csr['mstatus'] |= MXR
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M') and w.m.regs[6] == 0x1122_3344_5566_7788
+
+
+@check
+def hlvx_reads_execute_only_at_both_stages():
+    w = mxr_world(XO_AD_U, XO_U)
+    w.load_code(RAM_BASE, "li t0, 0x7000\n hlvx.wu t1, (t0)\n ebreak\n")
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M'), (c, tgt)
+    assert w.m.regs[6] == 0x5566_7788, hex(w.m.regs[6])
+
+
+# ---------------- tinst: transformed + pseudo-instruction ----------------
+@check
+def implicit_pte_read_uses_original_access_cause():
+    # Broken vsatp root (G-unmapped): the implicit PTE read guest-faults
+    # with the ORIGINAL access's cause and tinst = pseudo PTE read.
+    bad_root = RAM_BASE + 0x900_0000
+    for src, cause in (("li t0, 0x6000\n hlv.d t1, (t0)\n", 21),
+                       ("li t0, 0x6000\n li t1, 9\n hsv.d t1, (t0)\n", 23)):
+        w = hs_at(src)
+        w.setup_two_stage()
+        w.m.csr['vsatp'] = (8 << 60) | (bad_root >> 12)
+        w.m.csr['hstatus'] |= SPVP
+        c, tgt, tval, gpa_r, gva, tinst = w.run_to_trap()
+        assert (c, tgt, tval, gva) == (cause, 'M', 0x6000, True), (c, tgt)
+        assert tinst == TINST_PSEUDO_PTE_READ, hex(tinst)
+        pte_gpa = bad_root + ((0x6000 >> 30) & 0x1FF) * 8
+        assert w.m.csr['mtval2'] == pte_gpa >> 2
+    # Fetch through the broken root: cause 20, same pseudo tinst.
+    w = hs_at("nop\n")
+    w.setup_two_stage()
+    w.m.csr['vsatp'] = (8 << 60) | (bad_root >> 12)
+    enter_vs(w, 0x4000)
+    c, tgt, tval, gpa_r, gva, tinst = w.run_to_trap()
+    assert (c, tgt, tval, gva) == (20, 'M', 0x4000, True), (c, tgt)
+    assert tinst == TINST_PSEUDO_PTE_READ
+
+
+@check
+def explicit_guest_fault_tinst_transformed_and_fetch_zero():
+    # Explicit hlv.d to a G-unmapped leaf: transformed tinst.
+    w = hs_at("li t0, 0x6000\n hlv.d t1, (t0)\n")
+    vs_root = w.setup_two_stage()
+    gpa = RAM_BASE + 0x800_0000
+    w.map_vs(vs_root, 0x6000, gpa, RWXADU)
+    w.m.csr['hstatus'] |= SPVP
+    c, tgt, tval, gpa_r, gva, tinst = w.run_to_trap()
+    raw = (0x36 << 25) | (5 << 15) | (4 << 12) | (6 << 7) | 0x73
+    assert (c, tval, tinst) == (21, 0x6000, raw & ~(0x1F << 15)), (c, hex(tinst))
+    assert w.m.csr['mtval2'] == gpa >> 2
+    # Guest fetch of a G-unmapped GPA (vsatp off): cause 20, tinst = 0.
+    w = hs_at("nop\n")
+    w.setup_two_stage()
+    w.m.csr['vsatp'] = 0
+    enter_vs(w, RAM_BASE + 0x800_0000)
+    c, tgt, tval, gpa_r, gva, tinst = w.run_to_trap()
+    assert (c, tval, tinst, gva) == (20, RAM_BASE + 0x800_0000, 0, True)
+
+
+# ---------------- WFI / SRET / HFENCE legality matrices ----------------
+@check
+def wfi_legality_matrix():
+    for prv, virt, hst, mst, expect in (
+            (3, False, 0, 0, None),            # M: executes
+            (1, False, 0, 0, None),            # HS: executes
+            (1, True, VTW, 0, 22),             # VS + VTW: virtual
+            (1, False, 0, TW, 2),              # HS + TW: illegal
+            (1, True, 0, TW, 2),               # TW beats VTW
+            (0, True, 0, 0, 22),               # VU: virtual
+            (0, False, 0, TW, 2)):             # U + TW: illegal
+        w = hs_at("wfi\n ebreak\n", prv=prv)
+        w.m.virt = virt
+        w.m.csr['hstatus'] |= hst
+        w.m.csr['mstatus'] |= mst
+        c, tgt, tval, *_ = w.run_to_trap()
+        want = 3 if expect is None else expect
+        assert c == want, (prv, virt, hst, mst, c)
+        if expect is not None:
+            assert tval == 0x1050_0073, hex(tval)
+
+
+@check
+def virtual_instruction_group():
+    vs_root_src = "csrr t0, hstatus\n"
+    cases = (
+        ("sret\n", VTSR, 0x1020_0073),
+        ("sfence.vma\n", VTVM, (0x09 << 25) | 0x73),
+        ("csrw satp, t0\n", VTVM, (0x180 << 20) | (5 << 15) | (1 << 12) | 0x73),
+        (vs_root_src, 0, (0x600 << 20) | (2 << 12) | (5 << 7) | 0x73),
+        ("hfence.vvma\n", 0, (0x11 << 25) | 0x73),
+        ("hfence.gvma\n", 0, (0x31 << 25) | 0x73),
+    )
+    for src, hst, raw in cases:
+        w = hs_at(src)
+        w.m.virt = True
+        w.m.csr['hstatus'] |= hst
+        c, tgt, tval, *_ = w.run_to_trap()
+        assert (c, tgt, tval) == (22, 'M', raw), (src, c, hex(tval), hex(raw))
+
+
+@check
+def hfence_from_u_is_illegal():
+    for virt, cause in ((False, 2), (True, 22)):
+        w = hs_at("hfence.gvma\n", prv=0)
+        w.m.virt = virt
+        c, tgt, *_ = w.run_to_trap()
+        assert c == cause, (virt, c)
+
+
+@check
+def sret_tsr_and_satp_tvm_are_illegal_from_hs():
+    for src, mst, cause in (("sret\n", TSR, 2),
+                            ("csrw satp, t0\n", TVM, 2),
+                            ("hfence.gvma\n", TVM, 2)):
+        w = hs_at(src)
+        w.m.csr['mstatus'] |= mst
+        c, tgt, *_ = w.run_to_trap()
+        assert c == cause, (src, c)
+
+
+# ---------------- xip alias views ----------------
+@check
+def vsip_shifted_view_needs_delegation():
+    for hideleg, expect in ((VSSIP, 1 << 1), (0, 0)):
+        w = hs_at("csrr t0, sip\n ebreak\n")
+        w.m.csr['hideleg'] = hideleg
+        w.m.csr['mip'] = VSSIP
+        w.m.virt = True
+        c, tgt, *_ = w.run_to_trap()
+        assert (c, tgt) == (3, 'M')
+        assert w.m.regs[5] == expect, (hideleg, hex(w.m.regs[5]))
+
+
+@check
+def mideleg_reads_forced_vs_bits():
+    w = hs_at("csrr t0, mideleg\n ebreak\n", prv=3)
+    w.run_to_trap()
+    assert w.m.regs[5] == VS_MASK_I | SGEIP, hex(w.m.regs[5])
+
+
+# ---------------- two-stage translation + trap CSR writes ----------------
+@check
+def successful_two_stage_load_and_megapage():
+    w = World()
+    vs_root = w.setup_two_stage()
+    code_gpa = RAM_BASE + 0x10000
+    w.map_vs(vs_root, 0x4000, code_gpa, RWXAD)
+    w.map_vs(vs_root, 0x6000, RAM_BASE + 0x12000, RWXAD)
+    w.w64(RAM_BASE + 0x12000 + HOST_OFF, 0xabcd_ef01)
+    w.load_code(code_gpa + HOST_OFF,
+                "li t0, 0x6000\n ld t1, (t0)\n ebreak\n")
+    enter_vs(w, 0x4000)
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M') and w.m.regs[6] == 0xabcd_ef01
+    # 2M megapage VS leaf over the same data.
+    w = World()
+    vs_root = w.setup_two_stage()
+    code_gpa = RAM_BASE + 0x10000
+    w.map_vs(vs_root, 0x4000, code_gpa, RWXAD)
+    # VA 0x20_0000 shares level-2 slot 0 with the code map: install a 2M
+    # leaf at level 1 covering gpa [RAM_BASE, +2M).
+    nxt = w.r64(vs_root + HOST_OFF)      # level-2 entry 0 (pointer)
+    assert nxt & 1
+    table = ((nxt >> 10) & ((1 << 44) - 1)) << 12
+    idx1 = (0x20_0000 >> 21) & 0x1FF
+    w.w64(table + HOST_OFF + idx1 * 8, ((RAM_BASE >> 12) << 10) | RWXAD)
+    w.w64(RAM_BASE + 0x3_4568 + HOST_OFF, 0x77)
+    w.load_code(code_gpa + HOST_OFF,
+                "li t0, 0x00234568\n ld t1, (t0)\n ebreak\n")
+    enter_vs(w, 0x4000)
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M') and w.m.regs[6] == 0x77, hex(w.m.regs[6])
+
+
+@check
+def vs_stage_fault_delegated_to_hs_sets_spv_spvp():
+    w = World()
+    w.m.csr['medeleg'] = 1 << 13
+    w.m.csr['stvec'] = TRAMPOLINE
+    vs_root = w.setup_two_stage()
+    code_gpa = RAM_BASE + 0x10000
+    w.map_vs(vs_root, 0x4000, code_gpa, RWXAD)
+    w.load_code(code_gpa + HOST_OFF, "li t0, 0x6000\n ld t1, (t0)\n")
+    enter_vs(w, 0x4000)
+    c, tgt, tval, gpa_r, gva, _ = w.run_to_trap()
+    assert (c, tgt, tval, gva) == (13, 'HS', 0x6000, True), (c, tgt)
+    hs = w.m.csr['hstatus']
+    assert hs & SPV and hs & SPVP and hs & H_GVA
+    assert w.m.csr['htval'] == 0          # stage-1 fault: no GPA
+    assert w.m.csr['scause'] == 13 and w.m.csr['stval'] == 0x6000
+    assert not w.m.virt and w.m.prv == 1
+    # sret returns to VS at sepc.
+    w.load_code(TRAMPOLINE, "sret\n")
+    w.m.step()
+    assert w.m.virt and w.m.prv == 1 and w.m.pc == 0x4004
+
+
+@check
+def mret_with_mpv_enters_vs_and_clears_mprv():
+    w = hs_at("nop\n", prv=3)
+    w.setup_two_stage()
+    w.m.csr['vsatp'] = 0
+    vs_pc = RAM_BASE + 0x10000
+    w.load_code(vs_pc + HOST_OFF, "ebreak\n")
+    w.m.csr['mstatus'] |= MPV | MPRV | (1 << MPP_SHIFT)
+    w.m.csr['mepc'] = vs_pc
+    w.load_code(RAM_BASE, "mret\n")
+    w.m.step()
+    assert w.m.virt and w.m.prv == 1 and w.m.pc == vs_pc
+    assert not w.m.csr['mstatus'] & MPRV and not w.m.csr['mstatus'] & MPV
+    c, tgt, *_ = w.run_to_trap()
+    assert (c, tgt) == (3, 'M')
+    assert w.m.csr['mstatus'] & MPV       # trap from V=1 re-sets MPV
+    assert w.m.csr['mepc'] == vs_pc
+
+
+@check
+def g_stage_only_fault_reports_gpa():
+    w = hs_at("nop\n", prv=3)
+    w.setup_two_stage()
+    w.m.csr['vsatp'] = 0
+    probe = RAM_BASE + 0x10000
+    w.load_code(probe + HOST_OFF,
+                "li t0, 0x88800000\n ld t1, (t0)\n")
+    enter_vs(w, probe)
+    c, tgt, tval, gpa_r, gva, _ = w.run_to_trap()
+    assert (c, tgt, tval, gva) == (21, 'M', 0x8880_0000, True), (c, tgt)
+    assert gpa_r == 0x8880_0000 and w.m.csr['mtval2'] == 0x8880_0000 >> 2
+    assert w.m.csr['mstatus'] & GVA and w.m.csr['mstatus'] & MPV
+
+
+# ---------------- CSR file model ----------------
+@check
+def csr_inventory_reads_from_m():
+    names = [n for n in CSR_ADDR
+             if n not in ('cycle', 'time', 'instret', 'mcycle', 'minstret',
+                          'fflags', 'frm', 'fcsr')]
+    src = "".join(f"csrr t0, {n}\n" for n in names) + "ebreak\n"
+    w = hs_at(src, prv=3)
+    c, tgt, *_ = w.run_to_trap(n=len(names) + 5)
+    assert (c, tgt) == (3, 'M'), (c, tgt)
+
+
+@check
+def csr_min_priv_and_readonly():
+    # hstatus from HS ok; from U illegal; hgeip writable never.
+    w = hs_at("csrr t0, hstatus\n ebreak\n")
+    assert w.run_to_trap()[0] == 3
+    w = hs_at("csrr t0, hstatus\n", prv=0)
+    assert w.run_to_trap()[0] == 2
+    w = hs_at("csrw hgeip, t0\n", prv=3)
+    assert w.run_to_trap()[0] == 2
+    # csrs with rs1=x0 never writes: allowed on read-only CSRs.
+    w = hs_at("csrs hgeip, x0\n ebreak\n", prv=3)
+    assert w.run_to_trap()[0] == 3
+
+
+@check
+def guest_csr_redirection():
+    w = hs_at("li t0, 0x1800\n csrw sscratch, t0\n csrr t1, sscratch\n ebreak\n")
+    w.m.virt = True
+    c, *_ = w.run_to_trap()
+    assert c == 3
+    assert w.m.csr['vsscratch'] == 0x1800 and w.m.csr['sscratch'] == 0
+    assert w.m.regs[6] == 0x1800
+
+
+def main():
+    failed = 0
+    for fn in CHECKS:
+        try:
+            fn()
+            print(f"{fn.__name__:<50} ok")
+        except AssertionError as e:
+            failed += 1
+            print(f"{fn.__name__:<50} FAIL {e}")
+    if failed:
+        sys.exit(f"{failed}/{len(CHECKS)} emu-hyp cross-checks FAILED")
+    print(f"ALL {len(CHECKS)} EMU-HYP CROSS-CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()
