@@ -777,10 +777,34 @@ pub fn fleet_table(
             },
         ));
     }
-    if console_mismatches.is_empty() {
+    // Chaos/recovery line: modeled availability and MTTR (bit-identical
+    // for a given --chaos seed across thread counts, hart counts and
+    // engines), restart spend and the quarantine tally.
+    if spec.resilience_active() {
         s.push_str(&format!(
-            "consoles vs solo: ok ({} byte-identical)\n",
-            spec.total_guests()
+            "resilience: availability {:.4}% | MTTR {} | {} restarts | {} quarantined | \
+             watchdog {} | snap every {} | chaos {}\n",
+            100.0 * report.availability(),
+            report
+                .mttr()
+                .map_or(String::from("n/a"), |m| format!("{m:.0} ticks")),
+            report.total_restarts(),
+            report.quarantined_guests(),
+            spec.watchdog,
+            spec.snap_every,
+            spec.chaos.as_ref().map_or(String::from("off"), |c| c.summary()),
+        ));
+    }
+    if console_mismatches.is_empty() {
+        let quarantined = report.quarantined_guests();
+        s.push_str(&format!(
+            "consoles vs solo: ok ({} byte-identical{})\n",
+            spec.total_guests() - quarantined,
+            if quarantined > 0 {
+                format!(", {quarantined} quarantined skipped")
+            } else {
+                String::new()
+            }
         ));
     } else {
         s.push_str("consoles vs solo: MISMATCH\n");
@@ -888,11 +912,18 @@ mod tests {
             tlb_ways: 4,
             engine: crate::sim::EngineKind::default(),
             telemetry: None,
+            chaos: None,
+            watchdog: 0,
+            snap_every: 0,
+            max_restarts: 3,
+            strict: false,
+            expected: std::collections::BTreeMap::new(),
         };
         let report = FleetReport {
             nodes: vec![NodeOutcome {
                 node: 0,
                 total_ticks: 500,
+                span: 1_000,
                 world_switches: 5,
                 switch_host_ns: 5_000,
                 host_seconds: 0.1,
@@ -910,6 +941,10 @@ mod tests {
                     req_latencies: Vec::new(),
                     req_completed: 0,
                     req_errors: 0,
+                    restarts: 0,
+                    quarantined: false,
+                    downtime: 0,
+                    repairs: Vec::new(),
                 }],
                 hart_stats: vec![crate::vmm::HartStats {
                     busy_ticks: 500,
@@ -949,6 +984,20 @@ mod tests {
         assert!(t2.contains("forked CHEAPER"));
         assert!(t2.contains("parallel speedup vs 1 thread"));
         assert!(t2.contains("MISMATCH"));
+        assert!(!t.contains("resilience:"), "no resilience line without chaos/watchdog");
+        let mut rspec = spec.clone();
+        rspec.chaos = Some("seed=9,faults=1".parse().unwrap());
+        rspec.watchdog = 2_000_000;
+        rspec.snap_every = 500_000;
+        let mut rreport = report.clone();
+        rreport.nodes[0].guests[0].restarts = 1;
+        rreport.nodes[0].guests[0].downtime = 100;
+        rreport.nodes[0].guests[0].repairs = vec![100];
+        let t3 = fleet_table(&rspec, &rreport, None, None, &[]);
+        assert!(t3.contains("resilience: availability"), "table:\n{t3}");
+        assert!(t3.contains("MTTR 100 ticks"), "table:\n{t3}");
+        assert!(t3.contains("1 restarts | 0 quarantined"), "table:\n{t3}");
+        assert!(t3.contains("chaos seed 9"), "table:\n{t3}");
     }
 
     #[test]

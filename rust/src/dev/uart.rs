@@ -60,6 +60,12 @@ impl Uart {
         self.stream.is_some()
     }
 
+    /// Total bytes ever written (folded + retained), without touching
+    /// the hash state — cheap enough to poll at every slice boundary.
+    pub fn stream_len(&self) -> u64 {
+        self.stream.as_ref().map_or(0, |st| st.folded) + self.output.len() as u64
+    }
+
     pub fn read(&self, off: u64) -> u64 {
         match off {
             LSR => LSR_READY,

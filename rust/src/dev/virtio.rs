@@ -117,7 +117,12 @@ pub fn blk_image_byte(i: u64) -> u8 {
 
 #[inline]
 fn dma_ok(ram: &RamStore, addr: u64, size: u64) -> bool {
-    addr >= RAM_BASE && addr + size <= RAM_BASE + ram.len() as u64
+    // checked_add: a guest can program addresses near u64::MAX; the sum
+    // must reject on wraparound, not panic (debug) or pass (release).
+    match addr.checked_add(size) {
+        Some(end) => addr >= RAM_BASE && end <= RAM_BASE + ram.len() as u64,
+        None => false,
+    }
 }
 
 #[inline]
@@ -186,25 +191,36 @@ impl Virtq {
     }
 
     /// Pop the next guest-posted descriptor head, if any.
+    ///
+    /// Ring addresses use the same wrapping arithmetic `rings_ok`
+    /// validated with, so a near-u64::MAX guest address that wraps into
+    /// RAM is either consistently accepted or consistently rejected —
+    /// never a debug-build overflow panic.
     fn pop_avail(&mut self, ram: &RamStore, dma_off: u64) -> Option<u16> {
-        let idx = dma_read(ram, self.avail + dma_off + 2, 2) as u16;
+        let avail = self.avail.wrapping_add(dma_off);
+        let idx = dma_read(ram, avail.wrapping_add(2), 2) as u16;
         if idx == self.avail_seen {
             return None;
         }
         let slot = (self.avail_seen % self.num as u16) as u64;
-        let head = dma_read(ram, self.avail + dma_off + 4 + 2 * slot, 2) as u16;
+        let head = dma_read(ram, avail.wrapping_add(4 + 2 * slot), 2) as u16;
         self.avail_seen = self.avail_seen.wrapping_add(1);
         Some(head)
     }
 
-    /// Read descriptor `i`: (addr, len, flags, next).
+    /// Read descriptor `i`: (addr, len, flags, next). `i % num` keeps any
+    /// guest-supplied index (including hostile `next` pointers) inside
+    /// the validated table.
     fn desc(&self, ram: &RamStore, dma_off: u64, i: u16) -> (u64, u32, u16, u16) {
-        let base = self.desc + dma_off + 16 * (i % self.num as u16) as u64;
+        let base = self
+            .desc
+            .wrapping_add(dma_off)
+            .wrapping_add(16 * (i % self.num as u16) as u64);
         (
             dma_read(ram, base, 8),
-            dma_read(ram, base + 8, 4) as u32,
-            dma_read(ram, base + 12, 2) as u16,
-            dma_read(ram, base + 14, 2) as u16,
+            dma_read(ram, base.wrapping_add(8), 4) as u32,
+            dma_read(ram, base.wrapping_add(12), 2) as u16,
+            dma_read(ram, base.wrapping_add(14), 2) as u16,
         )
     }
 
@@ -217,12 +233,13 @@ impl Virtq {
         id: u32,
         len: u32,
     ) {
+        let used = self.used.wrapping_add(dma_off);
         let slot = (self.used_idx % self.num as u16) as u64;
-        let elem = self.used + dma_off + 4 + 8 * slot;
+        let elem = used.wrapping_add(4 + 8 * slot);
         dma_write(ram, code, elem, 4, id as u64);
-        dma_write(ram, code, elem + 4, 4, len as u64);
+        dma_write(ram, code, elem.wrapping_add(4), 4, len as u64);
         self.used_idx = self.used_idx.wrapping_add(1);
-        dma_write(ram, code, self.used + dma_off + 2, 2, self.used_idx as u64);
+        dma_write(ram, code, used.wrapping_add(2), 2, self.used_idx as u64);
     }
 }
 
@@ -274,6 +291,14 @@ pub struct VirtioQueue {
     pub(crate) irq_raised: bool,
     pub(crate) ack: bool,
     pub(crate) completes: Vec<(u32, u64)>,
+    // ---- injected faults (chaos layer; host-owned, survive guest
+    // reset, never checkpointed — a restore always clears them) ----
+    /// While set, `service` is completely frozen: no DMA, no used-ring
+    /// writes, no interrupt-line changes. A polling guest wedges.
+    pub fault_wedge: bool,
+    /// Force the next `n` RX deliveries to complete with a zero-length
+    /// (error) used element, delivering no request content.
+    pub fault_error_n: u32,
 }
 
 impl Default for VirtioQueue {
@@ -308,16 +333,22 @@ impl VirtioQueue {
             irq_raised: false,
             ack: false,
             completes: Vec::new(),
+            fault_wedge: false,
+            fault_error_n: 0,
         }
     }
 
     /// Guest-visible reset (STATUS ← 0). `dma_off` and `rate` are
-    /// host/firmware-owned and survive.
+    /// host/firmware-owned and survive, as do injected faults — a guest
+    /// cannot clear a fault by resetting its device.
     fn reset(&mut self) {
         let (dma_off, rate) = (self.dma_off, self.rate);
+        let (wedge, err_n) = (self.fault_wedge, self.fault_error_n);
         *self = VirtioQueue::new();
         self.dma_off = dma_off;
         self.rate = rate;
+        self.fault_wedge = wedge;
+        self.fault_error_n = err_n;
     }
 
     /// Inter-arrival gap in node ticks, drawn from the arrival stream:
@@ -360,6 +391,11 @@ impl VirtioQueue {
         plic: &mut Plic,
         events: &mut Vec<DevEvent>,
     ) {
+        if self.fault_wedge {
+            // Injected device hang: frozen until recovery replaces the
+            // device state. The IRQ line stays wherever it was.
+            return;
+        }
         if self.ack {
             self.ack = false;
             self.int_status = 0;
@@ -386,8 +422,23 @@ impl VirtioQueue {
                 let Some(head) = self.q.pop_avail(ram, self.dma_off) else { break };
                 let (addr, len, _flags, _next) = self.q.desc(ram, self.dma_off, head);
                 let buf = addr.wrapping_add(self.dma_off);
-                if len < 32 || !dma_ok(ram, buf, 32) {
+                if self.fault_error_n > 0 {
+                    // Injected device error: consume the posted buffer
+                    // and complete it zero-length, delivering nothing.
+                    // The request stays backlogged for a later retry.
+                    self.fault_error_n -= 1;
                     self.errors += 1;
+                    self.q.push_used(ram, code, self.dma_off, head as u32, 0);
+                    self.int_status |= 1;
+                    continue;
+                }
+                if len < 32 || !dma_ok(ram, buf, 32) {
+                    // Malformed RX buffer: complete it zero-length
+                    // (error) instead of leaking it — the guest gets the
+                    // buffer back and the device stays live.
+                    self.errors += 1;
+                    self.q.push_used(ram, code, self.dma_off, head as u32, 0);
+                    self.int_status |= 1;
                     continue;
                 }
                 let req = self.backlog.pop_front().unwrap();
@@ -504,6 +555,13 @@ pub struct VirtioBlk {
     pub(crate) notify: bool,
     pub(crate) ack: bool,
     pub(crate) irq_raised: bool,
+    // ---- injected faults (chaos layer; host-owned, survive guest
+    // reset, never checkpointed — a restore always clears them) ----
+    /// While set, `service` is completely frozen (no DMA, no used-ring
+    /// writes, no interrupt-line changes). A polling guest wedges.
+    pub fault_wedge: bool,
+    /// Force the next `n` requests to complete with I/O-error status.
+    pub fault_error_n: u32,
 }
 
 impl Default for VirtioBlk {
@@ -524,53 +582,84 @@ impl VirtioBlk {
             notify: false,
             ack: false,
             irq_raised: false,
+            fault_wedge: false,
+            fault_error_n: 0,
         }
     }
 
     fn reset(&mut self) {
         let dma_off = self.dma_off;
+        let (wedge, err_n) = (self.fault_wedge, self.fault_error_n);
         *self = VirtioBlk::new();
         self.dma_off = dma_off;
+        self.fault_wedge = wedge;
+        self.fault_error_n = err_n;
     }
 
     /// Process one queued request chain: header desc {type u64, sector
     /// u64}, data desc (device-written for reads), status desc (1 byte;
     /// 0 = ok, 2 = I/O error). Only reads are supported.
+    ///
+    /// Every popped head is *completed* — malformed chains (zero-length
+    /// or out-of-bounds descriptors, self-looping `next` pointers, a
+    /// truncated chain) get an error status byte when the status
+    /// descriptor is reachable and a used-ring element either way, so a
+    /// buggy or hostile guest driver sees a clean I/O error instead of
+    /// wedging on a never-returned buffer (and never panics the host).
     fn process(&mut self, ram: &mut RamStore, code: &mut CodeTracker, head: u16) {
+        let n = self.q.num as u16;
+        let forced_err = self.fault_error_n > 0;
+        if forced_err {
+            self.fault_error_n -= 1;
+        }
         let (haddr, hlen, hflags, hnext) = self.q.desc(ram, self.dma_off, head);
         let hbuf = haddr.wrapping_add(self.dma_off);
-        if hlen < 16 || hflags & DESC_F_NEXT == 0 || !dma_ok(ram, hbuf, 16) {
-            self.errors += 1;
-            return;
-        }
-        let optype = dma_read(ram, hbuf, 8);
-        let sector = dma_read(ram, hbuf + 8, 8);
-        let (daddr, dlen, dflags, dnext) = self.q.desc(ram, self.dma_off, hnext);
-        let dbuf = daddr.wrapping_add(self.dma_off);
-        let (saddr, slen, _sflags, _snext) = self.q.desc(ram, self.dma_off, dnext);
-        let sbuf = saddr.wrapping_add(self.dma_off);
-        if slen < 1 || dflags & DESC_F_NEXT == 0 || !dma_ok(ram, sbuf, 1) {
-            self.errors += 1;
-            return;
-        }
-        let ok = optype == 0
-            && sector < BLK_SECTORS
-            && dlen as u64 >= BLK_SECTOR_SIZE
-            && dflags & DESC_F_WRITE != 0
-            && dma_ok(ram, dbuf, BLK_SECTOR_SIZE);
-        if ok {
-            for w in 0..BLK_SECTOR_SIZE / 8 {
-                let mut word = 0u64;
-                for b in 0..8 {
-                    let i = sector * BLK_SECTOR_SIZE + w * 8 + b;
-                    word |= (blk_image_byte(i) as u64) << (8 * b);
-                }
-                dma_write(ram, code, dbuf + w * 8, 8, word);
+        let header_ok = hlen >= 16
+            && hflags & DESC_F_NEXT != 0
+            && dma_ok(ram, hbuf, 16)
+            && hnext % n != head % n;
+        let mut status_buf = None;
+        let mut ok = false;
+        if header_ok {
+            let optype = dma_read(ram, hbuf, 8);
+            let sector = dma_read(ram, hbuf + 8, 8);
+            let (daddr, dlen, dflags, dnext) = self.q.desc(ram, self.dma_off, hnext);
+            let dbuf = daddr.wrapping_add(self.dma_off);
+            let (saddr, slen, _sflags, _snext) = self.q.desc(ram, self.dma_off, dnext);
+            let sbuf = saddr.wrapping_add(self.dma_off);
+            // The status byte is written only through a well-formed,
+            // loop-free chain — an aliased status descriptor would
+            // scribble on the header or data buffer.
+            let chain_ok = dflags & DESC_F_NEXT != 0
+                && dnext % n != head % n
+                && dnext % n != hnext % n;
+            if chain_ok && slen >= 1 && dma_ok(ram, sbuf, 1) {
+                status_buf = Some(sbuf);
             }
-        } else {
+            ok = status_buf.is_some()
+                && !forced_err
+                && optype == 0
+                && sector < BLK_SECTORS
+                && dlen as u64 >= BLK_SECTOR_SIZE
+                && dflags & DESC_F_WRITE != 0
+                && dma_ok(ram, dbuf, BLK_SECTOR_SIZE);
+            if ok {
+                for w in 0..BLK_SECTOR_SIZE / 8 {
+                    let mut word = 0u64;
+                    for b in 0..8 {
+                        let i = sector * BLK_SECTOR_SIZE + w * 8 + b;
+                        word |= (blk_image_byte(i) as u64) << (8 * b);
+                    }
+                    dma_write(ram, code, dbuf + w * 8, 8, word);
+                }
+            }
+        }
+        if !ok {
             self.errors += 1;
         }
-        dma_write(ram, code, sbuf, 1, if ok { 0 } else { 2 });
+        if let Some(sbuf) = status_buf {
+            dma_write(ram, code, sbuf, 1, if ok { 0 } else { 2 });
+        }
         let len = if ok { BLK_SECTOR_SIZE as u32 + 1 } else { 1 };
         self.q.push_used(ram, code, self.dma_off, head as u32, len);
         self.ops += 1;
@@ -584,6 +673,11 @@ impl VirtioBlk {
         plic: &mut Plic,
         events: &mut Vec<DevEvent>,
     ) {
+        if self.fault_wedge {
+            // Injected device hang: frozen until recovery replaces the
+            // device state. The IRQ line stays wherever it was.
+            return;
+        }
         if self.ack {
             self.ack = false;
             self.int_status = 0;
@@ -872,5 +966,94 @@ mod tests {
         assert_eq!(ram.read(off + 0x120, 1), 2, "write rejected as IOERR");
         assert_eq!(b.errors, 1);
         assert_eq!(b.ops, 2);
+    }
+
+    #[test]
+    fn injected_blk_faults_error_then_heal() {
+        let (mut ram, mut code, mut plic, mut ev) = parts();
+        let mut b = VirtioBlk::new();
+        let base = RAM_BASE + 0x2000;
+        b.write(REG_QUEUE_NUM, 4, VIRTQ_SIZE as u64);
+        b.write(REG_DESC, 8, base);
+        b.write(REG_AVAIL, 8, base + 0x80);
+        b.write(REG_USED, 8, base + 0xc0);
+        b.write(REG_STATUS, 4, STATUS_DRIVER_OK as u64);
+        let off = (base - RAM_BASE) as usize;
+        let submit = |ram: &mut RamStore, sector: u64, n: u64| {
+            ram.write(off + 0x100, 8, 0);
+            ram.write(off + 0x108, 8, sector);
+            ram.write(off, 8, base + 0x100);
+            ram.write(off + 8, 4, 16);
+            ram.write(off + 12, 2, DESC_F_NEXT as u64);
+            ram.write(off + 14, 2, 1);
+            ram.write(off + 16, 8, base + 0x200);
+            ram.write(off + 24, 4, 512);
+            ram.write(off + 28, 2, (DESC_F_NEXT | DESC_F_WRITE) as u64);
+            ram.write(off + 30, 2, 2);
+            ram.write(off + 32, 8, base + 0x120);
+            ram.write(off + 40, 4, 1);
+            ram.write(off + 44, 2, DESC_F_WRITE as u64);
+            ram.write(off + 0x80 + 4 + 2 * ((n as usize - 1) % 8), 2, 0);
+            ram.write(off + 0x80 + 2, 2, n);
+        };
+
+        // Transient injected error: one request fails with IOERR status,
+        // the retry succeeds — the guest driver's retry-once heals it.
+        b.fault_error_n = 1;
+        submit(&mut ram, 5, 1);
+        b.write(REG_NOTIFY, 4, 0);
+        b.service(&mut ram, &mut code, &mut plic, &mut ev);
+        assert_eq!(ram.read(off + 0xc0 + 2, 2), 1, "forced error still completes");
+        assert_eq!(ram.read(off + 0x120, 1), 2, "forced IOERR status");
+        assert_eq!((b.errors, b.fault_error_n), (1, 0));
+        submit(&mut ram, 5, 2);
+        b.write(REG_NOTIFY, 4, 0);
+        b.service(&mut ram, &mut code, &mut plic, &mut ev);
+        assert_eq!(ram.read(off + 0x120, 1), 0, "fault consumed: retry succeeds");
+        assert_eq!(ram.read(off + 0x200, 1) as u8, blk_image_byte(5 * BLK_SECTOR_SIZE));
+
+        // Injected hang: the device is frozen — notify is latched but no
+        // used-ring write, no IRQ — until the fault is lifted.
+        b.fault_wedge = true;
+        submit(&mut ram, 6, 3);
+        b.write(REG_NOTIFY, 4, 0);
+        for _ in 0..10 {
+            b.service(&mut ram, &mut code, &mut plic, &mut ev);
+        }
+        assert_eq!(ram.read(off + 0xc0 + 2, 2), 2, "wedged device never completes");
+        // A guest-side device reset must not clear the injected faults.
+        b.write(REG_STATUS, 4, 0);
+        assert!(b.fault_wedge, "guest reset cannot clear an injected wedge");
+        b.fault_wedge = false;
+        b.write(REG_QUEUE_NUM, 4, VIRTQ_SIZE as u64);
+        b.write(REG_DESC, 8, base);
+        b.write(REG_AVAIL, 8, base + 0x80);
+        b.write(REG_USED, 8, base + 0xc0);
+        b.write(REG_STATUS, 4, STATUS_DRIVER_OK as u64);
+        submit(&mut ram, 6, 3);
+        b.write(REG_NOTIFY, 4, 0);
+        b.service(&mut ram, &mut code, &mut plic, &mut ev);
+        assert_eq!(ram.read(off + 0x120, 1), 0, "healed device serves again");
+    }
+
+    #[test]
+    fn injected_queue_wedge_freezes_delivery() {
+        let (mut ram, mut code, mut plic, mut ev) = parts();
+        let mut q = VirtioQueue::new();
+        program(&mut q, &mut ram, RAM_BASE + 0x1000);
+        q.write(REG_SEED, 8, 11);
+        q.write(REG_REQ_TOTAL, 4, 2);
+        q.write(REG_STATUS, 4, STATUS_DRIVER_OK as u64);
+        q.fault_wedge = true;
+        for t in 1..200u64 {
+            q.service(t * 100, &mut ram, &mut code, &mut plic, &mut ev);
+        }
+        assert_eq!(ram.read(0x1000 + 0xc0 + 2, 2), 0, "wedged queue delivers nothing");
+        assert_eq!(q.generated, 0, "wedged queue generates nothing");
+        q.fault_wedge = false;
+        for t in 200..400u64 {
+            q.service(t * 100, &mut ram, &mut code, &mut plic, &mut ev);
+        }
+        assert!(ram.read(0x1000 + 0xc0 + 2, 2) > 0, "lifted wedge resumes delivery");
     }
 }

@@ -1,0 +1,658 @@
+//! Deterministic fault injection and self-healing for consolidated nodes.
+//!
+//! The chaos layer has two halves that meet inside the VMM scheduler:
+//!
+//! * **Injection** — a [`ChaosSpec`] compiles (seed, window, kinds,
+//!   pinned events) into per-guest fault plans keyed to each guest's
+//!   *virtual* clock (`SimStats::sim_ticks`). Guest virtual timelines
+//!   are pinned identical across host thread counts, hart counts and
+//!   both engines, so a plan keyed to them fires at the same point in
+//!   every schedule — the node-time alternative would make the set of
+//!   faults that land before a guest finishes depend on hart placement.
+//! * **Recovery** — a [`Resilience`] driver owned by the scheduler:
+//!   per-guest progress watchdogs, periodic CK4 snapshots, checkpoint
+//!   restore with exponential backoff, and quarantine once the restart
+//!   budget is spent. Quarantine parks the guest out of the run queue
+//!   permanently; the surviving guests keep their schedule (graceful
+//!   degradation, never a fleet abort).
+//!
+//! Progress is defined as externally visible work only — console bytes
+//! and virtio completions. Retired instructions deliberately do not
+//! count: a corrupted guest spinning in a tight loop retires
+//! instructions at full speed, which is exactly the livelock the
+//! watchdog exists to catch. The watchdog threshold is measured in
+//! guest virtual ticks executed *without* progress, so a guest that is
+//! merely starved of hart time (its virtual clock frozen) can never be
+//! declared hung.
+//!
+//! Repair metrics (detection latency, backoff, downtime) are *modeled*
+//! values derived from the plan, not wall measurements: detection cost
+//! is 0 for faults caught at the next slice boundary (kill) or at
+//! completion (device error) and one watchdog period for livelocks,
+//! and backoff follows the deterministic restart index. That keeps
+//! availability and MTTR bit-identical across host thread counts,
+//! hart counts and engines — the property the recovery-determinism
+//! matrix in `tests/fleet.rs` pins.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
+use crate::dev::Uart;
+use crate::isa::PrivLevel;
+use crate::mem::RAM_BASE;
+use crate::mmu::MmuStats;
+use crate::sim::{checkpoint, Machine, SimStats};
+use crate::util::ConsoleDigest;
+use crate::vmm::{world_swap, GuestVm};
+
+/// First-restart backoff in node ticks; doubles per retry (capped).
+pub const BACKOFF_BASE: u64 = 50_000;
+
+/// `jal x0, 0` — an architectural livelock in one instruction.
+const SPIN_INST: u64 = 0x0000_006f;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Declare the guest dead at the boundary (no state mutation); the
+    /// recovery driver restores it immediately.
+    Kill,
+    /// Scramble every GPR with seeded garbage and point `pc` at an
+    /// unmapped hole so the guest can never rejoin its instruction
+    /// stream. Detected by the guest's own panic/shutdown path (bad
+    /// exit) or, failing that, the watchdog.
+    Corrupt,
+    /// Arm the paravirtual devices to complete requests with an error
+    /// status: one on the queue device, two on the block device (the
+    /// guest driver retries block reads once, so a single block error
+    /// is absorbed transparently).
+    DevErr,
+    /// Wedge both paravirtual devices: posted requests are never
+    /// completed and no IRQ is ever raised. The polling guest livelocks
+    /// and the watchdog fires.
+    DevHang,
+    /// Plant a one-instruction spin loop in guest RAM and lock the hart
+    /// onto it in M mode with all interrupts masked.
+    SpinLoop,
+    /// Park the hart in WFI with every interrupt source masked so no
+    /// wake can ever arrive.
+    WfiHang,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::Kill,
+        FaultKind::Corrupt,
+        FaultKind::DevErr,
+        FaultKind::DevHang,
+        FaultKind::SpinLoop,
+        FaultKind::WfiHang,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::DevErr => "dev_err",
+            FaultKind::DevHang => "dev_hang",
+            FaultKind::SpinLoop => "spin_loop",
+            FaultKind::WfiHang => "wfi_hang",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        Ok(match s.replace('-', "_").as_str() {
+            "kill" => FaultKind::Kill,
+            "corrupt" => FaultKind::Corrupt,
+            "dev_err" => FaultKind::DevErr,
+            "dev_hang" => FaultKind::DevHang,
+            "spin_loop" => FaultKind::SpinLoop,
+            "wfi_hang" => FaultKind::WfiHang,
+            other => bail!(
+                "unknown fault kind '{other}' (kill, corrupt, dev-err, dev-hang, spin-loop, wfi-hang)"
+            ),
+        })
+    }
+
+    /// Modeled detection latency in guest virtual ticks: immediate for
+    /// faults caught at the very next boundary (kill) or at guest
+    /// completion (device errors surface in the console digest), one
+    /// full watchdog period for everything that livelocks.
+    pub fn detect_delay(self, watchdog: u64) -> u64 {
+        match self {
+            FaultKind::Kill | FaultKind::DevErr => 0,
+            _ => watchdog,
+        }
+    }
+}
+
+/// One pinned fault from the spec grammar (`KIND@TICK[:gIDX]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Guest virtual tick at (or after) which the fault applies.
+    pub at: u64,
+    /// Target guest index on every node; `None` round-robins pinned
+    /// events over the node's guests.
+    pub guest: Option<usize>,
+    pub kind: FaultKind,
+}
+
+/// A fault compiled into one guest's plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedFault {
+    pub at: u64,
+    pub kind: FaultKind,
+}
+
+/// Parsed `--chaos` specification. Grammar: comma-separated tokens of
+/// `seed=S`, `faults=N`, `window=LO:HI`, `kinds=a+b+c`, and pinned
+/// events `KIND@TICK[:gIDX]`, e.g.
+/// `seed=42,faults=3,window=200000:900000,kinds=kill+dev-hang,spin-loop@500000:g1`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub seed: u64,
+    /// Randomly drawn faults per node (in addition to pinned events).
+    pub faults: u32,
+    /// Virtual-tick window `[lo, hi)` the random draws land in.
+    pub window: (u64, u64),
+    /// Kind pool for random draws; empty means all kinds.
+    pub kinds: Vec<FaultKind>,
+    pub events: Vec<FaultEvent>,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> ChaosSpec {
+        ChaosSpec {
+            seed: 1,
+            faults: 0,
+            window: (200_000, 1_000_000),
+            kinds: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+}
+
+impl FromStr for ChaosSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ChaosSpec> {
+        let mut spec = ChaosSpec::default();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some((key, val)) = tok.split_once('=') {
+                match key {
+                    "seed" => spec.seed = val.parse()?,
+                    "faults" => spec.faults = val.parse()?,
+                    "window" => {
+                        let (lo, hi) = val
+                            .split_once(':')
+                            .ok_or_else(|| anyhow::anyhow!("window wants LO:HI, got '{val}'"))?;
+                        spec.window = (lo.parse()?, hi.parse()?);
+                        if spec.window.0 >= spec.window.1 {
+                            bail!("empty chaos window {}:{}", spec.window.0, spec.window.1);
+                        }
+                    }
+                    "kinds" => {
+                        spec.kinds =
+                            val.split('+').map(FaultKind::parse).collect::<Result<Vec<_>>>()?;
+                    }
+                    other => bail!("unknown chaos key '{other}'"),
+                }
+            } else if let Some((kind, rest)) = tok.split_once('@') {
+                let kind = FaultKind::parse(kind)?;
+                let (at, guest) = match rest.split_once(':') {
+                    Some((at, g)) => {
+                        let g = g.strip_prefix('g').unwrap_or(g);
+                        (at.parse()?, Some(g.parse()?))
+                    }
+                    None => (rest.parse()?, None),
+                };
+                spec.events.push(FaultEvent { at, guest, kind });
+            } else {
+                bail!("unparseable chaos token '{tok}'");
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl ChaosSpec {
+    /// One-line description for the fleet report.
+    pub fn summary(&self) -> String {
+        let kinds = if self.kinds.is_empty() {
+            "all".to_string()
+        } else {
+            self.kinds.iter().map(|k| k.name()).collect::<Vec<_>>().join("+")
+        };
+        format!(
+            "seed {} | {} random in [{}, {}) of {} | {} pinned",
+            self.seed, self.faults, self.window.0, self.window.1, kinds,
+            self.events.len()
+        )
+    }
+
+    /// Compile the spec into per-guest fault queues for one node, sorted
+    /// by virtual trigger tick. Purely a function of (spec, node,
+    /// n_guests) — never of host threading or hart placement.
+    pub fn plan(&self, node: usize, n_guests: usize) -> Vec<Vec<PlannedFault>> {
+        let mut per: Vec<Vec<PlannedFault>> = vec![Vec::new(); n_guests];
+        if n_guests == 0 {
+            return per;
+        }
+        for (i, e) in self.events.iter().enumerate() {
+            let g = e.guest.unwrap_or(i) % n_guests;
+            per[g].push(PlannedFault { at: e.at, kind: e.kind });
+        }
+        let kinds: &[FaultKind] =
+            if self.kinds.is_empty() { &FaultKind::ALL } else { &self.kinds };
+        let mut x = splitmix64(self.seed ^ splitmix64(node as u64 + 1)) | 1;
+        let (lo, hi) = self.window;
+        let span = hi.saturating_sub(lo).max(1);
+        for _ in 0..self.faults {
+            x = xorshift64(x);
+            let at = lo + x % span;
+            x = xorshift64(x);
+            let g = (x % n_guests as u64) as usize;
+            x = xorshift64(x);
+            let kind = kinds[(x % kinds.len() as u64) as usize];
+            per[g].push(PlannedFault { at, kind });
+        }
+        for q in &mut per {
+            q.sort_by_key(|f| f.at);
+        }
+        per
+    }
+}
+
+/// Progress fingerprint: console bytes plus virtio completions. A slice
+/// that changes none of these made no externally visible progress.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub(crate) struct Mark {
+    console_len: u64,
+    vq_completed: u32,
+    vq_errors: u32,
+    blk_ops: u32,
+    blk_errors: u32,
+}
+
+impl Mark {
+    pub(crate) fn of(g: &GuestVm) -> Mark {
+        Mark {
+            console_len: g.bus.uart.stream_len(),
+            vq_completed: g.bus.vq.completed,
+            vq_errors: g.bus.vq.errors,
+            blk_ops: g.bus.vblk.ops,
+            blk_errors: g.bus.vblk.errors,
+        }
+    }
+}
+
+/// A restore point: the CK4 blob plus the target-owned state the
+/// checkpoint format deliberately does not serialize (console capture,
+/// stat histograms) so a restore rewinds the guest *exactly*, console
+/// digest included.
+#[derive(Clone, Debug)]
+pub(crate) struct Snapshot {
+    pub ck4: Vec<u8>,
+    pub uart: Uart,
+    pub stats: SimStats,
+    pub mmu: MmuStats,
+    /// Guest virtual tick the snapshot was taken at.
+    pub taken_virt: u64,
+}
+
+/// Capture a restore point for a swapped-out guest, through the caller's
+/// machine. Nothing is emitted and no switch statistics move — the
+/// same silent-residency rule `wake_due` follows.
+pub(crate) fn snapshot(m: &mut Machine, g: &mut GuestVm) -> Snapshot {
+    world_swap(m, g);
+    let snap = Snapshot {
+        ck4: checkpoint::save(m),
+        uart: m.bus.uart.clone(),
+        stats: m.stats.clone(),
+        mmu: m.core.mmu_stats.clone(),
+        taken_virt: m.stats.sim_ticks,
+    };
+    world_swap(m, g);
+    snap
+}
+
+/// Mutate a swapped-out guest according to the fault kind. `garbage`
+/// seeds the corrupt scramble and is derived statelessly from (seed,
+/// guest, trigger tick) so the injected state never depends on the
+/// order nodes' guests hit their boundaries.
+pub(crate) fn apply_fault(g: &mut GuestVm, kind: FaultKind, garbage: u64) {
+    match kind {
+        FaultKind::Kill => {}
+        FaultKind::Corrupt => {
+            let mut x = garbage | 1;
+            for r in 1..32 {
+                x = xorshift64(x);
+                g.vcpu.hart.regs[r] = x;
+            }
+            g.vcpu.hart.pc = 0x100;
+            g.vcpu.hart.reservation = None;
+            g.vcpu.hart.wfi = false;
+        }
+        FaultKind::DevErr => {
+            g.bus.vq.fault_error_n = g.bus.vq.fault_error_n.max(1);
+            g.bus.vblk.fault_error_n = g.bus.vblk.fault_error_n.max(2);
+        }
+        FaultKind::DevHang => {
+            g.bus.vq.fault_wedge = true;
+            g.bus.vblk.fault_wedge = true;
+        }
+        FaultKind::SpinLoop => {
+            let addr = RAM_BASE + g.bus.ram_size() - 8;
+            g.bus.write(addr, 4, SPIN_INST).expect("top of guest RAM is writable");
+            g.vcpu.hart.pc = addr;
+            g.vcpu.hart.prv = PrivLevel::Machine;
+            g.vcpu.hart.virt = false;
+            g.vcpu.hart.wfi = false;
+            g.vcpu.hart.csr.mie = 0;
+            g.vcpu.hart.csr.mstatus &= !0xa; // MIE|SIE off
+        }
+        FaultKind::WfiHang => {
+            g.vcpu.hart.csr.mie = 0;
+            g.vcpu.hart.csr.mstatus &= !0xa;
+            g.vcpu.hart.wfi = true;
+        }
+    }
+}
+
+/// Stateless garbage seed for [`FaultKind::Corrupt`].
+pub(crate) fn garbage_seed(base: u64, guest: usize, at: u64) -> u64 {
+    splitmix64(base ^ splitmix64(((guest as u64) << 32) ^ at))
+}
+
+/// One detected failure and what recovery did about it. All tick fields
+/// are modeled (see module docs), which is what keeps them identical
+/// across host thread counts, hart counts and engines.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Episode {
+    pub guest: usize,
+    /// Fault-kind name, or `"hang"`/`"bad_exit"` for failures with no
+    /// attributable injected fault.
+    pub cause: &'static str,
+    /// Guest virtual tick the fault triggered at.
+    pub fault_virt: u64,
+    /// Modeled detection latency (virtual ticks).
+    pub detect_ticks: u64,
+    /// Backoff served before the restored guest was released (0 for a
+    /// quarantine episode).
+    pub backoff: u64,
+    /// Restart index this episode consumed (the count *after* a
+    /// recovery, the exhausted budget for a quarantine).
+    pub restart: u32,
+    pub quarantined: bool,
+}
+
+impl Episode {
+    /// Modeled repair time for a recovered episode.
+    pub fn repair_ticks(&self) -> u64 {
+        self.detect_ticks + self.backoff
+    }
+
+    /// Modeled unavailability this episode contributed: repair time if
+    /// recovered, the rest of the node span if quarantined.
+    pub fn downtime(&self, span: u64) -> u64 {
+        if self.quarantined {
+            span.saturating_sub(self.fault_virt)
+        } else {
+            self.repair_ticks()
+        }
+    }
+}
+
+/// Per-node recovery driver: fault queues, snapshots, watchdog state and
+/// the episode log. Owned by the VMM scheduler, which calls into it at
+/// slice boundaries only.
+#[derive(Debug)]
+pub struct Resilience {
+    /// Hang threshold in guest virtual ticks without progress; 0
+    /// disables the watchdog.
+    pub watchdog: u64,
+    /// Snapshot cadence in guest virtual ticks; 0 means boot-only.
+    pub snap_every: u64,
+    /// Restarts each guest may consume before quarantine.
+    pub max_restarts: u32,
+    /// Strict mode: faults still inject and hangs still recover, but
+    /// failed/divergent guest exits are not rerouted into recovery (the
+    /// CLI then hard-bails as it did before the chaos layer).
+    pub strict: bool,
+    /// Solo console digests by bench name; a finished guest whose
+    /// digest diverges from its bench's entry is treated as failed.
+    pub expected: BTreeMap<String, ConsoleDigest>,
+    pub(crate) pending: Vec<Vec<PlannedFault>>,
+    pub(crate) cursor: Vec<usize>,
+    pub(crate) snaps: Vec<Vec<Snapshot>>,
+    /// Snapshots known to predate the oldest unresolved fault.
+    pub(crate) good: Vec<usize>,
+    pub(crate) last_fault: Vec<Option<(FaultKind, u64)>>,
+    pub(crate) restarts: Vec<u32>,
+    pub(crate) quarantined: Vec<bool>,
+    pub(crate) marks: Vec<Mark>,
+    /// Guest virtual tick of the last observed progress.
+    pub(crate) silent_since: Vec<u64>,
+    pub episodes: Vec<Episode>,
+    pub(crate) booted: bool,
+    pub(crate) garbage_base: u64,
+}
+
+impl Resilience {
+    pub fn new(
+        pending: Vec<Vec<PlannedFault>>,
+        watchdog: u64,
+        snap_every: u64,
+        max_restarts: u32,
+        strict: bool,
+        expected: BTreeMap<String, ConsoleDigest>,
+        garbage_base: u64,
+    ) -> Resilience {
+        let n = pending.len();
+        Resilience {
+            watchdog,
+            snap_every,
+            max_restarts,
+            strict,
+            expected,
+            pending,
+            cursor: vec![0; n],
+            snaps: vec![Vec::new(); n],
+            good: vec![0; n],
+            last_fault: vec![None; n],
+            restarts: vec![0; n],
+            quarantined: vec![false; n],
+            marks: vec![Mark::default(); n],
+            silent_since: vec![0; n],
+            episodes: Vec::new(),
+            booted: false,
+            garbage_base,
+        }
+    }
+
+    /// Exponential backoff for restart `k` (1-based), capped so the
+    /// shift never overflows.
+    pub fn backoff_for(k: u32) -> u64 {
+        BACKOFF_BASE << (k.saturating_sub(1)).min(16)
+    }
+
+    /// Pop the next planned fault for `guest` if its trigger tick has
+    /// been reached on the guest's virtual clock.
+    pub(crate) fn next_due(&mut self, guest: usize, virt: u64) -> Option<PlannedFault> {
+        let c = self.cursor[guest];
+        let f = *self.pending[guest].get(c)?;
+        if virt >= f.at {
+            self.cursor[guest] = c + 1;
+            Some(f)
+        } else {
+            None
+        }
+    }
+
+    pub fn guest_restarts(&self, guest: usize) -> u32 {
+        self.restarts[guest]
+    }
+
+    pub fn guest_quarantined(&self, guest: usize) -> bool {
+        self.quarantined[guest]
+    }
+
+    /// Modeled downtime for one guest over a node span.
+    pub fn guest_downtime(&self, guest: usize, span: u64) -> u64 {
+        self.episodes
+            .iter()
+            .filter(|e| e.guest == guest)
+            .map(|e| e.downtime(span))
+            .sum()
+    }
+
+    /// Modeled repair times of this guest's recovered episodes.
+    pub fn guest_repairs(&self, guest: usize) -> Vec<u64> {
+        self.episodes
+            .iter()
+            .filter(|e| e.guest == guest && !e.quarantined)
+            .map(|e| e.repair_ticks())
+            .collect()
+    }
+
+    pub fn total_restarts(&self) -> u64 {
+        self.restarts.iter().map(|&r| r as u64).sum()
+    }
+
+    pub fn total_quarantined(&self) -> usize {
+        self.quarantined.iter().filter(|&&q| q).count()
+    }
+}
+
+fn xorshift64(mut x: u64) -> u64 {
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    x
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let s: ChaosSpec =
+            "seed=7, faults=3, window=1000:9000, kinds=kill+dev-err, spin-loop@5000:g1, corrupt@800"
+                .parse()
+                .unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.faults, 3);
+        assert_eq!(s.window, (1000, 9000));
+        assert_eq!(s.kinds, vec![FaultKind::Kill, FaultKind::DevErr]);
+        assert_eq!(
+            s.events,
+            vec![
+                FaultEvent { at: 5000, guest: Some(1), kind: FaultKind::SpinLoop },
+                FaultEvent { at: 800, guest: None, kind: FaultKind::Corrupt },
+            ]
+        );
+        assert!(s.summary().contains("seed 7"));
+    }
+
+    #[test]
+    fn spec_grammar_rejects_garbage() {
+        assert!("seed=7,flavor=9".parse::<ChaosSpec>().is_err());
+        assert!("kinds=meteor".parse::<ChaosSpec>().is_err());
+        assert!("window=9:9".parse::<ChaosSpec>().is_err());
+        assert!("kill".parse::<ChaosSpec>().is_err());
+        assert!("kill@nope".parse::<ChaosSpec>().is_err());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_seed_sensitive() {
+        let s: ChaosSpec = "seed=42,faults=8,window=1000:100000".parse().unwrap();
+        let a = s.plan(3, 4);
+        let b = s.plan(3, 4);
+        assert_eq!(a, b, "same (spec, node) must compile identically");
+        let mut s2 = s.clone();
+        s2.seed = 43;
+        assert_ne!(s.plan(0, 4), s2.plan(0, 4), "seed must steer the draws");
+        assert_ne!(s.plan(0, 4), s.plan(1, 4), "nodes must draw independently");
+        for q in &a {
+            assert!(q.windows(2).all(|w| w[0].at <= w[1].at), "per-guest queues sorted");
+        }
+        let total: usize = a.iter().map(Vec::len).sum();
+        assert_eq!(total, 8);
+        for q in &a {
+            for f in q {
+                assert!((1000..100000).contains(&f.at));
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_events_round_robin_unpinned_guests() {
+        let s: ChaosSpec = "faults=0,kill@100,kill@200,kill@300:g0".parse().unwrap();
+        let plan = s.plan(0, 2);
+        assert_eq!(
+            plan[0],
+            vec![
+                PlannedFault { at: 100, kind: FaultKind::Kill },
+                PlannedFault { at: 300, kind: FaultKind::Kill },
+            ]
+        );
+        assert_eq!(plan[1], vec![PlannedFault { at: 200, kind: FaultKind::Kill }]);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(Resilience::backoff_for(1), BACKOFF_BASE);
+        assert_eq!(Resilience::backoff_for(2), BACKOFF_BASE * 2);
+        assert_eq!(Resilience::backoff_for(5), BACKOFF_BASE * 16);
+        assert_eq!(Resilience::backoff_for(60), BACKOFF_BASE << 16);
+    }
+
+    #[test]
+    fn episode_downtime_models_recovery_and_quarantine() {
+        let rec = Episode {
+            guest: 0,
+            cause: "spin_loop",
+            fault_virt: 10_000,
+            detect_ticks: 5_000,
+            backoff: 100,
+            restart: 1,
+            quarantined: false,
+        };
+        assert_eq!(rec.repair_ticks(), 5_100);
+        assert_eq!(rec.downtime(1_000_000), 5_100);
+        let q = Episode { backoff: 0, restart: 3, quarantined: true, ..rec };
+        assert_eq!(q.downtime(1_000_000), 990_000);
+        assert_eq!(q.downtime(5_000), 0, "fault after span end contributes nothing");
+    }
+
+    #[test]
+    fn fault_queue_pops_in_virtual_order() {
+        let plan = vec![vec![
+            PlannedFault { at: 100, kind: FaultKind::Kill },
+            PlannedFault { at: 900, kind: FaultKind::DevErr },
+        ]];
+        let mut r = Resilience::new(plan, 0, 0, 3, false, BTreeMap::new(), 1);
+        assert_eq!(r.next_due(0, 50), None);
+        assert_eq!(r.next_due(0, 120).map(|f| f.kind), Some(FaultKind::Kill));
+        assert_eq!(r.next_due(0, 120), None, "second fault not due yet");
+        assert_eq!(r.next_due(0, 2_000).map(|f| f.kind), Some(FaultKind::DevErr));
+        assert_eq!(r.next_due(0, u64::MAX), None, "queue drained");
+    }
+
+    #[test]
+    fn garbage_seed_is_stateless_and_distinct() {
+        assert_eq!(garbage_seed(9, 1, 500), garbage_seed(9, 1, 500));
+        assert_ne!(garbage_seed(9, 1, 500), garbage_seed(9, 2, 500));
+        assert_ne!(garbage_seed(9, 1, 500), garbage_seed(9, 1, 501));
+    }
+}

@@ -21,6 +21,8 @@
 //! host-side parallel speedup (run the same spec with `threads = 1` and
 //! divide).
 
+pub mod chaos;
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -78,11 +80,59 @@ pub struct FleetSpec {
     /// [`crate::telemetry::NodeTelemetry`] into the report. `None` (the
     /// default) leaves every emit point a single never-taken branch.
     pub telemetry: Option<crate::telemetry::TelemetryCfg>,
+    /// Deterministic fault-injection plan (`--chaos`); `None` injects
+    /// nothing. Chaos without a watchdog still recovers kill and
+    /// failed-exit faults; livelocks need `watchdog > 0`.
+    pub chaos: Option<chaos::ChaosSpec>,
+    /// Hang threshold in guest virtual ticks without externally visible
+    /// progress; 0 disables the watchdog.
+    pub watchdog: u64,
+    /// Periodic snapshot cadence in guest virtual ticks; 0 keeps only
+    /// the boot snapshot.
+    pub snap_every: u64,
+    /// Checkpoint restores each guest may consume before quarantine.
+    pub max_restarts: u32,
+    /// Keep the historical hard-bail behavior: failed/divergent guest
+    /// exits are not routed into recovery.
+    pub strict: bool,
+    /// Solo console digests by bench, the recovery driver's divergence
+    /// oracle for finished guests (normally filled from
+    /// [`solo_baselines`] by the CLI; empty disables digest routing).
+    pub expected: BTreeMap<String, ConsoleDigest>,
 }
 
 impl FleetSpec {
     pub fn total_guests(&self) -> usize {
         self.nodes * self.guests_per_node
+    }
+
+    /// True when the spec asks for fault injection or self-healing.
+    pub fn resilience_active(&self) -> bool {
+        self.chaos.is_some() || self.watchdog > 0
+    }
+
+    /// Build one node's recovery driver (or `None` when chaos and the
+    /// watchdog are both off, which keeps the scheduler's hot loop on
+    /// its historical path).
+    pub fn resilience_for(&self, node: usize) -> Option<chaos::Resilience> {
+        if !self.resilience_active() {
+            return None;
+        }
+        let n = self.guests_per_node;
+        let plan = self
+            .chaos
+            .as_ref()
+            .map_or_else(|| vec![Vec::new(); n], |c| c.plan(node, n));
+        let seed = self.chaos.as_ref().map_or(0, |c| c.seed);
+        Some(chaos::Resilience::new(
+            plan,
+            self.watchdog,
+            self.snap_every,
+            self.max_restarts,
+            self.strict,
+            self.expected.clone(),
+            seed ^ (node as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        ))
     }
 }
 
@@ -114,6 +164,16 @@ pub struct GuestOutcome {
     /// Requests served / failed validation on this guest's queue device.
     pub req_completed: u32,
     pub req_errors: u32,
+    /// Checkpoint restores the recovery driver spent on this guest.
+    pub restarts: u32,
+    /// True when the guest exhausted its restart budget and was parked
+    /// out of the schedule permanently.
+    pub quarantined: bool,
+    /// Modeled unavailability in ticks (see `chaos::Episode::downtime`).
+    pub downtime: u64,
+    /// Modeled repair times (detection + backoff) of this guest's
+    /// recovered episodes — the fleet MTTR inputs.
+    pub repairs: Vec<u64>,
 }
 
 /// One node's result.
@@ -131,6 +191,9 @@ pub struct NodeOutcome {
     /// Frozen telemetry of this node's carrier machine (when the spec
     /// enabled it).
     pub telemetry: Option<crate::telemetry::NodeTelemetry>,
+    /// Availability denominator per guest: the node tick budget when
+    /// finite, else the scheduled horizon actually reached.
+    pub span: u64,
 }
 
 /// Aggregate result of a fleet run.
@@ -309,6 +372,54 @@ impl FleetReport {
         self.nodes.iter().flat_map(|n| n.hart_stats.iter()).map(|h| h.wakes).sum()
     }
 
+    /// Checkpoint restores across the fleet.
+    pub fn total_restarts(&self) -> u64 {
+        self.guests().map(|g| g.restarts as u64).sum()
+    }
+
+    /// Guests quarantined across the fleet.
+    pub fn quarantined_guests(&self) -> usize {
+        self.guests().filter(|g| g.quarantined).count()
+    }
+
+    /// Modeled fleet availability: `1 − Σ downtime / Σ span`, over every
+    /// guest-span. Deterministic bit-for-bit for a given spec — downtime
+    /// is derived from the fault plan and restart indices, never from
+    /// hart placement or host threading. 1.0 when chaos is off.
+    pub fn availability(&self) -> f64 {
+        let mut down: u128 = 0;
+        let mut total: u128 = 0;
+        for n in &self.nodes {
+            for g in &n.guests {
+                down += g.downtime as u128;
+                total += n.span as u128;
+            }
+        }
+        if total == 0 {
+            1.0
+        } else {
+            1.0 - down.min(total) as f64 / total as f64
+        }
+    }
+
+    /// Modeled mean time to repair (ticks) over every recovered episode;
+    /// `None` when nothing was repaired.
+    pub fn mttr(&self) -> Option<f64> {
+        let mut sum: u128 = 0;
+        let mut count: u64 = 0;
+        for g in self.guests() {
+            for &r in &g.repairs {
+                sum += r as u128;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            None
+        } else {
+            Some(sum as f64 / count as f64)
+        }
+    }
+
     /// Completed guests per host wall-clock second.
     pub fn guests_per_sec(&self) -> f64 {
         if self.wall_seconds > 0.0 {
@@ -394,6 +505,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                 let policy = spec.sched.build(spec.slice_ticks, &guests);
                 let mut sched =
                     VmmScheduler::with_harts(guests, spec.policy, policy, spec.harts);
+                sched.resilience = spec.resilience_for(node);
                 let mut m = Machine::new(spec.ram_bytes, true);
                 m.core.tlb = Tlb::new(spec.tlb_sets, spec.tlb_ways);
                 m.engine = spec.engine;
@@ -414,10 +526,17 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                 if let Some(t) = telemetry.as_mut() {
                     t.hart_stats = out.hart_stats.clone();
                 }
+                let span = if spec.max_node_ticks == u64::MAX {
+                    out.total_ticks
+                } else {
+                    spec.max_node_ticks
+                };
+                let resil = sched.resilience.as_ref();
                 let guests = sched
                     .guests
                     .iter()
-                    .map(|g| GuestOutcome {
+                    .enumerate()
+                    .map(|(i, g)| GuestOutcome {
                         node,
                         id: g.id,
                         bench: g.bench.clone(),
@@ -431,6 +550,10 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                         req_latencies: g.bus.vq.latencies.clone(),
                         req_completed: g.bus.vq.completed,
                         req_errors: g.bus.vq.errors,
+                        restarts: resil.map_or(0, |r| r.guest_restarts(i)),
+                        quarantined: resil.is_some_and(|r| r.guest_quarantined(i)),
+                        downtime: resil.map_or(0, |r| r.guest_downtime(i, span)),
+                        repairs: resil.map_or_else(Vec::new, |r| r.guest_repairs(i)),
                     })
                     .collect();
                 results.lock().unwrap().push(NodeOutcome {
@@ -442,6 +565,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetReport> {
                     guests,
                     hart_stats: out.hart_stats,
                     telemetry,
+                    span,
                 });
             });
         }
@@ -526,6 +650,13 @@ pub fn console_mismatches(
 ) -> Vec<String> {
     let mut bad = Vec::new();
     for g in report.guests() {
+        // A quarantined guest is *reported* unhealthy, not compared: its
+        // console legitimately diverges (that is why it was quarantined)
+        // and the graceful-degradation contract is that it must not fail
+        // the rest of the fleet.
+        if g.quarantined {
+            continue;
+        }
         match solos.get(&g.bench) {
             Some(solo) if *solo == g.console => {}
             Some(solo) => bad.push(format!(
@@ -567,10 +698,19 @@ pub fn counter_mismatches(report: &FleetReport) -> Vec<String> {
         }
     };
     check("world_switches", c.world_switches, report.world_switches());
-    check("exceptions", c.exceptions, report.guests().map(|g| g.exceptions).sum());
-    check("interrupts", c.interrupts, report.guests().map(|g| g.interrupts).sum());
+    // Under chaos the telemetry stream keeps the traps of faulted
+    // segments and their replays while the guests' own histograms are
+    // rewound by every restore, so the two views legitimately diverge —
+    // the equality is only an invariant of fault-free runs.
+    let chaotic = c.fault_injects + c.hang_detects + c.restores + c.quarantines > 0;
+    if !chaotic {
+        check("exceptions", c.exceptions, report.guests().map(|g| g.exceptions).sum());
+        check("interrupts", c.interrupts, report.guests().map(|g| g.interrupts).sum());
+    }
     // Structural invariant of the scheduler loop: every slice is exactly
-    // one decision, one full switch and one VM exit.
+    // one decision, one full switch and one VM exit. Recovery residencies
+    // are silent (no decision, no switch, no exit), so this holds under
+    // chaos too.
     check("decisions", c.decisions, c.world_switches);
     check("vm_exits", c.total_vm_exits(), c.world_switches);
     bad
@@ -598,6 +738,12 @@ mod tests {
             tlb_ways: 4,
             engine: crate::sim::EngineKind::default(),
             telemetry: None,
+            chaos: None,
+            watchdog: 0,
+            snap_every: 0,
+            max_restarts: 3,
+            strict: false,
+            expected: BTreeMap::new(),
         }
     }
 
@@ -637,10 +783,15 @@ mod tests {
                         req_latencies: vec![t, t + 1],
                         req_completed: 2,
                         req_errors: 0,
+                        restarts: 0,
+                        quarantined: false,
+                        downtime: 0,
+                        repairs: Vec::new(),
                     })
                     .collect(),
                 hart_stats: Vec::new(),
                 telemetry: None,
+                span: 1_000_000,
             }],
             threads: 1,
             construct_seconds: 0.0,
@@ -653,6 +804,9 @@ mod tests {
             wall_seconds: 1.0,
         };
         let r = mk(&[40, 10, 30, 20]);
+        assert_eq!(r.availability(), 1.0, "no downtime means full availability");
+        assert_eq!(r.mttr(), None, "nothing repaired without chaos");
+        assert_eq!((r.total_restarts(), r.quarantined_guests()), (0, 0));
         assert_eq!(r.latency_percentile(0.50), Some(20));
         assert_eq!(r.latency_percentile(0.99), Some(40));
         assert_eq!(r.latency_percentile(1.0), Some(40));
@@ -669,5 +823,22 @@ mod tests {
         assert!((r.requests_per_sim_sec() - 8000.0).abs() < 1e-9);
         assert_eq!(mk(&[]).request_percentile(0.5), None);
         assert_eq!(mk(&[]).requests_per_sim_sec(), 0.0);
+
+        // Availability / MTTR model: 2 guests over a 1M-tick span, one
+        // with a recovered episode (repair 60k) and one quarantined at
+        // tick 600k (downtime 400k).
+        let mut r = mk(&[40, 10]);
+        {
+            let n = &mut r.nodes[0];
+            n.guests[0].restarts = 1;
+            n.guests[0].downtime = 60_000;
+            n.guests[0].repairs = vec![60_000];
+            n.guests[1].quarantined = true;
+            n.guests[1].downtime = 400_000;
+        }
+        let expect = 1.0 - 460_000.0 / 2_000_000.0;
+        assert!((r.availability() - expect).abs() < 1e-12);
+        assert_eq!(r.mttr(), Some(60_000.0));
+        assert_eq!((r.total_restarts(), r.quarantined_guests()), (1, 1));
     }
 }

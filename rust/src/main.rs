@@ -14,6 +14,8 @@
 //!             [--bench A,B] [--workload kv|echo] [--rate R] [--scale N]
 //!             [--policy all|vmid|none]
 //!             [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...]
+//!             [--chaos SPEC] [--watchdog T] [--snap-every N]
+//!             [--max-restarts R] [--strict] [--chaos-out F]
 //!             [--engine block|tick] [--out FILE] [--requests-out F]
 //!             [--trace-out F] [--metrics-out F] [--events-out F]
 //! hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]
@@ -54,7 +56,7 @@ impl Args {
                 bail!("unexpected argument '{a}'");
             };
             // boolean flags
-            if matches!(name, "vm" | "stats" | "echo" | "trace" | "selfcheck") {
+            if matches!(name, "vm" | "stats" | "echo" | "trace" | "selfcheck" | "strict") {
                 flags.insert(name.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -430,6 +432,21 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let benches = parse_benches(args)?;
     apply_slo_overrides(&mut sched, parse_slo_targets(args)?, &benches)?;
     let tele = TelemetryOut::parse(args);
+    // Chaos/recovery knobs. --chaos with no --watchdog gets a default
+    // hang threshold (livelock faults would otherwise never be detected);
+    // chaos or a watchdog gets a default snapshot cadence so recovery
+    // does not have to replay from boot.
+    let chaos = args
+        .get("chaos")
+        .map(|s| s.parse::<hvsim::fleet::chaos::ChaosSpec>())
+        .transpose()
+        .context("bad --chaos")?;
+    let watchdog =
+        args.u64("watchdog")?.unwrap_or(if chaos.is_some() { 2_000_000 } else { 0 });
+    let resilient = chaos.is_some() || watchdog > 0;
+    let snap_every =
+        args.u64("snap-every")?.unwrap_or(if resilient { 500_000 } else { 0 });
+    let max_restarts = args.u64("max-restarts")?.unwrap_or(3) as u32;
     let mut spec = hvsim::fleet::FleetSpec {
         nodes,
         guests_per_node: guests,
@@ -447,6 +464,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         tlb_ways: cfg.tlb_ways as usize,
         engine: cfg.engine,
         telemetry: tele.cfg(),
+        chaos,
+        watchdog,
+        snap_every,
+        max_restarts,
+        strict: args.has("strict"),
+        expected: std::collections::BTreeMap::new(),
     };
 
     // Solo baselines up front: the byte-check oracle for every fleet
@@ -456,6 +479,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let solos = hvsim::fleet::solo_baselines(&spec)?;
     spec.sched
         .fill_fair_share(solos.iter().map(|(b, s)| (b.as_str(), s.ticks)), guests as u64);
+    // The recovery driver's divergence oracle: a guest that powers off
+    // "passed" but with a console that differs from its solo run is a
+    // failure to route into restore, exactly like a failed exit.
+    if spec.resilience_active() && !spec.strict {
+        spec.expected =
+            solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+    }
 
     // Engine A/B smoke: the solo baselines re-run under the *other*
     // execution engine must be bit-exact — same console digest, same
@@ -663,6 +693,47 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         std::fs::write(path, json).with_context(|| format!("writing {path}"))?;
     }
 
+    // Chaos artifact (CI uploads it as BENCH_chaos.json): the modeled
+    // availability/MTTR figures plus per-guest recovery accounting, all
+    // bit-reproducible for a given --chaos seed.
+    if let Some(path) = args.get("chaos-out") {
+        let mut rows = String::new();
+        for g in report.guests() {
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"node\": {}, \"guest\": {}, \"bench\": \"{}\", \"passed\": {}, \
+                 \"restarts\": {}, \"quarantined\": {}, \"downtime_ticks\": {}, \
+                 \"console_sha\": \"{}\"}}",
+                g.node,
+                g.id,
+                g.bench,
+                g.passed,
+                g.restarts,
+                g.quarantined,
+                g.downtime,
+                g.console.short_hex(),
+            ));
+        }
+        let json = format!(
+            "{{\n  \"schema\": \"hvsim-chaos-v1\",\n  \"chaos\": \"{}\",\n  \
+             \"watchdog_ticks\": {},\n  \"snap_every_ticks\": {},\n  \
+             \"max_restarts\": {},\n  \"availability\": {:.6},\n  \"mttr_ticks\": {},\n  \
+             \"restarts\": {},\n  \"quarantined\": {},\n  \"guests\": [\n{}\n  ]\n}}\n",
+            spec.chaos.as_ref().map_or("off".to_string(), |c| c.summary()),
+            spec.watchdog,
+            spec.snap_every,
+            spec.max_restarts,
+            report.availability(),
+            report.mttr().map_or("null".to_string(), |m| format!("{m:.1}")),
+            report.total_restarts(),
+            report.quarantined_guests(),
+            rows
+        );
+        std::fs::write(path, json).with_context(|| format!("writing {path}"))?;
+    }
+
     match args.get("out") {
         Some(path) => std::fs::write(path, &out)?,
         None => print!("{out}"),
@@ -673,7 +744,22 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             counter_bad.join("\n  ")
         );
     }
-    if !report.all_passed() {
+    if spec.resilience_active() && !spec.strict {
+        // Graceful degradation: quarantined guests are reported above,
+        // not fatal. Any *non*-quarantined failure means recovery did
+        // not do its job — that still fails the run.
+        let unhealthy: Vec<String> = report
+            .guests()
+            .filter(|g| !g.quarantined && !g.passed)
+            .map(|g| format!("node {} guest {} ({})", g.node, g.id, g.bench))
+            .collect();
+        if !unhealthy.is_empty() {
+            bail!(
+                "fleet run failed: guest(s) failed without being recovered or quarantined:\n  {}",
+                unhealthy.join("\n  ")
+            );
+        }
+    } else if !report.all_passed() {
         bail!("fleet run failed: not all guests passed");
     }
     if !mismatches.is_empty() {
@@ -832,7 +918,7 @@ fn usage() -> ! {
          usage:\n  hvsim run   [--bench NAME] [--vm] [--scale N] [--config FILE] [--stats] [--echo] [--engine block|tick] [telemetry]\n  \
          hvsim sweep [--scale N] [--trace] [--out FILE]\n  \
          hvsim vmm   [--guests N] [--harts H] [--slice T] [--bench A,B] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [telemetry]\n  \
-         hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T] [--bench A,B] [--workload kv|echo] [--rate R] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [--requests-out F] [telemetry]\n  \
+         hvsim fleet [--nodes M] [--guests N] [--harts H] [--threads K] [--slice T] [--bench A,B] [--workload kv|echo] [--rate R] [--policy all|vmid|none] [--sched rr|slo|weighted:W,...|gang] [--slo BENCH=TICKS,...] [--engine block|tick] [--chaos SPEC] [--watchdog T] [--snap-every N] [--max-restarts R] [--strict] [--chaos-out F] [--requests-out F] [telemetry]\n  \
          hvsim timing [--bench NAME] [--vm] [--scale N] [--artifacts DIR]\n  \
          hvsim boot  [--bench NAME]\n  \
          hvsim fuzz  [--seed S] [--insts N] [--engine block|tick] [--selfcheck] [--prog FILE] [--prog-out FILE] [--trace-out FILE]\n  \

@@ -491,17 +491,51 @@ pub fn save_vs_template(m: &Machine, template: &Bus, name: &str) -> Result<Vec<u
     Ok(w.buf)
 }
 
+/// A scratch machine matching `m`'s RAM size and H setting. Every
+/// restore path parses the blob against a scratch and commits only on
+/// full success, so a blob that fails mid-parse (truncation, bit flip,
+/// out-of-range page) can never leave the target half-restored. CoW zero
+/// pages make the scratch O(page table), not O(RAM).
+fn scratch_for(m: &Machine) -> Machine {
+    Machine::new(m.bus.ram_size() as usize, m.core.hart.csr.h_enabled)
+}
+
+/// Commit a fully-parsed scratch restore onto the target in one step:
+/// everything the readers populate moves over, the TLB and every derived
+/// cache reset (predecoded blocks are never serialized — they are
+/// rebuilt on demand), and target-owned state the readers never touch
+/// (UART capture, telemetry, engine selection) survives.
+fn commit_restore(m: &mut Machine, s: Machine) {
+    m.core.hart = s.core.hart;
+    m.stats.sim_ticks = s.stats.sim_ticks;
+    m.stats.sim_insts = s.stats.sim_insts;
+    m.device_countdown = s.device_countdown;
+    m.bus.clint = s.bus.clint;
+    m.bus.plic = s.bus.plic;
+    m.bus.vq = s.bus.vq;
+    m.bus.vblk = s.bus.vblk;
+    m.bus.node_tick_base = s.bus.node_tick_base;
+    m.bus.clear_dev_events();
+    m.bus.clone_ram_from(&s.bus).expect("scratch RAM is sized to match");
+    m.core.tlb.flush_all();
+    m.core.reset_derived();
+}
+
 /// Restore from a CK4 blob (zero base), falling back to the CK3/CK2
 /// readers on the legacy magics (which reset the paravirtual devices —
 /// those formats predate them). Template-relative blobs are refused by
-/// name — use [`restore_vs_template`]. The header (RAM size + template
-/// name) is validated *before* any machine state is touched, so a
-/// refused blob leaves the machine exactly as it was.
+/// name — use [`restore_vs_template`]. Every failure — header mismatch,
+/// truncation, corrupt section — is a clean `Err` that leaves the
+/// machine exactly as it was: the readers run against a scratch machine
+/// and the result is committed only after the whole blob parses.
 pub fn restore(m: &mut Machine, blob: &[u8]) -> Result<()> {
     let mut r = Reader { buf: blob, pos: 0 };
     let magic = r.take(8)?;
     if magic == MAGIC_CK2 {
-        return restore_ck2_body(m, &mut r);
+        let mut s = scratch_for(m);
+        restore_ck2_body(&mut s, &mut r)?;
+        commit_restore(m, s);
+        return Ok(());
     }
     let legacy = magic == MAGIC_CK3;
     if magic != MAGIC_CK4 && !legacy {
@@ -516,19 +550,15 @@ pub fn restore(m: &mut Machine, blob: &[u8]) -> Result<()> {
         let name = String::from_utf8_lossy(r.take(name_len)?).into_owned();
         bail!("checkpoint is relative to template '{name}'; restore with restore_vs_template");
     }
-    read_state(m, &mut r)?;
+    let mut s = scratch_for(m);
+    read_state(&mut s, &mut r)?;
     if legacy {
-        reset_virtio(m);
+        reset_virtio(&mut s);
     } else {
-        read_virtio(m, &mut r)?;
+        read_virtio(&mut s, &mut r)?;
     }
-    m.bus.fill_ram(RAM_BASE, ram_len as u64).expect("full-RAM fill is in range");
-    apply_pages(m, &mut r, ram_len)?;
-    // Microarchitectural (non-architectural) state resets: the TLB, and
-    // every derived cache over the replaced RAM (predecoded blocks are
-    // never serialized — they are rebuilt on demand).
-    m.core.tlb.flush_all();
-    m.core.reset_derived();
+    apply_pages(&mut s, &mut r, ram_len)?;
+    commit_restore(m, s);
     Ok(())
 }
 
@@ -567,14 +597,14 @@ pub fn restore_vs_template(
     if recorded != name {
         bail!("checkpoint was saved against template '{recorded}', not '{name}'");
     }
-    read_state(m, &mut r)?;
-    read_virtio(m, &mut r)?;
-    m.bus
+    let mut s = scratch_for(m);
+    read_state(&mut s, &mut r)?;
+    read_virtio(&mut s, &mut r)?;
+    s.bus
         .clone_ram_from(template)
         .map_err(|_| anyhow::anyhow!("template RAM size does not match machine"))?;
-    apply_pages(m, &mut r, ram_len)?;
-    m.core.tlb.flush_all();
-    m.core.reset_derived();
+    apply_pages(&mut s, &mut r, ram_len)?;
+    commit_restore(m, s);
     Ok(())
 }
 
@@ -599,8 +629,10 @@ pub fn save_ck2(m: &Machine) -> Vec<u8> {
     w.buf
 }
 
-/// CK2 body reader (magic already consumed). CK2 predates the
-/// paravirtual devices: they are reset, never left dangling.
+/// CK2 body reader (magic already consumed), run against a fresh scratch
+/// machine by [`restore`]. CK2 predates the paravirtual devices: the
+/// scratch's power-on devices are exactly the reset the format implies,
+/// and its RAM is already the zero base the pages apply against.
 fn restore_ck2_body(m: &mut Machine, r: &mut Reader) -> Result<()> {
     read_state(m, r)?;
     reset_virtio(m);
@@ -608,10 +640,7 @@ fn restore_ck2_body(m: &mut Machine, r: &mut Reader) -> Result<()> {
     if ram_len != m.bus.ram_size() as usize {
         bail!("checkpoint RAM size {} != machine RAM {}", ram_len, m.bus.ram_size());
     }
-    m.bus.fill_ram(RAM_BASE, ram_len as u64).expect("full-RAM fill is in range");
     apply_pages(m, r, ram_len)?;
-    m.core.tlb.flush_all();
-    m.core.reset_derived();
     Ok(())
 }
 
@@ -941,5 +970,130 @@ mod tests {
         blob.extend_from_slice(&u32::MAX.to_le_bytes());
         blob.extend_from_slice(&[0u8; PAGE]);
         assert!(restore(&mut crate::sim::Machine::new(1 << 20, true), &blob).is_err());
+    }
+
+    /// Run a small program partway so the target has distinctive register,
+    /// console, and RAM state a botched restore would visibly clobber.
+    fn distinctive_target() -> crate::sim::Machine {
+        let src = r#"
+            li t0, 0x7777
+        loop:
+            addi t0, t0, 3
+            li a0, 0x41
+            j loop
+        "#;
+        let img = assemble(src, RAM_BASE).unwrap();
+        let mut t = crate::sim::Machine::new(1 << 20, true);
+        t.load(&img).unwrap();
+        t.set_entry(RAM_BASE);
+        t.run(123);
+        t
+    }
+
+    #[test]
+    fn corrupt_blobs_leave_target_untouched() {
+        // The atomic-restore guarantee: any blob that fails to parse —
+        // truncated at any point, or bit-flipped into an invalid section —
+        // returns Err and leaves the target machine byte-identical to its
+        // pre-restore state (readers run against a scratch; the result is
+        // committed only after the whole blob parses). Covers all three
+        // on-disk formats: CK4, legacy CK3, legacy CK2.
+        let src = r#"
+            li t0, 0
+            li t1, 4000
+        loop:
+            addi t0, t0, 1
+            blt t0, t1, loop
+            li t2, 0x100000
+            li t3, 0x5555
+            sw t3, 0(t2)
+        "#;
+        let img = assemble(src, RAM_BASE).unwrap();
+        let mut m = crate::sim::Machine::new(1 << 20, true);
+        m.load(&img).unwrap();
+        m.set_entry(RAM_BASE);
+        m.run(900);
+        let ck4 = save(&m);
+        let ck2 = save_ck2(&m);
+        let mut w = Writer { buf: Vec::new() };
+        w.buf.extend_from_slice(MAGIC_CK3);
+        write_ram_header(&mut w, &m, "");
+        write_state(&mut w, &m);
+        write_dirty_pages(&mut w, &m, None);
+        let ck3 = w.buf;
+
+        let mut target = distinctive_target();
+        let before = save(&target);
+
+        for blob in [&ck4, &ck3, &ck2] {
+            // Every truncation point in the header/state region, then a
+            // stride through the page payload. All must fail cleanly: the
+            // formats have no optional trailing sections.
+            let cuts = (0..blob.len().min(160)).chain((160..blob.len()).step_by(97));
+            for cut in cuts {
+                assert!(
+                    restore(&mut target, &blob[..cut]).is_err(),
+                    "truncation to {cut} of {} must be rejected",
+                    blob.len()
+                );
+                assert_eq!(save(&target), before, "truncated restore (len {cut}) mutated target");
+            }
+        }
+
+        // Single-bit flips across the CK4 blob: flips in validated fields
+        // (magic, sizes, counts, page indexes) must Err without mutating
+        // the target. Flips in raw payload (a register value, page bytes)
+        // can legally parse — those produce a *different valid* machine,
+        // which is outside this test's contract.
+        let mut rejected = 0u32;
+        for off in (0..ck4.len()).step_by(61).chain(0..16) {
+            let mut bad = ck4.clone();
+            bad[off] ^= 0x80;
+            if restore(&mut target, &bad).is_err() {
+                rejected += 1;
+                assert_eq!(save(&target), before, "rejected bit-flip at {off} mutated target");
+            } else {
+                // A flip that parsed committed a full valid image; put the
+                // distinctive target state back for the next iteration.
+                target = distinctive_target();
+                assert_eq!(save(&target), before);
+            }
+        }
+        assert!(rejected >= 4, "expected header/magic flips to be rejected, got {rejected}");
+
+        // The pristine blob still restores and finishes identically.
+        restore(&mut target, &ck4).unwrap();
+        let (r1, r2) = (target.run(1_000_000), m.run(1_000_000));
+        assert_eq!(r1, ExitReason::PowerOff(0x5555));
+        assert_eq!(r2, r1);
+        assert_eq!(target.stats.sim_ticks, m.stats.sim_ticks);
+    }
+
+    #[test]
+    fn corrupt_template_blob_leaves_target_untouched() {
+        // Same guarantee for the template-relative path: a truncated
+        // CK4-vs-template blob is a clean Err with the target unmutated.
+        let template =
+            crate::vmm::GuestVm::new(0, "bitcount", 1, crate::sw::GUEST_RAM_MIN).unwrap();
+        let mut g = template.fork(1, 2).unwrap();
+        let mut m = crate::sim::Machine::new(crate::sw::GUEST_RAM_MIN, true);
+        crate::vmm::world_swap(&mut m, &mut g);
+        assert_eq!(m.run(150_000), ExitReason::Limit);
+        let blob = save_vs_template(&m, &template.bus, "bitcount").unwrap();
+
+        let mut target = crate::sim::Machine::new(crate::sw::GUEST_RAM_MIN, true);
+        target.core.hart.regs[5] = 0xfeed;
+        target.stats.sim_ticks = 42;
+        for cut in (0..blob.len().min(120)).chain((120..blob.len()).step_by(211)) {
+            assert!(
+                restore_vs_template(&mut target, &template.bus, "bitcount", &blob[..cut]).is_err(),
+                "truncation to {cut} must be rejected"
+            );
+            assert_eq!(target.core.hart.regs[5], 0xfeed, "truncated restore mutated target");
+            assert_eq!(target.stats.sim_ticks, 42);
+            assert_eq!(target.bus.ram_dirty_pages(), 0, "truncated restore touched target RAM");
+        }
+        restore_vs_template(&mut target, &template.bus, "bitcount", &blob).unwrap();
+        assert_eq!(target.core.hart.pc, m.core.hart.pc);
     }
 }

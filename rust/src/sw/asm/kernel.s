@@ -356,7 +356,11 @@ k_vq_complete:
 # Returns a0 = xor-fold (8-byte lanes) of the 512-byte sector, -1 on a
 # device error. The device is re-programmed every call: it is stateless
 # between requests, so this keeps the kernel free of persistent blk state.
+# An error status is retried once from a full re-program (transient
+# device faults heal); a second error reports -1 to the caller.
 k_blk_read:
+    li   t3, 1                  # retry budget
+k_blk_retry:
     li   t0, VBLK
     sw   zero, 0x08(t0)         # reset
     li   t1, 8
@@ -397,6 +401,12 @@ k_blk_read:
     li   t2, 2                  # WRITE
     sh   t2, 44(t1)
     sh   zero, 46(t1)
+    # Pre-arm the status byte as IOERR: a completion whose chain the
+    # device could not parse far enough to write status still reads as
+    # an error, never as a stale ok from the previous request.
+    li   t1, VQ_MEM + 0x520
+    li   t2, 2
+    sb   t2, 0(t1)
     # Clear stale completion state, post, kick.
     li   t1, VQ_MEM + 0x4c0
     sh   zero, 2(t1)
@@ -416,6 +426,10 @@ k_blk_poll:
     li   t1, VQ_MEM + 0x520
     lbu  t2, 0(t1)
     beqz t2, k_blk_ok
+    beqz t3, k_blk_fail         # retry budget spent: report the error
+    addi t3, t3, -1
+    j    k_blk_retry
+k_blk_fail:
     li   t1, -1
     sd   t1, 40(sp)
     j    k_sc_ret

@@ -44,6 +44,14 @@ pub struct Counters {
     pub irq_injects: u64,
     /// Paravirtual requests retired (latency samples captured).
     pub virtq_completes: u64,
+    /// Chaos-layer faults injected into guests.
+    pub fault_injects: u64,
+    /// Watchdog hang declarations.
+    pub hang_detects: u64,
+    /// Checkpoint-restore recoveries applied.
+    pub restores: u64,
+    /// Guests quarantined after exhausting their restart budget.
+    pub quarantines: u64,
 }
 
 impl Counters {
@@ -73,6 +81,10 @@ impl Counters {
             EventKind::MmioAccess { .. } => self.mmio_accesses += 1,
             EventKind::IrqInject { .. } => self.irq_injects += 1,
             EventKind::VirtqComplete { .. } => self.virtq_completes += 1,
+            EventKind::FaultInject { .. } => self.fault_injects += 1,
+            EventKind::HangDetect { .. } => self.hang_detects += 1,
+            EventKind::CheckpointRestore { .. } => self.restores += 1,
+            EventKind::Quarantine { .. } => self.quarantines += 1,
         }
     }
 
@@ -98,6 +110,10 @@ impl Counters {
         self.mmio_accesses += other.mmio_accesses;
         self.irq_injects += other.irq_injects;
         self.virtq_completes += other.virtq_completes;
+        self.fault_injects += other.fault_injects;
+        self.hang_detects += other.hang_detects;
+        self.restores += other.restores;
+        self.quarantines += other.quarantines;
     }
 
     pub fn total_vm_exits(&self) -> u64 {
@@ -121,7 +137,9 @@ impl Counters {
                 "\"interrupts\": {}, \"trap_returns\": {}, \"block_hits\": {}, ",
                 "\"block_builds\": {}, \"block_invalidated\": {}, \"tlb_flushes\": {}, ",
                 "\"tlb_gen_bumps\": {}, \"parks\": {}, \"wakes\": {}, ",
-                "\"mmio_accesses\": {}, \"irq_injects\": {}, \"virtq_completes\": {}}}"
+                "\"mmio_accesses\": {}, \"irq_injects\": {}, \"virtq_completes\": {}, ",
+                "\"fault_injects\": {}, \"hang_detects\": {}, \"restores\": {}, ",
+                "\"quarantines\": {}}}"
             ),
             self.events,
             self.events_dropped,
@@ -141,6 +159,10 @@ impl Counters {
             self.mmio_accesses,
             self.irq_injects,
             self.virtq_completes,
+            self.fault_injects,
+            self.hang_detects,
+            self.restores,
+            self.quarantines,
         )
     }
 }
@@ -200,9 +222,17 @@ mod tests {
         c.count(&EventKind::MmioAccess { addr: 0x1000_1030, write: true });
         c.count(&EventKind::IrqInject { irq: 8 });
         c.count(&EventKind::VirtqComplete { id: 0, latency: 900 });
+        c.count(&EventKind::FaultInject { kind: "dev_err" });
+        c.count(&EventKind::HangDetect { silent_ticks: 9 });
+        c.count(&EventKind::CheckpointRestore { restarts: 1 });
+        c.count(&EventKind::Quarantine { restarts: 3 });
         assert_eq!((c.parks, c.wakes), (1, 1));
         assert_eq!((c.mmio_accesses, c.irq_injects, c.virtq_completes), (1, 1, 1));
-        assert_eq!(c.events, 15);
+        assert_eq!(
+            (c.fault_injects, c.hang_detects, c.restores, c.quarantines),
+            (1, 1, 1, 1)
+        );
+        assert_eq!(c.events, 19);
         assert_eq!(c.total_vm_exits(), 2);
         assert_eq!(c.vm_exits[VmExit::SliceExpired.variant()], 1);
         assert_eq!(c.vm_exits[VmExit::Fault.variant()], 1);
@@ -234,7 +264,15 @@ mod tests {
         for i in 0..VmExit::VARIANTS {
             assert!(j.contains(VmExit::variant_name_of(i)), "missing {}", VmExit::variant_name_of(i));
         }
-        for key in ["mmio_accesses", "irq_injects", "virtq_completes"] {
+        for key in [
+            "mmio_accesses",
+            "irq_injects",
+            "virtq_completes",
+            "fault_injects",
+            "hang_detects",
+            "restores",
+            "quarantines",
+        ] {
             assert!(j.contains(&format!("\"{key}\": 0")), "missing counter {key}");
         }
         assert!(j.starts_with('{') && j.ends_with('}'));

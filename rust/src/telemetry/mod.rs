@@ -94,6 +94,18 @@ pub enum EventKind {
     /// A paravirtual request retired: enqueue→completion latency in node
     /// ticks.
     VirtqComplete { id: u32, latency: u64 },
+    /// Chaos layer injected a fault into the guest (stable kind name from
+    /// [`crate::fleet::chaos::FaultKind`]).
+    FaultInject { kind: &'static str },
+    /// Watchdog declared the guest hung after `silent_ticks` of node time
+    /// without forward progress.
+    HangDetect { silent_ticks: u64 },
+    /// Recovery rolled the guest back to its last good checkpoint
+    /// (`restarts` = episode count so far, this guest).
+    CheckpointRestore { restarts: u32 },
+    /// The guest exhausted its restart budget and was quarantined; the
+    /// scheduler keeps running the healthy remainder.
+    Quarantine { restarts: u32 },
 }
 
 impl EventKind {
@@ -115,6 +127,10 @@ impl EventKind {
             EventKind::MmioAccess { .. } => "mmio_access",
             EventKind::IrqInject { .. } => "irq_inject",
             EventKind::VirtqComplete { .. } => "virtq_complete",
+            EventKind::FaultInject { .. } => "fault_inject",
+            EventKind::HangDetect { .. } => "hang_detect",
+            EventKind::CheckpointRestore { .. } => "checkpoint_restore",
+            EventKind::Quarantine { .. } => "quarantine",
         }
     }
 
@@ -163,6 +179,12 @@ impl EventKind {
             EventKind::VirtqComplete { id, latency } => {
                 format!("\"id\": {id}, \"latency\": {latency}")
             }
+            EventKind::FaultInject { kind } => format!("\"kind\": \"{kind}\""),
+            EventKind::HangDetect { silent_ticks } => {
+                format!("\"silent_ticks\": {silent_ticks}")
+            }
+            EventKind::CheckpointRestore { restarts } => format!("\"restarts\": {restarts}"),
+            EventKind::Quarantine { restarts } => format!("\"restarts\": {restarts}"),
         }
     }
 }
@@ -410,6 +432,10 @@ mod tests {
             EventKind::MmioAccess { addr: 0x1000_1030, write: true },
             EventKind::IrqInject { irq: 8 },
             EventKind::VirtqComplete { id: 3, latency: 1234 },
+            EventKind::FaultInject { kind: "guest_kill" },
+            EventKind::HangDetect { silent_ticks: 60_000 },
+            EventKind::CheckpointRestore { restarts: 2 },
+            EventKind::Quarantine { restarts: 3 },
         ];
         let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
         assert_eq!(
@@ -417,7 +443,8 @@ mod tests {
             [
                 "vm_exit", "switch_in", "switch_out", "decision", "block_build",
                 "block_invalidate", "tlb_flush", "tlb_gen_bump", "trap_enter", "trap_return",
-                "park", "wake", "mmio_access", "irq_inject", "virtq_complete"
+                "park", "wake", "mmio_access", "irq_inject", "virtq_complete",
+                "fault_inject", "hang_detect", "checkpoint_restore", "quarantine"
             ]
         );
         for k in &kinds {

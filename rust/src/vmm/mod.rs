@@ -60,6 +60,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::cpu::{Hart, VsCsrFile};
+use crate::fleet::chaos;
 use crate::isa::csr::atp;
 use crate::mem::Bus;
 use crate::mmu::MmuStats;
@@ -453,6 +454,11 @@ pub struct ScheduleOutcome {
     pub avg_switch_ns: f64,
     /// Per-hart busy/idle/slice/park/wake accounting (length H).
     pub hart_stats: Vec<HartStats>,
+    /// Checkpoint restores the recovery driver performed (0 when chaos
+    /// is off).
+    pub restarts: u64,
+    /// Guests quarantined after exhausting their restart budget.
+    pub quarantined: usize,
 }
 
 /// Multiplexer of N guests onto H harts: the mechanism half of the
@@ -492,6 +498,10 @@ pub struct VmmScheduler {
     carriers: Vec<Machine>,
     /// Exit of the last completed slice, handed to the next `pick_next`.
     last: Option<(usize, VmExit)>,
+    /// Fault-injection and self-healing driver (`--chaos`/`--watchdog`).
+    /// `None` keeps the scheduler's hot loop byte-identical to the
+    /// pre-chaos driver: the hooks are two `is_some` branches.
+    pub resilience: Option<chaos::Resilience>,
 }
 
 /// O(1) world swap: exchange the machine's live (hart, bus, stats,
@@ -548,6 +558,7 @@ impl VmmScheduler {
             busy_until: vec![0; n],
             carriers: Vec::new(),
             last: None,
+            resilience: None,
         }
     }
 
@@ -567,6 +578,7 @@ impl VmmScheduler {
     /// the historical single-hart sequence, bit-exact.
     pub fn run(&mut self, m: &mut Machine, max_total_ticks: u64) -> ScheduleOutcome {
         self.ensure_carriers(m);
+        self.chaos_boot(m);
         loop {
             let h = self.clock.next_hart();
             let now = self.clock.hart_time(h);
@@ -741,6 +753,9 @@ impl VmmScheduler {
             if th != 0 {
                 m.telemetry = self.carriers[th - 1].telemetry.take();
             }
+            if self.resilience.is_some() {
+                self.chaos_post_slice(m, idx, th, end, &exit);
+            }
             self.last = Some((idx, exit));
         }
         // Hand the machines back clean: the last guest's VMID-tagged TLB
@@ -847,6 +862,213 @@ impl VmmScheduler {
             world_switches: self.switch.world_switches(),
             avg_switch_ns: self.switch.avg_ns(),
             hart_stats,
+            restarts: self.resilience.as_ref().map_or(0, |r| r.total_restarts()),
+            quarantined: self.resilience.as_ref().map_or(0, |r| r.total_quarantined()),
+        }
+    }
+
+    /// One-time chaos boot work: fingerprint every guest's progress and
+    /// take the restore point recovery can always fall back to.
+    fn chaos_boot(&mut self, m: &mut Machine) {
+        let Some(mut r) = self.resilience.take() else { return };
+        if !r.booted {
+            r.booted = true;
+            for idx in 0..self.guests.len() {
+                let g = &mut self.guests[idx];
+                r.marks[idx] = chaos::Mark::of(g);
+                r.silent_since[idx] = g.stats.sim_ticks;
+                let snap = chaos::snapshot(m, g);
+                r.snaps[idx].push(snap);
+                r.good[idx] = 1;
+            }
+        }
+        self.resilience = Some(r);
+    }
+
+    /// Chaos/recovery boundary work for the guest that just ran a slice:
+    /// refresh its progress mark, take a periodic snapshot while it is
+    /// healthy, apply at most one due fault from its plan, then run the
+    /// detection cascade (kill, failed/divergent exit, watchdog). All
+    /// fault triggers and the watchdog are keyed to the guest's
+    /// *virtual* clock, which is pinned across hart counts, host thread
+    /// counts and engines — a fault can therefore never land "after the
+    /// guest finished" in one schedule but not another.
+    fn chaos_post_slice(&mut self, m: &mut Machine, idx: usize, th: usize, end: u64, exit: &VmExit) {
+        let Some(mut r) = self.resilience.take() else { return };
+        if r.quarantined[idx] {
+            self.resilience = Some(r);
+            return;
+        }
+        let virt = self.guests[idx].stats.sim_ticks;
+        let mark = chaos::Mark::of(&self.guests[idx]);
+        if mark != r.marks[idx] {
+            r.marks[idx] = mark;
+            r.silent_since[idx] = virt;
+        }
+        if r.snap_every > 0
+            && r.last_fault[idx].is_none()
+            && self.guests[idx].exit.is_none()
+            && virt >= r.snaps[idx].last().map_or(0, |s| s.taken_virt) + r.snap_every
+        {
+            let snap = chaos::snapshot(m, &mut self.guests[idx]);
+            r.snaps[idx].push(snap);
+            r.good[idx] = r.snaps[idx].len();
+        }
+        let mut kill_now = false;
+        if r.last_fault[idx].is_none() {
+            if let Some(f) = r.next_due(idx, virt) {
+                r.last_fault[idx] = Some((f.kind, f.at));
+                // Everything snapshotted so far predates this fault.
+                r.good[idx] = r.snaps[idx].len();
+                let garbage = chaos::garbage_seed(r.garbage_base, idx, f.at);
+                chaos::apply_fault(&mut self.guests[idx], f.kind, garbage);
+                if let Some(t) = m.telemetry.as_mut() {
+                    t.emit_at(
+                        idx as u32,
+                        self.guests[idx].vmid,
+                        th as u32,
+                        end,
+                        crate::telemetry::EventKind::FaultInject { kind: f.kind.name() },
+                    );
+                }
+                kill_now = f.kind == chaos::FaultKind::Kill;
+            }
+        }
+        let mut cause: Option<&'static str> = None;
+        if kill_now {
+            cause = Some("kill");
+        } else if let Some(VmExit::GuestDone { passed }) = self.guests[idx].exit {
+            let g = &self.guests[idx];
+            let diverged =
+                r.expected.get(&g.bench).is_some_and(|d| *d != g.console_digest());
+            if !r.strict && (!passed || diverged) {
+                cause = Some(r.last_fault[idx].map_or("bad_exit", |(k, _)| k.name()));
+            } else {
+                // Clean finish (or strict mode): an armed fault that
+                // never bit is resolved without an episode.
+                r.last_fault[idx] = None;
+            }
+        } else if r.watchdog > 0 {
+            // A slice that parks with no timer armed can never be woken
+            // in this simulator — hung by construction, no need to wait
+            // out the threshold.
+            let silent = virt.saturating_sub(r.silent_since[idx]);
+            let parked_forever = matches!(exit, VmExit::Wfi { parked_until: None });
+            if silent >= r.watchdog || parked_forever {
+                if let Some(t) = m.telemetry.as_mut() {
+                    t.emit_at(
+                        idx as u32,
+                        self.guests[idx].vmid,
+                        th as u32,
+                        end,
+                        crate::telemetry::EventKind::HangDetect { silent_ticks: silent },
+                    );
+                }
+                cause = Some(r.last_fault[idx].map_or("hang", |(k, _)| k.name()));
+            }
+        }
+        if let Some(cause) = cause {
+            self.chaos_fail(&mut r, m, idx, th, end, cause);
+        }
+        self.resilience = Some(r);
+    }
+
+    /// Handle a detected guest failure: restore the last good snapshot
+    /// behind an exponential-backoff fence, or quarantine once the
+    /// restart budget is spent. The restore is a silent residency (the
+    /// `wake_due` rule): no events, no switch statistics — so the
+    /// `decisions == world_switches == vm_exits` telemetry invariant
+    /// survives chaos runs untouched.
+    fn chaos_fail(
+        &mut self,
+        r: &mut chaos::Resilience,
+        m: &mut Machine,
+        idx: usize,
+        th: usize,
+        now: u64,
+        cause: &'static str,
+    ) {
+        let vmid = self.guests[idx].vmid;
+        let (fault_virt, detect) = match r.last_fault[idx] {
+            Some((k, at)) => (at, k.detect_delay(r.watchdog)),
+            None => (self.guests[idx].stats.sim_ticks, 0),
+        };
+        if r.restarts[idx] >= r.max_restarts {
+            r.quarantined[idx] = true;
+            self.parked[idx] = None;
+            self.parked_flags[idx] = true;
+            if let Some(VmExit::GuestDone { .. }) = self.guests[idx].exit {
+                // A quarantined finish is never reported as a pass.
+                self.guests[idx].exit = Some(VmExit::GuestDone { passed: false });
+            }
+            r.episodes.push(chaos::Episode {
+                guest: idx,
+                cause,
+                fault_virt,
+                detect_ticks: detect,
+                backoff: 0,
+                restart: r.restarts[idx],
+                quarantined: true,
+            });
+            if let Some(t) = m.telemetry.as_mut() {
+                t.emit_at(
+                    idx as u32,
+                    vmid,
+                    th as u32,
+                    now,
+                    crate::telemetry::EventKind::Quarantine { restarts: r.restarts[idx] },
+                );
+            }
+            return;
+        }
+        r.restarts[idx] += 1;
+        let k = r.restarts[idx];
+        let backoff = chaos::Resilience::backoff_for(k);
+        // Snapshots taken after the fault triggered capture poisoned
+        // state — drop them. The boot snapshot is always a floor.
+        r.snaps[idx].truncate(r.good[idx].max(1));
+        {
+            let g = &mut self.guests[idx];
+            let snap = r.snaps[idx].last().expect("boot snapshot always exists");
+            world_swap(m, g);
+            crate::sim::checkpoint::restore(m, &snap.ck4)
+                .expect("self-produced snapshot restores cleanly");
+            // Rewind the target-owned state the CK4 format leaves alone,
+            // so the replayed console digest is exactly the unfaulted one.
+            m.bus.uart = snap.uart.clone();
+            m.stats = snap.stats.clone();
+            m.core.mmu_stats = snap.mmu.clone();
+            world_swap(m, g);
+            g.exit = None;
+            g.finished_at_total = None;
+        }
+        self.parked[idx] = None;
+        self.parked_flags[idx] = false;
+        // The backoff fence: `next_event_after` already honors
+        // `busy_until`, so the restored guest stays off every hart until
+        // the fence lifts, without any new scheduler mechanism.
+        self.busy_until[idx] = now.saturating_add(backoff);
+        r.marks[idx] = chaos::Mark::of(&self.guests[idx]);
+        r.silent_since[idx] = self.guests[idx].stats.sim_ticks;
+        r.last_fault[idx] = None;
+        r.good[idx] = r.snaps[idx].len();
+        r.episodes.push(chaos::Episode {
+            guest: idx,
+            cause,
+            fault_virt,
+            detect_ticks: detect,
+            backoff,
+            restart: k,
+            quarantined: false,
+        });
+        if let Some(t) = m.telemetry.as_mut() {
+            t.emit_at(
+                idx as u32,
+                vmid,
+                th as u32,
+                now,
+                crate::telemetry::EventKind::CheckpointRestore { restarts: k },
+            );
         }
     }
 }

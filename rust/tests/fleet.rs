@@ -27,6 +27,12 @@ fn spec(nodes: usize, guests: usize, threads: usize) -> FleetSpec {
         tlb_ways: 4,
         engine: hvsim::sim::EngineKind::default(),
         telemetry: None,
+        chaos: None,
+        watchdog: 0,
+        snap_every: 0,
+        max_restarts: 3,
+        strict: false,
+        expected: std::collections::BTreeMap::new(),
     }
 }
 
@@ -350,4 +356,212 @@ fn fleet_at_scale_64_nodes_digests_match_solo_across_threads() {
     }
     assert_eq!(keys[0], keys[1], "1-thread vs 2-thread digests diverged");
     assert_eq!(keys[0], keys[2], "1-thread vs 4-thread digests diverged");
+}
+
+/// Per-guest recovery outcome key for the chaos determinism checks: the
+/// console digest plus everything the recovery driver modeled.
+type ChaosKey = Vec<(usize, usize, hvsim::util::ConsoleDigest, Option<u64>, u32, bool, u64, Vec<u64>)>;
+
+fn chaos_key(r: &hvsim::fleet::FleetReport) -> (ChaosKey, u64, u64, usize) {
+    (
+        r.guests()
+            .map(|g| {
+                (
+                    g.node,
+                    g.id,
+                    g.console.clone(),
+                    g.finished_at_total,
+                    g.restarts,
+                    g.quarantined,
+                    g.downtime,
+                    g.repairs.clone(),
+                )
+            })
+            .collect(),
+        r.availability().to_bits(),
+        r.total_restarts(),
+        r.quarantined_guests(),
+    )
+}
+
+/// Chaos spec + watchdog scaled to the solo completion ticks of the
+/// bench mix, so triggers land mid-run and the watchdog can never
+/// false-positive on a healthy guest (silence is bounded by the guest's
+/// own runtime, which never reaches the slowest bench's full runtime
+/// before the next console byte).
+fn chaos_fields(s: &mut FleetSpec, solos: &std::collections::BTreeMap<String, hvsim::fleet::SoloBaseline>) {
+    let min = solos.values().map(|b| b.ticks).min().unwrap();
+    let max = solos.values().map(|b| b.ticks).max().unwrap();
+    s.chaos = Some(
+        format!(
+            "seed=7,faults=2,window={}:{},kinds=kill+dev-hang+spin-loop+wfi-hang,kill@{}:g0",
+            min / 4,
+            min * 3 / 4,
+            min / 2
+        )
+        .parse()
+        .unwrap(),
+    );
+    s.watchdog = max;
+    s.snap_every = min / 5;
+    s.expected = solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+}
+
+#[test]
+fn chaos_recovery_is_thread_and_engine_deterministic() {
+    // The robustness headline: with a seeded fault plan keyed to guest
+    // *virtual* clocks, the entire recovery record — who faulted, how
+    // many restarts, modeled downtime and repair times, availability —
+    // plus every console digest must be bit-identical across host thread
+    // counts and execution engines. Guests either recover to a passing,
+    // solo-identical console or are quarantined; the fleet never aborts.
+    let mk = |threads: usize, engine: hvsim::sim::EngineKind| {
+        let mut s = spec(2, 2, threads);
+        s.benches = vec!["kvstore".into(), "echo".into()];
+        s.engine = engine;
+        s
+    };
+    let base = hvsim::sim::EngineKind::default();
+    let solos = solo_baselines(&mk(1, base)).unwrap();
+    let mut keys = Vec::new();
+    for (threads, engine) in [(1, base), (2, base), (1, base.other())] {
+        let mut s = mk(threads, engine);
+        chaos_fields(&mut s, &solos);
+        let r = run_fleet(&s).unwrap();
+        for g in r.guests() {
+            assert!(
+                g.passed || g.quarantined,
+                "node {} guest {} neither recovered nor quarantined",
+                g.node,
+                g.id
+            );
+        }
+        keys.push(chaos_key(&r));
+    }
+    assert_eq!(keys[0], keys[1], "1-thread vs 2-thread recovery records diverged");
+    assert_eq!(keys[0], keys[2], "block vs tick engine recovery records diverged");
+    assert!(keys[0].2 > 0, "the pinned kill must consume at least one restart");
+    assert!(keys[0].1 < 1.0f64.to_bits(), "injected faults must cost availability");
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "12-combo chaos matrix is release-only; CI runs it with --release -- --include-ignored"
+)]
+fn chaos_recovery_matrix_threads_harts_engines() {
+    // The full recovery-determinism matrix from the issue: the same
+    // --chaos seed across threads ∈ {1,2,4} × harts ∈ {1,2} × both
+    // engines yields identical digests, availability, restart counts and
+    // downtime. Gang-scheduled so the hart axis is meaningful.
+    let mk = |threads: usize, harts: usize, engine: hvsim::sim::EngineKind| {
+        let mut s = spec(2, 2, threads);
+        s.benches = vec!["kvstore".into(), "echo".into()];
+        s.harts = harts;
+        s.sched = SchedKind::Gang;
+        s.engine = engine;
+        s
+    };
+    let base = hvsim::sim::EngineKind::default();
+    let solos = solo_baselines(&mk(1, 1, base)).unwrap();
+    let mut first: Option<((usize, usize, &'static str), (ChaosKey, u64, u64, usize))> = None;
+    for threads in [1usize, 2, 4] {
+        for harts in [1usize, 2] {
+            for engine in [base, base.other()] {
+                let mut s = mk(threads, harts, engine);
+                chaos_fields(&mut s, &solos);
+                let r = run_fleet(&s).unwrap();
+                let key = chaos_key(&r);
+                match &first {
+                    None => first = Some(((threads, harts, engine.name()), key)),
+                    Some((at, want)) => assert_eq!(
+                        want, &key,
+                        "recovery record at threads={threads} harts={harts} {} diverged from {at:?}",
+                        engine.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn recovered_guest_console_matches_unfaulted_run_and_neighbors() {
+    // The repair invariant: a guest killed mid-run and restored from its
+    // last checkpoint must finish with a console byte-identical to a run
+    // that was never faulted, and a healthy co-resident guest's console
+    // must not change because its neighbor faulted. Recovery is visible
+    // only in the resilience metrics.
+    let mut control = spec(1, 2, 1);
+    control.benches = vec!["kvstore".into(), "echo".into()];
+    let solos = solo_baselines(&control).unwrap();
+    let ctrl = run_fleet(&control).unwrap();
+    assert!(ctrl.all_passed());
+    let ctrl_key: Vec<_> = ctrl.guests().map(|g| (g.id, g.console.clone())).collect();
+
+    let kv_ticks = solos["kvstore"].ticks;
+    let mut chaotic = control.clone();
+    chaotic.chaos = Some(format!("seed=1,faults=0,kill@{}:g0", kv_ticks / 2).parse().unwrap());
+    chaotic.snap_every = kv_ticks / 5;
+    chaotic.expected = solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+    let r = run_fleet(&chaotic).unwrap();
+    assert!(r.all_passed(), "the killed guest must recover and pass again");
+    let got: Vec<_> = r.guests().map(|g| (g.id, g.console.clone())).collect();
+    assert_eq!(got, ctrl_key, "recovery leaked into a console byte stream");
+    let digests: std::collections::BTreeMap<_, _> =
+        solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+    assert!(console_mismatches(&r, &digests).is_empty());
+
+    let guests: Vec<_> = r.guests().collect();
+    assert!(guests[0].restarts >= 1, "the pinned kill must trigger a restore");
+    assert!(!guests[0].repairs.is_empty() && guests[0].downtime > 0);
+    assert_eq!(guests[1].restarts, 0, "healthy neighbor must not be touched by recovery");
+    assert_eq!(guests[1].downtime, 0);
+    assert_eq!(r.quarantined_guests(), 0);
+    let avail = r.availability();
+    assert!(avail < 1.0, "repair downtime must cost availability");
+    assert!(avail > 0.99, "a single short repair barely dents a full node span");
+    assert!(r.mttr().unwrap() > 0.0, "one repaired episode defines the MTTR");
+}
+
+#[test]
+fn quarantined_guest_never_aborts_the_fleet() {
+    // Graceful degradation: a guest that keeps faulting past its restart
+    // budget is parked out of the schedule permanently — reported failed
+    // and quarantined — while the healthy remainder runs to completion
+    // with solo-identical consoles and the node goes quiescent instead
+    // of spinning to its tick budget.
+    let mut s = spec(1, 2, 1);
+    s.benches = vec!["kvstore".into(), "echo".into()];
+    let solos = solo_baselines(&s).unwrap();
+    let kv_ticks = solos["kvstore"].ticks;
+    s.chaos = Some(
+        format!("seed=1,faults=0,kill@{}:g0,kill@{}:g0", kv_ticks / 3, kv_ticks * 2 / 3)
+            .parse()
+            .unwrap(),
+    );
+    s.snap_every = kv_ticks / 5;
+    s.max_restarts = 1;
+    s.expected = solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+
+    let r = run_fleet(&s).unwrap();
+    let guests: Vec<_> = r.guests().collect();
+    assert!(guests[0].quarantined, "second kill must exhaust the 1-restart budget");
+    assert!(!guests[0].passed, "a quarantined guest is never reported as a pass");
+    assert_eq!(guests[0].restarts, 1);
+    assert!(guests[1].passed, "healthy neighbor survives its neighbor's quarantine");
+    assert_eq!(guests[1].restarts, 0);
+    assert!(!r.all_passed() && r.quarantined_guests() == 1);
+    assert_eq!(r.completed(), 1, "only the healthy guest finishes");
+
+    // Quarantine downtime is the rest of the node span from the fatal
+    // fault, so it dominates the recovered episode's repair time.
+    assert!(guests[0].downtime > s.max_node_ticks / 2);
+    assert!(r.availability() < 1.0);
+
+    // The console check skips quarantined guests by design; the healthy
+    // guest must still be byte-identical to its solo run.
+    let digests: std::collections::BTreeMap<_, _> =
+        solos.iter().map(|(k, v)| (k.clone(), v.digest.clone())).collect();
+    assert!(console_mismatches(&r, &digests).is_empty());
 }
